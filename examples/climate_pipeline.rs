@@ -1,0 +1,91 @@
+//! End-to-end driver (DESIGN.md §7): stream a full synthetic snapshot —
+//! every field of every SDRBench-like dataset — through the coordinator's
+//! bounded-queue pipeline, exactly the "compress data as the simulation
+//! produces it" workload that motivates the paper (§1: HACC snapshots,
+//! LCLS-II data rates).
+//!
+//!     cargo run --release --example climate_pipeline [-- --backend cpu]
+//!
+//! Reports per-field CR/PSNR and the headline aggregate: end-to-end
+//! pipeline throughput and overall compression ratio; verifies the error
+//! bound on every reconstructed field. Results are recorded in
+//! EXPERIMENTS.md §End-to-end.
+
+use anyhow::Result;
+use cusz::config::{BackendKind, CuszConfig, ErrorBound};
+use cusz::coordinator::{pipeline, Coordinator};
+use cusz::datagen::{self, Dataset};
+use cusz::metrics;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let backend = if args.iter().any(|a| a == "cpu") || args.windows(2).any(|w| w[0] == "--backend" && w[1] == "cpu") {
+        BackendKind::Cpu
+    } else {
+        BackendKind::Pjrt
+    };
+    let cfg = CuszConfig {
+        eb: ErrorBound::ValRel(1e-4),
+        backend,
+        queue_depth: 4,
+        ..Default::default()
+    };
+    let coord = Coordinator::new_with_fallback(cfg)?;
+    println!("engine: {}  (streaming snapshot compression)", coord.engine_name());
+
+    // Producer: every field of every dataset, generated on its own thread
+    // (standing in for simulation output / instrument acquisition).
+    let producer = |push: &dyn Fn(cusz::Field) -> bool| {
+        for ds in Dataset::ALL {
+            for fname in ds.field_names() {
+                let field = datagen::generate(ds, fname, 42);
+                if !push(field) {
+                    return;
+                }
+            }
+        }
+    };
+
+    // Sink: hold archives for verification (a real deployment writes them
+    // to the parallel filesystem here).
+    let mut archives = Vec::new();
+    let report = pipeline::run(&coord, producer, |name, archive| {
+        archives.push((name.to_string(), archive));
+        Ok(())
+    })?;
+
+    println!("\n{:<32} {:>9} {:>9} {:>8} {:>9}", "field", "MB", "CR", "b/v", "PSNR dB");
+    let mut violations = 0;
+    for (name, archive) in &archives {
+        let (ds_name, f_name) = name.split_once('/').unwrap_or(("?", name));
+        let ds = Dataset::parse(ds_name).unwrap_or(Dataset::Nyx);
+        let original = datagen::generate(ds, f_name, 42);
+        let restored = coord.decompress(archive)?;
+        let psnr = metrics::psnr(&original.data, &restored.data);
+        let cr = original.size_bytes() as f64 / archive.compressed_bytes() as f64;
+        if metrics::verify_error_bound(&original.data, &restored.data, archive.header.abs_eb)
+            .is_some()
+        {
+            violations += 1;
+        }
+        println!(
+            "{:<32} {:>9.2} {:>9.2} {:>8.3} {:>9.2}",
+            name,
+            original.size_bytes() as f64 / 1e6,
+            cr,
+            32.0 / cr,
+            psnr
+        );
+    }
+
+    println!("\n=== aggregate (headline) ===");
+    println!("fields compressed      {}", report.fields);
+    println!("original               {:.2} MB", report.original_bytes as f64 / 1e6);
+    println!("compressed             {:.2} MB", report.compressed_bytes as f64 / 1e6);
+    println!("overall CR             {:.2}x", report.compression_ratio());
+    println!("pipeline wall time     {:.2} s", report.wall_seconds);
+    println!("end-to-end throughput  {:.3} GB/s", report.throughput_gbps());
+    println!("error-bound violations {violations}");
+    anyhow::ensure!(violations == 0, "error bound violated");
+    Ok(())
+}

@@ -1,0 +1,175 @@
+//! Rate-distortion study — regenerates Figures 6, 7, 8 and Table 5:
+//! cuSZ (fixed valrel, eb sweep) vs the ZFP-style fixed-rate baseline
+//! (rate sweep) on the Hurricane and Nyx datasets.
+//!
+//!     cargo run --release --example cosmo_rate_distortion -- [--nyx]
+//!         [--hurricane] [--overall] [--table5] [--backend cpu]
+//!
+//! With no selector flags, runs everything. Output is CSV-ish series
+//! (bitrate, PSNR) per field — the same series the paper plots.
+
+use anyhow::Result;
+use cusz::config::{BackendKind, CuszConfig, ErrorBound};
+use cusz::coordinator::Coordinator;
+use cusz::datagen::{self, Dataset};
+use cusz::field::Field;
+use cusz::metrics;
+use cusz::zfp::Zfp;
+
+const EBS: [f64; 6] = [1e-2, 1e-3, 1e-4, 1e-5, 1e-6, 1e-7];
+const RATES: [f64; 6] = [2.0, 4.0, 6.0, 8.0, 12.0, 16.0];
+
+#[derive(Clone, Copy)]
+struct Point {
+    bitrate: f64,
+    psnr: f64,
+}
+
+fn cusz_curve(coord: &Coordinator, field: &Field) -> Result<Vec<Point>> {
+    let mut out = Vec::new();
+    for &eb in &EBS {
+        let mut cfg = coord.cfg.clone();
+        cfg.eb = ErrorBound::ValRel(eb);
+        let c = Coordinator::new(cfg)?;
+        let (archive, stats) = c.compress_with_stats(field)?;
+        let restored = c.decompress(&archive)?;
+        out.push(Point {
+            bitrate: stats.bitrate(),
+            psnr: metrics::psnr(&field.data, &restored.data),
+        });
+    }
+    Ok(out)
+}
+
+fn zfp_curve(field: &Field) -> Result<Vec<Point>> {
+    let kernel_dims = field.kernel_dims();
+    let mut out = Vec::new();
+    for &rate in &RATES {
+        let z = Zfp::new(rate);
+        let stream = z.compress(&field.data, &kernel_dims)?;
+        let restored = z.decompress(&stream)?;
+        out.push(Point {
+            bitrate: 32.0 * stream.compressed_bytes() as f64 / field.size_bytes() as f64,
+            psnr: metrics::psnr(&field.data, &restored),
+        });
+    }
+    Ok(out)
+}
+
+fn print_curves(title: &str, fields: &[(&str, Vec<Point>, Vec<Point>)]) {
+    println!("\n=== {title} ===");
+    println!("{:<24} | cusz: (bitrate, PSNR)...  | zfp: (bitrate, PSNR)...", "field");
+    for (name, cusz, zfp) in fields {
+        let fmt = |pts: &[Point]| {
+            pts.iter().map(|p| format!("({:.2},{:.1})", p.bitrate, p.psnr)).collect::<Vec<_>>().join(" ")
+        };
+        println!("{name:<24} | {} | {}", fmt(cusz), fmt(zfp));
+    }
+}
+
+/// Bitrate needed to reach `target` PSNR: linear interpolation along the
+/// rate-distortion curve (sorted by bitrate), min over crossing segments.
+fn bitrate_at_psnr(points: &[Point], target: f64) -> Option<f64> {
+    let mut pts: Vec<&Point> = points.iter().collect();
+    pts.sort_by(|a, b| a.bitrate.partial_cmp(&b.bitrate).unwrap());
+    let mut best: Option<f64> = None;
+    for w in pts.windows(2) {
+        let (a, b) = (w[0], w[1]);
+        let (lo, hi) = if a.psnr <= b.psnr { (a, b) } else { (b, a) };
+        if lo.psnr <= target && target <= hi.psnr {
+            let t = (target - lo.psnr) / (hi.psnr - lo.psnr).max(1e-9);
+            let br = lo.bitrate + t * (hi.bitrate - lo.bitrate);
+            best = Some(best.map_or(br, |x: f64| x.min(br)));
+        }
+    }
+    // curve entirely above target: cheapest point already qualifies
+    if best.is_none() {
+        for p in &pts {
+            if p.psnr >= target {
+                best = Some(best.map_or(p.bitrate, |x: f64| x.min(p.bitrate)));
+            }
+        }
+    }
+    best
+}
+
+fn dataset_fields(ds: Dataset, per_ds: usize) -> Vec<Field> {
+    ds.field_names().iter().take(per_ds).map(|f| datagen::generate(ds, f, 42)).collect()
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let has = |f: &str| args.iter().any(|a| a == f);
+    let all = !(has("--nyx") || has("--hurricane") || has("--overall") || has("--table5"));
+    let backend =
+        if args.iter().any(|a| a == "cpu") { BackendKind::Cpu } else { BackendKind::Pjrt };
+    let cfg = CuszConfig { backend, ..Default::default() };
+    let coord = Coordinator::new_with_fallback(cfg)?;
+    println!("engine: {}", coord.engine_name());
+
+    let per_ds = 6; // fields per dataset for the per-field figures
+
+    if all || has("--nyx") {
+        // Figure 6: per-field curves on Nyx
+        let fields = dataset_fields(Dataset::Nyx, per_ds);
+        let rows: Vec<(&str, Vec<Point>, Vec<Point>)> = fields
+            .iter()
+            .map(|f| {
+                let name: &str = Box::leak(f.name.clone().into_boxed_str());
+                (name, cusz_curve(&coord, f).unwrap(), zfp_curve(f).unwrap())
+            })
+            .collect();
+        print_curves("Figure 6: rate-distortion, Nyx", &rows);
+    }
+
+    if all || has("--hurricane") {
+        // Figure 7: per-field curves on Hurricane
+        let fields = dataset_fields(Dataset::Hurricane, per_ds);
+        let rows: Vec<(&str, Vec<Point>, Vec<Point>)> = fields
+            .iter()
+            .map(|f| {
+                let name: &str = Box::leak(f.name.clone().into_boxed_str());
+                (name, cusz_curve(&coord, f).unwrap(), zfp_curve(f).unwrap())
+            })
+            .collect();
+        print_curves("Figure 7: rate-distortion, Hurricane", &rows);
+    }
+
+    if all || has("--overall") || has("--table5") {
+        // Figure 8 + Table 5: dataset-average curves and the bitrate each
+        // codec needs for PSNR ~ 85 dB.
+        println!("\n=== Figure 8 / Table 5: overall rate-distortion ===");
+        println!(
+            "{:<12} {:>14} {:>8} {:>10} | {:>14} {:>8} {:>10}",
+            "dataset", "cusz bitrate", "CR", "PSNR", "zfp bitrate", "CR", "PSNR"
+        );
+        for ds in [Dataset::CesmAtm, Dataset::Hurricane, Dataset::Nyx, Dataset::Qmcpack] {
+            let fields = dataset_fields(ds, 4);
+            // average the curves pointwise across fields
+            let mut cusz_avg = vec![Point { bitrate: 0.0, psnr: 0.0 }; EBS.len()];
+            let mut zfp_avg = vec![Point { bitrate: 0.0, psnr: 0.0 }; RATES.len()];
+            for f in &fields {
+                for (a, p) in cusz_avg.iter_mut().zip(cusz_curve(&coord, f)?) {
+                    a.bitrate += p.bitrate / fields.len() as f64;
+                    a.psnr += p.psnr / fields.len() as f64;
+                }
+                for (a, p) in zfp_avg.iter_mut().zip(zfp_curve(f)?) {
+                    a.bitrate += p.bitrate / fields.len() as f64;
+                    a.psnr += p.psnr / fields.len() as f64;
+                }
+            }
+            let target = 85.0;
+            let c = bitrate_at_psnr(&cusz_avg, target);
+            let z = bitrate_at_psnr(&zfp_avg, target);
+            let fmt = |b: Option<f64>, _pts: &[Point]| match b {
+                Some(b) => format!("{:>14.2} {:>8.1} {:>10.1}", b, 32.0 / b, target),
+                None => format!("{:>14} {:>8} {:>10}", "-", "-", "-"),
+            };
+            println!("{:<12} {} | {}", ds.name(), fmt(c, &cusz_avg), fmt(z, &zfp_avg));
+            if let (Some(c), Some(z)) = (c, z) {
+                println!("{:<12}   -> cusz needs {:.2}x lower bitrate at ~85 dB", "", z / c);
+            }
+        }
+    }
+    Ok(())
+}

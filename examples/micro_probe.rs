@@ -1,0 +1,29 @@
+use cusz::sz::{self, blocks::SlabSpec, lorenzo};
+use cusz::testkit::fields::{make, Regime};
+use std::time::Instant;
+fn main() {
+    let spec = SlabSpec::new("3d_128", &[128,128,128], &[8,8,8]);
+    let data = make(Regime::Smooth, spec.len(), 3);
+    let n = spec.len();
+    let eb = 1e-3f32; let hie = 0.5/eb;
+    let mut dq = vec![0i32; n];
+    let t = Instant::now();
+    for _ in 0..10 { for (o,d) in dq.iter_mut().zip(&data) { *o = sz::prequant(*d, hie); } }
+    println!("prequant  {:>8.3} ms", t.elapsed().as_secs_f64()*100.0);
+    let mut delta = vec![0i32; n];
+    let t = Instant::now();
+    for _ in 0..10 { lorenzo::delta_nd(&dq, &spec.shape, &spec.block, &mut delta); }
+    println!("delta3d   {:>8.3} ms", t.elapsed().as_secs_f64()*100.0);
+    let t = Instant::now();
+    let mut hist = vec![0u32; 1024];
+    for _ in 0..10 { hist.iter_mut().for_each(|h| *h=0); for &d in &delta { hist[sz::code_of_delta(d, 512) as usize] += 1; } }
+    println!("hist      {:>8.3} ms", t.elapsed().as_secs_f64()*100.0);
+    let mut codes = vec![0u16; n];
+    let t = Instant::now();
+    for _ in 0..10 { for (c,&d) in codes.iter_mut().zip(&delta) { *c = sz::code_of_delta(d, 512); } }
+    println!("codes     {:>8.3} ms", t.elapsed().as_secs_f64()*100.0);
+    let t = Instant::now();
+    for _ in 0..10 { let mut acc = delta.clone(); lorenzo::reconstruct_nd(&mut acc, &spec.shape, &spec.block); std::hint::black_box(&acc); }
+    println!("recon     {:>8.3} ms", t.elapsed().as_secs_f64()*100.0);
+    println!("(per 8.39MB slab, avg of 10)");
+}

@@ -1,0 +1,38 @@
+//! Perf probe: per-layer timing of the quant engines (used by the
+//! EXPERIMENTS.md §Perf iteration log).
+//!     cargo run --release --example perf_probe
+use cusz::runtime::{ArtifactManifest, CpuEngine, QuantEngine};
+use cusz::testkit::fields::{make, Regime};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let manifest = ArtifactManifest::load(&dir)?;
+    let pjrt = cusz::runtime::pjrt::PjrtEngine::start(manifest.clone())?;
+    let cpu = CpuEngine { dict_size: 1024 };
+    println!("{:<10} {:>12} {:>14} {:>14} {:>14} {:>14}", "variant", "MB", "pjrt C GB/s", "cpu C GB/s", "pjrt D GB/s", "cpu D GB/s");
+    for meta in manifest.executables.iter().filter(|e| e.op == "compress") {
+        let spec = meta.slab_spec();
+        let data = make(Regime::Smooth, spec.len(), 3);
+        let bytes = spec.len() * 4;
+        let eb = 1e-3f32;
+        // warm (compile)
+        let delta = pjrt.compress_slab(&spec, &data, eb)?;
+        let reps = 5;
+        let t = Instant::now();
+        for _ in 0..reps { pjrt.compress_slab(&spec, &data, eb)?; }
+        let pc = bytes as f64 * reps as f64 / t.elapsed().as_secs_f64() / 1e9;
+        let t = Instant::now();
+        for _ in 0..reps { cpu.compress_slab(&spec, &data, eb)?; }
+        let cc = bytes as f64 * reps as f64 / t.elapsed().as_secs_f64() / 1e9;
+        pjrt.decompress_slab(&spec, &delta, eb)?;
+        let t = Instant::now();
+        for _ in 0..reps { pjrt.decompress_slab(&spec, &delta, eb)?; }
+        let pd = bytes as f64 * reps as f64 / t.elapsed().as_secs_f64() / 1e9;
+        let t = Instant::now();
+        for _ in 0..reps { cpu.decompress_slab(&spec, &delta, eb)?; }
+        let cd = bytes as f64 * reps as f64 / t.elapsed().as_secs_f64() / 1e9;
+        println!("{:<10} {:>12.2} {:>14.3} {:>14.3} {:>14.3} {:>14.3}", meta.variant, bytes as f64/1e6, pc, cc, pd, cd);
+    }
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! Quickstart: compress and decompress one field through the public API.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Generates a Nyx-like baryon_density field, compresses it at valrel 1e-4
+//! (the paper's default evaluation bound), verifies the error bound, and
+//! prints the compression ratio and PSNR.
+
+use anyhow::Result;
+use cusz::config::{CuszConfig, ErrorBound};
+use cusz::coordinator::Coordinator;
+use cusz::datagen::{self, Dataset};
+use cusz::metrics;
+
+fn main() -> Result<()> {
+    // 1. A scientific field (stand-in for loading one from disk).
+    let field = datagen::generate(Dataset::Nyx, "baryon_density", 42);
+    println!("field {}  dims {:?}  {:.1} MB", field.name, field.dims, field.size_bytes() as f64 / 1e6);
+
+    // 2. Configure: value-range-relative bound of 1e-4, PJRT backend if
+    //    artifacts are built, CPU mirror otherwise.
+    let cfg = CuszConfig { eb: ErrorBound::ValRel(1e-4), ..Default::default() };
+    let coord = Coordinator::new_with_fallback(cfg)?;
+    println!("engine: {}", coord.engine_name());
+
+    // 3. Compress.
+    let (archive, stats) = coord.compress_with_stats(&field)?;
+    println!("\ncompression:\n{}", stats.report());
+
+    // 4. Decompress and verify.
+    let restored = coord.decompress(&archive)?;
+    let psnr = metrics::psnr(&field.data, &restored.data);
+    println!("PSNR {psnr:.2} dB");
+    match metrics::verify_error_bound(&field.data, &restored.data, archive.header.abs_eb) {
+        None => println!("error bound respected: |d - d*| <= {:.3e}", archive.header.abs_eb),
+        Some(i) => anyhow::bail!("bound violated at {i}"),
+    }
+    Ok(())
+}

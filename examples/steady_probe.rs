@@ -1,0 +1,18 @@
+//! Steady-state coordinator timing (3 reps, report last).
+use cusz::config::{BackendKind, CuszConfig, ErrorBound};
+use cusz::coordinator::Coordinator;
+use cusz::datagen::{self, Dataset};
+fn main() -> anyhow::Result<()> {
+    let backend = if std::env::args().any(|a| a == "pjrt") { BackendKind::Pjrt } else { BackendKind::Cpu };
+    let coord = Coordinator::new_with_fallback(CuszConfig { backend, eb: ErrorBound::ValRel(1e-4), ..Default::default() })?;
+    let field = datagen::generate(Dataset::Nyx, "baryon_density", 42);
+    let mut last = None;
+    for _ in 0..3 { last = Some(coord.compress_with_stats(&field)?); }
+    let (archive, stats) = last.unwrap();
+    println!("engine {} COMPRESS:\n{}", coord.engine_name(), stats.report());
+    let mut last = None;
+    for _ in 0..3 { last = Some(coord.decompress_with_stats(&archive)?); }
+    let (_, d) = last.unwrap();
+    println!("DECOMPRESS:\n{}", d.timer.report(d.original_bytes));
+    Ok(())
+}

@@ -1,0 +1,121 @@
+"""AOT compiler: lower every (op, variant) graph to HLO text + manifest.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (behind
+the Rust `xla` crate) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+Emits:  <out-dir>/<op>_<variant>.hlo.txt  and  <out-dir>/manifest.json
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .variants import DICT_SIZE, RADIUS, VARIANTS
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(variant, op: str) -> str:
+    eb_spec = jax.ShapeDtypeStruct((1,), jnp.float32)
+    if op == "compress":
+        fn = model.make_compress(variant)
+        data_spec = jax.ShapeDtypeStruct(variant.shape, jnp.float32)
+    elif op == "histogram":
+        fn = model.make_histogram(variant)
+        data_spec = jax.ShapeDtypeStruct(variant.shape, jnp.int32)
+    elif op == "decompress":
+        fn = model.make_decompress(variant)
+        data_spec = jax.ShapeDtypeStruct(variant.shape, jnp.int32)
+    else:
+        raise ValueError(op)
+    return to_hlo_text(jax.jit(fn).lower(data_spec, eb_spec))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-sep variant names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    entries = []
+    for variant in VARIANTS:
+        if only and variant.name not in only:
+            continue
+        for op in ("compress", "histogram", "decompress"):
+            text = lower_variant(variant, op)
+            fname = f"{op}_{variant.name}.hlo.txt"
+            path = os.path.join(args.out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            entries.append(
+                {
+                    "op": op,
+                    "variant": variant.name,
+                    "file": fname,
+                    "shape": list(variant.shape),
+                    "block": list(variant.block),
+                    "strips": variant.strips,
+                    "dict_size": DICT_SIZE,
+                    "radius": RADIUS,
+                    "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                    "hlo_bytes": len(text),
+                }
+            )
+            print(f"wrote {path} ({len(text)} bytes)")
+
+    manifest = {
+        "format": 1,
+        "interchange": "hlo-text",
+        "dict_size": DICT_SIZE,
+        "radius": RADIUS,
+        "executables": entries,
+    }
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath} ({len(entries)} executables)")
+
+    # Machine-readable twin for the Rust runtime (no JSON parser needed in
+    # the offline-crate environment): one row per executable.
+    tpath = os.path.join(args.out_dir, "manifest.tsv")
+    with open(tpath, "w") as f:
+        f.write("op\tvariant\tfile\tshape\tblock\tstrips\tdict_size\tradius\tsha256\n")
+        for e in entries:
+            f.write(
+                "\t".join(
+                    [
+                        e["op"],
+                        e["variant"],
+                        e["file"],
+                        ",".join(map(str, e["shape"])),
+                        ",".join(map(str, e["block"])),
+                        str(e["strips"]),
+                        str(e["dict_size"]),
+                        str(e["radius"]),
+                        e["sha256"],
+                    ]
+                )
+                + "\n"
+            )
+    print(f"wrote {tpath}")
+
+
+if __name__ == "__main__":
+    main()

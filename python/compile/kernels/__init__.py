@@ -1,0 +1,2 @@
+# L1 Pallas kernels for cusz-rs: dual-quant, histogram, inverse Lorenzo.
+from . import dual_quant, histogram, lorenzo_recon, ref  # noqa: F401

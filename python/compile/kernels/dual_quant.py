@@ -1,0 +1,119 @@
+"""L1 Pallas kernel: DUAL-QUANTIZATION (paper section 3.1.2, Algorithm 2).
+
+One kernel performs, per slab strip held in VMEM:
+
+  PREQUANT   d_q = clip(rint(d / (2*eb)), +/-CAP)   (f32 -> exact i32)
+  PREDICT    p   = generalized Lorenzo over the zero-padded block (i32)
+  POSTQUANT  delta = d_q - p; code = delta + R if |delta| in cap else 0
+
+The prediction is branch-free and fully vectorized: the block-padding layer
+of Figure 2 is realized by shifting along block-interior axes with zero
+fill, so every point (outer layer included) goes through the same
+l-predictor, exactly as section 3.1.1 prescribes.  All arithmetic after
+PREQUANT is integer (i32), which is the paper's "no underflow" property
+(section 4.2.1, difference 2 vs OpenMP-SZ).
+
+TPU mapping (DESIGN.md section 2): each grid step stages one strip into
+VMEM via BlockSpec; the stencil is whole-tile shifted subtracts (VPU
+element-wise, no MXU), so the kernel is memory-bound like the paper's
+V100 version.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..variants import PREQUANT_CAP, RADIUS, Variant, block_struct
+
+
+def _shift_one(x, axis):
+    """Shift +1 along `axis` with zero fill (the padding layer)."""
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (1, 0)
+    padded = jnp.pad(x, pad)
+    idx = [slice(None)] * x.ndim
+    idx[axis] = slice(0, x.shape[axis])
+    return padded[tuple(idx)]
+
+
+def lorenzo_predict(blocked, interior_axes):
+    """Generalized 1st-order Lorenzo prediction on the blocked i32 array.
+
+    p = sum over nonempty subsets S of block axes of (-1)^(|S|+1) shift_S(x)
+    (paper section 3.1.2, binomial-coefficient form with n=1), evaluated on
+    the zero-padded block so the outer layer degrades to lower-order
+    Lorenzo, exactly as Figure 2 describes.
+    """
+    ndim = len(interior_axes)
+    pred = jnp.zeros_like(blocked)
+    for mask in range(1, 1 << ndim):
+        shifted = blocked
+        bits = 0
+        for j in range(ndim):
+            if mask >> j & 1:
+                shifted = _shift_one(shifted, interior_axes[j])
+                bits += 1
+        sign = 1 if bits % 2 == 1 else -1
+        pred = pred + sign * shifted
+    return pred
+
+
+def _dq_kernel(eb_ref, x_ref, delta_ref, codes_ref, *, strip_shape, block):
+    eb = eb_ref[0]
+    d = x_ref[...]
+    # PREQUANT: units of 2*eb, clamped so i32 arithmetic stays exact.
+    dq = jnp.clip(
+        jnp.rint(d * (0.5 / eb)),
+        -float(PREQUANT_CAP),
+        float(PREQUANT_CAP),
+    ).astype(jnp.int32)
+
+    struct, interior = block_struct(strip_shape, block)
+    blocked = dq.reshape(struct)
+    pred = lorenzo_predict(blocked, interior)
+    delta = (blocked - pred).reshape(strip_shape)
+
+    in_cap = jnp.logical_and(delta > -RADIUS, delta < RADIUS)
+    codes = jnp.where(in_cap, delta + RADIUS, 0).astype(jnp.int32)
+
+    delta_ref[...] = delta
+    codes_ref[...] = codes
+
+
+def dual_quant(variant: Variant, data, eb):
+    """Run DUAL-QUANT over one slab.
+
+    Args:
+      data: f32[variant.shape] raw values.
+      eb:   f32[1] absolute error bound.
+    Returns:
+      (delta i32[shape], codes i32[shape]); codes==0 marks outliers whose
+      exact integer delta is carried in `delta` (DESIGN.md section 3.1).
+    """
+    strip = variant.strip_shape
+    nd = variant.ndim
+    zeros = (0,) * (nd - 1)
+
+    def strip_idx(i):
+        return (i,) + zeros
+
+    kernel = functools.partial(_dq_kernel, strip_shape=strip, block=variant.block)
+    return pl.pallas_call(
+        kernel,
+        grid=(variant.strips,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec(strip, strip_idx),
+        ],
+        out_specs=[
+            pl.BlockSpec(strip, strip_idx),
+            pl.BlockSpec(strip, strip_idx),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(variant.shape, jnp.int32),
+            jax.ShapeDtypeStruct(variant.shape, jnp.int32),
+        ],
+        interpret=True,
+    )(eb, data)

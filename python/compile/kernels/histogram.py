@@ -1,0 +1,44 @@
+"""L1 Pallas kernel: quantization-bin histogram (paper section 3.2.1).
+
+Mirrors the Gomez-Luna replicated-histogram algorithm: each grid step owns a
+private per-strip histogram (the CUDA version's per-block shared-memory
+replica) built with a scatter-add, then accumulates it into the single
+output histogram that lives at a constant block index across the grid (the
+CUDA version's final parallel reduction)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..variants import Variant
+
+
+def _hist_kernel(codes_ref, hist_ref, *, nbins):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    codes = codes_ref[...].reshape(-1)
+    # Private replica for this strip, merged into the global histogram.
+    private = jnp.zeros((nbins,), jnp.int32).at[codes].add(1)
+    hist_ref[...] += private
+
+
+def histogram(variant: Variant, codes, nbins: int):
+    """codes i32[variant.shape] -> hist i32[nbins]."""
+    strip = variant.strip_shape
+    zeros = (0,) * (variant.ndim - 1)
+
+    kernel = functools.partial(_hist_kernel, nbins=nbins)
+    return pl.pallas_call(
+        kernel,
+        grid=(variant.strips,),
+        in_specs=[pl.BlockSpec(strip, lambda i: (i,) + zeros)],
+        out_specs=pl.BlockSpec((nbins,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((nbins,), jnp.int32),
+        interpret=True,
+    )(codes)

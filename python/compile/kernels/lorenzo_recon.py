@@ -1,0 +1,49 @@
+"""L1 Pallas kernel: parallel inverse Lorenzo reconstruction.
+
+The paper reconstructs cascadingly (section 3.3: "each data point cannot be
+decompressed until its preceding values are fully reconstructed") and lists
+decompression optimization as future work.  Because the 1st-order
+l-predictor has unit integer weights and blocks are zero-padded, the
+cascade telescopes to a d-dimensional inclusive prefix sum of the delta
+field within each block; evaluating it with one cumsum per block axis is
+bit-exact w.r.t. the cascade (all arithmetic is i32) and fully parallel
+(DESIGN.md section 3.2).  Intermediate partial sums are bounded by
+2^ndim * PREQUANT_CAP < 2^27, so i32 never overflows.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..variants import Variant, block_struct
+
+
+def _recon_kernel(eb_ref, delta_ref, out_ref, *, strip_shape, block):
+    eb = eb_ref[0]
+    delta = delta_ref[...]
+    struct, interior = block_struct(strip_shape, block)
+    acc = delta.reshape(struct)
+    for axis in interior:
+        acc = jnp.cumsum(acc, axis=axis)
+    out_ref[...] = acc.reshape(strip_shape).astype(jnp.float32) * (2.0 * eb)
+
+
+def reconstruct(variant: Variant, delta, eb):
+    """delta i32[shape] (outlier-patched) -> f32[shape] decompressed values."""
+    strip = variant.strip_shape
+    zeros = (0,) * (variant.ndim - 1)
+
+    kernel = functools.partial(_recon_kernel, strip_shape=strip, block=variant.block)
+    return pl.pallas_call(
+        kernel,
+        grid=(variant.strips,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec(strip, lambda i: (i,) + zeros),
+        ],
+        out_specs=pl.BlockSpec(strip, lambda i: (i,) + zeros),
+        out_shape=jax.ShapeDtypeStruct(variant.shape, jnp.float32),
+        interpret=True,
+    )(eb, delta)

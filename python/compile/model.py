@@ -1,0 +1,49 @@
+"""L2: the cuSZ compute graphs, composed from the L1 Pallas kernels.
+
+Three graphs per slab variant, AOT-lowered by aot.py and executed from the
+Rust hot path via PJRT:
+
+  compress(data f32[shape], eb f32[1]) -> (delta i32[shape],)
+     DUAL-QUANT kernel.  Codes/histogram/outliers are derived at L3 in one
+     fused pass over delta: on CPU-PJRT the XLA scatter-add histogram cost
+     31% of the whole graph while the L3 derivation is fused for free
+     (EXPERIMENTS.md §Perf iteration 5) — on a real GPU/TPU build the
+     histogram graph below would be composed back in, as in the paper.
+
+  histogram(codes i32[shape], eb-unused) -> i32[DICT_SIZE]
+     The paper's §3.2.1 privatized-replica histogram kernel, exported as a
+     standalone executable (exercised by tests and the breakdown bench).
+
+  decompress(delta i32[shape], eb f32[1]) -> f32[shape]
+     Blockwise inverse-Lorenzo prefix sums, then scale by 2*eb.  The Rust
+     coordinator patches outlier deltas in before calling this.
+"""
+
+import jax.numpy as jnp  # noqa: F401  (kept for kernel authorship parity)
+
+from .kernels import dual_quant as dq
+from .kernels import histogram as hist
+from .kernels import lorenzo_recon as recon
+from .variants import DICT_SIZE, Variant
+
+
+def make_compress(variant: Variant):
+    def compress(data, eb):
+        delta, _codes = dq.dual_quant(variant, data, eb)
+        return (delta,)
+
+    return compress
+
+
+def make_histogram(variant: Variant):
+    def histogram(codes, _eb):
+        return (hist.histogram(variant, codes, DICT_SIZE),)
+
+    return histogram
+
+
+def make_decompress(variant: Variant):
+    def decompress(delta, eb):
+        return (recon.reconstruct(variant, delta, eb),)
+
+    return decompress

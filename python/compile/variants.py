@@ -1,0 +1,86 @@
+"""Slab-variant table shared between the AOT compiler and the Rust runtime.
+
+Each variant fixes (slab shape, Lorenzo block shape, grid strips, dict size)
+at compile time; the Rust coordinator tiles fields into these slabs and
+selects a variant per field dimensionality (see rust/src/runtime/artifacts.rs,
+which parses the manifest.json emitted by aot.py).
+
+Block sizes follow the paper (§3.1.1): 32 for 1D, 16x16 for 2D, 8x8x8 for
+3D.  `strips` is the Pallas grid size along axis 0 (the HBM->VMEM schedule
+knob): on CPU-PJRT each interpret-mode grid step pays a full dynamic
+slice/update round trip, so the shipped artifacts use strips=1 (measured
+2.2x faster than strips=8 — EXPERIMENTS.md §Perf); a real-TPU build would
+raise it until each strip fits VMEM (DESIGN.md §8).
+"""
+
+from dataclasses import dataclass
+from typing import Tuple
+
+# Quantization-code dictionary size (number of Huffman symbols), paper
+# default: 1,024 bins; code 0 is reserved as the outlier marker.
+DICT_SIZE = 1024
+RADIUS = DICT_SIZE // 2
+
+# Prequantized values are clamped to +/- PREQUANT_CAP so that all integer
+# arithmetic (prediction, deltas, reconstruction prefix sums) stays exact in
+# i32 (see DESIGN.md section 3.5).  Points whose prequant value would exceed
+# the cap are demoted to verbatim outliers by the coordinator.
+PREQUANT_CAP = 1 << 23
+
+
+@dataclass(frozen=True)
+class Variant:
+    name: str
+    shape: Tuple[int, ...]       # full slab shape
+    block: Tuple[int, ...]       # Lorenzo block shape (paper section 3.1.1)
+    strips: int                  # grid steps along axis 0
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+    @property
+    def strip_shape(self) -> Tuple[int, ...]:
+        assert self.shape[0] % self.strips == 0
+        s0 = self.shape[0] // self.strips
+        assert s0 % self.block[0] == 0, "strips must align with block rows"
+        return (s0,) + self.shape[1:]
+
+
+VARIANTS = [
+    # 1D (HACC-like particle fields)
+    Variant("1d_64k", (1 << 16,), (32,), 1),
+    Variant("1d_1m", (1 << 20,), (32,), 1),
+    # 2D (CESM-ATM-like lat/lon fields)
+    Variant("2d_256", (256, 256), (16, 16), 1),
+    Variant("2d_1k", (1024, 1024), (16, 16), 1),
+    # 3D (Hurricane / Nyx; 4D QMCPACK folds its trailing axes to 3D).
+    # 3d_32 keeps padding bounded on thin fields (e.g. 25x125x125).
+    Variant("3d_32", (32, 32, 32), (8, 8, 8), 1),
+    Variant("3d_64", (64, 64, 64), (8, 8, 8), 1),
+    Variant("3d_128", (128, 128, 128), (8, 8, 8), 1),
+]
+
+BY_NAME = {v.name: v for v in VARIANTS}
+
+
+def block_struct(shape: Tuple[int, ...], block: Tuple[int, ...]):
+    """Interleaved (n0, B0, n1, B1, ...) reshape exposing block interiors.
+
+    Axis 2*i+1 is the interior of block axis i; shifting along it with zero
+    fill realizes the paper's zero-initialized padding layer (Figure 2).
+    """
+    struct = []
+    interior_axes = []
+    for i, (s, b) in enumerate(zip(shape, block)):
+        assert s % b == 0, f"shape {shape} not divisible by block {block}"
+        struct += [s // b, b]
+        interior_axes.append(2 * i + 1)
+    return tuple(struct), tuple(interior_axes)

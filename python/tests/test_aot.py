@@ -1,0 +1,69 @@
+"""AOT path tests: lowering produces parseable HLO text with the right
+entry signature, and the manifest is consistent with the variant table."""
+
+import json
+import os
+import re
+
+import pytest
+
+from compile import aot
+from compile.variants import BY_NAME, DICT_SIZE, VARIANTS
+
+
+@pytest.mark.parametrize("name", ["1d_64k", "2d_256", "3d_64"])
+@pytest.mark.parametrize("op", ["compress", "decompress"])
+def test_lower_produces_hlo_text(name, op):
+    v = BY_NAME[name]
+    text = aot.lower_variant(v, op)
+    assert text.startswith("HloModule"), text[:80]
+    assert "ENTRY" in text
+    # entry computation should mention the slab dimensions
+    dim0 = str(v.shape[0])
+    assert dim0 in text
+
+
+def test_compress_signature_shapes():
+    v = BY_NAME["2d_256"]
+    text = aot.lower_variant(v, "compress")
+    # root is a 1-tuple: delta i32[shape]
+    m = re.search(r"ENTRY .*?\{(.*)\n\}", text, re.S)
+    assert m is not None
+    body = m.group(1)
+    assert f"s32[{v.shape[0]},{v.shape[1]}]" in body
+
+
+def test_histogram_signature_shapes():
+    v = BY_NAME["2d_256"]
+    text = aot.lower_variant(v, "histogram")
+    assert f"s32[{DICT_SIZE}]" in text
+    assert f"s32[{v.shape[0]},{v.shape[1]}]" in text
+
+
+def test_decompress_signature_shapes():
+    v = BY_NAME["1d_64k"]
+    text = aot.lower_variant(v, "decompress")
+    assert f"f32[{v.shape[0]}]" in text
+    assert f"s32[{v.shape[0]}]" in text
+
+
+def test_manifest_if_built():
+    """If `make artifacts` has run, the manifest must cover every variant."""
+    mpath = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")
+    if not os.path.exists(mpath):
+        pytest.skip("artifacts not built")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    have = {(e["op"], e["variant"]) for e in manifest["executables"]}
+    if len(have) < 3 * len(VARIANTS):
+        pytest.skip("partial artifact build (--only)")
+    for v in VARIANTS:
+        assert ("compress", v.name) in have
+        assert ("histogram", v.name) in have
+        assert ("decompress", v.name) in have
+    for e in manifest["executables"]:
+        v = BY_NAME[e["variant"]]
+        assert tuple(e["shape"]) == v.shape
+        assert e["dict_size"] == DICT_SIZE
+        path = os.path.join(os.path.dirname(mpath), e["file"])
+        assert os.path.exists(path)

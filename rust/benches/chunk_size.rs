@@ -1,0 +1,74 @@
+//! Table 6: deflate and inflate throughput vs chunk size (2^6..2^16
+//! symbols per chunk) on every dataset.
+//!
+//! Paper shape to reproduce: a clear interior optimum — tiny chunks pay
+//! per-chunk overhead (the paper's kernel-launch/thread-count analogue is
+//! our task-dispatch overhead), huge chunks starve the workers; and
+//! inflate must reuse the deflate-time chunk geometry.
+
+mod common;
+
+use cusz::datagen::Dataset;
+use cusz::huffman::{self, ReverseCodebook};
+use cusz::util::bench::print_table;
+
+fn main() {
+    let bench = common::bench();
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8);
+    let sizes: Vec<usize> = (6..=16).map(|p| 1usize << p).collect();
+
+    for ds in Dataset::ALL {
+        let field = common::dataset_field(ds);
+        let (symbols, book) = common::symbols_and_book(&field);
+        let lengths = book.len.clone();
+        let rev = ReverseCodebook::from_lengths(&lengths).unwrap();
+        let bytes = field.size_bytes();
+
+        let mut rows = Vec::new();
+        let mut best = (0usize, 0.0f64, 0.0f64);
+        for &cs in &sizes {
+            if cs > symbols.len() {
+                continue;
+            }
+            let mut stream = None;
+            let rd = bench.run(&format!("{} deflate {cs}", ds.name()), bytes, || {
+                stream = Some(huffman::deflate_chunks(&symbols, &book, cs, threads));
+            });
+            let stream = stream.unwrap();
+            let ri = bench.run(&format!("{} inflate {cs}", ds.name()), bytes, || {
+                let out = huffman::inflate_chunks(&stream, &rev, threads);
+                std::hint::black_box(out.len());
+            });
+            let nchunks = symbols.len().div_ceil(cs);
+            if rd.gbps() + ri.gbps() > best.1 + best.2 {
+                best = (cs, rd.gbps(), ri.gbps());
+            }
+            rows.push(vec![
+                format!("2^{}", cs.trailing_zeros()),
+                format!("{:.1e}", nchunks as f64),
+                format!("{:.3}", rd.gbps()),
+                format!("{:.3}", ri.gbps()),
+            ]);
+        }
+        print_table(
+            &format!(
+                "Table 6 [{}, {:.1} MB]: throughput (GB/s) vs deflate chunk size",
+                ds.name(),
+                bytes as f64 / 1e6
+            ),
+            &["chunk size", "#chunks", "deflate", "inflate"],
+            &rows,
+        );
+        println!(
+            "optimal chunk {} ({} concurrent tasks): deflate {:.3} GB/s inflate {:.3} GB/s",
+            best.0,
+            symbols.len().div_ceil(best.0.max(1)),
+            best.1,
+            best.2
+        );
+    }
+    println!(
+        "\npaper reference (V100): optimum at ~2e4 concurrent threads per field; \
+         here the optimum tracks ~{threads} cores x task granularity."
+    );
+}

@@ -1,0 +1,60 @@
+//! Table 3: breakdown time (ms) of constructing a codebook — building the
+//! Huffman tree and deriving the canonical codebook — as the number of
+//! quantization bins sweeps 128..8192, on a Hurricane-like histogram.
+//!
+//! Paper shape to reproduce: both costs grow roughly linearly-to-
+//! O(k log k) in the bin count, and the cost is independent of data size
+//! (it depends only on the histogram).
+
+mod common;
+
+use cusz::huffman::{self, CanonicalCodebook};
+use cusz::util::bench::print_table;
+
+fn hurricane_histogram(bins: usize) -> Vec<u64> {
+    // Gaussian-ish code distribution centred on the zero-delta bin, the
+    // shape dual-quant produces on Hurricane fields, plus sparse tails so
+    // every bin participates (worst case for tree depth).
+    let radius = bins as f64 / 2.0;
+    (0..bins)
+        .map(|i| {
+            let z = (i as f64 - radius) / (radius / 40.0);
+            1 + (2.0e7 * (-z * z / 2.0).exp()) as u64
+        })
+        .collect()
+}
+
+fn main() {
+    let bench = common::bench();
+    let mut rows = Vec::new();
+    for bins in [128usize, 256, 512, 1024, 2048, 4096, 8192] {
+        let freq = hurricane_histogram(bins);
+        let mut lengths = Vec::new();
+        let t_tree = bench.run(&format!("tree {bins}"), 0, || {
+            lengths = huffman::build_lengths(&freq);
+        });
+        let mut book = None;
+        let t_book = bench.run(&format!("codebook {bins}"), 0, || {
+            book = Some(CanonicalCodebook::from_lengths(&lengths).unwrap());
+        });
+        // sanity: codebook really usable
+        let book = book.unwrap();
+        assert_eq!(book.len.len(), bins);
+        rows.push(vec![
+            bins.to_string(),
+            format!("{:.3}", t_tree.mean.as_secs_f64() * 1e3),
+            format!("{:.3}", t_book.mean.as_secs_f64() * 1e3),
+            format!("{:.3}", (t_tree.mean + t_book.mean).as_secs_f64() * 1e3),
+        ]);
+    }
+    print_table(
+        "Table 3: codebook construction time (ms) vs quantization bins",
+        &["#quant bins", "build tree", "get codebook", "total"],
+        &rows,
+    );
+    let t1024: f64 = rows[3][3].parse().unwrap();
+    println!(
+        "\npaper reference (V100): total 0.68/2.16/4.16/4.81/13.55/27.10/50.71 ms; \
+         shape check: monotone growth, 1024-bin total here = {t1024:.3} ms"
+    );
+}

@@ -1,0 +1,55 @@
+//! Shared bench helpers: workload construction mirroring the paper's
+//! five datasets, plus environment knobs (CUSZ_BENCH_QUICK=1 shrinks
+//! everything for smoke runs).
+
+use cusz::datagen::{self, Dataset};
+use cusz::field::Field;
+use cusz::huffman::{self, CanonicalCodebook};
+use cusz::util::bench::Bench;
+
+pub fn bench() -> Bench {
+    if quick() {
+        Bench::quick()
+    } else {
+        Bench::default()
+    }
+}
+
+pub fn quick() -> bool {
+    std::env::var("CUSZ_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// The representative field per dataset used by the throughput tables.
+pub fn dataset_field(ds: Dataset) -> Field {
+    let name = match ds {
+        Dataset::Hacc => "vx",
+        Dataset::CesmAtm => "CLDHGH",
+        Dataset::Hurricane => "CLOUDf48",
+        Dataset::Nyx => "baryon_density",
+        Dataset::Qmcpack => "einspline",
+    };
+    datagen::generate(ds, name, 42)
+}
+
+/// Quant-code symbol stream + codebook for a field at valrel 1e-4 — the
+/// common input of the Huffman benches (Tables 4 and 6).
+pub fn symbols_and_book(field: &Field) -> (Vec<u16>, CanonicalCodebook) {
+    use cusz::config::{BackendKind, CuszConfig, ErrorBound};
+    use cusz::coordinator::Coordinator;
+    let coord = Coordinator::new(CuszConfig {
+        backend: BackendKind::Cpu,
+        eb: ErrorBound::ValRel(1e-4),
+        ..Default::default()
+    })
+    .unwrap();
+    let archive = coord.compress(field).unwrap();
+    let lengths = archive.codebook_lengths.clone();
+    let rev_book = CanonicalCodebook::from_lengths(&lengths).unwrap();
+    let rev = huffman::ReverseCodebook::from_lengths(&lengths).unwrap();
+    let symbols = huffman::inflate_chunks(&archive.stream, &rev, 8);
+    (symbols, rev_book)
+}
+
+pub fn gbps(bytes: usize, secs: f64) -> f64 {
+    bytes as f64 / secs.max(1e-12) / 1e9
+}

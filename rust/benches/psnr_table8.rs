@@ -1,0 +1,75 @@
+//! Table 8: PSNR of cusz-rs vs SZ-1.4 (classic float-space cascade) on all
+//! 20 Hurricane fields and all 6 Nyx fields at valrel = 1e-4.
+//!
+//! Paper shape to reproduce: on zero-dominated fields (CLOUDf48, Q*f48,
+//! baryon_density) cuSZ scores notably HIGHER PSNR than SZ-1.4 because
+//! PREQUANT represents exact zeros exactly, while SZ-1.4's float-space
+//! reconstruction leaves ~uniform error everywhere; on smooth fields and
+//! the .log10 variants both sit at the valrel-implied ~84.8 dB.
+
+mod common;
+
+use cusz::config::{BackendKind, CuszConfig, ErrorBound};
+use cusz::coordinator::Coordinator;
+use cusz::datagen::{self, Dataset};
+use cusz::metrics;
+use cusz::util::bench::print_table;
+
+fn main() {
+    let coord = Coordinator::new_with_fallback(CuszConfig {
+        backend: BackendKind::Pjrt,
+        eb: ErrorBound::ValRel(1e-4),
+        ..Default::default()
+    })
+    .unwrap();
+    println!("cusz engine: {}", coord.engine_name());
+
+    let mut rows = Vec::new();
+    let mut boosted = 0usize;
+    let mut tied = 0usize;
+    let mut run = |ds: Dataset, fname: &str| {
+        let field = datagen::generate(ds, fname, 42);
+        let (lo, hi) = field.value_range();
+        let eb = (1e-4 * (hi - lo) as f64) as f32;
+
+        // SZ-1.4: classic float-space cascade (global Lorenzo)
+        let c = cusz::sz::classic::compress(&field.data, &field.kernel_dims(), eb, 1024);
+        let sz14 = cusz::sz::classic::decompress(&c, eb, 1024);
+        let psnr_sz = metrics::psnr(&field.data, &sz14);
+
+        // cusz-rs
+        let archive = coord.compress(&field).unwrap();
+        let out = coord.decompress(&archive).unwrap();
+        let psnr_cusz = metrics::psnr(&field.data, &out.data);
+
+        if psnr_cusz > psnr_sz + 1.0 {
+            boosted += 1;
+        } else if (psnr_cusz - psnr_sz).abs() <= 1.0 {
+            tied += 1;
+        }
+        rows.push(vec![
+            field.name.clone(),
+            format!("{psnr_sz:.2}"),
+            format!("{psnr_cusz:.2}"),
+            format!("{:+.2}", psnr_cusz - psnr_sz),
+        ]);
+    };
+
+    for fname in Dataset::Hurricane.field_names() {
+        run(Dataset::Hurricane, fname);
+    }
+    for fname in Dataset::Nyx.field_names() {
+        run(Dataset::Nyx, fname);
+    }
+
+    print_table(
+        "Table 8: PSNR (dB) cuSZ vs SZ-1.4 at valrel 1e-4",
+        &["field", "SZ-1.4", "cusz-rs", "delta"],
+        &rows,
+    );
+    println!(
+        "\n{boosted} fields with cuSZ PSNR boost (> +1 dB), {tied} ties — the paper's \
+         pattern: boosts on zero/min-dominated fields (CLOUDf48 84.99->94.18, \
+         baryon_density 89.71->98.25), ties at ~84.79 on smooth/log fields."
+    );
+}

@@ -1,0 +1,138 @@
+//! Framework configuration: error-bound modes, backend selection, tuning
+//! knobs that the paper's evaluation sweeps (chunk size, dict size,
+//! codeword representation).
+
+use std::path::PathBuf;
+
+/// Error-bound mode. The paper evaluates with the value-range-based
+/// relative bound (`valrel`, footnote 2): `abs_eb = valrel * (max - min)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ErrorBound {
+    /// Absolute bound: |d - d*| <= eb.
+    Abs(f64),
+    /// Value-range relative bound: |d - d*| <= eb * (max(d) - min(d)).
+    ValRel(f64),
+}
+
+impl ErrorBound {
+    /// Resolve to an absolute bound given the field's value range.
+    pub fn resolve(&self, range: f64) -> f32 {
+        match *self {
+            ErrorBound::Abs(eb) => eb as f32,
+            ErrorBound::ValRel(rel) => {
+                // Degenerate constant fields still need a positive bound.
+                let r = if range > 0.0 { range } else { 1.0 };
+                (rel * r) as f32
+            }
+        }
+    }
+}
+
+/// Which engine executes the quantization kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// AOT HLO executables on the PJRT CPU client (the production path;
+    /// stands in for the paper's CUDA kernels — see DESIGN.md §4).
+    Pjrt,
+    /// Pure-Rust dual-quant (bit-exact with the PJRT path); used as the
+    /// multicore baseline and as a fallback when artifacts are absent.
+    Cpu,
+}
+
+/// Huffman codeword representation (paper §3.2.2, Table 4). `Adaptive`
+/// selects U32 when the longest codeword fits in 24 bits, else U64.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CodewordRepr {
+    U32,
+    U64,
+    Adaptive,
+}
+
+/// Optional lossless stage over the deflated bitstream (paper step 5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LosslessStage {
+    None,
+    Gzip,
+    Zstd,
+}
+
+#[derive(Debug, Clone)]
+pub struct CuszConfig {
+    pub eb: ErrorBound,
+    pub backend: BackendKind,
+    /// Number of quantization bins (Huffman symbols). Paper default 1024.
+    /// The AOT artifacts are compiled for 1024; the CPU backend accepts
+    /// any power of two in [128, 65536] (Table 3 sweeps this).
+    pub dict_size: usize,
+    /// Symbols per deflate chunk (paper §3.2.4, Table 6). 4096 is the
+    /// measured optimum on this testbed; `cusz bench-chunk-size` re-derives.
+    pub chunk_symbols: usize,
+    pub codeword_repr: CodewordRepr,
+    pub lossless: LosslessStage,
+    /// Worker threads for coarse-grained (chunk) parallelism. 0 = all cores.
+    pub threads: usize,
+    /// Directory holding `manifest.tsv` + HLO artifacts.
+    pub artifacts_dir: PathBuf,
+    /// Bounded queue depth between pipeline stages (backpressure).
+    pub queue_depth: usize,
+}
+
+impl Default for CuszConfig {
+    fn default() -> Self {
+        CuszConfig {
+            eb: ErrorBound::ValRel(1e-4),
+            backend: BackendKind::Pjrt,
+            dict_size: 1024,
+            chunk_symbols: 4096,
+            codeword_repr: CodewordRepr::Adaptive,
+            lossless: LosslessStage::None,
+            threads: 0,
+            artifacts_dir: PathBuf::from("artifacts"),
+            queue_depth: 4,
+        }
+    }
+}
+
+impl CuszConfig {
+    pub fn radius(&self) -> i32 {
+        (self.dict_size / 2) as i32
+    }
+
+    pub fn effective_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn valrel_resolves_against_range() {
+        let eb = ErrorBound::ValRel(1e-3);
+        assert!((eb.resolve(100.0) - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn abs_ignores_range() {
+        let eb = ErrorBound::Abs(0.5);
+        assert_eq!(eb.resolve(123.0), 0.5);
+    }
+
+    #[test]
+    fn degenerate_range_stays_positive() {
+        let eb = ErrorBound::ValRel(1e-3);
+        assert!(eb.resolve(0.0) > 0.0);
+    }
+
+    #[test]
+    fn default_config_matches_paper() {
+        let c = CuszConfig::default();
+        assert_eq!(c.dict_size, 1024);
+        assert_eq!(c.radius(), 512);
+    }
+}

@@ -1,0 +1,197 @@
+//! Little-endian byte (de)serialization with CRC32-framed sections.
+
+use anyhow::{bail, Result};
+
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn i32(&mut self, v: i32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.bytes(s.as_bytes());
+    }
+
+    /// Length + CRC32 framed section.
+    pub fn section(&mut self, payload: &[u8]) {
+        self.u64(payload.len() as u64);
+        self.u32(crc32(payload));
+        self.bytes(payload);
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        ByteReader { buf, pos: 0 }
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<Vec<u8>> {
+        if self.pos + n > self.buf.len() {
+            bail!("archive truncated: need {n} bytes at {}", self.pos);
+        }
+        let out = self.buf[self.pos..self.pos + n].to_vec();
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn arr<const N: usize>(&mut self) -> Result<[u8; N]> {
+        if self.pos + N > self.buf.len() {
+            bail!("archive truncated at {}", self.pos);
+        }
+        let mut a = [0u8; N];
+        a.copy_from_slice(&self.buf[self.pos..self.pos + N]);
+        self.pos += N;
+        Ok(a)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.arr::<1>()?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.arr()?))
+    }
+
+    pub fn i32(&mut self) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.arr()?))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.arr()?))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.arr()?))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.arr()?))
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let b = self.take(n)?;
+        Ok(String::from_utf8(b)?)
+    }
+
+    /// Read a CRC-framed section, verifying integrity.
+    pub fn section(&mut self) -> Result<Vec<u8>> {
+        let n = self.u64()? as usize;
+        let crc = self.u32()?;
+        let payload = self.take(n)?;
+        if crc32(&payload) != crc {
+            bail!("section CRC mismatch (corrupt archive)");
+        }
+        Ok(payload)
+    }
+}
+
+/// CRC-32 (IEEE), table-driven.
+pub fn crc32(data: &[u8]) -> u32 {
+    static TABLE: once_cell::sync::Lazy<[u32; 256]> = once_cell::sync::Lazy::new(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xedb88320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    let mut c = !0u32;
+    for &b in data {
+        c = TABLE[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let mut w = ByteWriter::new();
+        w.u8(7);
+        w.u32(0xdeadbeef);
+        w.i32(-42);
+        w.u64(u64::MAX - 1);
+        w.f32(3.25);
+        w.f64(-1e300);
+        w.str("hello");
+        let buf = w.finish();
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xdeadbeef);
+        assert_eq!(r.i32().unwrap(), -42);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.f32().unwrap(), 3.25);
+        assert_eq!(r.f64().unwrap(), -1e300);
+        assert_eq!(r.str().unwrap(), "hello");
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // "123456789" -> 0xCBF43926 (IEEE CRC-32 check value)
+        assert_eq!(crc32(b"123456789"), 0xcbf43926);
+    }
+
+    #[test]
+    fn section_detects_corruption() {
+        let mut w = ByteWriter::new();
+        w.section(b"payload-data");
+        let mut buf = w.finish();
+        let n = buf.len();
+        buf[n - 1] ^= 1;
+        assert!(ByteReader::new(&buf).section().is_err());
+    }
+
+    #[test]
+    fn read_past_end_errors() {
+        let mut r = ByteReader::new(&[1, 2]);
+        assert!(r.u32().is_err());
+    }
+}

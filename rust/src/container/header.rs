@@ -1,0 +1,161 @@
+//! Archive header: everything decompression needs besides the payload.
+
+use anyhow::{bail, Result};
+
+use super::bytes::{ByteReader, ByteWriter};
+use crate::config::ErrorBound;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LosslessTag {
+    None,
+    Gzip,
+    Zstd,
+}
+
+impl LosslessTag {
+    fn to_u8(self) -> u8 {
+        match self {
+            LosslessTag::None => 0,
+            LosslessTag::Gzip => 1,
+            LosslessTag::Zstd => 2,
+        }
+    }
+
+    fn from_u8(v: u8) -> Result<Self> {
+        Ok(match v {
+            0 => LosslessTag::None,
+            1 => LosslessTag::Gzip,
+            2 => LosslessTag::Zstd,
+            _ => bail!("unknown lossless tag {v}"),
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Header {
+    pub field_name: String,
+    /// Logical field dims (pre-fold; decompression restores this shape).
+    pub dims: Vec<usize>,
+    /// Slab variant name (must exist in the artifact manifest or be a
+    /// CPU-known spec).
+    pub variant: String,
+    /// The user-requested bound (mode + value), for provenance.
+    pub eb: ErrorBound,
+    /// The resolved absolute bound actually applied.
+    pub abs_eb: f32,
+    pub dict_size: usize,
+    pub chunk_symbols: usize,
+    /// Codeword representation used at encode time (32 or 64), Table 4.
+    pub repr_bits: u32,
+    pub lossless: LosslessTag,
+    pub n_slabs: usize,
+}
+
+impl Header {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.str(&self.field_name);
+        w.u32(self.dims.len() as u32);
+        for &d in &self.dims {
+            w.u64(d as u64);
+        }
+        w.str(&self.variant);
+        match self.eb {
+            ErrorBound::Abs(v) => {
+                w.u8(0);
+                w.f64(v);
+            }
+            ErrorBound::ValRel(v) => {
+                w.u8(1);
+                w.f64(v);
+            }
+        }
+        w.f32(self.abs_eb);
+        w.u32(self.dict_size as u32);
+        w.u32(self.chunk_symbols as u32);
+        w.u32(self.repr_bits);
+        w.u8(self.lossless.to_u8());
+        w.u64(self.n_slabs as u64);
+        w.finish()
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Header> {
+        let mut r = ByteReader::new(bytes);
+        let field_name = r.str()?;
+        let nd = r.u32()? as usize;
+        if nd == 0 || nd > 4 {
+            bail!("bad ndim {nd}");
+        }
+        let mut dims = Vec::with_capacity(nd);
+        for _ in 0..nd {
+            dims.push(r.u64()? as usize);
+        }
+        let variant = r.str()?;
+        let eb = match r.u8()? {
+            0 => ErrorBound::Abs(r.f64()?),
+            1 => ErrorBound::ValRel(r.f64()?),
+            m => bail!("bad eb mode {m}"),
+        };
+        let abs_eb = r.f32()?;
+        if !(abs_eb > 0.0) {
+            bail!("non-positive abs_eb {abs_eb}");
+        }
+        Ok(Header {
+            field_name,
+            dims,
+            variant,
+            eb,
+            abs_eb,
+            dict_size: r.u32()? as usize,
+            chunk_symbols: r.u32()? as usize,
+            repr_bits: r.u32()?,
+            lossless: LosslessTag::from_u8(r.u8()?)?,
+            n_slabs: r.u64()? as usize,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_both_eb_modes() {
+        for eb in [ErrorBound::Abs(0.125), ErrorBound::ValRel(1e-4)] {
+            let h = Header {
+                field_name: "f".into(),
+                dims: vec![10, 20],
+                variant: "2d_256".into(),
+                eb,
+                abs_eb: 0.5,
+                dict_size: 1024,
+                chunk_symbols: 4096,
+                repr_bits: 32,
+                lossless: LosslessTag::Zstd,
+                n_slabs: 3,
+            };
+            let b = Header::from_bytes(&h.to_bytes()).unwrap();
+            assert_eq!(h, b);
+        }
+    }
+
+    #[test]
+    fn invalid_headers_rejected() {
+        let h = Header {
+            field_name: "f".into(),
+            dims: vec![4],
+            variant: "v".into(),
+            eb: ErrorBound::Abs(1.0),
+            abs_eb: 1.0,
+            dict_size: 1024,
+            chunk_symbols: 1,
+            repr_bits: 64,
+            lossless: LosslessTag::None,
+            n_slabs: 1,
+        };
+        let mut bytes = h.to_bytes();
+        // corrupt the ndim field (after name: 4-byte len + 1 byte "f")
+        bytes[5] = 200;
+        assert!(Header::from_bytes(&bytes).is_err());
+    }
+}

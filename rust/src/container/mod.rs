@@ -1,0 +1,225 @@
+//! The `.cusza` archive format — cuSZ's self-contained compressed output:
+//! header, embedded canonical codebook (as its length table), the chunked
+//! deflated Huffman bitstream, the outlier side channels, and per-section
+//! CRC32s (DESIGN.md §6).
+
+pub mod bytes;
+pub mod header;
+
+use anyhow::{bail, Context, Result};
+
+use crate::huffman::deflate::{DeflatedChunk, DeflatedStream};
+use bytes::{ByteReader, ByteWriter};
+pub use header::{Header, LosslessTag};
+
+pub const MAGIC: &[u8; 8] = b"CUSZA1\0\0";
+
+/// One compressed field.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Archive {
+    pub header: Header,
+    /// Canonical codebook as its per-symbol bit-length table.
+    pub codebook_lengths: Vec<u8>,
+    /// Deflated Huffman bitstream (quantization codes, slab-major order).
+    pub stream: DeflatedStream,
+    /// Prediction outliers: (global position in the slab-major stream,
+    /// exact integer delta). Symbol 0 marks their slots in the stream.
+    pub outliers: Vec<(u64, i32)>,
+    /// Range outliers: (global position, verbatim f32) — prequant-cap
+    /// clamps and non-finite values, overwritten after reconstruction.
+    pub verbatim: Vec<(u64, f32)>,
+}
+
+impl Archive {
+    /// Total compressed size in bytes (what CR is computed against).
+    pub fn compressed_bytes(&self) -> usize {
+        self.to_bytes().len()
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.bytes(MAGIC);
+        let header_bytes = self.header.to_bytes();
+        w.section(&header_bytes);
+
+        let mut body = ByteWriter::new();
+        body.u32(self.codebook_lengths.len() as u32);
+        body.bytes(&self.codebook_lengths);
+
+        body.u32(self.stream.chunks.len() as u32);
+        body.u32(self.stream.chunk_symbols as u32);
+        for c in &self.stream.chunks {
+            body.u64(c.bits);
+            body.u32(c.symbols);
+            body.u32(c.words.len() as u32);
+            for &wd in &c.words {
+                body.u64(wd);
+            }
+        }
+
+        body.u64(self.outliers.len() as u64);
+        for &(pos, delta) in &self.outliers {
+            body.u64(pos);
+            body.i32(delta);
+        }
+        body.u64(self.verbatim.len() as u64);
+        for &(pos, val) in &self.verbatim {
+            body.u64(pos);
+            body.f32(val);
+        }
+
+        let body_bytes = body.finish();
+        let body_bytes = match self.header.lossless {
+            LosslessTag::None => body_bytes,
+            LosslessTag::Gzip => {
+                use flate2::{write::GzEncoder, Compression};
+                use std::io::Write;
+                let mut enc = GzEncoder::new(Vec::new(), Compression::fast());
+                enc.write_all(&body_bytes).expect("gzip");
+                enc.finish().expect("gzip finish")
+            }
+            LosslessTag::Zstd => zstd::encode_all(&body_bytes[..], 3).expect("zstd"),
+        };
+        w.section(&body_bytes);
+        w.finish()
+    }
+
+    pub fn from_bytes(data: &[u8]) -> Result<Archive> {
+        let mut r = ByteReader::new(data);
+        let magic = r.take(8)?;
+        if magic != MAGIC {
+            bail!("not a cusza archive (bad magic)");
+        }
+        let header_bytes = r.section().context("header section")?;
+        let header = Header::from_bytes(&header_bytes)?;
+
+        let body_raw = r.section().context("body section")?;
+        let body_bytes = match header.lossless {
+            LosslessTag::None => body_raw,
+            LosslessTag::Gzip => {
+                use flate2::read::GzDecoder;
+                use std::io::Read;
+                let mut out = Vec::new();
+                GzDecoder::new(&body_raw[..]).read_to_end(&mut out).context("gunzip")?;
+                out
+            }
+            LosslessTag::Zstd => zstd::decode_all(&body_raw[..]).context("unzstd")?,
+        };
+        let mut b = ByteReader::new(&body_bytes);
+
+        let nlen = b.u32()? as usize;
+        let codebook_lengths = b.take(nlen)?;
+
+        let nchunks = b.u32()? as usize;
+        let chunk_symbols = b.u32()? as usize;
+        let mut chunks = Vec::with_capacity(nchunks);
+        for _ in 0..nchunks {
+            let bits = b.u64()?;
+            let symbols = b.u32()?;
+            let nwords = b.u32()? as usize;
+            let mut words = Vec::with_capacity(nwords);
+            for _ in 0..nwords {
+                words.push(b.u64()?);
+            }
+            chunks.push(DeflatedChunk { words, bits, symbols });
+        }
+
+        let nout = b.u64()? as usize;
+        let mut outliers = Vec::with_capacity(nout);
+        for _ in 0..nout {
+            outliers.push((b.u64()?, b.i32()?));
+        }
+        let nverb = b.u64()? as usize;
+        let mut verbatim = Vec::with_capacity(nverb);
+        for _ in 0..nverb {
+            verbatim.push((b.u64()?, b.f32()?));
+        }
+
+        Ok(Archive {
+            header,
+            codebook_lengths,
+            stream: DeflatedStream { chunks, chunk_symbols },
+            outliers,
+            verbatim,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ErrorBound;
+
+    fn sample_archive(lossless: LosslessTag) -> Archive {
+        Archive {
+            header: Header {
+                field_name: "NYX/baryon_density".into(),
+                dims: vec![64, 64, 64],
+                variant: "3d_64".into(),
+                eb: ErrorBound::ValRel(1e-4),
+                abs_eb: 0.01,
+                dict_size: 1024,
+                chunk_symbols: 4096,
+                repr_bits: 32,
+                lossless,
+                n_slabs: 4,
+            },
+            codebook_lengths: (0..1024).map(|i| (i % 20) as u8).collect(),
+            stream: DeflatedStream {
+                chunks: vec![
+                    DeflatedChunk { words: vec![0xdead, 0xbeef], bits: 100, symbols: 40 },
+                    DeflatedChunk { words: vec![42], bits: 17, symbols: 3 },
+                ],
+                chunk_symbols: 4096,
+            },
+            outliers: vec![(7, -123456), (99_999, 777)],
+            verbatim: vec![(123, f32::NAN), (456, 1e30)],
+        }
+    }
+
+    #[test]
+    fn roundtrip_plain() {
+        let a = sample_archive(LosslessTag::None);
+        let b = Archive::from_bytes(&a.to_bytes()).unwrap();
+        assert_eq!(a.header, b.header);
+        assert_eq!(a.codebook_lengths, b.codebook_lengths);
+        assert_eq!(a.stream, b.stream);
+        assert_eq!(a.outliers, b.outliers);
+        assert_eq!(b.verbatim[0].0, 123);
+        assert!(b.verbatim[0].1.is_nan());
+        assert_eq!(a.verbatim[1], b.verbatim[1]);
+    }
+
+    #[test]
+    fn roundtrip_gzip_and_zstd() {
+        for tag in [LosslessTag::Gzip, LosslessTag::Zstd] {
+            let a = sample_archive(tag);
+            let b = Archive::from_bytes(&a.to_bytes()).unwrap();
+            assert_eq!(a.stream, b.stream, "{tag:?}");
+        }
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let a = sample_archive(LosslessTag::None);
+        let mut bytes = a.to_bytes();
+        bytes[0] = b'X';
+        assert!(Archive::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn corrupt_section_crc_rejected() {
+        let a = sample_archive(LosslessTag::None);
+        let mut bytes = a.to_bytes();
+        let n = bytes.len();
+        bytes[n - 3] ^= 0xff; // flip a bit in the verbatim tail
+        assert!(Archive::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn truncated_archive_rejected() {
+        let a = sample_archive(LosslessTag::None);
+        let bytes = a.to_bytes();
+        assert!(Archive::from_bytes(&bytes[..bytes.len() / 2]).is_err());
+    }
+}

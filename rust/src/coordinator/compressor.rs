@@ -1,0 +1,170 @@
+//! Per-field compression orchestration (Figure 1, top path).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::{CompressStats, Coordinator};
+use crate::config::CodewordRepr;
+use crate::container::{Archive, Header, LosslessTag};
+use crate::field::Field;
+use crate::huffman::{self, CanonicalCodebook};
+use crate::metrics::StageTimer;
+use std::cell::RefCell;
+
+use crate::sz::blocks::tile_grid;
+use crate::sz::dual_quant;
+use crate::util::pool::parallel_map;
+
+thread_local! {
+    /// Per-worker gather buffer, reused across slabs (page-fault avoidance,
+    /// EXPERIMENTS.md §Perf iteration 3).
+    static GATHER: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Output of the quant phase for one slab.
+struct SlabQuant {
+    codes: Vec<u16>,
+    /// (in-slab position, exact delta) for code==0 slots.
+    outliers: Vec<(u32, i32)>,
+    /// (in-slab position, verbatim f32) for cap/non-finite values.
+    verbatim: Vec<(u32, f32)>,
+    hist: Vec<u32>,
+}
+
+pub fn compress(coord: &Coordinator, field: &Field) -> Result<(Archive, CompressStats)> {
+    let cfg = &coord.cfg;
+    let mut timer = StageTimer::new();
+    let t_total = Instant::now();
+
+    // ---- resolve error bound & geometry ------------------------------
+    let (lo, hi) = field.value_range();
+    let abs_eb = cfg.eb.resolve((hi - lo) as f64);
+    let kernel_dims = field.kernel_dims();
+    let spec = coord.spec_for(&kernel_dims)?.clone();
+    let grid = tile_grid(&kernel_dims, &spec);
+    let dict = cfg.dict_size;
+    let max_abs = lo.abs().max(hi.abs());
+    let range_safe = dual_quant::range_safe(max_abs, abs_eb)
+        && field.data.iter().all(|v| v.is_finite());
+
+    // ---- phase A: per-slab gather + DUAL-QUANT + code extraction -----
+    // The engine call runs on the PJRT engine thread (serialized, like a
+    // CUDA stream) or truly in parallel on the CPU backend.
+    let t0 = Instant::now();
+    let threads = cfg.effective_threads();
+    let slabs: Vec<Result<SlabQuant>> = parallel_map(threads, &grid, |_, idx| {
+        GATHER.with(|cell| {
+            let mut buf = cell.borrow_mut();
+            if buf.len() != spec.len() {
+                buf.clear();
+                buf.resize(spec.len(), 0.0);
+            }
+            // gather into the reused buffer (pad regions zeroed below only
+            // where the previous slab left residue)
+            if idx.valid != spec.shape {
+                buf.fill(0.0);
+            }
+            crate::sz::blocks::gather_slab_into(&field.data, &kernel_dims, &spec, idx, &mut buf);
+            let data: &[f32] = &buf;
+            let full = coord.engine().compress_slab_full(&spec, data, abs_eb, dict)?;
+            let verbatim = if range_safe {
+                Vec::new()
+            } else {
+                dual_quant::find_range_outliers(data, abs_eb)
+            };
+            Ok(SlabQuant {
+                codes: full.codes,
+                outliers: full.outliers,
+                verbatim,
+                hist: full.hist,
+            })
+        })
+    });
+    let mut quants = Vec::with_capacity(slabs.len());
+    for s in slabs {
+        quants.push(s?);
+    }
+    timer.add("1.predict-quant", t0.elapsed());
+
+    // ---- phase B: histogram merge ------------------------------------
+    let t0 = Instant::now();
+    let mut freq = vec![0u64; dict];
+    for q in &quants {
+        huffman::histogram::merge_into(&mut freq, &q.hist);
+    }
+    timer.add("2.histogram", t0.elapsed());
+
+    // ---- phase C: Huffman tree + canonical codebook -------------------
+    let t0 = Instant::now();
+    let lengths = huffman::build_lengths(&freq);
+    let book = CanonicalCodebook::from_lengths(&lengths)?;
+    timer.add("3.codebook", t0.elapsed());
+
+    // ---- phase D: flatten codes, gather global outliers ---------------
+    let t0 = Instant::now();
+    let slab_len = spec.len();
+    let total_symbols = slab_len * quants.len();
+    let mut symbols = Vec::with_capacity(total_symbols);
+    let mut outliers = Vec::new();
+    let mut verbatim = Vec::new();
+    for (si, q) in quants.iter().enumerate() {
+        let base = (si * slab_len) as u64;
+        symbols.extend_from_slice(&q.codes);
+        outliers.extend(q.outliers.iter().map(|&(p, d)| (base + p as u64, d)));
+        verbatim.extend(q.verbatim.iter().map(|&(p, v)| (base + p as u64, v)));
+    }
+    timer.add("4.gather-outliers", t0.elapsed());
+
+    // ---- phase E: encode + deflate ------------------------------------
+    let t0 = Instant::now();
+    let repr_bits = match cfg.codeword_repr {
+        CodewordRepr::U32 => 32,
+        CodewordRepr::U64 => 64,
+        CodewordRepr::Adaptive => book.repr_bits(),
+    };
+    let stream = huffman::deflate_chunks(&symbols, &book, cfg.chunk_symbols, threads);
+    timer.add("5.encode-deflate", t0.elapsed());
+
+    // ---- assemble ------------------------------------------------------
+    let t0 = Instant::now();
+    let lossless = match cfg.lossless {
+        crate::config::LosslessStage::None => LosslessTag::None,
+        crate::config::LosslessStage::Gzip => LosslessTag::Gzip,
+        crate::config::LosslessStage::Zstd => LosslessTag::Zstd,
+    };
+    let huffman_bits = stream.total_bits();
+    let archive = Archive {
+        header: Header {
+            field_name: field.name.clone(),
+            dims: field.dims.clone(),
+            variant: spec.name.clone(),
+            eb: cfg.eb,
+            abs_eb,
+            dict_size: dict,
+            chunk_symbols: cfg.chunk_symbols,
+            repr_bits,
+            lossless,
+            n_slabs: quants.len(),
+        },
+        codebook_lengths: lengths,
+        stream,
+        outliers,
+        verbatim,
+    };
+    timer.add("6.container", t0.elapsed());
+    timer.add("total", t_total.elapsed());
+
+    let stats = CompressStats {
+        original_bytes: field.size_bytes(),
+        compressed_bytes: archive.compressed_bytes(),
+        n_slabs: archive.header.n_slabs,
+        n_outliers: archive.outliers.len(),
+        n_verbatim: archive.verbatim.len(),
+        huffman_bits,
+        repr_bits,
+        abs_eb,
+        timer,
+    };
+    Ok((archive, stats))
+}

@@ -1,0 +1,169 @@
+//! Per-field decompression orchestration (Figure 1, bottom path):
+//! inflate → rebuild deltas (patch outliers) → inverse Lorenzo (engine)
+//! → scatter slabs → verbatim overwrite.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::{Coordinator, DecompressStats};
+use crate::container::Archive;
+use crate::field::Field;
+use crate::huffman::{self, ReverseCodebook};
+use crate::metrics::StageTimer;
+use crate::sz::blocks::{scatter_slab, tile_grid};
+use crate::util::pool::parallel_map;
+
+pub fn decompress(coord: &Coordinator, archive: &Archive) -> Result<(Field, DecompressStats)> {
+    let cfg = &coord.cfg;
+    let mut timer = StageTimer::new();
+    let t_total = Instant::now();
+    let h = &archive.header;
+    let abs_eb = h.abs_eb;
+    let radius = (h.dict_size / 2) as i32;
+
+    // geometry must reproduce compression exactly
+    let logical_dims = h.dims.clone();
+    let kernel_dims = if logical_dims.len() == 4 {
+        vec![logical_dims[0], logical_dims[1], logical_dims[2] * logical_dims[3]]
+    } else {
+        logical_dims.clone()
+    };
+    let spec = coord
+        .spec_for(&kernel_dims)
+        .with_context(|| format!("variant {} unavailable", h.variant))?
+        .clone();
+    if spec.name != h.variant {
+        bail!("archive variant {} != resolved {}", h.variant, spec.name);
+    }
+    let grid = tile_grid(&kernel_dims, &spec);
+    if grid.len() != h.n_slabs {
+        bail!("slab count mismatch: {} vs {}", grid.len(), h.n_slabs);
+    }
+
+    // ---- inflate -------------------------------------------------------
+    let t0 = Instant::now();
+    let rev = ReverseCodebook::from_lengths(&archive.codebook_lengths)?;
+    let threads = cfg.effective_threads();
+    let symbols = huffman::inflate::inflate_chunks_strict(&archive.stream, &rev, threads)?;
+    let slab_len = spec.len();
+    if symbols.len() != slab_len * grid.len() {
+        bail!("symbol count {} != {}", symbols.len(), slab_len * grid.len());
+    }
+    timer.add("1.huffman-decode", t0.elapsed());
+
+    // ---- rebuild per-slab deltas (patch prediction outliers) -----------
+    let t0 = Instant::now();
+    // outliers are stored sorted by global (slab-major) position; split
+    // them per slab so each worker patches its own range
+    for w in archive.outliers.windows(2) {
+        if w[0].0 >= w[1].0 {
+            bail!("outlier positions not strictly increasing");
+        }
+    }
+    if let Some(&(last, _)) = archive.outliers.last() {
+        if last as usize >= slab_len * grid.len() {
+            bail!("outlier position {last} out of range");
+        }
+    }
+    let mut slab_deltas: Vec<Vec<i32>> = Vec::with_capacity(grid.len());
+    let mut oi = 0usize;
+    for si in 0..grid.len() {
+        let syms = &symbols[si * slab_len..(si + 1) * slab_len];
+        let mut delta: Vec<i32> =
+            syms.iter().map(|&c| if c == 0 { 0 } else { c as i32 - radius }).collect();
+        let base = (si * slab_len) as u64;
+        let end = base + slab_len as u64;
+        while oi < archive.outliers.len() && archive.outliers[oi].0 < end {
+            let (pos, d) = archive.outliers[oi];
+            delta[(pos - base) as usize] = d;
+            oi += 1;
+        }
+        slab_deltas.push(delta);
+    }
+    timer.add("2.patch-outliers", t0.elapsed());
+
+    // ---- inverse Lorenzo per slab, scatter into the field ---------------
+    let t0 = Instant::now();
+    let n: usize = kernel_dims.iter().product();
+    let deltas_cell: Vec<std::sync::Mutex<Vec<i32>>> =
+        slab_deltas.into_iter().map(std::sync::Mutex::new).collect();
+    let slabs: Vec<Result<Vec<f32>>> = parallel_map(threads, &deltas_cell, |_, cell| {
+        let delta = std::mem::take(&mut *cell.lock().unwrap());
+        coord.engine().decompress_slab_owned(&spec, delta, abs_eb)
+    });
+    let mut out = vec![0f32; n];
+    for (si, (slab, idx)) in slabs.into_iter().zip(&grid).enumerate() {
+        let slab = slab.with_context(|| format!("slab {si}"))?;
+        scatter_slab(&mut out, &kernel_dims, &spec, idx, &slab);
+    }
+    timer.add("3.reverse-predict-quant", t0.elapsed());
+
+    // ---- verbatim overwrites -------------------------------------------
+    let t0 = Instant::now();
+    for &(pos, val) in &archive.verbatim {
+        // verbatim positions are slab-stream positions: map back to field
+        let pos = pos as usize;
+        let si = pos / slab_len;
+        let within = pos % slab_len;
+        if si >= grid.len() {
+            bail!("verbatim slab {si} out of range");
+        }
+        if let Some(field_off) = slab_to_field_offset(&kernel_dims, &spec, &grid[si], within) {
+            out[field_off] = val;
+        }
+    }
+    timer.add("4.verbatim", t0.elapsed());
+    timer.add("total", t_total.elapsed());
+
+    let field = Field::new(h.field_name.clone(), logical_dims, out)?;
+    let stats = DecompressStats { timer, original_bytes: field.size_bytes() };
+    Ok((field, stats))
+}
+
+/// Map an in-slab row-major offset to the field offset (None if padding).
+fn slab_to_field_offset(
+    dims: &[usize],
+    spec: &crate::sz::blocks::SlabSpec,
+    idx: &crate::sz::blocks::SlabIndex,
+    within: usize,
+) -> Option<usize> {
+    let nd = dims.len();
+    let mut rem = within;
+    let mut coord = vec![0usize; nd];
+    for ax in (0..nd).rev() {
+        coord[ax] = rem % spec.shape[ax];
+        rem /= spec.shape[ax];
+    }
+    let mut off = 0usize;
+    let mut stride = 1usize;
+    for ax in (0..nd).rev() {
+        if coord[ax] >= idx.valid[ax] {
+            return None; // padding region
+        }
+        off += (idx.origin[ax] + coord[ax]) * stride;
+        stride *= dims[ax];
+    }
+    Some(off)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sz::blocks::SlabSpec;
+
+    #[test]
+    fn slab_offset_mapping_2d() {
+        let dims = [5usize, 7];
+        let spec = SlabSpec::new("t", &[4, 4], &[2, 2]);
+        let grid = tile_grid(&dims, &spec);
+        // slab (1,1): origin (4,4), valid (1,3)
+        let idx = &grid[3];
+        assert_eq!(slab_to_field_offset(&dims, &spec, idx, 0), Some(4 * 7 + 4));
+        assert_eq!(slab_to_field_offset(&dims, &spec, idx, 2), Some(4 * 7 + 6));
+        // row 0, col 3 is padding (valid cols = 3)
+        assert_eq!(slab_to_field_offset(&dims, &spec, idx, 3), None);
+        // row 1 entirely padding (valid rows = 1)
+        assert_eq!(slab_to_field_offset(&dims, &spec, idx, 4), None);
+    }
+}

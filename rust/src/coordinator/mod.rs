@@ -1,0 +1,199 @@
+//! The cuSZ coordinator (L3): orchestrates the full compression /
+//! decompression flow of Figure 1 over the quantization engine (PJRT AOT
+//! executables or the CPU mirror), the Huffman substrate, and the archive
+//! container.
+//!
+//! Field → slab tiling (§3.1.1) → DUAL-QUANT + histogram (L1/L2 kernels)
+//! → outlier extraction → Huffman tree + canonical codebook (§3.2.2-3.2.3)
+//! → chunked encode+deflate (§3.2.4) → `.cusza` archive, and the reverse.
+
+pub mod compressor;
+pub mod decompressor;
+pub mod pipeline;
+pub mod stats;
+
+use anyhow::{Context, Result};
+
+use crate::config::{BackendKind, CuszConfig};
+use crate::container::Archive;
+use crate::field::Field;
+use crate::runtime::{self, QuantEngine};
+use crate::sz::blocks::{builtin_variants, select_spec, SlabSpec};
+
+pub use stats::{CompressStats, DecompressStats};
+
+pub struct Coordinator {
+    pub cfg: CuszConfig,
+    engine: Box<dyn QuantEngine>,
+    specs: Vec<SlabSpec>,
+}
+
+impl Coordinator {
+    /// Build from config; `Pjrt` backend requires `make artifacts`.
+    pub fn new(cfg: CuszConfig) -> Result<Self> {
+        let engine = runtime::build_engine(&cfg).context("building quant engine")?;
+        let specs = match cfg.backend {
+            BackendKind::Pjrt => {
+                let manifest = runtime::ArtifactManifest::load(&cfg.artifacts_dir)?;
+                manifest
+                    .executables
+                    .iter()
+                    .filter(|e| e.op == "compress")
+                    .map(|e| e.slab_spec())
+                    .collect()
+            }
+            BackendKind::Cpu => builtin_variants(),
+        };
+        Ok(Coordinator { cfg, engine, specs })
+    }
+
+    /// Like `new` but silently falls back to the CPU engine when PJRT
+    /// artifacts are unavailable (used by examples and benches).
+    pub fn new_with_fallback(mut cfg: CuszConfig) -> Result<Self> {
+        if cfg.backend == BackendKind::Pjrt && Coordinator::new(cfg.clone()).is_err() {
+            eprintln!("[cusz] artifacts unavailable; falling back to CPU backend");
+            cfg.backend = BackendKind::Cpu;
+        }
+        Coordinator::new(cfg)
+    }
+
+    pub fn engine_name(&self) -> &'static str {
+        self.engine.name()
+    }
+
+    pub(crate) fn engine(&self) -> &dyn QuantEngine {
+        self.engine.as_ref()
+    }
+
+    /// Resolve the slab spec for a field.
+    pub fn spec_for(&self, kernel_dims: &[usize]) -> Result<&SlabSpec> {
+        select_spec(&self.specs, kernel_dims)
+            .with_context(|| format!("no slab variant for {}D fields", kernel_dims.len()))
+    }
+
+    pub fn compress(&self, field: &Field) -> Result<Archive> {
+        Ok(self.compress_with_stats(field)?.0)
+    }
+
+    pub fn compress_with_stats(&self, field: &Field) -> Result<(Archive, CompressStats)> {
+        compressor::compress(self, field)
+    }
+
+    pub fn decompress(&self, archive: &Archive) -> Result<Field> {
+        Ok(self.decompress_with_stats(archive)?.0)
+    }
+
+    pub fn decompress_with_stats(&self, archive: &Archive) -> Result<(Field, DecompressStats)> {
+        decompressor::decompress(self, archive)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ErrorBound;
+    use crate::metrics;
+    use crate::testkit::fields::{make, Regime};
+
+    fn cpu_coordinator(eb: ErrorBound) -> Coordinator {
+        let cfg = CuszConfig { backend: BackendKind::Cpu, eb, ..Default::default() };
+        Coordinator::new(cfg).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_all_regimes_all_ndims() {
+        for regime in Regime::ALL {
+            for dims in [vec![50_000usize], vec![300, 300], vec![40, 50, 60]] {
+                let n: usize = dims.iter().product();
+                let data = make(regime, n, 3);
+                let field = Field::new("t", dims.clone(), data).unwrap();
+                let coord = cpu_coordinator(ErrorBound::Abs(1e-3));
+                let archive = coord.compress(&field).unwrap();
+                let out = coord.decompress(&archive).unwrap();
+                assert_eq!(out.dims, field.dims);
+                assert_eq!(
+                    metrics::verify_error_bound(&field.data, &out.data, 1e-3),
+                    None,
+                    "{regime:?} {dims:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn valrel_bound_resolves_per_field() {
+        let data = make(Regime::Noisy, 65536, 9);
+        let field = Field::new("t", vec![65536], data).unwrap();
+        let coord = cpu_coordinator(ErrorBound::ValRel(1e-3));
+        let (archive, _) = coord.compress_with_stats(&field).unwrap();
+        let (lo, hi) = field.value_range();
+        let expect = 1e-3 * (hi - lo) as f64;
+        assert!((archive.header.abs_eb as f64 - expect).abs() / expect < 1e-5);
+        let out = coord.decompress(&archive).unwrap();
+        assert_eq!(
+            metrics::verify_error_bound(&field.data, &out.data, archive.header.abs_eb),
+            None
+        );
+    }
+
+    #[test]
+    fn four_d_field_roundtrips_via_fold() {
+        let data = make(Regime::Smooth, 8 * 10 * 12 * 14, 5);
+        let field = Field::new("q4", vec![8, 10, 12, 14], data).unwrap();
+        let coord = cpu_coordinator(ErrorBound::Abs(1e-2));
+        let out = coord.decompress(&coord.compress(&field).unwrap()).unwrap();
+        assert_eq!(out.dims, vec![8, 10, 12, 14]);
+        assert_eq!(metrics::verify_error_bound(&field.data, &out.data, 1e-2), None);
+    }
+
+    #[test]
+    fn nonfinite_values_roundtrip_verbatim() {
+        let mut data = make(Regime::Smooth, 4096, 6);
+        data[10] = f32::NAN;
+        data[20] = f32::INFINITY;
+        data[30] = f32::NEG_INFINITY;
+        let field = Field::new("nan", vec![4096], data).unwrap();
+        let coord = cpu_coordinator(ErrorBound::Abs(1e-3));
+        let out = coord.decompress(&coord.compress(&field).unwrap()).unwrap();
+        assert!(out.data[10].is_nan());
+        assert_eq!(out.data[20], f32::INFINITY);
+        assert_eq!(out.data[30], f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn huge_values_roundtrip_via_range_outliers() {
+        let mut data = make(Regime::Smooth, 4096, 7);
+        data[100] = 3.4e38;
+        data[200] = -3.4e38;
+        let field = Field::new("huge", vec![4096], data.clone()).unwrap();
+        let coord = cpu_coordinator(ErrorBound::Abs(1e-6));
+        let out = coord.decompress(&coord.compress(&field).unwrap()).unwrap();
+        assert_eq!(out.data[100], 3.4e38);
+        assert_eq!(out.data[200], -3.4e38);
+        // the huge values must not corrupt their neighbors
+        assert_eq!(metrics::verify_error_bound(&data, &out.data, 1e-6), None);
+    }
+
+    #[test]
+    fn smooth_data_compresses_well() {
+        let data = make(Regime::Smooth, 1 << 18, 8);
+        let field = Field::new("s", vec![1 << 18], data).unwrap();
+        let coord = cpu_coordinator(ErrorBound::ValRel(1e-3));
+        let (archive, stats) = coord.compress_with_stats(&field).unwrap();
+        let cr = field.size_bytes() as f64 / archive.compressed_bytes() as f64;
+        assert!(cr > 4.0, "compression ratio {cr}");
+        assert_eq!(stats.original_bytes, field.size_bytes());
+    }
+
+    #[test]
+    fn archive_bytes_roundtrip_through_container() {
+        let data = make(Regime::Zeros, 128 * 128, 10);
+        let field = Field::new("z", vec![128, 128], data).unwrap();
+        let coord = cpu_coordinator(ErrorBound::Abs(1e-4));
+        let archive = coord.compress(&field).unwrap();
+        let bytes = archive.to_bytes();
+        let restored = Archive::from_bytes(&bytes).unwrap();
+        let out = coord.decompress(&restored).unwrap();
+        assert_eq!(metrics::verify_error_bound(&field.data, &out.data, 1e-4), None);
+    }
+}

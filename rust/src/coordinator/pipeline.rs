@@ -1,0 +1,152 @@
+//! Streaming multi-field pipeline — the data-pipeline face of the
+//! coordinator: a bounded-queue three-stage flow (produce → compress →
+//! sink) with backpressure, for workloads like "compress every field of a
+//! simulation snapshot as it is produced" (the paper's LCLS-II / HACC
+//! motivation, §1).
+
+use std::sync::mpsc::sync_channel;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::{CompressStats, Coordinator};
+use crate::container::Archive;
+use crate::field::Field;
+
+/// Aggregate results of a streaming run.
+#[derive(Debug, Default)]
+pub struct PipelineReport {
+    pub fields: usize,
+    pub original_bytes: usize,
+    pub compressed_bytes: usize,
+    pub wall_seconds: f64,
+    pub per_field: Vec<(String, CompressStats)>,
+}
+
+impl PipelineReport {
+    pub fn compression_ratio(&self) -> f64 {
+        self.original_bytes as f64 / self.compressed_bytes.max(1) as f64
+    }
+
+    pub fn throughput_gbps(&self) -> f64 {
+        self.original_bytes as f64 / self.wall_seconds.max(1e-12) / 1e9
+    }
+}
+
+/// Run the pipeline: `producer` yields fields (runs on its own thread,
+/// throttled by the bounded queue), the calling thread compresses, and
+/// `sink` consumes each archive (e.g. writes it to storage).
+pub fn run<P, S>(coord: &Coordinator, producer: P, mut sink: S) -> Result<PipelineReport>
+where
+    P: FnOnce(&dyn Fn(Field) -> bool) + Send + 'static,
+    S: FnMut(&str, Archive) -> Result<()>,
+{
+    let depth = coord.cfg.queue_depth.max(1);
+    let (tx, rx) = sync_channel::<Field>(depth);
+    let producer_handle = std::thread::Builder::new()
+        .name("field-producer".into())
+        .spawn(move || {
+            let push = |f: Field| tx.send(f).is_ok();
+            producer(&push);
+        })?;
+
+    let t0 = Instant::now();
+    let mut report = PipelineReport::default();
+    for field in rx {
+        let name = field.name.clone();
+        let (archive, stats) = coord.compress_with_stats(&field)?;
+        report.fields += 1;
+        report.original_bytes += stats.original_bytes;
+        report.compressed_bytes += stats.compressed_bytes;
+        sink(&name, archive)?;
+        report.per_field.push((name, stats));
+    }
+    report.wall_seconds = t0.elapsed().as_secs_f64();
+    producer_handle.join().ok();
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BackendKind, CuszConfig, ErrorBound};
+    use crate::metrics;
+    use crate::testkit::fields::{make, Regime};
+
+    #[test]
+    fn streams_fields_with_backpressure() {
+        // eb large enough that even the Noisy regime (sigma=10) stays
+        // in-cap and compresses
+        let eb = 0.05f32;
+        let cfg = CuszConfig {
+            backend: BackendKind::Cpu,
+            eb: ErrorBound::Abs(eb as f64),
+            queue_depth: 2,
+            ..Default::default()
+        };
+        let coord = Coordinator::new(cfg).unwrap();
+        let originals: Vec<Field> = (0..6)
+            .map(|i| {
+                Field::new(
+                    format!("f{i}"),
+                    vec![256, 256],
+                    make(Regime::ALL[i % 3], 256 * 256, i as u64),
+                )
+                .unwrap()
+            })
+            .collect();
+        let to_send = originals.clone();
+        let mut archives = Vec::new();
+        let report = run(
+            &coord,
+            move |push| {
+                for f in to_send {
+                    if !push(f) {
+                        break;
+                    }
+                }
+            },
+            |name, archive| {
+                archives.push((name.to_string(), archive));
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(report.fields, 6);
+        assert_eq!(archives.len(), 6);
+        assert!(report.compression_ratio() > 1.0);
+        // decompress everything and verify bounds
+        for ((_, archive), orig) in archives.iter().zip(&originals) {
+            let out = coord.decompress(archive).unwrap();
+            assert_eq!(metrics::verify_error_bound(&orig.data, &out.data, eb), None);
+        }
+    }
+
+    #[test]
+    fn sink_error_aborts_cleanly() {
+        let cfg = CuszConfig {
+            backend: BackendKind::Cpu,
+            eb: ErrorBound::Abs(1e-2),
+            ..Default::default()
+        };
+        let coord = Coordinator::new(cfg).unwrap();
+        let result = run(
+            &coord,
+            |push| {
+                for i in 0..100 {
+                    let f = Field::new(
+                        format!("f{i}"),
+                        vec![4096],
+                        make(Regime::Smooth, 4096, i),
+                    )
+                    .unwrap();
+                    if !push(f) {
+                        break; // backpressure released on abort
+                    }
+                }
+            },
+            |_, _| anyhow::bail!("disk full"),
+        );
+        assert!(result.is_err());
+    }
+}

@@ -1,0 +1,63 @@
+//! Per-run statistics: stage timings (Table 7 rows) and size accounting.
+
+use crate::metrics::StageTimer;
+
+#[derive(Debug, Clone, Default)]
+pub struct CompressStats {
+    pub timer: StageTimer,
+    pub original_bytes: usize,
+    pub compressed_bytes: usize,
+    pub n_slabs: usize,
+    pub n_outliers: usize,
+    pub n_verbatim: usize,
+    pub huffman_bits: u64,
+    pub repr_bits: u32,
+    pub abs_eb: f32,
+}
+
+impl CompressStats {
+    pub fn compression_ratio(&self) -> f64 {
+        self.original_bytes as f64 / self.compressed_bytes.max(1) as f64
+    }
+
+    pub fn bitrate(&self) -> f64 {
+        32.0 / self.compression_ratio()
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "original {:.2} MB -> compressed {:.2} MB  CR {:.2}x  bitrate {:.2} b/v  \
+             (outliers {}, verbatim {}, repr u{})\n{}",
+            self.original_bytes as f64 / 1e6,
+            self.compressed_bytes as f64 / 1e6,
+            self.compression_ratio(),
+            self.bitrate(),
+            self.n_outliers,
+            self.n_verbatim,
+            self.repr_bits,
+            self.timer.report(self.original_bytes)
+        )
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct DecompressStats {
+    pub timer: StageTimer,
+    pub original_bytes: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratio_math() {
+        let s = CompressStats {
+            original_bytes: 4_000_000,
+            compressed_bytes: 400_000,
+            ..Default::default()
+        };
+        assert!((s.compression_ratio() - 10.0).abs() < 1e-12);
+        assert!((s.bitrate() - 3.2).abs() < 1e-12);
+    }
+}

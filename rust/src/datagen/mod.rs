@@ -1,0 +1,141 @@
+//! Synthetic stand-ins for the five SDRBench datasets (Table 2).
+//!
+//! The real datasets are not redistributable inside this environment
+//! (repro band 0), so each field is generated to match the statistical
+//! character that drives compression behaviour (DESIGN.md §4): smoothness
+//! class (Lorenzo predictability), zero-domination (Table 9), value range
+//! and tail shape. Dimensions are scaled down from production size by the
+//! `scale` knob (default keeps every field a few MB so the whole benchmark
+//! suite runs in minutes; `--scale 2` per-axis-doubles 2D/3D fields).
+
+pub mod noise;
+pub mod profiles;
+
+use anyhow::{bail, Result};
+
+use crate::field::Field;
+use crate::util::prng::Rng;
+
+/// The five evaluated datasets (paper Table 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dataset {
+    /// 1D cosmology particles (HACC): positions + velocities.
+    Hacc,
+    /// 2D climate (CESM-ATM).
+    CesmAtm,
+    /// 3D climate (Hurricane ISABEL).
+    Hurricane,
+    /// 3D cosmology (Nyx).
+    Nyx,
+    /// 4D quantum Monte Carlo (QMCPACK einspline), folds to 3D.
+    Qmcpack,
+}
+
+impl Dataset {
+    pub const ALL: [Dataset; 5] =
+        [Dataset::Hacc, Dataset::CesmAtm, Dataset::Hurricane, Dataset::Nyx, Dataset::Qmcpack];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dataset::Hacc => "HACC",
+            Dataset::CesmAtm => "CESM-ATM",
+            Dataset::Hurricane => "HURRICANE",
+            Dataset::Nyx => "NYX",
+            Dataset::Qmcpack => "QMCPACK",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Dataset> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "hacc" => Dataset::Hacc,
+            "cesm" | "cesm-atm" => Dataset::CesmAtm,
+            "hurricane" | "isabel" => Dataset::Hurricane,
+            "nyx" => Dataset::Nyx,
+            "qmcpack" => Dataset::Qmcpack,
+            _ => bail!("unknown dataset {s} (hacc|cesm|hurricane|nyx|qmcpack)"),
+        })
+    }
+
+    /// Scaled-down dims (scale=1). Production dims are in Table 2.
+    pub fn dims(&self, scale: usize) -> Vec<usize> {
+        let s = scale.max(1);
+        match self {
+            Dataset::Hacc => vec![(1 << 21) * s],
+            Dataset::CesmAtm => vec![450 * s, 900 * s],
+            Dataset::Hurricane => vec![25 * s, 125 * s, 125 * s],
+            Dataset::Nyx => vec![128 * s, 128 * s, 128 * s],
+            Dataset::Qmcpack => vec![72 * s, 29 * s, 35 * s, 35 * s],
+        }
+    }
+
+    /// Representative field names (the ones the paper's tables use).
+    pub fn field_names(&self) -> Vec<&'static str> {
+        match self {
+            Dataset::Hacc => vec!["x", "vx"],
+            Dataset::CesmAtm => vec!["CLDHGH", "PS"],
+            Dataset::Hurricane => profiles::HURRICANE_FIELDS.to_vec(),
+            Dataset::Nyx => profiles::NYX_FIELDS.to_vec(),
+            Dataset::Qmcpack => vec!["einspline"],
+        }
+    }
+}
+
+/// Generate one named field of a dataset at default scale.
+pub fn generate(dataset: Dataset, field: &str, seed: u64) -> Field {
+    generate_scaled(dataset, field, seed, 1)
+}
+
+/// Generate with an axis scale multiplier.
+pub fn generate_scaled(dataset: Dataset, field: &str, seed: u64, scale: usize) -> Field {
+    let dims = dataset.dims(scale);
+    let mut rng = Rng::new(seed ^ hash_name(dataset.name()) ^ hash_name(field));
+    let data = profiles::synthesize(dataset, field, &dims, &mut rng);
+    Field::new(format!("{}/{}", dataset.name(), field), dims, data).expect("datagen shape")
+}
+
+fn hash_name(s: &str) -> u64 {
+    let mut h = 1469598103934665603u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(1099511628211);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_dataset_generates_every_field() {
+        for ds in Dataset::ALL {
+            for f in ds.field_names() {
+                let field = generate(ds, f, 1);
+                assert_eq!(field.len(), ds.dims(1).iter().product::<usize>());
+                assert!(field.data.iter().all(|v| v.is_finite()), "{}/{}", ds.name(), f);
+            }
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic_per_seed() {
+        let a = generate(Dataset::Nyx, "baryon_density", 9);
+        let b = generate(Dataset::Nyx, "baryon_density", 9);
+        assert_eq!(a.data, b.data);
+        let c = generate(Dataset::Nyx, "baryon_density", 10);
+        assert_ne!(a.data, c.data);
+    }
+
+    #[test]
+    fn fields_differ_from_each_other() {
+        let a = generate(Dataset::Hurricane, "CLOUDf48", 1);
+        let b = generate(Dataset::Hurricane, "Pf48", 1);
+        assert_ne!(a.data, b.data);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Dataset::parse("NYX").unwrap(), Dataset::Nyx);
+        assert!(Dataset::parse("bogus").is_err());
+    }
+}

@@ -1,0 +1,187 @@
+//! Multi-octave value noise — the shared substrate for the synthetic
+//! SDRBench-like fields. Each octave places random values on a coarse
+//! lattice and multilinearly interpolates; summing octaves with geometric
+//! persistence gives fields whose smoothness (hence Lorenzo
+//! predictability) is tunable to match each dataset's character.
+
+use crate::util::prng::Rng;
+
+/// Smooth field over `dims` (1..=3 axes): octave sum, values roughly in
+/// [-1, 1]. `base_cell` is the coarsest lattice spacing in grid units.
+pub fn smooth(dims: &[usize], base_cell: usize, octaves: usize, persistence: f32, rng: &mut Rng) -> Vec<f32> {
+    let n: usize = dims.iter().product();
+    let mut out = vec![0f32; n];
+    let mut amp = 1.0f32;
+    let mut cell = base_cell.max(2);
+    let mut total_amp = 0.0f32;
+    for _ in 0..octaves {
+        add_octave(&mut out, dims, cell, amp, rng);
+        total_amp += amp;
+        amp *= persistence;
+        cell = (cell / 2).max(2);
+    }
+    let inv = 1.0 / total_amp.max(1e-9);
+    for v in &mut out {
+        *v *= inv;
+    }
+    out
+}
+
+fn add_octave(out: &mut [f32], dims: &[usize], cell: usize, amp: f32, rng: &mut Rng) {
+    // lattice sizes (+1 for the right edge)
+    let lat: Vec<usize> = dims.iter().map(|d| d / cell + 2).collect();
+    let ln: usize = lat.iter().product();
+    let lattice: Vec<f32> = (0..ln).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    match dims.len() {
+        1 => {
+            for i in 0..dims[0] {
+                let x = i as f32 / cell as f32;
+                out[i] += amp * lerp1(&lattice, x);
+            }
+        }
+        2 => {
+            let cols = dims[1];
+            let lcols = lat[1];
+            for r in 0..dims[0] {
+                let y = r as f32 / cell as f32;
+                for c in 0..cols {
+                    let x = c as f32 / cell as f32;
+                    out[r * cols + c] += amp * lerp2(&lattice, lcols, x, y);
+                }
+            }
+        }
+        3 => {
+            let (d1, d2) = (dims[1], dims[2]);
+            let (l1, l2) = (lat[1], lat[2]);
+            for i in 0..dims[0] {
+                let z = i as f32 / cell as f32;
+                for j in 0..d1 {
+                    let y = j as f32 / cell as f32;
+                    for k in 0..d2 {
+                        let x = k as f32 / cell as f32;
+                        out[(i * d1 + j) * d2 + k] += amp * lerp3(&lattice, l1, l2, x, y, z);
+                    }
+                }
+            }
+        }
+        _ => panic!("noise supports 1..=3 dims"),
+    }
+}
+
+#[inline]
+fn sfade(t: f32) -> f32 {
+    t * t * (3.0 - 2.0 * t)
+}
+
+#[inline]
+fn lerp1(lat: &[f32], x: f32) -> f32 {
+    let x0 = x as usize;
+    let t = sfade(x - x0 as f32);
+    lat[x0] * (1.0 - t) + lat[x0 + 1] * t
+}
+
+#[inline]
+fn lerp2(lat: &[f32], lcols: usize, x: f32, y: f32) -> f32 {
+    let (x0, y0) = (x as usize, y as usize);
+    let (tx, ty) = (sfade(x - x0 as f32), sfade(y - y0 as f32));
+    let at = |r: usize, c: usize| lat[r * lcols + c];
+    let top = at(y0, x0) * (1.0 - tx) + at(y0, x0 + 1) * tx;
+    let bot = at(y0 + 1, x0) * (1.0 - tx) + at(y0 + 1, x0 + 1) * tx;
+    top * (1.0 - ty) + bot * ty
+}
+
+#[inline]
+fn lerp3(lat: &[f32], l1: usize, l2: usize, x: f32, y: f32, z: f32) -> f32 {
+    let (x0, y0, z0) = (x as usize, y as usize, z as usize);
+    let (tx, ty, tz) = (sfade(x - x0 as f32), sfade(y - y0 as f32), sfade(z - z0 as f32));
+    let at = |i: usize, j: usize, k: usize| lat[(i * l1 + j) * l2 + k];
+    let mut corners = [0f32; 2];
+    for (dz, corner) in corners.iter_mut().enumerate() {
+        let top = at(z0 + dz, y0, x0) * (1.0 - tx) + at(z0 + dz, y0, x0 + 1) * tx;
+        let bot = at(z0 + dz, y0 + 1, x0) * (1.0 - tx) + at(z0 + dz, y0 + 1, x0 + 1) * tx;
+        *corner = top * (1.0 - ty) + bot * ty;
+    }
+    corners[0] * (1.0 - tz) + corners[1] * tz
+}
+
+/// Zero-dominate: keep only the upper `1 - frac` tail above a threshold,
+/// shifted to zero — models cloud/moisture fields where most of the domain
+/// is exactly 0 (Table 9: CLOUDf48 is ~89% within eb of 0).
+pub fn zero_dominate(field: &mut [f32], zero_frac: f32) {
+    let mut sorted: Vec<f32> = field.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((sorted.len() as f32 * zero_frac) as usize).min(sorted.len() - 1);
+    let thresh = sorted[idx];
+    for v in field.iter_mut() {
+        *v = (*v - thresh).max(0.0);
+    }
+}
+
+/// Exponentiate a smooth field into a heavy-tailed positive one (Nyx
+/// baryon_density: range ~1e5, yet 99.5% of values within one eb of the
+/// minimum — Table 9).
+pub fn lognormalize(field: &mut [f32], sigma: f32, floor: f32) {
+    for v in field.iter_mut() {
+        *v = floor + (*v * sigma).exp();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smooth_is_bounded_and_deterministic() {
+        let mut a = Rng::new(5);
+        let fa = smooth(&[64, 64], 16, 3, 0.5, &mut a);
+        let mut b = Rng::new(5);
+        let fb = smooth(&[64, 64], 16, 3, 0.5, &mut b);
+        assert_eq!(fa, fb);
+        for &v in &fa {
+            assert!(v.abs() <= 1.5, "{v}");
+        }
+    }
+
+    #[test]
+    fn smooth_has_small_local_differences() {
+        let mut rng = Rng::new(6);
+        let f = smooth(&[4096], 64, 4, 0.5, &mut rng);
+        let max_diff = f.windows(2).map(|w| (w[1] - w[0]).abs()).fold(0f32, f32::max);
+        let range = f.iter().fold(0f32, |a, &b| a.max(b.abs())) * 2.0;
+        assert!(max_diff < range * 0.15, "diff {max_diff} range {range}");
+    }
+
+    #[test]
+    fn zero_dominate_fraction() {
+        let mut rng = Rng::new(7);
+        let mut f = smooth(&[128, 128], 16, 3, 0.5, &mut rng);
+        zero_dominate(&mut f, 0.8);
+        let zeros = f.iter().filter(|&&v| v == 0.0).count();
+        let frac = zeros as f32 / f.len() as f32;
+        assert!(frac > 0.7 && frac < 0.95, "{frac}");
+        assert!(f.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn lognormalize_heavy_tail() {
+        let mut rng = Rng::new(8);
+        let mut f = smooth(&[64, 64, 64], 16, 3, 0.5, &mut rng);
+        lognormalize(&mut f, 6.0, 0.05);
+        let max = f.iter().fold(0f32, |a, &b| a.max(b));
+        let median = {
+            let mut s = f.clone();
+            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            s[s.len() / 2]
+        };
+        assert!(max / median > 50.0, "max {max} median {median}");
+        assert!(f.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn works_in_all_dims() {
+        let mut rng = Rng::new(9);
+        assert_eq!(smooth(&[100], 8, 2, 0.5, &mut rng).len(), 100);
+        assert_eq!(smooth(&[10, 20], 4, 2, 0.5, &mut rng).len(), 200);
+        assert_eq!(smooth(&[5, 6, 7], 4, 2, 0.5, &mut rng).len(), 210);
+    }
+}

@@ -1,0 +1,337 @@
+//! Per-field statistical profiles, calibrated to the paper's description:
+//!
+//! * Hurricane Q* moisture fields and Nyx baryon_density are zero- or
+//!   min-dominated with heavy upper tails (Table 9: 89-99% of values
+//!   within one eb of the minimum) — these are the fields where cuSZ's
+//!   zero-padded blocks beat SZ-1.4 in PSNR (Table 8).
+//! * Pressure/temperature/velocity fields are smooth with moderate range —
+//!   cuSZ and SZ-1.4 tie at the valrel-implied PSNR (~84.79 dB).
+//! * `.log10` variants are the paper's logarithmic-transformed twins.
+//! * HACC positions are locally-sorted particle coordinates; velocities
+//!   are multi-stream Gaussian mixtures (moderately predictable).
+
+use super::noise::{lognormalize, smooth, zero_dominate};
+use super::Dataset;
+use crate::util::prng::Rng;
+
+pub const HURRICANE_FIELDS: [&str; 20] = [
+    "CLOUDf48",
+    "CLOUDf48.log10",
+    "Pf48",
+    "PRECIPf48",
+    "PRECIPf48.log10",
+    "QCLOUDf48",
+    "QCLOUDf48.log10",
+    "QGRAUPf48",
+    "QGRAUPf48.log10",
+    "QICEf48",
+    "QICEf48.log10",
+    "QRAINf48",
+    "QRAINf48.log10",
+    "QSNOWf48",
+    "QSNOWf48.log10",
+    "QVAPORf48",
+    "TCf48",
+    "Uf48",
+    "Vf48",
+    "Wf48",
+];
+
+pub const NYX_FIELDS: [&str; 6] = [
+    "baryon_density",
+    "dark_matter_density",
+    "temperature",
+    "velocity_x",
+    "velocity_y",
+    "velocity_z",
+];
+
+/// Synthesize `field` of `dataset` over `dims` (logical dims, 1..=4).
+pub fn synthesize(dataset: Dataset, field: &str, dims: &[usize], rng: &mut Rng) -> Vec<f32> {
+    match dataset {
+        Dataset::Hacc => hacc(field, dims[0], rng),
+        Dataset::CesmAtm => cesm(field, dims, rng),
+        Dataset::Hurricane => hurricane(field, dims, rng),
+        Dataset::Nyx => nyx(field, dims, rng),
+        Dataset::Qmcpack => qmcpack(dims, rng),
+    }
+}
+
+fn hacc(field: &str, n: usize, rng: &mut Rng) -> Vec<f32> {
+    match field {
+        // Particle x-positions: particles are laid out rank-by-rank, so
+        // coordinates ramp within segments (locally smooth) with jitter.
+        "x" => {
+            let box_size = 256.0f32;
+            let seg = 4096usize;
+            let mut out = Vec::with_capacity(n);
+            for s in 0..n.div_ceil(seg) {
+                let lo = rng.range_f32(0.0, box_size * 0.75);
+                let hi = lo + box_size * 0.25;
+                let m = seg.min(n - s * seg);
+                for i in 0..m {
+                    let t = i as f32 / m as f32;
+                    out.push(lo + (hi - lo) * t + rng.normal() * 0.003);
+                }
+            }
+            out
+        }
+        // Velocities: multi-stream Gaussian mixture with bulk flows.
+        _ => {
+            let seg = 8192usize;
+            let mut out = Vec::with_capacity(n);
+            // bulk flow varies smoothly along the stream; thermal jitter is
+            // small relative to the bulk scale (velocity-dispersion ratio
+            // matched so valrel 1e-4 keeps residuals within a few bins)
+            let mut bulk = rng.normal() * 300.0;
+            for s in 0..n.div_ceil(seg) {
+                let target = rng.normal() * 300.0;
+                let disp = 5.0 + rng.f32() * 15.0;
+                let m = seg.min(n - s * seg);
+                for i in 0..m {
+                    let t = i as f32 / m as f32;
+                    let b = bulk + (target - bulk) * t;
+                    out.push(b + rng.normal() * disp);
+                }
+                bulk = target;
+            }
+            out
+        }
+    }
+}
+
+fn cesm(field: &str, dims: &[usize], rng: &mut Rng) -> Vec<f32> {
+    match field {
+        // High-cloud fraction in [0,1], ~60% exactly 0 with smooth patches.
+        "CLDHGH" => {
+            let mut f = smooth(dims, 64, 4, 0.55, rng);
+            zero_dominate(&mut f, 0.6);
+            let max = f.iter().fold(0f32, |a, &b| a.max(b)).max(1e-6);
+            for v in f.iter_mut() {
+                *v = (*v / max).min(1.0);
+            }
+            f
+        }
+        // Surface pressure: smooth, ~[50kPa, 103kPa].
+        _ => {
+            let mut f = smooth(dims, 96, 3, 0.35, rng);
+            for v in f.iter_mut() {
+                *v = 95_000.0 + *v * 8_000.0;
+            }
+            f
+        }
+    }
+}
+
+fn hurricane(field: &str, dims: &[usize], rng: &mut Rng) -> Vec<f32> {
+    if let Some(base) = field.strip_suffix(".log10") {
+        let mut f = hurricane(base, dims, rng);
+        // the paper's log10 preprocessing for pointwise-relative fields
+        for v in f.iter_mut() {
+            *v = (v.max(1e-12)).log10();
+        }
+        return f;
+    }
+    match field {
+        // Moisture mixing ratios: overwhelmingly zero, heavy positive tail.
+        "CLOUDf48" | "QCLOUDf48" | "QICEf48" | "QSNOWf48" | "QGRAUPf48" | "QRAINf48" => {
+            let zero_frac = match field {
+                "CLOUDf48" => 0.89,
+                "QCLOUDf48" => 0.92,
+                "QICEf48" => 0.85,
+                _ => 0.80,
+            };
+            let mut f = smooth(dims, 24, 4, 0.55, rng);
+            zero_dominate(&mut f, zero_frac);
+            // cube the tail: concentrates mass near 0, max ~2e-3 like Table 9
+            let max = f.iter().fold(0f32, |a, &b| a.max(b)).max(1e-6);
+            for v in f.iter_mut() {
+                let t = *v / max;
+                *v = t * t * t * 2.05e-3;
+            }
+            f
+        }
+        // Precipitation: zero-dominated but shallower tail.
+        "PRECIPf48" => {
+            let mut f = smooth(dims, 24, 4, 0.5, rng);
+            zero_dominate(&mut f, 0.75);
+            let max = f.iter().fold(0f32, |a, &b| a.max(b)).max(1e-6);
+            for v in f.iter_mut() {
+                *v = (*v / max) * (*v / max) * 1e-2;
+            }
+            f
+        }
+        // Vapor: positive, smooth, no zero plateau.
+        "QVAPORf48" => {
+            let mut f = smooth(dims, 48, 3, 0.35, rng);
+            for v in f.iter_mut() {
+                *v = (0.5 + 0.5 * *v).max(0.0) * 0.02;
+            }
+            f
+        }
+        // Pressure: very smooth, large values.
+        "Pf48" => {
+            let mut f = smooth(dims, 64, 3, 0.45, rng);
+            for v in f.iter_mut() {
+                *v = 85_000.0 + *v * 15_000.0;
+            }
+            f
+        }
+        // Temperature (C): smooth.
+        "TCf48" => {
+            let mut f = smooth(dims, 64, 3, 0.35, rng);
+            for v in f.iter_mut() {
+                *v = 10.0 + *v * 40.0;
+            }
+            f
+        }
+        // Wind components: smooth with vortex-like swirl energy.
+        _ => {
+            let mut f = smooth(dims, 48, 3, 0.4, rng);
+            for v in f.iter_mut() {
+                *v *= 75.0;
+            }
+            f
+        }
+    }
+}
+
+fn nyx(field: &str, dims: &[usize], rng: &mut Rng) -> Vec<f32> {
+    match field {
+        // Densities: lognormal — min ~0.058, max ~1.16e5 (Table 9), with
+        // 99.5% of the mass within one eb of the minimum at valrel 1e-4.
+        "baryon_density" | "dark_matter_density" => {
+            let sigma = if field == "baryon_density" { 11.5 } else { 9.5 };
+            let mut f = smooth(dims, 16, 5, 0.6, rng);
+            // normalize to max |v| = 1, then sharpen peaks (cosmic web
+            // filaments): cubing concentrates mass near the floor
+            let max = f.iter().fold(0f32, |a, &b| a.max(b.abs())).max(1e-9);
+            for v in f.iter_mut() {
+                let t = *v / max;
+                *v = t * t * t;
+            }
+            lognormalize(&mut f, sigma, 0.058);
+            f
+        }
+        // Temperature: lognormal-ish but tamer.
+        "temperature" => {
+            let mut f = smooth(dims, 32, 3, 0.4, rng);
+            for v in f.iter_mut() {
+                *v = 1e4 * (1.2 * *v).exp();
+            }
+            f
+        }
+        // Velocities: smooth turbulence, range ~±1e7 cm/s.
+        _ => {
+            let mut f = smooth(dims, 48, 3, 0.4, rng);
+            for v in f.iter_mut() {
+                *v *= 5e6;
+            }
+            f
+        }
+    }
+}
+
+fn qmcpack(dims: &[usize], rng: &mut Rng) -> Vec<f32> {
+    // einspline orbital coefficients on a 4D (orbital, x, y, z) grid:
+    // per-orbital smooth oscillatory 3D fields with varying frequency.
+    assert_eq!(dims.len(), 4);
+    let orbital_dims = &dims[1..];
+    let per: usize = orbital_dims.iter().product();
+    let mut out = Vec::with_capacity(dims[0] * per);
+    // Adjacent orbitals are strongly correlated (einspline coefficients
+    // vary smoothly with the orbital index), so the 3D kernel's axis-0
+    // prediction still helps after the 4D->3D fold.
+    let base = smooth(orbital_dims, 12, 3, 0.4, rng);
+    let mut drift = smooth(orbital_dims, 16, 2, 0.4, rng);
+    for orb in 0..dims[0] {
+        let amp = 1.0 + 0.002 * orb as f32;
+        for (b, d) in base.iter().zip(&drift) {
+            out.push(amp * (b + 0.03 * d));
+        }
+        // slow random walk of the drift field between orbitals
+        if orb % 16 == 15 {
+            let fresh = smooth(orbital_dims, 16, 2, 0.4, rng);
+            for (d, f) in drift.iter_mut().zip(&fresh) {
+                *d = 0.9 * *d + 0.1 * f;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(f: &[f32]) -> (f32, f32, f32) {
+        let mut s = f.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        (s[0], s[s.len() / 2], s[s.len() - 1])
+    }
+
+    #[test]
+    fn cloud_field_matches_table9_shape() {
+        let mut rng = Rng::new(1);
+        let f = synthesize(Dataset::Hurricane, "CLOUDf48", &[25, 125, 125], &mut rng);
+        let (min, med, max) = stats(&f);
+        assert_eq!(min, 0.0);
+        assert_eq!(med, 0.0, "median must be exactly 0 (Table 9: 75% are 0)");
+        assert!(max > 1e-3 && max < 1e-2, "max {max}");
+        // >= 80% of values within eb=2.05e-7 of zero
+        let eb = 2.05e-7f32;
+        let frac = f.iter().filter(|&&v| v.abs() <= eb).count() as f32 / f.len() as f32;
+        assert!(frac > 0.8, "near-zero fraction {frac}");
+    }
+
+    #[test]
+    fn baryon_density_heavy_tail() {
+        let mut rng = Rng::new(2);
+        let f = synthesize(Dataset::Nyx, "baryon_density", &[64, 64, 64], &mut rng);
+        let (min, med, max) = stats(&f);
+        assert!(min >= 0.05, "min {min}");
+        assert!(med < 5.0, "median {med}");
+        assert!(max / med > 1e3, "tail ratio {}", max / med);
+        // Table 9: at eb = 1e-4 * range, ~99.5% within [min, min+eb]
+        let eb = 1e-4 * (max - min);
+        let frac = f.iter().filter(|&&v| v - min <= eb).count() as f32 / f.len() as f32;
+        assert!(frac > 0.9, "min-hugging fraction {frac}");
+    }
+
+    #[test]
+    fn pressure_is_smooth() {
+        let mut rng = Rng::new(3);
+        let dims = [25usize, 125, 125];
+        let f = synthesize(Dataset::Hurricane, "Pf48", &dims, &mut rng);
+        // neighbor diffs along the fastest axis are small vs range
+        let (min, _, max) = stats(&f);
+        let range = max - min;
+        let mut max_diff = 0f32;
+        for row in f.chunks(dims[2]) {
+            for w in row.windows(2) {
+                max_diff = max_diff.max((w[1] - w[0]).abs());
+            }
+        }
+        assert!(max_diff < 0.1 * range, "diff {max_diff} range {range}");
+    }
+
+    #[test]
+    fn log10_variant_is_log_of_base() {
+        let mut ra = Rng::new(4);
+        let a = synthesize(Dataset::Hurricane, "QICEf48", &[10, 50, 50], &mut ra);
+        let mut rb = Rng::new(4);
+        let b = synthesize(Dataset::Hurricane, "QICEf48.log10", &[10, 50, 50], &mut rb);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x.max(1e-12).log10() - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn hacc_positions_locally_monotone() {
+        let mut rng = Rng::new(5);
+        let f = hacc("x", 100_000, &mut rng);
+        // within a segment, mostly increasing
+        let inc = f.windows(2).filter(|w| w[1] >= w[0]).count();
+        assert!(inc as f32 / f.len() as f32 > 0.8);
+    }
+}

@@ -1,0 +1,89 @@
+//! `Field`: an n-dimensional f32 scientific variable (one SDRBench "field").
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Field {
+    /// Logical dimensions, slowest-varying first (1 to 4 dims).
+    pub dims: Vec<usize>,
+    /// Row-major data, `len == dims.iter().product()`.
+    pub data: Vec<f32>,
+    /// Human-readable name, e.g. "CLOUDf48".
+    pub name: String,
+}
+
+impl Field {
+    pub fn new(name: impl Into<String>, dims: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = dims.iter().product();
+        if dims.is_empty() || dims.len() > 4 {
+            bail!("field must have 1..=4 dims, got {}", dims.len());
+        }
+        if n != data.len() {
+            bail!("dims {:?} imply {} elements, got {}", dims, n, data.len());
+        }
+        Ok(Field { dims, data, name: name.into() })
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// (min, max) over finite values.
+    pub fn value_range(&self) -> (f32, f32) {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in &self.data {
+            if v.is_finite() {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+        }
+        if lo > hi {
+            (0.0, 0.0)
+        } else {
+            (lo, hi)
+        }
+    }
+
+    /// Effective dimensionality for kernel selection: 4D fields fold their
+    /// trailing two axes (QMCPACK einspline handling, DESIGN.md §3.4).
+    pub fn kernel_dims(&self) -> Vec<usize> {
+        if self.dims.len() == 4 {
+            vec![self.dims[0], self.dims[1], self.dims[2] * self.dims[3]]
+        } else {
+            self.dims.clone()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_mismatched_dims() {
+        assert!(Field::new("x", vec![4, 4], vec![0.0; 15]).is_err());
+        assert!(Field::new("x", vec![], vec![]).is_err());
+        assert!(Field::new("x", vec![2, 2, 2, 2, 2], vec![0.0; 32]).is_err());
+    }
+
+    #[test]
+    fn range_ignores_non_finite() {
+        let f = Field::new("x", vec![4], vec![1.0, f32::NAN, -3.0, 2.0]).unwrap();
+        assert_eq!(f.value_range(), (-3.0, 2.0));
+    }
+
+    #[test]
+    fn four_d_folds_to_three() {
+        let f = Field::new("q", vec![2, 3, 4, 5], vec![0.0; 120]).unwrap();
+        assert_eq!(f.kernel_dims(), vec![2, 3, 20]);
+    }
+}

@@ -1,0 +1,352 @@
+//! Canonical Huffman codebook + reverse codebook (paper §3.2.2-3.2.3).
+//!
+//! Canonization assigns codewords in (length, symbol) order so that (i)
+//! decoding needs no tree, (ii) the reverse codebook is cache-friendly,
+//! and (iii) the compression ratio equals the base codebook's — the three
+//! properties §3.2.3 lists.
+//!
+//! Forward entries use the paper's fixed-length packed representation
+//! (Figure 4): bitwidth in the MSBs, the codeword (bit-reversed, ready for
+//! LSB-first emission) in the LSBs. `CanonicalCodebook::repr_bits` is the
+//! adaptive u32/u64 selection of §3.2.2 driven by the real max bitwidth,
+//! not the pessimistic 64-bit estimate.
+
+use anyhow::{bail, Result};
+
+/// Bits reserved for the bitwidth field in packed entries (Figure 4).
+const WIDTH_FIELD: u32 = 8;
+
+#[derive(Debug, Clone)]
+pub struct CanonicalCodebook {
+    /// Per-symbol codeword, bit-reversed for LSB-first writing.
+    pub code: Vec<u64>,
+    /// Per-symbol bit length (0 = symbol absent).
+    pub len: Vec<u8>,
+    pub max_len: u8,
+}
+
+impl CanonicalCodebook {
+    pub fn from_lengths(lengths: &[u8]) -> Result<Self> {
+        let max_len = lengths.iter().copied().max().unwrap_or(0);
+        if max_len as u32 > 64 - WIDTH_FIELD {
+            bail!("codeword length {max_len} exceeds representable width");
+        }
+        // counts per length
+        let mut count = vec![0u64; max_len as usize + 1];
+        for &l in lengths {
+            if l > 0 {
+                count[l as usize] += 1;
+            }
+        }
+        // first canonical code per length (MSB-first convention)
+        let mut first = vec![0u64; max_len as usize + 2];
+        let mut c = 0u64;
+        for l in 1..=max_len as usize {
+            c = (c + count[l - 1]) << 1;
+            first[l] = c;
+        }
+        // assign in (length, symbol) order: symbols are scanned in order,
+        // so per-length cursors produce the canonical assignment directly.
+        let mut next = first.clone();
+        let mut code = vec![0u64; lengths.len()];
+        for (sym, &l) in lengths.iter().enumerate() {
+            if l == 0 {
+                continue;
+            }
+            let cw = next[l as usize];
+            next[l as usize] += 1;
+            code[sym] = reverse_bits(cw, l as u32);
+        }
+        Ok(CanonicalCodebook { code, len: lengths.to_vec(), max_len })
+    }
+
+    /// (packed-bit codeword ready for LSB-first write, bit length).
+    #[inline]
+    pub fn lookup(&self, sym: u16) -> (u64, u32) {
+        (self.code[sym as usize], self.len[sym as usize] as u32)
+    }
+
+    /// Adaptive representation width (Table 4): u32 when the bitwidth field
+    /// plus the longest codeword fit in 32 bits, else u64.
+    pub fn repr_bits(&self) -> u32 {
+        if (self.max_len as u32) <= 32 - WIDTH_FIELD {
+            32
+        } else {
+            64
+        }
+    }
+
+    /// Packed fixed-length entry per Figure 4 (width in MSBs, code in LSBs).
+    pub fn packed_u32(&self, sym: u16) -> u32 {
+        debug_assert_eq!(self.repr_bits(), 32);
+        let (c, l) = self.lookup(sym);
+        ((l as u32) << (32 - WIDTH_FIELD)) | (c as u32)
+    }
+
+    pub fn packed_u64(&self, sym: u16) -> u64 {
+        let (c, l) = self.lookup(sym);
+        ((l as u64) << (64 - WIDTH_FIELD as u64)) | c
+    }
+
+    /// Serialized form for the archive: just the length table (the decoder
+    /// re-canonizes) — smaller than shipping codewords.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        self.len.clone()
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        Self::from_lengths(bytes)
+    }
+}
+
+/// Reverse (decoding) codebook: canonical first-code tables plus a fast
+/// single-level lookup table for short codes.
+#[derive(Debug, Clone)]
+pub struct ReverseCodebook {
+    /// first canonical code per length (MSB-first value space).
+    first: Vec<u64>,
+    /// index into `symbols` of the first code of each length.
+    offset: Vec<u32>,
+    /// symbols sorted by (length, symbol).
+    symbols: Vec<u16>,
+    pub max_len: u8,
+    /// fast table over TABLE_BITS LSB-first bits: (symbol, len) or len=0 => slow path.
+    table: Vec<(u16, u8)>,
+}
+
+pub const TABLE_BITS: u32 = 12;
+
+impl ReverseCodebook {
+    pub fn from_lengths(lengths: &[u8]) -> Result<Self> {
+        let max_len = lengths.iter().copied().max().unwrap_or(0);
+        if max_len == 0 {
+            return Ok(ReverseCodebook {
+                first: vec![0; 2],
+                offset: vec![0; 2],
+                symbols: vec![],
+                max_len: 0,
+                table: vec![(0, 0); 1 << TABLE_BITS],
+            });
+        }
+        let ml = max_len as usize;
+        let mut count = vec![0u64; ml + 1];
+        for &l in lengths {
+            if l > 0 {
+                count[l as usize] += 1;
+            }
+        }
+        let mut first = vec![0u64; ml + 2];
+        let mut c = 0u64;
+        for l in 1..=ml {
+            c = (c + count[l - 1]) << 1;
+            first[l] = c;
+        }
+        first[ml + 1] = (c + count[ml]) << 1; // sentinel
+
+        let mut offset = vec![0u32; ml + 2];
+        for l in 1..=ml {
+            offset[l + 1] = offset[l] + count[l] as u32;
+        }
+        let mut cursor = offset.clone();
+        let mut symbols = vec![0u16; lengths.iter().filter(|&&l| l > 0).count()];
+        for (sym, &l) in lengths.iter().enumerate() {
+            if l > 0 {
+                symbols[cursor[l as usize] as usize] = sym as u16;
+                cursor[l as usize] += 1;
+            }
+        }
+
+        // Fast table: for every symbol with len <= TABLE_BITS, fill all
+        // entries whose low `len` bits match its reversed codeword.
+        let mut table = vec![(0u16, 0u8); 1 << TABLE_BITS];
+        {
+            let mut next = first.clone();
+            for (sym, &l) in lengths.iter().enumerate() {
+                if l == 0 {
+                    continue;
+                }
+                let cw = next[l as usize];
+                next[l as usize] += 1;
+                if (l as u32) <= TABLE_BITS {
+                    let rev = reverse_bits(cw, l as u32);
+                    let step = 1usize << l;
+                    let mut i = rev as usize;
+                    while i < table.len() {
+                        table[i] = (sym as u16, l);
+                        i += step;
+                    }
+                }
+            }
+        }
+        Ok(ReverseCodebook { first, offset, symbols, max_len, table })
+    }
+
+    /// Decode one symbol from an LSB-first bit reader.
+    /// Returns (symbol, bits consumed).
+    #[inline]
+    pub fn decode(&self, reader: &mut crate::util::bitio::BitReader) -> Option<u16> {
+        let peeked = reader.peek(TABLE_BITS);
+        let (sym, l) = self.table[peeked as usize];
+        if l > 0 {
+            if reader.remaining() < l as u64 {
+                return None;
+            }
+            reader.skip(l as u32);
+            return Some(sym);
+        }
+        // Slow path: lengths > TABLE_BITS — canonical walk, MSB-first value
+        // accumulated bit by bit (our stream stores reversed codewords, so
+        // sequential bits arrive MSB-first).
+        let mut v = 0u64;
+        let mut l = 0usize;
+        loop {
+            v = (v << 1) | reader.read_bit()? as u64;
+            l += 1;
+            if l > self.max_len as usize {
+                return None; // corrupt stream
+            }
+            if l > self.first.len().saturating_sub(2) {
+                return None;
+            }
+            let fl = self.first[l];
+            let cnt = (self.offset.get(l + 1).copied().unwrap_or(0)
+                - self.offset[l]) as u64;
+            if v >= fl && v < fl + cnt {
+                let idx = self.offset[l] as u64 + (v - fl);
+                return Some(self.symbols[idx as usize]);
+            }
+        }
+    }
+}
+
+#[inline]
+fn reverse_bits(v: u64, n: u32) -> u64 {
+    if n == 0 {
+        0
+    } else {
+        v.reverse_bits() >> (64 - n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::huffman::tree::build_lengths;
+    use crate::util::bitio::{BitReader, BitWriter};
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn prefix_free_property() {
+        let freq: Vec<u64> = (1..=64).map(|i| i * i).collect();
+        let lengths = build_lengths(&freq);
+        let book = CanonicalCodebook::from_lengths(&lengths).unwrap();
+        // no codeword (in MSB-first space) is a prefix of another
+        let mut entries: Vec<(u64, u8)> = (0..64)
+            .filter(|&s| book.len[s] > 0)
+            .map(|s| (reverse_bits(book.code[s], book.len[s] as u32), book.len[s]))
+            .collect();
+        entries.sort();
+        for i in 0..entries.len() {
+            for j in i + 1..entries.len() {
+                let (ci, li) = entries[i];
+                let (cj, lj) = entries[j];
+                if li <= lj {
+                    assert_ne!(cj >> (lj - li), ci, "prefix violation");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn encode_decode_single_symbols() {
+        let freq: Vec<u64> = vec![10, 20, 30, 40, 0, 5];
+        let lengths = build_lengths(&freq);
+        let book = CanonicalCodebook::from_lengths(&lengths).unwrap();
+        let rev = ReverseCodebook::from_lengths(&lengths).unwrap();
+        for sym in [0u16, 1, 2, 3, 5] {
+            let mut w = BitWriter::new();
+            let (c, l) = book.lookup(sym);
+            w.write(c, l);
+            let (words, bits) = w.finish();
+            let mut r = BitReader::new(&words, bits);
+            assert_eq!(rev.decode(&mut r), Some(sym));
+        }
+    }
+
+    #[test]
+    fn roundtrip_stream_random() {
+        let mut rng = Rng::new(8);
+        let dict = 1024;
+        let freq: Vec<u64> = (0..dict)
+            .map(|i| {
+                let z = (i as f64 - 512.0) / 30.0;
+                ((1e5 * (-z * z / 2.0).exp()) as u64).max(if i % 37 == 0 { 1 } else { 0 })
+            })
+            .collect();
+        let lengths = build_lengths(&freq);
+        let book = CanonicalCodebook::from_lengths(&lengths).unwrap();
+        let rev = ReverseCodebook::from_lengths(&lengths).unwrap();
+        let present: Vec<u16> =
+            (0..dict).filter(|&i| freq[i as usize] > 0).map(|i| i as u16).collect();
+        let syms: Vec<u16> =
+            (0..20_000).map(|_| present[rng.below(present.len() as u64) as usize]).collect();
+        let mut w = BitWriter::new();
+        for &s in &syms {
+            let (c, l) = book.lookup(s);
+            w.write(c, l);
+        }
+        let (words, bits) = w.finish();
+        let mut r = BitReader::new(&words, bits);
+        for &s in &syms {
+            assert_eq!(rev.decode(&mut r), Some(s));
+        }
+    }
+
+    #[test]
+    fn long_codes_use_slow_path() {
+        // Fibonacci freqs make codewords longer than TABLE_BITS.
+        let mut freq = vec![0u64; 32];
+        let (mut a, mut b) = (1u64, 2u64);
+        for f in freq.iter_mut() {
+            *f = a;
+            let c = a + b;
+            a = b;
+            b = c;
+        }
+        let lengths = build_lengths(&freq);
+        assert!(*lengths.iter().max().unwrap() as u32 > TABLE_BITS);
+        let book = CanonicalCodebook::from_lengths(&lengths).unwrap();
+        let rev = ReverseCodebook::from_lengths(&lengths).unwrap();
+        let syms: Vec<u16> = (0..32u16).collect();
+        let mut w = BitWriter::new();
+        for &s in &syms {
+            let (c, l) = book.lookup(s);
+            w.write(c, l);
+        }
+        let (words, bits) = w.finish();
+        let mut r = BitReader::new(&words, bits);
+        for &s in &syms {
+            assert_eq!(rev.decode(&mut r), Some(s), "symbol {s}");
+        }
+    }
+
+    #[test]
+    fn adaptive_repr_selection() {
+        // short codes -> u32 repr
+        let lengths = build_lengths(&[100, 100, 100, 100]);
+        let book = CanonicalCodebook::from_lengths(&lengths).unwrap();
+        assert_eq!(book.repr_bits(), 32);
+        let packed = book.packed_u32(0);
+        assert_eq!(packed >> 24, book.len[0] as u32);
+    }
+
+    #[test]
+    fn serde_via_lengths() {
+        let freq: Vec<u64> = (1..=100).collect();
+        let lengths = build_lengths(&freq);
+        let book = CanonicalCodebook::from_lengths(&lengths).unwrap();
+        let restored = CanonicalCodebook::from_bytes(&book.to_bytes()).unwrap();
+        assert_eq!(book.code, restored.code);
+        assert_eq!(book.len, restored.len);
+    }
+}

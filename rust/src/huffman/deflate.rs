@@ -1,0 +1,161 @@
+//! Deflating: concatenate variable-length codewords into dense per-chunk
+//! bitstreams (paper §3.2.4). Chunks are independent so both deflate and
+//! inflate parallelize coarsely (chunk ↔ worker), and the chunk size is the
+//! tuning knob Table 6 sweeps.
+
+use super::CanonicalCodebook;
+use crate::util::bitio::BitWriter;
+use crate::util::pool::parallel_map_range;
+
+/// One deflated chunk: packed words + exact bit length + symbol count.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeflatedChunk {
+    pub words: Vec<u64>,
+    pub bits: u64,
+    pub symbols: u32,
+}
+
+/// A deflated symbol stream (per-field unit of the archive).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DeflatedStream {
+    pub chunks: Vec<DeflatedChunk>,
+    pub chunk_symbols: usize,
+}
+
+impl DeflatedStream {
+    pub fn total_bits(&self) -> u64 {
+        self.chunks.iter().map(|c| c.bits).sum()
+    }
+
+    pub fn total_symbols(&self) -> u64 {
+        self.chunks.iter().map(|c| c.symbols as u64).sum()
+    }
+
+    /// Compressed payload size in bytes (word-padded per chunk).
+    pub fn payload_bytes(&self) -> usize {
+        self.chunks.iter().map(|c| c.words.len() * 8).sum()
+    }
+}
+
+/// Fused lookup+deflate over fixed-size symbol chunks, in parallel.
+pub fn deflate_chunks(
+    symbols: &[u16],
+    book: &CanonicalCodebook,
+    chunk_symbols: usize,
+    threads: usize,
+) -> DeflatedStream {
+    let chunk_symbols = chunk_symbols.max(1);
+    let nchunks = symbols.len().div_ceil(chunk_symbols);
+    let chunks = parallel_map_range(threads, nchunks, |ci| {
+        let lo = ci * chunk_symbols;
+        let hi = (lo + chunk_symbols).min(symbols.len());
+        deflate_one(&symbols[lo..hi], book)
+    });
+    DeflatedStream { chunks, chunk_symbols }
+}
+
+/// Deflate one chunk (hot loop: one table load + one bit append per symbol).
+pub fn deflate_one(symbols: &[u16], book: &CanonicalCodebook) -> DeflatedChunk {
+    // Pre-size: worst case max_len bits per symbol.
+    let mut w =
+        BitWriter::with_capacity_bits(symbols.len() * book.max_len.max(1) as usize);
+    for &s in symbols {
+        let (c, l) = book.lookup(s);
+        w.write(c, l);
+    }
+    let (words, bits) = w.finish();
+    DeflatedChunk { words, bits, symbols: symbols.len() as u32 }
+}
+
+/// Deflate a pre-encoded fixed-length u32 array (Table 4's second phase:
+/// reads the packed repr instead of the codebook).
+pub fn deflate_fixed_u32(encoded: &[u32], chunk_symbols: usize, threads: usize) -> DeflatedStream {
+    let chunk_symbols = chunk_symbols.max(1);
+    let nchunks = encoded.len().div_ceil(chunk_symbols);
+    let chunks = parallel_map_range(threads, nchunks, |ci| {
+        let lo = ci * chunk_symbols;
+        let hi = (lo + chunk_symbols).min(encoded.len());
+        let mut w = BitWriter::with_capacity_bits((hi - lo) * 24);
+        for &e in &encoded[lo..hi] {
+            w.write((e & 0x00ff_ffff) as u64, e >> 24);
+        }
+        let (words, bits) = w.finish();
+        DeflatedChunk { words, bits, symbols: (hi - lo) as u32 }
+    });
+    DeflatedStream { chunks, chunk_symbols }
+}
+
+/// Deflate a pre-encoded fixed-length u64 array.
+pub fn deflate_fixed_u64(encoded: &[u64], chunk_symbols: usize, threads: usize) -> DeflatedStream {
+    let chunk_symbols = chunk_symbols.max(1);
+    let nchunks = encoded.len().div_ceil(chunk_symbols);
+    let chunks = parallel_map_range(threads, nchunks, |ci| {
+        let lo = ci * chunk_symbols;
+        let hi = (lo + chunk_symbols).min(encoded.len());
+        let mut w = BitWriter::with_capacity_bits((hi - lo) * 32);
+        for &e in &encoded[lo..hi] {
+            w.write(e & ((1u64 << 56) - 1), (e >> 56) as u32);
+        }
+        let (words, bits) = w.finish();
+        DeflatedChunk { words, bits, symbols: (hi - lo) as u32 }
+    });
+    DeflatedStream { chunks, chunk_symbols }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::huffman::encode::{encode_fixed_u32, encode_fixed_u64, encoded_bits};
+    use crate::huffman::tree::build_lengths;
+    use crate::util::prng::Rng;
+
+    fn setup(n: usize) -> (Vec<u16>, CanonicalCodebook) {
+        let mut rng = Rng::new(21);
+        let syms: Vec<u16> = (0..n)
+            .map(|_| ((rng.normal() * 5.0) as i32 + 512).clamp(0, 1023) as u16)
+            .collect();
+        let mut freq = vec![0u64; 1024];
+        for &s in &syms {
+            freq[s as usize] += 1;
+        }
+        let book = CanonicalCodebook::from_lengths(&build_lengths(&freq)).unwrap();
+        (syms, book)
+    }
+
+    #[test]
+    fn fused_matches_two_phase() {
+        let (syms, book) = setup(50_000);
+        let fused = deflate_chunks(&syms, &book, 4096, 4);
+        let enc32 = encode_fixed_u32(&syms, &book, 4);
+        let two32 = deflate_fixed_u32(&enc32, 4096, 4);
+        assert_eq!(fused, two32);
+        let enc64 = encode_fixed_u64(&syms, &book, 4);
+        let two64 = deflate_fixed_u64(&enc64, 4096, 4);
+        assert_eq!(fused, two64);
+    }
+
+    #[test]
+    fn total_bits_is_exact() {
+        let (syms, book) = setup(10_000);
+        let s = deflate_chunks(&syms, &book, 1000, 2);
+        assert_eq!(s.total_bits(), encoded_bits(&syms, &book));
+        assert_eq!(s.total_symbols(), 10_000);
+        assert_eq!(s.chunks.len(), 10);
+    }
+
+    #[test]
+    fn chunk_boundaries_cover_tail() {
+        let (syms, book) = setup(1001);
+        let s = deflate_chunks(&syms, &book, 100, 3);
+        assert_eq!(s.chunks.len(), 11);
+        assert_eq!(s.chunks.last().unwrap().symbols, 1);
+    }
+
+    #[test]
+    fn parallelism_is_deterministic() {
+        let (syms, book) = setup(30_000);
+        let a = deflate_chunks(&syms, &book, 2048, 1);
+        let b = deflate_chunks(&syms, &book, 2048, 8);
+        assert_eq!(a, b);
+    }
+}

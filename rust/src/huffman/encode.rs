@@ -1,0 +1,89 @@
+//! Encoding: per-symbol codebook lookup into fixed-length packed words
+//! (paper §3.2.4 "codebook-based encoding is basically memory copy").
+//!
+//! The production pipeline fuses lookup+deflate (deflate.rs); these
+//! materialized variants exist to reproduce Table 4's u32-vs-u64
+//! memory-bandwidth experiment faithfully, where the fixed-length encoded
+//! array is written out before deflating strips the zero bits.
+
+use super::CanonicalCodebook;
+use crate::util::pool::parallel_map_range;
+
+/// Fixed-length encode into packed u32 entries (width MSBs | code LSBs).
+pub fn encode_fixed_u32(symbols: &[u16], book: &CanonicalCodebook, threads: usize) -> Vec<u32> {
+    assert_eq!(book.repr_bits(), 32, "codebook too wide for u32 repr");
+    let chunk = symbols.len().div_ceil(threads.max(1)).max(1);
+    let nchunks = symbols.len().div_ceil(chunk).max(1);
+    let parts = parallel_map_range(threads, nchunks, |ci| {
+        let lo = ci * chunk;
+        let hi = (lo + chunk).min(symbols.len());
+        symbols[lo..hi].iter().map(|&s| book.packed_u32(s)).collect::<Vec<_>>()
+    });
+    let mut out = Vec::with_capacity(symbols.len());
+    for p in parts {
+        out.extend_from_slice(&p);
+    }
+    out
+}
+
+/// Fixed-length encode into packed u64 entries.
+pub fn encode_fixed_u64(symbols: &[u16], book: &CanonicalCodebook, threads: usize) -> Vec<u64> {
+    let chunk = symbols.len().div_ceil(threads.max(1)).max(1);
+    let nchunks = symbols.len().div_ceil(chunk).max(1);
+    let parts = parallel_map_range(threads, nchunks, |ci| {
+        let lo = ci * chunk;
+        let hi = (lo + chunk).min(symbols.len());
+        symbols[lo..hi].iter().map(|&s| book.packed_u64(s)).collect::<Vec<_>>()
+    });
+    let mut out = Vec::with_capacity(symbols.len());
+    for p in parts {
+        out.extend_from_slice(&p);
+    }
+    out
+}
+
+/// Total encoded bits for a symbol stream (exact deflated size).
+pub fn encoded_bits(symbols: &[u16], book: &CanonicalCodebook) -> u64 {
+    symbols.iter().map(|&s| book.len[s as usize] as u64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::huffman::tree::build_lengths;
+
+    fn book() -> CanonicalCodebook {
+        let freq: Vec<u64> = (1..=16).collect();
+        CanonicalCodebook::from_lengths(&build_lengths(&freq)).unwrap()
+    }
+
+    #[test]
+    fn u32_and_u64_agree_on_payload() {
+        let b = book();
+        let syms: Vec<u16> = (0..16).collect();
+        let e32 = encode_fixed_u32(&syms, &b, 2);
+        let e64 = encode_fixed_u64(&syms, &b, 2);
+        for ((s, a), c) in syms.iter().zip(e32).zip(e64) {
+            let (code, len) = b.lookup(*s);
+            assert_eq!(a & 0x00ff_ffff, code as u32);
+            assert_eq!(a >> 24, len);
+            assert_eq!(c & ((1 << 56) - 1), code);
+            assert_eq!(c >> 56, len as u64);
+        }
+    }
+
+    #[test]
+    fn encoded_bits_matches_sum_of_lengths() {
+        let b = book();
+        let syms = vec![0u16, 1, 15, 15, 15];
+        let expect: u64 = syms.iter().map(|&s| b.len[s as usize] as u64).sum();
+        assert_eq!(encoded_bits(&syms, &b), expect);
+    }
+
+    #[test]
+    fn parallel_encode_matches_serial() {
+        let b = book();
+        let syms: Vec<u16> = (0..10_000).map(|i| (i % 16) as u16).collect();
+        assert_eq!(encode_fixed_u32(&syms, &b, 1), encode_fixed_u32(&syms, &b, 8));
+    }
+}

@@ -1,0 +1,73 @@
+//! Symbol-frequency histogram (paper §3.2.1).
+//!
+//! The GPU version privatizes per-block shared-memory replicas and merges
+//! them; the CPU analogue privatizes one replica per worker and reduces
+//! (`histogram_parallel`). The production path normally consumes the
+//! histogram computed on-device by the L1 Pallas kernel — these are the
+//! baseline/CPU-backend versions.
+
+use crate::util::pool::parallel_map;
+
+/// Serial histogram.
+pub fn histogram(symbols: &[u16], dict_size: usize) -> Vec<u32> {
+    let mut h = vec![0u32; dict_size];
+    for &s in symbols {
+        h[s as usize] += 1;
+    }
+    h
+}
+
+/// Privatized-replica parallel histogram (Gomez-Luna-style).
+pub fn histogram_parallel(symbols: &[u16], dict_size: usize, threads: usize) -> Vec<u32> {
+    let threads = threads.max(1);
+    if threads == 1 || symbols.len() < 1 << 16 {
+        return histogram(symbols, dict_size);
+    }
+    let chunk = symbols.len().div_ceil(threads);
+    let chunks: Vec<&[u16]> = symbols.chunks(chunk).collect();
+    let partials = parallel_map(threads, &chunks, |_, part| histogram(part, dict_size));
+    let mut h = vec![0u32; dict_size];
+    for p in partials {
+        for (a, b) in h.iter_mut().zip(p) {
+            *a += b;
+        }
+    }
+    h
+}
+
+/// Merge per-slab histograms (u32 per-slab counts into u64 field totals).
+pub fn merge_into(total: &mut [u64], part: &[u32]) {
+    debug_assert_eq!(total.len(), part.len());
+    for (t, &p) in total.iter_mut().zip(part) {
+        *t += p as u64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn parallel_matches_serial() {
+        let mut rng = Rng::new(1);
+        let syms: Vec<u16> = (0..300_000).map(|_| rng.below(1024) as u16).collect();
+        assert_eq!(histogram(&syms, 1024), histogram_parallel(&syms, 1024, 8));
+    }
+
+    #[test]
+    fn totals_preserved() {
+        let mut rng = Rng::new(2);
+        let syms: Vec<u16> = (0..70_000).map(|_| rng.below(256) as u16).collect();
+        let h = histogram_parallel(&syms, 256, 4);
+        assert_eq!(h.iter().map(|&x| x as usize).sum::<usize>(), syms.len());
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut total = vec![0u64; 4];
+        merge_into(&mut total, &[1, 2, 3, 4]);
+        merge_into(&mut total, &[10, 0, 0, 1]);
+        assert_eq!(total, vec![11, 2, 3, 5]);
+    }
+}

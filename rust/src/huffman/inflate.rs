@@ -1,0 +1,135 @@
+//! Inflating: per-chunk canonical Huffman decoding (paper §3.3).
+//!
+//! Within a chunk, decoding is inherently sequential (variable-length
+//! codes are a loop-carried dependency, as the paper notes); across
+//! chunks it parallelizes coarsely. Inflate must use the chunk geometry
+//! chosen at deflate time (Table 6's constraint).
+
+use super::{DeflatedStream, ReverseCodebook};
+use crate::util::bitio::BitReader;
+use crate::util::pool::parallel_map;
+
+/// Decode an entire stream back to symbols.
+///
+/// Chunks decode directly into disjoint slices of one output buffer (no
+/// per-chunk vectors, no concatenation copy) — chunk geometry is fixed at
+/// deflate time, so slice boundaries are known up front.
+pub fn inflate_chunks(stream: &DeflatedStream, rev: &ReverseCodebook, threads: usize) -> Vec<u16> {
+    let total = stream.total_symbols() as usize;
+    let cs = stream.chunk_symbols.max(1);
+    let mut out = vec![0u16; total];
+    // geometry check: every chunk but the last must hold exactly cs symbols
+    let regular = stream
+        .chunks
+        .iter()
+        .take(stream.chunks.len().saturating_sub(1))
+        .all(|c| c.symbols as usize == cs);
+    if !regular {
+        // irregular (hand-built) stream: fall back to sequential decode
+        let mut pos = 0usize;
+        for chunk in &stream.chunks {
+            let n = decode_chunk_into(chunk, rev, &mut out[pos..]);
+            pos += n;
+        }
+        out.truncate(pos);
+        return out;
+    }
+    let tasks: Vec<(usize, std::sync::Mutex<&mut [u16]>)> = out
+        .chunks_mut(cs)
+        .enumerate()
+        .map(|(i, s)| (i, std::sync::Mutex::new(s)))
+        .collect();
+    let counts = parallel_map(threads, &tasks, |_, (i, slot)| {
+        let mut slice = slot.lock().unwrap();
+        decode_chunk_into(&stream.chunks[*i], rev, &mut slice)
+    });
+    drop(tasks);
+    let produced: usize = counts.iter().sum();
+    if produced != total {
+        // a corrupt chunk under-produced mid-buffer: redo sequentially,
+        // compacting, so strict callers see the true (short) symbol count
+        let mut seq = vec![0u16; total];
+        let mut pos = 0usize;
+        for chunk in &stream.chunks {
+            pos += decode_chunk_into(chunk, rev, &mut seq[pos..]);
+        }
+        seq.truncate(pos);
+        return seq;
+    }
+    out
+}
+
+/// Decode one chunk into `out`, returning symbols produced.
+fn decode_chunk_into(
+    chunk: &super::deflate::DeflatedChunk,
+    rev: &ReverseCodebook,
+    out: &mut [u16],
+) -> usize {
+    let want = (chunk.symbols as usize).min(out.len());
+    let mut r = BitReader::new(&chunk.words, chunk.bits);
+    for (i, slot) in out[..want].iter_mut().enumerate() {
+        match rev.decode(&mut r) {
+            Some(s) => *slot = s,
+            None => return i,
+        }
+    }
+    want
+}
+
+/// Strict variant: errors on corrupt chunks instead of truncating.
+pub fn inflate_chunks_strict(
+    stream: &DeflatedStream,
+    rev: &ReverseCodebook,
+    threads: usize,
+) -> anyhow::Result<Vec<u16>> {
+    let out = inflate_chunks(stream, rev, threads);
+    let expect = stream.total_symbols();
+    if out.len() as u64 != expect {
+        anyhow::bail!("inflate produced {} symbols, expected {expect}", out.len());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::huffman::codebook::CanonicalCodebook;
+    use crate::huffman::deflate::deflate_chunks;
+    use crate::huffman::tree::build_lengths;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn inflate_inverts_deflate_across_chunk_sizes() {
+        let mut rng = Rng::new(33);
+        let syms: Vec<u16> = (0..40_000)
+            .map(|_| ((rng.normal() * 20.0) as i32 + 512).clamp(0, 1023) as u16)
+            .collect();
+        let mut freq = vec![0u64; 1024];
+        for &s in &syms {
+            freq[s as usize] += 1;
+        }
+        let lengths = build_lengths(&freq);
+        let book = CanonicalCodebook::from_lengths(&lengths).unwrap();
+        let rev = ReverseCodebook::from_lengths(&lengths).unwrap();
+        for chunk in [64usize, 500, 4096, 65536] {
+            let stream = deflate_chunks(&syms, &book, chunk, 4);
+            let out = inflate_chunks_strict(&stream, &rev, 4).unwrap();
+            assert_eq!(out, syms, "chunk {chunk}");
+        }
+    }
+
+    #[test]
+    fn corrupt_stream_is_detected() {
+        let syms = vec![1u16; 1000];
+        let mut freq = vec![0u64; 4];
+        freq[1] = 1000;
+        freq[2] = 1; // ensure 2 symbols so codes exist
+        let lengths = build_lengths(&freq);
+        let book = CanonicalCodebook::from_lengths(&lengths).unwrap();
+        let rev = ReverseCodebook::from_lengths(&lengths).unwrap();
+        let mut stream = deflate_chunks(&syms, &book, 100, 1);
+        // truncate a chunk's bitstream
+        stream.chunks[3].bits = stream.chunks[3].bits.saturating_sub(40);
+        assert!(inflate_chunks_strict(&stream, &rev, 2).is_err());
+    }
+}

@@ -1,0 +1,49 @@
+//! Customized canonical Huffman coding (paper §3.2): histogram → tree →
+//! canonical codebook → encode → deflate, plus inflate for decompression.
+//!
+//! The four compression subprocedures map to the paper's Figure 1 bottom
+//! row; the adaptive u32/u64 codeword representation is §3.2.2 / Table 4,
+//! chunked deflate/inflate is §3.2.4 / Table 6.
+
+pub mod codebook;
+pub mod deflate;
+pub mod encode;
+pub mod histogram;
+pub mod inflate;
+pub mod tree;
+
+pub use codebook::{CanonicalCodebook, ReverseCodebook};
+pub use deflate::{deflate_chunks, DeflatedStream};
+pub use encode::{encode_fixed_u32, encode_fixed_u64};
+pub use histogram::{histogram, histogram_parallel};
+pub use inflate::inflate_chunks;
+pub use tree::build_lengths;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    /// End-to-end: random skewed symbols -> codebook -> deflate -> inflate.
+    #[test]
+    fn full_pipeline_roundtrip() {
+        let mut rng = Rng::new(42);
+        let dict = 1024usize;
+        // Geometric-ish distribution centered at radius, like quant codes.
+        let symbols: Vec<u16> = (0..100_000)
+            .map(|_| {
+                let spread = (rng.normal() * 8.0) as i32;
+                (512 + spread).clamp(0, dict as i32 - 1) as u16
+            })
+            .collect();
+        let hist = histogram(&symbols, dict);
+        let lengths = build_lengths(&hist.iter().map(|&c| c as u64).collect::<Vec<_>>());
+        let book = CanonicalCodebook::from_lengths(&lengths).unwrap();
+        let stream = deflate_chunks(&symbols, &book, 4096, 4);
+        let rev = ReverseCodebook::from_lengths(&lengths).unwrap();
+        let out = inflate_chunks(&stream, &rev, 4);
+        assert_eq!(out, symbols);
+        // entropy sanity: deflated size should beat raw u16 encoding
+        assert!(stream.total_bits() < symbols.len() as u64 * 16);
+    }
+}

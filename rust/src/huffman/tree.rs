@@ -1,0 +1,197 @@
+//! Huffman tree construction → codeword bit lengths (paper §3.2.2).
+//!
+//! The paper builds the tree sequentially on one GPU thread to avoid
+//! host↔device transfers; we build sequentially on the coordinator thread
+//! (O(k log k), k = dict size ≤ 65536 — Table 3 measures this cost).
+//! Only bit *lengths* are needed downstream: the canonical codebook
+//! (codebook.rs) derives the actual codewords.
+
+/// Build canonical Huffman code lengths from symbol frequencies.
+/// Zero-frequency symbols get length 0 (no codeword).
+pub fn build_lengths(freq: &[u64]) -> Vec<u8> {
+    let k = freq.len();
+    let mut lengths = vec![0u8; k];
+    let present: Vec<usize> = (0..k).filter(|&i| freq[i] > 0).collect();
+    match present.len() {
+        0 => return lengths,
+        1 => {
+            // A single distinct symbol still needs one bit on the wire.
+            lengths[present[0]] = 1;
+            return lengths;
+        }
+        _ => {}
+    }
+
+    // Two-queue O(k log k) after an initial sort: leaves ascending by freq.
+    let mut leaves: Vec<(u64, usize)> = present.iter().map(|&i| (freq[i], i)).collect();
+    leaves.sort_unstable();
+
+    // Nodes: (freq, id). Internal nodes get ids >= k.
+    let mut parent = vec![usize::MAX; 2 * leaves.len()];
+    let mut node_of_leaf = vec![usize::MAX; leaves.len()];
+    let mut internal: std::collections::VecDeque<(u64, usize)> = Default::default();
+    let mut leaf_q: std::collections::VecDeque<(u64, usize)> = Default::default();
+    for (slot, &(f, _sym)) in leaves.iter().enumerate() {
+        node_of_leaf[slot] = slot;
+        leaf_q.push_back((f, slot));
+    }
+    let mut next_id = leaves.len();
+
+    let pop_min = |leaf_q: &mut std::collections::VecDeque<(u64, usize)>,
+                       internal: &mut std::collections::VecDeque<(u64, usize)>|
+     -> (u64, usize) {
+        match (leaf_q.front().copied(), internal.front().copied()) {
+            (Some(l), Some(i)) => {
+                if l.0 <= i.0 {
+                    leaf_q.pop_front().unwrap()
+                } else {
+                    internal.pop_front().unwrap()
+                }
+            }
+            (Some(_), None) => leaf_q.pop_front().unwrap(),
+            (None, Some(_)) => internal.pop_front().unwrap(),
+            (None, None) => unreachable!(),
+        }
+    };
+
+    let total_nodes = 2 * leaves.len() - 1;
+    while next_id < total_nodes {
+        let a = pop_min(&mut leaf_q, &mut internal);
+        let b = pop_min(&mut leaf_q, &mut internal);
+        parent[a.1] = next_id;
+        parent[b.1] = next_id;
+        internal.push_back((a.0 + b.0, next_id));
+        next_id += 1;
+    }
+
+    // Depth of each leaf = codeword length.
+    for (slot, &(_f, sym)) in leaves.iter().enumerate() {
+        let mut depth = 0u8;
+        let mut node = node_of_leaf[slot];
+        while parent[node] != usize::MAX {
+            node = parent[node];
+            depth += 1;
+        }
+        lengths[sym] = depth;
+    }
+    lengths
+}
+
+/// Kraft sum check: sum(2^-len) must equal 1 for a complete prefix code.
+pub fn kraft_complete(lengths: &[u8]) -> bool {
+    let mut sum = 0u128;
+    let unit = 1u128 << 64;
+    let mut any = false;
+    for &l in lengths {
+        if l > 0 {
+            any = true;
+            sum += unit >> l;
+        }
+    }
+    !any || sum == unit || lengths.iter().filter(|&&l| l > 0).count() == 1
+}
+
+/// Shannon entropy (bits/symbol) of a frequency table — the lower bound the
+/// Huffman coder should sit within ~1 bit of.
+pub fn entropy_bits(freq: &[u64]) -> f64 {
+    let total: u64 = freq.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let t = total as f64;
+    freq.iter()
+        .filter(|&&f| f > 0)
+        .map(|&f| {
+            let p = f as f64 / t;
+            -p * p.log2()
+        })
+        .sum()
+}
+
+/// Average codeword length in bits under `lengths` for `freq`.
+pub fn average_length(freq: &[u64], lengths: &[u8]) -> f64 {
+    let total: u64 = freq.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let bits: u128 = freq
+        .iter()
+        .zip(lengths)
+        .map(|(&f, &l)| f as u128 * l as u128)
+        .sum();
+    bits as f64 / total as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn known_small_tree() {
+        // freqs 1,1,2,4: lengths 3,3,2,1
+        let lengths = build_lengths(&[1, 1, 2, 4]);
+        assert_eq!(lengths, vec![3, 3, 2, 1]);
+    }
+
+    #[test]
+    fn single_symbol_gets_one_bit() {
+        let lengths = build_lengths(&[0, 7, 0]);
+        assert_eq!(lengths, vec![0, 1, 0]);
+    }
+
+    #[test]
+    fn empty_histogram() {
+        assert_eq!(build_lengths(&[0, 0, 0]), vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn kraft_holds_on_random_histograms() {
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            let k = 2 + rng.below(1024) as usize;
+            let freq: Vec<u64> = (0..k)
+                .map(|_| if rng.f32() < 0.3 { 0 } else { rng.below(10_000) + 1 })
+                .collect();
+            let lengths = build_lengths(&freq);
+            assert!(kraft_complete(&lengths));
+            // zero-freq symbols get no code; present symbols do
+            for (f, l) in freq.iter().zip(&lengths) {
+                assert_eq!(*f == 0, *l == 0);
+            }
+        }
+    }
+
+    #[test]
+    fn optimality_within_one_bit_of_entropy() {
+        let mut rng = Rng::new(4);
+        let freq: Vec<u64> = (0..1024)
+            .map(|i| {
+                let z = (i as f64 - 512.0) / 12.0;
+                let f = (1e6 * (-z * z / 2.0).exp()) as u64;
+                f + (rng.below(3))
+            })
+            .collect();
+        let lengths = build_lengths(&freq);
+        let h = entropy_bits(&freq);
+        let avg = average_length(&freq, &lengths);
+        assert!(avg >= h - 1e-9, "avg {avg} entropy {h}");
+        assert!(avg <= h + 1.0, "avg {avg} entropy {h}");
+    }
+
+    #[test]
+    fn skewed_hist_long_codes_bounded() {
+        // Fibonacci-like frequencies force deep trees; depth must stay < 64.
+        let mut freq = vec![0u64; 40];
+        let (mut a, mut b) = (1u64, 1u64);
+        for f in freq.iter_mut() {
+            *f = a;
+            let c = a + b;
+            a = b;
+            b = c;
+        }
+        let lengths = build_lengths(&freq);
+        assert!(*lengths.iter().max().unwrap() < 64);
+        assert!(kraft_complete(&lengths));
+    }
+}

@@ -1,0 +1,46 @@
+//! # cusz-rs
+//!
+//! A production-shaped reproduction of **cuSZ** (Tian et al., PACT '20):
+//! error-bounded lossy compression for scientific floating-point data,
+//! built as a three-layer Rust + JAX + Pallas stack.
+//!
+//! * **L1/L2** (build time, Python): the DUAL-QUANTIZATION Lorenzo
+//!   predict-quant, histogram, and inverse-Lorenzo reconstruction are Pallas
+//!   kernels composed into JAX graphs and AOT-lowered to HLO text
+//!   (`make artifacts`).
+//! * **L3** (this crate): a streaming coordinator that tiles fields into
+//!   slabs, executes the AOT executables through PJRT ([`runtime`]),
+//!   performs customized canonical Huffman coding ([`huffman`]), and owns
+//!   the archive format ([`container`]), baselines ([`sz`], [`zfp`]),
+//!   synthetic datasets ([`datagen`]) and metrics ([`metrics`]).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use cusz::config::{CuszConfig, ErrorBound};
+//! use cusz::coordinator::Coordinator;
+//! use cusz::datagen::{self, Dataset};
+//!
+//! let field = datagen::generate(Dataset::Nyx, "baryon_density", 42);
+//! let cfg = CuszConfig { eb: ErrorBound::ValRel(1e-4), ..Default::default() };
+//! let coord = Coordinator::new(cfg).unwrap();
+//! let archive = coord.compress(&field).unwrap();
+//! let restored = coord.decompress(&archive).unwrap();
+//! ```
+
+pub mod config;
+pub mod container;
+pub mod coordinator;
+pub mod datagen;
+pub mod field;
+pub mod huffman;
+pub mod metrics;
+pub mod runtime;
+pub mod sz;
+pub mod testkit;
+pub mod util;
+pub mod zfp;
+
+pub use config::{CuszConfig, ErrorBound};
+pub use coordinator::Coordinator;
+pub use field::Field;

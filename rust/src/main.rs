@@ -1,0 +1,294 @@
+//! cusz CLI — leader entrypoint for the cusz-rs framework.
+//!
+//! Subcommands:
+//!   gen         generate a synthetic SDRBench-like field to a raw .f32 file
+//!   compress    compress a raw .f32 field to a .cusza archive
+//!   decompress  restore a .cusza archive to raw .f32
+//!   roundtrip   compress+decompress a dataset field, report CR/PSNR/bound
+//!   stats       Table 9-style percentile statistics for a field
+//!   selftest    cross-validate the PJRT path against the CPU mirror
+//!
+//! Examples:
+//!   cusz roundtrip --dataset nyx --field baryon_density --eb 1e-4
+//!   cusz gen --dataset cesm --field CLDHGH --out /tmp/cldhgh.f32
+//!   cusz compress --input /tmp/cldhgh.f32 --dims 450,900 --eb 1e-4 \
+//!        --out /tmp/cldhgh.cusza
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use cusz::config::{BackendKind, CodewordRepr, CuszConfig, ErrorBound, LosslessStage};
+use cusz::container::Archive;
+use cusz::coordinator::Coordinator;
+use cusz::datagen::{self, Dataset};
+use cusz::field::Field;
+use cusz::metrics;
+use cusz::util::cli::Cli;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        eprintln!("{}", usage());
+        std::process::exit(2);
+    }
+    let cmd = args[0].clone();
+    let rest = &args[1..];
+    let result = match cmd.as_str() {
+        "gen" => cmd_gen(rest),
+        "compress" => cmd_compress(rest),
+        "decompress" => cmd_decompress(rest),
+        "roundtrip" => cmd_roundtrip(rest),
+        "stats" => cmd_stats(rest),
+        "selftest" => cmd_selftest(rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand '{other}'\n{}", usage());
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> String {
+    "cusz — error-bounded lossy compressor for scientific data (cuSZ, PACT'20)\n\
+     \n\
+     Subcommands:\n\
+       gen         --dataset D --field F [--seed N] [--scale N] --out PATH\n\
+       compress    --input PATH --dims d0,d1,.. [--eb E | --abs-eb E] [--out PATH]\n\
+       decompress  --input PATH.cusza [--out PATH]\n\
+       roundtrip   --dataset D [--field F] [--eb E] [--backend pjrt|cpu]\n\
+       stats       --dataset D --field F [--eb E]\n\
+       selftest    [--backend pjrt]\n\
+     \n\
+     Common options: --backend pjrt|cpu, --threads N, --chunk N,\n\
+       --dict N, --repr adaptive|u32|u64, --lossless none|gzip|zstd,\n\
+       --artifacts DIR"
+        .to_string()
+}
+
+fn common_config(cli: &Cli) -> Result<CuszConfig> {
+    let mut cfg = CuszConfig::default();
+    cfg.backend = match cli.get("backend").as_str() {
+        "pjrt" => BackendKind::Pjrt,
+        "cpu" => BackendKind::Cpu,
+        b => bail!("unknown backend {b}"),
+    };
+    let eb: f64 = cli.get_parsed("eb")?;
+    let abs: f64 = cli.get_parsed("abs-eb")?;
+    cfg.eb = if abs > 0.0 { ErrorBound::Abs(abs) } else { ErrorBound::ValRel(eb) };
+    cfg.threads = cli.get_parsed("threads")?;
+    cfg.chunk_symbols = cli.get_parsed("chunk")?;
+    cfg.dict_size = cli.get_parsed("dict")?;
+    cfg.codeword_repr = match cli.get("repr").as_str() {
+        "adaptive" => CodewordRepr::Adaptive,
+        "u32" => CodewordRepr::U32,
+        "u64" => CodewordRepr::U64,
+        r => bail!("unknown repr {r}"),
+    };
+    cfg.lossless = match cli.get("lossless").as_str() {
+        "none" => LosslessStage::None,
+        "gzip" => LosslessStage::Gzip,
+        "zstd" => LosslessStage::Zstd,
+        l => bail!("unknown lossless stage {l}"),
+    };
+    cfg.artifacts_dir = PathBuf::from(cli.get("artifacts"));
+    Ok(cfg)
+}
+
+fn with_common(cli: Cli) -> Cli {
+    cli.opt("backend", "pjrt", "quant engine: pjrt (AOT HLO) or cpu (mirror)")
+        .opt("eb", "1e-4", "value-range-relative error bound (valrel)")
+        .opt("abs-eb", "0", "absolute error bound (overrides --eb if > 0)")
+        .opt("threads", "0", "worker threads (0 = all cores)")
+        .opt("chunk", "4096", "deflate chunk size in symbols (Table 6)")
+        .opt("dict", "1024", "quantization bins / Huffman symbols (Table 3)")
+        .opt("repr", "adaptive", "codeword repr: adaptive|u32|u64 (Table 4)")
+        .opt("lossless", "none", "final lossless stage: none|gzip|zstd")
+        .opt("artifacts", "artifacts", "AOT artifact directory")
+}
+
+fn parse_dims(s: &str) -> Result<Vec<usize>> {
+    s.split(',').map(|d| d.parse::<usize>().context("parsing dims")).collect()
+}
+
+fn read_f32_file(path: &str) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{path}: size {} not a multiple of 4", bytes.len());
+    }
+    Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+fn write_f32_file(path: &str, data: &[f32]) -> Result<()> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(path, bytes).with_context(|| format!("writing {path}"))
+}
+
+fn cmd_gen(args: &[String]) -> Result<()> {
+    let cli = Cli::new("cusz gen", "generate a synthetic SDRBench-like field")
+        .req("dataset", "hacc|cesm|hurricane|nyx|qmcpack")
+        .req("field", "field name (e.g. CLOUDf48, baryon_density)")
+        .opt("seed", "42", "generator seed")
+        .opt("scale", "1", "axis scale multiplier")
+        .req("out", "output .f32 path")
+        .parse(args)?;
+    let ds = Dataset::parse(&cli.get("dataset"))?;
+    let field = datagen::generate_scaled(ds, &cli.get("field"), cli.get_parsed("seed")?, cli.get_parsed("scale")?);
+    write_f32_file(&cli.get("out"), &field.data)?;
+    println!(
+        "wrote {} ({} elements, dims {:?}, {:.2} MB)",
+        cli.get("out"),
+        field.len(),
+        field.dims,
+        field.size_bytes() as f64 / 1e6
+    );
+    Ok(())
+}
+
+fn cmd_compress(args: &[String]) -> Result<()> {
+    let cli = with_common(Cli::new("cusz compress", "compress a raw .f32 field"))
+        .req("input", "input .f32 path")
+        .req("dims", "comma-separated dims, slowest first (e.g. 100,500,500)")
+        .opt("out", "", "output archive path (default: <input>.cusza)")
+        .parse(args)?;
+    let cfg = common_config(&cli)?;
+    let dims = parse_dims(&cli.get("dims"))?;
+    let input = cli.get("input");
+    let data = read_f32_file(&input)?;
+    let name = PathBuf::from(&input)
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "field".into());
+    let field = Field::new(name, dims, data)?;
+    let coord = Coordinator::new(cfg)?;
+    let (archive, stats) = coord.compress_with_stats(&field)?;
+    let out = if cli.get("out").is_empty() { format!("{input}.cusza") } else { cli.get("out") };
+    std::fs::write(&out, archive.to_bytes())?;
+    println!("engine: {}", coord.engine_name());
+    println!("{}", stats.report());
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_decompress(args: &[String]) -> Result<()> {
+    let cli = with_common(Cli::new("cusz decompress", "restore a .cusza archive"))
+        .req("input", "input .cusza path")
+        .opt("out", "", "output .f32 path (default: <input>.out.f32)")
+        .parse(args)?;
+    let cfg = common_config(&cli)?;
+    let input = cli.get("input");
+    let archive = Archive::from_bytes(&std::fs::read(&input)?)?;
+    let coord = Coordinator::new(cfg)?;
+    let (field, stats) = coord.decompress_with_stats(&archive)?;
+    let out = if cli.get("out").is_empty() { format!("{input}.out.f32") } else { cli.get("out") };
+    write_f32_file(&out, &field.data)?;
+    println!("engine: {}", coord.engine_name());
+    println!("{}", stats.timer.report(stats.original_bytes));
+    println!("wrote {out} (dims {:?})", field.dims);
+    Ok(())
+}
+
+fn cmd_roundtrip(args: &[String]) -> Result<()> {
+    let cli = with_common(Cli::new("cusz roundtrip", "compress+decompress with quality report"))
+        .req("dataset", "hacc|cesm|hurricane|nyx|qmcpack")
+        .opt("field", "", "field name (default: first field of the dataset)")
+        .opt("seed", "42", "generator seed")
+        .opt("scale", "1", "axis scale multiplier")
+        .parse(args)?;
+    let cfg = common_config(&cli)?;
+    let ds = Dataset::parse(&cli.get("dataset"))?;
+    let fname = if cli.get("field").is_empty() {
+        ds.field_names()[0].to_string()
+    } else {
+        cli.get("field")
+    };
+    let field = datagen::generate_scaled(ds, &fname, cli.get_parsed("seed")?, cli.get_parsed("scale")?);
+    let coord = Coordinator::new_with_fallback(cfg)?;
+    println!("engine: {}   field: {}  dims {:?}", coord.engine_name(), field.name, field.dims);
+
+    let (archive, cstats) = coord.compress_with_stats(&field)?;
+    println!("--- compression ---\n{}", cstats.report());
+    let (out, dstats) = coord.decompress_with_stats(&archive)?;
+    println!("--- decompression ---\n{}", dstats.timer.report(dstats.original_bytes));
+
+    let psnr = metrics::psnr(&field.data, &out.data);
+    let maxerr = metrics::max_abs_error(&field.data, &out.data);
+    println!("--- quality ---");
+    println!("  abs eb       {:.6e}", archive.header.abs_eb);
+    println!("  max |err|    {maxerr:.6e}");
+    println!("  PSNR         {psnr:.2} dB");
+    match metrics::verify_error_bound(&field.data, &out.data, archive.header.abs_eb) {
+        None => println!("  error bound  RESPECTED"),
+        Some(i) => bail!("error bound VIOLATED at index {i}"),
+    }
+    Ok(())
+}
+
+fn cmd_stats(args: &[String]) -> Result<()> {
+    let cli = with_common(Cli::new("cusz stats", "Table 9-style field statistics"))
+        .req("dataset", "dataset name")
+        .req("field", "field name")
+        .opt("seed", "42", "generator seed")
+        .parse(args)?;
+    let ds = Dataset::parse(&cli.get("dataset"))?;
+    let field = datagen::generate(ds, &cli.get("field"), cli.get_parsed("seed")?);
+    let mut sorted = field.data.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| sorted[((sorted.len() - 1) as f64 * p) as usize];
+    let (min, max) = (sorted[0], sorted[sorted.len() - 1]);
+    let range = max - min;
+    let valrel: f64 = cli.get_parsed("eb")?;
+    let eb = (valrel * range as f64) as f32;
+    println!("field {}  ({} values)", field.name, field.len());
+    println!(
+        "  min {min:.3e}  1% {:.3e}  25% {:.3e}  50% {:.3e}  75% {:.3e}  99% {:.3e}  max {max:.3e}  range {range:.3e}",
+        pct(0.01), pct(0.25), pct(0.50), pct(0.75), pct(0.99)
+    );
+    for (label, e) in [("eb", eb), ("eb/10", eb / 10.0)] {
+        let near0 = field.data.iter().filter(|&&v| v.abs() <= e).count();
+        let nearmin = field.data.iter().filter(|&&v| v - min <= e).count();
+        println!(
+            "  {label} = {e:.3e}: {:.2}% in [-eb, eb], {:.2}% in [min, min+eb]",
+            100.0 * near0 as f64 / field.len() as f64,
+            100.0 * nearmin as f64 / field.len() as f64
+        );
+    }
+    Ok(())
+}
+
+fn cmd_selftest(args: &[String]) -> Result<()> {
+    let cli = with_common(Cli::new("cusz selftest", "cross-validate PJRT vs CPU")).parse(args)?;
+    let mut cfg = common_config(&cli)?;
+    cfg.backend = BackendKind::Pjrt;
+    let pjrt = Coordinator::new(cfg.clone()).context("PJRT engine (run `make artifacts`?)")?;
+    cfg.backend = BackendKind::Cpu;
+    let cpu = Coordinator::new(cfg)?;
+    let mut checked = 0;
+    for ds in Dataset::ALL {
+        let fname = ds.field_names()[0];
+        let field = datagen::generate(ds, fname, 1);
+        let a = pjrt.compress(&field)?;
+        let b = cpu.compress(&field)?;
+        if a.to_bytes() != b.to_bytes() {
+            bail!("{}/{fname}: PJRT and CPU archives differ", ds.name());
+        }
+        let out = pjrt.decompress(&a)?;
+        if metrics::verify_error_bound(&field.data, &out.data, a.header.abs_eb).is_some() {
+            bail!("{}/{fname}: error bound violated", ds.name());
+        }
+        println!("  {}/{fname}: OK (bit-exact, bound respected)", ds.name());
+        checked += 1;
+    }
+    println!("selftest passed: {checked} fields bit-exact across PJRT and CPU");
+    Ok(())
+}

@@ -1,0 +1,9 @@
+//! Compression-quality and performance metrics: PSNR/RMSE (paper footnote
+//! 6), error-bound verification, compression ratio / bitrate, and stage
+//! timers for the Table 7 breakdowns.
+
+pub mod psnr;
+pub mod timer;
+
+pub use psnr::{bitrate_bits, compression_ratio, max_abs_error, psnr, rmse, verify_error_bound};
+pub use timer::StageTimer;

@@ -1,0 +1,106 @@
+//! Rate-distortion metrics, defined exactly as the paper's footnote 6:
+//! PSNR = 20 log10((dmax - dmin) / RMSE).
+
+/// Root mean squared error between original and reconstruction.
+pub fn rmse(original: &[f32], decompressed: &[f32]) -> f64 {
+    assert_eq!(original.len(), decompressed.len());
+    if original.is_empty() {
+        return 0.0;
+    }
+    let sum: f64 = original
+        .iter()
+        .zip(decompressed)
+        .map(|(&a, &b)| {
+            let d = a as f64 - b as f64;
+            d * d
+        })
+        .sum();
+    (sum / original.len() as f64).sqrt()
+}
+
+/// Peak signal-to-noise ratio in dB over the value range.
+pub fn psnr(original: &[f32], decompressed: &[f32]) -> f64 {
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &v in original {
+        if v.is_finite() {
+            lo = lo.min(v as f64);
+            hi = hi.max(v as f64);
+        }
+    }
+    let range = hi - lo;
+    let e = rmse(original, decompressed);
+    if e == 0.0 {
+        return f64::INFINITY;
+    }
+    20.0 * (range / e).log10()
+}
+
+/// Largest pointwise absolute error.
+pub fn max_abs_error(original: &[f32], decompressed: &[f32]) -> f64 {
+    original
+        .iter()
+        .zip(decompressed)
+        .map(|(&a, &b)| (a as f64 - b as f64).abs())
+        .fold(0.0, f64::max)
+}
+
+/// Verify the strict bound |d - d*| <= eb (+ f32 scaling slack, DESIGN.md
+/// §3): returns the first violating index if any.
+pub fn verify_error_bound(original: &[f32], decompressed: &[f32], eb: f32) -> Option<usize> {
+    let max_abs = original.iter().fold(0f32, |a, &b| if b.is_finite() { a.max(b.abs()) } else { a });
+    let tol = eb as f64 * (1.0 + 1e-6) + 4.0 * f32::EPSILON as f64 * max_abs as f64;
+    original
+        .iter()
+        .zip(decompressed)
+        .position(|(&a, &b)| {
+            if !a.is_finite() {
+                return false; // non-finite inputs round-trip via verbatim storage
+            }
+            (a as f64 - b as f64).abs() > tol
+        })
+}
+
+/// original_bytes / compressed_bytes.
+pub fn compression_ratio(original_bytes: usize, compressed_bytes: usize) -> f64 {
+    original_bytes as f64 / compressed_bytes.max(1) as f64
+}
+
+/// Bits per value for f32 data: 32 / CR.
+pub fn bitrate_bits(original_bytes: usize, compressed_bytes: usize) -> f64 {
+    32.0 / compression_ratio(original_bytes, compressed_bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_reconstruction_is_infinite_psnr() {
+        let d = vec![1.0f32, 2.0, 3.0];
+        assert!(psnr(&d, &d).is_infinite());
+        assert_eq!(rmse(&d, &d), 0.0);
+    }
+
+    #[test]
+    fn known_psnr_value() {
+        // range 1.0, uniform error 0.01 => rmse 0.01, psnr = 40 dB
+        let orig = vec![0.0f32, 1.0];
+        let dec = vec![0.01f32, 0.99];
+        assert!((psnr(&orig, &dec) - 40.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn bound_verification_finds_violation() {
+        let orig = vec![0.0f32, 0.0, 0.0];
+        let ok = vec![0.0009f32, -0.0009, 0.0];
+        let bad = vec![0.0f32, 0.0021, 0.0];
+        assert_eq!(verify_error_bound(&orig, &ok, 1e-3), None);
+        assert_eq!(verify_error_bound(&orig, &bad, 1e-3), Some(1));
+    }
+
+    #[test]
+    fn ratio_and_bitrate() {
+        assert_eq!(compression_ratio(4000, 400), 10.0);
+        assert!((bitrate_bits(4000, 400) - 3.2).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,104 @@
+//! Per-stage wall-clock accounting for the Table 7 breakdown rows.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Default, Clone)]
+pub struct StageTimer {
+    totals: BTreeMap<String, Duration>,
+    counts: BTreeMap<String, u64>,
+}
+
+impl StageTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `stage`, accumulating.
+    pub fn time<R>(&mut self, stage: &str, f: impl FnOnce() -> R) -> R {
+        let t0 = Instant::now();
+        let r = f();
+        self.add(stage, t0.elapsed());
+        r
+    }
+
+    pub fn add(&mut self, stage: &str, d: Duration) {
+        *self.totals.entry(stage.to_string()).or_default() += d;
+        *self.counts.entry(stage.to_string()).or_default() += 1;
+    }
+
+    pub fn total(&self, stage: &str) -> Duration {
+        self.totals.get(stage).copied().unwrap_or_default()
+    }
+
+    pub fn merge(&mut self, other: &StageTimer) {
+        for (k, v) in &other.totals {
+            *self.totals.entry(k.clone()).or_default() += *v;
+        }
+        for (k, v) in &other.counts {
+            *self.counts.entry(k.clone()).or_default() += *v;
+        }
+    }
+
+    /// (stage, total, calls, GB/s against `bytes`) rows, insertion-sorted
+    /// by stage name.
+    pub fn rows(&self, bytes: usize) -> Vec<(String, Duration, u64, f64)> {
+        self.totals
+            .iter()
+            .map(|(k, &d)| {
+                let gbps = if d.as_nanos() > 0 {
+                    bytes as f64 / d.as_secs_f64() / 1e9
+                } else {
+                    f64::INFINITY
+                };
+                (k.clone(), d, self.counts[k], gbps)
+            })
+            .collect()
+    }
+
+    pub fn report(&self, bytes: usize) -> String {
+        let mut s = String::new();
+        for (stage, d, n, gbps) in self.rows(bytes) {
+            s.push_str(&format!(
+                "  {stage:<28} {:>10.3} ms  x{n:<5} {gbps:>9.3} GB/s\n",
+                d.as_secs_f64() * 1e3
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_across_calls() {
+        let mut t = StageTimer::new();
+        t.add("quant", Duration::from_millis(10));
+        t.add("quant", Duration::from_millis(5));
+        t.add("huffman", Duration::from_millis(1));
+        assert_eq!(t.total("quant"), Duration::from_millis(15));
+        assert_eq!(t.rows(0).len(), 2);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = StageTimer::new();
+        a.add("x", Duration::from_millis(1));
+        let mut b = StageTimer::new();
+        b.add("x", Duration::from_millis(2));
+        b.add("y", Duration::from_millis(3));
+        a.merge(&b);
+        assert_eq!(a.total("x"), Duration::from_millis(3));
+        assert_eq!(a.total("y"), Duration::from_millis(3));
+    }
+
+    #[test]
+    fn gbps_computation() {
+        let mut t = StageTimer::new();
+        t.add("s", Duration::from_secs(1));
+        let rows = t.rows(2_000_000_000);
+        assert!((rows[0].3 - 2.0).abs() < 1e-9);
+    }
+}

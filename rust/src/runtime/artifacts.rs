@@ -1,0 +1,167 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. aot.py emits `manifest.tsv` (one row per HLO executable)
+//! next to the `*.hlo.txt` files; this module parses it and selects the
+//! right slab variant for a field.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::sz::blocks::SlabSpec;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExecutableMeta {
+    pub op: String,
+    pub variant: String,
+    pub file: PathBuf,
+    pub shape: Vec<usize>,
+    pub block: Vec<usize>,
+    pub strips: usize,
+    pub dict_size: usize,
+    pub radius: i32,
+    pub sha256: String,
+}
+
+impl ExecutableMeta {
+    pub fn slab_spec(&self) -> SlabSpec {
+        SlabSpec::new(&self.variant, &self.shape, &self.block)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub executables: Vec<ExecutableMeta>,
+}
+
+impl ArtifactManifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let tsv = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&tsv)
+            .with_context(|| format!("reading {} (run `make artifacts`)", tsv.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Self> {
+        let mut lines = text.lines();
+        let header = lines.next().context("empty manifest")?;
+        let cols: Vec<&str> = header.split('\t').collect();
+        let idx = |name: &str| -> Result<usize> {
+            cols.iter()
+                .position(|c| *c == name)
+                .with_context(|| format!("manifest missing column {name}"))
+        };
+        let (i_op, i_var, i_file, i_shape, i_block, i_strips, i_dict, i_radius, i_sha) = (
+            idx("op")?,
+            idx("variant")?,
+            idx("file")?,
+            idx("shape")?,
+            idx("block")?,
+            idx("strips")?,
+            idx("dict_size")?,
+            idx("radius")?,
+            idx("sha256")?,
+        );
+        let mut executables = Vec::new();
+        for (ln, line) in lines.enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let f: Vec<&str> = line.split('\t').collect();
+            if f.len() < cols.len() {
+                bail!("manifest row {} malformed: {line:?}", ln + 2);
+            }
+            let parse_list = |s: &str| -> Result<Vec<usize>> {
+                s.split(',').map(|x| x.parse::<usize>().context("int list")).collect()
+            };
+            executables.push(ExecutableMeta {
+                op: f[i_op].to_string(),
+                variant: f[i_var].to_string(),
+                file: dir.join(f[i_file]),
+                shape: parse_list(f[i_shape])?,
+                block: parse_list(f[i_block])?,
+                strips: f[i_strips].parse()?,
+                dict_size: f[i_dict].parse()?,
+                radius: f[i_radius].parse()?,
+                sha256: f[i_sha].to_string(),
+            });
+        }
+        if executables.is_empty() {
+            bail!("manifest has no executables");
+        }
+        Ok(ArtifactManifest { dir: dir.to_path_buf(), executables })
+    }
+
+    pub fn dict_size(&self) -> usize {
+        self.executables.first().map(|e| e.dict_size).unwrap_or(1024)
+    }
+
+    pub fn find(&self, op: &str, variant: &str) -> Option<&ExecutableMeta> {
+        self.executables.iter().find(|e| e.op == op && e.variant == variant)
+    }
+
+    /// Pick the slab variant for a field's kernel dims: same padded-volume
+    /// policy as `sz::blocks::select_spec`, over the manifest's variants.
+    pub fn select_variant(&self, kernel_dims: &[usize]) -> Result<&ExecutableMeta> {
+        self.executables
+            .iter()
+            .filter(|e| e.op == "compress" && e.shape.len() == kernel_dims.len())
+            .min_by_key(|e| {
+                let spec = e.slab_spec();
+                (crate::sz::blocks::padded_volume(kernel_dims, &spec), usize::MAX - spec.len())
+            })
+            .with_context(|| format!("no artifact variant for {}D fields", kernel_dims.len()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "op\tvariant\tfile\tshape\tblock\tstrips\tdict_size\tradius\tsha256\n\
+compress\t1d_64k\tcompress_1d_64k.hlo.txt\t65536\t32\t8\t1024\t512\tabc\n\
+decompress\t1d_64k\tdecompress_1d_64k.hlo.txt\t65536\t32\t8\t1024\t512\tdef\n\
+compress\t1d_1m\tcompress_1d_1m.hlo.txt\t1048576\t32\t8\t1024\t512\tghi\n\
+compress\t2d_256\tcompress_2d_256.hlo.txt\t256,256\t16,16\t8\t1024\t512\tjkl\n";
+
+    #[test]
+    fn parses_sample() {
+        let m = ArtifactManifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.executables.len(), 4);
+        assert_eq!(m.dict_size(), 1024);
+        let e = m.find("compress", "2d_256").unwrap();
+        assert_eq!(e.shape, vec![256, 256]);
+        assert_eq!(e.block, vec![16, 16]);
+    }
+
+    #[test]
+    fn variant_selection_prefers_fitting_slab() {
+        let m = ArtifactManifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        // tiny 1D field -> small variant
+        assert_eq!(m.select_variant(&[10_000]).unwrap().variant, "1d_64k");
+        // exact multiple of both slab sizes -> tie on padding, larger slab
+        // wins (fewer dispatches)
+        assert_eq!(m.select_variant(&[1 << 21]).unwrap().variant, "1d_1m");
+        // 2D field -> the only 2D variant
+        assert_eq!(m.select_variant(&[100, 100]).unwrap().variant, "2d_256");
+        // no 3D variant in sample
+        assert!(m.select_variant(&[8, 8, 8]).is_err());
+    }
+
+    #[test]
+    fn missing_column_is_error() {
+        assert!(ArtifactManifest::parse(Path::new("/t"), "op\tvariant\nx\ty\n").is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if let Ok(m) = ArtifactManifest::load(&dir) {
+            assert!(m.executables.len() >= 2);
+            for e in &m.executables {
+                assert!(e.file.exists(), "{} missing", e.file.display());
+                assert_eq!(e.dict_size, 1024);
+            }
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! L3 ↔ L2 bridge: load the AOT-compiled HLO executables and run them via
+//! the PJRT C API (`xla` crate), or fall back to the bit-exact CPU mirror.
+//!
+//! The PJRT client and its compiled executables live on one dedicated
+//! engine thread ([`pjrt::Engine`]) — the software analogue of the paper's
+//! single V100 device: pipeline stages submit quant/recon jobs over a
+//! bounded channel and block on replies, which also serializes device
+//! access exactly like a CUDA stream would.
+
+pub mod artifacts;
+pub mod pjrt;
+
+use anyhow::Result;
+
+use crate::config::{BackendKind, CuszConfig};
+use crate::sz::blocks::SlabSpec;
+use crate::sz::dual_quant;
+
+pub use artifacts::{ArtifactManifest, ExecutableMeta};
+
+/// A quantization engine: compress (dual-quant + histogram) and decompress
+/// (inverse Lorenzo) over fixed-shape slabs.
+pub trait QuantEngine: Send + Sync {
+    /// data f32[slab] -> delta i32[slab] (DUAL-QUANT).
+    fn compress_slab(&self, spec: &SlabSpec, data: &[f32], eb: f32) -> Result<Vec<i32>>;
+    /// patched delta i32[slab] -> f32[slab].
+    fn decompress_slab(&self, spec: &SlabSpec, delta: &[i32], eb: f32) -> Result<Vec<f32>>;
+    fn name(&self) -> &'static str;
+
+    /// The paper's device-side histogram kernel (§3.2.1), exposed for the
+    /// breakdown bench and kernel cross-validation; the production path
+    /// fuses histogramming into postquant at L3 (EXPERIMENTS.md §Perf).
+    fn device_histogram(&self, spec: &SlabSpec, codes: &[i32], dict_size: usize) -> Result<Vec<u32>> {
+        let _ = spec;
+        let mut hist = vec![0u32; dict_size];
+        for &c in codes {
+            hist[c as usize] += 1;
+        }
+        Ok(hist)
+    }
+
+    /// Full per-slab compression product (delta + codes + hist + outliers).
+    /// Default derives everything from the delta contract in one fused
+    /// pass; the CPU mirror overrides with its fully-fused kernel.
+    fn compress_slab_full(
+        &self,
+        spec: &SlabSpec,
+        data: &[f32],
+        eb: f32,
+        dict_size: usize,
+    ) -> Result<dual_quant::SlabCompressed> {
+        let radius = (dict_size / 2) as i32;
+        let delta = self.compress_slab(spec, data, eb)?;
+        let mut codes = vec![0u16; delta.len()];
+        let mut hist = vec![0u32; dict_size];
+        let mut outliers = Vec::new();
+        for (i, (&dv, c)) in delta.iter().zip(codes.iter_mut()).enumerate() {
+            let code = crate::sz::code_of_delta(dv, radius);
+            *c = code;
+            hist[code as usize] += 1;
+            if code == 0 {
+                outliers.push((i as u32, dv));
+            }
+        }
+        Ok(dual_quant::SlabCompressed { delta, codes, hist, outliers })
+    }
+
+    /// Owned-buffer decompression: engines that can reconstruct in place
+    /// (CPU) override to avoid copies; default borrows.
+    fn decompress_slab_owned(&self, spec: &SlabSpec, delta: Vec<i32>, eb: f32) -> Result<Vec<f32>> {
+        self.decompress_slab(spec, &delta, eb)
+    }
+}
+
+/// Pure-Rust engine (Algorithm 2 mirror). Bit-exact with the PJRT path.
+pub struct CpuEngine {
+    pub dict_size: usize,
+}
+
+impl QuantEngine for CpuEngine {
+    fn compress_slab(&self, spec: &SlabSpec, data: &[f32], eb: f32) -> Result<Vec<i32>> {
+        Ok(dual_quant::dual_quant_delta(data, spec, eb))
+    }
+
+    fn decompress_slab(&self, spec: &SlabSpec, delta: &[i32], eb: f32) -> Result<Vec<f32>> {
+        Ok(dual_quant::reconstruct_slab(delta, spec, eb))
+    }
+
+    fn compress_slab_full(
+        &self,
+        spec: &SlabSpec,
+        data: &[f32],
+        eb: f32,
+        dict_size: usize,
+    ) -> Result<dual_quant::SlabCompressed> {
+        Ok(dual_quant::dual_quant_full(data, spec, eb, dict_size))
+    }
+
+    fn decompress_slab_owned(&self, spec: &SlabSpec, delta: Vec<i32>, eb: f32) -> Result<Vec<f32>> {
+        Ok(dual_quant::reconstruct_slab_owned(delta, spec, eb))
+    }
+
+    fn name(&self) -> &'static str {
+        "cpu"
+    }
+}
+
+/// Build the engine selected by the config. PJRT requires artifacts; if
+/// they are missing, an error is returned (callers may retry with Cpu).
+pub fn build_engine(cfg: &CuszConfig) -> Result<Box<dyn QuantEngine>> {
+    match cfg.backend {
+        BackendKind::Cpu => Ok(Box::new(CpuEngine { dict_size: cfg.dict_size })),
+        BackendKind::Pjrt => {
+            let manifest = ArtifactManifest::load(&cfg.artifacts_dir)?;
+            anyhow::ensure!(
+                manifest.dict_size() == cfg.dict_size,
+                "artifacts compiled for dict_size {}, config wants {}",
+                manifest.dict_size(),
+                cfg.dict_size
+            );
+            Ok(Box::new(pjrt::PjrtEngine::start(manifest)?))
+        }
+    }
+}

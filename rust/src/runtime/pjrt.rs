@@ -1,0 +1,244 @@
+//! PJRT engine: a dedicated thread owning the PJRT client and the compiled
+//! AOT executables, serving quant/recon jobs over channels.
+//!
+//! Interchange is HLO text (`HloModuleProto::from_text_file`): jax ≥ 0.5
+//! serialized protos use 64-bit instruction ids that xla_extension 0.5.1
+//! rejects, while the text parser reassigns ids (see DESIGN.md §1).
+
+use std::collections::HashMap;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifacts::ArtifactManifest;
+use super::QuantEngine;
+use crate::sz::blocks::SlabSpec;
+
+enum Job {
+    Compress {
+        variant: String,
+        data: Vec<f32>,
+        eb: f32,
+        reply: SyncSender<Result<Vec<i32>>>,
+    },
+    Histogram {
+        variant: String,
+        codes: Vec<i32>,
+        reply: SyncSender<Result<Vec<u32>>>,
+    },
+    Decompress {
+        variant: String,
+        delta: Vec<i32>,
+        eb: f32,
+        reply: SyncSender<Result<Vec<f32>>>,
+    },
+    Shutdown,
+}
+
+/// Handle to the engine thread. Cloneable; all clones feed one device queue.
+pub struct PjrtEngine {
+    tx: SyncSender<Job>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    platform: String,
+}
+
+impl PjrtEngine {
+    /// Start the engine thread and eagerly verify the client comes up.
+    pub fn start(manifest: ArtifactManifest) -> Result<Self> {
+        let (tx, rx) = sync_channel::<Job>(8);
+        let (ready_tx, ready_rx) = sync_channel::<Result<String>>(1);
+        let handle = std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || engine_main(manifest, rx, ready_tx))
+            .context("spawning pjrt engine thread")?;
+        let platform = ready_rx
+            .recv()
+            .context("engine thread died during init")??;
+        Ok(PjrtEngine { tx, handle: Some(handle), platform })
+    }
+
+    pub fn platform(&self) -> &str {
+        &self.platform
+    }
+}
+
+impl Drop for PjrtEngine {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Job::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl QuantEngine for PjrtEngine {
+    fn compress_slab(&self, spec: &SlabSpec, data: &[f32], eb: f32) -> Result<Vec<i32>> {
+        let (reply, rx) = sync_channel(1);
+        self.tx
+            .send(Job::Compress { variant: spec.name.clone(), data: data.to_vec(), eb, reply })
+            .map_err(|_| anyhow!("pjrt engine gone"))?;
+        rx.recv().map_err(|_| anyhow!("pjrt engine dropped reply"))?
+    }
+
+    fn device_histogram(&self, spec: &SlabSpec, codes: &[i32], _dict: usize) -> Result<Vec<u32>> {
+        let (reply, rx) = sync_channel(1);
+        self.tx
+            .send(Job::Histogram { variant: spec.name.clone(), codes: codes.to_vec(), reply })
+            .map_err(|_| anyhow!("pjrt engine gone"))?;
+        rx.recv().map_err(|_| anyhow!("pjrt engine dropped reply"))?
+    }
+
+    fn decompress_slab(&self, spec: &SlabSpec, delta: &[i32], eb: f32) -> Result<Vec<f32>> {
+        let (reply, rx) = sync_channel(1);
+        self.tx
+            .send(Job::Decompress { variant: spec.name.clone(), delta: delta.to_vec(), eb, reply })
+            .map_err(|_| anyhow!("pjrt engine gone"))?;
+        rx.recv().map_err(|_| anyhow!("pjrt engine dropped reply"))?
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+struct EngineState {
+    client: xla::PjRtClient,
+    manifest: ArtifactManifest,
+    cache: HashMap<(String, String), xla::PjRtLoadedExecutable>,
+}
+
+impl EngineState {
+    fn executable(&mut self, op: &str, variant: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        let key = (op.to_string(), variant.to_string());
+        if !self.cache.contains_key(&key) {
+            let meta = self
+                .manifest
+                .find(op, variant)
+                .with_context(|| format!("no artifact for {op}/{variant}"))?;
+            let path = meta
+                .file
+                .to_str()
+                .context("artifact path not utf-8")?
+                .to_string();
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {path}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("PJRT compile of {op}/{variant}"))?;
+            self.cache.insert(key.clone(), exe);
+        }
+        Ok(&self.cache[&key])
+    }
+}
+
+fn engine_main(
+    manifest: ArtifactManifest,
+    rx: Receiver<Job>,
+    ready: SyncSender<Result<String>>,
+) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            let _ = ready.send(Err(anyhow!("PJRT client init: {e}")));
+            return;
+        }
+    };
+    let platform = client.platform_name();
+    let mut state = EngineState { client, manifest, cache: HashMap::new() };
+    let _ = ready.send(Ok(platform));
+
+    for job in rx {
+        match job {
+            Job::Shutdown => break,
+            Job::Compress { variant, data, eb, reply } => {
+                let _ = reply.send(run_compress(&mut state, &variant, &data, eb));
+            }
+            Job::Histogram { variant, codes, reply } => {
+                let _ = reply.send(run_histogram(&mut state, &variant, &codes));
+            }
+            Job::Decompress { variant, delta, eb, reply } => {
+                let _ = reply.send(run_decompress(&mut state, &variant, &delta, eb));
+            }
+        }
+    }
+}
+
+fn shape_i64(meta_shape: &[usize]) -> Vec<i64> {
+    meta_shape.iter().map(|&d| d as i64).collect()
+}
+
+fn run_compress(state: &mut EngineState, variant: &str, data: &[f32], eb: f32) -> Result<Vec<i32>> {
+    let meta_shape = state
+        .manifest
+        .find("compress", variant)
+        .with_context(|| format!("variant {variant}"))?
+        .shape
+        .clone();
+    let n: usize = meta_shape.iter().product();
+    anyhow::ensure!(data.len() == n, "slab size mismatch: {} vs {n}", data.len());
+
+    let x = xla::Literal::vec1(data);
+    let x = if meta_shape.len() > 1 { x.reshape(&shape_i64(&meta_shape))? } else { x };
+    let ebl = xla::Literal::vec1(&[eb]);
+
+    let exe = state.executable("compress", variant)?;
+    let result = exe.execute::<xla::Literal>(&[x, ebl])?[0][0].to_literal_sync()?;
+    let delta_l = result.to_tuple1()?;
+    Ok(delta_l.to_vec::<i32>()?)
+}
+
+fn run_histogram(state: &mut EngineState, variant: &str, codes: &[i32]) -> Result<Vec<u32>> {
+    let meta_shape = state
+        .manifest
+        .find("histogram", variant)
+        .with_context(|| format!("variant {variant}"))?
+        .shape
+        .clone();
+    let n: usize = meta_shape.iter().product();
+    anyhow::ensure!(codes.len() == n, "slab size mismatch: {} vs {n}", codes.len());
+
+    let x = xla::Literal::vec1(codes);
+    let x = if meta_shape.len() > 1 { x.reshape(&shape_i64(&meta_shape))? } else { x };
+
+    // note: jax prunes the unused eb parameter from the histogram graph,
+    // so the compiled executable takes exactly one buffer
+    let exe = state.executable("histogram", variant)?;
+    let result = exe.execute::<xla::Literal>(&[x])?[0][0].to_literal_sync()?;
+    let hist_l = result.to_tuple1()?;
+    let hist_i = hist_l.to_vec::<i32>()?;
+    Ok(hist_i.into_iter().map(|v| v as u32).collect())
+}
+
+fn run_decompress(state: &mut EngineState, variant: &str, delta: &[i32], eb: f32) -> Result<Vec<f32>> {
+    let meta_shape = state
+        .manifest
+        .find("decompress", variant)
+        .with_context(|| format!("variant {variant}"))?
+        .shape
+        .clone();
+    let n: usize = meta_shape.iter().product();
+    anyhow::ensure!(delta.len() == n, "slab size mismatch: {} vs {n}", delta.len());
+
+    let x = xla::Literal::vec1(delta);
+    let x = if meta_shape.len() > 1 { x.reshape(&shape_i64(&meta_shape))? } else { x };
+    let ebl = xla::Literal::vec1(&[eb]);
+
+    let exe = state.executable("decompress", variant)?;
+    let result = exe.execute::<xla::Literal>(&[x, ebl])?[0][0].to_literal_sync()?;
+    let out = result.to_tuple1()?;
+    Ok(out.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    //! PJRT tests live in rust/tests/pjrt_integration.rs (they need the
+    //! artifacts directory); unit tests here cover only handle plumbing.
+
+    #[test]
+    fn missing_artifacts_error_is_clean() {
+        let dir = std::path::Path::new("/nonexistent-cusz-artifacts");
+        assert!(super::ArtifactManifest::load(dir).is_err());
+    }
+}

@@ -1,0 +1,236 @@
+//! Slab tiling and zero padding (paper §3.1.1, Figure 2).
+//!
+//! AOT executables have fixed shapes, so fields are tiled into fixed-shape
+//! slabs; the trailing partial slab in each axis is zero-padded. Padding
+//! predicts perfectly under the zero-initialized Lorenzo layer, costing
+//! only near-zero-entropy symbols.
+
+/// Fixed slab geometry (mirrors python/compile/variants.py).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SlabSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub block: Vec<usize>,
+}
+
+impl SlabSpec {
+    pub fn new(name: &str, shape: &[usize], block: &[usize]) -> Self {
+        assert_eq!(shape.len(), block.len());
+        for (s, b) in shape.iter().zip(block) {
+            assert!(s % b == 0, "slab {shape:?} not block-aligned {block:?}");
+        }
+        SlabSpec { name: name.to_string(), shape: shape.to_vec(), block: block.to_vec() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+}
+
+/// The built-in slab variants — must mirror python/compile/variants.py
+/// (the AOT manifest is authoritative when artifacts are present; the CPU
+/// backend uses this table so both backends pick identical geometry).
+pub fn builtin_variants() -> Vec<SlabSpec> {
+    vec![
+        SlabSpec::new("1d_64k", &[1 << 16], &[32]),
+        SlabSpec::new("1d_1m", &[1 << 20], &[32]),
+        SlabSpec::new("2d_256", &[256, 256], &[16, 16]),
+        SlabSpec::new("2d_1k", &[1024, 1024], &[16, 16]),
+        SlabSpec::new("3d_32", &[32, 32, 32], &[8, 8, 8]),
+        SlabSpec::new("3d_64", &[64, 64, 64], &[8, 8, 8]),
+        SlabSpec::new("3d_128", &[128, 128, 128], &[8, 8, 8]),
+    ]
+}
+
+/// Total elements after tiling `dims` with slabs of `spec` (incl. padding).
+pub fn padded_volume(dims: &[usize], spec: &SlabSpec) -> usize {
+    dims.iter()
+        .zip(&spec.shape)
+        .map(|(d, s)| d.div_ceil(*s) * s)
+        .product()
+}
+
+/// Select the slab variant for a field's kernel dims: minimize the padded
+/// volume (bounding both wasted compute and wasted bitrate); ties go to
+/// the larger slab (fewer dispatches).
+pub fn select_spec<'a>(specs: &'a [SlabSpec], kernel_dims: &[usize]) -> Option<&'a SlabSpec> {
+    specs
+        .iter()
+        .filter(|s| s.ndim() == kernel_dims.len())
+        .min_by_key(|s| (padded_volume(kernel_dims, s), usize::MAX - s.len()))
+}
+
+/// Location of one slab within the field's tile grid.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SlabIndex {
+    /// Tile coordinates (per axis).
+    pub tile: Vec<usize>,
+    /// Origin element offset (per axis) in the field.
+    pub origin: Vec<usize>,
+    /// Valid (unpadded) extent per axis.
+    pub valid: Vec<usize>,
+}
+
+/// Enumerate the tile grid covering `dims` with slabs of `spec.shape`.
+pub fn tile_grid(dims: &[usize], spec: &SlabSpec) -> Vec<SlabIndex> {
+    assert_eq!(dims.len(), spec.ndim());
+    let counts: Vec<usize> =
+        dims.iter().zip(&spec.shape).map(|(d, s)| d.div_ceil(*s)).collect();
+    let total: usize = counts.iter().product();
+    let mut out = Vec::with_capacity(total);
+    for flat in 0..total {
+        let mut rem = flat;
+        let mut tile = vec![0usize; dims.len()];
+        for ax in (0..dims.len()).rev() {
+            tile[ax] = rem % counts[ax];
+            rem /= counts[ax];
+        }
+        let origin: Vec<usize> =
+            tile.iter().zip(&spec.shape).map(|(t, s)| t * s).collect();
+        let valid: Vec<usize> = origin
+            .iter()
+            .zip(dims)
+            .zip(&spec.shape)
+            .map(|((o, d), s)| (*d - *o).min(*s))
+            .collect();
+        out.push(SlabIndex { tile, origin, valid });
+    }
+    out
+}
+
+/// Copy one slab out of the field (row-major), zero-padding beyond `valid`.
+pub fn gather_slab(data: &[f32], dims: &[usize], spec: &SlabSpec, idx: &SlabIndex) -> Vec<f32> {
+    let mut slab = vec![0f32; spec.len()];
+    gather_slab_into(data, dims, spec, idx, &mut slab);
+    slab
+}
+
+/// Gather into a caller-provided buffer (must be pre-zeroed if the slab is
+/// partial — only valid rows are written).
+pub fn gather_slab_into(data: &[f32], dims: &[usize], spec: &SlabSpec, idx: &SlabIndex, slab: &mut [f32]) {
+    assert_eq!(slab.len(), spec.len());
+    copy_slab(dims, spec, idx, |src_off, dst_off, n| {
+        slab[dst_off..dst_off + n].copy_from_slice(&data[src_off..src_off + n]);
+    });
+}
+
+/// Scatter a reconstructed slab back into the field, dropping padding.
+pub fn scatter_slab(out: &mut [f32], dims: &[usize], spec: &SlabSpec, idx: &SlabIndex, slab: &[f32]) {
+    assert_eq!(slab.len(), spec.len());
+    copy_slab(dims, spec, idx, |src_off, dst_off, n| {
+        out[src_off..src_off + n].copy_from_slice(&slab[dst_off..dst_off + n]);
+    });
+}
+
+/// Visit each contiguous valid row: f(field_offset, slab_offset, len).
+fn copy_slab<F: FnMut(usize, usize, usize)>(
+    dims: &[usize],
+    spec: &SlabSpec,
+    idx: &SlabIndex,
+    mut f: F,
+) {
+    let nd = dims.len();
+    let row = idx.valid[nd - 1];
+    if row == 0 {
+        return;
+    }
+    // strides
+    let mut fstride = vec![1usize; nd];
+    let mut sstride = vec![1usize; nd];
+    for ax in (0..nd - 1).rev() {
+        fstride[ax] = fstride[ax + 1] * dims[ax + 1];
+        sstride[ax] = sstride[ax + 1] * spec.shape[ax + 1];
+    }
+    let outer: usize = idx.valid[..nd - 1].iter().product();
+    for flat in 0..outer.max(1) {
+        let mut rem = flat;
+        let mut foff = 0usize;
+        let mut soff = 0usize;
+        for ax in (0..nd - 1).rev() {
+            let c = rem % idx.valid[ax];
+            rem /= idx.valid[ax];
+            foff += (idx.origin[ax] + c) * fstride[ax];
+            soff += c * sstride[ax];
+        }
+        foff += idx.origin[nd - 1];
+        f(foff, soff, row);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec2d() -> SlabSpec {
+        SlabSpec::new("t", &[4, 4], &[2, 2])
+    }
+
+    #[test]
+    fn grid_covers_field_with_padding() {
+        let g = tile_grid(&[5, 7], &spec2d());
+        assert_eq!(g.len(), 2 * 2); // ceil(5/4) x ceil(7/4)
+        assert_eq!(g[0].valid, vec![4, 4]);
+        assert_eq!(g[3].valid, vec![1, 3]); // corner tile
+        assert_eq!(g[3].origin, vec![4, 4]);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip_2d() {
+        let dims = [5usize, 7];
+        let data: Vec<f32> = (0..35).map(|i| i as f32).collect();
+        let spec = spec2d();
+        let grid = tile_grid(&dims, &spec);
+        let mut out = vec![-1f32; 35];
+        for idx in &grid {
+            let slab = gather_slab(&data, &dims, &spec, idx);
+            // padded region must be zero
+            for r in 0..4 {
+                for c in 0..4 {
+                    let v = slab[r * 4 + c];
+                    if r >= idx.valid[0] || c >= idx.valid[1] {
+                        assert_eq!(v, 0.0, "pad at {r},{c}");
+                    }
+                }
+            }
+            scatter_slab(&mut out, &dims, &spec, idx, &slab);
+        }
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip_3d() {
+        let dims = [3usize, 5, 6];
+        let n: usize = dims.iter().product();
+        let data: Vec<f32> = (0..n).map(|i| (i as f32).sin()).collect();
+        let spec = SlabSpec::new("t3", &[2, 4, 4], &[2, 2, 2]);
+        let grid = tile_grid(&dims, &spec);
+        let mut out = vec![f32::NAN; n];
+        for idx in &grid {
+            let slab = gather_slab(&data, &dims, &spec, idx);
+            scatter_slab(&mut out, &dims, &spec, idx, &slab);
+        }
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip_1d() {
+        let data: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let spec = SlabSpec::new("t1", &[64], &[32]);
+        let grid = tile_grid(&[100], &spec);
+        assert_eq!(grid.len(), 2);
+        let mut out = vec![0f32; 100];
+        for idx in &grid {
+            let slab = gather_slab(&data, &[100], &spec, idx);
+            scatter_slab(&mut out, &[100], &spec, idx, &slab);
+        }
+        assert_eq!(out, data);
+    }
+}

@@ -1,0 +1,243 @@
+//! Algorithm 1: the ORIGINAL SZ-1.4-style sequential predict-quant with the
+//! loop-carried RAW cascade, in float space (predictions read decompressed
+//! values, reconstruction is written back in situ).
+//!
+//! This is the CPU-SZ baseline of Figure 5 / Table 7 and the SZ-1.4 column
+//! of Table 8. Differences from DUAL-QUANT that the paper calls out and
+//! that this implementation reproduces:
+//!   * float-space arithmetic (error at exact zeros is nonzero, so
+//!     zero-dominated fields score lower PSNR than cuSZ — Table 8);
+//!   * outer-layer (first row/column/plane) points are stored verbatim as
+//!     unpredictable data (§3.1.1 "the original SZ ... saved as
+//!     unpredictable data directly");
+//!   * strictly sequential: every point waits for its predecessors.
+
+use super::block_for_ndim;
+
+#[derive(Debug, Clone)]
+pub struct ClassicCompressed {
+    pub codes: Vec<u16>,
+    /// (index, verbatim f32) for outer-layer + out-of-cap points (code 0).
+    pub outliers: Vec<(u32, f32)>,
+    pub shape: Vec<usize>,
+}
+
+/// Sequential SZ-1.4 compression. `dict_size` bins, bin 0 = unpredictable.
+pub fn compress(data: &[f32], shape: &[usize], eb: f32, dict_size: usize) -> ClassicCompressed {
+    let radius = (dict_size / 2) as i32;
+    let n: usize = shape.iter().product();
+    assert_eq!(n, data.len());
+    let mut recon = vec![0f32; n];
+    let mut codes = vec![0u16; n];
+    let mut outliers = Vec::new();
+    let strides = row_major_strides(shape);
+    let nd = shape.len();
+
+    let mut coord = vec![0usize; nd];
+    for (i, &d) in data.iter().enumerate() {
+        let outer = coord.iter().any(|&c| c == 0);
+        if outer {
+            // Outer layer: verbatim (exact) storage.
+            codes[i] = 0;
+            outliers.push((i as u32, d));
+            recon[i] = d;
+        } else {
+            let p = lorenzo_float(&recon, i, &strides, nd);
+            let e = d - p;
+            let k = (e / (2.0 * eb)).round_ties_even();
+            let code_delta = k as i32;
+            let rehearsal = p + code_delta as f32 * 2.0 * eb;
+            // WATCHDOG (Algorithm 1 line 7): quantized residual must still
+            // honor the bound, else fall back to OUTLIER.
+            if code_delta > -radius
+                && code_delta < radius
+                && (rehearsal - d).abs() <= eb
+                && d.is_finite()
+            {
+                codes[i] = (code_delta + radius) as u16;
+                recon[i] = rehearsal; // RAW write-back
+            } else {
+                codes[i] = 0;
+                outliers.push((i as u32, d));
+                recon[i] = d;
+            }
+        }
+        bump(&mut coord, shape);
+    }
+    ClassicCompressed { codes, outliers, shape: shape.to_vec() }
+}
+
+/// Sequential decompression: cascading reconstruction.
+pub fn decompress(c: &ClassicCompressed, eb: f32, dict_size: usize) -> Vec<f32> {
+    let radius = (dict_size / 2) as i32;
+    let n: usize = c.shape.iter().product();
+    let mut recon = vec![0f32; n];
+    let strides = row_major_strides(&c.shape);
+    let nd = c.shape.len();
+    let mut outlier_iter = c.outliers.iter().peekable();
+
+    let mut coord = vec![0usize; nd];
+    for i in 0..n {
+        let code = c.codes[i];
+        if code == 0 {
+            let (idx, v) = outlier_iter.next().copied().unwrap_or((i as u32, 0.0));
+            debug_assert_eq!(idx as usize, i, "outlier order");
+            recon[i] = v;
+        } else {
+            let p = lorenzo_float(&recon, i, &strides, nd);
+            recon[i] = p + (code as i32 - radius) as f32 * 2.0 * eb;
+        }
+        bump(&mut coord, &c.shape);
+    }
+    recon
+}
+
+/// Compressed size estimate in bytes (codes after Huffman + outliers),
+/// used for CR accounting in the baseline benches.
+pub fn compressed_bytes(c: &ClassicCompressed, huffman_bits: u64) -> usize {
+    (huffman_bits as usize).div_ceil(8) + c.outliers.len() * 8
+}
+
+#[inline]
+fn lorenzo_float(recon: &[f32], i: usize, strides: &[usize], nd: usize) -> f32 {
+    // Interior-only call: all neighbors exist.
+    match nd {
+        1 => recon[i - 1],
+        2 => recon[i - 1] + recon[i - strides[0]] - recon[i - strides[0] - 1],
+        3 => {
+            let (s0, s1) = (strides[0], strides[1]);
+            recon[i - 1] + recon[i - s1] + recon[i - s0]
+                - recon[i - s1 - 1]
+                - recon[i - s0 - 1]
+                - recon[i - s0 - s1]
+                + recon[i - s0 - s1 - 1]
+        }
+        _ => unreachable!(),
+    }
+}
+
+fn row_major_strides(shape: &[usize]) -> Vec<usize> {
+    let nd = shape.len();
+    let mut s = vec![1usize; nd];
+    for ax in (0..nd.saturating_sub(1)).rev() {
+        s[ax] = s[ax + 1] * shape[ax + 1];
+    }
+    s
+}
+
+#[inline]
+fn bump(coord: &mut [usize], shape: &[usize]) {
+    for ax in (0..shape.len()).rev() {
+        coord[ax] += 1;
+        if coord[ax] < shape[ax] {
+            return;
+        }
+        coord[ax] = 0;
+    }
+}
+
+/// Chunked-parallel classic SZ: the OpenMP-SZ baseline (§4.2.1). Each
+/// thread runs the unmodified sequential algorithm on its own block; block
+/// borders are zero-seeded like cuSZ (Figure 2 note in the paper).
+pub fn compress_openmp_style(
+    data: &[f32],
+    shape: &[usize],
+    eb: f32,
+    dict_size: usize,
+    threads: usize,
+) -> Vec<ClassicCompressed> {
+    use crate::sz::blocks::{gather_slab, tile_grid, SlabSpec};
+    // One OpenMP block ~ a slab of 8x the Lorenzo block per axis.
+    let block = block_for_ndim(shape.len());
+    let slab_shape: Vec<usize> =
+        block.iter().zip(shape).map(|(b, s)| (b * 8).min(s.next_power_of_two().max(*b))).collect();
+    let slab_shape: Vec<usize> =
+        slab_shape.iter().zip(&block).map(|(s, b)| s.div_ceil(*b) * *b).collect();
+    let spec = SlabSpec::new("omp", &slab_shape, &block);
+    let grid = tile_grid(shape, &spec);
+    crate::util::pool::parallel_map(threads, &grid, |_, idx| {
+        let slab = gather_slab(data, shape, &spec, idx);
+        compress(&slab, &spec.shape, eb, dict_size)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn smooth(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut acc = 0f32;
+        (0..n)
+            .map(|_| {
+                acc += rng.normal() * 0.01;
+                acc
+            })
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_1d_within_eb() {
+        let data = smooth(1000, 1);
+        let eb = 1e-3;
+        let c = compress(&data, &[1000], eb, 1024);
+        let out = decompress(&c, eb, 1024);
+        for (o, d) in out.iter().zip(&data) {
+            assert!((o - d).abs() <= eb * 1.0001, "{o} vs {d}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_2d_within_eb() {
+        let data = smooth(64 * 64, 2);
+        let eb = 1e-3;
+        let c = compress(&data, &[64, 64], eb, 1024);
+        let out = decompress(&c, eb, 1024);
+        for (o, d) in out.iter().zip(&data) {
+            assert!((o - d).abs() <= eb * 1.0001);
+        }
+    }
+
+    #[test]
+    fn roundtrip_3d_within_eb() {
+        let data = smooth(16 * 16 * 16, 3);
+        let eb = 1e-2;
+        let c = compress(&data, &[16, 16, 16], eb, 1024);
+        let out = decompress(&c, eb, 1024);
+        for (o, d) in out.iter().zip(&data) {
+            assert!((o - d).abs() <= eb * 1.0001);
+        }
+    }
+
+    #[test]
+    fn outer_layer_is_verbatim() {
+        let data = smooth(32 * 32, 4);
+        let c = compress(&data, &[32, 32], 1e-3, 1024);
+        let out = decompress(&c, 1e-3, 1024);
+        // first row and column reconstruct exactly
+        for j in 0..32 {
+            assert_eq!(out[j], data[j]);
+            assert_eq!(out[j * 32], data[j * 32]);
+        }
+    }
+
+    #[test]
+    fn smooth_fields_mostly_predictable() {
+        let data = smooth(10_000, 5);
+        let c = compress(&data, &[10_000], 1e-3, 1024);
+        let frac = c.outliers.len() as f64 / data.len() as f64;
+        assert!(frac < 0.02, "outlier fraction {frac}");
+    }
+
+    #[test]
+    fn spiky_data_falls_back_to_outliers() {
+        let mut rng = Rng::new(6);
+        let data: Vec<f32> = (0..1000).map(|_| rng.normal() * 1e6).collect();
+        let c = compress(&data, &[1000], 1e-6, 1024);
+        let out = decompress(&c, 1e-6, 1024);
+        for (o, d) in out.iter().zip(&data) {
+            assert!((o - d).abs() <= 1e-6 * 1.001 + d.abs() * 1e-6);
+        }
+    }
+}

@@ -1,0 +1,180 @@
+//! Algorithm 2 (DUAL-QUANT) on CPU — bit-exact mirror of the Pallas/HLO
+//! path, used as the fallback backend, the multicore baseline, and the
+//! cross-validation oracle for PJRT outputs.
+
+use std::cell::RefCell;
+
+use super::{blocks::SlabSpec, lorenzo, prequant, PREQUANT_CAP};
+
+thread_local! {
+    /// Reused prequant scratch: avoids an 8 MB allocation + page-fault
+    /// storm per slab (EXPERIMENTS.md §Perf, iteration 3).
+    static DQ_SCRATCH: RefCell<Vec<i32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Fully-fused CPU compression of one slab: prequant + Lorenzo delta +
+/// code/histogram/outlier extraction in minimal passes.
+pub struct SlabCompressed {
+    pub delta: Vec<i32>,
+    pub codes: Vec<u16>,
+    pub hist: Vec<u32>,
+    /// (in-slab position, exact delta) for out-of-cap (code 0) points.
+    pub outliers: Vec<(u32, i32)>,
+}
+
+pub fn dual_quant_full(data: &[f32], spec: &SlabSpec, eb: f32, dict_size: usize) -> SlabCompressed {
+    assert_eq!(data.len(), spec.len());
+    let n = data.len();
+    let half_inv_eb = 0.5f32 / eb;
+    let radius = (dict_size / 2) as i32;
+
+    DQ_SCRATCH.with(|cell| {
+        let mut dq = cell.borrow_mut();
+        dq.clear();
+        dq.extend(data.iter().map(|&d| prequant(d, half_inv_eb)));
+
+        let mut delta = vec![0i32; n];
+        lorenzo::delta_nd(&dq, &spec.shape, &spec.block, &mut delta);
+
+        // fused postquant: codes + histogram + outlier capture, one pass
+        let mut codes = vec![0u16; n];
+        let mut hist = vec![0u32; dict_size];
+        let mut outliers = Vec::new();
+        for (i, (&dv, c)) in delta.iter().zip(codes.iter_mut()).enumerate() {
+            let code = super::code_of_delta(dv, radius);
+            *c = code;
+            hist[code as usize] += 1;
+            if code == 0 {
+                outliers.push((i as u32, dv));
+            }
+        }
+        SlabCompressed { delta, codes, hist, outliers }
+    })
+}
+
+/// Compress direction: data -> (delta, histogram-of-codes).
+/// Matches the AOT `compress` executable: hist is over `code_of_delta`
+/// with `radius = dict_size/2`, including the reserved outlier bin 0.
+pub fn dual_quant_slab(data: &[f32], spec: &SlabSpec, eb: f32, dict_size: usize) -> (Vec<i32>, Vec<u32>) {
+    let radius = (dict_size / 2) as i32;
+    let delta = dual_quant_delta(data, spec, eb);
+    let mut hist = vec![0u32; dict_size];
+    for &dv in &delta {
+        hist[super::code_of_delta(dv, radius) as usize] += 1;
+    }
+    (delta, hist)
+}
+
+/// Delta-only compression (the AOT `compress` executable contract).
+pub fn dual_quant_delta(data: &[f32], spec: &SlabSpec, eb: f32) -> Vec<i32> {
+    assert_eq!(data.len(), spec.len());
+    let half_inv_eb = 0.5f32 / eb;
+    DQ_SCRATCH.with(|cell| {
+        let mut dq = cell.borrow_mut();
+        dq.clear();
+        dq.extend(data.iter().map(|&d| prequant(d, half_inv_eb)));
+        let mut delta = vec![0i32; data.len()];
+        lorenzo::delta_nd(&dq, &spec.shape, &spec.block, &mut delta);
+        delta
+    })
+}
+
+/// Decompress direction: patched delta field -> f32 values.
+/// Matches the AOT `decompress` executable: blockwise prefix sums then
+/// `as f32 * (2*eb)`.
+pub fn reconstruct_slab(delta: &[i32], spec: &SlabSpec, eb: f32) -> Vec<f32> {
+    reconstruct_slab_owned(delta.to_vec(), spec, eb)
+}
+
+/// Allocation-free variant: reconstructs in place and converts the i32
+/// buffer to f32 without reallocating (same size/alignment).
+pub fn reconstruct_slab_owned(mut acc: Vec<i32>, spec: &SlabSpec, eb: f32) -> Vec<f32> {
+    assert_eq!(acc.len(), spec.len());
+    lorenzo::reconstruct_nd(&mut acc, &spec.shape, &spec.block);
+    let scale = 2.0f32 * eb;
+    for v in acc.iter_mut() {
+        *v = ((*v as f32) * scale).to_bits() as i32;
+    }
+    // SAFETY: i32 and f32 have identical size and alignment; every element
+    // now holds valid f32 bits.
+    let mut md = std::mem::ManuallyDrop::new(acc);
+    unsafe { Vec::from_raw_parts(md.as_mut_ptr() as *mut f32, md.len(), md.capacity()) }
+}
+
+/// True when no value in `data` can clamp at the prequant cap for this eb —
+/// the common fast path that lets the coordinator skip the verbatim scan.
+pub fn range_safe(max_abs: f32, eb: f32) -> bool {
+    // Conservative: strict inequality with one bin of slack.
+    (max_abs as f64) < (PREQUANT_CAP as f64 - 1.0) * 2.0 * eb as f64
+}
+
+/// Indices whose prequant value clamps (need verbatim f32 storage).
+pub fn find_range_outliers(data: &[f32], eb: f32) -> Vec<(u32, f32)> {
+    let half_inv_eb = 0.5f32 / eb;
+    let capf = PREQUANT_CAP as f32;
+    data.iter()
+        .enumerate()
+        .filter_map(|(i, &d)| {
+            let v = (d * half_inv_eb).round_ties_even();
+            if v.abs() >= capf || !d.is_finite() {
+                Some((i as u32, d))
+            } else {
+                None
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn spec() -> SlabSpec {
+        SlabSpec::new("t2", &[64, 64], &[16, 16])
+    }
+
+    #[test]
+    fn roundtrip_within_eb() {
+        let mut rng = Rng::new(9);
+        let s = spec();
+        let data: Vec<f32> = (0..s.len()).map(|_| rng.normal() * 10.0).collect();
+        let eb = 1e-3f32;
+        let (delta, hist) = dual_quant_slab(&data, &s, eb, 1024);
+        assert_eq!(hist.iter().map(|&h| h as usize).sum::<usize>(), s.len());
+        // patch outliers with their exact deltas (already exact in `delta`)
+        let out = reconstruct_slab(&delta, &s, eb);
+        let slack = 4.0 * f32::EPSILON * data.iter().fold(0f32, |a, &b| a.max(b.abs()));
+        for (o, d) in out.iter().zip(&data) {
+            assert!((o - d).abs() <= eb + slack, "{o} vs {d}");
+        }
+    }
+
+    #[test]
+    fn histogram_counts_outlier_bin() {
+        let s = SlabSpec::new("t1", &[64], &[32]);
+        let mut data = vec![0f32; 64];
+        data[5] = 1_000.0; // large spike => outlier symbol at 5 and 6
+        let (delta, hist) = dual_quant_slab(&data, &s, 0.01, 1024);
+        assert_eq!(hist[0], 2);
+        assert_eq!(delta[5], 50_000);
+        assert_eq!(delta[6], -50_000);
+    }
+
+    #[test]
+    fn range_safety_detection() {
+        assert!(range_safe(1.0, 1e-4));
+        assert!(!range_safe(4e19, 1e-4));
+        let data = vec![0.0f32, 1e12, -3.0];
+        let outl = find_range_outliers(&data, 1e-6);
+        assert_eq!(outl.len(), 1);
+        assert_eq!(outl[0].0, 1);
+    }
+
+    #[test]
+    fn nonfinite_values_become_verbatim() {
+        let data = vec![0.0f32, f32::NAN, f32::INFINITY];
+        let outl = find_range_outliers(&data, 1e-3);
+        assert_eq!(outl.len(), 2);
+    }
+}

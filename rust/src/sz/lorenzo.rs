@@ -1,0 +1,306 @@
+//! First-order Lorenzo prediction and its inverse, blockwise with the
+//! zero-initialized padding layer (paper §3.1.1-3.1.2), over exact-integer
+//! (prequantized) i32 fields.
+//!
+//! `delta_*` computes `δ = d° − ℓ(d°_sr)` (compression direction, no RAW:
+//! reads only the immutable prequant field). `reconstruct_*` computes the
+//! inverse as per-axis inclusive prefix sums within each block (DESIGN.md
+//! §3.2) — bit-exact with the cascading Algorithm 1.
+
+/// 1D: p = d[i-1], zero at block starts.
+pub fn delta_1d(dq: &[i32], block: usize, out: &mut [i32]) {
+    assert_eq!(dq.len() % block, 0);
+    assert_eq!(dq.len(), out.len());
+    for (bo, chunk) in dq.chunks_exact(block).enumerate() {
+        let base = bo * block;
+        out[base] = chunk[0];
+        for i in 1..block {
+            out[base + i] = chunk[i] - chunk[i - 1];
+        }
+    }
+}
+
+/// 1D inverse: prefix sum per block.
+pub fn reconstruct_1d(delta: &mut [i32], block: usize) {
+    for chunk in delta.chunks_exact_mut(block) {
+        let mut acc = 0i32;
+        for v in chunk {
+            acc += *v;
+            *v = acc;
+        }
+    }
+}
+
+/// 2D: p = left + up - upleft within each bh x bw block of a rows x cols field.
+///
+/// Hot path: rows are split at block boundaries so the interior loop is
+/// branch-free (auto-vectorizes); the `r % bh == 0` top rows fall back to
+/// the 1D predictor per the padding-layer semantics.
+pub fn delta_2d(dq: &[i32], rows: usize, cols: usize, bh: usize, bw: usize, out: &mut [i32]) {
+    assert_eq!(dq.len(), rows * cols);
+    assert_eq!(rows % bh, 0);
+    assert_eq!(cols % bw, 0);
+    for r in 0..rows {
+        let row = r * cols;
+        let cur = &dq[row..row + cols];
+        let dst = &mut out[row..row + cols];
+        if r % bh == 0 {
+            // top row of a block row: up/upleft are padding zeros -> 1D
+            delta_row_1d(cur, bw, dst);
+        } else {
+            let prev = &dq[row - cols..row];
+            for cb in (0..cols).step_by(bw) {
+                // block-leading column: left/upleft are padding zeros
+                dst[cb] = cur[cb] - prev[cb];
+                // interior: full 2D stencil, branch-free
+                for c in cb + 1..cb + bw {
+                    dst[c] = cur[c] - (cur[c - 1] + prev[c] - prev[c - 1]);
+                }
+            }
+        }
+    }
+}
+
+#[inline]
+fn delta_row_1d(cur: &[i32], bw: usize, dst: &mut [i32]) {
+    for cb in (0..cur.len()).step_by(bw) {
+        dst[cb] = cur[cb];
+        for c in cb + 1..cb + bw {
+            dst[c] = cur[c] - cur[c - 1];
+        }
+    }
+}
+
+/// 2D inverse: cumsum along columns then rows, blockwise.
+pub fn reconstruct_2d(delta: &mut [i32], rows: usize, cols: usize, bh: usize, bw: usize) {
+    // cumsum along axis 1 (within each bw run)
+    for r in 0..rows {
+        let row = r * cols;
+        let mut acc = 0i32;
+        for c in 0..cols {
+            if c % bw == 0 {
+                acc = 0;
+            }
+            acc += delta[row + c];
+            delta[row + c] = acc;
+        }
+    }
+    // cumsum along axis 0 (within each bh run)
+    for r in 1..rows {
+        if r % bh == 0 {
+            continue;
+        }
+        let (prev_rows, cur_rows) = delta.split_at_mut(r * cols);
+        let prev = &prev_rows[(r - 1) * cols..];
+        let cur = &mut cur_rows[..cols];
+        for c in 0..cols {
+            cur[c] += prev[c];
+        }
+    }
+}
+
+/// 3D: 7-neighbor Lorenzo within each b0 x b1 x b2 block.
+#[allow(clippy::too_many_arguments)]
+pub fn delta_3d(
+    dq: &[i32],
+    d0: usize,
+    d1: usize,
+    d2: usize,
+    b0: usize,
+    b1: usize,
+    b2: usize,
+    out: &mut [i32],
+) {
+    assert_eq!(dq.len(), d0 * d1 * d2);
+    assert!(d0 % b0 == 0 && d1 % b1 == 0 && d2 % b2 == 0);
+    let s0 = d1 * d2;
+    let s1 = d2;
+    // Rows (fixed i, j) are dispatched to one of four specialized kernels
+    // depending on which upper faces are padding; each splits at k-block
+    // boundaries so the interior loop is branch-free and vectorizable.
+    for i in 0..d0 {
+        let i_in = i % b0 != 0;
+        for j in 0..d1 {
+            let j_in = j % b1 != 0;
+            let base = i * s0 + j * s1;
+            let cur = &dq[base..base + d2];
+            let dst = &mut out[base..base + d2];
+            match (i_in, j_in) {
+                (false, false) => delta_row_1d(cur, b2, dst),
+                (false, true) => {
+                    // 2D stencil against the j-1 row
+                    let pj = &dq[base - s1..base - s1 + d2];
+                    row_stencil_2d(cur, pj, b2, dst);
+                }
+                (true, false) => {
+                    // 2D stencil against the i-1 plane's row
+                    let pi = &dq[base - s0..base - s0 + d2];
+                    row_stencil_2d(cur, pi, b2, dst);
+                }
+                (true, true) => {
+                    let pi = &dq[base - s0..base - s0 + d2];
+                    let pj = &dq[base - s1..base - s1 + d2];
+                    let pij = &dq[base - s0 - s1..base - s0 - s1 + d2];
+                    for kb in (0..d2).step_by(b2) {
+                        dst[kb] = cur[kb] - (pi[kb] + pj[kb] - pij[kb]);
+                        for k in kb + 1..kb + b2 {
+                            // full 7-neighbor Lorenzo, branch-free
+                            let pred = cur[k - 1] + pj[k] + pi[k]
+                                - pj[k - 1]
+                                - pi[k - 1]
+                                - pij[k]
+                                + pij[k - 1];
+                            dst[k] = cur[k] - pred;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Row kernel: 2D Lorenzo against one upper row (the other face is pad).
+#[inline]
+fn row_stencil_2d(cur: &[i32], up: &[i32], bw: usize, dst: &mut [i32]) {
+    for cb in (0..cur.len()).step_by(bw) {
+        dst[cb] = cur[cb] - up[cb];
+        for c in cb + 1..cb + bw {
+            dst[c] = cur[c] - (cur[c - 1] + up[c] - up[c - 1]);
+        }
+    }
+}
+
+/// 3D inverse: cumsum along each axis in turn, blockwise.
+pub fn reconstruct_3d(delta: &mut [i32], d0: usize, d1: usize, d2: usize, b0: usize, b1: usize, b2: usize) {
+    let s0 = d1 * d2;
+    let s1 = d2;
+    // axis 2
+    for i in 0..d0 {
+        for j in 0..d1 {
+            let base = i * s0 + j * s1;
+            let mut acc = 0i32;
+            for k in 0..d2 {
+                if k % b2 == 0 {
+                    acc = 0;
+                }
+                acc += delta[base + k];
+                delta[base + k] = acc;
+            }
+        }
+    }
+    // axis 1
+    for i in 0..d0 {
+        for j in 1..d1 {
+            if j % b1 == 0 {
+                continue;
+            }
+            let base = i * s0 + j * s1;
+            let prev = base - s1;
+            for k in 0..d2 {
+                delta[base + k] += delta[prev + k];
+            }
+        }
+    }
+    // axis 0
+    for i in 1..d0 {
+        if i % b0 == 0 {
+            continue;
+        }
+        let base = i * s0;
+        let prev = base - s0;
+        for idx in 0..s0 {
+            delta[base + idx] += delta[prev + idx];
+        }
+    }
+}
+
+/// Dispatch helpers over shape/block vectors (1..=3 dims).
+pub fn delta_nd(dq: &[i32], shape: &[usize], block: &[usize], out: &mut [i32]) {
+    match shape.len() {
+        1 => delta_1d(dq, block[0], out),
+        2 => delta_2d(dq, shape[0], shape[1], block[0], block[1], out),
+        3 => delta_3d(dq, shape[0], shape[1], shape[2], block[0], block[1], block[2], out),
+        n => panic!("unsupported ndim {n}"),
+    }
+}
+
+pub fn reconstruct_nd(delta: &mut [i32], shape: &[usize], block: &[usize]) {
+    match shape.len() {
+        1 => reconstruct_1d(delta, block[0]),
+        2 => reconstruct_2d(delta, shape[0], shape[1], block[0], block[1]),
+        3 => reconstruct_3d(delta, shape[0], shape[1], shape[2], block[0], block[1], block[2]),
+        n => panic!("unsupported ndim {n}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn rand_dq(n: usize, seed: u64) -> Vec<i32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| (rng.below(2001) as i32) - 1000).collect()
+    }
+
+    #[test]
+    fn roundtrip_1d() {
+        let dq = rand_dq(256, 1);
+        let mut delta = vec![0i32; 256];
+        delta_1d(&dq, 32, &mut delta);
+        reconstruct_1d(&mut delta, 32);
+        assert_eq!(delta, dq);
+    }
+
+    #[test]
+    fn roundtrip_2d() {
+        let dq = rand_dq(64 * 48, 2);
+        let mut delta = vec![0i32; dq.len()];
+        delta_2d(&dq, 64, 48, 16, 16, &mut delta);
+        reconstruct_2d(&mut delta, 64, 48, 16, 16);
+        assert_eq!(delta, dq);
+    }
+
+    #[test]
+    fn roundtrip_3d() {
+        let dq = rand_dq(16 * 24 * 8, 3);
+        let mut delta = vec![0i32; dq.len()];
+        delta_3d(&dq, 16, 24, 8, 8, 8, 8, &mut delta);
+        reconstruct_3d(&mut delta, 16, 24, 8, 8, 8, 8);
+        assert_eq!(delta, dq);
+    }
+
+    #[test]
+    fn smooth_field_yields_small_deltas() {
+        // A linear ramp has constant first differences: 2D Lorenzo residual 0
+        // except at block borders.
+        let (rows, cols) = (32, 32);
+        let dq: Vec<i32> = (0..rows * cols).map(|i| (i / cols + i % cols) as i32).collect();
+        let mut delta = vec![0i32; dq.len()];
+        delta_2d(&dq, rows, cols, 16, 16, &mut delta);
+        // interior points: perfectly predicted
+        for r in 1..rows {
+            for c in 1..cols {
+                if r % 16 != 0 && c % 16 != 0 {
+                    assert_eq!(delta[r * cols + c], 0, "at {r},{c}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn block_isolation_2d() {
+        // Changing data in one block must not change deltas in another.
+        let mut dq = rand_dq(32 * 32, 4);
+        let mut d1 = vec![0i32; dq.len()];
+        delta_2d(&dq, 32, 32, 16, 16, &mut d1);
+        dq[0] += 1000; // block (0,0)
+        let mut d2 = vec![0i32; dq.len()];
+        delta_2d(&dq, 32, 32, 16, 16, &mut d2);
+        for r in 16..32 {
+            for c in 16..32 {
+                assert_eq!(d1[r * 32 + c], d2[r * 32 + c]);
+            }
+        }
+    }
+}

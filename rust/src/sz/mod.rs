@@ -1,0 +1,77 @@
+//! The SZ-1.4 algorithm substrate: Lorenzo predictors, the paper's
+//! DUAL-QUANTIZATION (Algorithm 2) on CPU, the original cascading
+//! predict-quant (Algorithm 1) used as the CPU-SZ baseline, and slab
+//! tiling/padding (Figure 2).
+//!
+//! The CPU dual-quant is **bit-exact** with the Pallas/HLO path (same f32
+//! expressions, same round-ties-even, same i32 integer pipeline), which the
+//! integration tests assert; it doubles as the OpenMP-SZ-style multicore
+//! baseline and the fallback backend.
+
+pub mod blocks;
+pub mod classic;
+pub mod dual_quant;
+pub mod lorenzo;
+
+/// Prequantized magnitudes are clamped here so every integer step stays
+/// exact in i32 (matches python/compile/variants.py::PREQUANT_CAP).
+pub const PREQUANT_CAP: i32 = 1 << 23;
+
+/// Paper block shapes (§3.1.1): 32 / 16x16 / 8x8x8.
+pub fn block_for_ndim(ndim: usize) -> Vec<usize> {
+    match ndim {
+        1 => vec![32],
+        2 => vec![16, 16],
+        3 => vec![8, 8, 8],
+        _ => panic!("kernel ndim must be 1..=3 (4D folds first)"),
+    }
+}
+
+/// PREQUANT: f32 -> exact-integer i32, `round_ties_even(d * (0.5/eb))`.
+/// Must match XLA `rint(d * (0.5 / eb))` bit-for-bit.
+#[inline]
+pub fn prequant(d: f32, half_inv_eb: f32) -> i32 {
+    let v = (d * half_inv_eb).round_ties_even();
+    v.clamp(-(PREQUANT_CAP as f32), PREQUANT_CAP as f32) as i32
+}
+
+/// POSTQUANT code from an exact delta: bin index in [0, dict), 0 = outlier.
+#[inline]
+pub fn code_of_delta(delta: i32, radius: i32) -> u16 {
+    if delta > -radius && delta < radius {
+        (delta + radius) as u16
+    } else {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prequant_rounds_ties_to_even() {
+        // half_inv_eb = 1.0 (eb = 0.5) => prequant is plain rint
+        assert_eq!(prequant(0.5, 1.0), 0);
+        assert_eq!(prequant(1.5, 1.0), 2);
+        assert_eq!(prequant(2.5, 1.0), 2);
+        assert_eq!(prequant(-0.5, 1.0), 0);
+        assert_eq!(prequant(-1.5, 1.0), -2);
+    }
+
+    #[test]
+    fn prequant_clamps_at_cap() {
+        assert_eq!(prequant(1e12, 1.0), PREQUANT_CAP);
+        assert_eq!(prequant(-1e12, 1.0), -PREQUANT_CAP);
+    }
+
+    #[test]
+    fn code_reserves_zero_for_outliers() {
+        assert_eq!(code_of_delta(0, 512), 512);
+        assert_eq!(code_of_delta(511, 512), 1023);
+        assert_eq!(code_of_delta(512, 512), 0);
+        assert_eq!(code_of_delta(-511, 512), 1);
+        assert_eq!(code_of_delta(-512, 512), 0);
+        assert_eq!(code_of_delta(i32::MAX, 512), 0);
+    }
+}

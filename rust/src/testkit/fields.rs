@@ -1,0 +1,49 @@
+//! Shared field fixtures for tests and benches: the three data regimes the
+//! python tests also use (smooth / noisy / zero-dominated).
+
+use crate::util::prng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Regime {
+    Smooth,
+    Noisy,
+    Zeros,
+}
+
+impl Regime {
+    pub const ALL: [Regime; 3] = [Regime::Smooth, Regime::Noisy, Regime::Zeros];
+}
+
+pub fn make(regime: Regime, n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    match regime {
+        Regime::Smooth => {
+            let mut acc = 0f32;
+            (0..n)
+                .map(|_| {
+                    acc += rng.normal() * 0.02;
+                    acc
+                })
+                .collect()
+        }
+        Regime::Noisy => (0..n).map(|_| rng.normal() * 10.0).collect(),
+        Regime::Zeros => (0..n)
+            .map(|_| if rng.f32() < 0.03 { rng.normal() * 100.0 } else { 0.0 })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regimes_have_expected_character() {
+        let s = make(Regime::Smooth, 10_000, 1);
+        let z = make(Regime::Zeros, 10_000, 1);
+        let max_step = s.windows(2).map(|w| (w[1] - w[0]).abs()).fold(0f32, f32::max);
+        assert!(max_step < 0.2);
+        let zero_frac = z.iter().filter(|&&v| v == 0.0).count() as f32 / z.len() as f32;
+        assert!(zero_frac > 0.9);
+    }
+}

@@ -1,0 +1,5 @@
+//! Test infrastructure: a mini property-testing kit (offline substitute
+//! for proptest, DESIGN.md §4) and shared field fixtures.
+
+pub mod fields;
+pub mod prop;

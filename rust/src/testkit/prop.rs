@@ -1,0 +1,105 @@
+//! Mini property-testing kit: deterministic seeded cases with failure
+//! reporting. Set `CUSZ_PROP_CASES` / `CUSZ_PROP_SEED` to widen or replay.
+
+use crate::util::prng::Rng;
+
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        let cases = std::env::var("CUSZ_PROP_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(64);
+        let seed = std::env::var("CUSZ_PROP_SEED")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0xc052_2020);
+        PropConfig { cases, seed }
+    }
+}
+
+/// Run `prop` for each case with a per-case RNG; panics with the failing
+/// case seed so `CUSZ_PROP_SEED=<seed> CUSZ_PROP_CASES=1` replays it.
+pub fn check(name: &str, prop: impl Fn(&mut Rng) -> Result<(), String>) {
+    check_with(PropConfig::default(), name, prop)
+}
+
+pub fn check_with(cfg: PropConfig, name: &str, prop: impl Fn(&mut Rng) -> Result<(), String>) {
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} (replay with \
+                 CUSZ_PROP_SEED={case_seed} CUSZ_PROP_CASES=1): {msg}"
+            );
+        }
+    }
+}
+
+/// Generators.
+pub mod gen {
+    use crate::util::prng::Rng;
+
+    pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn f32_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() * scale).collect()
+    }
+
+    /// Random small shape with block-aligned axes for the given block.
+    pub fn aligned_shape(rng: &mut Rng, block: &[usize], max_blocks: usize) -> Vec<usize> {
+        block
+            .iter()
+            .map(|&b| b * usize_in(rng, 1, max_blocks))
+            .collect()
+    }
+
+    pub fn pick<'a, T>(rng: &mut Rng, items: &'a [T]) -> &'a T {
+        &items[rng.below(items.len() as u64) as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let count = std::cell::Cell::new(0usize);
+        check_with(PropConfig { cases: 10, seed: 1 }, "trivial", |_| {
+            count.set(count.get() + 1);
+            Ok(())
+        });
+        assert_eq!(count.get(), 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_reports_seed() {
+        check_with(PropConfig { cases: 5, seed: 7 }, "fails", |rng| {
+            if rng.f32() >= 0.0 {
+                Err("always".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        let mut rng = crate::util::prng::Rng::new(3);
+        for _ in 0..100 {
+            let v = gen::usize_in(&mut rng, 3, 9);
+            assert!((3..=9).contains(&v));
+        }
+        let shape = gen::aligned_shape(&mut rng, &[16, 16], 4);
+        assert!(shape[0] % 16 == 0 && shape[0] <= 64);
+    }
+}

@@ -1,0 +1,146 @@
+//! Micro-benchmark harness (offline substitute for criterion): warmup,
+//! repeated timed runs, mean/σ/min, and GB/s throughput computed against
+//! the *original* data size — matching the paper's footnote 4 ("all
+//! throughputs ... measured based on the original data size and time").
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub reps: usize,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    /// Bytes of original data processed per rep (for GB/s).
+    pub bytes: usize,
+}
+
+impl BenchResult {
+    pub fn gbps(&self) -> f64 {
+        if self.mean.as_nanos() == 0 {
+            return f64::INFINITY;
+        }
+        self.bytes as f64 / self.mean.as_secs_f64() / 1e9
+    }
+
+    pub fn mbps(&self) -> f64 {
+        self.gbps() * 1000.0
+    }
+
+    pub fn row(&self) -> String {
+        format!(
+            "{:<40} {:>10.3} ms ±{:>7.3} ms  min {:>10.3} ms  {:>9.3} GB/s",
+            self.name,
+            self.mean.as_secs_f64() * 1e3,
+            self.stddev.as_secs_f64() * 1e3,
+            self.min.as_secs_f64() * 1e3,
+            self.gbps()
+        )
+    }
+}
+
+pub struct Bench {
+    pub warmup: usize,
+    pub reps: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: 2, reps: 5 }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench { warmup: 1, reps: 3 }
+    }
+
+    /// Time `f`, which processes `bytes` of original data per call.
+    pub fn run<F: FnMut()>(&self, name: &str, bytes: usize, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.reps);
+        for _ in 0..self.reps {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+        }
+        summarize(name, bytes, &samples)
+    }
+}
+
+fn summarize(name: &str, bytes: usize, samples: &[Duration]) -> BenchResult {
+    let n = samples.len().max(1) as f64;
+    let mean_s = samples.iter().map(|d| d.as_secs_f64()).sum::<f64>() / n;
+    let var = samples
+        .iter()
+        .map(|d| (d.as_secs_f64() - mean_s).powi(2))
+        .sum::<f64>()
+        / n;
+    BenchResult {
+        name: name.to_string(),
+        reps: samples.len(),
+        mean: Duration::from_secs_f64(mean_s),
+        stddev: Duration::from_secs_f64(var.sqrt()),
+        min: samples.iter().min().copied().unwrap_or_default(),
+        bytes,
+    }
+}
+
+/// Render a markdown-ish table, used by every bench binary so the output
+/// lines up with the paper's tables.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n## {title}\n");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        let mut s = String::from("| ");
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:<w$} | ", c, w = widths.get(i).copied().unwrap_or(8)));
+        }
+        s
+    };
+    println!("{}", fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>()));
+    println!(
+        "|{}|",
+        widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|")
+    );
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            reps: 1,
+            mean: Duration::from_millis(100),
+            stddev: Duration::ZERO,
+            min: Duration::from_millis(100),
+            bytes: 1_000_000_000,
+        };
+        assert!((r.gbps() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn run_collects_samples() {
+        let b = Bench { warmup: 0, reps: 4 };
+        let mut count = 0usize;
+        let r = b.run("noop", 8, || count += 1);
+        assert_eq!(count, 4);
+        assert_eq!(r.reps, 4);
+    }
+}

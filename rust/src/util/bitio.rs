@@ -1,0 +1,210 @@
+//! Bit-level I/O over u64 words — the deflate/inflate substrate.
+//!
+//! `BitWriter` packs variable-length codewords LSB-first into a `Vec<u64>`;
+//! `BitReader` consumes them in the same order. The hot paths are
+//! branch-light: one shift/or per write plus a spill every 64 bits,
+//! mirroring the barrel-shifter scheme of E2MC that the paper cites (§5.2).
+
+/// LSB-first bit packer.
+#[derive(Debug, Default, Clone)]
+pub struct BitWriter {
+    words: Vec<u64>,
+    /// Bits already used in the trailing partial word.
+    acc: u64,
+    fill: u32,
+    len_bits: u64,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity_bits(bits: usize) -> Self {
+        BitWriter { words: Vec::with_capacity(bits / 64 + 1), ..Default::default() }
+    }
+
+    /// Append the low `n` bits of `value` (n in 0..=57 fast path; up to 64
+    /// supported via the split path).
+    #[inline]
+    pub fn write(&mut self, value: u64, n: u32) {
+        debug_assert!(n <= 64);
+        if n == 0 {
+            return;
+        }
+        let value = if n == 64 { value } else { value & ((1u64 << n) - 1) };
+        self.acc |= value << self.fill;
+        let used = 64 - self.fill;
+        if n >= used {
+            // Spill the filled word; carry the remainder.
+            self.words.push(self.acc);
+            self.acc = if used == 64 { 0 } else { value >> used };
+            self.fill = n - used;
+        } else {
+            self.fill += n;
+        }
+        self.len_bits += n as u64;
+    }
+
+    #[inline]
+    pub fn write_bit(&mut self, bit: bool) {
+        self.write(bit as u64, 1);
+    }
+
+    pub fn len_bits(&self) -> u64 {
+        self.len_bits
+    }
+
+    /// Finish, returning the packed words and total bit count.
+    pub fn finish(mut self) -> (Vec<u64>, u64) {
+        if self.fill > 0 {
+            self.words.push(self.acc);
+        }
+        (self.words, self.len_bits)
+    }
+}
+
+/// LSB-first bit reader over packed words.
+#[derive(Debug, Clone)]
+pub struct BitReader<'a> {
+    words: &'a [u64],
+    pos_bits: u64,
+    len_bits: u64,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(words: &'a [u64], len_bits: u64) -> Self {
+        debug_assert!(len_bits as usize <= words.len() * 64);
+        BitReader { words, pos_bits: 0, len_bits }
+    }
+
+    #[inline]
+    pub fn remaining(&self) -> u64 {
+        self.len_bits - self.pos_bits
+    }
+
+    /// Read `n` bits (LSB-first). Returns None past the end.
+    #[inline]
+    pub fn read(&mut self, n: u32) -> Option<u64> {
+        if n == 0 {
+            return Some(0);
+        }
+        if self.pos_bits + n as u64 > self.len_bits {
+            return None;
+        }
+        let word = (self.pos_bits / 64) as usize;
+        let off = (self.pos_bits % 64) as u32;
+        let mut v = self.words[word] >> off;
+        let got = 64 - off;
+        if n > got {
+            v |= self.words[word + 1] << got;
+        }
+        self.pos_bits += n as u64;
+        Some(if n == 64 { v } else { v & ((1u64 << n) - 1) })
+    }
+
+    #[inline]
+    pub fn read_bit(&mut self) -> Option<bool> {
+        self.read(1).map(|b| b != 0)
+    }
+
+    /// Peek up to `n` bits without consuming (zero-padded past the end).
+    #[inline]
+    pub fn peek(&self, n: u32) -> u64 {
+        debug_assert!(n <= 57);
+        let word = (self.pos_bits / 64) as usize;
+        let off = (self.pos_bits % 64) as u32;
+        if word >= self.words.len() {
+            return 0;
+        }
+        let mut v = self.words[word] >> off;
+        let got = 64 - off;
+        if n > got && word + 1 < self.words.len() {
+            v |= self.words[word + 1] << got;
+        }
+        v & ((1u64 << n) - 1)
+    }
+
+    /// Advance by `n` bits (after a successful peek-decode).
+    #[inline]
+    pub fn skip(&mut self, n: u32) {
+        self.pos_bits += n as u64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn roundtrip_fixed_widths() {
+        let mut w = BitWriter::new();
+        for i in 0..1000u64 {
+            w.write(i, 10);
+        }
+        let (words, bits) = w.finish();
+        assert_eq!(bits, 10_000);
+        let mut r = BitReader::new(&words, bits);
+        for i in 0..1000u64 {
+            assert_eq!(r.read(10), Some(i & 0x3ff));
+        }
+        assert_eq!(r.read(1), None);
+    }
+
+    #[test]
+    fn roundtrip_random_widths() {
+        let mut rng = Rng::new(11);
+        let items: Vec<(u64, u32)> = (0..5000)
+            .map(|_| {
+                let n = 1 + (rng.below(64)) as u32;
+                let v = rng.next_u64() & if n == 64 { u64::MAX } else { (1 << n) - 1 };
+                (v, n)
+            })
+            .collect();
+        let mut w = BitWriter::new();
+        for &(v, n) in &items {
+            w.write(v, n);
+        }
+        let (words, bits) = w.finish();
+        let mut r = BitReader::new(&words, bits);
+        for &(v, n) in &items {
+            assert_eq!(r.read(n), Some(v), "width {n}");
+        }
+    }
+
+    #[test]
+    fn peek_then_skip_equals_read() {
+        let mut w = BitWriter::new();
+        w.write(0xdead_beef_1234, 48);
+        w.write(0x7, 3);
+        let (words, bits) = w.finish();
+        let mut a = BitReader::new(&words, bits);
+        let mut b = BitReader::new(&words, bits);
+        let p = a.peek(20);
+        a.skip(20);
+        assert_eq!(Some(p), b.read(20));
+        assert_eq!(a.read(31), b.read(31));
+    }
+
+    #[test]
+    fn word_boundary_crossing() {
+        let mut w = BitWriter::new();
+        w.write(u64::MAX, 60);
+        w.write(0b1011, 4); // exactly fills word 0
+        w.write(0x5555, 16);
+        let (words, bits) = w.finish();
+        assert_eq!(bits, 80);
+        let mut r = BitReader::new(&words, bits);
+        assert_eq!(r.read(60), Some((1u64 << 60) - 1));
+        assert_eq!(r.read(4), Some(0b1011));
+        assert_eq!(r.read(16), Some(0x5555));
+    }
+
+    #[test]
+    fn empty_writer() {
+        let (words, bits) = BitWriter::new().finish();
+        assert!(words.is_empty());
+        assert_eq!(bits, 0);
+    }
+}

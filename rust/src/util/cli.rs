@@ -1,0 +1,186 @@
+//! Minimal declarative CLI parser (offline substitute for clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, typed
+//! getters with defaults, and auto-generated usage text.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+#[derive(Debug, Clone)]
+struct Spec {
+    name: &'static str,
+    help: &'static str,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+#[derive(Debug, Default)]
+pub struct Cli {
+    program: String,
+    about: &'static str,
+    specs: Vec<Spec>,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(program: &str, about: &'static str) -> Self {
+        Cli { program: program.to_string(), about, ..Default::default() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.specs.push(Spec { name, help, takes_value: true, default: Some(default.to_string()) });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(Spec { name, help, takes_value: true, default: None });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(Spec { name, help, takes_value: false, default: None });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for spec in &self.specs {
+            let mut line = format!("  --{}", spec.name);
+            if spec.takes_value {
+                line.push_str(" <value>");
+            }
+            let _ = write!(s, "{line:<32}{}", spec.help);
+            if let Some(d) = &spec.default {
+                let _ = write!(s, " [default: {d}]");
+            }
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Parse the given args (exclusive of argv[0]).
+    pub fn parse(mut self, args: &[String]) -> Result<Self> {
+        let mut it = args.iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                bail!("{}", self.usage());
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| anyhow!("unknown option --{key}\n\n{}", self.usage()))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| anyhow!("--{key} requires a value"))?
+                            .clone(),
+                    };
+                    self.values.insert(key, val);
+                } else {
+                    if inline_val.is_some() {
+                        bail!("--{key} takes no value");
+                    }
+                    self.flags.push(key);
+                }
+            } else {
+                self.positional.push(a.clone());
+            }
+        }
+        // required options present?
+        for spec in &self.specs {
+            if spec.takes_value && spec.default.is_none() && !self.values.contains_key(spec.name) {
+                bail!("missing required option --{}\n\n{}", spec.name, self.usage());
+            }
+        }
+        Ok(self)
+    }
+
+    pub fn get(&self, name: &str) -> String {
+        if let Some(v) = self.values.get(name) {
+            return v.clone();
+        }
+        self.specs
+            .iter()
+            .find(|s| s.name == name)
+            .and_then(|s| s.default.clone())
+            .unwrap_or_else(|| panic!("option --{name} not declared"))
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.get(name);
+        raw.parse::<T>()
+            .map_err(|e| anyhow!("invalid --{name} '{raw}': {e}"))
+            .context("argument parsing")
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("eb", "1e-4", "error bound")
+            .opt("threads", "0", "worker threads")
+            .flag("verbose", "chatty")
+            .req("input", "input path")
+    }
+
+    #[test]
+    fn parses_values_flags_positional() {
+        let c = cli()
+            .parse(&args(&["--eb", "0.01", "--verbose", "--input=x.bin", "extra"]))
+            .unwrap();
+        assert_eq!(c.get("eb"), "0.01");
+        assert_eq!(c.get("input"), "x.bin");
+        assert!(c.has_flag("verbose"));
+        assert_eq!(c.positional, vec!["extra"]);
+        let eb: f64 = c.get_parsed("eb").unwrap();
+        assert!((eb - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn default_applies() {
+        let c = cli().parse(&args(&["--input", "y"])).unwrap();
+        assert_eq!(c.get("threads"), "0");
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(cli().parse(&args(&["--eb", "1"])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cli().parse(&args(&["--nope", "--input", "y"])).is_err());
+    }
+
+    #[test]
+    fn bad_typed_value_errors() {
+        let c = cli().parse(&args(&["--eb", "zzz", "--input", "y"])).unwrap();
+        assert!(c.get_parsed::<f64>("eb").is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Infrastructure utilities. Several of these replace crates that are not
+//! available in the offline build environment (see DESIGN.md §4):
+//! [`pool`] ~ a bounded-queue worker pool (tokio substitute for this
+//! pipeline's needs), [`cli`] ~ clap, [`bench`] ~ criterion.
+
+pub mod bench;
+pub mod bitio;
+pub mod cli;
+pub mod pool;
+pub mod prng;

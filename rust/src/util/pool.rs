@@ -1,0 +1,153 @@
+//! Worker pool for coarse-grained (chunk-wise) parallelism — the L3
+//! analogue of the paper's "one GPU thread per deflate chunk" scheme, and
+//! the offline substitute for tokio (DESIGN.md §4): std threads, bounded
+//! channels for backpressure, scoped parallel-map helpers.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+
+/// Run `f(i, &items[i])` for every index across `threads` workers and
+/// collect results in order. Work-stealing via an atomic cursor keeps load
+/// balanced when chunk costs vary (tail chunks, zero-heavy blocks).
+pub fn parallel_map<T, R, F>(threads: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let threads = threads.max(1).min(items.len().max(1));
+    if threads <= 1 || items.len() <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let mut out: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+    let out_ptr = SendPtr(out.as_mut_ptr());
+
+    crossbeam_utils::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|_| {
+                let out_ptr = out_ptr; // copy the Send wrapper into the thread
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= items.len() {
+                        break;
+                    }
+                    let r = f(i, &items[i]);
+                    // SAFETY: each index is claimed exactly once by the
+                    // atomic cursor, so writes are disjoint; the scope
+                    // guarantees `out` outlives all workers.
+                    unsafe { *out_ptr.0.add(i) = Some(r) };
+                }
+            });
+        }
+    })
+    .expect("worker panicked");
+
+    out.into_iter().map(|r| r.expect("slot filled")).collect()
+}
+
+/// Like `parallel_map` but over index ranges (avoids materializing items).
+pub fn parallel_map_range<R, F>(threads: usize, n: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let idx: Vec<usize> = (0..n).collect();
+    parallel_map(threads, &idx, |_, &i| f(i))
+}
+
+struct SendPtr<T>(*mut T);
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+// SAFETY: used only for disjoint index writes inside a scope.
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// A bounded pipeline stage: spawns a worker thread that applies `f` to
+/// every item from `rx` and forwards results; the bounded channel provides
+/// backpressure (the paper's streaming-orchestrator role for L3).
+pub struct Stage<O: Send + 'static> {
+    pub rx: Receiver<O>,
+    handle: std::thread::JoinHandle<()>,
+}
+
+impl<O: Send + 'static> Stage<O> {
+    pub fn spawn<I, F>(rx_in: Receiver<I>, depth: usize, name: &str, f: F) -> Self
+    where
+        I: Send + 'static,
+        F: FnMut(I) -> O + Send + 'static,
+    {
+        let (tx, rx) = sync_channel::<O>(depth);
+        let mut f = f;
+        let handle = std::thread::Builder::new()
+            .name(name.to_string())
+            .spawn(move || {
+                for item in rx_in {
+                    if tx.send(f(item)).is_err() {
+                        break; // downstream hung up
+                    }
+                }
+            })
+            .expect("spawn stage");
+        Stage { rx, handle }
+    }
+
+    pub fn join(self) {
+        drop(self.rx);
+        let _ = self.handle.join();
+    }
+}
+
+/// Create the head of a pipeline: a bounded producer channel.
+pub fn bounded<T: Send>(depth: usize) -> (SyncSender<T>, Receiver<T>) {
+    sync_channel(depth)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<u64> = (0..1000).collect();
+        let out = parallel_map(8, &items, |_, &x| x * 2);
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_runs_every_item_once() {
+        let count = AtomicU64::new(0);
+        let items: Vec<u32> = (0..512).collect();
+        parallel_map(4, &items, |_, _| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 512);
+    }
+
+    #[test]
+    fn parallel_map_handles_empty_and_single() {
+        let empty: Vec<u32> = vec![];
+        assert!(parallel_map(8, &empty, |_, &x| x).is_empty());
+        assert_eq!(parallel_map(8, &[42u32], |_, &x| x + 1), vec![43]);
+    }
+
+    #[test]
+    fn staged_pipeline_flows_with_backpressure() {
+        let (tx, rx) = bounded::<u32>(2);
+        let stage1 = Stage::spawn(rx, 2, "double", |x: u32| x * 2);
+        let stage2 = Stage::spawn(stage1.rx, 2, "inc", |x: u32| x + 1);
+        let producer = std::thread::spawn(move || {
+            for i in 0..100 {
+                tx.send(i).unwrap();
+            }
+        });
+        let got: Vec<u32> = stage2.rx.iter().collect();
+        producer.join().unwrap();
+        assert_eq!(got, (0..100).map(|i| i * 2 + 1).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,319 @@
+//! A ZFP-style fixed-rate transform codec — the cuZFP comparison baseline
+//! (paper §5.1, Figures 6-8, Table 5).
+//!
+//! Per 4^d block: exponent alignment → fixed-point i32 → reversible
+//! integer lifting transform along each axis → total-degree coefficient
+//! reordering → negabinary → embedded bit-plane coding with group testing,
+//! truncated at the fixed per-block bit budget (`rate` bits/value). This
+//! follows the published ZFP algorithm [Lindstrom'14]; like cuZFP's CUDA
+//! version it supports only fixed-rate mode — exactly the limitation the
+//! paper exploits in the rate-distortion comparison.
+
+pub mod bitplane;
+pub mod transform;
+
+use anyhow::{bail, Result};
+
+use crate::util::bitio::{BitReader, BitWriter};
+
+/// Fixed-rate ZFP codec over an n-dimensional f32 field.
+#[derive(Debug, Clone, Copy)]
+pub struct Zfp {
+    /// Bits per value (cuZFP's user-set bitrate, e.g. 6, 8, 12, 16).
+    pub rate: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ZfpStream {
+    pub words: Vec<u64>,
+    pub bits: u64,
+    pub dims: Vec<usize>,
+    pub rate: f64,
+}
+
+impl ZfpStream {
+    pub fn compressed_bytes(&self) -> usize {
+        (self.bits as usize).div_ceil(8) + 16 // + tiny header
+    }
+}
+
+impl Zfp {
+    pub fn new(rate: f64) -> Self {
+        Zfp { rate }
+    }
+
+    fn block_elems(ndim: usize) -> usize {
+        4usize.pow(ndim as u32)
+    }
+
+    fn maxbits(&self, ndim: usize) -> usize {
+        ((self.rate * Self::block_elems(ndim) as f64).round() as usize).max(10)
+    }
+
+    pub fn compress(&self, data: &[f32], dims: &[usize]) -> Result<ZfpStream> {
+        let ndim = dims.len();
+        if !(1..=3).contains(&ndim) {
+            bail!("zfp supports 1..=3 dims (fold 4D first)");
+        }
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            bail!("dims/data mismatch");
+        }
+        let maxbits = self.maxbits(ndim);
+        let mut w = BitWriter::new();
+        let mut block = vec![0f32; Self::block_elems(ndim)];
+        for_each_block(dims, |origin| {
+            gather_block(data, dims, origin, &mut block);
+            encode_block(&block, ndim, maxbits, &mut w);
+        });
+        let (words, bits) = w.finish();
+        Ok(ZfpStream { words, bits, dims: dims.to_vec(), rate: self.rate })
+    }
+
+    pub fn decompress(&self, stream: &ZfpStream) -> Result<Vec<f32>> {
+        let dims = &stream.dims;
+        let ndim = dims.len();
+        let n: usize = dims.iter().product();
+        let maxbits = self.maxbits(ndim);
+        let mut out = vec![0f32; n];
+        let mut r = BitReader::new(&stream.words, stream.words.len() as u64 * 64);
+        let mut block = vec![0f32; Self::block_elems(ndim)];
+        let mut ok = true;
+        for_each_block(dims, |origin| {
+            if !ok {
+                return;
+            }
+            if decode_block(&mut r, ndim, maxbits, &mut block).is_err() {
+                ok = false;
+                return;
+            }
+            scatter_block(&mut out, dims, origin, &block);
+        });
+        if !ok {
+            bail!("zfp stream truncated");
+        }
+        Ok(out)
+    }
+}
+
+/// Visit every 4-aligned block origin (row-major order).
+fn for_each_block(dims: &[usize], mut f: impl FnMut(&[usize])) {
+    let counts: Vec<usize> = dims.iter().map(|d| d.div_ceil(4)).collect();
+    let total: usize = counts.iter().product();
+    let mut origin = vec![0usize; dims.len()];
+    for flat in 0..total {
+        let mut rem = flat;
+        for ax in (0..dims.len()).rev() {
+            origin[ax] = (rem % counts[ax]) * 4;
+            rem /= counts[ax];
+        }
+        f(&origin);
+    }
+}
+
+/// Gather a 4^d block with edge replication (zfp's partial-block handling).
+fn gather_block(data: &[f32], dims: &[usize], origin: &[usize], block: &mut [f32]) {
+    let nd = dims.len();
+    let strides = strides_of(dims);
+    let side = 4usize;
+    let n = block.len();
+    for bi in 0..n {
+        let mut rem = bi;
+        let mut off = 0usize;
+        for ax in (0..nd).rev() {
+            let c = rem % side;
+            rem /= side;
+            let pos = (origin[ax] + c).min(dims[ax] - 1); // replicate edge
+            off += pos * strides[ax];
+        }
+        block[bi] = data[off];
+    }
+}
+
+fn scatter_block(out: &mut [f32], dims: &[usize], origin: &[usize], block: &[f32]) {
+    let nd = dims.len();
+    let strides = strides_of(dims);
+    let side = 4usize;
+    for (bi, &v) in block.iter().enumerate() {
+        let mut rem = bi;
+        let mut off = 0usize;
+        let mut in_range = true;
+        for ax in (0..nd).rev() {
+            let c = rem % side;
+            rem /= side;
+            let pos = origin[ax] + c;
+            if pos >= dims[ax] {
+                in_range = false;
+                break;
+            }
+            off += pos * strides[ax];
+        }
+        if in_range {
+            out[off] = v;
+        }
+    }
+}
+
+fn strides_of(dims: &[usize]) -> Vec<usize> {
+    let nd = dims.len();
+    let mut s = vec![1usize; nd];
+    for ax in (0..nd.saturating_sub(1)).rev() {
+        s[ax] = s[ax + 1] * dims[ax + 1];
+    }
+    s
+}
+
+/// Exponent of the block maximum (None for an all-zero block).
+fn block_emax(block: &[f32]) -> Option<i32> {
+    let m = block.iter().fold(0f32, |a, &b| a.max(b.abs()));
+    if m == 0.0 || !m.is_finite() {
+        return None;
+    }
+    Some(((m.to_bits() >> 23) & 0xff) as i32 - 127)
+}
+
+fn encode_block(block: &[f32], ndim: usize, maxbits: usize, w: &mut BitWriter) {
+    let start = w.len_bits();
+    match block_emax(block) {
+        None => w.write_bit(false), // all-zero block: 1 bit
+        Some(emax) => {
+            w.write_bit(true);
+            w.write((emax + 127) as u64, 8);
+            // fixed point: scale so the max lands in [2^28, 2^29)
+            let scale = exp2i(28 - emax);
+            let mut q: Vec<i32> = block.iter().map(|&x| (x * scale) as i32).collect();
+            transform::forward(&mut q, ndim);
+            let perm = transform::perm(ndim);
+            let nb: Vec<u32> = perm.iter().map(|&i| negabinary(q[i])).collect();
+            let used = (w.len_bits() - start) as usize;
+            bitplane::encode_ints(&nb, maxbits.saturating_sub(used), w);
+        }
+    }
+    // pad to exactly maxbits (fixed rate => random access per block)
+    let used = (w.len_bits() - start) as usize;
+    debug_assert!(used <= maxbits);
+    let mut pad = maxbits - used;
+    while pad > 0 {
+        let n = pad.min(57);
+        w.write(0, n as u32);
+        pad -= n;
+    }
+}
+
+fn decode_block(r: &mut BitReader, ndim: usize, maxbits: usize, block: &mut [f32]) -> Result<()> {
+    let start_rem = r.remaining();
+    if (start_rem as usize) < maxbits {
+        bail!("truncated");
+    }
+    let nonzero = r.read_bit().ok_or_else(|| anyhow::anyhow!("eof"))?;
+    if !nonzero {
+        block.fill(0.0);
+    } else {
+        let emax = r.read(8).ok_or_else(|| anyhow::anyhow!("eof"))? as i32 - 127;
+        let used = (start_rem - r.remaining()) as usize;
+        let mut nb = vec![0u32; block.len()];
+        bitplane::decode_ints(&mut nb, maxbits.saturating_sub(used), r);
+        let perm = transform::perm(ndim);
+        let mut q = vec![0i32; block.len()];
+        for (pi, &srci) in perm.iter().enumerate() {
+            q[srci] = from_negabinary(nb[pi]);
+        }
+        transform::inverse(&mut q, ndim);
+        let scale = exp2i(emax - 28);
+        for (o, &v) in block.iter_mut().zip(&q) {
+            *o = v as f32 * scale;
+        }
+    }
+    // consume padding up to maxbits
+    let used = (start_rem - r.remaining()) as usize;
+    if used < maxbits {
+        r.skip((maxbits - used) as u32);
+    }
+    Ok(())
+}
+
+/// 2^e as f32 (exact for |e| < 127).
+fn exp2i(e: i32) -> f32 {
+    f32::from_bits((((e + 127).clamp(1, 254)) as u32) << 23)
+}
+
+const NBMASK: u32 = 0xaaaa_aaaa;
+
+#[inline]
+fn negabinary(x: i32) -> u32 {
+    ((x as u32).wrapping_add(NBMASK)) ^ NBMASK
+}
+
+#[inline]
+fn from_negabinary(u: u32) -> i32 {
+    ((u ^ NBMASK).wrapping_sub(NBMASK)) as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::psnr;
+    use crate::testkit::fields::{make, Regime};
+
+    #[test]
+    fn negabinary_roundtrip() {
+        for x in [-5i32, -1, 0, 1, 7, i32::MAX / 2, i32::MIN / 2] {
+            assert_eq!(from_negabinary(negabinary(x)), x);
+        }
+    }
+
+    #[test]
+    fn high_rate_is_near_lossless() {
+        let data = make(Regime::Smooth, 64 * 64, 11);
+        let z = Zfp::new(30.0);
+        let s = z.compress(&data, &[64, 64]).unwrap();
+        let out = z.decompress(&s).unwrap();
+        let p = psnr(&data, &out);
+        assert!(p > 90.0, "psnr {p}");
+    }
+
+    #[test]
+    fn rate_controls_size_exactly() {
+        let data = make(Regime::Noisy, 4096, 12);
+        for rate in [4.0, 8.0, 16.0] {
+            let z = Zfp::new(rate);
+            let s = z.compress(&data, &[4096]).unwrap();
+            let expect_bits = (4096 / 4) * z.maxbits(1);
+            assert_eq!(s.bits as usize, expect_bits, "rate {rate}");
+        }
+    }
+
+    #[test]
+    fn quality_improves_with_rate() {
+        let data = make(Regime::Smooth, 32 * 32 * 32, 13);
+        let dims = [32usize, 32, 32];
+        let mut last = 0.0;
+        for rate in [2.0, 4.0, 8.0, 16.0] {
+            let z = Zfp::new(rate);
+            let out = z.decompress(&z.compress(&data, &dims).unwrap()).unwrap();
+            let p = psnr(&data, &out);
+            assert!(p > last, "rate {rate}: psnr {p} <= {last}");
+            last = p;
+        }
+        assert!(last > 60.0, "16-bit rate should be high quality: {last}");
+    }
+
+    #[test]
+    fn non_multiple_of_four_dims() {
+        let data = make(Regime::Smooth, 33 * 35, 14);
+        let z = Zfp::new(8.0);
+        let s = z.compress(&data, &[33, 35]).unwrap();
+        let out = z.decompress(&s).unwrap();
+        assert_eq!(out.len(), data.len());
+        let p = psnr(&data, &out);
+        assert!(p > 25.0, "psnr {p}");
+    }
+
+    #[test]
+    fn all_zero_blocks_cost_header_only_quality() {
+        let data = vec![0f32; 4096];
+        let z = Zfp::new(8.0);
+        let out = z.decompress(&z.compress(&data, &[4096]).unwrap()).unwrap();
+        assert_eq!(out, data);
+    }
+}

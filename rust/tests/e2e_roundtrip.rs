@@ -1,0 +1,128 @@
+//! End-to-end integration: full coordinator round trips over synthetic
+//! SDRBench-like fields on both backends, archive byte-stream round trips,
+//! and PJRT-vs-CPU archive equivalence (both must produce the *same
+//! compressed bytes* because dual-quant is bit-exact across backends).
+
+use cusz::config::{BackendKind, CuszConfig, ErrorBound, LosslessStage};
+use cusz::container::Archive;
+use cusz::coordinator::Coordinator;
+use cusz::datagen::{self, Dataset};
+use cusz::metrics;
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.tsv")
+        .exists()
+}
+
+fn cfg(backend: BackendKind) -> CuszConfig {
+    CuszConfig {
+        backend,
+        eb: ErrorBound::ValRel(1e-4),
+        artifacts_dir: std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn cpu_roundtrip_every_dataset() {
+    let coord = Coordinator::new(cfg(BackendKind::Cpu)).unwrap();
+    for ds in Dataset::ALL {
+        let fname = ds.field_names()[0];
+        let field = datagen::generate(ds, fname, 42);
+        let (archive, stats) = coord.compress_with_stats(&field).unwrap();
+        let out = coord.decompress(&archive).unwrap();
+        assert_eq!(out.dims, field.dims);
+        assert_eq!(
+            metrics::verify_error_bound(&field.data, &out.data, archive.header.abs_eb),
+            None,
+            "{}/{}",
+            ds.name(),
+            fname
+        );
+        assert!(stats.compression_ratio() > 1.0, "{}: CR {}", ds.name(), stats.compression_ratio());
+    }
+}
+
+#[test]
+fn pjrt_roundtrip_and_archive_equivalence() {
+    if !have_artifacts() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let pjrt = Coordinator::new(cfg(BackendKind::Pjrt)).unwrap();
+    let cpu = Coordinator::new(cfg(BackendKind::Cpu)).unwrap();
+    for (ds, fname) in [
+        (Dataset::CesmAtm, "CLDHGH"),
+        (Dataset::Hurricane, "CLOUDf48"),
+        (Dataset::Nyx, "baryon_density"),
+    ] {
+        let field = datagen::generate(ds, fname, 7);
+        let (a_pjrt, _) = pjrt.compress_with_stats(&field).unwrap();
+        let (a_cpu, _) = cpu.compress_with_stats(&field).unwrap();
+        // bit-exact dual-quant => identical archives
+        assert_eq!(a_pjrt.to_bytes(), a_cpu.to_bytes(), "{}/{}", ds.name(), fname);
+
+        let out = pjrt.decompress(&a_pjrt).unwrap();
+        assert_eq!(
+            metrics::verify_error_bound(&field.data, &out.data, a_pjrt.header.abs_eb),
+            None
+        );
+        // cross-decompression: CPU can decode a PJRT archive
+        let out2 = cpu.decompress(&a_pjrt).unwrap();
+        assert_eq!(out.data, out2.data);
+    }
+}
+
+#[test]
+fn lossless_stage_shrinks_or_preserves() {
+    let field = datagen::generate(Dataset::Hurricane, "QICEf48", 3);
+    for stage in [LosslessStage::Gzip, LosslessStage::Zstd] {
+        let mut c = cfg(BackendKind::Cpu);
+        c.lossless = stage;
+        let coord = Coordinator::new(c).unwrap();
+        let archive = coord.compress(&field).unwrap();
+        let bytes = archive.to_bytes();
+        let restored = Archive::from_bytes(&bytes).unwrap();
+        let out = coord.decompress(&restored).unwrap();
+        assert_eq!(
+            metrics::verify_error_bound(&field.data, &out.data, archive.header.abs_eb),
+            None,
+            "{stage:?}"
+        );
+    }
+}
+
+#[test]
+fn file_roundtrip() {
+    let field = datagen::generate(Dataset::CesmAtm, "PS", 11);
+    let coord = Coordinator::new(cfg(BackendKind::Cpu)).unwrap();
+    let archive = coord.compress(&field).unwrap();
+    let path = std::env::temp_dir().join("cusz_e2e_test.cusza");
+    std::fs::write(&path, archive.to_bytes()).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let restored = Archive::from_bytes(&bytes).unwrap();
+    assert_eq!(restored.header.field_name, field.name);
+    let out = coord.decompress(&restored).unwrap();
+    assert_eq!(metrics::verify_error_bound(&field.data, &out.data, restored.header.abs_eb), None);
+}
+
+#[test]
+fn dict_size_sweep_cpu() {
+    // Table 3's dict-size knob: CPU backend accepts non-default sizes.
+    let field = datagen::generate(Dataset::CesmAtm, "CLDHGH", 21);
+    for dict in [256usize, 1024, 4096] {
+        let mut c = cfg(BackendKind::Cpu);
+        c.dict_size = dict;
+        let coord = Coordinator::new(c).unwrap();
+        let (archive, _) = coord.compress_with_stats(&field).unwrap();
+        assert_eq!(archive.header.dict_size, dict);
+        let out = coord.decompress(&archive).unwrap();
+        assert_eq!(
+            metrics::verify_error_bound(&field.data, &out.data, archive.header.abs_eb),
+            None,
+            "dict {dict}"
+        );
+    }
+}

@@ -1,0 +1,92 @@
+//! Integration: the PJRT path (AOT HLO executables) must be **bit-exact**
+//! with the pure-Rust CPU mirror on every variant — the L1↔L3 contract.
+//!
+//! Requires `make artifacts`; tests skip (with a note) when absent.
+
+use std::path::PathBuf;
+
+use cusz::runtime::{ArtifactManifest, CpuEngine, QuantEngine};
+use cusz::util::prng::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.tsv").exists().then_some(dir)
+}
+
+fn field_for(spec: &cusz::sz::blocks::SlabSpec, seed: u64, style: &str) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let n = spec.len();
+    match style {
+        "smooth" => {
+            let mut acc = 0f32;
+            (0..n)
+                .map(|_| {
+                    acc += rng.normal() * 0.02;
+                    acc
+                })
+                .collect()
+        }
+        "zeros" => (0..n)
+            .map(|_| if rng.f32() < 0.03 { rng.normal() * 100.0 } else { 0.0 })
+            .collect(),
+        _ => (0..n).map(|_| rng.normal() * 10.0).collect(),
+    }
+}
+
+#[test]
+fn pjrt_matches_cpu_bit_exact_all_variants() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    };
+    let manifest = ArtifactManifest::load(&dir).unwrap();
+    let pjrt = cusz::runtime::pjrt::PjrtEngine::start(manifest.clone()).unwrap();
+    let cpu = CpuEngine { dict_size: manifest.dict_size() };
+
+    for meta in manifest.executables.iter().filter(|e| e.op == "compress") {
+        let spec = meta.slab_spec();
+        if spec.len() > 1 << 20 {
+            continue; // keep CI time bounded; big slabs covered by 1d_1m
+        }
+        for (i, style) in ["smooth", "noisy", "zeros"].iter().enumerate() {
+            let data = field_for(&spec, 1000 + i as u64, style);
+            let eb = 1e-3f32;
+            let d_pjrt = pjrt.compress_slab(&spec, &data, eb).unwrap();
+            let d_cpu = cpu.compress_slab(&spec, &data, eb).unwrap();
+            assert_eq!(d_pjrt, d_cpu, "delta mismatch {} {style}", meta.variant);
+
+            let r_pjrt = pjrt.decompress_slab(&spec, &d_pjrt, eb).unwrap();
+            let r_cpu = cpu.decompress_slab(&spec, &d_cpu, eb).unwrap();
+            assert_eq!(r_pjrt, r_cpu, "recon mismatch {} {style}", meta.variant);
+
+            // and the reconstruction honors the bound
+            assert_eq!(
+                cusz::metrics::verify_error_bound(&data, &r_pjrt, eb),
+                None,
+                "error bound violated on {} {style}",
+                meta.variant
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_device_histogram_matches_cpu() {
+    // The paper's §3.2.1 device histogram kernel, exported standalone.
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    };
+    let manifest = ArtifactManifest::load(&dir).unwrap();
+    let meta = manifest.find("histogram", "2d_256").unwrap().clone();
+    let spec = meta.slab_spec();
+    let dict = manifest.dict_size();
+    let pjrt = cusz::runtime::pjrt::PjrtEngine::start(manifest).unwrap();
+    let cpu = CpuEngine { dict_size: dict };
+    let mut rng = Rng::new(77);
+    let codes: Vec<i32> = (0..spec.len()).map(|_| rng.below(dict as u64) as i32).collect();
+    let h_dev = pjrt.device_histogram(&spec, &codes, dict).unwrap();
+    let h_cpu = cpu.device_histogram(&spec, &codes, dict).unwrap();
+    assert_eq!(h_dev, h_cpu);
+    assert_eq!(h_dev.iter().map(|&h| h as usize).sum::<usize>(), spec.len());
+}

@@ -1,0 +1,147 @@
+//! Property-based integration tests (testkit::prop): coordinator
+//! invariants over randomized shapes, error bounds, and data regimes —
+//! the L3 analogue of the python hypothesis suite.
+
+use cusz::config::{BackendKind, CuszConfig, ErrorBound};
+use cusz::coordinator::Coordinator;
+use cusz::field::Field;
+use cusz::huffman::{self, CanonicalCodebook, ReverseCodebook};
+use cusz::metrics;
+use cusz::testkit::prop::{check, gen};
+use cusz::util::prng::Rng;
+
+fn coordinator(eb: f64) -> Coordinator {
+    Coordinator::new(CuszConfig {
+        backend: BackendKind::Cpu,
+        eb: ErrorBound::Abs(eb),
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+fn random_field(rng: &mut Rng) -> (Field, f64) {
+    let ndim = gen::usize_in(rng, 1, 3);
+    let dims: Vec<usize> = (0..ndim).map(|_| gen::usize_in(rng, 5, 90)).collect();
+    let n: usize = dims.iter().product();
+    let scale = *gen::pick(rng, &[1e-3f32, 1.0, 100.0]);
+    let mut data = gen::f32_vec(rng, n, scale);
+    // random smoothing pass to vary predictability
+    if rng.f32() < 0.5 {
+        for i in 1..data.len() {
+            data[i] = data[i - 1] + data[i] * 0.1;
+        }
+    }
+    let eb = *gen::pick(rng, &[1e-1f64, 1e-2, 1e-3]) * scale as f64;
+    (Field::new("prop", dims, data).unwrap(), eb)
+}
+
+#[test]
+fn prop_roundtrip_error_bound() {
+    check("coordinator roundtrip obeys eb", |rng| {
+        let (field, eb) = random_field(rng);
+        let coord = coordinator(eb);
+        let archive = coord.compress(&field).map_err(|e| e.to_string())?;
+        let out = coord.decompress(&archive).map_err(|e| e.to_string())?;
+        if out.dims != field.dims {
+            return Err("dims mismatch".into());
+        }
+        match metrics::verify_error_bound(&field.data, &out.data, eb as f32) {
+            None => Ok(()),
+            Some(i) => Err(format!(
+                "bound violated at {i}: {} vs {} (eb {eb})",
+                field.data[i], out.data[i]
+            )),
+        }
+    });
+}
+
+#[test]
+fn prop_archive_bytes_roundtrip() {
+    check("archive serialization is lossless", |rng| {
+        let (field, eb) = random_field(rng);
+        let coord = coordinator(eb);
+        let a = coord.compress(&field).map_err(|e| e.to_string())?;
+        let b = cusz::container::Archive::from_bytes(&a.to_bytes()).map_err(|e| e.to_string())?;
+        if a != b {
+            return Err("archive != from_bytes(to_bytes(archive))".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_huffman_roundtrip_random_distributions() {
+    check("huffman deflate/inflate identity", |rng| {
+        let dict = *gen::pick(rng, &[16usize, 256, 1024]);
+        let n = gen::usize_in(rng, 1, 30_000);
+        // mixture: sometimes uniform, sometimes highly skewed
+        let skew = rng.f32() < 0.5;
+        let syms: Vec<u16> = (0..n)
+            .map(|_| {
+                if skew {
+                    let z = (rng.normal().abs() * (dict as f32) / 20.0) as usize;
+                    z.min(dict - 1) as u16
+                } else {
+                    rng.below(dict as u64) as u16
+                }
+            })
+            .collect();
+        let hist = huffman::histogram(&syms, dict);
+        let freq: Vec<u64> = hist.iter().map(|&c| c as u64).collect();
+        let lengths = huffman::build_lengths(&freq);
+        let book = CanonicalCodebook::from_lengths(&lengths).map_err(|e| e.to_string())?;
+        let rev = ReverseCodebook::from_lengths(&lengths).map_err(|e| e.to_string())?;
+        let chunk = *gen::pick(rng, &[64usize, 1000, 4096]);
+        let stream = huffman::deflate_chunks(&syms, &book, chunk, 4);
+        let out =
+            huffman::inflate::inflate_chunks_strict(&stream, &rev, 4).map_err(|e| e.to_string())?;
+        if out != syms {
+            return Err("symbol stream mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_zfp_rate_size_and_monotonicity() {
+    check("zfp fixed rate gives fixed size", |rng| {
+        let ndim = gen::usize_in(rng, 1, 3);
+        let dims: Vec<usize> = (0..ndim).map(|_| gen::usize_in(rng, 4, 40)).collect();
+        let n: usize = dims.iter().product();
+        let data = gen::f32_vec(rng, n, 10.0);
+        let rate = *gen::pick(rng, &[4.0f64, 8.0, 16.0]);
+        let z = cusz::zfp::Zfp::new(rate);
+        let s = z.compress(&data, &dims).map_err(|e| e.to_string())?;
+        let blocks: usize = dims.iter().map(|d| d.div_ceil(4)).product();
+        let per_block = s.bits as usize / blocks;
+        // fixed rate: every block gets the same bit budget
+        if s.bits as usize % blocks != 0 {
+            return Err(format!("bits {} not divisible by {blocks} blocks", s.bits));
+        }
+        let _ = per_block;
+        let out = z.decompress(&s).map_err(|e| e.to_string())?;
+        if out.len() != n {
+            return Err("length mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_classic_sz_bound() {
+    check("classic SZ honors eb", |rng| {
+        let ndim = gen::usize_in(rng, 1, 3);
+        let dims: Vec<usize> = (0..ndim).map(|_| gen::usize_in(rng, 4, 30)).collect();
+        let n: usize = dims.iter().product();
+        let data = gen::f32_vec(rng, n, 5.0);
+        let eb = 1e-2f32;
+        let c = cusz::sz::classic::compress(&data, &dims, eb, 1024);
+        let out = cusz::sz::classic::decompress(&c, eb, 1024);
+        for (i, (a, b)) in data.iter().zip(&out).enumerate() {
+            if (a - b).abs() > eb * 1.0001 + 4.0 * f32::EPSILON * a.abs() {
+                return Err(format!("violation at {i}: {a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
