@@ -1,0 +1,77 @@
+//! Batched streaming compression service, end to end:
+//!
+//! 1. build one shared `Coordinator` (narrow per-job threading);
+//! 2. stream a simulated multi-field snapshot through `BatchCompressor`
+//!    (bounded worker pipeline with backpressure) into a sharded
+//!    `.cuszb` bundle;
+//! 3. list the bundle, then random-access a single field — decompress and
+//!    verify its error bound without touching sibling payloads.
+//!
+//! Run: `cargo run --release --example batch_service`
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use cusz::config::{BackendKind, CuszConfig, ErrorBound};
+use cusz::coordinator::Coordinator;
+use cusz::datagen::{self, Dataset};
+use cusz::field::Field;
+use cusz::metrics;
+use cusz::serve::{BatchCompressor, BatchConfig};
+use cusz::store::Store;
+
+fn main() -> Result<()> {
+    // a snapshot: every Hurricane field plus the CESM fields
+    let mut snapshot: Vec<Field> = Vec::new();
+    for ds in [Dataset::Hurricane, Dataset::CesmAtm] {
+        for name in ds.field_names() {
+            snapshot.push(datagen::generate(ds, name, 42));
+        }
+    }
+    let total_mb: f64 = snapshot.iter().map(|f| f.size_bytes() as f64).sum::<f64>() / 1e6;
+    println!("snapshot: {} fields, {total_mb:.1} MB", snapshot.len());
+
+    let coord = Arc::new(Coordinator::new_with_fallback(CuszConfig {
+        backend: BackendKind::Cpu,
+        eb: ErrorBound::ValRel(1e-4),
+        threads: 2, // per-job; the batch layer supplies job concurrency
+        ..Default::default()
+    })?);
+
+    let dir = std::env::temp_dir().join(format!("batch-service-{}.cuszb", std::process::id()));
+    let mut store = Store::create(&dir, 4)?;
+    let batch = BatchCompressor::new(Arc::clone(&coord), BatchConfig::default());
+    let verify_name = snapshot[3].name.clone();
+    let original = snapshot[3].clone();
+
+    let stats = batch.run_into_store(snapshot, &mut store)?;
+    println!("\n--- service ---\n{}", stats.report());
+
+    println!("\n--- bundle ---");
+    for e in store.list() {
+        println!(
+            "  {:<28} shard {}  {:>9} bytes  CR {:>6.1}x",
+            e.name,
+            e.shard,
+            e.len,
+            e.compression_ratio()
+        );
+    }
+
+    // random access: one seek + one read + one decompress
+    println!("\n--- random access: {verify_name} ---");
+    let archive = store.get(&verify_name)?;
+    let restored = coord.decompress(&archive)?;
+    let psnr = metrics::psnr(&original.data, &restored.data);
+    match metrics::verify_error_bound(&original.data, &restored.data, archive.header.abs_eb) {
+        None => println!(
+            "  bound {:.3e} RESPECTED, PSNR {psnr:.2} dB, dims {:?}",
+            archive.header.abs_eb, restored.dims
+        ),
+        Some(i) => anyhow::bail!("error bound violated at index {i}"),
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}

@@ -1,0 +1,112 @@
+//! Batched-pipeline vs sequential-loop throughput over a multi-field
+//! snapshot — the serving-shaped face of the paper's Figure 5 tables:
+//! does job-level fan-out (serve::BatchCompressor, narrow per-job
+//! threading) beat one field at a time with full internal parallelism?
+//!
+//! CUSZ_BENCH_QUICK=1 shrinks the snapshot for smoke runs.
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use cusz::config::{BackendKind, CuszConfig, ErrorBound};
+use cusz::coordinator::Coordinator;
+use cusz::datagen::{self, Dataset};
+use cusz::field::Field;
+use cusz::serve::{BatchCompressor, BatchConfig};
+use cusz::store::Store;
+use cusz::testkit::tmp_dir;
+
+fn snapshot(quick: bool) -> Vec<Field> {
+    let mut fields = Vec::new();
+    let specs: &[(Dataset, u64)] = if quick {
+        &[(Dataset::CesmAtm, 1), (Dataset::Hurricane, 1)]
+    } else {
+        &[
+            (Dataset::CesmAtm, 1),
+            (Dataset::CesmAtm, 2),
+            (Dataset::Hurricane, 1),
+            (Dataset::Hurricane, 2),
+            (Dataset::Nyx, 1),
+        ]
+    };
+    for &(ds, seed) in specs {
+        for name in ds.field_names() {
+            let mut f = datagen::generate(ds, name, seed);
+            f.name = format!("{}@{}", f.name, seed);
+            fields.push(f);
+        }
+    }
+    fields
+}
+
+fn coordinator(threads: usize) -> Arc<Coordinator> {
+    Arc::new(
+        Coordinator::new(CuszConfig {
+            backend: BackendKind::Cpu,
+            eb: ErrorBound::ValRel(1e-4),
+            threads,
+            ..Default::default()
+        })
+        .unwrap(),
+    )
+}
+
+fn main() {
+    let quick = common::quick();
+    let fields = snapshot(quick);
+    let total_bytes: usize = fields.iter().map(|f| f.size_bytes()).sum();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    println!(
+        "batch throughput: {} fields, {:.1} MB total, {cores} cores",
+        fields.len(),
+        total_bytes as f64 / 1e6
+    );
+
+    // --- sequential loop: one field at a time, full internal threading --
+    let seq_dir = tmp_dir("bench-seq");
+    let seq_coord = coordinator(0); // all cores inside each job
+    let mut seq_store = Store::create(&seq_dir, 4).unwrap();
+    let t0 = Instant::now();
+    for f in &fields {
+        let archive = seq_coord.compress(f).expect("sequential compress");
+        seq_store.add(&archive).expect("sequential store add");
+    }
+    let seq_secs = t0.elapsed().as_secs_f64();
+
+    // --- batched pipeline: job-level fan-out, narrow per-job threading --
+    let batch_dir = tmp_dir("bench-batch");
+    let batch_coord = coordinator(1);
+    let mut batch_store = Store::create(&batch_dir, 4).unwrap();
+    let batch = BatchCompressor::new(
+        Arc::clone(&batch_coord),
+        BatchConfig { workers: cores, queue_depth: 4 },
+    );
+    let stats = batch
+        .run_into_store(fields.clone(), &mut batch_store)
+        .expect("batched run");
+    let batch_secs = stats.wall_seconds;
+
+    assert_eq!(batch_store.len(), seq_store.len());
+    let seq_gbps = common::gbps(total_bytes, seq_secs);
+    let batch_gbps = common::gbps(total_bytes, batch_secs);
+    println!(
+        "{:<42} {:>10.3} s  {:>9.3} GB/s",
+        "sequential loop (threads=all)", seq_secs, seq_gbps
+    );
+    println!(
+        "{:<42} {:>10.3} s  {:>9.3} GB/s",
+        format!("batched pipeline (workers={cores})"),
+        batch_secs,
+        batch_gbps
+    );
+    println!(
+        "batched vs sequential: {:.2}x  (service CR {:.2}x)",
+        batch_gbps / seq_gbps.max(1e-12),
+        stats.compression_ratio()
+    );
+
+    std::fs::remove_dir_all(&seq_dir).ok();
+    std::fs::remove_dir_all(&batch_dir).ok();
+}

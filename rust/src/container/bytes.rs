@@ -68,12 +68,21 @@ impl<'a> ByteReader<'a> {
     }
 
     pub fn take(&mut self, n: usize) -> Result<Vec<u8>> {
-        if self.pos + n > self.buf.len() {
-            bail!("archive truncated: need {n} bytes at {}", self.pos);
+        // checked_add: n comes from untrusted length fields and may be
+        // near usize::MAX after corruption
+        match self.pos.checked_add(n) {
+            Some(end) if end <= self.buf.len() => {
+                let out = self.buf[self.pos..end].to_vec();
+                self.pos = end;
+                Ok(out)
+            }
+            _ => bail!("archive truncated: need {n} bytes at {}", self.pos),
         }
-        let out = self.buf[self.pos..self.pos + n].to_vec();
-        self.pos += n;
-        Ok(out)
+    }
+
+    /// Bytes left to read — the sanity bound for untrusted element counts.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
     }
 
     fn arr<const N: usize>(&mut self) -> Result<[u8; N]> {
@@ -130,7 +139,8 @@ impl<'a> ByteReader<'a> {
 
 /// CRC-32 (IEEE), table-driven.
 pub fn crc32(data: &[u8]) -> u32 {
-    static TABLE: once_cell::sync::Lazy<[u32; 256]> = once_cell::sync::Lazy::new(|| {
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    let table = TABLE.get_or_init(|| {
         let mut t = [0u32; 256];
         for (i, e) in t.iter_mut().enumerate() {
             let mut c = i as u32;
@@ -143,7 +153,7 @@ pub fn crc32(data: &[u8]) -> u32 {
     });
     let mut c = !0u32;
     for &b in data {
-        c = TABLE[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
+        c = table[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
     }
     !c
 }

@@ -87,8 +87,18 @@ impl Header {
             bail!("bad ndim {nd}");
         }
         let mut dims = Vec::with_capacity(nd);
+        let mut product: u64 = 1;
         for _ in 0..nd {
-            dims.push(r.u64()? as usize);
+            let d = r.u64()?;
+            // bound the claimed shape (≤ 2^33 elements ≈ 34 GB of f32):
+            // downstream allocation caps are derived from it
+            product = product
+                .saturating_mul(d.max(1))
+                .min(1 << 34);
+            if d > 1 << 33 || product > 1 << 33 {
+                bail!("implausible field dims (> 2^33 elements)");
+            }
+            dims.push(d as usize);
         }
         let variant = r.str()?;
         let eb = match r.u8()? {

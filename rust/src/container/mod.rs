@@ -84,6 +84,26 @@ impl Archive {
         w.finish()
     }
 
+    /// Parse only the header from serialized archive bytes — the cheap
+    /// "payload framing" read the multi-field store uses for indexing and
+    /// `ls` without touching the (possibly much larger) body section.
+    pub fn peek_header(data: &[u8]) -> Result<Header> {
+        let mut r = ByteReader::new(data);
+        let magic = r.take(8)?;
+        if magic != MAGIC {
+            bail!("not a cusza archive (bad magic)");
+        }
+        let header_bytes = r.section().context("header section")?;
+        Header::from_bytes(&header_bytes)
+    }
+
+    /// CRC32 digest of the serialized header — stored per entry in the
+    /// `.cuszb` footer index so `Store::get` can detect a payload that was
+    /// swapped or rewritten since indexing.
+    pub fn header_digest(&self) -> u32 {
+        bytes::crc32(&self.header.to_bytes())
+    }
+
     pub fn from_bytes(data: &[u8]) -> Result<Archive> {
         let mut r = ByteReader::new(data);
         let magic = r.take(8)?;
@@ -94,29 +114,57 @@ impl Archive {
         let header = Header::from_bytes(&header_bytes)?;
 
         let body_raw = r.section().context("body section")?;
+        // Cap the decompressed body so a crafted gzip/zstd bomb fails
+        // cleanly instead of allocating without bound: a legitimate body
+        // is linear in the element count the header itself declares.
+        let cap = decompressed_body_cap(&header);
         let body_bytes = match header.lossless {
             LosslessTag::None => body_raw,
             LosslessTag::Gzip => {
                 use flate2::read::GzDecoder;
                 use std::io::Read;
                 let mut out = Vec::new();
-                GzDecoder::new(&body_raw[..]).read_to_end(&mut out).context("gunzip")?;
+                GzDecoder::new(&body_raw[..])
+                    .take(cap + 1)
+                    .read_to_end(&mut out)
+                    .context("gunzip")?;
+                if out.len() as u64 > cap {
+                    bail!("corrupt archive: decompressed body exceeds {cap}-byte cap");
+                }
                 out
             }
-            LosslessTag::Zstd => zstd::decode_all(&body_raw[..]).context("unzstd")?,
+            LosslessTag::Zstd => {
+                use std::io::Read;
+                let dec = zstd::stream::read::Decoder::new(&body_raw[..]).context("unzstd")?;
+                let mut out = Vec::new();
+                dec.take(cap + 1).read_to_end(&mut out).context("unzstd")?;
+                if out.len() as u64 > cap {
+                    bail!("corrupt archive: decompressed body exceeds {cap}-byte cap");
+                }
+                out
+            }
         };
         let mut b = ByteReader::new(&body_bytes);
 
         let nlen = b.u32()? as usize;
         let codebook_lengths = b.take(nlen)?;
 
+        // Every element count below is bounded against the bytes actually
+        // present before allocating, so a corrupted count fails cleanly
+        // instead of attempting a multi-GB reservation.
         let nchunks = b.u32()? as usize;
         let chunk_symbols = b.u32()? as usize;
+        if nchunks > b.remaining() / 16 {
+            bail!("corrupt archive: {nchunks} chunks exceeds payload");
+        }
         let mut chunks = Vec::with_capacity(nchunks);
         for _ in 0..nchunks {
             let bits = b.u64()?;
             let symbols = b.u32()?;
             let nwords = b.u32()? as usize;
+            if nwords > b.remaining() / 8 {
+                bail!("corrupt archive: {nwords} chunk words exceeds payload");
+            }
             let mut words = Vec::with_capacity(nwords);
             for _ in 0..nwords {
                 words.push(b.u64()?);
@@ -125,11 +173,17 @@ impl Archive {
         }
 
         let nout = b.u64()? as usize;
+        if nout > b.remaining() / 12 {
+            bail!("corrupt archive: {nout} outliers exceeds payload");
+        }
         let mut outliers = Vec::with_capacity(nout);
         for _ in 0..nout {
             outliers.push((b.u64()?, b.i32()?));
         }
         let nverb = b.u64()? as usize;
+        if nverb > b.remaining() / 12 {
+            bail!("corrupt archive: {nverb} verbatim values exceeds payload");
+        }
         let mut verbatim = Vec::with_capacity(nverb);
         for _ in 0..nverb {
             verbatim.push((b.u64()?, b.f32()?));
@@ -143,6 +197,17 @@ impl Archive {
             verbatim,
         })
     }
+}
+
+/// Upper bound on a plausible decompressed body for `header`: every
+/// element contributes at most a few words across the stream, outlier,
+/// and verbatim channels, plus fixed slack for the codebook and framing.
+fn decompressed_body_cap(header: &Header) -> u64 {
+    let n: u64 = header
+        .dims
+        .iter()
+        .fold(1u64, |acc, &d| acc.saturating_mul(d as u64));
+    64 * 1024 * 1024 + n.saturating_mul(32)
 }
 
 #[cfg(test)]
@@ -214,6 +279,21 @@ mod tests {
         let n = bytes.len();
         bytes[n - 3] ^= 0xff; // flip a bit in the verbatim tail
         assert!(Archive::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn decompression_bomb_is_capped() {
+        // a valid-CRC zstd body that inflates far past what the header's
+        // dims (64^3 elements -> ~72 MB cap) could legitimately need
+        use std::io::Read;
+        let header = sample_archive(LosslessTag::Zstd).header;
+        let bomb = zstd::encode_all(std::io::repeat(0u8).take(100 * 1024 * 1024), 3).unwrap();
+        let mut w = ByteWriter::new();
+        w.bytes(MAGIC);
+        w.section(&header.to_bytes());
+        w.section(&bomb);
+        let err = Archive::from_bytes(&w.finish()).unwrap_err();
+        assert!(err.to_string().contains("cap"), "{err:#}");
     }
 
     #[test]

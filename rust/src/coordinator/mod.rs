@@ -47,12 +47,19 @@ impl Coordinator {
         Ok(Coordinator { cfg, engine, specs })
     }
 
-    /// Like `new` but silently falls back to the CPU engine when PJRT
-    /// artifacts are unavailable (used by examples and benches).
+    /// Like `new` but falls back to the CPU engine when the PJRT path is
+    /// unavailable (used by examples, benches, and the CLI). Builds the
+    /// coordinator once: a successful PJRT construction is returned
+    /// directly instead of being probed, discarded, and rebuilt.
     pub fn new_with_fallback(mut cfg: CuszConfig) -> Result<Self> {
-        if cfg.backend == BackendKind::Pjrt && Coordinator::new(cfg.clone()).is_err() {
-            eprintln!("[cusz] artifacts unavailable; falling back to CPU backend");
-            cfg.backend = BackendKind::Cpu;
+        if cfg.backend == BackendKind::Pjrt {
+            match Coordinator::new(cfg.clone()) {
+                Ok(coord) => return Ok(coord),
+                Err(e) => {
+                    eprintln!("[cusz] PJRT unavailable ({e:#}); falling back to CPU backend");
+                    cfg.backend = BackendKind::Cpu;
+                }
+            }
         }
         Coordinator::new(cfg)
     }

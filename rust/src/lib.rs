@@ -13,6 +13,11 @@
 //!   performs customized canonical Huffman coding ([`huffman`]), and owns
 //!   the archive format ([`container`]), baselines ([`sz`], [`zfp`]),
 //!   synthetic datasets ([`datagen`]) and metrics ([`metrics`]).
+//! * **Serving layer**: the [`store`] module bundles many compressed
+//!   fields into one sharded `.cuszb` archive with a footer index and
+//!   random-access per-field decompression, and [`serve`] runs a batched
+//!   streaming compression service (bounded worker pipeline, shared
+//!   engine, service-level stats) that writes into a store.
 //!
 //! ## Quickstart
 //!
@@ -27,6 +32,36 @@
 //! let archive = coord.compress(&field).unwrap();
 //! let restored = coord.decompress(&archive).unwrap();
 //! ```
+//!
+//! ## Batched multi-field serving
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use cusz::config::{BackendKind, CuszConfig, ErrorBound};
+//! use cusz::coordinator::Coordinator;
+//! use cusz::datagen::{self, Dataset};
+//! use cusz::serve::{BatchCompressor, BatchConfig};
+//! use cusz::store::Store;
+//!
+//! let coord = Arc::new(Coordinator::new_with_fallback(CuszConfig {
+//!     backend: BackendKind::Cpu,
+//!     eb: ErrorBound::ValRel(1e-4),
+//!     threads: 1, // per-job; the batch layer supplies job concurrency
+//!     ..Default::default()
+//! }).unwrap());
+//! let mut store = Store::create("snapshot.cuszb", 4).unwrap();
+//! let batch = BatchCompressor::new(coord.clone(), BatchConfig::default());
+//! let fields: Vec<_> = Dataset::Nyx
+//!     .field_names()
+//!     .into_iter()
+//!     .map(|f| datagen::generate(Dataset::Nyx, f, 42))
+//!     .collect();
+//! let stats = batch.run_into_store(fields, &mut store).unwrap();
+//! println!("{}", stats.report());
+//! // later: random access to one field, no sibling payloads touched
+//! let one = store.get("NYX/baryon_density").unwrap();
+//! let restored = coord.decompress(&one).unwrap();
+//! ```
 
 pub mod config;
 pub mod container;
@@ -36,6 +71,8 @@ pub mod field;
 pub mod huffman;
 pub mod metrics;
 pub mod runtime;
+pub mod serve;
+pub mod store;
 pub mod sz;
 pub mod testkit;
 pub mod util;
@@ -44,3 +81,5 @@ pub mod zfp;
 pub use config::{CuszConfig, ErrorBound};
 pub use coordinator::Coordinator;
 pub use field::Field;
+pub use serve::{BatchCompressor, BatchConfig, ServiceStats};
+pub use store::Store;

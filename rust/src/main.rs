@@ -7,12 +7,17 @@
 //!   roundtrip   compress+decompress a dataset field, report CR/PSNR/bound
 //!   stats       Table 9-style percentile statistics for a field
 //!   selftest    cross-validate the PJRT path against the CPU mirror
+//!   store       multi-field `.cuszb` bundle: add / get / ls / rm
+//!   serve       batched streaming compression service into a store
 //!
 //! Examples:
 //!   cusz roundtrip --dataset nyx --field baryon_density --eb 1e-4
 //!   cusz gen --dataset cesm --field CLDHGH --out /tmp/cldhgh.f32
 //!   cusz compress --input /tmp/cldhgh.f32 --dims 450,900 --eb 1e-4 \
 //!        --out /tmp/cldhgh.cusza
+//!   cusz store add --store snap.cuszb --dataset nyx --field baryon_density
+//!   cusz store get --store snap.cuszb --name NYX/baryon_density --out b.f32
+//!   cusz serve --batch --store snap.cuszb --dataset hurricane --count 16
 
 use std::path::PathBuf;
 
@@ -24,6 +29,8 @@ use cusz::coordinator::Coordinator;
 use cusz::datagen::{self, Dataset};
 use cusz::field::Field;
 use cusz::metrics;
+use cusz::serve::{BatchCompressor, BatchConfig};
+use cusz::store::Store;
 use cusz::util::cli::Cli;
 
 fn main() {
@@ -41,6 +48,8 @@ fn main() {
         "roundtrip" => cmd_roundtrip(rest),
         "stats" => cmd_stats(rest),
         "selftest" => cmd_selftest(rest),
+        "store" => cmd_store(rest),
+        "serve" => cmd_serve(rest),
         "--help" | "-h" | "help" => {
             println!("{}", usage());
             Ok(())
@@ -66,6 +75,13 @@ fn usage() -> String {
        roundtrip   --dataset D [--field F] [--eb E] [--backend pjrt|cpu]\n\
        stats       --dataset D --field F [--eb E]\n\
        selftest    [--backend pjrt]\n\
+       store add   --store B.cuszb (--dataset D --field F | --input PATH \n\
+                   --dims d0,.. | --archive PATH.cusza) [--shards N]\n\
+       store get   --store B.cuszb --name NAME [--out PATH]\n\
+       store ls    --store B.cuszb [--verify]\n\
+       store rm    --store B.cuszb --name NAME\n\
+       serve       --batch --store B.cuszb --dataset D [--count N]\n\
+                   [--workers W] [--queue N] [--shards N]\n\
      \n\
      Common options: --backend pjrt|cpu, --threads N, --chunk N,\n\
        --dict N, --repr adaptive|u32|u64, --lossless none|gzip|zstd,\n\
@@ -74,32 +90,33 @@ fn usage() -> String {
 }
 
 fn common_config(cli: &Cli) -> Result<CuszConfig> {
-    let mut cfg = CuszConfig::default();
-    cfg.backend = match cli.get("backend").as_str() {
-        "pjrt" => BackendKind::Pjrt,
-        "cpu" => BackendKind::Cpu,
-        b => bail!("unknown backend {b}"),
-    };
     let eb: f64 = cli.get_parsed("eb")?;
     let abs: f64 = cli.get_parsed("abs-eb")?;
-    cfg.eb = if abs > 0.0 { ErrorBound::Abs(abs) } else { ErrorBound::ValRel(eb) };
-    cfg.threads = cli.get_parsed("threads")?;
-    cfg.chunk_symbols = cli.get_parsed("chunk")?;
-    cfg.dict_size = cli.get_parsed("dict")?;
-    cfg.codeword_repr = match cli.get("repr").as_str() {
-        "adaptive" => CodewordRepr::Adaptive,
-        "u32" => CodewordRepr::U32,
-        "u64" => CodewordRepr::U64,
-        r => bail!("unknown repr {r}"),
-    };
-    cfg.lossless = match cli.get("lossless").as_str() {
-        "none" => LosslessStage::None,
-        "gzip" => LosslessStage::Gzip,
-        "zstd" => LosslessStage::Zstd,
-        l => bail!("unknown lossless stage {l}"),
-    };
-    cfg.artifacts_dir = PathBuf::from(cli.get("artifacts"));
-    Ok(cfg)
+    Ok(CuszConfig {
+        backend: match cli.get("backend").as_str() {
+            "pjrt" => BackendKind::Pjrt,
+            "cpu" => BackendKind::Cpu,
+            b => bail!("unknown backend {b}"),
+        },
+        eb: if abs > 0.0 { ErrorBound::Abs(abs) } else { ErrorBound::ValRel(eb) },
+        threads: cli.get_parsed("threads")?,
+        chunk_symbols: cli.get_parsed("chunk")?,
+        dict_size: cli.get_parsed("dict")?,
+        codeword_repr: match cli.get("repr").as_str() {
+            "adaptive" => CodewordRepr::Adaptive,
+            "u32" => CodewordRepr::U32,
+            "u64" => CodewordRepr::U64,
+            r => bail!("unknown repr {r}"),
+        },
+        lossless: match cli.get("lossless").as_str() {
+            "none" => LosslessStage::None,
+            "gzip" => LosslessStage::Gzip,
+            "zstd" => LosslessStage::Zstd,
+            l => bail!("unknown lossless stage {l}"),
+        },
+        artifacts_dir: PathBuf::from(cli.get("artifacts")),
+        ..Default::default()
+    })
 }
 
 fn with_common(cli: Cli) -> Cli {
@@ -263,6 +280,242 @@ fn cmd_stats(args: &[String]) -> Result<()> {
             100.0 * nearmin as f64 / field.len() as f64
         );
     }
+    Ok(())
+}
+
+fn cmd_store(args: &[String]) -> Result<()> {
+    let Some(action) = args.first().map(|s| s.as_str()) else {
+        bail!("store needs an action: add | get | ls | rm\n\n{}", usage());
+    };
+    let rest = &args[1..];
+    match action {
+        "add" => cmd_store_add(rest),
+        "get" => cmd_store_get(rest),
+        "ls" => cmd_store_ls(rest),
+        "rm" => cmd_store_rm(rest),
+        other => bail!("unknown store action '{other}' (add|get|ls|rm)\n\n{}", usage()),
+    }
+}
+
+fn cmd_store_add(args: &[String]) -> Result<()> {
+    let cli = with_common(Cli::new("cusz store add", "compress a field into a .cuszb bundle"))
+        .req("store", ".cuszb bundle path (created if absent)")
+        .opt("shards", "4", "shard count when creating a new bundle")
+        .opt("dataset", "", "generate this dataset's field instead of reading a file")
+        .opt("field", "", "field name for --dataset")
+        .opt("seed", "42", "generator seed for --dataset")
+        .opt("input", "", "raw .f32 input path (with --dims)")
+        .opt("dims", "", "comma-separated dims for --input")
+        .opt("archive", "", "pre-compressed .cusza payload to add as-is")
+        .opt("name", "", "override the stored field name")
+        .parse(args)?;
+    let shards: usize = cli.get_parsed("shards")?;
+
+    // Resolve and validate the input source *before* touching the bundle
+    // on disk, so a bad invocation never leaves an empty store behind.
+
+    // pre-compressed payload: no coordinator needed
+    if !cli.get("archive").is_empty() {
+        let payload = std::fs::read(cli.get("archive"))?;
+        let name = if cli.get("name").is_empty() {
+            Archive::peek_header(&payload)?.field_name
+        } else {
+            cli.get("name")
+        };
+        let mut store = Store::open_or_create(cli.get("store"), shards)?;
+        let entry = store.add_bytes(&name, &payload)?;
+        println!("added '{}' ({} bytes, shard {})", entry.name, entry.len, entry.shard);
+        return Ok(());
+    }
+
+    let mut field = if !cli.get("dataset").is_empty() {
+        let ds = Dataset::parse(&cli.get("dataset"))?;
+        let fname = if cli.get("field").is_empty() {
+            ds.field_names()[0].to_string()
+        } else {
+            cli.get("field")
+        };
+        datagen::generate(ds, &fname, cli.get_parsed("seed")?)
+    } else if !cli.get("input").is_empty() {
+        let input = cli.get("input");
+        let data = read_f32_file(&input)?;
+        let dims = parse_dims(&cli.get("dims")).context("--input needs --dims")?;
+        let name = PathBuf::from(&input)
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "field".into());
+        Field::new(name, dims, data)?
+    } else {
+        bail!("store add needs --dataset, --input, or --archive");
+    };
+    if !cli.get("name").is_empty() {
+        field.name = cli.get("name");
+    }
+
+    let coord = Coordinator::new_with_fallback(common_config(&cli)?)?;
+    let (archive, stats) = coord.compress_with_stats(&field)?;
+    let mut store = Store::open_or_create(cli.get("store"), shards)?;
+    let entry = store.add(&archive)?;
+    println!("engine: {}", coord.engine_name());
+    println!("{}", stats.report());
+    println!(
+        "added '{}' to {} (shard {}, offset {}, {} bytes)",
+        entry.name,
+        cli.get("store"),
+        entry.shard,
+        entry.offset,
+        entry.len
+    );
+    Ok(())
+}
+
+fn cmd_store_get(args: &[String]) -> Result<()> {
+    let cli = with_common(Cli::new("cusz store get", "random-access decompress one field"))
+        .req("store", ".cuszb bundle path")
+        .req("name", "field name (see `cusz store ls`)")
+        .opt("out", "", "output .f32 path (default: print a summary only)")
+        .parse(args)?;
+    let store = Store::open(cli.get("store"))?;
+    let archive = store.get(&cli.get("name"))?;
+    let coord = Coordinator::new_with_fallback(common_config(&cli)?)?;
+    let (field, stats) = coord.decompress_with_stats(&archive)?;
+    println!("engine: {}", coord.engine_name());
+    println!("{}", stats.timer.report(stats.original_bytes));
+    if cli.get("out").is_empty() {
+        println!(
+            "field '{}' dims {:?} ({} values, abs_eb {:.3e}) — pass --out to write .f32",
+            field.name,
+            field.dims,
+            field.len(),
+            archive.header.abs_eb
+        );
+    } else {
+        write_f32_file(&cli.get("out"), &field.data)?;
+        println!("wrote {} (dims {:?})", cli.get("out"), field.dims);
+    }
+    Ok(())
+}
+
+fn cmd_store_ls(args: &[String]) -> Result<()> {
+    let cli = Cli::new("cusz store ls", "list bundle contents")
+        .req("store", ".cuszb bundle path")
+        .flag("verify", "CRC-verify every payload")
+        .parse(args)?;
+    let store = Store::open(cli.get("store"))?;
+    println!(
+        "{} — {} fields, {} shards, {:.2} MB live, {:.2} MB dead",
+        cli.get("store"),
+        store.len(),
+        store.n_shards(),
+        store.live_bytes() as f64 / 1e6,
+        store.dead_bytes() as f64 / 1e6
+    );
+    println!(
+        "{:<34} {:>16} {:>6} {:>12} {:>12} {:>7}",
+        "name", "dims", "shard", "offset", "bytes", "CR"
+    );
+    for e in store.list() {
+        let dims = e
+            .dims
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join("x");
+        println!(
+            "{:<34} {:>16} {:>6} {:>12} {:>12} {:>6.1}x",
+            e.name,
+            dims,
+            e.shard,
+            e.offset,
+            e.len,
+            e.compression_ratio()
+        );
+    }
+    if cli.has_flag("verify") {
+        store.verify()?;
+        println!("verify: all payload CRCs OK");
+    }
+    Ok(())
+}
+
+fn cmd_store_rm(args: &[String]) -> Result<()> {
+    let cli = Cli::new("cusz store rm", "remove a field from a bundle")
+        .req("store", ".cuszb bundle path")
+        .req("name", "field name to remove")
+        .parse(args)?;
+    let mut store = Store::open(cli.get("store"))?;
+    store.remove(&cli.get("name"))?;
+    println!(
+        "removed '{}' ({} fields remain; payload bytes reclaimed on compaction)",
+        cli.get("name"),
+        store.len()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let cli = with_common(Cli::new("cusz serve", "batched streaming compression service"))
+        .flag("batch", "batch mode: drain a finite field stream (required)")
+        .req("store", "output .cuszb bundle (created if absent)")
+        .opt("shards", "4", "shard count when creating the bundle")
+        .req("dataset", "hacc|cesm|hurricane|nyx|qmcpack")
+        .opt("count", "8", "number of fields to stream")
+        .opt("seed", "42", "base generator seed")
+        .opt("workers", "0", "concurrent compression jobs (0 = all cores)")
+        .opt("queue", "4", "bounded queue depth between stages")
+        .parse(args)?;
+    if !cli.has_flag("batch") {
+        bail!("only --batch mode is implemented (a finite stream drained to completion)");
+    }
+    let mut cfg = common_config(&cli)?;
+    // Job-level concurrency comes from the batch layer; keep each job's
+    // internal slab/chunk parallelism narrow to avoid oversubscription.
+    if cfg.threads == 0 {
+        cfg.threads = 2;
+    }
+    let coord = std::sync::Arc::new(Coordinator::new_with_fallback(cfg)?);
+    let ds = Dataset::parse(&cli.get("dataset"))?;
+    let count: usize = cli.get_parsed("count")?;
+    let seed: u64 = cli.get_parsed("seed")?;
+    let names = ds.field_names();
+    let fields: Vec<Field> = (0..count)
+        .map(|i| {
+            let base = names[i % names.len()];
+            let mut f = datagen::generate(ds, base, seed + (i / names.len()) as u64);
+            if i >= names.len() {
+                f.name = format!("{}#{}", f.name, i / names.len());
+            }
+            f
+        })
+        .collect();
+
+    let mut store = Store::open_or_create(cli.get("store"), cli.get_parsed("shards")?)?;
+    let batch_cfg = BatchConfig {
+        workers: cli.get_parsed("workers")?,
+        queue_depth: cli.get_parsed("queue")?,
+    };
+    println!(
+        "engine: {}  workers: {}  queue: {}  fields: {}",
+        coord.engine_name(),
+        batch_cfg.effective_workers(),
+        batch_cfg.queue_depth,
+        fields.len()
+    );
+    let batch = BatchCompressor::new(coord.clone(), batch_cfg);
+    let stats = batch.run_into_store(fields, &mut store)?;
+    for (name, job) in &stats.per_job {
+        println!(
+            "  {:<34} {:>9.2} MB  CR {:>6.2}x",
+            name,
+            job.original_bytes as f64 / 1e6,
+            job.compression_ratio()
+        );
+    }
+    for (name, err) in &stats.errors {
+        println!("  {name:<34} FAILED: {err}");
+    }
+    println!("{}", stats.report());
+    println!("store: {} ({} fields)", cli.get("store"), store.len());
     Ok(())
 }
 

@@ -9,6 +9,15 @@
 
 pub mod artifacts;
 pub mod pjrt;
+#[cfg(not(feature = "pjrt"))]
+pub(crate) mod xla_stub;
+
+/// Whether this build links the real PJRT runtime (`pjrt` cargo feature).
+/// Without it, `BackendKind::Pjrt` fails at engine start with a clear
+/// message and fallback-aware callers drop to the CPU mirror.
+pub const fn pjrt_compiled() -> bool {
+    cfg!(feature = "pjrt")
+}
 
 use anyhow::Result;
 

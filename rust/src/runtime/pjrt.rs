@@ -14,6 +14,11 @@ use super::artifacts::ArtifactManifest;
 use super::QuantEngine;
 use crate::sz::blocks::SlabSpec;
 
+// With the `pjrt` feature the `xla` crate provides the runtime; without
+// it the in-tree stub satisfies the same API and errors at start-up.
+#[cfg(not(feature = "pjrt"))]
+use super::xla_stub as xla;
+
 enum Job {
     Compress {
         variant: String,

@@ -1,0 +1,311 @@
+//! `serve`: the batched streaming compression front end — the shape the
+//! paper's I/O-reduction story takes when many fields arrive faster than
+//! one compressor loop can drain them (LCLS-II / HACC campaigns, §1).
+//!
+//! A [`BatchCompressor`] accepts a stream of [`Field`]s and fans whole-job
+//! compression across a bounded [`FanStage`] worker pipeline with
+//! backpressure: one producer thread feeds a bounded queue, `workers`
+//! threads share a single [`Coordinator`] (one engine, one codebook/config
+//! universe — the paper's single-device discipline), and the calling
+//! thread is the sink, writing archives into a [`Store`] and folding
+//! per-job [`CompressStats`] into service-level [`ServiceStats`].
+//!
+//! Inside each job the coordinator already parallelizes slab quantization
+//! and per-chunk deflate; the batch layer adds job-level concurrency on
+//! top. When both are unbounded the core count is oversubscribed, so batch
+//! deployments set `CuszConfig::threads` to a small number and let
+//! `BatchConfig::workers` cover the cores (see `examples/batch_service.rs`).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::container::Archive;
+use crate::coordinator::{CompressStats, Coordinator};
+use crate::field::Field;
+use crate::store::Store;
+use crate::util::pool::{bounded, FanStage};
+
+/// Tuning for the batch front end.
+#[derive(Debug, Clone)]
+pub struct BatchConfig {
+    /// Concurrent compression jobs (whole fields in flight).
+    /// 0 = one per available core.
+    pub workers: usize,
+    /// Bounded queue depth between stages (backpressure: at most
+    /// `queue_depth` fields buffered ahead of the workers, and
+    /// `queue_depth` archives ahead of the sink).
+    pub queue_depth: usize,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig { workers: 0, queue_depth: 4 }
+    }
+}
+
+impl BatchConfig {
+    pub fn effective_workers(&self) -> usize {
+        if self.workers > 0 {
+            self.workers
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        }
+    }
+}
+
+/// Service-level aggregate over every job of a batch run.
+#[derive(Debug, Clone, Default)]
+pub struct ServiceStats {
+    pub jobs: usize,
+    pub failed: usize,
+    pub original_bytes: usize,
+    pub compressed_bytes: usize,
+    pub n_outliers: usize,
+    pub n_verbatim: usize,
+    pub huffman_bits: u64,
+    pub wall_seconds: f64,
+    /// Per-job stats in completion order (not submission order).
+    pub per_job: Vec<(String, CompressStats)>,
+    /// (field name, error) for jobs whose compression failed.
+    pub errors: Vec<(String, String)>,
+}
+
+impl ServiceStats {
+    pub fn absorb(&mut self, name: &str, stats: &CompressStats) {
+        self.jobs += 1;
+        self.original_bytes += stats.original_bytes;
+        self.compressed_bytes += stats.compressed_bytes;
+        self.n_outliers += stats.n_outliers;
+        self.n_verbatim += stats.n_verbatim;
+        self.huffman_bits += stats.huffman_bits;
+        self.per_job.push((name.to_string(), stats.clone()));
+    }
+
+    pub fn compression_ratio(&self) -> f64 {
+        self.original_bytes as f64 / self.compressed_bytes.max(1) as f64
+    }
+
+    /// End-to-end service throughput against original bytes (paper
+    /// footnote 4 convention), including queueing and store writes.
+    pub fn throughput_gbps(&self) -> f64 {
+        self.original_bytes as f64 / self.wall_seconds.max(1e-12) / 1e9
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "jobs {} ok / {} failed  {:.2} MB -> {:.2} MB  CR {:.2}x  \
+             {:.3} GB/s end-to-end  (outliers {}, verbatim {}, wall {:.3}s)",
+            self.jobs,
+            self.failed,
+            self.original_bytes as f64 / 1e6,
+            self.compressed_bytes as f64 / 1e6,
+            self.compression_ratio(),
+            self.throughput_gbps(),
+            self.n_outliers,
+            self.n_verbatim,
+            self.wall_seconds,
+        )
+    }
+}
+
+/// Batched streaming compressor: one shared engine, many jobs in flight.
+pub struct BatchCompressor {
+    coord: Arc<Coordinator>,
+    cfg: BatchConfig,
+}
+
+impl BatchCompressor {
+    pub fn new(coord: Arc<Coordinator>, cfg: BatchConfig) -> Self {
+        BatchCompressor { coord, cfg }
+    }
+
+    pub fn coordinator(&self) -> &Coordinator {
+        &self.coord
+    }
+
+    /// Stream `fields` through the worker pipeline, handing each finished
+    /// archive (with its stats) to `sink` on the calling thread. A sink
+    /// error aborts the run (producer and workers unwind via channel
+    /// hang-up); per-job compression errors are collected, not fatal.
+    pub fn run<I, S>(&self, fields: I, mut sink: S) -> Result<ServiceStats>
+    where
+        I: IntoIterator<Item = Field>,
+        I::IntoIter: Send + 'static,
+        S: FnMut(&str, Archive, &CompressStats) -> Result<()>,
+    {
+        let workers = self.cfg.effective_workers();
+        let depth = self.cfg.queue_depth.max(1);
+
+        let (tx, rx) = bounded::<Field>(depth);
+        let coord = Arc::clone(&self.coord);
+        let fan = FanStage::spawn(rx, workers, depth, "compress", move |field: Field| {
+            let name = field.name.clone();
+            (name, coord.compress_with_stats(&field))
+        });
+        let fields = fields.into_iter();
+        let producer = std::thread::Builder::new()
+            .name("field-producer".into())
+            .spawn(move || {
+                for f in fields {
+                    if tx.send(f).is_err() {
+                        break; // pipeline shut down early
+                    }
+                }
+            })
+            .context("spawning field producer")?;
+
+        let t0 = Instant::now();
+        let mut stats = ServiceStats::default();
+        let mut sink_err = None;
+        for (name, result) in fan.rx.iter() {
+            match result {
+                Ok((archive, job_stats)) => {
+                    if let Err(e) = sink(&name, archive, &job_stats) {
+                        sink_err = Some(e.context(format!("sink failed on '{name}'")));
+                        break;
+                    }
+                    stats.absorb(&name, &job_stats);
+                }
+                Err(e) => {
+                    stats.failed += 1;
+                    stats.errors.push((name, format!("{e:#}")));
+                }
+            }
+        }
+        stats.wall_seconds = t0.elapsed().as_secs_f64();
+        // Dropping fan.rx (join) unblocks workers; workers dropping the
+        // shared input receiver unblocks the producer.
+        fan.join();
+        let producer_panicked = producer.join().is_err();
+        match sink_err {
+            Some(e) => Err(e),
+            None if producer_panicked => Err(anyhow::anyhow!(
+                "field producer panicked; results incomplete ({} jobs finished)",
+                stats.jobs
+            )),
+            None => Ok(stats),
+        }
+    }
+
+    /// Convenience: run the batch and write every archive into `store`
+    /// under its field name. The store's index is committed once at the
+    /// end of the run (payload appends are still immediate), so ingesting
+    /// N fields costs one index rewrite instead of N.
+    pub fn run_into_store<I>(&self, fields: I, store: &mut Store) -> Result<ServiceStats>
+    where
+        I: IntoIterator<Item = Field>,
+        I::IntoIter: Send + 'static,
+    {
+        store.set_deferred_index(true)?;
+        let result = self.run(fields, |_name, archive, _stats| store.add(&archive).map(|_| ()));
+        // commit whatever landed, even if the run errored mid-stream
+        let commit = store.set_deferred_index(false);
+        let stats = result?;
+        commit?;
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BackendKind, CuszConfig, ErrorBound};
+    use crate::metrics;
+    use crate::testkit::fields::{make, Regime};
+    use crate::testkit::tmp_dir;
+
+    const EB: f32 = 1e-2;
+
+    fn coordinator() -> Arc<Coordinator> {
+        Arc::new(
+            Coordinator::new(CuszConfig {
+                backend: BackendKind::Cpu,
+                eb: ErrorBound::Abs(EB as f64),
+                threads: 1, // job-level parallelism comes from the batch layer
+                ..Default::default()
+            })
+            .unwrap(),
+        )
+    }
+
+    fn fields(n: usize) -> Vec<Field> {
+        (0..n)
+            .map(|i| {
+                Field::new(
+                    format!("f{i:02}"),
+                    vec![96, 96],
+                    make(Regime::ALL[i % 3], 96 * 96, i as u64),
+                )
+                .unwrap()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batch_into_store_roundtrips_every_field() {
+        let dir = tmp_dir("serve-batch");
+        let mut store = Store::create(&dir, 2).unwrap();
+        let batch = BatchCompressor::new(
+            coordinator(),
+            BatchConfig { workers: 3, queue_depth: 2 },
+        );
+        let originals = fields(10);
+        let stats = batch.run_into_store(originals.clone(), &mut store).unwrap();
+        assert_eq!(stats.jobs, 10);
+        assert_eq!(stats.failed, 0);
+        assert_eq!(store.len(), 10);
+        assert!(stats.compression_ratio() > 1.0);
+        assert!(stats.wall_seconds > 0.0);
+        let coord = batch.coordinator();
+        for f in &originals {
+            let out = coord.decompress(&store.get(&f.name).unwrap()).unwrap();
+            assert_eq!(metrics::verify_error_bound(&f.data, &out.data, EB), None, "{}", f.name);
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn sink_error_aborts_without_deadlock() {
+        let batch = BatchCompressor::new(
+            coordinator(),
+            BatchConfig { workers: 2, queue_depth: 1 },
+        );
+        let mut seen = 0usize;
+        let result = batch.run(fields(50), |_, _, _| {
+            seen += 1;
+            if seen >= 3 {
+                anyhow::bail!("store full");
+            }
+            Ok(())
+        });
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn duplicate_names_surface_as_sink_error() {
+        let dir = tmp_dir("serve-dup");
+        let mut store = Store::create(&dir, 1).unwrap();
+        let batch = BatchCompressor::new(coordinator(), BatchConfig::default());
+        let mut twice = fields(2);
+        twice[1].name = twice[0].name.clone();
+        assert!(batch.run_into_store(twice, &mut store).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn stats_aggregate_matches_job_sum() {
+        let dir = tmp_dir("serve-stats");
+        let mut store = Store::create(&dir, 1).unwrap();
+        let batch = BatchCompressor::new(coordinator(), BatchConfig { workers: 2, queue_depth: 2 });
+        let stats = batch.run_into_store(fields(6), &mut store).unwrap();
+        let sum_orig: usize = stats.per_job.iter().map(|(_, s)| s.original_bytes).sum();
+        let sum_comp: usize = stats.per_job.iter().map(|(_, s)| s.compressed_bytes).sum();
+        assert_eq!(stats.original_bytes, sum_orig);
+        assert_eq!(stats.compressed_bytes, sum_comp);
+        assert_eq!(stats.per_job.len(), 6);
+        assert!(!stats.report().is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,223 @@
+//! `.cuszb` footer index: the name → (shard, offset, length, digests) map
+//! written as a small CRC-framed file next to the shard payloads. The
+//! index is the only mutable piece of a bundle — payload shards are
+//! append-only — so updates are a single atomic tmp-file rename.
+
+use anyhow::{bail, Context, Result};
+
+use crate::container::bytes::{ByteReader, ByteWriter};
+
+pub const INDEX_MAGIC: &[u8; 8] = b"CUSZB1\0\0";
+pub const INDEX_VERSION: u32 = 1;
+
+/// Smallest possible serialized entry (empty name, 1 dim), used to bound
+/// untrusted entry counts before allocating.
+const MIN_ENTRY_BYTES: usize = 4 + 4 + 8 + 8 + 4 + 4 + 4 + 8;
+
+/// One field's location and integrity metadata inside a bundle.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StoreEntry {
+    /// Field name (the lookup key; unique within a bundle).
+    pub name: String,
+    /// Which shard file holds the payload.
+    pub shard: u32,
+    /// Byte offset of the serialized `.cusza` payload within the shard.
+    pub offset: u64,
+    /// Payload length in bytes.
+    pub len: u64,
+    /// CRC32 of the whole payload (verified on every random access).
+    pub payload_crc: u32,
+    /// CRC32 of the payload's serialized header ([`crate::container::Archive::header_digest`]);
+    /// detects a payload swapped or rewritten since indexing.
+    pub header_digest: u32,
+    /// Logical field dims, for `ls`-style listings without shard reads.
+    pub dims: Vec<usize>,
+}
+
+impl StoreEntry {
+    pub fn n_elements(&self) -> u64 {
+        self.dims.iter().map(|&d| d as u64).product()
+    }
+
+    /// Original (uncompressed) field size in bytes.
+    pub fn original_bytes(&self) -> u64 {
+        self.n_elements() * 4
+    }
+
+    pub fn compression_ratio(&self) -> f64 {
+        self.original_bytes() as f64 / (self.len.max(1)) as f64
+    }
+}
+
+/// The in-memory index of a `.cuszb` bundle.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StoreIndex {
+    pub n_shards: u32,
+    pub entries: Vec<StoreEntry>,
+}
+
+impl StoreIndex {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.bytes(INDEX_MAGIC);
+        w.u32(INDEX_VERSION);
+        let mut body = ByteWriter::new();
+        body.u32(self.n_shards);
+        body.u64(self.entries.len() as u64);
+        for e in &self.entries {
+            body.str(&e.name);
+            body.u32(e.shard);
+            body.u64(e.offset);
+            body.u64(e.len);
+            body.u32(e.payload_crc);
+            body.u32(e.header_digest);
+            body.u32(e.dims.len() as u32);
+            for &d in &e.dims {
+                body.u64(d as u64);
+            }
+        }
+        w.section(&body.finish());
+        w.finish()
+    }
+
+    pub fn from_bytes(data: &[u8]) -> Result<StoreIndex> {
+        let mut r = ByteReader::new(data);
+        let magic = r.take(8)?;
+        if magic != INDEX_MAGIC {
+            bail!("not a cuszb index (bad magic)");
+        }
+        let version = r.u32()?;
+        if version != INDEX_VERSION {
+            bail!("unsupported cuszb index version {version}");
+        }
+        let body = r.section().context("index body section")?;
+        let mut b = ByteReader::new(&body);
+        let n_shards = b.u32()?;
+        if n_shards == 0 || n_shards > 4096 {
+            bail!("implausible shard count {n_shards}");
+        }
+        let n = b.u64()? as usize;
+        if n > b.remaining() / MIN_ENTRY_BYTES {
+            bail!("corrupt index: {n} entries exceeds payload");
+        }
+        let mut entries = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name = b.str()?;
+            let shard = b.u32()?;
+            let offset = b.u64()?;
+            let len = b.u64()?;
+            let payload_crc = b.u32()?;
+            let header_digest = b.u32()?;
+            let nd = b.u32()? as usize;
+            if nd == 0 || nd > 4 {
+                bail!("index entry '{name}': bad ndim {nd}");
+            }
+            if shard >= n_shards {
+                bail!("index entry '{name}': shard {shard} out of range");
+            }
+            let mut dims = Vec::with_capacity(nd);
+            let mut product: u64 = 1;
+            for _ in 0..nd {
+                let d = b.u64()?;
+                // keep n_elements()/original_bytes() overflow-free on
+                // crafted indexes: per-axis and total element bounds
+                if d == 0 || d > 1 << 40 {
+                    bail!("index entry '{name}': implausible dim {d}");
+                }
+                product = product
+                    .checked_mul(d)
+                    .filter(|&p| p <= 1 << 48)
+                    .with_context(|| format!("index entry '{name}': dims overflow"))?;
+                dims.push(d as usize);
+            }
+            entries.push(StoreEntry { name, shard, offset, len, payload_crc, header_digest, dims });
+        }
+        Ok(StoreIndex { n_shards, entries })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> StoreIndex {
+        StoreIndex {
+            n_shards: 4,
+            entries: vec![
+                StoreEntry {
+                    name: "NYX/baryon_density".into(),
+                    shard: 2,
+                    offset: 8,
+                    len: 120_000,
+                    payload_crc: 0xdeadbeef,
+                    header_digest: 0x1234_5678,
+                    dims: vec![128, 128, 128],
+                },
+                StoreEntry {
+                    name: "vx".into(),
+                    shard: 0,
+                    offset: 8,
+                    len: 99,
+                    payload_crc: 1,
+                    header_digest: 2,
+                    dims: vec![1 << 21],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let idx = sample();
+        let back = StoreIndex::from_bytes(&idx.to_bytes()).unwrap();
+        assert_eq!(idx, back);
+    }
+
+    #[test]
+    fn empty_index_roundtrips() {
+        let idx = StoreIndex { n_shards: 1, entries: vec![] };
+        assert_eq!(StoreIndex::from_bytes(&idx.to_bytes()).unwrap(), idx);
+    }
+
+    #[test]
+    fn entry_math() {
+        let e = &sample().entries[0];
+        assert_eq!(e.n_elements(), 128 * 128 * 128);
+        assert_eq!(e.original_bytes(), 128 * 128 * 128 * 4);
+        assert!(e.compression_ratio() > 60.0);
+    }
+
+    #[test]
+    fn corruption_is_rejected() {
+        let bytes = sample().to_bytes();
+        // bad magic
+        let mut b = bytes.clone();
+        b[0] = b'X';
+        assert!(StoreIndex::from_bytes(&b).is_err());
+        // truncations at every prefix length must error, never panic
+        for cut in 0..bytes.len() {
+            assert!(StoreIndex::from_bytes(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+        // flipped byte in the body breaks the section CRC
+        let mut b = bytes.clone();
+        let n = b.len();
+        b[n - 2] ^= 0x40;
+        assert!(StoreIndex::from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn implausible_dims_rejected() {
+        let mut idx = sample();
+        idx.entries[0].dims = vec![usize::MAX, 2];
+        assert!(StoreIndex::from_bytes(&idx.to_bytes()).is_err());
+        idx.entries[0].dims = vec![0];
+        assert!(StoreIndex::from_bytes(&idx.to_bytes()).is_err());
+    }
+
+    #[test]
+    fn out_of_range_shard_rejected() {
+        let mut idx = sample();
+        idx.entries[0].shard = 7; // n_shards is 4
+        assert!(StoreIndex::from_bytes(&idx.to_bytes()).is_err());
+    }
+}

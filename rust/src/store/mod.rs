@@ -1,0 +1,578 @@
+//! The `.cuszb` multi-field archive store: a sharded bundle of
+//! concatenated `.cusza` payloads plus a footer index, giving a compressed
+//! simulation snapshot (dozens of fields) one on-disk home with random
+//! access per field.
+//!
+//! Layout — a bundle is a directory:
+//!
+//! ```text
+//! snapshot.cuszb/
+//!   index.cuszi        footer index: name → (shard, offset, len,
+//!                      payload CRC32, header digest, dims); CRC-framed,
+//!                      rewritten atomically (tmp + rename) on add/remove
+//!   shard-0000.cuszs   8-byte shard magic, then concatenated .cusza
+//!   shard-0001.cuszs   payloads, append-only
+//!   ...
+//! ```
+//!
+//! Placement is least-loaded-shard, so parallel readers of different
+//! fields tend to hit different files. `get` seeks straight to one
+//! payload and never touches sibling payloads; integrity is checked at
+//! three levels (payload CRC from the index, per-section CRCs inside the
+//! payload, header digest against the index entry). `remove` drops the
+//! index entry and leaves the payload bytes as dead space — reclaim by
+//! rebuilding the bundle ([`Store::compact_into`]).
+//!
+//! Concurrency contract: one writer OR many readers per bundle (no file
+//! locking — arbitration belongs to the serving layer, see [`crate::serve`]).
+
+pub mod index;
+
+use std::fs::{self, File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::container::bytes::crc32;
+use crate::container::Archive;
+
+pub use index::{StoreEntry, StoreIndex};
+
+pub const SHARD_MAGIC: &[u8; 8] = b"CUSZS1\0\0";
+const INDEX_FILE: &str = "index.cuszi";
+
+/// An open `.cuszb` bundle.
+pub struct Store {
+    dir: PathBuf,
+    index: StoreIndex,
+    /// Current byte length of each shard file (append cursor).
+    shard_sizes: Vec<u64>,
+    /// When true, `add`/`remove` skip the per-call index rewrite; the
+    /// index commits once when deferral ends (batch ingestion path).
+    defer_index: bool,
+}
+
+fn shard_file_name(i: u32) -> String {
+    format!("shard-{i:04}.cuszs")
+}
+
+impl Store {
+    /// Create a new empty bundle with `n_shards` payload shards. The
+    /// directory may exist (and be empty); an existing index is refused.
+    pub fn create(dir: impl AsRef<Path>, n_shards: usize) -> Result<Store> {
+        let dir = dir.as_ref().to_path_buf();
+        if !(1..=4096).contains(&n_shards) {
+            bail!("shard count must be in 1..=4096, got {n_shards}");
+        }
+        if dir.join(INDEX_FILE).exists() {
+            bail!("store already exists at {}", dir.display());
+        }
+        // A shard file without an index means a damaged bundle whose
+        // payloads may still be salvageable — refuse to truncate them.
+        if dir.is_dir() {
+            for entry in fs::read_dir(&dir)? {
+                let name = entry?.file_name();
+                if name.to_string_lossy().ends_with(".cuszs") {
+                    bail!(
+                        "{} contains shard files but no index (damaged bundle?); \
+                         refusing to overwrite — move them away first",
+                        dir.display()
+                    );
+                }
+            }
+        }
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating store dir {}", dir.display()))?;
+        for i in 0..n_shards as u32 {
+            let path = dir.join(shard_file_name(i));
+            let mut f = File::create(&path)
+                .with_context(|| format!("creating shard {}", path.display()))?;
+            f.write_all(SHARD_MAGIC)?;
+        }
+        let store = Store {
+            dir,
+            index: StoreIndex { n_shards: n_shards as u32, entries: Vec::new() },
+            shard_sizes: vec![SHARD_MAGIC.len() as u64; n_shards],
+            defer_index: false,
+        };
+        store.write_index()?;
+        Ok(store)
+    }
+
+    /// Whether a bundle (its index file) exists at `dir`.
+    pub fn exists(dir: impl AsRef<Path>) -> bool {
+        dir.as_ref().join(INDEX_FILE).exists()
+    }
+
+    /// Open the bundle at `dir`, or create it with `n_shards` shards if
+    /// no index exists yet.
+    pub fn open_or_create(dir: impl AsRef<Path>, n_shards: usize) -> Result<Store> {
+        if Store::exists(&dir) {
+            Store::open(dir)
+        } else {
+            Store::create(dir, n_shards)
+        }
+    }
+
+    /// Open an existing bundle, verifying the index and shard framing:
+    /// index magic/version/CRC, shard files present with the right magic,
+    /// every entry within its shard's bounds, names unique.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Store> {
+        let dir = dir.as_ref().to_path_buf();
+        let raw = fs::read(dir.join(INDEX_FILE))
+            .with_context(|| format!("reading store index in {}", dir.display()))?;
+        let index = StoreIndex::from_bytes(&raw)
+            .with_context(|| format!("parsing store index in {}", dir.display()))?;
+
+        let mut shard_sizes = Vec::with_capacity(index.n_shards as usize);
+        for i in 0..index.n_shards {
+            let path = dir.join(shard_file_name(i));
+            let mut f = File::open(&path)
+                .with_context(|| format!("opening shard {}", path.display()))?;
+            let size = f
+                .metadata()
+                .with_context(|| format!("stat {}", path.display()))?
+                .len();
+            if size < SHARD_MAGIC.len() as u64 {
+                bail!("{} is truncated (no shard magic)", path.display());
+            }
+            let mut magic = [0u8; 8];
+            f.read_exact(&mut magic)?;
+            if &magic != SHARD_MAGIC {
+                bail!("{} is not a cuszb shard (bad magic)", path.display());
+            }
+            shard_sizes.push(size);
+        }
+
+        let mut seen = std::collections::HashSet::new();
+        for e in &index.entries {
+            if e.offset < SHARD_MAGIC.len() as u64 {
+                bail!("entry '{}' offset {} inside shard magic", e.name, e.offset);
+            }
+            let end = e
+                .offset
+                .checked_add(e.len)
+                .with_context(|| format!("entry '{}' offset overflow", e.name))?;
+            if end > shard_sizes[e.shard as usize] {
+                bail!(
+                    "entry '{}' overruns shard {} ({} > {} bytes)",
+                    e.name,
+                    e.shard,
+                    end,
+                    shard_sizes[e.shard as usize]
+                );
+            }
+            if !seen.insert(e.name.as_str()) {
+                bail!("duplicate entry '{}' in index", e.name);
+            }
+        }
+        Ok(Store { dir, index, shard_sizes, defer_index: false })
+    }
+
+    /// Toggle deferred index commits. While deferred, `add`/`remove`
+    /// mutate only the in-memory index (payload appends still hit disk);
+    /// turning deferral off commits the index once. Batch ingestion over
+    /// N fields thus does one index write instead of N. A crash while
+    /// deferred loses only index entries — appended payloads become dead
+    /// space, never corruption.
+    pub fn set_deferred_index(&mut self, deferred: bool) -> Result<()> {
+        self.defer_index = deferred;
+        if !deferred {
+            self.write_index()?;
+        }
+        Ok(())
+    }
+
+    /// Compress-side entry point: append one archive under its header's
+    /// field name. Fails on duplicate names (remove first).
+    pub fn add(&mut self, archive: &Archive) -> Result<StoreEntry> {
+        self.add_bytes(&archive.header.field_name, &archive.to_bytes())
+    }
+
+    /// Append a pre-serialized `.cusza` payload under `name`. Validates
+    /// the payload's framing (magic + header section) before committing.
+    pub fn add_bytes(&mut self, name: &str, payload: &[u8]) -> Result<StoreEntry> {
+        if self.find(name).is_some() {
+            bail!("field '{name}' already in store (remove it first)");
+        }
+        let header = Archive::peek_header(payload)
+            .with_context(|| format!("payload for '{name}' is not a valid .cusza archive"))?;
+        let header_digest = crc32(&header.to_bytes());
+
+        // least-loaded shard keeps payloads spread for parallel readers
+        let shard = self
+            .shard_sizes
+            .iter()
+            .enumerate()
+            .min_by_key(|&(_, &s)| s)
+            .map(|(i, _)| i as u32)
+            .expect("store has at least one shard");
+        let path = self.shard_path(shard);
+        let mut f = OpenOptions::new()
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("opening shard {}", path.display()))?;
+        let offset = f.seek(SeekFrom::End(0))?;
+        f.write_all(payload)
+            .with_context(|| format!("appending to shard {}", path.display()))?;
+        f.flush()?;
+
+        let entry = StoreEntry {
+            name: name.to_string(),
+            shard,
+            offset,
+            len: payload.len() as u64,
+            payload_crc: crc32(payload),
+            header_digest,
+            dims: header.dims,
+        };
+        self.index.entries.push(entry.clone());
+        self.shard_sizes[shard as usize] = offset + payload.len() as u64;
+        if !self.defer_index {
+            self.write_index()?;
+        }
+        Ok(entry)
+    }
+
+    /// Seek + read + CRC-check one entry's payload from its shard.
+    fn read_entry(&self, e: &StoreEntry) -> Result<Vec<u8>> {
+        let path = self.shard_path(e.shard);
+        let mut f = File::open(&path)
+            .with_context(|| format!("opening shard {}", path.display()))?;
+        f.seek(SeekFrom::Start(e.offset))?;
+        let mut buf = vec![0u8; e.len as usize];
+        f.read_exact(&mut buf)
+            .with_context(|| format!("reading '{}' from {}", e.name, path.display()))?;
+        if crc32(&buf) != e.payload_crc {
+            bail!("field '{}': payload CRC mismatch (corrupt shard)", e.name);
+        }
+        Ok(buf)
+    }
+
+    /// Random-access read of one field's raw payload: one seek + one read
+    /// in one shard; sibling payloads are never touched. Verifies the
+    /// payload CRC recorded at add time.
+    pub fn get_bytes(&self, name: &str) -> Result<Vec<u8>> {
+        let e = self
+            .find(name)
+            .with_context(|| format!("field '{name}' not in store"))?;
+        self.read_entry(e)
+    }
+
+    /// Random-access read + decode of one field, with the header digest
+    /// cross-checked against the index entry.
+    pub fn get(&self, name: &str) -> Result<Archive> {
+        let e = self
+            .find(name)
+            .with_context(|| format!("field '{name}' not in store"))?;
+        let bytes = self.read_entry(e)?;
+        let archive = Archive::from_bytes(&bytes)
+            .with_context(|| format!("decoding field '{name}'"))?;
+        if archive.header_digest() != e.header_digest {
+            bail!("field '{name}': header digest mismatch (payload rewritten since indexing?)");
+        }
+        Ok(archive)
+    }
+
+    /// Drop a field from the index. Its payload bytes become dead space in
+    /// the shard until the bundle is compacted.
+    pub fn remove(&mut self, name: &str) -> Result<()> {
+        let before = self.index.entries.len();
+        self.index.entries.retain(|e| e.name != name);
+        if self.index.entries.len() == before {
+            bail!("field '{name}' not in store");
+        }
+        if self.defer_index {
+            return Ok(());
+        }
+        self.write_index()
+    }
+
+    /// Rebuild the bundle at `dest` with only live entries (reclaims the
+    /// dead space `remove` leaves behind).
+    pub fn compact_into(&self, dest: impl AsRef<Path>) -> Result<Store> {
+        let mut out = Store::create(dest, self.index.n_shards as usize)?;
+        for e in &self.index.entries {
+            let payload = self.read_entry(e)?;
+            out.add_bytes(&e.name, &payload)?;
+        }
+        Ok(out)
+    }
+
+    /// Full integrity scan: every payload read back and CRC-verified.
+    pub fn verify(&self) -> Result<()> {
+        for e in &self.index.entries {
+            self.read_entry(e)
+                .with_context(|| format!("verifying '{}'", e.name))?;
+        }
+        Ok(())
+    }
+
+    pub fn find(&self, name: &str) -> Option<&StoreEntry> {
+        self.index.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Entries in insertion order.
+    pub fn list(&self) -> &[StoreEntry] {
+        &self.index.entries
+    }
+
+    pub fn len(&self) -> usize {
+        self.index.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.entries.is_empty()
+    }
+
+    pub fn n_shards(&self) -> u32 {
+        self.index.n_shards
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Total bytes of live payloads.
+    pub fn live_bytes(&self) -> u64 {
+        self.index.entries.iter().map(|e| e.len).sum()
+    }
+
+    /// Bytes held by removed (unreachable) payloads. Saturating: a
+    /// crafted index with overlapping entries can make live > stored
+    /// without failing `open`'s per-entry bounds checks.
+    pub fn dead_bytes(&self) -> u64 {
+        let shard_data: u64 = self
+            .shard_sizes
+            .iter()
+            .map(|&s| s.saturating_sub(SHARD_MAGIC.len() as u64))
+            .sum();
+        shard_data.saturating_sub(self.live_bytes())
+    }
+
+    fn shard_path(&self, shard: u32) -> PathBuf {
+        self.dir.join(shard_file_name(shard))
+    }
+
+    fn write_index(&self) -> Result<()> {
+        let tmp = self.dir.join(format!("{INDEX_FILE}.tmp"));
+        let final_path = self.dir.join(INDEX_FILE);
+        fs::write(&tmp, self.index.to_bytes())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        fs::rename(&tmp, &final_path)
+            .with_context(|| format!("committing {}", final_path.display()))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BackendKind, CuszConfig, ErrorBound};
+    use crate::coordinator::Coordinator;
+    use crate::field::Field;
+    use crate::metrics;
+    use crate::testkit::fields::{make, Regime};
+    use crate::testkit::tmp_dir;
+
+    fn coordinator() -> Coordinator {
+        Coordinator::new(CuszConfig {
+            backend: BackendKind::Cpu,
+            eb: ErrorBound::Abs(1e-3),
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    fn sample_field(i: u64) -> Field {
+        let regime = Regime::ALL[(i % 3) as usize];
+        Field::new(format!("field-{i}"), vec![64, 64], make(regime, 64 * 64, i)).unwrap()
+    }
+
+    #[test]
+    fn create_add_get_roundtrip() {
+        let dir = tmp_dir("store-roundtrip");
+        let coord = coordinator();
+        let mut store = Store::create(&dir, 2).unwrap();
+        let fields: Vec<Field> = (0..5).map(sample_field).collect();
+        for f in &fields {
+            let archive = coord.compress(f).unwrap();
+            let entry = store.add(&archive).unwrap();
+            assert_eq!(entry.dims, vec![64, 64]);
+        }
+        assert_eq!(store.len(), 5);
+        // random access in arbitrary order, bounds verified
+        for f in fields.iter().rev() {
+            let archive = store.get(&f.name).unwrap();
+            let out = coord.decompress(&archive).unwrap();
+            assert_eq!(
+                metrics::verify_error_bound(&f.data, &out.data, 1e-3),
+                None,
+                "{}",
+                f.name
+            );
+        }
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn reopen_preserves_entries_and_verifies() {
+        let dir = tmp_dir("store-reopen");
+        let coord = coordinator();
+        {
+            let mut store = Store::create(&dir, 3).unwrap();
+            for i in 0..4 {
+                store.add(&coord.compress(&sample_field(i)).unwrap()).unwrap();
+            }
+        }
+        let store = Store::open(&dir).unwrap();
+        assert_eq!(store.len(), 4);
+        assert_eq!(store.n_shards(), 3);
+        store.verify().unwrap();
+        // payloads really are spread across shards
+        let mut shards: Vec<u32> = store.list().iter().map(|e| e.shard).collect();
+        shards.sort_unstable();
+        shards.dedup();
+        assert!(shards.len() > 1, "expected multi-shard placement");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn duplicate_and_missing_names_error() {
+        let dir = tmp_dir("store-dup");
+        let coord = coordinator();
+        let mut store = Store::create(&dir, 1).unwrap();
+        let archive = coord.compress(&sample_field(0)).unwrap();
+        store.add(&archive).unwrap();
+        assert!(store.add(&archive).is_err());
+        assert!(store.get("nope").is_err());
+        assert!(store.remove("nope").is_err());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn remove_then_readd_and_compact() {
+        let dir = tmp_dir("store-rm");
+        let coord = coordinator();
+        let mut store = Store::create(&dir, 2).unwrap();
+        for i in 0..4 {
+            store.add(&coord.compress(&sample_field(i)).unwrap()).unwrap();
+        }
+        store.remove("field-1").unwrap();
+        assert_eq!(store.len(), 3);
+        assert!(store.get("field-1").is_err());
+        assert!(store.dead_bytes() > 0);
+        // same name can come back
+        store.add(&coord.compress(&sample_field(1)).unwrap()).unwrap();
+        assert_eq!(store.len(), 4);
+
+        store.remove("field-2").unwrap();
+        let cdir = tmp_dir("store-compact");
+        let compacted = store.compact_into(&cdir).unwrap();
+        assert_eq!(compacted.len(), 3);
+        assert_eq!(compacted.dead_bytes(), 0);
+        compacted.verify().unwrap();
+        fs::remove_dir_all(&dir).unwrap();
+        fs::remove_dir_all(&cdir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_shard_detected_on_get() {
+        let dir = tmp_dir("store-corrupt");
+        let coord = coordinator();
+        let mut store = Store::create(&dir, 1).unwrap();
+        let entry = store.add(&coord.compress(&sample_field(0)).unwrap()).unwrap();
+        // flip one payload byte in the middle of the entry
+        let path = dir.join(shard_file_name(0));
+        let mut bytes = fs::read(&path).unwrap();
+        let mid = (entry.offset + entry.len / 2) as usize;
+        bytes[mid] ^= 0xff;
+        fs::write(&path, &bytes).unwrap();
+        let store = Store::open(&dir).unwrap();
+        assert!(store.get("field-0").is_err());
+        assert!(store.verify().is_err());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn truncated_shard_detected_on_open() {
+        let dir = tmp_dir("store-trunc");
+        let coord = coordinator();
+        let mut store = Store::create(&dir, 1).unwrap();
+        store.add(&coord.compress(&sample_field(0)).unwrap()).unwrap();
+        let path = dir.join(shard_file_name(0));
+        let bytes = fs::read(&path).unwrap();
+        fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(Store::open(&dir).is_err());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn create_refuses_existing_store() {
+        let dir = tmp_dir("store-exists");
+        Store::create(&dir, 1).unwrap();
+        assert!(Store::create(&dir, 1).is_err());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn deferred_index_commits_once() {
+        let dir = tmp_dir("store-defer");
+        let coord = coordinator();
+        let mut store = Store::create(&dir, 1).unwrap();
+        store.set_deferred_index(true).unwrap();
+        for i in 0..3 {
+            store.add(&coord.compress(&sample_field(i)).unwrap()).unwrap();
+        }
+        // on-disk index untouched so far: a concurrent open sees an empty
+        // bundle with the appended payloads as (harmless) dead space —
+        // the crash-mid-batch picture
+        let snapshot = Store::open(&dir).unwrap();
+        assert_eq!(snapshot.len(), 0);
+        assert!(snapshot.dead_bytes() > 0);
+        drop(snapshot);
+        store.set_deferred_index(false).unwrap(); // single commit
+        drop(store);
+        let store = Store::open(&dir).unwrap();
+        assert_eq!(store.len(), 3);
+        store.verify().unwrap();
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn create_refuses_orphan_shards() {
+        let dir = tmp_dir("store-orphan");
+        Store::create(&dir, 1).unwrap();
+        // losing just the index must not let create() truncate payloads
+        fs::remove_file(dir.join("index.cuszi")).unwrap();
+        assert!(Store::create(&dir, 1).is_err());
+        assert!(Store::open_or_create(&dir, 1).is_err());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn open_or_create_is_idempotent() {
+        let dir = tmp_dir("store-ooc");
+        assert!(!Store::exists(&dir));
+        let coord = coordinator();
+        let mut store = Store::open_or_create(&dir, 2).unwrap();
+        store.add(&coord.compress(&sample_field(0)).unwrap()).unwrap();
+        drop(store);
+        assert!(Store::exists(&dir));
+        // second call opens (shard count preserved), does not recreate
+        let store = Store::open_or_create(&dir, 5).unwrap();
+        assert_eq!(store.n_shards(), 2);
+        assert_eq!(store.len(), 1);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn add_bytes_rejects_garbage_payload() {
+        let dir = tmp_dir("store-garbage");
+        let mut store = Store::create(&dir, 1).unwrap();
+        assert!(store.add_bytes("junk", b"definitely not an archive").is_err());
+        assert!(store.is_empty());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

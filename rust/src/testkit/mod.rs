@@ -1,5 +1,27 @@
 //! Test infrastructure: a mini property-testing kit (offline substitute
-//! for proptest, DESIGN.md §4) and shared field fixtures.
+//! for proptest, DESIGN.md §4), shared field fixtures, and a tempdir
+//! helper (offline substitute for the tempfile crate).
 
 pub mod fields;
 pub mod prop;
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Create a fresh unique directory under the system temp dir. Callers are
+/// expected to remove it when done (tests may leave it on panic — paths
+/// embed the pid so reruns never collide).
+pub fn tmp_dir(tag: &str) -> PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.subsec_nanos())
+        .unwrap_or(0);
+    let dir = std::env::temp_dir().join(format!(
+        "cusz-{tag}-{}-{seq}-{nanos}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).expect("create tmp dir");
+    dir
+}

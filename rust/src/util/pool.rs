@@ -5,6 +5,7 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
 
 /// Run `f(i, &items[i])` for every index across `threads` workers and
 /// collect results in order. Work-stealing via an atomic cursor keeps load
@@ -23,9 +24,9 @@ where
     let mut out: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
     let out_ptr = SendPtr(out.as_mut_ptr());
 
-    crossbeam_utils::thread::scope(|s| {
+    std::thread::scope(|s| {
         for _ in 0..threads {
-            s.spawn(|_| {
+            s.spawn(|| {
                 let out_ptr = out_ptr; // copy the Send wrapper into the thread
                 loop {
                     let i = cursor.fetch_add(1, Ordering::Relaxed);
@@ -40,8 +41,7 @@ where
                 }
             });
         }
-    })
-    .expect("worker panicked");
+    });
 
     out.into_iter().map(|r| r.expect("slot filled")).collect()
 }
@@ -102,6 +102,70 @@ impl<O: Send + 'static> Stage<O> {
     }
 }
 
+/// A bounded fan-out stage: `workers` threads pull items from one shared
+/// input queue, apply `f`, and push results (in completion order) into one
+/// bounded output channel. The multi-worker generalization of [`Stage`]
+/// for stages whose per-item cost dwarfs the rest of the pipeline — e.g.
+/// whole-field compression in the batch service.
+pub struct FanStage<O: Send + 'static> {
+    pub rx: Receiver<O>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl<O: Send + 'static> FanStage<O> {
+    pub fn spawn<I, F>(rx_in: Receiver<I>, workers: usize, depth: usize, name: &str, f: F) -> Self
+    where
+        I: Send + 'static,
+        F: Fn(I) -> O + Send + Sync + 'static,
+    {
+        let workers = workers.max(1);
+        let (tx, rx) = sync_channel::<O>(depth.max(1));
+        let shared_rx = Arc::new(Mutex::new(rx_in));
+        let f = Arc::new(f);
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let rx_in = Arc::clone(&shared_rx);
+            let tx = tx.clone();
+            let f = Arc::clone(&f);
+            let handle = std::thread::Builder::new()
+                .name(format!("{name}-{w}"))
+                .spawn(move || loop {
+                    // Hold the queue lock only for the dequeue, never for
+                    // the work itself.
+                    let item = match rx_in.lock() {
+                        Ok(guard) => guard.recv(),
+                        Err(_) => break, // a sibling worker panicked
+                    };
+                    let Ok(item) = item else {
+                        break; // producer hung up
+                    };
+                    if tx.send(f(item)).is_err() {
+                        break; // downstream hung up
+                    }
+                })
+                .expect("spawn fan stage");
+            handles.push(handle);
+        }
+        FanStage { rx, handles }
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Join all workers, re-raising the first worker panic (the same
+    /// contract as [`parallel_map`]: a panicking job must not vanish).
+    pub fn join(self) {
+        drop(self.rx);
+        for h in self.handles {
+            if let Err(payload) = h.join() {
+                std::panic::resume_unwind(payload);
+            }
+        }
+    }
+}
+
 /// Create the head of a pipeline: a bounded producer channel.
 pub fn bounded<T: Send>(depth: usize) -> (SyncSender<T>, Receiver<T>) {
     sync_channel(depth)
@@ -134,6 +198,32 @@ mod tests {
         let empty: Vec<u32> = vec![];
         assert!(parallel_map(8, &empty, |_, &x| x).is_empty());
         assert_eq!(parallel_map(8, &[42u32], |_, &x| x + 1), vec![43]);
+    }
+
+    #[test]
+    fn fan_stage_processes_every_item_once() {
+        let (tx, rx) = bounded::<u32>(4);
+        let fan = FanStage::spawn(rx, 4, 4, "fan", |x: u32| x * 2);
+        assert_eq!(fan.workers(), 4);
+        let producer = std::thread::spawn(move || {
+            for i in 0..500 {
+                tx.send(i).unwrap();
+            }
+        });
+        let mut got: Vec<u32> = fan.rx.iter().collect();
+        producer.join().unwrap();
+        got.sort_unstable();
+        assert_eq!(got, (0..500).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fan_stage_joins_cleanly_after_input_closes() {
+        let (tx, rx) = bounded::<u32>(1);
+        let fan = FanStage::spawn(rx, 2, 1, "fan", |x: u32| x);
+        tx.send(1).unwrap();
+        assert_eq!(fan.rx.recv().unwrap(), 1);
+        drop(tx); // close the input so workers drain and exit
+        fan.join();
     }
 
     #[test]

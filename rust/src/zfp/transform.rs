@@ -89,14 +89,14 @@ fn transform(block: &mut [i32], ndim: usize, lift: impl Fn(&mut [i32; 4]), rev: 
 /// zfp's sequency order, so low-frequency coefficients (big magnitudes)
 /// are encoded first within each bit plane.
 pub fn perm(ndim: usize) -> &'static [usize] {
-    use once_cell::sync::Lazy;
-    static P1: Lazy<Vec<usize>> = Lazy::new(|| make_perm(1));
-    static P2: Lazy<Vec<usize>> = Lazy::new(|| make_perm(2));
-    static P3: Lazy<Vec<usize>> = Lazy::new(|| make_perm(3));
+    use std::sync::OnceLock;
+    static P1: OnceLock<Vec<usize>> = OnceLock::new();
+    static P2: OnceLock<Vec<usize>> = OnceLock::new();
+    static P3: OnceLock<Vec<usize>> = OnceLock::new();
     match ndim {
-        1 => &P1,
-        2 => &P2,
-        3 => &P3,
+        1 => P1.get_or_init(|| make_perm(1)),
+        2 => P2.get_or_init(|| make_perm(2)),
+        3 => P3.get_or_init(|| make_perm(3)),
         _ => panic!("ndim"),
     }
 }

@@ -103,6 +103,78 @@ fn prop_huffman_roundtrip_random_distributions() {
 }
 
 #[test]
+fn prop_archive_rejects_truncation_and_bitflips() {
+    check("archive parser errors (never panics) on corrupt bytes", |rng| {
+        // small field keeps each case cheap; regimes vary via smoothing
+        let ndim = gen::usize_in(rng, 1, 2);
+        let dims: Vec<usize> = (0..ndim).map(|_| gen::usize_in(rng, 5, 50)).collect();
+        let n: usize = dims.iter().product();
+        let data = gen::f32_vec(rng, n, 1.0);
+        let field = Field::new("corrupt", dims, data).unwrap();
+        let coord = coordinator(1e-2);
+        let bytes = coord
+            .compress(&field)
+            .map_err(|e| e.to_string())?
+            .to_bytes();
+
+        // any proper prefix must be rejected
+        let cut = gen::usize_in(rng, 0, bytes.len() - 1);
+        if cusz::container::Archive::from_bytes(&bytes[..cut]).is_ok() {
+            return Err(format!("truncated archive ({cut}/{} bytes) parsed", bytes.len()));
+        }
+
+        // any single bit flip lands in the magic, a section frame, or
+        // CRC-covered payload — all must be rejected
+        let pos = gen::usize_in(rng, 0, bytes.len() - 1);
+        let bit = gen::usize_in(rng, 0, 7);
+        let mut flipped = bytes.clone();
+        flipped[pos] ^= 1 << bit;
+        if cusz::container::Archive::from_bytes(&flipped).is_ok() {
+            return Err(format!("bit flip at {pos}:{bit} parsed"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_store_open_rejects_corrupt_index() {
+    use cusz::store::Store;
+
+    // one tiny bundle on disk; every case corrupts a copy of its index
+    let dir = cusz::testkit::tmp_dir("prop-store");
+    let coord = coordinator(1e-2);
+    let mut store = Store::create(&dir, 2).unwrap();
+    for i in 0..3u64 {
+        let data: Vec<f32> = (0..2048).map(|k| ((k as f32) * 0.01).sin() + i as f32).collect();
+        let field = Field::new(format!("f{i}"), vec![2048], data).unwrap();
+        store.add(&coord.compress(&field).unwrap()).unwrap();
+    }
+    drop(store);
+    let index_path = dir.join("index.cuszi");
+    let good = std::fs::read(&index_path).unwrap();
+
+    check("store open errors (never panics) on corrupt index", |rng| {
+        let mut bad = good.clone();
+        if rng.f32() < 0.5 {
+            bad.truncate(gen::usize_in(rng, 0, bad.len() - 1));
+        } else {
+            let pos = gen::usize_in(rng, 0, bad.len() - 1);
+            bad[pos] ^= 1 << gen::usize_in(rng, 0, 7);
+        }
+        std::fs::write(&index_path, &bad).map_err(|e| e.to_string())?;
+        if Store::open(&dir).is_ok() {
+            return Err("corrupt index opened".into());
+        }
+        Ok(())
+    });
+
+    // restore and confirm the bundle is intact again
+    std::fs::write(&index_path, &good).unwrap();
+    Store::open(&dir).unwrap().verify().unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
 fn prop_zfp_rate_size_and_monotonicity() {
     check("zfp fixed rate gives fixed size", |rng| {
         let ndim = gen::usize_in(rng, 1, 3);

@@ -1,0 +1,127 @@
+//! End-to-end acceptance for the store+serve subsystem: a multi-field
+//! snapshot batched through the streaming pipeline into one `.cuszb`
+//! bundle, then single-field random-access decompression with the error
+//! bound verified — the serving-shaped analogue of the paper's
+//! compress-every-field campaign loop.
+
+use std::sync::Arc;
+
+use cusz::config::{BackendKind, CuszConfig, ErrorBound};
+use cusz::coordinator::Coordinator;
+use cusz::datagen::{self, Dataset};
+use cusz::field::Field;
+use cusz::metrics;
+use cusz::serve::{BatchCompressor, BatchConfig};
+use cusz::store::Store;
+use cusz::testkit::fields::{make, Regime};
+use cusz::testkit::tmp_dir;
+
+fn coordinator() -> Arc<Coordinator> {
+    Arc::new(
+        Coordinator::new(CuszConfig {
+            backend: BackendKind::Cpu,
+            eb: ErrorBound::ValRel(1e-3),
+            threads: 1, // the batch layer supplies job concurrency
+            ..Default::default()
+        })
+        .unwrap(),
+    )
+}
+
+/// A snapshot of 9 fields: 8 synthetic across regimes and dimensionalities
+/// plus one dataset-profile field.
+fn snapshot() -> Vec<Field> {
+    let mut fields = Vec::new();
+    for i in 0..8u64 {
+        let (name, dims): (String, Vec<usize>) = match i % 3 {
+            0 => (format!("snap/line-{i}"), vec![20_000]),
+            1 => (format!("snap/plane-{i}"), vec![128, 128]),
+            _ => (format!("snap/cube-{i}"), vec![24, 32, 40]),
+        };
+        let n: usize = dims.iter().product();
+        let data = make(Regime::ALL[(i % 3) as usize], n, i);
+        fields.push(Field::new(name, dims, data).unwrap());
+    }
+    fields.push(datagen::generate(Dataset::CesmAtm, "CLDHGH", 7));
+    fields
+}
+
+#[test]
+fn batched_snapshot_roundtrips_via_random_access() {
+    let dir = tmp_dir("accept-store-serve");
+    let coord = coordinator();
+    let originals = snapshot();
+    assert!(originals.len() >= 8, "acceptance requires >= 8 fields");
+
+    // --- batch-compress the whole snapshot into one bundle -------------
+    let mut store = Store::create(&dir, 3).unwrap();
+    let batch = BatchCompressor::new(
+        Arc::clone(&coord),
+        BatchConfig { workers: 4, queue_depth: 2 },
+    );
+    let stats = batch.run_into_store(originals.clone(), &mut store).unwrap();
+    assert_eq!(stats.jobs, originals.len());
+    assert_eq!(stats.failed, 0, "errors: {:?}", stats.errors);
+    assert_eq!(store.len(), originals.len());
+    assert!(stats.compression_ratio() > 1.0);
+    drop(store);
+
+    // --- reopen from disk, single-field random access ------------------
+    let store = Store::open(&dir).unwrap();
+    store.verify().unwrap();
+    let target = &originals[5]; // one named field, siblings untouched
+    let archive = store.get(&target.name).unwrap();
+    let restored = coord.decompress(&archive).unwrap();
+    assert_eq!(restored.dims, target.dims);
+    assert_eq!(
+        metrics::verify_error_bound(&target.data, &restored.data, archive.header.abs_eb),
+        None,
+        "error bound violated for {}",
+        target.name
+    );
+
+    // --- and every other field also honors its bound -------------------
+    for f in &originals {
+        let archive = store.get(&f.name).unwrap();
+        let out = coord.decompress(&archive).unwrap();
+        assert_eq!(
+            metrics::verify_error_bound(&f.data, &out.data, archive.header.abs_eb),
+            None,
+            "error bound violated for {}",
+            f.name
+        );
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn store_survives_rm_and_batch_append_cycles() {
+    let dir = tmp_dir("accept-cycles");
+    let coord = coordinator();
+    let mut store = Store::create(&dir, 2).unwrap();
+    let batch = BatchCompressor::new(Arc::clone(&coord), BatchConfig { workers: 2, queue_depth: 2 });
+
+    let first: Vec<Field> = snapshot().into_iter().take(4).collect();
+    batch.run_into_store(first.clone(), &mut store).unwrap();
+    store.remove(&first[1].name).unwrap();
+
+    // a second batch streams into the same bundle alongside survivors
+    let second: Vec<Field> = snapshot().into_iter().skip(4).collect();
+    batch.run_into_store(second.clone(), &mut store).unwrap();
+
+    drop(store);
+    let store = Store::open(&dir).unwrap();
+    assert_eq!(store.len(), first.len() - 1 + second.len());
+    assert!(store.find(&first[1].name).is_none());
+    for f in first.iter().take(1).chain(first.iter().skip(2)).chain(second.iter()) {
+        let archive = store.get(&f.name).unwrap();
+        let out = coord.decompress(&archive).unwrap();
+        assert_eq!(
+            metrics::verify_error_bound(&f.data, &out.data, archive.header.abs_eb),
+            None,
+            "{}",
+            f.name
+        );
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
