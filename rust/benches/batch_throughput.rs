@@ -81,7 +81,7 @@ fn main() {
     let mut batch_store = Store::create(&batch_dir, 4).unwrap();
     let batch = BatchCompressor::new(
         Arc::clone(&batch_coord),
-        BatchConfig { workers: cores, queue_depth: 4 },
+        BatchConfig { workers: cores, queue_depth: 4, ..Default::default() },
     );
     let stats = batch
         .run_into_store(fields.clone(), &mut batch_store)

@@ -65,7 +65,7 @@ fn main() {
             format!("{:.2}", cstats.timer.total("3.codebook").as_secs_f64() * 1e3),
             format!("{:.2}", g(cstats.timer.total("5.encode-deflate"))),
             format!("{:.2}", g(cstats.timer.total("total"))),
-            format!("{:.2}", g(dstats.timer.total("1.huffman-decode"))),
+            format!("{:.2}", g(dstats.timer.total("1.decode"))),
             format!("{:.2}", g(dstats.timer.total("3.reverse-predict-quant"))),
             format!("{:.2}", g(dstats.timer.total("total"))),
         ]);
@@ -133,7 +133,7 @@ fn main() {
             "codebook ms",
             "enc+defl",
             "compress",
-            "huff-dec",
+            "sym-dec",
             "rev P+Q",
             "decompress",
         ],

@@ -43,7 +43,7 @@ pub fn symbols_and_book(field: &Field) -> (Vec<u16>, CanonicalCodebook) {
     })
     .unwrap();
     let archive = coord.compress(field).unwrap();
-    let lengths = archive.codebook_lengths.clone();
+    let lengths = archive.encoder_aux.clone();
     let rev_book = CanonicalCodebook::from_lengths(&lengths).unwrap();
     let rev = huffman::ReverseCodebook::from_lengths(&lengths).unwrap();
     let symbols = huffman::inflate_chunks(&archive.stream, &rev, 8);

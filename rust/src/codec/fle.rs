@@ -1,0 +1,378 @@
+//! Fixed-length bitshuffle encoder (FZ-GPU style, arXiv:2304.12557) as the
+//! second [`EncoderStage`] backend.
+//!
+//! Per chunk: quant codes are mapped to small unsigned magnitudes
+//! (outlier marker 0 stays 0; everything else is zigzag of its distance
+//! from the radius, shifted by one), the chunk's bit width `w` is the
+//! width of the largest mapped value, and the values are emitted
+//! bitplane-shuffled — for every group of 64 values, plane 0 of all 64,
+//! then plane 1, … up to plane `w-1`. The shuffle groups same-significance
+//! bits so the archive's lossless tail stage (gzip/zstd) sees long
+//! near-constant runs where Huffman would have interleaved them.
+//!
+//! Ratio is `w` bits/symbol before the lossless stage (vs entropy for
+//! Huffman), but the hot loop is branch-light, table-free, and touches
+//! each set bit once — the throughput-first end of the encoder family.
+//!
+//! The sidecar is one byte per chunk: its bit width.
+
+use anyhow::{bail, Result};
+
+use super::{EncodeContext, EncodedSymbols, EncoderKind, EncoderStage};
+use crate::huffman::deflate::{DeflatedChunk, DeflatedStream};
+use crate::util::bitio::{BitReader, BitWriter};
+use crate::util::pool::parallel_map_range;
+
+/// Hard ceiling on a chunk's bit width: the transform of any u16 symbol
+/// at any radius fits 17 bits, so anything larger in a sidecar is corrupt.
+pub const MAX_WIDTH: u32 = 17;
+
+pub struct FleStage;
+
+/// Outlier marker 0 maps to 0; code `s` maps to `zigzag(s - radius) + 1`
+/// so codes near the radius (the common case after Lorenzo prediction)
+/// become small magnitudes.
+#[inline]
+fn transform(s: u16, radius: i32) -> u32 {
+    if s == 0 {
+        0
+    } else {
+        zigzag(s as i32 - radius) + 1
+    }
+}
+
+#[inline]
+fn untransform(v: u32, radius: i32, dict: usize) -> Result<u16> {
+    if v == 0 {
+        return Ok(0);
+    }
+    let s = unzigzag(v - 1) as i64 + radius as i64;
+    // the nonzero path never produces symbol 0 (the marker has its own
+    // encoding), so 0 here means a corrupt stream, not an outlier
+    if s <= 0 || s >= dict as i64 {
+        bail!("corrupt FLE stream: value {v} decodes outside dict {dict}");
+    }
+    Ok(s as u16)
+}
+
+#[inline]
+fn zigzag(d: i32) -> u32 {
+    ((d << 1) ^ (d >> 31)) as u32
+}
+
+#[inline]
+fn unzigzag(v: u32) -> i32 {
+    ((v >> 1) as i32) ^ -((v & 1) as i32)
+}
+
+/// Bit width FLE would need for a symbol distribution — the fixed-length
+/// cost [`super::auto_select`] weighs against the entropy. 0 means only
+/// outlier markers are present.
+pub fn width_for_histogram(freq: &[u64]) -> u32 {
+    let radius = (freq.len() / 2) as i32;
+    let mut all = 0u32;
+    for (s, &c) in freq.iter().enumerate() {
+        if c > 0 {
+            all |= transform(s as u16, radius);
+        }
+    }
+    32 - all.leading_zeros()
+}
+
+/// Encode one chunk: single pass scatters set bits into per-group plane
+/// words (tracking the OR of all values for the width), then planes
+/// `0..w` are written out group-major.
+fn encode_chunk(symbols: &[u16], radius: i32) -> (u8, DeflatedChunk) {
+    let n = symbols.len();
+    let ngroups = n.div_ceil(64);
+    let mut planes = vec![[0u64; MAX_WIDTH as usize]; ngroups];
+    let mut all = 0u32;
+    for (g, group) in symbols.chunks(64).enumerate() {
+        let p = &mut planes[g];
+        for (i, &s) in group.iter().enumerate() {
+            let mut v = transform(s, radius);
+            all |= v;
+            while v != 0 {
+                let b = v.trailing_zeros() as usize;
+                p[b] |= 1u64 << i;
+                v &= v - 1;
+            }
+        }
+    }
+    let w = 32 - all.leading_zeros();
+    let mut writer = BitWriter::with_capacity_bits(n * w as usize);
+    let mut rem = n;
+    for p in &planes {
+        let gl = rem.min(64) as u32;
+        for plane in p.iter().take(w as usize) {
+            writer.write(*plane, gl);
+        }
+        rem -= gl as usize;
+    }
+    let (words, bits) = writer.finish();
+    debug_assert_eq!(bits, n as u64 * w as u64);
+    (w as u8, DeflatedChunk { words, bits, symbols: n as u32 })
+}
+
+fn decode_chunk(
+    chunk: &DeflatedChunk,
+    width: u8,
+    radius: i32,
+    dict: usize,
+    chunk_symbols: usize,
+) -> Result<Vec<u16>> {
+    let n = chunk.symbols as usize;
+    let w = width as u32;
+    if w > MAX_WIDTH {
+        bail!("corrupt FLE sidecar: width {w} exceeds {MAX_WIDTH}");
+    }
+    if chunk.bits != n as u64 * w as u64 {
+        bail!(
+            "corrupt FLE chunk: {} bits for {n} symbols at width {w}",
+            chunk.bits
+        );
+    }
+    if chunk.bits > chunk.words.len() as u64 * 64 {
+        bail!("corrupt FLE chunk: {} bits in {} words", chunk.bits, chunk.words.len());
+    }
+    if w == 0 && n > chunk_symbols {
+        bail!("corrupt FLE chunk: zero-width chunk claims {n} symbols");
+    }
+    let mut r = BitReader::new(&chunk.words, chunk.bits);
+    let mut out = Vec::with_capacity(n);
+    let mut done = 0usize;
+    while done < n {
+        let gl = (n - done).min(64) as u32;
+        let mut vals = [0u32; 64];
+        for b in 0..w {
+            let Some(mut word) = r.read(gl) else {
+                bail!("corrupt FLE chunk: truncated bitplanes");
+            };
+            while word != 0 {
+                let i = word.trailing_zeros() as usize;
+                vals[i] |= 1u32 << b;
+                word &= word - 1;
+            }
+        }
+        for &v in vals.iter().take(gl as usize) {
+            out.push(untransform(v, radius, dict)?);
+        }
+        done += gl as usize;
+    }
+    Ok(out)
+}
+
+impl EncoderStage for FleStage {
+    fn kind(&self) -> EncoderKind {
+        EncoderKind::Fle
+    }
+
+    fn encode(&self, symbols: &[u16], ctx: &EncodeContext) -> Result<EncodedSymbols> {
+        let radius = (ctx.dict_size / 2) as i32;
+        let cs = ctx.chunk_symbols.max(1);
+        let nchunks = symbols.len().div_ceil(cs);
+        let encoded: Vec<(u8, DeflatedChunk)> = parallel_map_range(ctx.threads, nchunks, |ci| {
+            let lo = ci * cs;
+            let hi = (lo + cs).min(symbols.len());
+            encode_chunk(&symbols[lo..hi], radius)
+        });
+        let mut aux = Vec::with_capacity(nchunks);
+        let mut chunks = Vec::with_capacity(nchunks);
+        let mut max_w = 0u32;
+        for (w, c) in encoded {
+            aux.push(w);
+            max_w = max_w.max(w as u32);
+            chunks.push(c);
+        }
+        Ok(EncodedSymbols {
+            aux,
+            stream: DeflatedStream { chunks, chunk_symbols: cs },
+            repr_bits: max_w.max(1),
+            codebook_time: std::time::Duration::ZERO,
+        })
+    }
+
+    fn decode(
+        &self,
+        aux: &[u8],
+        stream: &DeflatedStream,
+        dict_size: usize,
+        threads: usize,
+        max_symbols: usize,
+    ) -> Result<Vec<u16>> {
+        if aux.len() != stream.chunks.len() {
+            bail!(
+                "FLE sidecar has {} widths for {} chunks",
+                aux.len(),
+                stream.chunks.len()
+            );
+        }
+        // width > 0 chunks are bounded by their backing words, but
+        // zero-width chunks carry no payload at all — without this cap a
+        // tiny crafted archive could claim terabytes of zero symbols
+        if stream.total_symbols() > max_symbols as u64 {
+            bail!(
+                "FLE stream claims {} symbols, caller expects at most {max_symbols}",
+                stream.total_symbols()
+            );
+        }
+        let radius = (dict_size / 2) as i32;
+        let cs = stream.chunk_symbols.max(1);
+        let parts: Vec<Result<Vec<u16>>> =
+            parallel_map_range(threads, stream.chunks.len(), |ci| {
+                decode_chunk(&stream.chunks[ci], aux[ci], radius, dict_size, cs)
+            });
+        let mut out = Vec::with_capacity(stream.total_symbols() as usize);
+        for p in parts {
+            out.extend(p?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CodewordRepr;
+    use crate::util::prng::Rng;
+
+    fn ctx(freq: &[u64], chunk: usize, threads: usize) -> EncodeContext<'_> {
+        EncodeContext {
+            dict_size: freq.len(),
+            chunk_symbols: chunk,
+            threads,
+            codeword_repr: CodewordRepr::Adaptive,
+            freq,
+        }
+    }
+
+    fn roundtrip(symbols: &[u16], dict: usize, chunk: usize) {
+        let freq = vec![0u64; dict];
+        let stage = FleStage;
+        let enc = stage.encode(symbols, &ctx(&freq, chunk, 4)).unwrap();
+        let out = stage.decode(&enc.aux, &enc.stream, dict, 4, symbols.len()).unwrap();
+        assert_eq!(out, symbols);
+    }
+
+    #[test]
+    fn transform_is_bijective_over_the_dict() {
+        for dict in [128usize, 1024, 65536] {
+            let radius = (dict / 2) as i32;
+            // spot-check the full structure: marker, center, extremes
+            for s in [0u16, 1, (dict / 2) as u16, (dict / 2 + 1) as u16, (dict - 1) as u16] {
+                let v = transform(s, radius);
+                assert!(v < 1 << MAX_WIDTH, "dict {dict} sym {s} -> {v}");
+                assert_eq!(untransform(v, radius, dict).unwrap(), s, "dict {dict}");
+            }
+        }
+    }
+
+    #[test]
+    fn full_bijection_small_dict() {
+        let dict = 512usize;
+        let radius = (dict / 2) as i32;
+        let mut seen = std::collections::HashSet::new();
+        for s in 0..dict as u16 {
+            let v = transform(s, radius);
+            assert!(seen.insert(v), "collision at symbol {s}");
+            assert_eq!(untransform(v, radius, dict).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn roundtrip_random_streams() {
+        let mut rng = Rng::new(17);
+        let dict = 1024usize;
+        for n in [0usize, 1, 63, 64, 65, 1000, 4096, 10_001] {
+            let symbols: Vec<u16> = (0..n)
+                .map(|_| {
+                    if rng.f32() < 0.05 {
+                        0 // outlier marker
+                    } else {
+                        ((rng.normal() * 30.0) as i32 + 512).clamp(1, dict as i32 - 1) as u16
+                    }
+                })
+                .collect();
+            roundtrip(&symbols, dict, 4096);
+            roundtrip(&symbols, dict, 100); // irregular tail chunks
+        }
+    }
+
+    #[test]
+    fn zero_width_chunks_for_all_marker_streams() {
+        let symbols = vec![0u16; 5000];
+        let freq = vec![0u64; 1024];
+        let enc = FleStage.encode(&symbols, &ctx(&freq, 4096, 2)).unwrap();
+        assert!(enc.aux.iter().all(|&w| w == 0));
+        assert_eq!(enc.stream.total_bits(), 0);
+        let out = FleStage.decode(&enc.aux, &enc.stream, 1024, 2, symbols.len()).unwrap();
+        assert_eq!(out, symbols);
+    }
+
+    #[test]
+    fn stream_is_fixed_width_per_chunk() {
+        // codes in radius +/- 4 -> zigzag+1 max 9 -> width 4
+        let symbols: Vec<u16> = (0..8192).map(|i| (512 + (i % 9) - 4) as u16).collect();
+        let freq = vec![0u64; 1024];
+        let enc = FleStage.encode(&symbols, &ctx(&freq, 4096, 1)).unwrap();
+        for (c, &w) in enc.stream.chunks.iter().zip(&enc.aux) {
+            assert_eq!(c.bits, c.symbols as u64 * w as u64);
+            assert_eq!(w, 4);
+        }
+    }
+
+    #[test]
+    fn corrupt_sidecar_and_chunks_rejected() {
+        let symbols: Vec<u16> = (0..2000).map(|i| (500 + i % 30) as u16).collect();
+        let freq = vec![0u64; 1024];
+        let enc = FleStage.encode(&symbols, &ctx(&freq, 512, 1)).unwrap();
+
+        // sidecar length mismatch
+        let mut short = enc.aux.clone();
+        short.pop();
+        assert!(FleStage.decode(&short, &enc.stream, 1024, 1, symbols.len()).is_err());
+
+        // width beyond the ceiling
+        let mut wide = enc.aux.clone();
+        wide[0] = (MAX_WIDTH + 1) as u8;
+        assert!(FleStage.decode(&wide, &enc.stream, 1024, 1, symbols.len()).is_err());
+
+        // width inconsistent with the chunk's bit count
+        let mut wrong = enc.aux.clone();
+        wrong[0] += 1;
+        assert!(FleStage.decode(&wrong, &enc.stream, 1024, 1, symbols.len()).is_err());
+
+        // bit count exceeding the backing words
+        let mut stream = enc.stream.clone();
+        let extra_syms = stream.chunks[0].symbols as u64 + 64;
+        stream.chunks[0].symbols += 64;
+        stream.chunks[0].bits = extra_syms * enc.aux[0] as u64;
+        assert!(FleStage.decode(&enc.aux, &stream, 1024, 1, usize::MAX).is_err());
+    }
+
+    #[test]
+    fn parallel_encode_is_deterministic() {
+        let mut rng = Rng::new(9);
+        let symbols: Vec<u16> = (0..50_000)
+            .map(|_| ((rng.normal() * 50.0) as i32 + 512).clamp(0, 1023) as u16)
+            .collect();
+        let freq = vec![0u64; 1024];
+        let a = FleStage.encode(&symbols, &ctx(&freq, 2048, 1)).unwrap();
+        let b = FleStage.encode(&symbols, &ctx(&freq, 2048, 8)).unwrap();
+        assert_eq!(a.aux, b.aux);
+        assert_eq!(a.stream, b.stream);
+    }
+
+    #[test]
+    fn width_for_histogram_matches_encode() {
+        let dict = 1024usize;
+        let mut freq = vec![0u64; dict];
+        for s in 500..525u16 {
+            freq[s as usize] = 10;
+        }
+        let w = width_for_histogram(&freq);
+        let symbols: Vec<u16> = (500..525).collect();
+        let enc = FleStage.encode(&symbols, &ctx(&freq, 4096, 1)).unwrap();
+        assert_eq!(enc.aux[0] as u32, w);
+    }
+}

@@ -1,0 +1,112 @@
+//! The chunked canonical-Huffman encoder as a pluggable [`EncoderStage`]
+//! — the paper's §3.2 path (tree → canonical codebook → fused
+//! encode+deflate), extracted from the old monolithic compressor. The
+//! sidecar is the per-symbol code-length table; the decoder re-canonizes
+//! (§3.2.3) so codewords never travel.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use super::{EncodeContext, EncodedSymbols, EncoderKind, EncoderStage};
+use crate::config::CodewordRepr;
+use crate::huffman::{self, CanonicalCodebook, ReverseCodebook};
+
+pub struct HuffmanStage;
+
+impl EncoderStage for HuffmanStage {
+    fn kind(&self) -> EncoderKind {
+        EncoderKind::Huffman
+    }
+
+    fn encode(&self, symbols: &[u16], ctx: &EncodeContext) -> Result<EncodedSymbols> {
+        if ctx.freq.len() != ctx.dict_size {
+            bail!(
+                "histogram has {} bins for dict size {}",
+                ctx.freq.len(),
+                ctx.dict_size
+            );
+        }
+        let t0 = Instant::now();
+        let lengths = huffman::build_lengths(ctx.freq);
+        let book = CanonicalCodebook::from_lengths(&lengths)?;
+        let codebook_time = t0.elapsed();
+        let repr_bits = match ctx.codeword_repr {
+            CodewordRepr::U32 => 32,
+            CodewordRepr::U64 => 64,
+            CodewordRepr::Adaptive => book.repr_bits(),
+        };
+        let stream = huffman::deflate_chunks(symbols, &book, ctx.chunk_symbols, ctx.threads);
+        Ok(EncodedSymbols { aux: lengths, stream, repr_bits, codebook_time })
+    }
+
+    fn decode(
+        &self,
+        aux: &[u8],
+        stream: &crate::huffman::deflate::DeflatedStream,
+        dict_size: usize,
+        threads: usize,
+        max_symbols: usize,
+    ) -> Result<Vec<u16>> {
+        if aux.len() > dict_size {
+            bail!("codebook has {} lengths for dict size {dict_size}", aux.len());
+        }
+        if stream.total_symbols() > max_symbols as u64 {
+            bail!(
+                "stream claims {} symbols, caller expects at most {max_symbols}",
+                stream.total_symbols()
+            );
+        }
+        let rev = ReverseCodebook::from_lengths(aux)?;
+        huffman::inflate::inflate_chunks_strict(stream, &rev, threads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn roundtrip_matches_direct_huffman_path() {
+        let dict = 1024usize;
+        let mut rng = Rng::new(5);
+        let symbols: Vec<u16> = (0..60_000)
+            .map(|_| ((rng.normal() * 12.0) as i32 + 512).clamp(0, dict as i32 - 1) as u16)
+            .collect();
+        let mut freq = vec![0u64; dict];
+        for &s in &symbols {
+            freq[s as usize] += 1;
+        }
+        let ctx = EncodeContext {
+            dict_size: dict,
+            chunk_symbols: 4096,
+            threads: 4,
+            codeword_repr: CodewordRepr::Adaptive,
+            freq: &freq,
+        };
+        let stage = HuffmanStage;
+        let enc = stage.encode(&symbols, &ctx).unwrap();
+        // identical to calling the huffman substrate directly
+        let lengths = huffman::build_lengths(&freq);
+        let book = CanonicalCodebook::from_lengths(&lengths).unwrap();
+        let direct = huffman::deflate_chunks(&symbols, &book, 4096, 4);
+        assert_eq!(enc.stream, direct);
+        assert_eq!(enc.aux, lengths);
+        let out = stage.decode(&enc.aux, &enc.stream, dict, 4, symbols.len()).unwrap();
+        assert_eq!(out, symbols);
+    }
+
+    #[test]
+    fn histogram_size_mismatch_rejected() {
+        let freq = vec![1u64; 16];
+        let ctx = EncodeContext {
+            dict_size: 1024,
+            chunk_symbols: 4096,
+            threads: 1,
+            codeword_repr: CodewordRepr::Adaptive,
+            freq: &freq,
+        };
+        assert!(HuffmanStage.encode(&[1, 2, 3], &ctx).is_err());
+    }
+}

@@ -1,0 +1,269 @@
+//! Pluggable codec pipeline: the encoder half of Figure 1 as swappable
+//! stages instead of a hard-wired Huffman path.
+//!
+//! A quant-code symbol stream can be turned into a framed byte stream by
+//! any [`EncoderStage`] backend:
+//!
+//! * [`HuffmanStage`] — the paper's customized canonical Huffman coding
+//!   (§3.2), extracted verbatim from the old monolithic compressor.
+//! * [`FleStage`] — an FZ-GPU-style fixed-length encoder
+//!   (arXiv:2304.12557): per-chunk max-magnitude bit width plus a bitplane
+//!   shuffle, trading compression ratio for encode/decode throughput and
+//!   leaving entropy removal to the archive's lossless tail stage.
+//!
+//! Which backend runs is the [`CodecSpec`] half of `CuszConfig`:
+//! `Huffman` and `Fle` force a backend, `Auto` resolves per field from the
+//! quant-code histogram ([`auto_select`]) — cuSZ+'s observation
+//! (arXiv:2105.12912) that the best encoder depends on data smoothness.
+//! The chosen backend is recorded in the archive header's encoder tag so
+//! decompression is self-describing.
+
+pub mod fle;
+pub mod huffman_stage;
+
+use anyhow::{bail, Result};
+
+use crate::config::{CodewordRepr, LosslessStage};
+use crate::huffman::deflate::DeflatedStream;
+
+pub use fle::FleStage;
+pub use huffman_stage::HuffmanStage;
+
+/// Concrete encoder backends — the domain of the archive header's encoder
+/// tag. Adding a backend means a new variant, a new tag value, and a new
+/// arm in [`stage_for`]; unknown tags from future archives fail cleanly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EncoderKind {
+    #[default]
+    Huffman,
+    Fle,
+}
+
+impl EncoderKind {
+    pub const ALL: [EncoderKind; 2] = [EncoderKind::Huffman, EncoderKind::Fle];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EncoderKind::Huffman => "huffman",
+            EncoderKind::Fle => "fle",
+        }
+    }
+
+    /// Wire value for the archive header.
+    pub fn to_tag(self) -> u8 {
+        match self {
+            EncoderKind::Huffman => 0,
+            EncoderKind::Fle => 1,
+        }
+    }
+
+    pub fn from_tag(v: u8) -> Result<Self> {
+        Ok(match v {
+            0 => EncoderKind::Huffman,
+            1 => EncoderKind::Fle,
+            _ => bail!("unknown encoder tag {v} (archive written by a newer cusz?)"),
+        })
+    }
+}
+
+/// What the user asks for; `Auto` resolves to a concrete [`EncoderKind`]
+/// per field once the quant-code histogram is known.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EncoderChoice {
+    #[default]
+    Huffman,
+    Fle,
+    Auto,
+}
+
+impl EncoderChoice {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "huffman" => EncoderChoice::Huffman,
+            "fle" => EncoderChoice::Fle,
+            "auto" => EncoderChoice::Auto,
+            _ => bail!("unknown codec '{s}' (huffman|fle|auto)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EncoderChoice::Huffman => "huffman",
+            EncoderChoice::Fle => "fle",
+            EncoderChoice::Auto => "auto",
+        }
+    }
+}
+
+/// The codec half of the configuration: which symbol encoder plus which
+/// lossless tail stage wraps the archive body.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CodecSpec {
+    pub encoder: EncoderChoice,
+    pub lossless: LosslessStage,
+}
+
+/// Encoder-stage inputs beyond the symbol stream itself.
+pub struct EncodeContext<'a> {
+    /// Quantization bins (symbol alphabet size; radius = dict_size/2).
+    pub dict_size: usize,
+    /// Symbols per framed chunk (the Table 6 knob; shared by backends so
+    /// chunk-parallel decode keeps one geometry).
+    pub chunk_symbols: usize,
+    pub threads: usize,
+    /// Huffman codeword representation preference (ignored by FLE).
+    pub codeword_repr: CodewordRepr,
+    /// Merged quant-code histogram, `len == dict_size` (already computed
+    /// by the dual-quant phase; FLE ignores it).
+    pub freq: &'a [u64],
+}
+
+/// An encoder's output: the chunked framed bitstream plus the sidecar
+/// bytes its decoder needs (Huffman: per-symbol codebook lengths; FLE:
+/// per-chunk bit widths).
+pub struct EncodedSymbols {
+    pub aux: Vec<u8>,
+    pub stream: DeflatedStream,
+    /// Representation width actually used, for stats (Huffman: packed
+    /// codeword repr; FLE: widest chunk).
+    pub repr_bits: u32,
+    /// Time spent building per-symbol tables before streaming (Huffman
+    /// tree + canonical codebook; zero for FLE) — reported separately so
+    /// the Table 7 breakdown keeps its codebook row.
+    pub codebook_time: std::time::Duration,
+}
+
+/// A symbol-stream encoder backend: quant codes in, framed chunked
+/// bitstream + sidecar out, and the exact inverse.
+pub trait EncoderStage: Send + Sync {
+    fn kind(&self) -> EncoderKind;
+
+    fn encode(&self, symbols: &[u16], ctx: &EncodeContext) -> Result<EncodedSymbols>;
+
+    /// Inverse of [`EncoderStage::encode`]. `aux` and `stream` come from an
+    /// untrusted archive: implementations must error (never panic) on
+    /// inconsistent sidecar/stream combinations, and must reject streams
+    /// claiming more than `max_symbols` total symbols *before* allocating
+    /// for them (the caller knows the expected count from the header's
+    /// geometry; a crafted stream must not turn symbol counts into
+    /// unbounded allocations).
+    fn decode(
+        &self,
+        aux: &[u8],
+        stream: &DeflatedStream,
+        dict_size: usize,
+        threads: usize,
+        max_symbols: usize,
+    ) -> Result<Vec<u16>>;
+}
+
+/// Static backend registry: every [`EncoderKind`] maps to one stateless
+/// stage instance.
+pub fn stage_for(kind: EncoderKind) -> &'static dyn EncoderStage {
+    static HUFFMAN: HuffmanStage = HuffmanStage;
+    static FLE: FleStage = FleStage;
+    match kind {
+        EncoderKind::Huffman => &HUFFMAN,
+        EncoderKind::Fle => &FLE,
+    }
+}
+
+/// Shannon entropy of a histogram in bits/symbol — the floor any entropy
+/// coder (Huffman) approaches.
+pub fn entropy_bits(freq: &[u64]) -> f64 {
+    let total: u64 = freq.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let t = total as f64;
+    freq.iter()
+        .filter(|&&c| c > 0)
+        .map(|&c| {
+            let p = c as f64 / t;
+            -p * p.log2()
+        })
+        .sum()
+}
+
+/// Auto mode selection: FLE wins when the entropy coder would shave less
+/// than this fraction off FLE's fixed width (its stream is then nearly
+/// incompressible and FLE's flat, table-free hot loop is the better
+/// trade); otherwise the histogram is skewed enough that Huffman's ratio
+/// advantage dominates.
+const AUTO_FLE_THRESHOLD: f64 = 0.8;
+
+/// Resolve `Auto` for one field from its merged quant-code histogram
+/// (`freq.len()` is the dict size).
+pub fn auto_select(freq: &[u64]) -> EncoderKind {
+    let width = fle::width_for_histogram(freq);
+    if width == 0 {
+        // degenerate stream (only outlier markers): FLE stores 0 bits/sym
+        return EncoderKind::Fle;
+    }
+    if entropy_bits(freq) >= AUTO_FLE_THRESHOLD * width as f64 {
+        EncoderKind::Fle
+    } else {
+        EncoderKind::Huffman
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tags_roundtrip_and_unknown_rejected() {
+        for k in EncoderKind::ALL {
+            assert_eq!(EncoderKind::from_tag(k.to_tag()).unwrap(), k);
+        }
+        for bad in [2u8, 7, 255] {
+            assert!(EncoderKind::from_tag(bad).is_err());
+        }
+    }
+
+    #[test]
+    fn choice_parses() {
+        assert_eq!(EncoderChoice::parse("huffman").unwrap(), EncoderChoice::Huffman);
+        assert_eq!(EncoderChoice::parse("fle").unwrap(), EncoderChoice::Fle);
+        assert_eq!(EncoderChoice::parse("auto").unwrap(), EncoderChoice::Auto);
+        assert!(EncoderChoice::parse("arith").is_err());
+    }
+
+    #[test]
+    fn entropy_known_values() {
+        // uniform over 4 symbols -> 2 bits
+        assert!((entropy_bits(&[5, 5, 5, 5]) - 2.0).abs() < 1e-12);
+        // single symbol -> 0 bits
+        assert_eq!(entropy_bits(&[0, 42, 0]), 0.0);
+        assert_eq!(entropy_bits(&[]), 0.0);
+    }
+
+    #[test]
+    fn auto_picks_huffman_for_skewed_and_fle_for_flat() {
+        let dict = 1024usize;
+        let radius = dict / 2;
+        // skewed: codes concentrated on radius +/- 1 -> low entropy
+        let mut skewed = vec![0u64; dict];
+        skewed[radius] = 1_000_000;
+        skewed[radius + 1] = 1000;
+        skewed[radius - 1] = 1000;
+        assert_eq!(auto_select(&skewed), EncoderKind::Huffman);
+        // flat: codes uniform over radius +/- 128 -> entropy ~ width
+        let mut flat = vec![0u64; dict];
+        for s in radius - 128..radius + 128 {
+            flat[s] = 100;
+        }
+        assert_eq!(auto_select(&flat), EncoderKind::Fle);
+        // degenerate: only outlier markers
+        let mut outliers = vec![0u64; dict];
+        outliers[0] = 777;
+        assert_eq!(auto_select(&outliers), EncoderKind::Fle);
+    }
+
+    #[test]
+    fn stages_report_their_kind() {
+        for k in EncoderKind::ALL {
+            assert_eq!(stage_for(k).kind(), k);
+        }
+    }
+}

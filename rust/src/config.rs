@@ -4,6 +4,8 @@
 
 use std::path::PathBuf;
 
+pub use crate::codec::{CodecSpec, EncoderChoice};
+
 /// Error-bound mode. The paper evaluates with the value-range-based
 /// relative bound (`valrel`, footnote 2): `abs_eb = valrel * (max - min)`.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -49,8 +51,9 @@ pub enum CodewordRepr {
 }
 
 /// Optional lossless stage over the deflated bitstream (paper step 5).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum LosslessStage {
+    #[default]
     None,
     Gzip,
     Zstd,
@@ -68,7 +71,9 @@ pub struct CuszConfig {
     /// measured optimum on this testbed; `cusz bench-chunk-size` re-derives.
     pub chunk_symbols: usize,
     pub codeword_repr: CodewordRepr,
-    pub lossless: LosslessStage,
+    /// Which symbol encoder backend + lossless tail stage (the pluggable
+    /// codec pipeline; `Auto` resolves per field from the histogram).
+    pub codec: CodecSpec,
     /// Worker threads for coarse-grained (chunk) parallelism. 0 = all cores.
     pub threads: usize,
     /// Directory holding `manifest.tsv` + HLO artifacts.
@@ -85,7 +90,7 @@ impl Default for CuszConfig {
             dict_size: 1024,
             chunk_symbols: 4096,
             codeword_repr: CodewordRepr::Adaptive,
-            lossless: LosslessStage::None,
+            codec: CodecSpec::default(),
             threads: 0,
             artifacts_dir: PathBuf::from("artifacts"),
             queue_depth: 4,
@@ -134,5 +139,12 @@ mod tests {
         let c = CuszConfig::default();
         assert_eq!(c.dict_size, 1024);
         assert_eq!(c.radius(), 512);
+    }
+
+    #[test]
+    fn default_codec_is_huffman_without_lossless() {
+        let c = CuszConfig::default();
+        assert_eq!(c.codec.encoder, EncoderChoice::Huffman);
+        assert_eq!(c.codec.lossless, LosslessStage::None);
     }
 }

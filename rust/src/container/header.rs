@@ -1,9 +1,22 @@
 //! Archive header: everything decompression needs besides the payload.
+//!
+//! The header is versioned. Version 0 is the pre-codec layout (no version
+//! byte, Huffman implied) still produced by old archives; version 1
+//! prefixes a format-version byte and an encoder tag so the archive is
+//! self-describing about which [`crate::codec::EncoderStage`] wrote it.
+//! Which parser runs is selected by the container magic
+//! ([`crate::container::MAGIC_V0`] vs [`crate::container::MAGIC`]), since
+//! the legacy layout's first byte is a name-length byte and cannot be
+//! distinguished in-band.
 
 use anyhow::{bail, Result};
 
 use super::bytes::{ByteReader, ByteWriter};
+use crate::codec::EncoderKind;
 use crate::config::ErrorBound;
+
+/// The archive format version this build writes.
+pub const FORMAT_VERSION: u8 = 1;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LosslessTag {
@@ -33,6 +46,12 @@ impl LosslessTag {
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct Header {
+    /// Archive format version: 0 = legacy pre-codec layout (implicit
+    /// Huffman), 1 = codec-tagged. Serialization mirrors whichever
+    /// version is set so digests of old payloads stay stable.
+    pub version: u8,
+    /// Which encoder backend produced the symbol stream.
+    pub encoder: EncoderKind,
     pub field_name: String,
     /// Logical field dims (pre-fold; decompression restores this shape).
     pub dims: Vec<usize>,
@@ -45,7 +64,8 @@ pub struct Header {
     pub abs_eb: f32,
     pub dict_size: usize,
     pub chunk_symbols: usize,
-    /// Codeword representation used at encode time (32 or 64), Table 4.
+    /// Codeword representation used at encode time (Huffman: 32 or 64,
+    /// Table 4; FLE: widest chunk).
     pub repr_bits: u32,
     pub lossless: LosslessTag,
     pub n_slabs: usize,
@@ -53,7 +73,19 @@ pub struct Header {
 
 impl Header {
     pub fn to_bytes(&self) -> Vec<u8> {
+        // the legacy layout has no tag byte, so it cannot represent any
+        // other encoder — writing one silently would reparse as Huffman
+        // and misdecode; fail loudly at the source instead
+        assert!(
+            self.version >= 1 || self.encoder == EncoderKind::Huffman,
+            "version-0 archives cannot represent encoder {:?}",
+            self.encoder
+        );
         let mut w = ByteWriter::new();
+        if self.version >= 1 {
+            w.u8(self.version);
+            w.u8(self.encoder.to_tag());
+        }
         w.str(&self.field_name);
         w.u32(self.dims.len() as u32);
         for &d in &self.dims {
@@ -79,8 +111,28 @@ impl Header {
         w.finish()
     }
 
+    /// Parse a versioned (current-magic) header. Rejects version bytes
+    /// this build does not understand and unknown encoder tags.
     pub fn from_bytes(bytes: &[u8]) -> Result<Header> {
         let mut r = ByteReader::new(bytes);
+        let version = r.u8()?;
+        if version == 0 || version > FORMAT_VERSION {
+            bail!(
+                "unsupported archive format version {version} (this build reads 1..={FORMAT_VERSION})"
+            );
+        }
+        let encoder = EncoderKind::from_tag(r.u8()?)?;
+        Self::read_common(&mut r, version, encoder)
+    }
+
+    /// Parse a legacy (version-0, `CUSZA1` magic) header: the pre-codec
+    /// layout with no version byte and Huffman implied.
+    pub fn from_bytes_v0(bytes: &[u8]) -> Result<Header> {
+        let mut r = ByteReader::new(bytes);
+        Self::read_common(&mut r, 0, EncoderKind::Huffman)
+    }
+
+    fn read_common(r: &mut ByteReader<'_>, version: u8, encoder: EncoderKind) -> Result<Header> {
         let field_name = r.str()?;
         let nd = r.u32()? as usize;
         if nd == 0 || nd > 4 {
@@ -111,6 +163,8 @@ impl Header {
             bail!("non-positive abs_eb {abs_eb}");
         }
         Ok(Header {
+            version,
+            encoder,
             field_name,
             dims,
             variant,
@@ -129,29 +183,70 @@ impl Header {
 mod tests {
     use super::*;
 
-    #[test]
-    fn roundtrip_both_eb_modes() {
-        for eb in [ErrorBound::Abs(0.125), ErrorBound::ValRel(1e-4)] {
-            let h = Header {
-                field_name: "f".into(),
-                dims: vec![10, 20],
-                variant: "2d_256".into(),
-                eb,
-                abs_eb: 0.5,
-                dict_size: 1024,
-                chunk_symbols: 4096,
-                repr_bits: 32,
-                lossless: LosslessTag::Zstd,
-                n_slabs: 3,
-            };
-            let b = Header::from_bytes(&h.to_bytes()).unwrap();
-            assert_eq!(h, b);
+    fn sample(version: u8, encoder: EncoderKind, eb: ErrorBound) -> Header {
+        Header {
+            version,
+            encoder,
+            field_name: "f".into(),
+            dims: vec![10, 20],
+            variant: "2d_256".into(),
+            eb,
+            abs_eb: 0.5,
+            dict_size: 1024,
+            chunk_symbols: 4096,
+            repr_bits: 32,
+            lossless: LosslessTag::Zstd,
+            n_slabs: 3,
         }
+    }
+
+    #[test]
+    fn roundtrip_both_eb_modes_both_encoders() {
+        for eb in [ErrorBound::Abs(0.125), ErrorBound::ValRel(1e-4)] {
+            for encoder in EncoderKind::ALL {
+                let h = sample(FORMAT_VERSION, encoder, eb);
+                let b = Header::from_bytes(&h.to_bytes()).unwrap();
+                assert_eq!(h, b);
+            }
+        }
+    }
+
+    #[test]
+    fn v0_layout_roundtrips_without_prefix() {
+        let h = sample(0, EncoderKind::Huffman, ErrorBound::Abs(0.25));
+        let bytes = h.to_bytes();
+        // legacy layout starts with the name length, not a version byte
+        assert_eq!(&bytes[..4], &1u32.to_le_bytes());
+        let b = Header::from_bytes_v0(&bytes).unwrap();
+        assert_eq!(h, b);
+    }
+
+    #[test]
+    fn unknown_encoder_tag_rejected_cleanly() {
+        let h = sample(FORMAT_VERSION, EncoderKind::Fle, ErrorBound::Abs(1.0));
+        let mut bytes = h.to_bytes();
+        bytes[1] = 200; // encoder tag byte
+        let err = Header::from_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("encoder tag"), "{err:#}");
+    }
+
+    #[test]
+    fn future_format_version_rejected_cleanly() {
+        let h = sample(FORMAT_VERSION, EncoderKind::Huffman, ErrorBound::Abs(1.0));
+        let mut bytes = h.to_bytes();
+        bytes[0] = FORMAT_VERSION + 1;
+        let err = Header::from_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("format version"), "{err:#}");
+        // and a zero version byte under the current magic is malformed
+        bytes[0] = 0;
+        assert!(Header::from_bytes(&bytes).is_err());
     }
 
     #[test]
     fn invalid_headers_rejected() {
         let h = Header {
+            version: FORMAT_VERSION,
+            encoder: EncoderKind::Huffman,
             field_name: "f".into(),
             dims: vec![4],
             variant: "v".into(),
@@ -164,8 +259,8 @@ mod tests {
             n_slabs: 1,
         };
         let mut bytes = h.to_bytes();
-        // corrupt the ndim field (after name: 4-byte len + 1 byte "f")
-        bytes[5] = 200;
+        // corrupt the ndim field (version + tag + 4-byte len + 1 byte "f")
+        bytes[7] = 200;
         assert!(Header::from_bytes(&bytes).is_err());
     }
 }

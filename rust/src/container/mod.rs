@@ -1,7 +1,13 @@
 //! The `.cusza` archive format — cuSZ's self-contained compressed output:
-//! header, embedded canonical codebook (as its length table), the chunked
-//! deflated Huffman bitstream, the outlier side channels, and per-section
-//! CRC32s (DESIGN.md §6).
+//! versioned codec-tagged header, encoder sidecar (Huffman: canonical
+//! codebook lengths; FLE: per-chunk bit widths), the chunked framed
+//! bitstream, the outlier side channels, and per-section CRC32s
+//! (DESIGN.md §6).
+//!
+//! Two magics coexist: [`MAGIC_V0`] marks pre-codec archives (legacy
+//! header layout, Huffman implied) which still decode; [`MAGIC`] marks
+//! current archives whose header leads with a format-version byte and an
+//! encoder tag. Unknown magics, versions, and tags all fail cleanly.
 
 pub mod bytes;
 pub mod header;
@@ -10,17 +16,28 @@ use anyhow::{bail, Context, Result};
 
 use crate::huffman::deflate::{DeflatedChunk, DeflatedStream};
 use bytes::{ByteReader, ByteWriter};
-pub use header::{Header, LosslessTag};
+pub use header::{Header, LosslessTag, FORMAT_VERSION};
 
-pub const MAGIC: &[u8; 8] = b"CUSZA1\0\0";
+/// Magic of legacy (format version 0) archives.
+pub const MAGIC_V0: &[u8; 8] = b"CUSZA1\0\0";
+/// Magic of current (versioned, codec-tagged) archives.
+pub const MAGIC: &[u8; 8] = b"CUSZA2\0\0";
+
+/// Largest chunk geometry (symbols per chunk) the format accepts. Real
+/// configs top out at 2^16; the bound keeps a crafted stream from turning
+/// per-chunk symbol counts into unbounded allocations. Enforced on both
+/// sides: the parser rejects larger values as corrupt, and the compressor
+/// refuses to produce archives it could not read back.
+pub const MAX_CHUNK_SYMBOLS: usize = 1 << 24;
 
 /// One compressed field.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Archive {
     pub header: Header,
-    /// Canonical codebook as its per-symbol bit-length table.
-    pub codebook_lengths: Vec<u8>,
-    /// Deflated Huffman bitstream (quantization codes, slab-major order).
+    /// Encoder sidecar: what the tagged encoder's decoder needs (Huffman:
+    /// per-symbol code-length table; FLE: per-chunk bit widths).
+    pub encoder_aux: Vec<u8>,
+    /// Framed chunked bitstream (quantization codes, slab-major order).
     pub stream: DeflatedStream,
     /// Prediction outliers: (global position in the slab-major stream,
     /// exact integer delta). Symbol 0 marks their slots in the stream.
@@ -38,13 +55,15 @@ impl Archive {
 
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut w = ByteWriter::new();
-        w.bytes(MAGIC);
+        // a version-0 header serializes in the legacy layout, so it must
+        // travel under the legacy magic for parsers to agree
+        w.bytes(if self.header.version == 0 { MAGIC_V0 } else { MAGIC });
         let header_bytes = self.header.to_bytes();
         w.section(&header_bytes);
 
         let mut body = ByteWriter::new();
-        body.u32(self.codebook_lengths.len() as u32);
-        body.bytes(&self.codebook_lengths);
+        body.u32(self.encoder_aux.len() as u32);
+        body.bytes(&self.encoder_aux);
 
         body.u32(self.stream.chunks.len() as u32);
         body.u32(self.stream.chunk_symbols as u32);
@@ -84,17 +103,30 @@ impl Archive {
         w.finish()
     }
 
+    /// Read the magic + header section, dispatching to the right header
+    /// parser per format version.
+    fn read_header(r: &mut ByteReader<'_>) -> Result<Header> {
+        let magic = r.take(8)?;
+        let legacy = if magic == MAGIC_V0 {
+            true
+        } else if magic == MAGIC {
+            false
+        } else {
+            bail!("not a cusza archive (bad magic)");
+        };
+        let header_bytes = r.section().context("header section")?;
+        if legacy {
+            Header::from_bytes_v0(&header_bytes)
+        } else {
+            Header::from_bytes(&header_bytes)
+        }
+    }
+
     /// Parse only the header from serialized archive bytes — the cheap
     /// "payload framing" read the multi-field store uses for indexing and
     /// `ls` without touching the (possibly much larger) body section.
     pub fn peek_header(data: &[u8]) -> Result<Header> {
-        let mut r = ByteReader::new(data);
-        let magic = r.take(8)?;
-        if magic != MAGIC {
-            bail!("not a cusza archive (bad magic)");
-        }
-        let header_bytes = r.section().context("header section")?;
-        Header::from_bytes(&header_bytes)
+        Self::read_header(&mut ByteReader::new(data))
     }
 
     /// CRC32 digest of the serialized header — stored per entry in the
@@ -106,12 +138,7 @@ impl Archive {
 
     pub fn from_bytes(data: &[u8]) -> Result<Archive> {
         let mut r = ByteReader::new(data);
-        let magic = r.take(8)?;
-        if magic != MAGIC {
-            bail!("not a cusza archive (bad magic)");
-        }
-        let header_bytes = r.section().context("header section")?;
-        let header = Header::from_bytes(&header_bytes)?;
+        let header = Self::read_header(&mut r)?;
 
         let body_raw = r.section().context("body section")?;
         // Cap the decompressed body so a crafted gzip/zstd bomb fails
@@ -147,13 +174,16 @@ impl Archive {
         let mut b = ByteReader::new(&body_bytes);
 
         let nlen = b.u32()? as usize;
-        let codebook_lengths = b.take(nlen)?;
+        let encoder_aux = b.take(nlen)?;
 
         // Every element count below is bounded against the bytes actually
         // present before allocating, so a corrupted count fails cleanly
         // instead of attempting a multi-GB reservation.
         let nchunks = b.u32()? as usize;
         let chunk_symbols = b.u32()? as usize;
+        if chunk_symbols > MAX_CHUNK_SYMBOLS {
+            bail!("corrupt archive: implausible chunk size {chunk_symbols}");
+        }
         if nchunks > b.remaining() / 16 {
             bail!("corrupt archive: {nchunks} chunks exceeds payload");
         }
@@ -191,7 +221,7 @@ impl Archive {
 
         Ok(Archive {
             header,
-            codebook_lengths,
+            encoder_aux,
             stream: DeflatedStream { chunks, chunk_symbols },
             outliers,
             verbatim,
@@ -213,11 +243,14 @@ fn decompressed_body_cap(header: &Header) -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::codec::EncoderKind;
     use crate::config::ErrorBound;
 
     fn sample_archive(lossless: LosslessTag) -> Archive {
         Archive {
             header: Header {
+                version: FORMAT_VERSION,
+                encoder: EncoderKind::Huffman,
                 field_name: "NYX/baryon_density".into(),
                 dims: vec![64, 64, 64],
                 variant: "3d_64".into(),
@@ -229,7 +262,7 @@ mod tests {
                 lossless,
                 n_slabs: 4,
             },
-            codebook_lengths: (0..1024).map(|i| (i % 20) as u8).collect(),
+            encoder_aux: (0..1024).map(|i| (i % 20) as u8).collect(),
             stream: DeflatedStream {
                 chunks: vec![
                     DeflatedChunk { words: vec![0xdead, 0xbeef], bits: 100, symbols: 40 },
@@ -247,7 +280,7 @@ mod tests {
         let a = sample_archive(LosslessTag::None);
         let b = Archive::from_bytes(&a.to_bytes()).unwrap();
         assert_eq!(a.header, b.header);
-        assert_eq!(a.codebook_lengths, b.codebook_lengths);
+        assert_eq!(a.encoder_aux, b.encoder_aux);
         assert_eq!(a.stream, b.stream);
         assert_eq!(a.outliers, b.outliers);
         assert_eq!(b.verbatim[0].0, 123);
@@ -262,6 +295,55 @@ mod tests {
             let b = Archive::from_bytes(&a.to_bytes()).unwrap();
             assert_eq!(a.stream, b.stream, "{tag:?}");
         }
+    }
+
+    #[test]
+    fn roundtrip_fle_tag() {
+        let mut a = sample_archive(LosslessTag::None);
+        a.header.encoder = EncoderKind::Fle;
+        a.encoder_aux = vec![9, 9]; // per-chunk widths
+        let b = Archive::from_bytes(&a.to_bytes()).unwrap();
+        assert_eq!(b.header.encoder, EncoderKind::Fle);
+        assert_eq!(b.encoder_aux, vec![9, 9]);
+    }
+
+    #[test]
+    fn v0_archive_bytes_still_parse() {
+        // a pre-codec archive: version-0 header under the legacy magic
+        let mut a = sample_archive(LosslessTag::None);
+        a.header.version = 0;
+        let bytes = a.to_bytes();
+        assert_eq!(&bytes[..8], MAGIC_V0);
+        let b = Archive::from_bytes(&bytes).unwrap();
+        assert_eq!(b.header.version, 0);
+        assert_eq!(b.header.encoder, EncoderKind::Huffman);
+        assert_eq!(b.stream, a.stream);
+        assert_eq!(Archive::peek_header(&bytes).unwrap(), b.header);
+    }
+
+    #[test]
+    fn current_archive_carries_version_and_tag() {
+        let a = sample_archive(LosslessTag::None);
+        let bytes = a.to_bytes();
+        assert_eq!(&bytes[..8], MAGIC);
+        let h = Archive::peek_header(&bytes).unwrap();
+        assert_eq!(h.version, FORMAT_VERSION);
+        assert_eq!(h.encoder, EncoderKind::Huffman);
+    }
+
+    #[test]
+    fn unknown_encoder_tag_fails_cleanly() {
+        let a = sample_archive(LosslessTag::None);
+        let mut bytes = a.to_bytes();
+        // the encoder tag is the second byte of the header section:
+        // 8 magic + 8 len + 4 crc + 1 version byte
+        bytes[21] = 77;
+        // CRC now mismatches; rewrite the section frame around the edit
+        let header_len = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        let crc = bytes::crc32(&bytes[20..20 + header_len]);
+        bytes[16..20].copy_from_slice(&crc.to_le_bytes());
+        let err = Archive::from_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("encoder tag"), "{err:#}");
     }
 
     #[test]

@@ -5,10 +5,10 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::{CompressStats, Coordinator};
-use crate::config::CodewordRepr;
-use crate::container::{Archive, Header, LosslessTag};
+use crate::codec::{self, EncodeContext, EncoderChoice, EncoderKind};
+use crate::container::{Archive, Header, LosslessTag, FORMAT_VERSION, MAX_CHUNK_SYMBOLS};
 use crate::field::Field;
-use crate::huffman::{self, CanonicalCodebook};
+use crate::huffman;
 use crate::metrics::StageTimer;
 use std::cell::RefCell;
 
@@ -34,6 +34,13 @@ struct SlabQuant {
 
 pub fn compress(coord: &Coordinator, field: &Field) -> Result<(Archive, CompressStats)> {
     let cfg = &coord.cfg;
+    // refuse to produce an archive the parser would reject as corrupt
+    if cfg.chunk_symbols == 0 || cfg.chunk_symbols > MAX_CHUNK_SYMBOLS {
+        anyhow::bail!(
+            "chunk_symbols {} outside the supported range 1..={MAX_CHUNK_SYMBOLS}",
+            cfg.chunk_symbols
+        );
+    }
     let mut timer = StageTimer::new();
     let t_total = Instant::now();
 
@@ -95,13 +102,7 @@ pub fn compress(coord: &Coordinator, field: &Field) -> Result<(Archive, Compress
     }
     timer.add("2.histogram", t0.elapsed());
 
-    // ---- phase C: Huffman tree + canonical codebook -------------------
-    let t0 = Instant::now();
-    let lengths = huffman::build_lengths(&freq);
-    let book = CanonicalCodebook::from_lengths(&lengths)?;
-    timer.add("3.codebook", t0.elapsed());
-
-    // ---- phase D: flatten codes, gather global outliers ---------------
+    // ---- phase C: flatten codes, gather global outliers ---------------
     let t0 = Instant::now();
     let slab_len = spec.len();
     let total_symbols = slab_len * quants.len();
@@ -116,26 +117,42 @@ pub fn compress(coord: &Coordinator, field: &Field) -> Result<(Archive, Compress
     }
     timer.add("4.gather-outliers", t0.elapsed());
 
-    // ---- phase E: encode + deflate ------------------------------------
+    // ---- phase D: resolve the codec, run the encoder stage -------------
+    // `auto` picks per field from the merged histogram (cuSZ+-style
+    // smoothness adaptation); forced choices skip the heuristic.
     let t0 = Instant::now();
-    let repr_bits = match cfg.codeword_repr {
-        CodewordRepr::U32 => 32,
-        CodewordRepr::U64 => 64,
-        CodewordRepr::Adaptive => book.repr_bits(),
+    let encoder_kind = match cfg.codec.encoder {
+        EncoderChoice::Huffman => EncoderKind::Huffman,
+        EncoderChoice::Fle => EncoderKind::Fle,
+        EncoderChoice::Auto => codec::auto_select(&freq),
     };
-    let stream = huffman::deflate_chunks(&symbols, &book, cfg.chunk_symbols, threads);
-    timer.add("5.encode-deflate", t0.elapsed());
+    let stage = codec::stage_for(encoder_kind);
+    let ctx = EncodeContext {
+        dict_size: dict,
+        chunk_symbols: cfg.chunk_symbols,
+        threads,
+        codeword_repr: cfg.codeword_repr,
+        freq: &freq,
+    };
+    let enc = stage.encode(&symbols, &ctx)?;
+    // keep the Table 7 breakdown rows: table/codebook construction is
+    // reported apart from the streaming encode it precedes
+    timer.add("3.codebook", enc.codebook_time);
+    timer.add("5.encode-deflate", t0.elapsed().saturating_sub(enc.codebook_time));
 
     // ---- assemble ------------------------------------------------------
     let t0 = Instant::now();
-    let lossless = match cfg.lossless {
+    let lossless = match cfg.codec.lossless {
         crate::config::LosslessStage::None => LosslessTag::None,
         crate::config::LosslessStage::Gzip => LosslessTag::Gzip,
         crate::config::LosslessStage::Zstd => LosslessTag::Zstd,
     };
-    let huffman_bits = stream.total_bits();
+    let encoded_bits = enc.stream.total_bits();
+    let repr_bits = enc.repr_bits;
     let archive = Archive {
         header: Header {
+            version: FORMAT_VERSION,
+            encoder: encoder_kind,
             field_name: field.name.clone(),
             dims: field.dims.clone(),
             variant: spec.name.clone(),
@@ -147,8 +164,8 @@ pub fn compress(coord: &Coordinator, field: &Field) -> Result<(Archive, Compress
             lossless,
             n_slabs: quants.len(),
         },
-        codebook_lengths: lengths,
-        stream,
+        encoder_aux: enc.aux,
+        stream: enc.stream,
         outliers,
         verbatim,
     };
@@ -161,8 +178,9 @@ pub fn compress(coord: &Coordinator, field: &Field) -> Result<(Archive, Compress
         n_slabs: archive.header.n_slabs,
         n_outliers: archive.outliers.len(),
         n_verbatim: archive.verbatim.len(),
-        huffman_bits,
+        encoded_bits,
         repr_bits,
+        encoder: encoder_kind,
         abs_eb,
         timer,
     };

@@ -1,15 +1,16 @@
 //! Per-field decompression orchestration (Figure 1, bottom path):
-//! inflate → rebuild deltas (patch outliers) → inverse Lorenzo (engine)
-//! → scatter slabs → verbatim overwrite.
+//! decode via the header-tagged encoder stage → rebuild deltas (patch
+//! outliers) → inverse Lorenzo (engine) → scatter slabs → verbatim
+//! overwrite.
 
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 use super::{Coordinator, DecompressStats};
+use crate::codec;
 use crate::container::Archive;
 use crate::field::Field;
-use crate::huffman::{self, ReverseCodebook};
 use crate::metrics::StageTimer;
 use crate::sz::blocks::{scatter_slab, tile_grid};
 use crate::util::pool::parallel_map;
@@ -41,16 +42,25 @@ pub fn decompress(coord: &Coordinator, archive: &Archive) -> Result<(Field, Deco
         bail!("slab count mismatch: {} vs {}", grid.len(), h.n_slabs);
     }
 
-    // ---- inflate -------------------------------------------------------
+    // ---- decode the symbol stream --------------------------------------
+    // the stage is picked by the archive's encoder tag, not the config:
+    // a Huffman coordinator decodes FLE archives and vice versa
     let t0 = Instant::now();
-    let rev = ReverseCodebook::from_lengths(&archive.codebook_lengths)?;
     let threads = cfg.effective_threads();
-    let symbols = huffman::inflate::inflate_chunks_strict(&archive.stream, &rev, threads)?;
+    let stage = codec::stage_for(h.encoder);
     let slab_len = spec.len();
-    if symbols.len() != slab_len * grid.len() {
-        bail!("symbol count {} != {}", symbols.len(), slab_len * grid.len());
+    let expected_symbols = slab_len * grid.len();
+    let symbols = stage.decode(
+        &archive.encoder_aux,
+        &archive.stream,
+        h.dict_size,
+        threads,
+        expected_symbols,
+    )?;
+    if symbols.len() != expected_symbols {
+        bail!("symbol count {} != {expected_symbols}", symbols.len());
     }
-    timer.add("1.huffman-decode", t0.elapsed());
+    timer.add("1.decode", t0.elapsed());
 
     // ---- rebuild per-slab deltas (patch prediction outliers) -----------
     let t0 = Instant::now();

@@ -1,5 +1,6 @@
 //! Per-run statistics: stage timings (Table 7 rows) and size accounting.
 
+use crate::codec::EncoderKind;
 use crate::metrics::StageTimer;
 
 #[derive(Debug, Clone, Default)]
@@ -10,8 +11,13 @@ pub struct CompressStats {
     pub n_slabs: usize,
     pub n_outliers: usize,
     pub n_verbatim: usize,
-    pub huffman_bits: u64,
+    /// Bits in the encoded symbol stream (pre-lossless), whichever
+    /// encoder produced it.
+    pub encoded_bits: u64,
     pub repr_bits: u32,
+    /// Which encoder backend compressed this field (the resolved choice
+    /// when the config said `auto`).
+    pub encoder: EncoderKind,
     pub abs_eb: f32,
 }
 
@@ -27,11 +33,12 @@ impl CompressStats {
     pub fn report(&self) -> String {
         format!(
             "original {:.2} MB -> compressed {:.2} MB  CR {:.2}x  bitrate {:.2} b/v  \
-             (outliers {}, verbatim {}, repr u{})\n{}",
+             (encoder {}, outliers {}, verbatim {}, repr u{})\n{}",
             self.original_bytes as f64 / 1e6,
             self.compressed_bytes as f64 / 1e6,
             self.compression_ratio(),
             self.bitrate(),
+            self.encoder.name(),
             self.n_outliers,
             self.n_verbatim,
             self.repr_bits,

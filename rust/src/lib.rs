@@ -10,9 +10,12 @@
 //!   (`make artifacts`).
 //! * **L3** (this crate): a streaming coordinator that tiles fields into
 //!   slabs, executes the AOT executables through PJRT ([`runtime`]),
-//!   performs customized canonical Huffman coding ([`huffman`]), and owns
-//!   the archive format ([`container`]), baselines ([`sz`], [`zfp`]),
-//!   synthetic datasets ([`datagen`]) and metrics ([`metrics`]).
+//!   encodes quant codes through a pluggable codec pipeline ([`codec`]:
+//!   canonical Huffman on the [`huffman`] substrate, or an FZ-GPU-style
+//!   fixed-length bitshuffle encoder, selected per field in `auto` mode),
+//!   and owns the versioned archive format ([`container`]), baselines
+//!   ([`sz`], [`zfp`]), synthetic datasets ([`datagen`]) and metrics
+//!   ([`metrics`]).
 //! * **Serving layer**: the [`store`] module bundles many compressed
 //!   fields into one sharded `.cuszb` archive with a footer index and
 //!   random-access per-field decompression, and [`serve`] runs a batched
@@ -63,6 +66,7 @@
 //! let restored = coord.decompress(&one).unwrap();
 //! ```
 
+pub mod codec;
 pub mod config;
 pub mod container;
 pub mod coordinator;
@@ -78,8 +82,9 @@ pub mod testkit;
 pub mod util;
 pub mod zfp;
 
+pub use codec::{CodecSpec, EncoderChoice, EncoderKind};
 pub use config::{CuszConfig, ErrorBound};
 pub use coordinator::Coordinator;
 pub use field::Field;
-pub use serve::{BatchCompressor, BatchConfig, ServiceStats};
+pub use serve::{BatchCompressor, BatchConfig, BatchDecompressor, DrainStats, ServiceStats};
 pub use store::Store;

@@ -23,13 +23,14 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
+use cusz::codec::{CodecSpec, EncoderChoice};
 use cusz::config::{BackendKind, CodewordRepr, CuszConfig, ErrorBound, LosslessStage};
 use cusz::container::Archive;
 use cusz::coordinator::Coordinator;
 use cusz::datagen::{self, Dataset};
 use cusz::field::Field;
 use cusz::metrics;
-use cusz::serve::{BatchCompressor, BatchConfig};
+use cusz::serve::{BatchCompressor, BatchConfig, BatchDecompressor};
 use cusz::store::Store;
 use cusz::util::cli::Cli;
 
@@ -77,15 +78,17 @@ fn usage() -> String {
        selftest    [--backend pjrt]\n\
        store add   --store B.cuszb (--dataset D --field F | --input PATH \n\
                    --dims d0,.. | --archive PATH.cusza) [--shards N]\n\
-       store get   --store B.cuszb --name NAME [--out PATH]\n\
+       store get   --store B.cuszb (--name NAME [--out PATH] |\n\
+                   --all [--out-dir DIR] [--workers W] [--queue N])\n\
        store ls    --store B.cuszb [--verify]\n\
        store rm    --store B.cuszb --name NAME\n\
        serve       --batch --store B.cuszb --dataset D [--count N]\n\
                    [--workers W] [--queue N] [--shards N]\n\
+                   [--compact-threshold F]\n\
      \n\
      Common options: --backend pjrt|cpu, --threads N, --chunk N,\n\
-       --dict N, --repr adaptive|u32|u64, --lossless none|gzip|zstd,\n\
-       --artifacts DIR"
+       --dict N, --repr adaptive|u32|u64, --codec huffman|fle|auto,\n\
+       --lossless none|gzip|zstd, --artifacts DIR"
         .to_string()
 }
 
@@ -108,11 +111,14 @@ fn common_config(cli: &Cli) -> Result<CuszConfig> {
             "u64" => CodewordRepr::U64,
             r => bail!("unknown repr {r}"),
         },
-        lossless: match cli.get("lossless").as_str() {
-            "none" => LosslessStage::None,
-            "gzip" => LosslessStage::Gzip,
-            "zstd" => LosslessStage::Zstd,
-            l => bail!("unknown lossless stage {l}"),
+        codec: CodecSpec {
+            encoder: EncoderChoice::parse(&cli.get("codec"))?,
+            lossless: match cli.get("lossless").as_str() {
+                "none" => LosslessStage::None,
+                "gzip" => LosslessStage::Gzip,
+                "zstd" => LosslessStage::Zstd,
+                l => bail!("unknown lossless stage {l}"),
+            },
         },
         artifacts_dir: PathBuf::from(cli.get("artifacts")),
         ..Default::default()
@@ -127,6 +133,7 @@ fn with_common(cli: Cli) -> Cli {
         .opt("chunk", "4096", "deflate chunk size in symbols (Table 6)")
         .opt("dict", "1024", "quantization bins / Huffman symbols (Table 3)")
         .opt("repr", "adaptive", "codeword repr: adaptive|u32|u64 (Table 4)")
+        .opt("codec", "huffman", "symbol encoder: huffman|fle|auto (per-field)")
         .opt("lossless", "none", "final lossless stage: none|gzip|zstd")
         .opt("artifacts", "artifacts", "AOT artifact directory")
 }
@@ -370,12 +377,22 @@ fn cmd_store_add(args: &[String]) -> Result<()> {
 }
 
 fn cmd_store_get(args: &[String]) -> Result<()> {
-    let cli = with_common(Cli::new("cusz store get", "random-access decompress one field"))
+    let cli = with_common(Cli::new("cusz store get", "random-access decompress field(s)"))
         .req("store", ".cuszb bundle path")
-        .req("name", "field name (see `cusz store ls`)")
+        .opt("name", "", "field name (see `cusz store ls`)")
+        .flag("all", "drain every field in parallel (batch decompression)")
         .opt("out", "", "output .f32 path (default: print a summary only)")
+        .opt("out-dir", "", "output directory for --all (one .f32 per field)")
+        .opt("workers", "0", "concurrent decode jobs for --all (0 = all cores)")
+        .opt("queue", "4", "bounded queue depth for --all")
         .parse(args)?;
     let store = Store::open(cli.get("store"))?;
+    if cli.has_flag("all") {
+        return store_get_all(&cli, &store);
+    }
+    if cli.get("name").is_empty() {
+        bail!("store get needs --name NAME or --all");
+    }
     let archive = store.get(&cli.get("name"))?;
     let coord = Coordinator::new_with_fallback(common_config(&cli)?)?;
     let (field, stats) = coord.decompress_with_stats(&archive)?;
@@ -392,6 +409,80 @@ fn cmd_store_get(args: &[String]) -> Result<()> {
     } else {
         write_f32_file(&cli.get("out"), &field.data)?;
         println!("wrote {} (dims {:?})", cli.get("out"), field.dims);
+    }
+    Ok(())
+}
+
+/// `store get --all`: batch-decompress the whole bundle via the
+/// decompression-side worker pipeline, optionally writing each field to
+/// `--out-dir` as `<name>.f32` ('/' in names becomes '_').
+fn store_get_all(cli: &Cli, store: &Store) -> Result<()> {
+    let mut cfg = common_config(cli)?;
+    if cfg.threads == 0 {
+        cfg.threads = 2; // job-level concurrency comes from the drain pool
+    }
+    let coord = std::sync::Arc::new(Coordinator::new_with_fallback(cfg)?);
+    let out_dir = cli.get("out-dir");
+    if !out_dir.is_empty() {
+        std::fs::create_dir_all(&out_dir)
+            .with_context(|| format!("creating output dir {out_dir}"))?;
+    }
+    let drain_cfg = BatchConfig {
+        workers: cli.get_parsed("workers")?,
+        queue_depth: cli.get_parsed("queue")?,
+        ..Default::default()
+    };
+    println!(
+        "engine: {}  workers: {}  fields: {}",
+        coord.engine_name(),
+        drain_cfg.effective_workers(),
+        store.len()
+    );
+    let drainer = BatchDecompressor::new(coord, drain_cfg);
+    // sanitizing '/' can collide distinct field names ("a/b" vs "a_b");
+    // pre-assign output names in stable index order so disambiguating
+    // suffixes don't depend on decode completion order across runs
+    let mut used: std::collections::HashSet<String> = std::collections::HashSet::new();
+    let mut out_names: std::collections::HashMap<String, String> =
+        std::collections::HashMap::new();
+    for e in store.list() {
+        let base = e.name.replace('/', "_");
+        let mut fname = format!("{base}.f32");
+        let mut k = 2;
+        while !used.insert(fname.clone()) {
+            fname = format!("{base}-{k}.f32");
+            k += 1;
+        }
+        out_names.insert(e.name.clone(), fname);
+    }
+    let stats = drainer.drain(store, |entry_name, field, _| {
+        if out_dir.is_empty() {
+            println!("  {entry_name:<34} dims {:?} ({} values)", field.dims, field.len());
+        } else {
+            // keyed by the store entry name (not the header's field name,
+            // which can differ under --name overrides and would collide)
+            // the drain iterates the same in-memory listing the map was
+            // built from, so a miss is an invariant violation, not a case
+            let fname = out_names
+                .get(entry_name)
+                .cloned()
+                .expect("output name pre-assigned from the same store listing");
+            let path = PathBuf::from(&out_dir).join(fname);
+            write_f32_file(&path.to_string_lossy(), &field.data)?;
+            println!("  {entry_name:<34} -> {}", path.display());
+        }
+        Ok(())
+    })?;
+    for (name, err) in &stats.errors {
+        println!("  {name:<34} FAILED: {err}");
+    }
+    println!("{}", stats.report());
+    if stats.failed > 0 {
+        bail!(
+            "{} of {} fields failed to restore (see FAILED lines above)",
+            stats.failed,
+            stats.failed + stats.jobs
+        );
     }
     Ok(())
 }
@@ -443,7 +534,7 @@ fn cmd_store_rm(args: &[String]) -> Result<()> {
         .req("store", ".cuszb bundle path")
         .req("name", "field name to remove")
         .parse(args)?;
-    let mut store = Store::open(cli.get("store"))?;
+    let mut store = Store::open_writable(cli.get("store"))?;
     store.remove(&cli.get("name"))?;
     println!(
         "removed '{}' ({} fields remain; payload bytes reclaimed on compaction)",
@@ -463,6 +554,11 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt("seed", "42", "base generator seed")
         .opt("workers", "0", "concurrent compression jobs (0 = all cores)")
         .opt("queue", "4", "bounded queue depth between stages")
+        .opt(
+            "compact-threshold",
+            "0",
+            "auto-compact after the drain when dead bytes exceed this fraction of live bytes (0 = off)",
+        )
         .parse(args)?;
     if !cli.has_flag("batch") {
         bail!("only --batch mode is implemented (a finite stream drained to completion)");
@@ -493,6 +589,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let batch_cfg = BatchConfig {
         workers: cli.get_parsed("workers")?,
         queue_depth: cli.get_parsed("queue")?,
+        compact_threshold: cli.get_parsed("compact-threshold")?,
     };
     println!(
         "engine: {}  workers: {}  queue: {}  fields: {}",
@@ -505,10 +602,11 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let stats = batch.run_into_store(fields, &mut store)?;
     for (name, job) in &stats.per_job {
         println!(
-            "  {:<34} {:>9.2} MB  CR {:>6.2}x",
+            "  {:<34} {:>9.2} MB  CR {:>6.2}x  enc {}",
             name,
             job.original_bytes as f64 / 1e6,
-            job.compression_ratio()
+            job.compression_ratio(),
+            job.encoder.name()
         );
     }
     for (name, err) in &stats.errors {

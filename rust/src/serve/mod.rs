@@ -22,7 +22,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::container::Archive;
-use crate::coordinator::{CompressStats, Coordinator};
+use crate::coordinator::{CompressStats, Coordinator, DecompressStats};
 use crate::field::Field;
 use crate::store::Store;
 use crate::util::pool::{bounded, FanStage};
@@ -37,11 +37,16 @@ pub struct BatchConfig {
     /// `queue_depth` fields buffered ahead of the workers, and
     /// `queue_depth` archives ahead of the sink).
     pub queue_depth: usize,
+    /// Auto-compaction trigger for [`BatchCompressor::run_into_store`]:
+    /// after a batch drain, if the store's dead bytes exceed this
+    /// fraction of its live payload bytes, the bundle is compacted in
+    /// place. 0.0 disables (compaction stays manual).
+    pub compact_threshold: f64,
 }
 
 impl Default for BatchConfig {
     fn default() -> Self {
-        BatchConfig { workers: 0, queue_depth: 4 }
+        BatchConfig { workers: 0, queue_depth: 4, compact_threshold: 0.0 }
     }
 }
 
@@ -64,9 +69,14 @@ pub struct ServiceStats {
     pub compressed_bytes: usize,
     pub n_outliers: usize,
     pub n_verbatim: usize,
-    pub huffman_bits: u64,
+    pub encoded_bits: u64,
     pub wall_seconds: f64,
-    /// Per-job stats in completion order (not submission order).
+    /// Dead bytes reclaimed by auto-compaction after the drain (0 when
+    /// the threshold was not crossed or auto-compaction is disabled).
+    pub compacted_bytes: u64,
+    /// Per-job stats in completion order (not submission order). Each
+    /// job's `CompressStats::encoder` records the backend that `auto`
+    /// resolved to for that field.
     pub per_job: Vec<(String, CompressStats)>,
     /// (field name, error) for jobs whose compression failed.
     pub errors: Vec<(String, String)>,
@@ -79,8 +89,22 @@ impl ServiceStats {
         self.compressed_bytes += stats.compressed_bytes;
         self.n_outliers += stats.n_outliers;
         self.n_verbatim += stats.n_verbatim;
-        self.huffman_bits += stats.huffman_bits;
+        self.encoded_bits += stats.encoded_bits;
         self.per_job.push((name.to_string(), stats.clone()));
+    }
+
+    /// Per-encoder job tallies (the auto-mode choice report): how many
+    /// fields each backend ended up compressing.
+    pub fn encoder_counts(&self) -> Vec<(&'static str, usize)> {
+        let mut counts: Vec<(&'static str, usize)> = Vec::new();
+        for (_, s) in &self.per_job {
+            let name = s.encoder.name();
+            match counts.iter_mut().find(|(n, _)| *n == name) {
+                Some((_, c)) => *c += 1,
+                None => counts.push((name, 1)),
+            }
+        }
+        counts
     }
 
     pub fn compression_ratio(&self) -> f64 {
@@ -94,19 +118,33 @@ impl ServiceStats {
     }
 
     pub fn report(&self) -> String {
-        format!(
+        let encoders = self
+            .encoder_counts()
+            .iter()
+            .map(|(n, c)| format!("{n}:{c}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        let mut s = format!(
             "jobs {} ok / {} failed  {:.2} MB -> {:.2} MB  CR {:.2}x  \
-             {:.3} GB/s end-to-end  (outliers {}, verbatim {}, wall {:.3}s)",
+             {:.3} GB/s end-to-end  (encoders {}, outliers {}, verbatim {}, wall {:.3}s)",
             self.jobs,
             self.failed,
             self.original_bytes as f64 / 1e6,
             self.compressed_bytes as f64 / 1e6,
             self.compression_ratio(),
             self.throughput_gbps(),
+            if encoders.is_empty() { "-".to_string() } else { encoders },
             self.n_outliers,
             self.n_verbatim,
             self.wall_seconds,
-        )
+        );
+        if self.compacted_bytes > 0 {
+            s.push_str(&format!(
+                "  [auto-compacted {:.2} MB dead space]",
+                self.compacted_bytes as f64 / 1e6
+            ));
+        }
+        s
     }
 }
 
@@ -192,7 +230,10 @@ impl BatchCompressor {
     /// Convenience: run the batch and write every archive into `store`
     /// under its field name. The store's index is committed once at the
     /// end of the run (payload appends are still immediate), so ingesting
-    /// N fields costs one index rewrite instead of N.
+    /// N fields costs one index rewrite instead of N. After the drain, if
+    /// `BatchConfig::compact_threshold` is set and the store's dead bytes
+    /// exceed that fraction of its live bytes, the bundle is compacted in
+    /// place (atomic directory swap) and the reclaimed bytes recorded.
     pub fn run_into_store<I>(&self, fields: I, store: &mut Store) -> Result<ServiceStats>
     where
         I: IntoIterator<Item = Field>,
@@ -202,9 +243,154 @@ impl BatchCompressor {
         let result = self.run(fields, |_name, archive, _stats| store.add(&archive).map(|_| ()));
         // commit whatever landed, even if the run errored mid-stream
         let commit = store.set_deferred_index(false);
-        let stats = result?;
+        let mut stats = result?;
         commit?;
+        let threshold = self.cfg.compact_threshold;
+        if threshold > 0.0 {
+            let dead = store.dead_bytes();
+            if dead > 0 && dead as f64 >= threshold * store.live_bytes().max(1) as f64 {
+                stats.compacted_bytes = store
+                    .compact_in_place()
+                    .context("auto-compaction after batch drain")?;
+            }
+        }
         Ok(stats)
+    }
+}
+
+/// Aggregate results of draining a bundle back to fields.
+#[derive(Debug, Clone, Default)]
+pub struct DrainStats {
+    pub jobs: usize,
+    pub failed: usize,
+    /// Total bytes of restored (uncompressed) field data.
+    pub original_bytes: usize,
+    pub wall_seconds: f64,
+    /// (field name, error) for entries that failed to read or decode.
+    pub errors: Vec<(String, String)>,
+}
+
+impl DrainStats {
+    /// Decompression throughput against restored bytes.
+    pub fn throughput_gbps(&self) -> f64 {
+        self.original_bytes as f64 / self.wall_seconds.max(1e-12) / 1e9
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "drained {} ok / {} failed  {:.2} MB restored  {:.3} GB/s  (wall {:.3}s)",
+            self.jobs,
+            self.failed,
+            self.original_bytes as f64 / 1e6,
+            self.throughput_gbps(),
+            self.wall_seconds,
+        )
+    }
+}
+
+/// Decompression-side batching: drain a `.cuszb` bundle back to fields
+/// in parallel — the mirror of [`BatchCompressor`] over the same
+/// [`FanStage`] pipeline. A producer thread streams raw payloads out of
+/// the store (one seek+read each, throttled by the bounded queue),
+/// `workers` threads decode + decompress against one shared
+/// [`Coordinator`], and the calling thread sinks restored fields.
+pub struct BatchDecompressor {
+    coord: Arc<Coordinator>,
+    cfg: BatchConfig,
+}
+
+impl BatchDecompressor {
+    pub fn new(coord: Arc<Coordinator>, cfg: BatchConfig) -> Self {
+        BatchDecompressor { coord, cfg }
+    }
+
+    pub fn coordinator(&self) -> &Coordinator {
+        &self.coord
+    }
+
+    /// Decompress every field in `store`, handing each restored [`Field`]
+    /// to `sink` on the calling thread (completion order), together with
+    /// the *store entry name* it was read under — which can differ from
+    /// `Field::name` when the entry was added under an overridden name.
+    /// Per-entry read or decode failures are collected in the stats, not
+    /// fatal; a sink error aborts the drain.
+    pub fn drain<S>(&self, store: &Store, mut sink: S) -> Result<DrainStats>
+    where
+        S: FnMut(&str, Field, &DecompressStats) -> Result<()>,
+    {
+        let workers = self.cfg.effective_workers();
+        let depth = self.cfg.queue_depth.max(1);
+        let (tx, rx) = bounded::<(String, Vec<u8>)>(depth);
+        let coord = Arc::clone(&self.coord);
+        let fan = FanStage::spawn(rx, workers, depth, "decompress", move |job: (String, Vec<u8>)| {
+            let (name, bytes) = job;
+            let result = Archive::from_bytes(&bytes)
+                .and_then(|archive| coord.decompress_with_stats(&archive));
+            (name, result)
+        });
+        let names: Vec<String> = store.list().iter().map(|e| e.name.clone()).collect();
+
+        let t0 = Instant::now();
+        let mut stats = DrainStats::default();
+        let mut sink_err = None;
+        let mut producer_panicked = false;
+        // the producer borrows `store`, so it runs under a scope; the fan
+        // workers own their inputs and need no scoping
+        std::thread::scope(|scope| {
+            let producer = scope.spawn(move || {
+                let mut read_errors: Vec<(String, String)> = Vec::new();
+                for name in names {
+                    // checked read: payload CRC + header digest, the same
+                    // integrity bar as the single-field Store::get path
+                    match store.get_bytes_checked(&name) {
+                        Ok(bytes) => {
+                            if tx.send((name, bytes)).is_err() {
+                                break; // pipeline shut down early
+                            }
+                        }
+                        Err(e) => read_errors.push((name, format!("{e:#}"))),
+                    }
+                }
+                read_errors
+            });
+            for (name, result) in fan.rx.iter() {
+                match result {
+                    Ok((field, job_stats)) => {
+                        stats.original_bytes += field.size_bytes();
+                        if let Err(e) = sink(&name, field, &job_stats) {
+                            sink_err = Some(e.context(format!("sink failed on '{name}'")));
+                            break;
+                        }
+                        stats.jobs += 1;
+                    }
+                    Err(e) => {
+                        stats.failed += 1;
+                        stats.errors.push((name, format!("{e:#}")));
+                    }
+                }
+            }
+            // dropping fan.rx unblocks workers; workers exiting drops the
+            // shared input receiver, which unblocks the producer
+            fan.join();
+            match producer.join() {
+                Ok(read_errors) => {
+                    for (name, err) in read_errors {
+                        stats.failed += 1;
+                        stats.errors.push((name, err));
+                    }
+                }
+                Err(_) => producer_panicked = true,
+            }
+        });
+        stats.wall_seconds = t0.elapsed().as_secs_f64();
+        match sink_err {
+            Some(e) => Err(e),
+            None if producer_panicked => Err(anyhow::anyhow!(
+                "store reader panicked; results incomplete ({} fields drained)",
+                stats.jobs
+            )),
+            None => Ok(stats),
+        }
     }
 }
 
@@ -249,7 +435,7 @@ mod tests {
         let mut store = Store::create(&dir, 2).unwrap();
         let batch = BatchCompressor::new(
             coordinator(),
-            BatchConfig { workers: 3, queue_depth: 2 },
+            BatchConfig { workers: 3, queue_depth: 2, ..Default::default() },
         );
         let originals = fields(10);
         let stats = batch.run_into_store(originals.clone(), &mut store).unwrap();
@@ -270,7 +456,7 @@ mod tests {
     fn sink_error_aborts_without_deadlock() {
         let batch = BatchCompressor::new(
             coordinator(),
-            BatchConfig { workers: 2, queue_depth: 1 },
+            BatchConfig { workers: 2, queue_depth: 1, ..Default::default() },
         );
         let mut seen = 0usize;
         let result = batch.run(fields(50), |_, _, _| {
@@ -298,7 +484,7 @@ mod tests {
     fn stats_aggregate_matches_job_sum() {
         let dir = tmp_dir("serve-stats");
         let mut store = Store::create(&dir, 1).unwrap();
-        let batch = BatchCompressor::new(coordinator(), BatchConfig { workers: 2, queue_depth: 2 });
+        let batch = BatchCompressor::new(coordinator(), BatchConfig { workers: 2, queue_depth: 2, ..Default::default() });
         let stats = batch.run_into_store(fields(6), &mut store).unwrap();
         let sum_orig: usize = stats.per_job.iter().map(|(_, s)| s.original_bytes).sum();
         let sum_comp: usize = stats.per_job.iter().map(|(_, s)| s.compressed_bytes).sum();
@@ -306,6 +492,163 @@ mod tests {
         assert_eq!(stats.compressed_bytes, sum_comp);
         assert_eq!(stats.per_job.len(), 6);
         assert!(!stats.report().is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn auto_codec_records_per_field_choices() {
+        use crate::codec::{CodecSpec, EncoderChoice};
+        let dir = tmp_dir("serve-auto");
+        let mut store = Store::create(&dir, 2).unwrap();
+        let coord = Arc::new(
+            Coordinator::new(CuszConfig {
+                backend: BackendKind::Cpu,
+                eb: ErrorBound::Abs(EB as f64),
+                threads: 1,
+                codec: CodecSpec { encoder: EncoderChoice::Auto, ..Default::default() },
+                ..Default::default()
+            })
+            .unwrap(),
+        );
+        let batch = BatchCompressor::new(
+            Arc::clone(&coord),
+            BatchConfig { workers: 2, queue_depth: 2, ..Default::default() },
+        );
+        let originals = fields(6);
+        let stats = batch.run_into_store(originals.clone(), &mut store).unwrap();
+        assert_eq!(stats.jobs, 6);
+        // every job's resolved encoder is recorded and tallied
+        let counts = stats.encoder_counts();
+        let total: usize = counts.iter().map(|(_, c)| c).sum();
+        assert_eq!(total, 6);
+        for (name, job) in &stats.per_job {
+            let archive = store.get(name).unwrap();
+            assert_eq!(archive.header.encoder, job.encoder, "{name}");
+        }
+        assert!(stats.report().contains("encoders"));
+        // and the archives still roundtrip
+        for f in &originals {
+            let out = coord.decompress(&store.get(&f.name).unwrap()).unwrap();
+            assert_eq!(metrics::verify_error_bound(&f.data, &out.data, EB), None, "{}", f.name);
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn auto_compaction_runs_after_drain() {
+        let dir = tmp_dir("serve-compact");
+        let mut store = Store::create(&dir, 2).unwrap();
+        // seed the bundle with dead space before the batch run
+        let coord = coordinator();
+        let pre = fields(4);
+        for f in &pre {
+            store.add(&coord.compress(f).unwrap()).unwrap();
+        }
+        for f in pre.iter().take(3) {
+            store.remove(&f.name).unwrap();
+        }
+        assert!(store.dead_bytes() > 0);
+
+        let batch = BatchCompressor::new(
+            Arc::clone(&coord),
+            BatchConfig { workers: 2, queue_depth: 2, compact_threshold: 0.1 },
+        );
+        // fresh names so the batch doesn't collide with the survivor
+        let extra: Vec<Field> = fields(4)
+            .into_iter()
+            .map(|mut f| {
+                f.name = format!("new-{}", f.name);
+                f
+            })
+            .collect();
+        let stats = batch.run_into_store(extra.clone(), &mut store).unwrap();
+        assert!(stats.compacted_bytes > 0, "threshold crossed -> compaction");
+        assert_eq!(store.dead_bytes(), 0);
+        assert_eq!(store.len(), 5); // 1 survivor + 4 new
+        store.verify().unwrap();
+        for f in &extra {
+            let out = coord.decompress(&store.get(&f.name).unwrap()).unwrap();
+            assert_eq!(metrics::verify_error_bound(&f.data, &out.data, EB), None, "{}", f.name);
+        }
+        assert!(stats.report().contains("auto-compacted"));
+        // disabled threshold leaves dead space alone
+        let mut store2 = Store::create(tmp_dir("serve-nocompact"), 1).unwrap();
+        store2.add(&coord.compress(&fields(1)[0]).unwrap()).unwrap();
+        store2.remove("f00").unwrap();
+        let batch2 = BatchCompressor::new(coord, BatchConfig::default());
+        let one: Vec<Field> = fields(2).into_iter().skip(1).collect();
+        let stats2 = batch2.run_into_store(one, &mut store2).unwrap();
+        assert_eq!(stats2.compacted_bytes, 0);
+        assert!(store2.dead_bytes() > 0);
+        let dir2 = store2.dir().to_path_buf();
+        drop(store2);
+        std::fs::remove_dir_all(&dir).unwrap();
+        std::fs::remove_dir_all(&dir2).unwrap();
+    }
+
+    #[test]
+    fn batch_drain_restores_every_field() {
+        let dir = tmp_dir("serve-drain");
+        let mut store = Store::create(&dir, 2).unwrap();
+        let coord = coordinator();
+        let batch = BatchCompressor::new(
+            Arc::clone(&coord),
+            BatchConfig { workers: 3, queue_depth: 2, ..Default::default() },
+        );
+        let originals = fields(9);
+        batch.run_into_store(originals.clone(), &mut store).unwrap();
+
+        let drainer = BatchDecompressor::new(
+            Arc::clone(&coord),
+            BatchConfig { workers: 3, queue_depth: 2, ..Default::default() },
+        );
+        let mut restored: Vec<(String, Field)> = Vec::new();
+        let stats = drainer
+            .drain(&store, |entry_name, field, _| {
+                restored.push((entry_name.to_string(), field));
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(stats.jobs, 9);
+        assert_eq!(stats.failed, 0);
+        assert!(stats.original_bytes > 0);
+        assert_eq!(restored.len(), 9);
+        for orig in &originals {
+            let (entry_name, out) =
+                restored.iter().find(|(_, f)| f.name == orig.name).unwrap();
+            assert_eq!(entry_name, &orig.name); // entry name matches header name here
+            assert_eq!(out.dims, orig.dims);
+            assert_eq!(
+                metrics::verify_error_bound(&orig.data, &out.data, EB),
+                None,
+                "{}",
+                orig.name
+            );
+        }
+        assert!(!stats.report().is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn drain_sink_error_aborts_without_deadlock() {
+        let dir = tmp_dir("serve-drain-abort");
+        let mut store = Store::create(&dir, 1).unwrap();
+        let coord = coordinator();
+        let batch = BatchCompressor::new(Arc::clone(&coord), BatchConfig::default());
+        batch.run_into_store(fields(12), &mut store).unwrap();
+        let drainer = BatchDecompressor::new(
+            coord,
+            BatchConfig { workers: 2, queue_depth: 1, ..Default::default() },
+        );
+        let mut seen = 0usize;
+        let result = drainer.drain(&store, |_, _, _| {
+            seen += 1;
+            if seen >= 2 {
+                anyhow::bail!("out of disk");
+            }
+            Ok(())
+        });
+        assert!(result.is_err());
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

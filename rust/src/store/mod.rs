@@ -23,10 +23,14 @@
 //! index entry and leaves the payload bytes as dead space — reclaim by
 //! rebuilding the bundle ([`Store::compact_into`]).
 //!
-//! Concurrency contract: one writer OR many readers per bundle (no file
-//! locking — arbitration belongs to the serving layer, see [`crate::serve`]).
+//! Concurrency contract: one writer OR many readers per bundle. Writers
+//! are arbitrated by an advisory lock file beside the footer index
+//! ([`lock::StoreLock`]): the first mutating call acquires it, a second
+//! writer process fails fast instead of interleaving shard appends.
+//! Readers ([`Store::open`]) never take the lock.
 
 pub mod index;
+pub mod lock;
 
 use std::fs::{self, File, OpenOptions};
 use std::io::{Read, Seek, SeekFrom, Write};
@@ -38,6 +42,7 @@ use crate::container::bytes::crc32;
 use crate::container::Archive;
 
 pub use index::{StoreEntry, StoreIndex};
+pub use lock::StoreLock;
 
 pub const SHARD_MAGIC: &[u8; 8] = b"CUSZS1\0\0";
 const INDEX_FILE: &str = "index.cuszi";
@@ -51,6 +56,9 @@ pub struct Store {
     /// When true, `add`/`remove` skip the per-call index rewrite; the
     /// index commits once when deferral ends (batch ingestion path).
     defer_index: bool,
+    /// Held writer lock (None for read-only opens until a mutating call
+    /// acquires it lazily).
+    lock: Option<StoreLock>,
 }
 
 fn shard_file_name(i: u32) -> String {
@@ -84,6 +92,8 @@ impl Store {
         }
         fs::create_dir_all(&dir)
             .with_context(|| format!("creating store dir {}", dir.display()))?;
+        // a new bundle is born with its writer lock held
+        let lock = StoreLock::acquire(&dir)?;
         for i in 0..n_shards as u32 {
             let path = dir.join(shard_file_name(i));
             let mut f = File::create(&path)
@@ -95,6 +105,7 @@ impl Store {
             index: StoreIndex { n_shards: n_shards as u32, entries: Vec::new() },
             shard_sizes: vec![SHARD_MAGIC.len() as u64; n_shards],
             defer_index: false,
+            lock: Some(lock),
         };
         store.write_index()?;
         Ok(store)
@@ -105,14 +116,23 @@ impl Store {
         dir.as_ref().join(INDEX_FILE).exists()
     }
 
-    /// Open the bundle at `dir`, or create it with `n_shards` shards if
-    /// no index exists yet.
+    /// Open the bundle at `dir` as a writer (lock held up front), or
+    /// create it with `n_shards` shards if no index exists yet.
     pub fn open_or_create(dir: impl AsRef<Path>, n_shards: usize) -> Result<Store> {
         if Store::exists(&dir) {
-            Store::open(dir)
+            Store::open_writable(dir)
         } else {
             Store::create(dir, n_shards)
         }
+    }
+
+    /// Open an existing bundle and acquire the writer lock immediately
+    /// (instead of lazily on the first mutating call), so lock conflicts
+    /// surface before any work is done.
+    pub fn open_writable(dir: impl AsRef<Path>) -> Result<Store> {
+        let mut store = Store::open(dir)?;
+        store.ensure_writer_lock()?;
+        Ok(store)
     }
 
     /// Open an existing bundle, verifying the index and shard framing:
@@ -167,7 +187,22 @@ impl Store {
                 bail!("duplicate entry '{}' in index", e.name);
             }
         }
-        Ok(Store { dir, index, shard_sizes, defer_index: false })
+        Ok(Store { dir, index, shard_sizes, defer_index: false, lock: None })
+    }
+
+    /// Lazily acquire the writer lock; every mutating entry point calls
+    /// this so read-only opens stay lock-free. Once held, the lock file is
+    /// revalidated per call (one tiny read) so a writer whose lock was
+    /// voided by a racing stale-lock breaker fails fast instead of
+    /// appending unguarded.
+    fn ensure_writer_lock(&mut self) -> Result<()> {
+        match &self.lock {
+            Some(lock) => lock.verify_held(),
+            None => {
+                self.lock = Some(StoreLock::acquire(&self.dir)?);
+                Ok(())
+            }
+        }
     }
 
     /// Toggle deferred index commits. While deferred, `add`/`remove`
@@ -177,6 +212,7 @@ impl Store {
     /// deferred loses only index entries — appended payloads become dead
     /// space, never corruption.
     pub fn set_deferred_index(&mut self, deferred: bool) -> Result<()> {
+        self.ensure_writer_lock()?;
         self.defer_index = deferred;
         if !deferred {
             self.write_index()?;
@@ -193,6 +229,7 @@ impl Store {
     /// Append a pre-serialized `.cusza` payload under `name`. Validates
     /// the payload's framing (magic + header section) before committing.
     pub fn add_bytes(&mut self, name: &str, payload: &[u8]) -> Result<StoreEntry> {
+        self.ensure_writer_lock()?;
         if self.find(name).is_some() {
             bail!("field '{name}' already in store (remove it first)");
         }
@@ -260,24 +297,35 @@ impl Store {
         self.read_entry(e)
     }
 
-    /// Random-access read + decode of one field, with the header digest
-    /// cross-checked against the index entry.
-    pub fn get(&self, name: &str) -> Result<Archive> {
+    /// Like [`Store::get_bytes`] but with the header digest cross-checked
+    /// against the index entry too (the same guarantee [`Store::get`]
+    /// gives), without decoding the payload body — the batch-drain read
+    /// path.
+    pub fn get_bytes_checked(&self, name: &str) -> Result<Vec<u8>> {
         let e = self
             .find(name)
             .with_context(|| format!("field '{name}' not in store"))?;
         let bytes = self.read_entry(e)?;
-        let archive = Archive::from_bytes(&bytes)
-            .with_context(|| format!("decoding field '{name}'"))?;
-        if archive.header_digest() != e.header_digest {
+        let header = Archive::peek_header(&bytes)
+            .with_context(|| format!("field '{name}': payload framing"))?;
+        if crc32(&header.to_bytes()) != e.header_digest {
             bail!("field '{name}': header digest mismatch (payload rewritten since indexing?)");
         }
-        Ok(archive)
+        Ok(bytes)
+    }
+
+    /// Random-access read + decode of one field, with the header digest
+    /// cross-checked against the index entry (via the shared checked read
+    /// path, so single-field and batch-drain reads enforce one contract).
+    pub fn get(&self, name: &str) -> Result<Archive> {
+        let bytes = self.get_bytes_checked(name)?;
+        Archive::from_bytes(&bytes).with_context(|| format!("decoding field '{name}'"))
     }
 
     /// Drop a field from the index. Its payload bytes become dead space in
     /// the shard until the bundle is compacted.
     pub fn remove(&mut self, name: &str) -> Result<()> {
+        self.ensure_writer_lock()?;
         let before = self.index.entries.len();
         self.index.entries.retain(|e| e.name != name);
         if self.index.entries.len() == before {
@@ -298,6 +346,92 @@ impl Store {
             out.add_bytes(&e.name, &payload)?;
         }
         Ok(out)
+    }
+
+    /// Compact the bundle in place: rebuild into a sibling temp directory,
+    /// then swap it over this bundle's path (rename + rename, with a
+    /// rollback if the install rename fails). Returns the number of dead
+    /// bytes reclaimed.
+    ///
+    /// A crash exactly between the two renames can leave the bundle at
+    /// the sibling `<name>.old-tmp` path (nothing is ever half-mixed or
+    /// deleted before the new bundle is installed); recover by renaming
+    /// it back. Reader handles opened *before* the swap become invalid:
+    /// `Store` reopens shard files by path on every read, so a stale
+    /// handle's offsets no longer match the compacted shards and its
+    /// reads fail cleanly with CRC mismatches — reopen after compaction.
+    /// New opens see the compacted bundle.
+    pub fn compact_in_place(&mut self) -> Result<u64> {
+        self.ensure_writer_lock()?;
+        let reclaimed = self.dead_bytes();
+        if reclaimed == 0 {
+            return Ok(0);
+        }
+        let file_name = self
+            .dir
+            .file_name()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "store".into());
+        let parent = self
+            .dir
+            .parent()
+            .filter(|p| !p.as_os_str().is_empty())
+            .map(Path::to_path_buf)
+            .unwrap_or_else(|| PathBuf::from("."));
+        let staging = parent.join(format!("{file_name}.compact-tmp"));
+        let graveyard = parent.join(format!("{file_name}.old-tmp"));
+        for leftover in [&staging, &graveyard] {
+            if leftover.exists() {
+                fs::remove_dir_all(leftover)
+                    .with_context(|| format!("clearing stale {}", leftover.display()))?;
+            }
+        }
+        let mut fresh = self.compact_into(&staging)?;
+        // Swap. Our own (still armed) lock file travels with the renames;
+        // it is only disarmed once the new bundle is fully installed, so
+        // any failure path below leaves this handle locked and usable.
+        fs::rename(&self.dir, &graveyard)
+            .with_context(|| format!("moving old bundle to {}", graveyard.display()))?;
+        if let Err(e) = fs::rename(&staging, &self.dir) {
+            // roll the old bundle back into place (its lock file included)
+            let rollback = fs::rename(&graveyard, &self.dir);
+            return Err(anyhow::Error::new(e).context(match rollback {
+                Ok(()) => format!(
+                    "installing compacted bundle at {} (old bundle restored)",
+                    self.dir.display()
+                ),
+                Err(r) => format!(
+                    "installing compacted bundle at {} (rollback also failed: {r}; \
+                     old bundle is at {})",
+                    self.dir.display(),
+                    graveyard.display()
+                ),
+            }));
+        }
+        // The swap is complete: `fresh`'s lock file now sits at
+        // dir/writer.lock, and our old lock file is inside the graveyard.
+        // Disarm the old lock so its Drop doesn't delete the new one.
+        if let Some(old_lock) = self.lock.take() {
+            old_lock.disarm();
+        }
+        if let Some(l) = fresh.lock.as_mut() {
+            l.retarget(&self.dir);
+        }
+        self.index = fresh.index;
+        self.shard_sizes = fresh.shard_sizes;
+        self.defer_index = false;
+        self.lock = fresh.lock.take();
+        // the compaction itself has fully succeeded at this point; failing
+        // to clear the graveyard is not worth failing the operation over —
+        // the next compact_in_place clears stale leftovers on entry
+        if let Err(e) = fs::remove_dir_all(&graveyard) {
+            eprintln!(
+                "[cusz] warning: compacted bundle installed, but removing the old \
+                 bundle at {} failed ({e}); it will be cleared on the next compaction",
+                graveyard.display()
+            );
+        }
+        Ok(reclaimed)
     }
 
     /// Full integrity scan: every payload read back and CRC-verified.
@@ -564,6 +698,75 @@ mod tests {
         let store = Store::open_or_create(&dir, 5).unwrap();
         assert_eq!(store.n_shards(), 2);
         assert_eq!(store.len(), 1);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn second_writer_is_locked_out() {
+        let dir = tmp_dir("store-lock");
+        let coord = coordinator();
+        let mut writer = Store::create(&dir, 1).unwrap();
+        writer.add(&coord.compress(&sample_field(0)).unwrap()).unwrap();
+        // a second writer handle (same dir) must fail fast...
+        let err = Store::open_writable(&dir).unwrap_err();
+        assert!(err.to_string().contains("locked"), "{err:#}");
+        // ...and a lazily-locking mutation through a read handle too
+        let mut reader = Store::open(&dir).unwrap();
+        assert!(reader.remove("field-0").is_err());
+        // read-only access stays lock-free
+        let ro = Store::open(&dir).unwrap();
+        assert_eq!(ro.len(), 1);
+        ro.verify().unwrap();
+        drop(writer);
+        // lock released on drop: writing works again
+        let mut w2 = Store::open_writable(&dir).unwrap();
+        w2.add(&coord.compress(&sample_field(1)).unwrap()).unwrap();
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn compact_in_place_reclaims_and_swaps_atomically() {
+        let dir = tmp_dir("store-cip");
+        let coord = coordinator();
+        let mut store = Store::create(&dir, 2).unwrap();
+        for i in 0..5 {
+            store.add(&coord.compress(&sample_field(i)).unwrap()).unwrap();
+        }
+        store.remove("field-1").unwrap();
+        store.remove("field-3").unwrap();
+        let dead = store.dead_bytes();
+        assert!(dead > 0);
+        let reclaimed = store.compact_in_place().unwrap();
+        assert_eq!(reclaimed, dead);
+        assert_eq!(store.dead_bytes(), 0);
+        assert_eq!(store.len(), 3);
+        // same handle keeps working: read, verify, and write again
+        store.verify().unwrap();
+        let out = coord.decompress(&store.get("field-2").unwrap()).unwrap();
+        assert_eq!(out.dims, vec![64, 64]);
+        store.add(&coord.compress(&sample_field(9)).unwrap()).unwrap();
+        // no temp dirs left behind, lock still held by this handle
+        assert!(!dir.with_file_name(format!(
+            "{}.compact-tmp",
+            dir.file_name().unwrap().to_string_lossy()
+        )).exists());
+        assert!(Store::open_writable(&dir).is_err());
+        // a fresh reader sees the compacted bundle
+        let ro = Store::open(&dir).unwrap();
+        assert_eq!(ro.len(), 4);
+        ro.verify().unwrap();
+        drop(store);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn compact_in_place_noop_without_dead_bytes() {
+        let dir = tmp_dir("store-cip-noop");
+        let coord = coordinator();
+        let mut store = Store::create(&dir, 1).unwrap();
+        store.add(&coord.compress(&sample_field(0)).unwrap()).unwrap();
+        assert_eq!(store.compact_in_place().unwrap(), 0);
+        store.verify().unwrap();
         fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -1,0 +1,139 @@
+//! Encoder-matrix integration tests: every codec pipeline variant —
+//! encoder (huffman/fle) × lossless tail (none/gzip/zstd) ×
+//! dimensionality (1D/2D/3D) × data regime — must roundtrip through
+//! archive bytes within the error bound. Plus the auto-mode selection
+//! shape and version-0 archive compatibility at the coordinator level.
+
+use cusz::codec::{CodecSpec, EncoderChoice, EncoderKind};
+use cusz::config::{BackendKind, CuszConfig, ErrorBound, LosslessStage};
+use cusz::container::Archive;
+use cusz::coordinator::Coordinator;
+use cusz::field::Field;
+use cusz::metrics;
+use cusz::testkit::fields::{make, Regime};
+use cusz::util::prng::Rng;
+
+const EB: f32 = 1e-3;
+
+fn coordinator(codec: CodecSpec) -> Coordinator {
+    Coordinator::new(CuszConfig {
+        backend: BackendKind::Cpu,
+        eb: ErrorBound::Abs(EB as f64),
+        codec,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+#[test]
+fn encoder_matrix_roundtrips_within_bound() {
+    let encoders = [EncoderChoice::Huffman, EncoderChoice::Fle];
+    let stages = [LosslessStage::None, LosslessStage::Gzip, LosslessStage::Zstd];
+    let shapes: [&[usize]; 3] = [&[20_000], &[120, 160], &[24, 30, 28]];
+    for &encoder in &encoders {
+        for &lossless in &stages {
+            let coord = coordinator(CodecSpec { encoder, lossless });
+            for (si, &shape) in shapes.iter().enumerate() {
+                for (ri, regime) in Regime::ALL.into_iter().enumerate() {
+                    let n: usize = shape.iter().product();
+                    let seed = (si * 3 + ri) as u64 + 1;
+                    let field =
+                        Field::new("m", shape.to_vec(), make(regime, n, seed)).unwrap();
+                    let (archive, stats) = coord.compress_with_stats(&field).unwrap();
+                    let expect = match encoder {
+                        EncoderChoice::Huffman => EncoderKind::Huffman,
+                        EncoderChoice::Fle => EncoderKind::Fle,
+                        EncoderChoice::Auto => unreachable!(),
+                    };
+                    assert_eq!(archive.header.encoder, expect);
+                    assert_eq!(stats.encoder, expect);
+                    // through serialized bytes, like the store path
+                    let restored = Archive::from_bytes(&archive.to_bytes()).unwrap();
+                    let out = coord.decompress(&restored).unwrap();
+                    assert_eq!(out.dims, field.dims);
+                    assert_eq!(
+                        metrics::verify_error_bound(&field.data, &out.data, EB),
+                        None,
+                        "{encoder:?} {lossless:?} {shape:?} {regime:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn auto_mode_adapts_to_smoothness() {
+    let auto = |lossless| CodecSpec { encoder: EncoderChoice::Auto, lossless };
+
+    // smooth random walk, comfortable bound: deltas land in a handful of
+    // bins around the radius -> skewed histogram -> Huffman
+    let coord = Coordinator::new(CuszConfig {
+        backend: BackendKind::Cpu,
+        eb: ErrorBound::Abs(1e-2),
+        codec: auto(LosslessStage::None),
+        ..Default::default()
+    })
+    .unwrap();
+    let smooth = Field::new("s", vec![50_000], make(Regime::Smooth, 50_000, 2)).unwrap();
+    let (archive, _) = coord.compress_with_stats(&smooth).unwrap();
+    assert_eq!(archive.header.encoder, EncoderKind::Huffman, "smooth -> huffman");
+    let out = coord.decompress(&archive).unwrap();
+    assert_eq!(metrics::verify_error_bound(&smooth.data, &out.data, 1e-2), None);
+
+    // white noise scaled so prediction deltas spread over ~±125 bins:
+    // entropy approaches the fixed width -> FLE
+    let mut rng = Rng::new(77);
+    let noisy: Vec<f32> = (0..50_000).map(|_| rng.f32() * 0.25).collect();
+    let field = Field::new("n", vec![50_000], noisy).unwrap();
+    let coord = coordinator(auto(LosslessStage::None));
+    let (archive, stats) = coord.compress_with_stats(&field).unwrap();
+    assert_eq!(archive.header.encoder, EncoderKind::Fle, "noisy -> fle");
+    assert_eq!(stats.encoder, EncoderKind::Fle);
+    let out = coord.decompress(&archive).unwrap();
+    assert_eq!(metrics::verify_error_bound(&field.data, &out.data, EB), None);
+}
+
+#[test]
+fn fle_with_lossless_tail_beats_raw_fle_on_shuffled_planes() {
+    // the point of the bitplane shuffle: the lossless tail sees long
+    // near-constant runs, so zstd over FLE output must shrink it
+    let field = Field::new("z", vec![64, 256], make(Regime::Smooth, 64 * 256, 5)).unwrap();
+    let raw = coordinator(CodecSpec { encoder: EncoderChoice::Fle, lossless: LosslessStage::None })
+        .compress(&field)
+        .unwrap();
+    let zstd = coordinator(CodecSpec { encoder: EncoderChoice::Fle, lossless: LosslessStage::Zstd })
+        .compress(&field)
+        .unwrap();
+    assert!(
+        zstd.compressed_bytes() < raw.compressed_bytes(),
+        "zstd tail should shrink shuffled planes: {} vs {}",
+        zstd.compressed_bytes(),
+        raw.compressed_bytes()
+    );
+}
+
+#[test]
+fn v0_payload_decodes_through_store_path() {
+    use cusz::store::Store;
+    use cusz::testkit::tmp_dir;
+
+    // a pre-refactor payload: Huffman, version-0 header, legacy magic
+    let field = Field::new("old", vec![96, 96], make(Regime::Smooth, 96 * 96, 8)).unwrap();
+    let coord = coordinator(CodecSpec::default());
+    let mut archive = coord.compress(&field).unwrap();
+    archive.header.version = 0;
+    let v0_bytes = archive.to_bytes();
+
+    let dir = tmp_dir("codec-v0-store");
+    let mut store = Store::create(&dir, 1).unwrap();
+    store.add_bytes("old", &v0_bytes).unwrap();
+    drop(store);
+    let store = Store::open(&dir).unwrap();
+    let restored = store.get("old").unwrap();
+    assert_eq!(restored.header.version, 0);
+    assert_eq!(restored.header.encoder, EncoderKind::Huffman);
+    let out = coord.decompress(&restored).unwrap();
+    assert_eq!(metrics::verify_error_bound(&field.data, &out.data, EB), None);
+    std::fs::remove_dir_all(&dir).unwrap();
+}

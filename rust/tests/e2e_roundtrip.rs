@@ -79,7 +79,7 @@ fn lossless_stage_shrinks_or_preserves() {
     let field = datagen::generate(Dataset::Hurricane, "QICEf48", 3);
     for stage in [LosslessStage::Gzip, LosslessStage::Zstd] {
         let mut c = cfg(BackendKind::Cpu);
-        c.lossless = stage;
+        c.codec.lossless = stage;
         let coord = Coordinator::new(c).unwrap();
         let archive = coord.compress(&field).unwrap();
         let bytes = archive.to_bytes();

@@ -103,6 +103,105 @@ fn prop_huffman_roundtrip_random_distributions() {
 }
 
 #[test]
+fn prop_versioned_header_roundtrip_and_tag_rejection() {
+    use cusz::codec::EncoderKind;
+    use cusz::container::{Header, LosslessTag, FORMAT_VERSION};
+
+    check("versioned header roundtrips; unknown tags/versions rejected", |rng| {
+        let nd = gen::usize_in(rng, 1, 4);
+        let dims: Vec<usize> = (0..nd).map(|_| gen::usize_in(rng, 1, 4096)).collect();
+        let h = Header {
+            version: FORMAT_VERSION,
+            encoder: *gen::pick(rng, &EncoderKind::ALL),
+            field_name: format!("f{}", gen::usize_in(rng, 0, 9999)),
+            dims,
+            variant: "2d_256".into(),
+            eb: if rng.f32() < 0.5 {
+                cusz::config::ErrorBound::Abs(0.5)
+            } else {
+                cusz::config::ErrorBound::ValRel(1e-4)
+            },
+            abs_eb: 0.5,
+            dict_size: *gen::pick(rng, &[128usize, 1024, 65536]),
+            chunk_symbols: *gen::pick(rng, &[64usize, 4096, 65536]),
+            repr_bits: *gen::pick(rng, &[17u32, 32, 64]),
+            lossless: *gen::pick(rng, &[LosslessTag::None, LosslessTag::Gzip, LosslessTag::Zstd]),
+            n_slabs: gen::usize_in(rng, 1, 1000),
+        };
+        let bytes = h.to_bytes();
+        let back = Header::from_bytes(&bytes).map_err(|e| e.to_string())?;
+        if back != h {
+            return Err("versioned roundtrip mismatch".into());
+        }
+
+        // the old (version-0) layout still parses via the legacy path
+        let mut h0 = h.clone();
+        h0.version = 0;
+        h0.encoder = EncoderKind::Huffman;
+        let back0 = Header::from_bytes_v0(&h0.to_bytes()).map_err(|e| e.to_string())?;
+        if back0 != h0 {
+            return Err("v0 roundtrip mismatch".into());
+        }
+
+        // unknown encoder tag: rejected without panic
+        let mut bad = bytes.clone();
+        bad[1] = 2 + rng.below(254) as u8;
+        if Header::from_bytes(&bad).is_ok() {
+            return Err(format!("unknown encoder tag {} accepted", bad[1]));
+        }
+
+        // future format version: rejected without panic
+        let mut fut = bytes.clone();
+        fut[0] = FORMAT_VERSION + 1 + rng.below(200) as u8;
+        if Header::from_bytes(&fut).is_ok() {
+            return Err(format!("future version {} accepted", fut[0]));
+        }
+
+        // any proper prefix errors, never panics
+        let cut = gen::usize_in(rng, 0, bytes.len() - 1);
+        if Header::from_bytes(&bytes[..cut]).is_ok() {
+            return Err(format!("truncated header ({cut}/{} bytes) parsed", bytes.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_codec_matrix_roundtrip_error_bound() {
+    use cusz::codec::{CodecSpec, EncoderChoice};
+    use cusz::config::LosslessStage;
+
+    check("every codec combination obeys eb through archive bytes", |rng| {
+        let (field, eb) = random_field(rng);
+        let codec = CodecSpec {
+            encoder: *gen::pick(
+                rng,
+                &[EncoderChoice::Huffman, EncoderChoice::Fle, EncoderChoice::Auto],
+            ),
+            lossless: *gen::pick(rng, &[LosslessStage::None, LosslessStage::Zstd]),
+        };
+        let coord = Coordinator::new(CuszConfig {
+            backend: BackendKind::Cpu,
+            eb: ErrorBound::Abs(eb),
+            codec,
+            ..Default::default()
+        })
+        .unwrap();
+        let archive = coord.compress(&field).map_err(|e| e.to_string())?;
+        let restored = cusz::container::Archive::from_bytes(&archive.to_bytes())
+            .map_err(|e| e.to_string())?;
+        let out = coord.decompress(&restored).map_err(|e| e.to_string())?;
+        match metrics::verify_error_bound(&field.data, &out.data, eb as f32) {
+            None => Ok(()),
+            Some(i) => Err(format!(
+                "{codec:?}: bound violated at {i}: {} vs {}",
+                field.data[i], out.data[i]
+            )),
+        }
+    });
+}
+
+#[test]
 fn prop_archive_rejects_truncation_and_bitflips() {
     check("archive parser errors (never panics) on corrupt bytes", |rng| {
         // small field keeps each case cheap; regimes vary via smoothing

@@ -57,7 +57,7 @@ fn batched_snapshot_roundtrips_via_random_access() {
     let mut store = Store::create(&dir, 3).unwrap();
     let batch = BatchCompressor::new(
         Arc::clone(&coord),
-        BatchConfig { workers: 4, queue_depth: 2 },
+        BatchConfig { workers: 4, queue_depth: 2, ..Default::default() },
     );
     let stats = batch.run_into_store(originals.clone(), &mut store).unwrap();
     assert_eq!(stats.jobs, originals.len());
@@ -99,7 +99,7 @@ fn store_survives_rm_and_batch_append_cycles() {
     let dir = tmp_dir("accept-cycles");
     let coord = coordinator();
     let mut store = Store::create(&dir, 2).unwrap();
-    let batch = BatchCompressor::new(Arc::clone(&coord), BatchConfig { workers: 2, queue_depth: 2 });
+    let batch = BatchCompressor::new(Arc::clone(&coord), BatchConfig { workers: 2, queue_depth: 2, ..Default::default() });
 
     let first: Vec<Field> = snapshot().into_iter().take(4).collect();
     batch.run_into_store(first.clone(), &mut store).unwrap();
