@@ -1,23 +1,33 @@
-//! Codec comparison: encode/decode throughput and bits/symbol for the two
-//! encoder backends (huffman vs fle) across quant-code profiles that span
-//! the smoothness spectrum — the measurement behind `--codec auto`'s
-//! threshold (and FZ-GPU's throughput-vs-ratio trade, arXiv:2304.12557).
+//! Codec comparison: encode/decode throughput and bits/symbol for every
+//! encoder backend (huffman / fle / rle) across quant-code profiles that
+//! span the smoothness spectrum — the measurement behind `--codec auto`
+//! (and FZ-GPU's throughput-vs-ratio trade, arXiv:2304.12557).
+//!
+//! Beyond the per-backend table this bench (a) runs the per-chunk
+//! selection acceptance check — on a mixed-smoothness field, `auto` at
+//! chunk granularity must land within 2% of the per-chunk oracle and at
+//! or under the best uniform backend — and (b) emits the measured
+//! cost-model constants (per-profile fitted bits factors and the
+//! throughput equalizers) to stdout and to
+//! `target/codec-cost-model.txt`, which CI archives as an artifact.
 //!
 //! Both stages get the histogram for free (the real pipeline computes it
 //! during dual-quant either way); Huffman still pays tree + codebook
-//! construction inside encode, FLE pays nothing up front. Throughput is
-//! reported against original field bytes (4 B/symbol), the paper's
+//! construction inside encode, FLE/RLE pay nothing up front. Throughput
+//! is reported against original field bytes (4 B/symbol), the paper's
 //! convention.
 
 mod common;
 
-use cusz::codec::{self, stage_for, EncodeContext, EncoderKind};
+use cusz::codec::{self, cost, stage_for, CostModel, EncodeContext, EncoderKind};
 use cusz::config::CodewordRepr;
+use cusz::huffman;
 use cusz::util::bench::print_table;
 use cusz::util::prng::Rng;
 
 const DICT: usize = 1024;
 const RADIUS: i32 = (DICT / 2) as i32;
+const CHUNK: usize = 4096;
 
 struct Profile {
     name: &'static str,
@@ -36,6 +46,19 @@ fn profiles(n: usize) -> Vec<Profile> {
             name: "smooth",
             symbols: (0..n)
                 .map(|_| clamp_code(RADIUS + (rng.normal() * 3.0) as i32))
+                .collect(),
+        },
+        // zero-dominated: one constant bin with sparse excursions
+        Profile {
+            name: "zero-dom",
+            symbols: (0..n)
+                .map(|_| {
+                    if rng.f32() < 0.97 {
+                        RADIUS as u16
+                    } else {
+                        clamp_code(RADIUS - 20 + rng.below(41) as i32)
+                    }
+                })
                 .collect(),
         },
         // mildly noisy: deltas uniform over ±16 bins
@@ -68,59 +91,101 @@ fn profiles(n: usize) -> Vec<Profile> {
     ]
 }
 
+/// Mixed-smoothness stream: chunk-aligned stripes rotating through the
+/// three pure regimes — the field shape where every uniform choice loses.
+fn mixed_symbols(n: usize) -> Vec<u16> {
+    let mut rng = Rng::new(7);
+    (0..n)
+        .map(|i| match (i / CHUNK) % 3 {
+            0 => RADIUS as u16,
+            1 => clamp_code(RADIUS + (rng.normal() * 3.0) as i32),
+            _ => clamp_code(RADIUS - 128 + rng.below(257) as i32),
+        })
+        .collect()
+}
+
+fn histogram(symbols: &[u16]) -> Vec<u64> {
+    let mut freq = vec![0u64; DICT];
+    for &s in symbols {
+        freq[s as usize] += 1;
+    }
+    freq
+}
+
+/// Serialized stream cost of an encoded result in bytes (words + sidecar),
+/// the same convention the per-chunk cost model prices.
+fn encoded_bytes(stream_payload: usize, aux: usize) -> usize {
+    stream_payload + aux
+}
+
 fn main() {
     let bench = common::bench();
     let n = if common::quick() { 1 << 19 } else { 1 << 22 };
     let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(8);
     let bytes = n * 4; // original field bytes per symbol (f32)
+    let model = CostModel::MEASURED;
 
     let mut rows = Vec::new();
-    let mut fle_wins_encode = Vec::new();
+    let mut report = String::new();
+    report.push_str("# measured cost-model constants (codec_compare)\n");
+    report.push_str("# fitted_factor = actual encoded stream bits / probe-estimated bits\n");
+
     for p in profiles(n) {
-        let mut freq = vec![0u64; DICT];
-        for &s in &p.symbols {
-            freq[s as usize] += 1;
-        }
+        let freq = histogram(&p.symbols);
         let ctx = EncodeContext {
             dict_size: DICT,
-            chunk_symbols: 4096,
+            chunk_symbols: CHUNK,
             threads,
             codeword_repr: CodewordRepr::Adaptive,
             freq: &freq,
         };
         let entropy = codec::entropy_bits(&freq);
         let auto = codec::auto_select(&freq);
+        let lengths = huffman::build_lengths(&freq);
 
-        let mut per_kind = Vec::new();
+        // probe-estimated per-chunk bits, summed field-wide, per backend
+        let mut est = [0u64; 3];
+        for chunk in p.symbols.chunks(CHUNK) {
+            let probe = cost::probe_chunk(chunk, &lengths, RADIUS);
+            for (slot, (_, bits)) in est.iter_mut().zip(model.chunk_costs(&probe)) {
+                *slot += bits;
+            }
+        }
+
         for kind in EncoderKind::ALL {
             let stage = stage_for(kind);
-            let enc = bench.run(&format!("{} {} enc", p.name, kind.name()), bytes, || {
+            let enc_res = bench.run(&format!("{} {} enc", p.name, kind.name()), bytes, || {
                 let out = stage.encode(&p.symbols, &ctx).unwrap();
                 std::hint::black_box(out.stream.total_bits());
             });
             let encoded = stage.encode(&p.symbols, &ctx).unwrap();
             let bits_per_sym = encoded.stream.total_bits() as f64 / n as f64;
-            let dec = bench.run(&format!("{} {} dec", p.name, kind.name()), bytes, || {
+            let dec_res = bench.run(&format!("{} {} dec", p.name, kind.name()), bytes, || {
                 let syms = stage
                     .decode(&encoded.aux, &encoded.stream, DICT, threads, n)
                     .unwrap();
                 std::hint::black_box(syms.len());
             });
-            per_kind.push((kind, enc.gbps(), dec.gbps(), bits_per_sym));
-        }
-        let (_, huff_enc, _, _) = per_kind[0];
-        let (_, fle_enc, _, _) = per_kind[1];
-        if fle_enc > huff_enc {
-            fle_wins_encode.push(p.name);
-        }
-        for (kind, enc_gbps, dec_gbps, bps) in per_kind {
+            let actual_bits =
+                (encoded.stream.payload_bytes() + encoded.aux.len()) as u64 * 8;
+            let fitted = actual_bits as f64 / est[kind.to_tag() as usize].max(1) as f64;
+            report.push_str(&format!(
+                "{} {} fitted_factor {:.4} enc_gbps {:.3} dec_gbps {:.3} bits_per_sym {:.3}\n",
+                p.name,
+                kind.name(),
+                fitted,
+                enc_res.gbps(),
+                dec_res.gbps(),
+                bits_per_sym,
+            ));
             rows.push(vec![
                 p.name.to_string(),
                 kind.name().to_string(),
-                format!("{enc_gbps:.3}"),
-                format!("{dec_gbps:.3}"),
-                format!("{bps:.2}"),
+                format!("{:.3}", enc_res.gbps()),
+                format!("{:.3}", dec_res.gbps()),
+                format!("{bits_per_sym:.2}"),
                 format!("{entropy:.2}"),
+                format!("{fitted:.3}"),
                 if kind == auto { "<- auto".to_string() } else { String::new() },
             ]);
         }
@@ -128,20 +193,120 @@ fn main() {
 
     print_table(
         "Codec comparison: encoder backends across quant-code profiles",
-        &["profile", "encoder", "enc GB/s", "dec GB/s", "bits/sym", "entropy", "auto pick"],
+        &[
+            "profile", "encoder", "enc GB/s", "dec GB/s", "bits/sym", "entropy", "fit", "auto pick",
+        ],
         &rows,
     );
-    println!(
-        "\nFLE out-encodes Huffman on: {}",
-        if fle_wins_encode.is_empty() {
-            "(none this run)".to_string()
-        } else {
-            fle_wins_encode.join(", ")
-        }
+
+    // ---- per-chunk selection vs the oracle on a mixed field ------------
+    let mixed = mixed_symbols(n);
+    let freq = histogram(&mixed);
+    let ctx = EncodeContext {
+        dict_size: DICT,
+        chunk_symbols: CHUNK,
+        threads,
+        codeword_repr: CodewordRepr::Adaptive,
+        freq: &freq,
+    };
+    let mut uniform = Vec::new();
+    for kind in EncoderKind::ALL {
+        let enc = stage_for(kind).encode(&mixed, &ctx).unwrap();
+        uniform.push((kind, encoded_bytes(enc.stream.payload_bytes(), enc.aux.len())));
+    }
+    let best_uniform = uniform.iter().map(|&(_, b)| b).min().unwrap();
+
+    // oracle: per chunk, the smallest of the three actual encodings
+    let lengths = huffman::build_lengths(&freq);
+    let book = huffman::CanonicalCodebook::from_lengths(&lengths).unwrap();
+    let mut oracle_bytes = lengths.len(); // shared codebook sidecar
+    for chunk in mixed.chunks(CHUNK) {
+        let h = huffman::deflate::deflate_one(chunk, &book);
+        let f = stage_for(EncoderKind::Fle).encode(chunk, &ctx).unwrap();
+        let r = stage_for(EncoderKind::Rle).encode(chunk, &ctx).unwrap();
+        let hcost = h.words.len() * 8;
+        let fcost = f.stream.payload_bytes() + f.aux.len();
+        let rcost = r.stream.payload_bytes() + r.aux.len();
+        oracle_bytes += hcost.min(fcost).min(rcost);
+    }
+
+    let chunked = codec::chunked::encode_chunked(&mixed, &ctx, &model).unwrap();
+    let chunked_bytes = chunked.stream.payload_bytes()
+        + chunked.shared_aux.len()
+        + chunked.chunk_aux.iter().map(|a| a.len()).sum::<usize>()
+        + chunked.tags.len();
+    let bench_chunked = bench.run("mixed per-chunk auto enc", bytes, || {
+        let out = codec::chunked::encode_chunked(&mixed, &ctx, &model).unwrap();
+        std::hint::black_box(out.stream.total_bits());
+    });
+
+    let mut mix_rows = Vec::new();
+    for (kind, b) in &uniform {
+        mix_rows.push(vec![
+            format!("uniform {}", kind.name()),
+            format!("{b}"),
+            format!("{:.3}x", bytes as f64 / *b as f64),
+            String::new(),
+        ]);
+    }
+    mix_rows.push(vec![
+        "per-chunk oracle".to_string(),
+        format!("{oracle_bytes}"),
+        format!("{:.3}x", bytes as f64 / oracle_bytes as f64),
+        String::new(),
+    ]);
+    mix_rows.push(vec![
+        "per-chunk auto".to_string(),
+        format!("{chunked_bytes}"),
+        format!("{:.3}x", bytes as f64 / chunked_bytes as f64),
+        format!("{:.3} GB/s enc", bench_chunked.gbps()),
+    ]);
+    print_table(
+        "Mixed-smoothness field: per-chunk auto vs uniform backends",
+        &["encoder", "stream+sidecar bytes", "ratio", "note"],
+        &mix_rows,
     );
+
+    // acceptance: within 2% of the oracle, and never above the best
+    // uniform backend (plus the tag table it additionally carries)
+    let oracle_gap = chunked_bytes as f64 / oracle_bytes as f64;
+    let counts = chunked.counts;
     println!(
-        "reference shape (FZ-GPU, arXiv:2304.12557): bitshuffle+FLE trades \
+        "\nper-chunk auto: {:.2}% of oracle (chunks huffman:{} fle:{} rle:{})",
+        oracle_gap * 100.0,
+        counts[0],
+        counts[1],
+        counts[2]
+    );
+    assert!(
+        oracle_gap <= 1.02,
+        "per-chunk auto {chunked_bytes} B strays >2% from oracle {oracle_bytes} B"
+    );
+    assert!(
+        chunked_bytes <= best_uniform + chunked.tags.len() * 4 + chunked.shared_aux.len() + 128,
+        "per-chunk auto {chunked_bytes} B worse than best uniform {best_uniform} B"
+    );
+
+    report.push_str(&format!(
+        "mixed per_chunk_auto_bytes {chunked_bytes} oracle_bytes {oracle_bytes} \
+         best_uniform_bytes {best_uniform} oracle_gap {oracle_gap:.4}\n"
+    ));
+    report.push_str(&format!(
+        "model huffman_throughput_factor {} rle_throughput_factor {} \
+         fle_sidecar_bits {} rle_sidecar_bits {}\n",
+        model.huffman_throughput_factor,
+        model.rle_throughput_factor,
+        model.fle_sidecar_bits,
+        model.rle_sidecar_bits,
+    ));
+
+    let out_path = std::path::Path::new("target").join("codec-cost-model.txt");
+    if std::fs::create_dir_all("target").is_ok() && std::fs::write(&out_path, &report).is_ok() {
+        println!("cost-model constants written to {}", out_path.display());
+    }
+    println!(
+        "\nreference shape (FZ-GPU, arXiv:2304.12557): bitshuffle+FLE trades \
          ratio for throughput on noisy inputs; huffman keeps the ratio edge \
-         on smooth ones"
+         on smooth ones; RLE collapses zero/constant-dominated streams"
     );
 }

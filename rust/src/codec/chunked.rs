@@ -1,0 +1,356 @@
+//! Mixed-granularity encoding: one archive, one encoder tag *per chunk*.
+//!
+//! Per-field selection (PR 2) loses whenever a field mixes smoothness
+//! regimes — any single backend is wrong for part of the stream. Here the
+//! compressor probes every chunk ([`cost::probe_chunk`]), picks the
+//! backend with the smallest measured encoded size, and records the
+//! choice in a per-chunk tag table that travels in the `CUSZA3` body.
+//! Huffman-tagged chunks share the one field-level codebook (the
+//! `shared_aux` length table); FLE/RLE chunks carry their tiny per-chunk
+//! sidecar records.
+//!
+//! Decoding is self-describing: the tag table picks the stage per chunk,
+//! so a mixed archive decodes on any coordinator regardless of its
+//! configured codec.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use super::cost::{self, CostModel};
+use super::{fle, rle, EncodeContext, EncoderKind};
+use crate::huffman::{self, CanonicalCodebook, ReverseCodebook};
+use crate::huffman::deflate::{DeflatedChunk, DeflatedStream};
+use crate::util::pool::parallel_map_range;
+
+/// Output of a per-chunk encode: the tag table plus everything each tag's
+/// decoder needs.
+pub struct ChunkedEncoded {
+    /// One [`EncoderKind`] tag byte per chunk.
+    pub tags: Vec<u8>,
+    /// Field-level sidecar shared by every Huffman-tagged chunk (the
+    /// code-length table); empty when no chunk picked Huffman.
+    pub shared_aux: Vec<u8>,
+    /// Per-chunk sidecar records (FLE: `[w]`; RLE: `[w, r]`; Huffman:
+    /// empty — it uses `shared_aux`).
+    pub chunk_aux: Vec<Vec<u8>>,
+    pub stream: DeflatedStream,
+    /// Chunk tally per backend, indexed by [`EncoderKind::to_tag`] — the
+    /// `CompressStats` / `ServiceStats` adaptive-selection report.
+    pub counts: [usize; EncoderKind::ALL.len()],
+    pub repr_bits: u32,
+    pub codebook_time: std::time::Duration,
+}
+
+/// Encode `symbols` choosing the cheapest backend per chunk.
+pub fn encode_chunked(
+    symbols: &[u16],
+    ctx: &EncodeContext,
+    model: &CostModel,
+) -> Result<ChunkedEncoded> {
+    if ctx.freq.len() != ctx.dict_size {
+        bail!(
+            "histogram has {} bins for dict size {}",
+            ctx.freq.len(),
+            ctx.dict_size
+        );
+    }
+    // the field codebook is built unconditionally: the probe needs its
+    // length table to price Huffman even if no chunk ends up picking it
+    let t0 = Instant::now();
+    let lengths = huffman::build_lengths(ctx.freq);
+    let book = CanonicalCodebook::from_lengths(&lengths)?;
+    let codebook_time = t0.elapsed();
+
+    let radius = (ctx.dict_size / 2) as i32;
+    let cs = ctx.chunk_symbols.max(1);
+    let nchunks = symbols.len().div_ceil(cs);
+    let parts: Vec<(EncoderKind, Vec<u8>, DeflatedChunk)> =
+        parallel_map_range(ctx.threads, nchunks, |ci| {
+            let lo = ci * cs;
+            let hi = (lo + cs).min(symbols.len());
+            let chunk = &symbols[lo..hi];
+            let probe = cost::probe_chunk(chunk, &lengths, radius);
+            match model.select_chunk(&probe) {
+                EncoderKind::Huffman => (
+                    EncoderKind::Huffman,
+                    Vec::new(),
+                    huffman::deflate::deflate_one(chunk, &book),
+                ),
+                EncoderKind::Fle => {
+                    let (w, c) = fle::encode_chunk(chunk, radius);
+                    (EncoderKind::Fle, vec![w], c)
+                }
+                EncoderKind::Rle => {
+                    let (rec, c) = rle::encode_chunk(chunk, radius);
+                    (EncoderKind::Rle, rec.to_vec(), c)
+                }
+            }
+        });
+
+    let mut tags = Vec::with_capacity(nchunks);
+    let mut chunk_aux = Vec::with_capacity(nchunks);
+    let mut chunks = Vec::with_capacity(nchunks);
+    let mut counts = [0usize; EncoderKind::ALL.len()];
+    let mut max_w = 0u32;
+    for (kind, aux, c) in parts {
+        counts[kind.to_tag() as usize] += 1;
+        if kind != EncoderKind::Huffman {
+            max_w = max_w.max(aux.iter().map(|&b| b as u32).sum());
+        }
+        tags.push(kind.to_tag());
+        chunk_aux.push(aux);
+        chunks.push(c);
+    }
+    let any_huffman = counts[EncoderKind::Huffman.to_tag() as usize] > 0;
+    let repr_bits = if any_huffman { book.repr_bits() } else { max_w.max(1) };
+    Ok(ChunkedEncoded {
+        tags,
+        shared_aux: if any_huffman { lengths } else { Vec::new() },
+        chunk_aux,
+        stream: DeflatedStream { chunks, chunk_symbols: cs },
+        counts,
+        repr_bits,
+        codebook_time,
+    })
+}
+
+/// Decode a mixed archive's symbol stream. All inputs are untrusted:
+/// tag/sidecar/stream inconsistencies must error (never panic), and the
+/// claimed symbol total is capped against `max_symbols` before any chunk
+/// allocates.
+pub fn decode_chunked(
+    tags: &[u8],
+    shared_aux: &[u8],
+    chunk_aux: &[Vec<u8>],
+    stream: &DeflatedStream,
+    dict_size: usize,
+    threads: usize,
+    max_symbols: usize,
+) -> Result<Vec<u16>> {
+    if tags.len() != stream.chunks.len() {
+        bail!(
+            "chunk tag table has {} tags for {} chunks",
+            tags.len(),
+            stream.chunks.len()
+        );
+    }
+    if chunk_aux.len() != stream.chunks.len() {
+        bail!(
+            "per-chunk sidecar has {} records for {} chunks",
+            chunk_aux.len(),
+            stream.chunks.len()
+        );
+    }
+    if stream.total_symbols() > max_symbols as u64 {
+        bail!(
+            "chunked stream claims {} symbols, caller expects at most {max_symbols}",
+            stream.total_symbols()
+        );
+    }
+    let kinds: Vec<EncoderKind> = tags
+        .iter()
+        .map(|&t| EncoderKind::from_tag(t))
+        .collect::<Result<_>>()?;
+    let rev = if kinds.contains(&EncoderKind::Huffman) {
+        if shared_aux.len() > dict_size {
+            bail!(
+                "shared codebook has {} lengths for dict size {dict_size}",
+                shared_aux.len()
+            );
+        }
+        Some(ReverseCodebook::from_lengths(shared_aux)?)
+    } else {
+        None
+    };
+    let radius = (dict_size / 2) as i32;
+    let cs = stream.chunk_symbols.max(1);
+    let parts: Vec<Result<Vec<u16>>> = parallel_map_range(threads, stream.chunks.len(), |ci| {
+        let chunk = &stream.chunks[ci];
+        // per-chunk symbol counts are untrusted too: bound by the chunk
+        // geometry before any backend allocates for them
+        if chunk.symbols as usize > cs {
+            bail!(
+                "corrupt chunk {ci}: {} symbols exceeds chunk geometry {cs}",
+                chunk.symbols
+            );
+        }
+        match kinds[ci] {
+            EncoderKind::Huffman => {
+                if !chunk_aux[ci].is_empty() {
+                    bail!(
+                        "corrupt chunk {ci}: huffman-tagged chunk carries a {}-byte sidecar",
+                        chunk_aux[ci].len()
+                    );
+                }
+                huffman::inflate::inflate_one_strict(chunk, rev.as_ref().expect("rev built"))
+            }
+            EncoderKind::Fle => {
+                let &[w] = chunk_aux[ci].as_slice() else {
+                    bail!(
+                        "corrupt chunk {ci}: FLE sidecar record has {} bytes, want 1",
+                        chunk_aux[ci].len()
+                    );
+                };
+                fle::decode_chunk(chunk, w, radius, dict_size, cs)
+            }
+            EncoderKind::Rle => rle::decode_chunk(chunk, &chunk_aux[ci], radius, dict_size, cs),
+        }
+    });
+    let mut out = Vec::with_capacity(stream.total_symbols() as usize);
+    for p in parts {
+        out.extend(p?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CodewordRepr;
+    use crate::util::prng::Rng;
+
+    /// A field that mixes smoothness regimes chunk by chunk: constant
+    /// segments (RLE territory), near-radius gaussian segments (Huffman),
+    /// and wide uniform segments (FLE).
+    fn mixed_symbols(n_chunks: usize, cs: usize, seed: u64) -> Vec<u16> {
+        let mut rng = Rng::new(seed);
+        let mut out = Vec::with_capacity(n_chunks * cs);
+        for c in 0..n_chunks {
+            for _ in 0..cs {
+                let s = match c % 3 {
+                    0 => 512,
+                    1 => ((rng.normal() * 4.0) as i32 + 512).clamp(1, 1023) as u16,
+                    _ => (384 + rng.below(257)) as u16,
+                };
+                out.push(s);
+            }
+        }
+        out
+    }
+
+    fn ctx<'a>(freq: &'a [u64], cs: usize) -> EncodeContext<'a> {
+        EncodeContext {
+            dict_size: freq.len(),
+            chunk_symbols: cs,
+            threads: 4,
+            codeword_repr: CodewordRepr::Adaptive,
+            freq,
+        }
+    }
+
+    fn encode_mixed(cs: usize, seed: u64) -> (Vec<u16>, ChunkedEncoded) {
+        let symbols = mixed_symbols(9, cs, seed);
+        let mut freq = vec![0u64; 1024];
+        for &s in &symbols {
+            freq[s as usize] += 1;
+        }
+        let enc = encode_chunked(&symbols, &ctx(&freq, cs), &CostModel::MEASURED).unwrap();
+        (symbols, enc)
+    }
+
+    #[test]
+    fn mixed_field_uses_multiple_backends_and_roundtrips() {
+        let (symbols, enc) = encode_mixed(2048, 1);
+        // all three regimes are represented, so all three backends fire
+        let used = enc.counts.iter().filter(|&&c| c > 0).count();
+        assert!(used >= 2, "counts {:?}", enc.counts);
+        assert_eq!(enc.counts.iter().sum::<usize>(), 9);
+        assert_eq!(enc.tags.len(), 9);
+        let out = decode_chunked(
+            &enc.tags,
+            &enc.shared_aux,
+            &enc.chunk_aux,
+            &enc.stream,
+            1024,
+            4,
+            symbols.len(),
+        )
+        .unwrap();
+        assert_eq!(out, symbols);
+    }
+
+    #[test]
+    fn per_chunk_beats_every_uniform_backend_on_mixed_fields() {
+        use super::super::{stage_for, EncoderKind};
+        let (symbols, enc) = encode_mixed(2048, 2);
+        let mut freq = vec![0u64; 1024];
+        for &s in &symbols {
+            freq[s as usize] += 1;
+        }
+        let mixed_bytes = enc.stream.payload_bytes()
+            + enc.shared_aux.len()
+            + enc.chunk_aux.iter().map(|a| a.len()).sum::<usize>()
+            + enc.tags.len();
+        for kind in EncoderKind::ALL {
+            let uni = stage_for(kind).encode(&symbols, &ctx(&freq, 2048)).unwrap();
+            let uni_bytes = uni.stream.payload_bytes() + uni.aux.len();
+            assert!(
+                mixed_bytes <= uni_bytes + enc.tags.len() + enc.shared_aux.len(),
+                "{}: mixed {mixed_bytes} vs uniform {uni_bytes}",
+                kind.name()
+            );
+        }
+    }
+
+    #[test]
+    fn encode_is_deterministic_across_thread_counts() {
+        let symbols = mixed_symbols(6, 1000, 3);
+        let mut freq = vec![0u64; 1024];
+        for &s in &symbols {
+            freq[s as usize] += 1;
+        }
+        let mut c1 = ctx(&freq, 1000);
+        c1.threads = 1;
+        let mut c8 = ctx(&freq, 1000);
+        c8.threads = 8;
+        let a = encode_chunked(&symbols, &c1, &CostModel::MEASURED).unwrap();
+        let b = encode_chunked(&symbols, &c8, &CostModel::MEASURED).unwrap();
+        assert_eq!(a.tags, b.tags);
+        assert_eq!(a.chunk_aux, b.chunk_aux);
+        assert_eq!(a.stream, b.stream);
+    }
+
+    #[test]
+    fn corrupt_tag_table_and_sidecars_rejected() {
+        let (symbols, enc) = encode_mixed(1024, 4);
+        let n = symbols.len();
+        let ok = |tags: &[u8], shared: &[u8], aux: &[Vec<u8>], stream: &DeflatedStream| {
+            decode_chunked(tags, shared, aux, stream, 1024, 2, n)
+        };
+        assert!(ok(&enc.tags, &enc.shared_aux, &enc.chunk_aux, &enc.stream).is_ok());
+
+        // truncated tag table
+        assert!(ok(&enc.tags[..enc.tags.len() - 1], &enc.shared_aux, &enc.chunk_aux, &enc.stream)
+            .is_err());
+        // unknown tag value
+        let mut tags = enc.tags.clone();
+        tags[0] = 99;
+        assert!(ok(&tags, &enc.shared_aux, &enc.chunk_aux, &enc.stream).is_err());
+        // swapped tag (decode a chunk with the wrong backend)
+        let (hi, lo) = (EncoderKind::Huffman.to_tag(), EncoderKind::Rle.to_tag());
+        if let (Some(h), Some(r)) = (
+            enc.tags.iter().position(|&t| t == hi),
+            enc.tags.iter().position(|&t| t == lo),
+        ) {
+            let mut tags = enc.tags.clone();
+            tags.swap(h, r);
+            assert!(ok(&tags, &enc.shared_aux, &enc.chunk_aux, &enc.stream).is_err());
+        }
+        // truncated per-chunk sidecar list
+        assert!(ok(
+            &enc.tags,
+            &enc.shared_aux,
+            &enc.chunk_aux[..enc.chunk_aux.len() - 1],
+            &enc.stream
+        )
+        .is_err());
+        // oversized shared codebook
+        let big = vec![1u8; 4096];
+        assert!(ok(&enc.tags, &big, &enc.chunk_aux, &enc.stream).is_err());
+        // symbol-count inflation must fail before allocating
+        let mut stream = enc.stream.clone();
+        stream.chunks[0].symbols = u32::MAX;
+        assert!(ok(&enc.tags, &enc.shared_aux, &enc.chunk_aux, &stream).is_err());
+    }
+}

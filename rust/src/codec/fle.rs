@@ -31,9 +31,10 @@ pub struct FleStage;
 
 /// Outlier marker 0 maps to 0; code `s` maps to `zigzag(s - radius) + 1`
 /// so codes near the radius (the common case after Lorenzo prediction)
-/// become small magnitudes.
+/// become small magnitudes. Shared with the RLE backend and the cost
+/// probe, which price the same transformed-magnitude domain.
 #[inline]
-fn transform(s: u16, radius: i32) -> u32 {
+pub(super) fn transform(s: u16, radius: i32) -> u32 {
     if s == 0 {
         0
     } else {
@@ -42,7 +43,7 @@ fn transform(s: u16, radius: i32) -> u32 {
 }
 
 #[inline]
-fn untransform(v: u32, radius: i32, dict: usize) -> Result<u16> {
+pub(super) fn untransform(v: u32, radius: i32, dict: usize) -> Result<u16> {
     if v == 0 {
         return Ok(0);
     }
@@ -81,8 +82,9 @@ pub fn width_for_histogram(freq: &[u64]) -> u32 {
 
 /// Encode one chunk: single pass scatters set bits into per-group plane
 /// words (tracking the OR of all values for the width), then planes
-/// `0..w` are written out group-major.
-fn encode_chunk(symbols: &[u16], radius: i32) -> (u8, DeflatedChunk) {
+/// `0..w` are written out group-major. Public within the codec so
+/// mixed-granularity archives can tag individual chunks as FLE.
+pub(super) fn encode_chunk(symbols: &[u16], radius: i32) -> (u8, DeflatedChunk) {
     let n = symbols.len();
     let ngroups = n.div_ceil(64);
     let mut planes = vec![[0u64; MAX_WIDTH as usize]; ngroups];
@@ -114,7 +116,7 @@ fn encode_chunk(symbols: &[u16], radius: i32) -> (u8, DeflatedChunk) {
     (w as u8, DeflatedChunk { words, bits, symbols: n as u32 })
 }
 
-fn decode_chunk(
+pub(super) fn decode_chunk(
     chunk: &DeflatedChunk,
     width: u8,
     radius: i32,

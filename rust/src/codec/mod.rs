@@ -10,50 +10,68 @@
 //!   (arXiv:2304.12557): per-chunk max-magnitude bit width plus a bitplane
 //!   shuffle, trading compression ratio for encode/decode throughput and
 //!   leaving entropy removal to the archive's lossless tail stage.
+//! * [`RleStage`] — run-length coding over the radius-centered magnitude
+//!   transform, for the zero/constant-dominated fields where both of the
+//!   above waste bits on one endlessly repeated value.
 //!
 //! Which backend runs is the [`CodecSpec`] half of `CuszConfig`:
-//! `Huffman` and `Fle` force a backend, `Auto` resolves per field from the
-//! quant-code histogram ([`auto_select`]) — cuSZ+'s observation
-//! (arXiv:2105.12912) that the best encoder depends on data smoothness.
-//! The chosen backend is recorded in the archive header's encoder tag so
-//! decompression is self-describing.
+//! `Huffman`/`Fle`/`Rle` force a backend; `Auto` resolves from the
+//! quant-code distribution — cuSZ+'s observation (arXiv:2105.12912) that
+//! the best encoder depends on data smoothness — via the measured
+//! [`cost::CostModel`]. At [`CodecGranularity::Field`] the whole stream
+//! gets one backend ([`auto_select`]); at [`CodecGranularity::Chunk`]
+//! every chunk is probed and tagged independently ([`chunked`]), which is
+//! what makes `auto` win on fields that mix smoothness regimes. The
+//! choice lands in the archive header's encoder tag (field granularity)
+//! or the `CUSZA3` per-chunk tag table, so decompression is always
+//! self-describing.
 
+pub mod chunked;
+pub mod cost;
 pub mod fle;
 pub mod huffman_stage;
+pub mod rle;
 
 use anyhow::{bail, Result};
 
 use crate::config::{CodewordRepr, LosslessStage};
 use crate::huffman::deflate::DeflatedStream;
 
+pub use cost::CostModel;
 pub use fle::FleStage;
 pub use huffman_stage::HuffmanStage;
+pub use rle::RleStage;
 
 /// Concrete encoder backends — the domain of the archive header's encoder
-/// tag. Adding a backend means a new variant, a new tag value, and a new
-/// arm in [`stage_for`]; unknown tags from future archives fail cleanly.
+/// tag and of the `CUSZA3` per-chunk tag table. Adding a backend means a
+/// new variant, a new tag value, and a new arm in [`stage_for`]; unknown
+/// tags from future archives fail cleanly.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum EncoderKind {
     #[default]
     Huffman,
     Fle,
+    Rle,
 }
 
 impl EncoderKind {
-    pub const ALL: [EncoderKind; 2] = [EncoderKind::Huffman, EncoderKind::Fle];
+    pub const ALL: [EncoderKind; 3] =
+        [EncoderKind::Huffman, EncoderKind::Fle, EncoderKind::Rle];
 
     pub fn name(self) -> &'static str {
         match self {
             EncoderKind::Huffman => "huffman",
             EncoderKind::Fle => "fle",
+            EncoderKind::Rle => "rle",
         }
     }
 
-    /// Wire value for the archive header.
+    /// Wire value for the archive header and the per-chunk tag table.
     pub fn to_tag(self) -> u8 {
         match self {
             EncoderKind::Huffman => 0,
             EncoderKind::Fle => 1,
+            EncoderKind::Rle => 2,
         }
     }
 
@@ -61,18 +79,20 @@ impl EncoderKind {
         Ok(match v {
             0 => EncoderKind::Huffman,
             1 => EncoderKind::Fle,
+            2 => EncoderKind::Rle,
             _ => bail!("unknown encoder tag {v} (archive written by a newer cusz?)"),
         })
     }
 }
 
 /// What the user asks for; `Auto` resolves to a concrete [`EncoderKind`]
-/// per field once the quant-code histogram is known.
+/// per field (or per chunk) once the quant codes are known.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum EncoderChoice {
     #[default]
     Huffman,
     Fle,
+    Rle,
     Auto,
 }
 
@@ -81,8 +101,9 @@ impl EncoderChoice {
         Ok(match s {
             "huffman" => EncoderChoice::Huffman,
             "fle" => EncoderChoice::Fle,
+            "rle" => EncoderChoice::Rle,
             "auto" => EncoderChoice::Auto,
-            _ => bail!("unknown codec '{s}' (huffman|fle|auto)"),
+            _ => bail!("unknown codec '{s}' (huffman|fle|rle|auto)"),
         })
     }
 
@@ -90,17 +111,64 @@ impl EncoderChoice {
         match self {
             EncoderChoice::Huffman => "huffman",
             EncoderChoice::Fle => "fle",
+            EncoderChoice::Rle => "rle",
             EncoderChoice::Auto => "auto",
         }
     }
 }
 
-/// The codec half of the configuration: which symbol encoder plus which
-/// lossless tail stage wraps the archive body.
+/// At which grain `Auto` commits to a backend. Forced encoder choices
+/// are uniform either way; granularity only changes how `Auto` resolves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CodecGranularity {
+    /// One backend for the whole field, picked from the merged histogram.
+    #[default]
+    Field,
+    /// One backend per deflate chunk, picked from a measured per-chunk
+    /// probe and recorded in the archive's chunk tag table.
+    Chunk,
+}
+
+impl CodecGranularity {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "field" => CodecGranularity::Field,
+            "chunk" => CodecGranularity::Chunk,
+            _ => bail!("unknown codec granularity '{s}' (field|chunk)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CodecGranularity::Field => "field",
+            CodecGranularity::Chunk => "chunk",
+        }
+    }
+
+    pub fn to_u8(self) -> u8 {
+        match self {
+            CodecGranularity::Field => 0,
+            CodecGranularity::Chunk => 1,
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Result<Self> {
+        Ok(match v {
+            0 => CodecGranularity::Field,
+            1 => CodecGranularity::Chunk,
+            _ => bail!("unknown codec granularity tag {v}"),
+        })
+    }
+}
+
+/// The codec half of the configuration: which symbol encoder (at which
+/// selection granularity) plus which lossless tail stage wraps the
+/// archive body.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct CodecSpec {
     pub encoder: EncoderChoice,
     pub lossless: LosslessStage,
+    pub granularity: CodecGranularity,
 }
 
 /// Encoder-stage inputs beyond the symbol stream itself.
@@ -162,9 +230,11 @@ pub trait EncoderStage: Send + Sync {
 pub fn stage_for(kind: EncoderKind) -> &'static dyn EncoderStage {
     static HUFFMAN: HuffmanStage = HuffmanStage;
     static FLE: FleStage = FleStage;
+    static RLE: RleStage = RleStage;
     match kind {
         EncoderKind::Huffman => &HUFFMAN,
         EncoderKind::Fle => &FLE,
+        EncoderKind::Rle => &RLE,
     }
 }
 
@@ -185,26 +255,20 @@ pub fn entropy_bits(freq: &[u64]) -> f64 {
         .sum()
 }
 
-/// Auto mode selection: FLE wins when the entropy coder would shave less
-/// than this fraction off FLE's fixed width (its stream is then nearly
-/// incompressible and FLE's flat, table-free hot loop is the better
-/// trade); otherwise the histogram is skewed enough that Huffman's ratio
-/// advantage dominates.
-const AUTO_FLE_THRESHOLD: f64 = 0.8;
-
 /// Resolve `Auto` for one field from its merged quant-code histogram
-/// (`freq.len()` is the dict size).
+/// (`freq.len()` is the dict size), via the measured [`CostModel`].
+///
+/// This replaces the old analytic rule `entropy ≥ 0.8 × width → FLE`,
+/// which had two defects: it could never pick RLE, and — because the
+/// entropy side averaged over the *full* histogram while the width side
+/// never sees the outlier-marker bin (`transform(0) == 0`) — the marker
+/// mass of rough fields under tight bounds deflated huffman's apparent
+/// cost asymmetrically, biasing `auto` toward Huffman on exactly the
+/// fields the throughput-first backends are for. The cost model prices
+/// the marker bin consistently (see [`cost`]); the regression test below
+/// locks the corrected behavior in.
 pub fn auto_select(freq: &[u64]) -> EncoderKind {
-    let width = fle::width_for_histogram(freq);
-    if width == 0 {
-        // degenerate stream (only outlier markers): FLE stores 0 bits/sym
-        return EncoderKind::Fle;
-    }
-    if entropy_bits(freq) >= AUTO_FLE_THRESHOLD * width as f64 {
-        EncoderKind::Fle
-    } else {
-        EncoderKind::Huffman
-    }
+    CostModel::MEASURED.select_field(freq)
 }
 
 #[cfg(test)]
@@ -216,17 +280,25 @@ mod tests {
         for k in EncoderKind::ALL {
             assert_eq!(EncoderKind::from_tag(k.to_tag()).unwrap(), k);
         }
-        for bad in [2u8, 7, 255] {
+        for bad in [3u8, 7, 255] {
             assert!(EncoderKind::from_tag(bad).is_err());
         }
     }
 
     #[test]
-    fn choice_parses() {
+    fn choice_and_granularity_parse() {
         assert_eq!(EncoderChoice::parse("huffman").unwrap(), EncoderChoice::Huffman);
         assert_eq!(EncoderChoice::parse("fle").unwrap(), EncoderChoice::Fle);
+        assert_eq!(EncoderChoice::parse("rle").unwrap(), EncoderChoice::Rle);
         assert_eq!(EncoderChoice::parse("auto").unwrap(), EncoderChoice::Auto);
         assert!(EncoderChoice::parse("arith").is_err());
+        assert_eq!(CodecGranularity::parse("field").unwrap(), CodecGranularity::Field);
+        assert_eq!(CodecGranularity::parse("chunk").unwrap(), CodecGranularity::Chunk);
+        assert!(CodecGranularity::parse("slab").is_err());
+        for g in [CodecGranularity::Field, CodecGranularity::Chunk] {
+            assert_eq!(CodecGranularity::from_u8(g.to_u8()).unwrap(), g);
+        }
+        assert!(CodecGranularity::from_u8(9).is_err());
     }
 
     #[test]
@@ -239,16 +311,27 @@ mod tests {
     }
 
     #[test]
-    fn auto_picks_huffman_for_skewed_and_fle_for_flat() {
+    fn auto_matches_distribution_shape() {
         let dict = 1024usize;
         let radius = dict / 2;
-        // skewed: codes concentrated on radius +/- 1 -> low entropy
-        let mut skewed = vec![0u64; dict];
-        skewed[radius] = 1_000_000;
-        skewed[radius + 1] = 1000;
-        skewed[radius - 1] = 1000;
-        assert_eq!(auto_select(&skewed), EncoderKind::Huffman);
-        // flat: codes uniform over radius +/- 128 -> entropy ~ width
+        // constant-dominated: one bin holds nearly everything -> runs
+        // coalesce -> RLE (the old analytic rule could never pick it)
+        let mut constant = vec![0u64; dict];
+        constant[radius] = 1_000_000;
+        constant[radius + 1] = 1000;
+        constant[radius - 1] = 1000;
+        assert_eq!(auto_select(&constant), EncoderKind::Rle);
+        // gaussian-ish spread over a handful of bins: enough skew that
+        // entropy coding pays, too many distinct values for runs
+        let mut gaussian = vec![0u64; dict];
+        for (off, count) in
+            [(0i64, 38_000u64), (1, 24_000), (-1, 24_000), (2, 6_000), (-2, 6_000), (3, 1_000), (-3, 1_000)]
+        {
+            gaussian[(radius as i64 + off) as usize] = count;
+        }
+        assert_eq!(auto_select(&gaussian), EncoderKind::Huffman);
+        // flat: codes uniform over radius +/- 128 -> entropy ~ width, no
+        // runs -> FLE's table-free loop wins
         let mut flat = vec![0u64; dict];
         for s in radius - 128..radius + 128 {
             flat[s] = 100;
@@ -258,6 +341,35 @@ mod tests {
         let mut outliers = vec![0u64; dict];
         outliers[0] = 777;
         assert_eq!(auto_select(&outliers), EncoderKind::Fle);
+    }
+
+    /// Regression for the outlier-marker double-count (ISSUE 3 satellite):
+    /// a rough field under a tight bound — 60% marker slots, the rest
+    /// uniform over ±64 bins. The old analytic rule let the heavy marker
+    /// bin drag the full-histogram entropy (~3.8 bits) under 0.8 × width
+    /// (6.4 bits) and picked Huffman; over the non-marker population the
+    /// stream is near-incompressible (conditional entropy ≈ width), the
+    /// archive is outlier-channel-dominated either way, and the
+    /// throughput-first fixed-length backend is the right call.
+    #[test]
+    fn auto_is_not_biased_by_the_outlier_marker_bin() {
+        let dict = 1024usize;
+        let radius = dict / 2;
+        let mut spiky = vec![0u64; dict];
+        spiky[0] = 600_000; // outlier markers
+        for s in radius - 64..=radius + 64 {
+            spiky[s] = 400_000 / 129;
+        }
+        let width = fle::width_for_histogram(&spiky) as f64;
+        // document the old bias: full-histogram entropy sits well under
+        // the old 0.8·width threshold, which would have forced Huffman
+        assert!(entropy_bits(&spiky) < 0.8 * width);
+        assert_eq!(auto_select(&spiky), EncoderKind::Fle);
+        // the same distribution without the marker mass resolves the same
+        // way — the marker bin no longer swings the decision
+        let mut no_markers = spiky.clone();
+        no_markers[0] = 0;
+        assert_eq!(auto_select(&no_markers), auto_select(&spiky));
     }
 
     #[test]

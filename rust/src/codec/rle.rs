@@ -1,0 +1,351 @@
+//! Run-length encoder over radius-centered quant codes — the third
+//! [`EncoderStage`] backend, for the zero/constant-dominated fields of
+//! Table 9 (and FZ-GPU's observation, arXiv:2304.12557, that run-style
+//! coding dominates when most prediction deltas are identical).
+//!
+//! Per chunk: quant codes pass through the same magnitude transform as
+//! FLE (outlier marker 0 stays 0, everything else is `zigzag(s − radius)
+//! + 1`), consecutive equal values coalesce into runs, and each run is
+//! emitted as `(value, run_len − 1)` at two fixed chunk-local widths: `w`
+//! bits for the value (width of the largest transformed value) and `r`
+//! bits for the length (width of the longest run minus one). A chunk
+//! that is one constant — the common case on zero-dominated fields —
+//! costs `w + r` bits total.
+//!
+//! The sidecar is two bytes per chunk: `[w, r]`. The outlier escape is
+//! inherited from the transform: marker slots encode as value 0 and the
+//! exact deltas travel in the archive's outlier side channel, so runs of
+//! outliers coalesce like any other constant.
+
+use anyhow::{bail, Result};
+
+use super::fle::{transform, untransform, MAX_WIDTH};
+use super::{EncodeContext, EncodedSymbols, EncoderKind, EncoderStage};
+use crate::huffman::deflate::{DeflatedChunk, DeflatedStream};
+use crate::util::bitio::{BitReader, BitWriter};
+use crate::util::pool::parallel_map_range;
+
+/// Hard ceiling on the run-length field width: run lengths are bounded by
+/// the chunk geometry (≤ 2^24 symbols), so a wider sidecar is corrupt.
+pub const MAX_RUN_WIDTH: u32 = 24;
+
+/// Sidecar bytes per chunk (`[value_width, run_width]`).
+pub const SIDECAR_BYTES: usize = 2;
+
+pub struct RleStage;
+
+/// Encode one chunk; returns the `[w, r]` sidecar record and the framed
+/// run stream. Public within the codec so mixed-granularity archives can
+/// tag individual chunks as RLE.
+pub(super) fn encode_chunk(symbols: &[u16], radius: i32) -> ([u8; 2], DeflatedChunk) {
+    let mut runs: Vec<(u32, u32)> = Vec::new();
+    let mut all = 0u32;
+    let mut max_run = 1u32;
+    for &s in symbols {
+        let v = transform(s, radius);
+        all |= v;
+        match runs.last_mut() {
+            Some((pv, len)) if *pv == v => {
+                *len += 1;
+                max_run = max_run.max(*len);
+            }
+            _ => runs.push((v, 1)),
+        }
+    }
+    let w = 32 - all.leading_zeros();
+    let r = if max_run <= 1 { 0 } else { 32 - (max_run - 1).leading_zeros() };
+    let mut writer = BitWriter::with_capacity_bits(runs.len() * (w + r) as usize);
+    for &(v, len) in &runs {
+        writer.write(v as u64, w);
+        writer.write((len - 1) as u64, r);
+    }
+    let (words, bits) = writer.finish();
+    debug_assert_eq!(bits, runs.len() as u64 * (w + r) as u64);
+    ([w as u8, r as u8], DeflatedChunk { words, bits, symbols: symbols.len() as u32 })
+}
+
+pub(super) fn decode_chunk(
+    chunk: &DeflatedChunk,
+    aux: &[u8],
+    radius: i32,
+    dict: usize,
+    chunk_symbols: usize,
+) -> Result<Vec<u16>> {
+    let &[w, r] = aux else {
+        bail!("corrupt RLE sidecar: record has {} bytes, want {SIDECAR_BYTES}", aux.len());
+    };
+    let (w, r) = (w as u32, r as u32);
+    if w > MAX_WIDTH {
+        bail!("corrupt RLE sidecar: value width {w} exceeds {MAX_WIDTH}");
+    }
+    if r > MAX_RUN_WIDTH {
+        bail!("corrupt RLE sidecar: run width {r} exceeds {MAX_RUN_WIDTH}");
+    }
+    let n = chunk.symbols as usize;
+    // the symbol count is untrusted: bound it by the chunk geometry the
+    // caller knows *before* allocating, so a crafted chunk cannot turn a
+    // few run bits into an unbounded expansion
+    if n > chunk_symbols {
+        bail!("corrupt RLE chunk: {n} symbols exceeds chunk geometry {chunk_symbols}");
+    }
+    if chunk.bits > chunk.words.len() as u64 * 64 {
+        bail!("corrupt RLE chunk: {} bits in {} words", chunk.bits, chunk.words.len());
+    }
+    // w == r == 0 can only legitimately encode a single-symbol chunk of
+    // the marker value (one run, zero bits); anything longer would have
+    // coalesced into a run needing r > 0
+    if w + r == 0 && n > 1 {
+        bail!("corrupt RLE chunk: zero-width runs claim {n} symbols");
+    }
+    let mut reader = BitReader::new(&chunk.words, chunk.bits);
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        let Some(v) = reader.read(w) else {
+            bail!("corrupt RLE chunk: truncated run stream");
+        };
+        let Some(lm1) = reader.read(r) else {
+            bail!("corrupt RLE chunk: truncated run length");
+        };
+        let len = lm1 as usize + 1;
+        if out.len() + len > n {
+            bail!("corrupt RLE chunk: run of {len} overruns {n} symbols");
+        }
+        let sym = untransform(v as u32, radius, dict)?;
+        out.resize(out.len() + len, sym);
+    }
+    if reader.remaining() != 0 {
+        bail!("corrupt RLE chunk: {} trailing bits", reader.remaining());
+    }
+    Ok(out)
+}
+
+impl EncoderStage for RleStage {
+    fn kind(&self) -> EncoderKind {
+        EncoderKind::Rle
+    }
+
+    fn encode(&self, symbols: &[u16], ctx: &EncodeContext) -> Result<EncodedSymbols> {
+        let radius = (ctx.dict_size / 2) as i32;
+        let cs = ctx.chunk_symbols.max(1);
+        let nchunks = symbols.len().div_ceil(cs);
+        let encoded: Vec<([u8; 2], DeflatedChunk)> =
+            parallel_map_range(ctx.threads, nchunks, |ci| {
+                let lo = ci * cs;
+                let hi = (lo + cs).min(symbols.len());
+                encode_chunk(&symbols[lo..hi], radius)
+            });
+        let mut aux = Vec::with_capacity(nchunks * SIDECAR_BYTES);
+        let mut chunks = Vec::with_capacity(nchunks);
+        let mut max_w = 0u32;
+        for (rec, c) in encoded {
+            max_w = max_w.max(rec[0] as u32 + rec[1] as u32);
+            aux.extend_from_slice(&rec);
+            chunks.push(c);
+        }
+        Ok(EncodedSymbols {
+            aux,
+            stream: DeflatedStream { chunks, chunk_symbols: cs },
+            repr_bits: max_w.max(1),
+            codebook_time: std::time::Duration::ZERO,
+        })
+    }
+
+    fn decode(
+        &self,
+        aux: &[u8],
+        stream: &DeflatedStream,
+        dict_size: usize,
+        threads: usize,
+        max_symbols: usize,
+    ) -> Result<Vec<u16>> {
+        if aux.len() != stream.chunks.len() * SIDECAR_BYTES {
+            bail!(
+                "RLE sidecar has {} bytes for {} chunks",
+                aux.len(),
+                stream.chunks.len()
+            );
+        }
+        // run streams expand: cap the claimed total before any chunk
+        // allocates (mirrors the FLE zero-width-chunk hardening)
+        if stream.total_symbols() > max_symbols as u64 {
+            bail!(
+                "RLE stream claims {} symbols, caller expects at most {max_symbols}",
+                stream.total_symbols()
+            );
+        }
+        let radius = (dict_size / 2) as i32;
+        let cs = stream.chunk_symbols.max(1);
+        let parts: Vec<Result<Vec<u16>>> =
+            parallel_map_range(threads, stream.chunks.len(), |ci| {
+                decode_chunk(
+                    &stream.chunks[ci],
+                    &aux[ci * SIDECAR_BYTES..(ci + 1) * SIDECAR_BYTES],
+                    radius,
+                    dict_size,
+                    cs,
+                )
+            });
+        let mut out = Vec::with_capacity(stream.total_symbols() as usize);
+        for p in parts {
+            out.extend(p?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CodewordRepr;
+    use crate::util::prng::Rng;
+
+    fn ctx(freq: &[u64], chunk: usize, threads: usize) -> EncodeContext<'_> {
+        EncodeContext {
+            dict_size: freq.len(),
+            chunk_symbols: chunk,
+            threads,
+            codeword_repr: CodewordRepr::Adaptive,
+            freq,
+        }
+    }
+
+    fn roundtrip(symbols: &[u16], dict: usize, chunk: usize) {
+        let freq = vec![0u64; dict];
+        let enc = RleStage.encode(symbols, &ctx(&freq, chunk, 4)).unwrap();
+        let out = RleStage.decode(&enc.aux, &enc.stream, dict, 4, symbols.len()).unwrap();
+        assert_eq!(out, symbols);
+    }
+
+    #[test]
+    fn roundtrip_constant_and_mixed_streams() {
+        // one constant run (delta 0 everywhere)
+        roundtrip(&vec![512u16; 10_000], 1024, 4096);
+        // all outlier markers
+        roundtrip(&vec![0u16; 5000], 1024, 4096);
+        // alternating short runs and singletons
+        let mut symbols = Vec::new();
+        for i in 0..500u16 {
+            symbols.extend(std::iter::repeat(512 + (i % 7)).take(1 + (i as usize % 40)));
+        }
+        roundtrip(&symbols, 1024, 4096);
+        roundtrip(&symbols, 1024, 100); // irregular tail chunks
+        roundtrip(&[], 1024, 4096);
+        roundtrip(&[700], 1024, 4096);
+    }
+
+    #[test]
+    fn roundtrip_random_streams() {
+        let mut rng = Rng::new(23);
+        let dict = 1024usize;
+        for n in [1usize, 63, 64, 65, 1000, 4096, 10_001] {
+            let symbols: Vec<u16> = (0..n)
+                .map(|_| {
+                    if rng.f32() < 0.7 {
+                        512 // dominant constant: long runs
+                    } else if rng.f32() < 0.1 {
+                        0 // outlier marker
+                    } else {
+                        ((rng.normal() * 20.0) as i32 + 512).clamp(1, dict as i32 - 1) as u16
+                    }
+                })
+                .collect();
+            roundtrip(&symbols, dict, 4096);
+            roundtrip(&symbols, dict, 257);
+        }
+    }
+
+    #[test]
+    fn constant_chunk_costs_one_run() {
+        let symbols = vec![512u16; 4096];
+        let freq = vec![0u64; 1024];
+        let enc = RleStage.encode(&symbols, &ctx(&freq, 4096, 1)).unwrap();
+        assert_eq!(enc.stream.chunks.len(), 1);
+        let w = enc.aux[0] as u64;
+        let r = enc.aux[1] as u64;
+        assert_eq!((w, r), (1, 12)); // value width 1, run width bits(4095)
+        assert_eq!(enc.stream.chunks[0].bits, w + r);
+    }
+
+    #[test]
+    fn rle_beats_fle_on_zero_dominated_and_loses_on_noise() {
+        let mut rng = Rng::new(5);
+        let freq = vec![0u64; 1024];
+        let zeros: Vec<u16> = (0..20_000)
+            .map(|_| if rng.f32() < 0.02 { 520 } else { 512 })
+            .collect();
+        let noise: Vec<u16> = (0..20_000)
+            .map(|_| (512 + (rng.below(257) as i32 - 128)).clamp(1, 1023) as u16)
+            .collect();
+        let rle_z = RleStage.encode(&zeros, &ctx(&freq, 4096, 2)).unwrap();
+        let fle_z = super::super::FleStage.encode(&zeros, &ctx(&freq, 4096, 2)).unwrap();
+        assert!(rle_z.stream.total_bits() < fle_z.stream.total_bits() / 4);
+        let rle_n = RleStage.encode(&noise, &ctx(&freq, 4096, 2)).unwrap();
+        let fle_n = super::super::FleStage.encode(&noise, &ctx(&freq, 4096, 2)).unwrap();
+        assert!(rle_n.stream.total_bits() > fle_n.stream.total_bits());
+    }
+
+    #[test]
+    fn parallel_encode_is_deterministic() {
+        let mut rng = Rng::new(7);
+        let symbols: Vec<u16> = (0..50_000)
+            .map(|_| if rng.f32() < 0.8 { 512 } else { (500 + rng.below(25)) as u16 })
+            .collect();
+        let freq = vec![0u64; 1024];
+        let a = RleStage.encode(&symbols, &ctx(&freq, 2048, 1)).unwrap();
+        let b = RleStage.encode(&symbols, &ctx(&freq, 2048, 8)).unwrap();
+        assert_eq!(a.aux, b.aux);
+        assert_eq!(a.stream, b.stream);
+    }
+
+    #[test]
+    fn corrupt_sidecar_and_chunks_rejected() {
+        let symbols: Vec<u16> = (0..2000)
+            .map(|i| if i % 5 == 0 { 512 } else { (500 + i % 30) as u16 })
+            .collect();
+        let freq = vec![0u64; 1024];
+        let enc = RleStage.encode(&symbols, &ctx(&freq, 512, 1)).unwrap();
+
+        // sidecar length mismatch
+        let mut short = enc.aux.clone();
+        short.pop();
+        assert!(RleStage.decode(&short, &enc.stream, 1024, 1, symbols.len()).is_err());
+
+        // widths beyond their ceilings
+        for (i, bad) in [(0, (MAX_WIDTH + 1) as u8), (1, (MAX_RUN_WIDTH + 1) as u8)] {
+            let mut wide = enc.aux.clone();
+            wide[i] = bad;
+            assert!(RleStage.decode(&wide, &enc.stream, 1024, 1, symbols.len()).is_err());
+        }
+
+        // widths inconsistent with the chunk's bit count
+        let mut wrong = enc.aux.clone();
+        wrong[0] += 1;
+        assert!(RleStage.decode(&wrong, &enc.stream, 1024, 1, symbols.len()).is_err());
+
+        // symbol count beyond the chunk geometry must not allocate
+        let mut stream = enc.stream.clone();
+        stream.chunks[0].symbols = u32::MAX;
+        assert!(RleStage.decode(&enc.aux, &stream, 1024, 1, usize::MAX).is_err());
+
+        // bit count exceeding the backing words
+        let mut stream = enc.stream.clone();
+        stream.chunks[0].bits = stream.chunks[0].words.len() as u64 * 64 + 1;
+        assert!(RleStage.decode(&enc.aux, &stream, 1024, 1, symbols.len()).is_err());
+
+        // total symbols above the caller's cap
+        assert!(RleStage.decode(&enc.aux, &enc.stream, 1024, 1, 10).is_err());
+    }
+
+    #[test]
+    fn zero_width_single_marker_chunk_roundtrips_but_longer_is_rejected() {
+        let enc = RleStage.encode(&[0u16], &ctx(&vec![0u64; 1024], 4096, 1)).unwrap();
+        assert_eq!(enc.aux, vec![0, 0]);
+        assert_eq!(enc.stream.total_bits(), 0);
+        let out = RleStage.decode(&enc.aux, &enc.stream, 1024, 1, 1).unwrap();
+        assert_eq!(out, vec![0]);
+        // a crafted zero-width chunk claiming many symbols fails cleanly
+        let mut stream = enc.stream.clone();
+        stream.chunks[0].symbols = 4096;
+        assert!(RleStage.decode(&enc.aux, &stream, 1024, 1, 4096).is_err());
+    }
+}

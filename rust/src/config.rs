@@ -4,7 +4,7 @@
 
 use std::path::PathBuf;
 
-pub use crate::codec::{CodecSpec, EncoderChoice};
+pub use crate::codec::{CodecGranularity, CodecSpec, EncoderChoice};
 
 /// Error-bound mode. The paper evaluates with the value-range-based
 /// relative bound (`valrel`, footnote 2): `abs_eb = valrel * (max - min)`.
@@ -146,5 +146,6 @@ mod tests {
         let c = CuszConfig::default();
         assert_eq!(c.codec.encoder, EncoderChoice::Huffman);
         assert_eq!(c.codec.lossless, LosslessStage::None);
+        assert_eq!(c.codec.granularity, CodecGranularity::Field);
     }
 }

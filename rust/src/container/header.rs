@@ -3,20 +3,23 @@
 //! The header is versioned. Version 0 is the pre-codec layout (no version
 //! byte, Huffman implied) still produced by old archives; version 1
 //! prefixes a format-version byte and an encoder tag so the archive is
-//! self-describing about which [`crate::codec::EncoderStage`] wrote it.
+//! self-describing about which [`crate::codec::EncoderStage`] wrote it;
+//! version 2 adds a codec-granularity byte — when it says `Chunk`, the
+//! body carries a per-chunk encoder tag table and the header's encoder
+//! tag records only the majority backend (an `ls`-level summary).
 //! Which parser runs is selected by the container magic
-//! ([`crate::container::MAGIC_V0`] vs [`crate::container::MAGIC`]), since
-//! the legacy layout's first byte is a name-length byte and cannot be
-//! distinguished in-band.
+//! ([`crate::container::MAGIC_V0`] / [`crate::container::MAGIC_V1`] /
+//! [`crate::container::MAGIC`]), since the legacy layout's first byte is
+//! a name-length byte and cannot be distinguished in-band.
 
 use anyhow::{bail, Result};
 
 use super::bytes::{ByteReader, ByteWriter};
-use crate::codec::EncoderKind;
+use crate::codec::{CodecGranularity, EncoderKind};
 use crate::config::ErrorBound;
 
 /// The archive format version this build writes.
-pub const FORMAT_VERSION: u8 = 1;
+pub const FORMAT_VERSION: u8 = 2;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LosslessTag {
@@ -47,11 +50,16 @@ impl LosslessTag {
 #[derive(Debug, Clone, PartialEq)]
 pub struct Header {
     /// Archive format version: 0 = legacy pre-codec layout (implicit
-    /// Huffman), 1 = codec-tagged. Serialization mirrors whichever
-    /// version is set so digests of old payloads stay stable.
+    /// Huffman), 1 = codec-tagged, 2 = codec-tagged with selection
+    /// granularity (and, at chunk granularity, a per-chunk tag table in
+    /// the body). Serialization mirrors whichever version is set so
+    /// digests of old payloads stay stable.
     pub version: u8,
-    /// Which encoder backend produced the symbol stream.
+    /// Which encoder backend produced the symbol stream (at chunk
+    /// granularity: the majority backend; the body's tag table governs).
     pub encoder: EncoderKind,
+    /// How the encoder was selected (field-uniform vs per chunk).
+    pub granularity: CodecGranularity,
     pub field_name: String,
     /// Logical field dims (pre-fold; decompression restores this shape).
     pub dims: Vec<usize>,
@@ -81,10 +89,24 @@ impl Header {
             "version-0 archives cannot represent encoder {:?}",
             self.encoder
         );
+        // pre-granularity layouts likewise cannot represent the RLE tag
+        // (old readers reject tag 2) or per-chunk selection
+        assert!(
+            self.version >= 2
+                || (self.granularity == CodecGranularity::Field
+                    && self.encoder != EncoderKind::Rle),
+            "version-{} archives cannot represent {:?}/{:?}",
+            self.version,
+            self.encoder,
+            self.granularity
+        );
         let mut w = ByteWriter::new();
         if self.version >= 1 {
             w.u8(self.version);
             w.u8(self.encoder.to_tag());
+        }
+        if self.version >= 2 {
+            w.u8(self.granularity.to_u8());
         }
         w.str(&self.field_name);
         w.u32(self.dims.len() as u32);
@@ -111,8 +133,9 @@ impl Header {
         w.finish()
     }
 
-    /// Parse a versioned (current-magic) header. Rejects version bytes
-    /// this build does not understand and unknown encoder tags.
+    /// Parse a versioned (`CUSZA2`/`CUSZA3` magic) header. Rejects
+    /// version bytes this build does not understand, unknown encoder
+    /// tags, and unknown granularity tags.
     pub fn from_bytes(bytes: &[u8]) -> Result<Header> {
         let mut r = ByteReader::new(bytes);
         let version = r.u8()?;
@@ -122,17 +145,30 @@ impl Header {
             );
         }
         let encoder = EncoderKind::from_tag(r.u8()?)?;
-        Self::read_common(&mut r, version, encoder)
+        let granularity = if version >= 2 {
+            CodecGranularity::from_u8(r.u8()?)?
+        } else {
+            CodecGranularity::Field
+        };
+        if version < 2 && encoder == EncoderKind::Rle {
+            bail!("version-{version} archive carries the RLE tag (corrupt header?)");
+        }
+        Self::read_common(&mut r, version, encoder, granularity)
     }
 
     /// Parse a legacy (version-0, `CUSZA1` magic) header: the pre-codec
     /// layout with no version byte and Huffman implied.
     pub fn from_bytes_v0(bytes: &[u8]) -> Result<Header> {
         let mut r = ByteReader::new(bytes);
-        Self::read_common(&mut r, 0, EncoderKind::Huffman)
+        Self::read_common(&mut r, 0, EncoderKind::Huffman, CodecGranularity::Field)
     }
 
-    fn read_common(r: &mut ByteReader<'_>, version: u8, encoder: EncoderKind) -> Result<Header> {
+    fn read_common(
+        r: &mut ByteReader<'_>,
+        version: u8,
+        encoder: EncoderKind,
+        granularity: CodecGranularity,
+    ) -> Result<Header> {
         let field_name = r.str()?;
         let nd = r.u32()? as usize;
         if nd == 0 || nd > 4 {
@@ -165,6 +201,7 @@ impl Header {
         Ok(Header {
             version,
             encoder,
+            granularity,
             field_name,
             dims,
             variant,
@@ -187,6 +224,7 @@ mod tests {
         Header {
             version,
             encoder,
+            granularity: CodecGranularity::Field,
             field_name: "f".into(),
             dims: vec![10, 20],
             variant: "2d_256".into(),
@@ -201,7 +239,7 @@ mod tests {
     }
 
     #[test]
-    fn roundtrip_both_eb_modes_both_encoders() {
+    fn roundtrip_both_eb_modes_all_encoders() {
         for eb in [ErrorBound::Abs(0.125), ErrorBound::ValRel(1e-4)] {
             for encoder in EncoderKind::ALL {
                 let h = sample(FORMAT_VERSION, encoder, eb);
@@ -209,6 +247,37 @@ mod tests {
                 assert_eq!(h, b);
             }
         }
+    }
+
+    #[test]
+    fn chunk_granularity_roundtrips_and_v1_stays_fixed_layout() {
+        let mut h = sample(FORMAT_VERSION, EncoderKind::Fle, ErrorBound::Abs(0.5));
+        h.granularity = CodecGranularity::Chunk;
+        let b = Header::from_bytes(&h.to_bytes()).unwrap();
+        assert_eq!(b.granularity, CodecGranularity::Chunk);
+        assert_eq!(h, b);
+        // a version-1 header has no granularity byte and parses as Field
+        let h1 = sample(1, EncoderKind::Fle, ErrorBound::Abs(0.5));
+        let bytes = h1.to_bytes();
+        assert_eq!(bytes.len(), sample(0, EncoderKind::Huffman, ErrorBound::Abs(0.5)).to_bytes().len() + 2);
+        let b1 = Header::from_bytes(&bytes).unwrap();
+        assert_eq!(b1.granularity, CodecGranularity::Field);
+        assert_eq!(h1, b1);
+        // an unknown granularity tag under the current version is rejected
+        let mut bad = h.to_bytes();
+        bad[2] = 9;
+        assert!(Header::from_bytes(&bad).unwrap_err().to_string().contains("granularity"));
+    }
+
+    #[test]
+    fn v1_rle_tag_rejected() {
+        // version-1 archives predate RLE: a v1 header claiming tag 2 is
+        // corrupt, not a valid combination
+        let h1 = sample(1, EncoderKind::Fle, ErrorBound::Abs(0.5));
+        let mut bytes = h1.to_bytes();
+        bytes[1] = EncoderKind::Rle.to_tag();
+        let err = Header::from_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("RLE"), "{err:#}");
     }
 
     #[test]
@@ -247,6 +316,7 @@ mod tests {
         let h = Header {
             version: FORMAT_VERSION,
             encoder: EncoderKind::Huffman,
+            granularity: CodecGranularity::Field,
             field_name: "f".into(),
             dims: vec![4],
             variant: "v".into(),
@@ -259,8 +329,9 @@ mod tests {
             n_slabs: 1,
         };
         let mut bytes = h.to_bytes();
-        // corrupt the ndim field (version + tag + 4-byte len + 1 byte "f")
-        bytes[7] = 200;
+        // corrupt the ndim field (version + tag + granularity + 4-byte
+        // len + 1 byte "f")
+        bytes[8] = 200;
         assert!(Header::from_bytes(&bytes).is_err());
     }
 }

@@ -1,27 +1,33 @@
 //! The `.cusza` archive format — cuSZ's self-contained compressed output:
 //! versioned codec-tagged header, encoder sidecar (Huffman: canonical
-//! codebook lengths; FLE: per-chunk bit widths), the chunked framed
-//! bitstream, the outlier side channels, and per-section CRC32s
-//! (DESIGN.md §6).
+//! codebook lengths; FLE: per-chunk bit widths; RLE: per-chunk value/run
+//! widths), the chunked framed bitstream, an optional per-chunk encoder
+//! tag table (mixed-granularity archives), the outlier side channels, and
+//! per-section CRC32s (DESIGN.md §6).
 //!
-//! Two magics coexist: [`MAGIC_V0`] marks pre-codec archives (legacy
-//! header layout, Huffman implied) which still decode; [`MAGIC`] marks
-//! current archives whose header leads with a format-version byte and an
-//! encoder tag. Unknown magics, versions, and tags all fail cleanly.
+//! Three magics coexist: [`MAGIC_V0`] marks pre-codec archives (legacy
+//! header layout, Huffman implied), [`MAGIC_V1`] marks PR 2's
+//! field-tagged archives — both still decode. [`MAGIC`] marks current
+//! archives, whose header adds a codec-granularity byte and whose body
+//! may carry a per-chunk tag table + per-chunk sidecar records. Unknown
+//! magics, versions, and tags all fail cleanly.
 
 pub mod bytes;
 pub mod header;
 
 use anyhow::{bail, Context, Result};
 
+use crate::codec::{CodecGranularity, EncoderKind};
 use crate::huffman::deflate::{DeflatedChunk, DeflatedStream};
 use bytes::{ByteReader, ByteWriter};
 pub use header::{Header, LosslessTag, FORMAT_VERSION};
 
 /// Magic of legacy (format version 0) archives.
 pub const MAGIC_V0: &[u8; 8] = b"CUSZA1\0\0";
-/// Magic of current (versioned, codec-tagged) archives.
-pub const MAGIC: &[u8; 8] = b"CUSZA2\0\0";
+/// Magic of format-version-1 (field-tagged, pre-granularity) archives.
+pub const MAGIC_V1: &[u8; 8] = b"CUSZA2\0\0";
+/// Magic of current (granularity-aware, chunk-taggable) archives.
+pub const MAGIC: &[u8; 8] = b"CUSZA3\0\0";
 
 /// Largest chunk geometry (symbols per chunk) the format accepts. Real
 /// configs top out at 2^16; the bound keeps a crafted stream from turning
@@ -35,8 +41,18 @@ pub const MAX_CHUNK_SYMBOLS: usize = 1 << 24;
 pub struct Archive {
     pub header: Header,
     /// Encoder sidecar: what the tagged encoder's decoder needs (Huffman:
-    /// per-symbol code-length table; FLE: per-chunk bit widths).
+    /// per-symbol code-length table; FLE: per-chunk bit widths; RLE:
+    /// per-chunk `[w, r]` records). In a mixed-granularity archive this
+    /// holds the codebook length table shared by Huffman-tagged chunks.
     pub encoder_aux: Vec<u8>,
+    /// Per-chunk encoder tags (one [`EncoderKind::to_tag`] byte per
+    /// stream chunk) for mixed-granularity archives; empty when the
+    /// header's field-level encoder tag applies uniformly.
+    pub chunk_tags: Vec<u8>,
+    /// Per-chunk sidecar records for mixed-granularity archives (FLE:
+    /// `[w]`; RLE: `[w, r]`; Huffman: empty — it uses `encoder_aux`);
+    /// empty when `chunk_tags` is.
+    pub chunk_aux: Vec<Vec<u8>>,
     /// Framed chunked bitstream (quantization codes, slab-major order).
     pub stream: DeflatedStream,
     /// Prediction outliers: (global position in the slab-major stream,
@@ -54,10 +70,22 @@ impl Archive {
     }
 
     pub fn to_bytes(&self) -> Vec<u8> {
+        // pre-granularity layouts have no chunk-tag sections: writing one
+        // silently would decode wrong under an old parser — fail loudly
+        assert!(
+            self.header.version >= 2
+                || (self.chunk_tags.is_empty() && self.chunk_aux.is_empty()),
+            "version-{} archives cannot carry a per-chunk tag table",
+            self.header.version
+        );
         let mut w = ByteWriter::new();
-        // a version-0 header serializes in the legacy layout, so it must
-        // travel under the legacy magic for parsers to agree
-        w.bytes(if self.header.version == 0 { MAGIC_V0 } else { MAGIC });
+        // headers serialize in their own version's layout, so each must
+        // travel under the matching magic for parsers to agree
+        w.bytes(match self.header.version {
+            0 => MAGIC_V0,
+            1 => MAGIC_V1,
+            _ => MAGIC,
+        });
         let header_bytes = self.header.to_bytes();
         w.section(&header_bytes);
 
@@ -73,6 +101,25 @@ impl Archive {
             body.u32(c.words.len() as u32);
             for &wd in &c.words {
                 body.u64(wd);
+            }
+        }
+
+        if self.header.version >= 2 {
+            body.u32(self.chunk_tags.len() as u32);
+            body.bytes(&self.chunk_tags);
+            if !self.chunk_tags.is_empty() {
+                for aux in &self.chunk_aux {
+                    // u8 length prefix: a wider record would wrap modulo
+                    // 256 and silently desynchronize the reader — any
+                    // future backend needing more must grow the framing
+                    assert!(
+                        aux.len() <= u8::MAX as usize,
+                        "per-chunk sidecar record of {} bytes exceeds the u8 length prefix",
+                        aux.len()
+                    );
+                    body.u8(aux.len() as u8);
+                    body.bytes(aux);
+                }
             }
         }
 
@@ -104,22 +151,30 @@ impl Archive {
     }
 
     /// Read the magic + header section, dispatching to the right header
-    /// parser per format version.
+    /// parser per format version. The magic and the header's version byte
+    /// must agree — a mismatch means the payload was spliced or corrupted.
     fn read_header(r: &mut ByteReader<'_>) -> Result<Header> {
         let magic = r.take(8)?;
         let legacy = if magic == MAGIC_V0 {
             true
-        } else if magic == MAGIC {
+        } else if magic == MAGIC_V1 || magic == MAGIC {
             false
         } else {
             bail!("not a cusza archive (bad magic)");
         };
         let header_bytes = r.section().context("header section")?;
         if legacy {
-            Header::from_bytes_v0(&header_bytes)
-        } else {
-            Header::from_bytes(&header_bytes)
+            return Header::from_bytes_v0(&header_bytes);
         }
+        let header = Header::from_bytes(&header_bytes)?;
+        let expect_v1 = magic == MAGIC_V1;
+        if expect_v1 != (header.version == 1) {
+            bail!(
+                "archive magic disagrees with header version {} (spliced payload?)",
+                header.version
+            );
+        }
+        Ok(header)
     }
 
     /// Parse only the header from serialized archive bytes — the cheap
@@ -202,6 +257,36 @@ impl Archive {
             chunks.push(DeflatedChunk { words, bits, symbols });
         }
 
+        // per-chunk tag table (format version >= 2). The header's
+        // granularity byte and the table's presence must agree, every tag
+        // must be known, and the sidecar record list must cover exactly
+        // the tagged chunks — all checked here so downstream decode never
+        // sees a structurally inconsistent archive.
+        let (chunk_tags, chunk_aux) = if header.version >= 2 {
+            let ntags = b.u32()? as usize;
+            if ntags != 0 && ntags != nchunks {
+                bail!("corrupt archive: {ntags} chunk tags for {nchunks} chunks");
+            }
+            if (header.granularity == CodecGranularity::Chunk) != (ntags > 0) {
+                bail!(
+                    "corrupt archive: {} granularity with {ntags} chunk tags",
+                    header.granularity.name()
+                );
+            }
+            let tags = b.take(ntags)?;
+            for &t in &tags {
+                EncoderKind::from_tag(t)?;
+            }
+            let mut aux = Vec::with_capacity(ntags);
+            for _ in 0..ntags {
+                let alen = b.u8()? as usize;
+                aux.push(b.take(alen)?);
+            }
+            (tags, aux)
+        } else {
+            (Vec::new(), Vec::new())
+        };
+
         let nout = b.u64()? as usize;
         if nout > b.remaining() / 12 {
             bail!("corrupt archive: {nout} outliers exceeds payload");
@@ -222,6 +307,8 @@ impl Archive {
         Ok(Archive {
             header,
             encoder_aux,
+            chunk_tags,
+            chunk_aux,
             stream: DeflatedStream { chunks, chunk_symbols },
             outliers,
             verbatim,
@@ -251,6 +338,7 @@ mod tests {
             header: Header {
                 version: FORMAT_VERSION,
                 encoder: EncoderKind::Huffman,
+                granularity: CodecGranularity::Field,
                 field_name: "NYX/baryon_density".into(),
                 dims: vec![64, 64, 64],
                 variant: "3d_64".into(),
@@ -263,6 +351,8 @@ mod tests {
                 n_slabs: 4,
             },
             encoder_aux: (0..1024).map(|i| (i % 20) as u8).collect(),
+            chunk_tags: Vec::new(),
+            chunk_aux: Vec::new(),
             stream: DeflatedStream {
                 chunks: vec![
                     DeflatedChunk { words: vec![0xdead, 0xbeef], bits: 100, symbols: 40 },
@@ -273,6 +363,15 @@ mod tests {
             outliers: vec![(7, -123456), (99_999, 777)],
             verbatim: vec![(123, f32::NAN), (456, 1e30)],
         }
+    }
+
+    fn sample_mixed_archive() -> Archive {
+        let mut a = sample_archive(LosslessTag::None);
+        a.header.granularity = CodecGranularity::Chunk;
+        a.chunk_tags = vec![EncoderKind::Fle.to_tag(), EncoderKind::Rle.to_tag()];
+        a.chunk_aux = vec![vec![9], vec![3, 7]];
+        a.encoder_aux = Vec::new();
+        a
     }
 
     #[test]
@@ -329,6 +428,71 @@ mod tests {
         let h = Archive::peek_header(&bytes).unwrap();
         assert_eq!(h.version, FORMAT_VERSION);
         assert_eq!(h.encoder, EncoderKind::Huffman);
+        assert_eq!(h.granularity, CodecGranularity::Field);
+    }
+
+    #[test]
+    fn v1_archive_bytes_still_parse() {
+        // a PR 2 archive: version-1 header under the CUSZA2 magic
+        let mut a = sample_archive(LosslessTag::None);
+        a.header.version = 1;
+        let bytes = a.to_bytes();
+        assert_eq!(&bytes[..8], MAGIC_V1);
+        let b = Archive::from_bytes(&bytes).unwrap();
+        assert_eq!(b.header.version, 1);
+        assert_eq!(b.header.granularity, CodecGranularity::Field);
+        assert!(b.chunk_tags.is_empty());
+        assert_eq!(b.stream, a.stream);
+        assert_eq!(Archive::peek_header(&bytes).unwrap(), b.header);
+    }
+
+    #[test]
+    fn mixed_archive_tag_table_roundtrips() {
+        let a = sample_mixed_archive();
+        let bytes = a.to_bytes();
+        assert_eq!(&bytes[..8], MAGIC);
+        let b = Archive::from_bytes(&bytes).unwrap();
+        assert_eq!(b.header.granularity, CodecGranularity::Chunk);
+        assert_eq!(b.chunk_tags, a.chunk_tags);
+        assert_eq!(b.chunk_aux, a.chunk_aux);
+        assert_eq!(b, a);
+    }
+
+    #[test]
+    fn granularity_and_tag_table_must_agree() {
+        // chunk granularity without a tag table
+        let mut a = sample_mixed_archive();
+        a.chunk_tags = Vec::new();
+        a.chunk_aux = Vec::new();
+        assert!(Archive::from_bytes(&a.to_bytes()).is_err());
+        // field granularity with a tag table
+        let mut a = sample_mixed_archive();
+        a.header.granularity = CodecGranularity::Field;
+        assert!(Archive::from_bytes(&a.to_bytes()).is_err());
+        // tag count must match the chunk count
+        let mut a = sample_mixed_archive();
+        a.chunk_tags.push(EncoderKind::Fle.to_tag());
+        a.chunk_aux.push(vec![4]);
+        assert!(Archive::from_bytes(&a.to_bytes()).is_err());
+        // unknown tag in the table
+        let mut a = sample_mixed_archive();
+        a.chunk_tags[1] = 44;
+        assert!(Archive::from_bytes(&a.to_bytes()).is_err());
+    }
+
+    #[test]
+    fn spliced_magic_version_mismatch_rejected() {
+        // a version-2 header smuggled under the CUSZA2 magic (and vice
+        // versa) must be rejected even though both parts are well-formed
+        let a = sample_archive(LosslessTag::None);
+        let mut bytes = a.to_bytes();
+        bytes[..8].copy_from_slice(MAGIC_V1);
+        assert!(Archive::from_bytes(&bytes).is_err());
+        let mut a1 = sample_archive(LosslessTag::None);
+        a1.header.version = 1;
+        let mut bytes = a1.to_bytes();
+        bytes[..8].copy_from_slice(MAGIC);
+        assert!(Archive::from_bytes(&bytes).is_err());
     }
 
     #[test]

@@ -5,7 +5,9 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::{CompressStats, Coordinator};
-use crate::codec::{self, EncodeContext, EncoderChoice, EncoderKind};
+use crate::codec::{
+    self, chunked, CodecGranularity, CostModel, EncodeContext, EncoderChoice, EncoderKind,
+};
 use crate::container::{Archive, Header, LosslessTag, FORMAT_VERSION, MAX_CHUNK_SYMBOLS};
 use crate::field::Field;
 use crate::huffman;
@@ -117,16 +119,12 @@ pub fn compress(coord: &Coordinator, field: &Field) -> Result<(Archive, Compress
     }
     timer.add("4.gather-outliers", t0.elapsed());
 
-    // ---- phase D: resolve the codec, run the encoder stage -------------
-    // `auto` picks per field from the merged histogram (cuSZ+-style
-    // smoothness adaptation); forced choices skip the heuristic.
+    // ---- phase D: resolve the codec, run the encoder stage(s) ----------
+    // `auto` adapts to smoothness (cuSZ+-style): at field granularity it
+    // picks one backend from the merged histogram; at chunk granularity
+    // every chunk is probed against the measured cost model and tagged
+    // independently. Forced choices are uniform at either granularity.
     let t0 = Instant::now();
-    let encoder_kind = match cfg.codec.encoder {
-        EncoderChoice::Huffman => EncoderKind::Huffman,
-        EncoderChoice::Fle => EncoderKind::Fle,
-        EncoderChoice::Auto => codec::auto_select(&freq),
-    };
-    let stage = codec::stage_for(encoder_kind);
     let ctx = EncodeContext {
         dict_size: dict,
         chunk_symbols: cfg.chunk_symbols,
@@ -134,11 +132,55 @@ pub fn compress(coord: &Coordinator, field: &Field) -> Result<(Archive, Compress
         codeword_repr: cfg.codeword_repr,
         freq: &freq,
     };
-    let enc = stage.encode(&symbols, &ctx)?;
+    let per_chunk_auto = cfg.codec.encoder == EncoderChoice::Auto
+        && cfg.codec.granularity == CodecGranularity::Chunk;
+    let (encoder_kind, granularity, encoder_aux, chunk_tags, chunk_aux, stream, repr_bits, codebook_time, chunk_counts);
+    if per_chunk_auto {
+        let enc = chunked::encode_chunked(&symbols, &ctx, &CostModel::MEASURED)?;
+        // the header's field-level tag records the majority backend (an
+        // `ls`-level summary; decode follows the per-chunk tag table)
+        encoder_kind = EncoderKind::ALL
+            .into_iter()
+            .max_by_key(|k| enc.counts[k.to_tag() as usize])
+            .unwrap_or_default();
+        // a degenerate empty stream has no chunks to tag: stay at field
+        // granularity so the header and (empty) tag table agree
+        granularity = if enc.tags.is_empty() {
+            CodecGranularity::Field
+        } else {
+            CodecGranularity::Chunk
+        };
+        encoder_aux = enc.shared_aux;
+        chunk_tags = enc.tags;
+        chunk_aux = enc.chunk_aux;
+        stream = enc.stream;
+        repr_bits = enc.repr_bits;
+        codebook_time = enc.codebook_time;
+        chunk_counts = enc.counts;
+    } else {
+        let kind = match cfg.codec.encoder {
+            EncoderChoice::Huffman => EncoderKind::Huffman,
+            EncoderChoice::Fle => EncoderKind::Fle,
+            EncoderChoice::Rle => EncoderKind::Rle,
+            EncoderChoice::Auto => codec::auto_select(&freq),
+        };
+        let enc = codec::stage_for(kind).encode(&symbols, &ctx)?;
+        let mut counts = [0usize; EncoderKind::ALL.len()];
+        counts[kind.to_tag() as usize] = enc.stream.chunks.len();
+        encoder_kind = kind;
+        granularity = CodecGranularity::Field;
+        encoder_aux = enc.aux;
+        chunk_tags = Vec::new();
+        chunk_aux = Vec::new();
+        stream = enc.stream;
+        repr_bits = enc.repr_bits;
+        codebook_time = enc.codebook_time;
+        chunk_counts = counts;
+    }
     // keep the Table 7 breakdown rows: table/codebook construction is
     // reported apart from the streaming encode it precedes
-    timer.add("3.codebook", enc.codebook_time);
-    timer.add("5.encode-deflate", t0.elapsed().saturating_sub(enc.codebook_time));
+    timer.add("3.codebook", codebook_time);
+    timer.add("5.encode-deflate", t0.elapsed().saturating_sub(codebook_time));
 
     // ---- assemble ------------------------------------------------------
     let t0 = Instant::now();
@@ -147,12 +189,12 @@ pub fn compress(coord: &Coordinator, field: &Field) -> Result<(Archive, Compress
         crate::config::LosslessStage::Gzip => LosslessTag::Gzip,
         crate::config::LosslessStage::Zstd => LosslessTag::Zstd,
     };
-    let encoded_bits = enc.stream.total_bits();
-    let repr_bits = enc.repr_bits;
+    let encoded_bits = stream.total_bits();
     let archive = Archive {
         header: Header {
             version: FORMAT_VERSION,
             encoder: encoder_kind,
+            granularity,
             field_name: field.name.clone(),
             dims: field.dims.clone(),
             variant: spec.name.clone(),
@@ -164,8 +206,10 @@ pub fn compress(coord: &Coordinator, field: &Field) -> Result<(Archive, Compress
             lossless,
             n_slabs: quants.len(),
         },
-        encoder_aux: enc.aux,
-        stream: enc.stream,
+        encoder_aux,
+        chunk_tags,
+        chunk_aux,
+        stream,
         outliers,
         verbatim,
     };
@@ -181,6 +225,8 @@ pub fn compress(coord: &Coordinator, field: &Field) -> Result<(Archive, Compress
         encoded_bits,
         repr_bits,
         encoder: encoder_kind,
+        granularity,
+        chunk_counts,
         abs_eb,
         timer,
     };

@@ -43,20 +43,32 @@ pub fn decompress(coord: &Coordinator, archive: &Archive) -> Result<(Field, Deco
     }
 
     // ---- decode the symbol stream --------------------------------------
-    // the stage is picked by the archive's encoder tag, not the config:
-    // a Huffman coordinator decodes FLE archives and vice versa
+    // the stage is picked by the archive's tags, not the config: a
+    // Huffman coordinator decodes FLE/RLE archives and vice versa, and a
+    // mixed-granularity archive dispatches per chunk from its tag table
     let t0 = Instant::now();
     let threads = cfg.effective_threads();
-    let stage = codec::stage_for(h.encoder);
     let slab_len = spec.len();
     let expected_symbols = slab_len * grid.len();
-    let symbols = stage.decode(
-        &archive.encoder_aux,
-        &archive.stream,
-        h.dict_size,
-        threads,
-        expected_symbols,
-    )?;
+    let symbols = if !archive.chunk_tags.is_empty() {
+        codec::chunked::decode_chunked(
+            &archive.chunk_tags,
+            &archive.encoder_aux,
+            &archive.chunk_aux,
+            &archive.stream,
+            h.dict_size,
+            threads,
+            expected_symbols,
+        )?
+    } else {
+        codec::stage_for(h.encoder).decode(
+            &archive.encoder_aux,
+            &archive.stream,
+            h.dict_size,
+            threads,
+            expected_symbols,
+        )?
+    };
     if symbols.len() != expected_symbols {
         bail!("symbol count {} != {expected_symbols}", symbols.len());
     }

@@ -115,7 +115,7 @@ mod tests {
 
     #[test]
     fn fle_codec_roundtrips_all_regimes() {
-        let codec = CodecSpec { encoder: EncoderChoice::Fle, lossless: LosslessStage::None };
+        let codec = CodecSpec { encoder: EncoderChoice::Fle, lossless: LosslessStage::None, ..Default::default() };
         for regime in Regime::ALL {
             let data = make(regime, 40_000, 11);
             let field = Field::new("t", vec![40_000], data).unwrap();
@@ -140,7 +140,7 @@ mod tests {
         let field = Field::new("x", vec![20_000], data).unwrap();
         let fle = cpu_coordinator_codec(
             ErrorBound::Abs(1e-3),
-            CodecSpec { encoder: EncoderChoice::Fle, lossless: LosslessStage::None },
+            CodecSpec { encoder: EncoderChoice::Fle, lossless: LosslessStage::None, ..Default::default() },
         );
         let archive = fle.compress(&field).unwrap();
         let huff = cpu_coordinator(ErrorBound::Abs(1e-3));
@@ -150,7 +150,7 @@ mod tests {
 
     #[test]
     fn auto_codec_resolves_and_roundtrips() {
-        let codec = CodecSpec { encoder: EncoderChoice::Auto, lossless: LosslessStage::None };
+        let codec = CodecSpec { encoder: EncoderChoice::Auto, lossless: LosslessStage::None, ..Default::default() };
         for regime in Regime::ALL {
             let data = make(regime, 30_000, 6);
             let field = Field::new("a", vec![30_000], data).unwrap();

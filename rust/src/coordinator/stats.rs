@@ -1,6 +1,6 @@
 //! Per-run statistics: stage timings (Table 7 rows) and size accounting.
 
-use crate::codec::EncoderKind;
+use crate::codec::{CodecGranularity, EncoderKind};
 use crate::metrics::StageTimer;
 
 #[derive(Debug, Clone, Default)]
@@ -12,12 +12,19 @@ pub struct CompressStats {
     pub n_outliers: usize,
     pub n_verbatim: usize,
     /// Bits in the encoded symbol stream (pre-lossless), whichever
-    /// encoder produced it.
+    /// encoder(s) produced it.
     pub encoded_bits: u64,
     pub repr_bits: u32,
     /// Which encoder backend compressed this field (the resolved choice
-    /// when the config said `auto`).
+    /// when the config said `auto`; the majority backend at chunk
+    /// granularity — `chunk_counts` has the full tally).
     pub encoder: EncoderKind,
+    /// Selection granularity this field was encoded at.
+    pub granularity: CodecGranularity,
+    /// Chunks encoded per backend, indexed by [`EncoderKind::to_tag`].
+    /// Uniform archives tally every chunk under the one encoder; at chunk
+    /// granularity this is the measured cost model's per-chunk verdict.
+    pub chunk_counts: [usize; EncoderKind::ALL.len()],
     pub abs_eb: f32,
 }
 
@@ -30,15 +37,33 @@ impl CompressStats {
         32.0 / self.compression_ratio()
     }
 
+    /// Chunks this field encoded with `kind`.
+    pub fn chunks_for(&self, kind: EncoderKind) -> usize {
+        self.chunk_counts[kind.to_tag() as usize]
+    }
+
+    /// Compact per-backend chunk tally, e.g. `huffman:3 fle:2 rle:7`
+    /// (backends with zero chunks are omitted).
+    pub fn chunk_report(&self) -> String {
+        let parts: Vec<String> = EncoderKind::ALL
+            .into_iter()
+            .filter(|&k| self.chunks_for(k) > 0)
+            .map(|k| format!("{}:{}", k.name(), self.chunks_for(k)))
+            .collect();
+        if parts.is_empty() { "-".to_string() } else { parts.join(" ") }
+    }
+
     pub fn report(&self) -> String {
         format!(
             "original {:.2} MB -> compressed {:.2} MB  CR {:.2}x  bitrate {:.2} b/v  \
-             (encoder {}, outliers {}, verbatim {}, repr u{})\n{}",
+             (encoder {} [{} granularity, chunks {}], outliers {}, verbatim {}, repr u{})\n{}",
             self.original_bytes as f64 / 1e6,
             self.compressed_bytes as f64 / 1e6,
             self.compression_ratio(),
             self.bitrate(),
             self.encoder.name(),
+            self.granularity.name(),
+            self.chunk_report(),
             self.n_outliers,
             self.n_verbatim,
             self.repr_bits,
@@ -66,5 +91,17 @@ mod tests {
         };
         assert!((s.compression_ratio() - 10.0).abs() < 1e-12);
         assert!((s.bitrate() - 3.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chunk_report_tallies_backends() {
+        let mut s = CompressStats::default();
+        assert_eq!(s.chunk_report(), "-");
+        s.chunk_counts[EncoderKind::Huffman.to_tag() as usize] = 3;
+        s.chunk_counts[EncoderKind::Rle.to_tag() as usize] = 7;
+        assert_eq!(s.chunks_for(EncoderKind::Huffman), 3);
+        assert_eq!(s.chunks_for(EncoderKind::Fle), 0);
+        assert_eq!(s.chunk_report(), "huffman:3 rle:7");
+        assert!(s.report().contains("huffman:3 rle:7"));
     }
 }

@@ -76,6 +76,25 @@ fn decode_chunk_into(
     want
 }
 
+/// Decode exactly one chunk, erroring (never panicking) when it
+/// under-produces — the per-chunk entry point used by mixed-granularity
+/// archives, where only some chunks are Huffman-tagged. The caller must
+/// bound `chunk.symbols` (it is untrusted) before this allocates.
+pub fn inflate_one_strict(
+    chunk: &super::deflate::DeflatedChunk,
+    rev: &ReverseCodebook,
+) -> anyhow::Result<Vec<u16>> {
+    let mut out = vec![0u16; chunk.symbols as usize];
+    let got = decode_chunk_into(chunk, rev, &mut out);
+    if got != chunk.symbols as usize {
+        anyhow::bail!(
+            "corrupt huffman chunk: produced {got} of {} symbols",
+            chunk.symbols
+        );
+    }
+    Ok(out)
+}
+
 /// Strict variant: errors on corrupt chunks instead of truncating.
 pub fn inflate_chunks_strict(
     stream: &DeflatedStream,

@@ -11,8 +11,9 @@
 //! * **L3** (this crate): a streaming coordinator that tiles fields into
 //!   slabs, executes the AOT executables through PJRT ([`runtime`]),
 //!   encodes quant codes through a pluggable codec pipeline ([`codec`]:
-//!   canonical Huffman on the [`huffman`] substrate, or an FZ-GPU-style
-//!   fixed-length bitshuffle encoder, selected per field in `auto` mode),
+//!   canonical Huffman on the [`huffman`] substrate, an FZ-GPU-style
+//!   fixed-length bitshuffle encoder, or a run-length backend — selected
+//!   in `auto` mode per field or per chunk by a measured cost model),
 //!   and owns the versioned archive format ([`container`]), baselines
 //!   ([`sz`], [`zfp`]), synthetic datasets ([`datagen`]) and metrics
 //!   ([`metrics`]).
@@ -82,7 +83,7 @@ pub mod testkit;
 pub mod util;
 pub mod zfp;
 
-pub use codec::{CodecSpec, EncoderChoice, EncoderKind};
+pub use codec::{CodecGranularity, CodecSpec, EncoderChoice, EncoderKind};
 pub use config::{CuszConfig, ErrorBound};
 pub use coordinator::Coordinator;
 pub use field::Field;

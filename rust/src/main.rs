@@ -23,7 +23,7 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
-use cusz::codec::{CodecSpec, EncoderChoice};
+use cusz::codec::{CodecGranularity, CodecSpec, EncoderChoice};
 use cusz::config::{BackendKind, CodewordRepr, CuszConfig, ErrorBound, LosslessStage};
 use cusz::container::Archive;
 use cusz::coordinator::Coordinator;
@@ -87,8 +87,9 @@ fn usage() -> String {
                    [--compact-threshold F]\n\
      \n\
      Common options: --backend pjrt|cpu, --threads N, --chunk N,\n\
-       --dict N, --repr adaptive|u32|u64, --codec huffman|fle|auto,\n\
-       --lossless none|gzip|zstd, --artifacts DIR"
+       --dict N, --repr adaptive|u32|u64, --codec huffman|fle|rle|auto,\n\
+       --codec-granularity field|chunk, --lossless none|gzip|zstd,\n\
+       --artifacts DIR"
         .to_string()
 }
 
@@ -119,6 +120,7 @@ fn common_config(cli: &Cli) -> Result<CuszConfig> {
                 "zstd" => LosslessStage::Zstd,
                 l => bail!("unknown lossless stage {l}"),
             },
+            granularity: CodecGranularity::parse(&cli.get("codec-granularity"))?,
         },
         artifacts_dir: PathBuf::from(cli.get("artifacts")),
         ..Default::default()
@@ -133,7 +135,12 @@ fn with_common(cli: Cli) -> Cli {
         .opt("chunk", "4096", "deflate chunk size in symbols (Table 6)")
         .opt("dict", "1024", "quantization bins / Huffman symbols (Table 3)")
         .opt("repr", "adaptive", "codeword repr: adaptive|u32|u64 (Table 4)")
-        .opt("codec", "huffman", "symbol encoder: huffman|fle|auto (per-field)")
+        .opt("codec", "huffman", "symbol encoder: huffman|fle|rle|auto")
+        .opt(
+            "codec-granularity",
+            "field",
+            "auto-selection grain: field (one backend) or chunk (tag table)",
+        )
         .opt("lossless", "none", "final lossless stage: none|gzip|zstd")
         .opt("artifacts", "artifacts", "AOT artifact directory")
 }
@@ -602,11 +609,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let stats = batch.run_into_store(fields, &mut store)?;
     for (name, job) in &stats.per_job {
         println!(
-            "  {:<34} {:>9.2} MB  CR {:>6.2}x  enc {}",
+            "  {:<34} {:>9.2} MB  CR {:>6.2}x  enc {} [{}]",
             name,
             job.original_bytes as f64 / 1e6,
             job.compression_ratio(),
-            job.encoder.name()
+            job.encoder.name(),
+            job.chunk_report()
         );
     }
     for (name, err) in &stats.errors {

@@ -94,7 +94,9 @@ impl ServiceStats {
     }
 
     /// Per-encoder job tallies (the auto-mode choice report): how many
-    /// fields each backend ended up compressing.
+    /// fields each backend ended up compressing (majority backend for
+    /// chunk-granularity jobs; see [`ServiceStats::chunk_encoder_counts`]
+    /// for the chunk-level tally).
     pub fn encoder_counts(&self) -> Vec<(&'static str, usize)> {
         let mut counts: Vec<(&'static str, usize)> = Vec::new();
         for (_, s) in &self.per_job {
@@ -102,6 +104,20 @@ impl ServiceStats {
             match counts.iter_mut().find(|(n, _)| *n == name) {
                 Some((_, c)) => *c += 1,
                 None => counts.push((name, 1)),
+            }
+        }
+        counts
+    }
+
+    /// Per-encoder *chunk* tallies across every job, indexed by
+    /// [`crate::codec::EncoderKind::to_tag`] — the service-level view of
+    /// per-chunk adaptive selection (uniform jobs tally all their chunks
+    /// under the one backend).
+    pub fn chunk_encoder_counts(&self) -> [usize; crate::codec::EncoderKind::ALL.len()] {
+        let mut counts = [0usize; crate::codec::EncoderKind::ALL.len()];
+        for (_, s) in &self.per_job {
+            for (slot, &c) in counts.iter_mut().zip(&s.chunk_counts) {
+                *slot += c;
             }
         }
         counts
@@ -124,9 +140,16 @@ impl ServiceStats {
             .map(|(n, c)| format!("{n}:{c}"))
             .collect::<Vec<_>>()
             .join(" ");
+        let chunk_counts = self.chunk_encoder_counts();
+        let chunks = crate::codec::EncoderKind::ALL
+            .into_iter()
+            .filter(|&k| chunk_counts[k.to_tag() as usize] > 0)
+            .map(|k| format!("{}:{}", k.name(), chunk_counts[k.to_tag() as usize]))
+            .collect::<Vec<_>>()
+            .join(" ");
         let mut s = format!(
             "jobs {} ok / {} failed  {:.2} MB -> {:.2} MB  CR {:.2}x  \
-             {:.3} GB/s end-to-end  (encoders {}, outliers {}, verbatim {}, wall {:.3}s)",
+             {:.3} GB/s end-to-end  (encoders {}, chunks {}, outliers {}, verbatim {}, wall {:.3}s)",
             self.jobs,
             self.failed,
             self.original_bytes as f64 / 1e6,
@@ -134,6 +157,7 @@ impl ServiceStats {
             self.compression_ratio(),
             self.throughput_gbps(),
             if encoders.is_empty() { "-".to_string() } else { encoders },
+            if chunks.is_empty() { "-".to_string() } else { chunks },
             self.n_outliers,
             self.n_verbatim,
             self.wall_seconds,
@@ -527,6 +551,51 @@ mod tests {
         }
         assert!(stats.report().contains("encoders"));
         // and the archives still roundtrip
+        for f in &originals {
+            let out = coord.decompress(&store.get(&f.name).unwrap()).unwrap();
+            assert_eq!(metrics::verify_error_bound(&f.data, &out.data, EB), None, "{}", f.name);
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn per_chunk_auto_service_tallies_chunk_choices() {
+        use crate::codec::{CodecGranularity, CodecSpec, EncoderChoice};
+        let dir = tmp_dir("serve-chunk-auto");
+        let mut store = Store::create(&dir, 2).unwrap();
+        let coord = Arc::new(
+            Coordinator::new(CuszConfig {
+                backend: BackendKind::Cpu,
+                eb: ErrorBound::Abs(EB as f64),
+                threads: 1,
+                codec: CodecSpec {
+                    encoder: EncoderChoice::Auto,
+                    granularity: CodecGranularity::Chunk,
+                    ..Default::default()
+                },
+                ..Default::default()
+            })
+            .unwrap(),
+        );
+        let batch = BatchCompressor::new(
+            Arc::clone(&coord),
+            BatchConfig { workers: 2, queue_depth: 2, ..Default::default() },
+        );
+        let originals = fields(6);
+        let stats = batch.run_into_store(originals.clone(), &mut store).unwrap();
+        assert_eq!(stats.jobs, 6);
+        // chunk tallies aggregate across jobs and match the per-job sums
+        let chunk_counts = stats.chunk_encoder_counts();
+        let total: usize = chunk_counts.iter().sum();
+        let expected: usize = stats
+            .per_job
+            .iter()
+            .map(|(_, s)| s.chunk_counts.iter().sum::<usize>())
+            .sum();
+        assert!(total > 0);
+        assert_eq!(total, expected);
+        assert!(stats.report().contains("chunks"));
+        // mixed archives written through the store still roundtrip
         for f in &originals {
             let out = coord.decompress(&store.get(&f.name).unwrap()).unwrap();
             assert_eq!(metrics::verify_error_bound(&f.data, &out.data, EB), None, "{}", f.name);

@@ -1,10 +1,11 @@
 //! Encoder-matrix integration tests: every codec pipeline variant —
-//! encoder (huffman/fle) × lossless tail (none/gzip/zstd) ×
+//! encoder (huffman/fle/rle) × lossless tail (none/gzip/zstd) ×
 //! dimensionality (1D/2D/3D) × data regime — must roundtrip through
 //! archive bytes within the error bound. Plus the auto-mode selection
-//! shape and version-0 archive compatibility at the coordinator level.
+//! shape (field and chunk granularity) and version-0 archive
+//! compatibility at the coordinator level.
 
-use cusz::codec::{CodecSpec, EncoderChoice, EncoderKind};
+use cusz::codec::{CodecGranularity, CodecSpec, EncoderChoice, EncoderKind};
 use cusz::config::{BackendKind, CuszConfig, ErrorBound, LosslessStage};
 use cusz::container::Archive;
 use cusz::coordinator::Coordinator;
@@ -27,12 +28,12 @@ fn coordinator(codec: CodecSpec) -> Coordinator {
 
 #[test]
 fn encoder_matrix_roundtrips_within_bound() {
-    let encoders = [EncoderChoice::Huffman, EncoderChoice::Fle];
+    let encoders = [EncoderChoice::Huffman, EncoderChoice::Fle, EncoderChoice::Rle];
     let stages = [LosslessStage::None, LosslessStage::Gzip, LosslessStage::Zstd];
     let shapes: [&[usize]; 3] = [&[20_000], &[120, 160], &[24, 30, 28]];
     for &encoder in &encoders {
         for &lossless in &stages {
-            let coord = coordinator(CodecSpec { encoder, lossless });
+            let coord = coordinator(CodecSpec { encoder, lossless, ..Default::default() });
             for (si, &shape) in shapes.iter().enumerate() {
                 for (ri, regime) in Regime::ALL.into_iter().enumerate() {
                     let n: usize = shape.iter().product();
@@ -43,6 +44,7 @@ fn encoder_matrix_roundtrips_within_bound() {
                     let expect = match encoder {
                         EncoderChoice::Huffman => EncoderKind::Huffman,
                         EncoderChoice::Fle => EncoderKind::Fle,
+                        EncoderChoice::Rle => EncoderKind::Rle,
                         EncoderChoice::Auto => unreachable!(),
                     };
                     assert_eq!(archive.header.encoder, expect);
@@ -64,7 +66,7 @@ fn encoder_matrix_roundtrips_within_bound() {
 
 #[test]
 fn auto_mode_adapts_to_smoothness() {
-    let auto = |lossless| CodecSpec { encoder: EncoderChoice::Auto, lossless };
+    let auto = |lossless| CodecSpec { encoder: EncoderChoice::Auto, lossless, ..Default::default() };
 
     // smooth random walk, comfortable bound: deltas land in a handful of
     // bins around the radius -> skewed histogram -> Huffman
@@ -99,10 +101,10 @@ fn fle_with_lossless_tail_beats_raw_fle_on_shuffled_planes() {
     // the point of the bitplane shuffle: the lossless tail sees long
     // near-constant runs, so zstd over FLE output must shrink it
     let field = Field::new("z", vec![64, 256], make(Regime::Smooth, 64 * 256, 5)).unwrap();
-    let raw = coordinator(CodecSpec { encoder: EncoderChoice::Fle, lossless: LosslessStage::None })
+    let raw = coordinator(CodecSpec { encoder: EncoderChoice::Fle, lossless: LosslessStage::None, ..Default::default() })
         .compress(&field)
         .unwrap();
-    let zstd = coordinator(CodecSpec { encoder: EncoderChoice::Fle, lossless: LosslessStage::Zstd })
+    let zstd = coordinator(CodecSpec { encoder: EncoderChoice::Fle, lossless: LosslessStage::Zstd, ..Default::default() })
         .compress(&field)
         .unwrap();
     assert!(
@@ -111,6 +113,98 @@ fn fle_with_lossless_tail_beats_raw_fle_on_shuffled_planes() {
         zstd.compressed_bytes(),
         raw.compressed_bytes()
     );
+}
+
+/// A field that interleaves smoothness regimes in large stripes, so the
+/// slab-major symbol stream alternates between constant, gaussian, and
+/// wide-noise chunks — the workload per-chunk selection exists for.
+fn mixed_regime_field(n: usize, seed: u64) -> Field {
+    let mut rng = Rng::new(seed);
+    let mut data = Vec::with_capacity(n);
+    let mut acc = 0f32;
+    for i in 0..n {
+        match (i / 8192) % 3 {
+            0 => data.push(0.0),
+            1 => {
+                acc += rng.normal() * 0.002;
+                data.push(acc);
+            }
+            _ => data.push(rng.normal() * 0.5),
+        }
+    }
+    Field::new("mixed", vec![n], data).unwrap()
+}
+
+#[test]
+fn per_chunk_auto_beats_every_uniform_encoder_on_mixed_fields() {
+    let n = 1 << 17; // two 1d_64k slabs, 32 chunks
+    let field = mixed_regime_field(n, 3);
+    let uniform_best = [EncoderChoice::Huffman, EncoderChoice::Fle, EncoderChoice::Rle]
+        .into_iter()
+        .map(|encoder| {
+            coordinator(CodecSpec { encoder, ..Default::default() })
+                .compress(&field)
+                .unwrap()
+                .compressed_bytes()
+        })
+        .min()
+        .unwrap();
+    let chunked = coordinator(CodecSpec {
+        encoder: EncoderChoice::Auto,
+        granularity: CodecGranularity::Chunk,
+        ..Default::default()
+    });
+    let (archive, stats) = chunked.compress_with_stats(&field).unwrap();
+    assert_eq!(archive.header.granularity, CodecGranularity::Chunk);
+    assert_eq!(archive.chunk_tags.len(), archive.stream.chunks.len());
+    // the win condition: per-chunk selection is at least as small as the
+    // best single-backend choice (within the tag table's own overhead)
+    // tag table + shared codebook + per-chunk sidecar records + framing
+    let overhead = 4 * archive.chunk_tags.len() + archive.encoder_aux.len() + 128;
+    assert!(
+        archive.compressed_bytes() <= uniform_best + overhead,
+        "per-chunk {} vs best uniform {}",
+        archive.compressed_bytes(),
+        uniform_best
+    );
+    // stripes actually split across backends
+    let used = stats.chunk_counts.iter().filter(|&&c| c > 0).count();
+    assert!(used >= 2, "chunk counts {:?}", stats.chunk_counts);
+    // and the mixed archive roundtrips through bytes
+    let restored = Archive::from_bytes(&archive.to_bytes()).unwrap();
+    let out = chunked.decompress(&restored).unwrap();
+    assert_eq!(metrics::verify_error_bound(&field.data, &out.data, EB), None);
+}
+
+#[test]
+fn mixed_archive_decodes_on_any_coordinator_and_through_store() {
+    use cusz::store::Store;
+    use cusz::testkit::tmp_dir;
+
+    let field = mixed_regime_field(1 << 16, 9);
+    let chunked = coordinator(CodecSpec {
+        encoder: EncoderChoice::Auto,
+        granularity: CodecGranularity::Chunk,
+        ..Default::default()
+    });
+    let archive = chunked.compress(&field).unwrap();
+    assert!(!archive.chunk_tags.is_empty());
+
+    // a default (huffman/field) coordinator decodes it: the tag table,
+    // not the config, picks the stages
+    let plain = coordinator(CodecSpec::default());
+    let out = plain.decompress(&archive).unwrap();
+    assert_eq!(metrics::verify_error_bound(&field.data, &out.data, EB), None);
+
+    // and it survives the store path byte-identically
+    let dir = tmp_dir("codec-mixed-store");
+    let mut store = Store::create(&dir, 1).unwrap();
+    store.add(&archive).unwrap();
+    let restored = store.get("mixed").unwrap();
+    assert_eq!(restored, archive);
+    let out = plain.decompress(&restored).unwrap();
+    assert_eq!(metrics::verify_error_bound(&field.data, &out.data, EB), None);
+    std::fs::remove_dir_all(&dir).unwrap();
 }
 
 #[test]

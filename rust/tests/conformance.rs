@@ -1,0 +1,188 @@
+//! Error-bound conformance suite — the paper's core correctness claim
+//! (§2: |d − d°| ≤ eb for every value), swept systematically instead of
+//! spot-checked: every datagen profile × dimensionality × error-bound
+//! mode × codec (including per-chunk auto) must decode within the bound
+//! through serialized archive bytes, with finite quality metrics.
+//!
+//! Fields are synthesized at reduced dims (same generators as the full
+//! datasets, smaller axes) so the whole matrix stays test-suite fast.
+
+use cusz::codec::{CodecGranularity, CodecSpec, EncoderChoice};
+use cusz::config::{BackendKind, CuszConfig, ErrorBound, LosslessStage};
+use cusz::container::Archive;
+use cusz::coordinator::Coordinator;
+use cusz::datagen::{profiles, Dataset};
+use cusz::field::Field;
+use cusz::metrics;
+use cusz::util::prng::Rng;
+
+/// Reduced-size stand-ins: one representative field per dataset profile,
+/// with dims shaped like the original (Table 2) but test-sized.
+fn profile_fields() -> Vec<Field> {
+    let cases: Vec<(Dataset, &str, Vec<usize>)> = vec![
+        (Dataset::Hacc, "x", vec![40_000]),
+        (Dataset::Hacc, "vx", vec![40_000]),
+        (Dataset::CesmAtm, "CLDHGH", vec![90, 180]),
+        (Dataset::CesmAtm, "PS", vec![90, 180]),
+        (Dataset::Hurricane, "CLOUDf48", vec![13, 50, 50]),
+        (Dataset::Nyx, "baryon_density", vec![32, 32, 32]),
+        (Dataset::Qmcpack, "einspline", vec![9, 8, 16, 16]),
+    ];
+    cases
+        .into_iter()
+        .map(|(ds, fname, dims)| {
+            let mut rng = Rng::new(7 ^ dims.iter().sum::<usize>() as u64);
+            let data = profiles::synthesize(ds, fname, &dims, &mut rng);
+            Field::new(format!("{}/{fname}", ds.name()), dims, data).unwrap()
+        })
+        .collect()
+}
+
+fn codecs() -> Vec<CodecSpec> {
+    let spec = |encoder, granularity| CodecSpec {
+        encoder,
+        lossless: LosslessStage::None,
+        granularity,
+    };
+    vec![
+        spec(EncoderChoice::Huffman, CodecGranularity::Field),
+        spec(EncoderChoice::Fle, CodecGranularity::Field),
+        spec(EncoderChoice::Rle, CodecGranularity::Field),
+        spec(EncoderChoice::Auto, CodecGranularity::Field),
+        spec(EncoderChoice::Auto, CodecGranularity::Chunk),
+        // one lossless-tail leg to confirm the wrapper changes nothing
+        CodecSpec {
+            encoder: EncoderChoice::Auto,
+            lossless: LosslessStage::Zstd,
+            granularity: CodecGranularity::Chunk,
+        },
+    ]
+}
+
+/// Run one (field, eb mode, codec) cell and assert the conformance
+/// contract: bound respected, PSNR well-defined, metadata consistent.
+fn check_cell(field: &Field, eb: ErrorBound, codec: CodecSpec) {
+    let coord = Coordinator::new(CuszConfig {
+        backend: BackendKind::Cpu,
+        eb,
+        codec,
+        ..Default::default()
+    })
+    .unwrap();
+    let (archive, stats) = coord.compress_with_stats(field).unwrap();
+    // decode through serialized bytes, like every real consumer
+    let restored = Archive::from_bytes(&archive.to_bytes()).unwrap();
+    let out = coord.decompress(&restored).unwrap();
+    assert_eq!(out.dims, field.dims);
+
+    let abs_eb = archive.header.abs_eb;
+    let label = format!("{} {eb:?} {codec:?}", field.name);
+    // max abs error <= resolved absolute bound
+    if let Some(i) = metrics::verify_error_bound(&field.data, &out.data, abs_eb) {
+        panic!(
+            "{label}: bound violated at {i}: {} vs {} (abs_eb {abs_eb})",
+            field.data[i], out.data[i]
+        );
+    }
+    // valrel mode: the resolved bound must match eb × value range
+    if let ErrorBound::ValRel(rel) = eb {
+        let (lo, hi) = field.value_range();
+        let expect = (rel * (hi - lo) as f64) as f32;
+        assert!(
+            (abs_eb - expect).abs() <= expect * 1e-5 + f32::EPSILON,
+            "{label}: abs_eb {abs_eb} != {expect}"
+        );
+    }
+    // quality metrics are well-defined (PSNR is finite unless lossless)
+    let psnr = metrics::psnr(&field.data, &out.data);
+    let maxerr = metrics::max_abs_error(&field.data, &out.data);
+    assert!(
+        psnr.is_finite() || maxerr == 0.0,
+        "{label}: PSNR {psnr} with max err {maxerr}"
+    );
+    // max abs error respects the bound up to the documented f32 scaling
+    // slack (DESIGN.md §3, mirrored from metrics::verify_error_bound)
+    let max_abs = field.data.iter().fold(0f32, |a, &b| a.max(b.abs()));
+    let tol = abs_eb as f64 * (1.0 + 1e-6) + 4.0 * f32::EPSILON as f64 * max_abs as f64;
+    assert!(maxerr <= tol, "{label}: max err {maxerr} > tol {tol}");
+    // stats agree with the archive
+    assert_eq!(stats.encoder, archive.header.encoder, "{label}");
+    assert_eq!(
+        stats.chunk_counts.iter().sum::<usize>(),
+        archive.stream.chunks.len(),
+        "{label}"
+    );
+    if codec.granularity == CodecGranularity::Chunk && codec.encoder == EncoderChoice::Auto {
+        assert_eq!(archive.chunk_tags.len(), archive.stream.chunks.len(), "{label}");
+    } else {
+        assert!(archive.chunk_tags.is_empty(), "{label}");
+    }
+}
+
+#[test]
+fn every_profile_dims_ebmode_codec_cell_conforms() {
+    let fields = profile_fields();
+    for field in &fields {
+        for eb in [ErrorBound::Abs(1e-2), ErrorBound::ValRel(1e-3)] {
+            for codec in codecs() {
+                check_cell(field, eb, codec);
+            }
+        }
+    }
+}
+
+#[test]
+fn tight_bounds_conform_on_the_roughest_profile() {
+    // tight bounds maximize outlier-marker density — the regime that used
+    // to bias auto-selection (see codec::cost) and stresses the RLE
+    // marker escape
+    let mut rng = Rng::new(41);
+    let data = profiles::synthesize(Dataset::Hacc, "vx", &[30_000], &mut rng);
+    let field = Field::new("HACC/vx-tight", vec![30_000], data).unwrap();
+    for codec in codecs() {
+        check_cell(&field, ErrorBound::ValRel(1e-5), codec);
+    }
+}
+
+#[test]
+fn mixed_smoothness_field_conforms_and_uses_multiple_backends() {
+    // one field stitched from three regimes: the per-chunk auto target.
+    // 2D so slab gather order interleaves, plus enough length per regime
+    // that chunks stay regime-pure in the slab-major stream.
+    let mut rng = Rng::new(11);
+    let n = 96 * 96;
+    let mut data = Vec::with_capacity(n);
+    let mut acc = 0.0f32;
+    for i in 0..n {
+        match (i / 2304) % 3 {
+            0 => {
+                acc += rng.normal() * 0.01;
+                data.push(acc);
+            }
+            1 => data.push(rng.normal() * 5.0),
+            _ => data.push(0.0),
+        }
+    }
+    let field = Field::new("mixed", vec![96, 96], data).unwrap();
+    let codec = CodecSpec {
+        encoder: EncoderChoice::Auto,
+        lossless: LosslessStage::None,
+        granularity: CodecGranularity::Chunk,
+    };
+    check_cell(&field, ErrorBound::Abs(5e-3), codec);
+    let coord = Coordinator::new(CuszConfig {
+        backend: BackendKind::Cpu,
+        eb: ErrorBound::Abs(5e-3),
+        codec,
+        ..Default::default()
+    })
+    .unwrap();
+    let (archive, stats) = coord.compress_with_stats(&field).unwrap();
+    let used = stats.chunk_counts.iter().filter(|&&c| c > 0).count();
+    assert!(
+        used >= 2,
+        "mixed-regime field should split across backends: {:?}",
+        stats.chunk_counts
+    );
+    assert_eq!(archive.header.granularity, CodecGranularity::Chunk);
+}

@@ -1,0 +1,306 @@
+#!/usr/bin/env python3
+"""Golden-fixture generator for the archive-format compatibility corpus.
+
+Emits byte-exact legacy archives (CUSZA1 = format version 0, CUSZA2 =
+format version 1) plus a `.cuszb` bundle containing them, together with
+the exact f32 field each archive decodes to. `tests/format_compat.rs`
+decodes every fixture with the current code and compares byte-for-byte —
+so a format bump that would orphan old payloads fails CI instead of
+shipping.
+
+The payloads are built from first principles (bit-level mirrors of the
+canonical-Huffman and FLE chunk codecs, the container framing, and the
+store index), not by running an old binary: the fixture field is chosen
+so the decode path — per-block prefix sums of the quant deltas times
+2·eb — is exact in f32 arithmetic, which makes the expected output
+reproducible from this script alone.
+
+Regenerate with:  python3 rust/tests/fixtures/make_fixtures.py
+(The committed binaries are canonical; regeneration must be a no-op.)
+"""
+
+import gzip
+import os
+import struct
+import zlib
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+MASK64 = (1 << 64) - 1
+
+N = 65536            # dims [65536] -> one 1d_64k slab, no padding
+DICT = 1024
+RADIUS = 512
+CHUNK = 4096         # 16 chunks
+ABS_EB = 0.03125     # 2*eb = 0.0625 = 2^-4: exact f32 scaling
+
+
+# ---------- bit-level mirror of util/bitio.rs (LSB-first) ----------
+
+class BitWriter:
+    def __init__(self):
+        self.words, self.acc, self.fill, self.len_bits = [], 0, 0, 0
+
+    def write(self, value, n):
+        if n == 0:
+            return
+        value &= (1 << n) - 1
+        self.acc = (self.acc | (value << self.fill)) & MASK64
+        used = 64 - self.fill
+        if n >= used:
+            self.words.append(self.acc)
+            self.acc = 0 if used == 64 else (value >> used)
+            self.fill = n - used
+        else:
+            self.fill += n
+        self.len_bits += n
+
+    def finish(self):
+        if self.fill > 0:
+            self.words.append(self.acc)
+        return self.words, self.len_bits
+
+
+def rev_bits(v, n):
+    out = 0
+    for _ in range(n):
+        out = (out << 1) | (v & 1)
+        v >>= 1
+    return out
+
+
+# ---------- the fixture field: quant codes + side channels ----------
+
+def lcg_stream(seed):
+    state = seed
+    while True:
+        state = (state * 6364136223846793005 + 1442695040888963407) & MASK64
+        yield (state >> 33) & 0x7FFFFFFF
+
+
+def build_codes():
+    rng = lcg_stream(2020)
+    codes = []
+    for i in range(N):
+        if i % 977 == 0:
+            codes.append(0)  # outlier marker
+        elif i < 20000:
+            codes.append(512 + (i % 7) - 3)
+        elif i < 40000:
+            codes.append(512)  # constant stretch
+        else:
+            codes.append(512 + (next(rng) % 31) - 15)
+    return codes
+
+
+def build_side_channels():
+    # exact deltas for every other marker slot (the rest decode as 0)
+    outliers = []
+    for i in range(0, N, 977):
+        if (i // 977) % 2 == 0:
+            outliers.append((i, 1500 - (i % 3001)))
+    verbatim = [(100, 3.5), (33333, -1.25e30), (65000, 0.015625)]
+    return outliers, verbatim
+
+
+def expected_field(codes, outliers, verbatim):
+    deltas = [c - RADIUS if c != 0 else 0 for c in codes]
+    for pos, d in outliers:
+        deltas[pos] = d
+    out = []
+    for b in range(0, N, 32):  # 1D lorenzo inverse: prefix sum per block
+        acc = 0
+        for i in range(32):
+            acc += deltas[b + i]
+            assert abs(acc) < (1 << 20)
+            out.append(acc * (2.0 * ABS_EB))
+    raw = bytearray()
+    for v in out:
+        raw += struct.pack("<f", v)
+    for pos, v in verbatim:
+        raw[pos * 4:pos * 4 + 4] = struct.pack("<f", v)
+    return bytes(raw)
+
+
+# ---------- symbol encoders (mirrors of the Rust chunk codecs) ----------
+
+def huffman_chunks(codes):
+    """All-1024-symbols-at-length-10 canonical codebook: codeword of
+    symbol s is s itself, emitted bit-reversed LSB-first (codebook.rs)."""
+    chunks = []
+    for lo in range(0, N, CHUNK):
+        w = BitWriter()
+        for s in codes[lo:lo + CHUNK]:
+            w.write(rev_bits(s, 10), 10)
+        words, bits = w.finish()
+        chunks.append((words, bits, CHUNK))
+    return bytes([10] * DICT), chunks
+
+
+def transform(s):
+    if s == 0:
+        return 0
+    d = s - RADIUS
+    z = (d << 1) if d >= 0 else ((-d << 1) - 1)
+    return z + 1
+
+
+def fle_chunks(codes):
+    aux = bytearray()
+    chunks = []
+    for lo in range(0, N, CHUNK):
+        seg = codes[lo:lo + CHUNK]
+        ngroups = (len(seg) + 63) // 64
+        planes = [[0] * 17 for _ in range(ngroups)]
+        allv = 0
+        for g in range(ngroups):
+            for i, s in enumerate(seg[g * 64:(g + 1) * 64]):
+                v = transform(s)
+                allv |= v
+                while v:
+                    b = (v & -v).bit_length() - 1
+                    planes[g][b] |= 1 << i
+                    v &= v - 1
+        wbits = allv.bit_length()
+        w = BitWriter()
+        rem = len(seg)
+        for p in planes:
+            gl = min(rem, 64)
+            for b in range(wbits):
+                w.write(p[b], gl)
+            rem -= gl
+        words, bits = w.finish()
+        assert bits == len(seg) * wbits
+        aux.append(wbits)
+        chunks.append((words, bits, len(seg)))
+    return bytes(aux), chunks
+
+
+# ---------- container framing (mirror of container/{bytes,header,mod}.rs) ----------
+
+def section(payload):
+    return struct.pack("<QI", len(payload), zlib.crc32(payload) & 0xFFFFFFFF) + payload
+
+
+def pstr(s):
+    b = s.encode()
+    return struct.pack("<I", len(b)) + b
+
+
+def header_bytes(version, encoder_tag, name, eb_mode, eb_value, repr_bits, lossless_tag):
+    h = b""
+    if version >= 1:
+        h += struct.pack("<BB", version, encoder_tag)
+    h += pstr(name)
+    h += struct.pack("<I", 1) + struct.pack("<Q", N)      # dims
+    h += pstr("1d_64k")                                    # variant
+    h += struct.pack("<B", eb_mode) + struct.pack("<d", eb_value)
+    h += struct.pack("<f", ABS_EB)
+    h += struct.pack("<III", DICT, CHUNK, repr_bits)
+    h += struct.pack("<B", lossless_tag)
+    h += struct.pack("<Q", 1)                              # n_slabs
+    return h
+
+
+def body_bytes(aux, chunks, outliers, verbatim):
+    b = struct.pack("<I", len(aux)) + aux
+    b += struct.pack("<II", len(chunks), CHUNK)
+    for words, bits, symbols in chunks:
+        b += struct.pack("<QII", bits, symbols, len(words))
+        for w in words:
+            b += struct.pack("<Q", w)
+    b += struct.pack("<Q", len(outliers))
+    for pos, d in outliers:
+        b += struct.pack("<Qi", pos, d)
+    b += struct.pack("<Q", len(verbatim))
+    for pos, v in verbatim:
+        b += struct.pack("<Qf", pos, v)
+    return b
+
+
+def archive_bytes(magic, header, body, gzip_body=False):
+    if gzip_body:
+        body = gzip.compress(body, mtime=0)
+    return magic + section(header) + section(body)
+
+
+# ---------- .cuszb bundle (mirror of store/{index,mod}.rs) ----------
+
+def bundle(dirname, entries):
+    os.makedirs(dirname, exist_ok=True)
+    shard = b"CUSZS1\x00\x00"
+    index_entries = []
+    for name, payload, header in entries:
+        offset = len(shard)
+        shard += payload
+        index_entries.append((name, 0, offset, len(payload),
+                              zlib.crc32(payload) & 0xFFFFFFFF,
+                              zlib.crc32(header) & 0xFFFFFFFF))
+    with open(os.path.join(dirname, "shard-0000.cuszs"), "wb") as f:
+        f.write(shard)
+    body = struct.pack("<IQ", 1, len(index_entries))
+    for name, sh, off, ln, pcrc, hcrc in index_entries:
+        body += pstr(name)
+        body += struct.pack("<IQQII", sh, off, ln, pcrc, hcrc)
+        body += struct.pack("<I", 1) + struct.pack("<Q", N)  # dims
+    with open(os.path.join(dirname, "index.cuszi"), "wb") as f:
+        f.write(b"CUSZB1\x00\x00" + struct.pack("<I", 1) + section(body))
+
+
+def main():
+    codes = build_codes()
+    outliers, verbatim = build_side_channels()
+    expected = expected_field(codes, outliers, verbatim)
+
+    os.makedirs(os.path.join(HERE, "expected"), exist_ok=True)
+    with open(os.path.join(HERE, "expected", "fixture_field.f32"), "wb") as f:
+        f.write(expected)
+
+    huff_aux, huff = huffman_chunks(codes)
+    fle_aux, fle = fle_chunks(codes)
+    body_huff = body_bytes(huff_aux, huff, outliers, verbatim)
+    body_fle = body_bytes(fle_aux, fle, outliers, verbatim)
+
+    # CUSZA1: pre-codec layout, implicit huffman, abs eb, no lossless
+    v0 = archive_bytes(
+        b"CUSZA1\x00\x00",
+        header_bytes(0, 0, "fixture/v0-huffman", 0, ABS_EB, 32, 0),
+        body_huff,
+    )
+    # CUSZA2: version-1 header, huffman tag, valrel eb mode, gzip body
+    v1_gz = archive_bytes(
+        b"CUSZA2\x00\x00",
+        header_bytes(1, 0, "fixture/v1-huffman-gzip", 1, 1e-3, 32, 1),
+        body_huff,
+        gzip_body=True,
+    )
+    # CUSZA2: version-1 header, FLE tag, abs eb, no lossless
+    v1_fle = archive_bytes(
+        b"CUSZA2\x00\x00",
+        header_bytes(1, 1, "fixture/v1-fle", 0, ABS_EB, max(fle_aux), 0),
+        body_fle,
+    )
+
+    for name, data in [
+        ("v0_huffman_none.cusza", v0),
+        ("v1_huffman_gzip.cusza", v1_gz),
+        ("v1_fle_none.cusza", v1_fle),
+    ]:
+        with open(os.path.join(HERE, name), "wb") as f:
+            f.write(data)
+        print(f"{name}: {len(data)} bytes")
+
+    bundle(
+        os.path.join(HERE, "bundle_v1.cuszb"),
+        [
+            ("fixture/v0-huffman", v0,
+             header_bytes(0, 0, "fixture/v0-huffman", 0, ABS_EB, 32, 0)),
+            ("fixture/v1-fle", v1_fle,
+             header_bytes(1, 1, "fixture/v1-fle", 0, ABS_EB, max(fle_aux), 0)),
+        ],
+    )
+    print("bundle_v1.cuszb written")
+    print(f"expected field: {len(expected)} bytes, eb {ABS_EB}")
+
+
+if __name__ == "__main__":
+    main()

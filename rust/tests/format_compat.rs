@@ -1,0 +1,163 @@
+//! Golden-fixture compatibility corpus: pre-built `CUSZA1` (format
+//! version 0) and `CUSZA2` (format version 1) archives plus a `.cuszb`
+//! bundle, committed under `tests/fixtures/` with the exact f32 field
+//! each one decodes to (see `fixtures/make_fixtures.py` for provenance).
+//!
+//! Every fixture must keep decoding byte-for-byte under the current
+//! code, and the uncompressed ones must re-serialize to their original
+//! bytes — so a format bump (like this PR's `CUSZA3`) can never silently
+//! orphan old payloads. If one of these tests fails, the format change
+//! broke backward compatibility; fix the code, don't regenerate the
+//! fixtures.
+
+use std::path::PathBuf;
+
+use cusz::codec::{CodecGranularity, EncoderKind};
+use cusz::config::{BackendKind, CuszConfig, ErrorBound};
+use cusz::container::Archive;
+use cusz::coordinator::Coordinator;
+use cusz::metrics;
+use cusz::store::Store;
+
+fn fixture_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name)
+}
+
+fn expected_field() -> Vec<f32> {
+    let bytes = std::fs::read(fixture_path("expected/fixture_field.f32")).unwrap();
+    assert_eq!(bytes.len() % 4, 0);
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+fn cpu_coordinator() -> Coordinator {
+    Coordinator::new(CuszConfig {
+        backend: BackendKind::Cpu,
+        eb: ErrorBound::Abs(0.03125),
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+/// Decode one fixture and hold it to the corpus contract: parses, decodes
+/// bit-for-bit to the committed field, and respects its recorded bound.
+fn check_fixture(
+    name: &str,
+    version: u8,
+    encoder: EncoderKind,
+    expect_byte_stable: bool,
+) -> Archive {
+    let bytes = std::fs::read(fixture_path(name)).unwrap();
+    let archive = Archive::from_bytes(&bytes)
+        .unwrap_or_else(|e| panic!("{name}: no longer parses: {e:#}"));
+    assert_eq!(archive.header.version, version, "{name}");
+    assert_eq!(archive.header.encoder, encoder, "{name}");
+    assert_eq!(archive.header.granularity, CodecGranularity::Field, "{name}");
+    assert!(archive.chunk_tags.is_empty(), "{name}: legacy archives have no tag table");
+    assert_eq!(Archive::peek_header(&bytes).unwrap(), archive.header, "{name}");
+
+    let expected = expected_field();
+    let coord = cpu_coordinator();
+    let out = coord
+        .decompress(&archive)
+        .unwrap_or_else(|e| panic!("{name}: no longer decodes: {e:#}"));
+    assert_eq!(out.dims, vec![65536], "{name}");
+    // byte-for-byte: legacy payloads must reconstruct the exact field
+    // they always did, not merely something within the bound
+    let out_bits: Vec<u32> = out.data.iter().map(|v| v.to_bits()).collect();
+    let exp_bits: Vec<u32> = expected.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(out_bits, exp_bits, "{name}: decoded field drifted");
+    // and the recorded error bound holds against the committed original
+    assert_eq!(
+        metrics::verify_error_bound(&expected, &out.data, archive.header.abs_eb),
+        None,
+        "{name}"
+    );
+
+    if expect_byte_stable {
+        // uncompressed legacy payloads must also re-serialize unchanged
+        // (their on-disk digests — e.g. store payload CRCs — depend on it)
+        assert_eq!(archive.to_bytes(), bytes, "{name}: re-serialization drifted");
+    }
+    archive
+}
+
+#[test]
+fn v0_huffman_fixture_decodes() {
+    let a = check_fixture("v0_huffman_none.cusza", 0, EncoderKind::Huffman, true);
+    assert_eq!(a.header.field_name, "fixture/v0-huffman");
+    assert_eq!(a.header.eb, ErrorBound::Abs(0.03125));
+    assert_eq!(a.outliers.len(), 34);
+    assert_eq!(a.verbatim.len(), 3);
+}
+
+#[test]
+fn v1_huffman_gzip_fixture_decodes() {
+    // gzip bodies are not byte-stable across deflate implementations, so
+    // only the decode direction is pinned for this one
+    let a = check_fixture("v1_huffman_gzip.cusza", 1, EncoderKind::Huffman, false);
+    assert_eq!(a.header.field_name, "fixture/v1-huffman-gzip");
+    assert_eq!(a.header.eb, ErrorBound::ValRel(1e-3));
+}
+
+#[test]
+fn v1_fle_fixture_decodes() {
+    let a = check_fixture("v1_fle_none.cusza", 1, EncoderKind::Fle, true);
+    assert_eq!(a.header.field_name, "fixture/v1-fle");
+    // FLE sidecar: one width byte per chunk
+    assert_eq!(a.encoder_aux.len(), a.stream.chunks.len());
+}
+
+#[test]
+fn all_fixture_archives_decode_to_the_same_field() {
+    // three encodings of one field: their symbol streams must agree
+    let coord = cpu_coordinator();
+    let mut decoded = Vec::new();
+    for name in ["v0_huffman_none.cusza", "v1_huffman_gzip.cusza", "v1_fle_none.cusza"] {
+        let archive = Archive::from_bytes(&std::fs::read(fixture_path(name)).unwrap()).unwrap();
+        decoded.push(coord.decompress(&archive).unwrap().data);
+    }
+    let bits = |v: &Vec<f32>| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+    assert_eq!(bits(&decoded[0]), bits(&decoded[1]));
+    assert_eq!(bits(&decoded[0]), bits(&decoded[2]));
+}
+
+#[test]
+fn legacy_bundle_opens_and_decodes() {
+    let store = Store::open(fixture_path("bundle_v1.cuszb")).unwrap();
+    assert_eq!(store.len(), 2);
+    store.verify().unwrap();
+    let expected = expected_field();
+    let coord = cpu_coordinator();
+    for name in ["fixture/v0-huffman", "fixture/v1-fle"] {
+        let archive = store.get(name).unwrap();
+        let out = coord.decompress(&archive).unwrap();
+        assert_eq!(
+            metrics::verify_error_bound(&expected, &out.data, archive.header.abs_eb),
+            None,
+            "{name}"
+        );
+        let out_bits: Vec<u32> = out.data.iter().map(|v| v.to_bits()).collect();
+        let exp_bits: Vec<u32> = expected.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(out_bits, exp_bits, "{name}");
+    }
+}
+
+#[test]
+fn current_writer_emits_cusza3_while_fixtures_stay_readable() {
+    // one coordinator handles both generations: fresh archives carry the
+    // new magic, fixtures keep decoding beside them
+    let coord = cpu_coordinator();
+    let expected = expected_field();
+    let field = cusz::field::Field::new("fresh", vec![65536], expected).unwrap();
+    let fresh = coord.compress(&field).unwrap();
+    let bytes = fresh.to_bytes();
+    assert_eq!(&bytes[..8], cusz::container::MAGIC);
+    assert_eq!(fresh.header.version, cusz::container::FORMAT_VERSION);
+    let old = Archive::from_bytes(&std::fs::read(fixture_path("v0_huffman_none.cusza")).unwrap())
+        .unwrap();
+    coord.decompress(&old).unwrap();
+    coord.decompress(&Archive::from_bytes(&bytes).unwrap()).unwrap();
+}

@@ -104,7 +104,7 @@ fn prop_huffman_roundtrip_random_distributions() {
 
 #[test]
 fn prop_versioned_header_roundtrip_and_tag_rejection() {
-    use cusz::codec::EncoderKind;
+    use cusz::codec::{CodecGranularity, EncoderKind};
     use cusz::container::{Header, LosslessTag, FORMAT_VERSION};
 
     check("versioned header roundtrips; unknown tags/versions rejected", |rng| {
@@ -113,6 +113,7 @@ fn prop_versioned_header_roundtrip_and_tag_rejection() {
         let h = Header {
             version: FORMAT_VERSION,
             encoder: *gen::pick(rng, &EncoderKind::ALL),
+            granularity: *gen::pick(rng, &[CodecGranularity::Field, CodecGranularity::Chunk]),
             field_name: format!("f{}", gen::usize_in(rng, 0, 9999)),
             dims,
             variant: "2d_256".into(),
@@ -138,6 +139,7 @@ fn prop_versioned_header_roundtrip_and_tag_rejection() {
         let mut h0 = h.clone();
         h0.version = 0;
         h0.encoder = EncoderKind::Huffman;
+        h0.granularity = CodecGranularity::Field;
         let back0 = Header::from_bytes_v0(&h0.to_bytes()).map_err(|e| e.to_string())?;
         if back0 != h0 {
             return Err("v0 roundtrip mismatch".into());
@@ -145,9 +147,16 @@ fn prop_versioned_header_roundtrip_and_tag_rejection() {
 
         // unknown encoder tag: rejected without panic
         let mut bad = bytes.clone();
-        bad[1] = 2 + rng.below(254) as u8;
+        bad[1] = 3 + rng.below(253) as u8;
         if Header::from_bytes(&bad).is_ok() {
             return Err(format!("unknown encoder tag {} accepted", bad[1]));
+        }
+
+        // unknown granularity tag: rejected without panic
+        let mut bad = bytes.clone();
+        bad[2] = 2 + rng.below(254) as u8;
+        if Header::from_bytes(&bad).is_ok() {
+            return Err(format!("unknown granularity tag {} accepted", bad[2]));
         }
 
         // future format version: rejected without panic
@@ -230,6 +239,124 @@ fn prop_archive_rejects_truncation_and_bitflips() {
         flipped[pos] ^= 1 << bit;
         if cusz::container::Archive::from_bytes(&flipped).is_ok() {
             return Err(format!("bit flip at {pos}:{bit} parsed"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_chunk_tag_and_sidecar_corruption_fails_cleanly() {
+    use cusz::codec::{CodecGranularity, CodecSpec, EncoderChoice};
+    use cusz::container::Archive;
+
+    // one coordinator for every case: per-chunk auto over a field that
+    // stitches constant, smooth, and noisy segments, so archives carry a
+    // real mixed tag table (rle + huffman/fle chunks)
+    let coord = Coordinator::new(CuszConfig {
+        backend: BackendKind::Cpu,
+        eb: ErrorBound::Abs(1e-2),
+        codec: CodecSpec {
+            encoder: EncoderChoice::Auto,
+            granularity: CodecGranularity::Chunk,
+            ..Default::default()
+        },
+        ..Default::default()
+    })
+    .unwrap();
+
+    check("per-chunk tag/sidecar corruption errors, never panics", |rng| {
+        let n = 1 << 16; // one 1d_64k slab = 16 chunks
+        let mut data = Vec::with_capacity(n);
+        let mut acc = 0f32;
+        let seg = gen::usize_in(rng, 3000, 9000);
+        for i in 0..n {
+            match (i / seg) % 3 {
+                0 => data.push(0.0),
+                1 => {
+                    acc += rng.normal() * 0.01;
+                    data.push(acc);
+                }
+                _ => data.push(rng.normal() * 3.0),
+            }
+        }
+        let field = Field::new("prop-mixed", vec![n], data).unwrap();
+        let archive = coord.compress(&field).map_err(|e| e.to_string())?;
+        if archive.chunk_tags.is_empty() {
+            return Err("per-chunk auto produced no tag table".into());
+        }
+        // sanity: the untouched archive decodes
+        coord.decompress(&archive).map_err(|e| e.to_string())?;
+
+        // structural mutations that bypass the CRCs (a hostile writer can
+        // produce internally-consistent sections): decompress must error
+        // without panicking and without allocating for inflated counts
+        let mut a = archive.clone();
+        let which = rng.below(6);
+        let applied = match which {
+            0 => {
+                a.chunk_tags.pop();
+                a.chunk_aux.pop();
+                true
+            }
+            1 => {
+                let i = gen::usize_in(rng, 0, a.chunk_tags.len() - 1);
+                a.chunk_tags[i] = 3 + rng.below(253) as u8;
+                true
+            }
+            2 => {
+                // retag a chunk with a different (valid) backend: the
+                // sidecar record length no longer matches
+                let i = gen::usize_in(rng, 0, a.chunk_tags.len() - 1);
+                match a.chunk_tags.iter().position(|&t| t != a.chunk_tags[i]) {
+                    Some(j) => {
+                        let t = a.chunk_tags[i];
+                        a.chunk_tags[i] = a.chunk_tags[j];
+                        a.chunk_tags[j] = t;
+                        true
+                    }
+                    None => false,
+                }
+            }
+            3 => {
+                // blow past the RLE/FLE width ceilings
+                match a.chunk_aux.iter().position(|r| !r.is_empty()) {
+                    Some(i) => {
+                        for b in a.chunk_aux[i].iter_mut() {
+                            *b = 255;
+                        }
+                        true
+                    }
+                    None => false,
+                }
+            }
+            4 => {
+                // inflate a chunk's claimed symbol count: must be
+                // rejected before any allocation matches it
+                let i = gen::usize_in(rng, 0, a.stream.chunks.len() - 1);
+                a.stream.chunks[i].symbols = u32::MAX;
+                true
+            }
+            _ => {
+                // truncate an RLE/FLE sidecar record
+                match a.chunk_aux.iter().position(|r| !r.is_empty()) {
+                    Some(i) => {
+                        a.chunk_aux[i].pop();
+                        true
+                    }
+                    None => false,
+                }
+            }
+        };
+        if applied && coord.decompress(&a).is_ok() {
+            return Err(format!("mutation {which} decoded successfully"));
+        }
+
+        // and the byte path: a truncated or retagged table must not parse
+        let mut b = archive.clone();
+        b.chunk_tags.pop();
+        b.chunk_aux.pop();
+        if Archive::from_bytes(&b.to_bytes()).is_ok() {
+            return Err("truncated tag table parsed from bytes".into());
         }
         Ok(())
     });
