@@ -230,13 +230,14 @@ fn main() {
         oracle_bytes += hcost.min(fcost).min(rcost);
     }
 
-    let chunked = codec::chunked::encode_chunked(&mixed, &ctx, &model).unwrap();
+    let mixed_src = codec::SymbolSource::from_slice(&mixed);
+    let chunked = codec::chunked::encode_chunked(&mixed_src, &ctx, &model).unwrap();
     let chunked_bytes = chunked.stream.payload_bytes()
         + chunked.shared_aux.len()
         + chunked.chunk_aux.iter().map(|a| a.len()).sum::<usize>()
         + chunked.tags.len();
     let bench_chunked = bench.run("mixed per-chunk auto enc", bytes, || {
-        let out = codec::chunked::encode_chunked(&mixed, &ctx, &model).unwrap();
+        let out = codec::chunked::encode_chunked(&mixed_src, &ctx, &model).unwrap();
         std::hint::black_box(out.stream.total_bits());
     });
 

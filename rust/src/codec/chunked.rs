@@ -18,7 +18,7 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use super::cost::{self, CostModel};
-use super::{fle, rle, EncodeContext, EncoderKind};
+use super::{fle, rle, EncodeContext, EncoderKind, SymbolSource};
 use crate::huffman::{self, CanonicalCodebook, ReverseCodebook};
 use crate::huffman::deflate::{DeflatedChunk, DeflatedStream};
 use crate::util::pool::parallel_map_range;
@@ -42,9 +42,12 @@ pub struct ChunkedEncoded {
     pub codebook_time: std::time::Duration,
 }
 
-/// Encode `symbols` choosing the cheapest backend per chunk.
+/// Encode a symbol stream choosing the cheapest backend per chunk.
+/// Chunk windows are pulled straight out of the per-slab source (stitch
+/// buffers loaned from the thread-local arena when a window straddles a
+/// slab boundary) — no field-wide flatten.
 pub fn encode_chunked(
-    symbols: &[u16],
+    src: &SymbolSource<'_>,
     ctx: &EncodeContext,
     model: &CostModel,
 ) -> Result<ChunkedEncoded> {
@@ -64,12 +67,8 @@ pub fn encode_chunked(
 
     let radius = (ctx.dict_size / 2) as i32;
     let cs = ctx.chunk_symbols.max(1);
-    let nchunks = symbols.len().div_ceil(cs);
     let parts: Vec<(EncoderKind, Vec<u8>, DeflatedChunk)> =
-        parallel_map_range(ctx.threads, nchunks, |ci| {
-            let lo = ci * cs;
-            let hi = (lo + cs).min(symbols.len());
-            let chunk = &symbols[lo..hi];
+        src.map_chunks(cs, ctx.threads, |_, chunk| {
             let probe = cost::probe_chunk(chunk, &lengths, radius);
             match model.select_chunk(&probe) {
                 EncoderKind::Huffman => (
@@ -88,6 +87,7 @@ pub fn encode_chunked(
             }
         });
 
+    let nchunks = parts.len();
     let mut tags = Vec::with_capacity(nchunks);
     let mut chunk_aux = Vec::with_capacity(nchunks);
     let mut chunks = Vec::with_capacity(nchunks);
@@ -245,7 +245,12 @@ mod tests {
         for &s in &symbols {
             freq[s as usize] += 1;
         }
-        let enc = encode_chunked(&symbols, &ctx(&freq, cs), &CostModel::MEASURED).unwrap();
+        let enc = encode_chunked(
+            &SymbolSource::from_slice(&symbols),
+            &ctx(&freq, cs),
+            &CostModel::MEASURED,
+        )
+        .unwrap();
         (symbols, enc)
     }
 
@@ -304,11 +309,52 @@ mod tests {
         c1.threads = 1;
         let mut c8 = ctx(&freq, 1000);
         c8.threads = 8;
-        let a = encode_chunked(&symbols, &c1, &CostModel::MEASURED).unwrap();
-        let b = encode_chunked(&symbols, &c8, &CostModel::MEASURED).unwrap();
+        let src = SymbolSource::from_slice(&symbols);
+        let a = encode_chunked(&src, &c1, &CostModel::MEASURED).unwrap();
+        let b = encode_chunked(&src, &c8, &CostModel::MEASURED).unwrap();
         assert_eq!(a.tags, b.tags);
         assert_eq!(a.chunk_aux, b.chunk_aux);
         assert_eq!(a.stream, b.stream);
+    }
+
+    /// The zero-copy multi-slab source must encode byte-identically to
+    /// the old flatten-then-encode path, including when chunk windows
+    /// straddle slab boundaries (chunk size not dividing the slab len).
+    #[test]
+    fn slab_source_matches_flattened_encode() {
+        let symbols = mixed_symbols(9, 1500, 11); // 13_500 symbols
+        let slab_len = 2700;
+        let slabs: Vec<&[u16]> = symbols.chunks(slab_len).collect();
+        let src = SymbolSource::from_slabs(slabs, slab_len).unwrap();
+        let mut freq = vec![0u64; 1024];
+        for &s in &symbols {
+            freq[s as usize] += 1;
+        }
+        // chunk 1000 straddles every slab boundary; threads > 1 exercises
+        // the arena stitch buffers across workers
+        let c = ctx(&freq, 1000);
+        let from_slabs = encode_chunked(&src, &c, &CostModel::MEASURED).unwrap();
+        let flat = encode_chunked(
+            &SymbolSource::from_slice(&symbols),
+            &c,
+            &CostModel::MEASURED,
+        )
+        .unwrap();
+        assert_eq!(from_slabs.tags, flat.tags);
+        assert_eq!(from_slabs.chunk_aux, flat.chunk_aux);
+        assert_eq!(from_slabs.stream, flat.stream);
+        assert_eq!(from_slabs.shared_aux, flat.shared_aux);
+        let out = decode_chunked(
+            &from_slabs.tags,
+            &from_slabs.shared_aux,
+            &from_slabs.chunk_aux,
+            &from_slabs.stream,
+            1024,
+            4,
+            symbols.len(),
+        )
+        .unwrap();
+        assert_eq!(out, symbols);
     }
 
     #[test]

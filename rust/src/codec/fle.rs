@@ -18,7 +18,7 @@
 
 use anyhow::{bail, Result};
 
-use super::{EncodeContext, EncodedSymbols, EncoderKind, EncoderStage};
+use super::{EncodeContext, EncodedSymbols, EncoderKind, EncoderStage, SymbolSource};
 use crate::huffman::deflate::{DeflatedChunk, DeflatedStream};
 use crate::util::bitio::{BitReader, BitWriter};
 use crate::util::pool::parallel_map_range;
@@ -169,15 +169,16 @@ impl EncoderStage for FleStage {
         EncoderKind::Fle
     }
 
-    fn encode(&self, symbols: &[u16], ctx: &EncodeContext) -> Result<EncodedSymbols> {
+    fn encode_source(
+        &self,
+        src: &SymbolSource<'_>,
+        ctx: &EncodeContext,
+    ) -> Result<EncodedSymbols> {
         let radius = (ctx.dict_size / 2) as i32;
         let cs = ctx.chunk_symbols.max(1);
-        let nchunks = symbols.len().div_ceil(cs);
-        let encoded: Vec<(u8, DeflatedChunk)> = parallel_map_range(ctx.threads, nchunks, |ci| {
-            let lo = ci * cs;
-            let hi = (lo + cs).min(symbols.len());
-            encode_chunk(&symbols[lo..hi], radius)
-        });
+        let encoded: Vec<(u8, DeflatedChunk)> =
+            src.map_chunks(cs, ctx.threads, |_, chunk| encode_chunk(chunk, radius));
+        let nchunks = encoded.len();
         let mut aux = Vec::with_capacity(nchunks);
         let mut chunks = Vec::with_capacity(nchunks);
         let mut max_w = 0u32;

@@ -8,8 +8,9 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use super::{EncodeContext, EncodedSymbols, EncoderKind, EncoderStage};
+use super::{EncodeContext, EncodedSymbols, EncoderKind, EncoderStage, SymbolSource};
 use crate::config::CodewordRepr;
+use crate::huffman::deflate::{deflate_one, DeflatedStream};
 use crate::huffman::{self, CanonicalCodebook, ReverseCodebook};
 
 pub struct HuffmanStage;
@@ -19,7 +20,11 @@ impl EncoderStage for HuffmanStage {
         EncoderKind::Huffman
     }
 
-    fn encode(&self, symbols: &[u16], ctx: &EncodeContext) -> Result<EncodedSymbols> {
+    fn encode_source(
+        &self,
+        src: &SymbolSource<'_>,
+        ctx: &EncodeContext,
+    ) -> Result<EncodedSymbols> {
         if ctx.freq.len() != ctx.dict_size {
             bail!(
                 "histogram has {} bins for dict size {}",
@@ -36,7 +41,9 @@ impl EncoderStage for HuffmanStage {
             CodewordRepr::U64 => 64,
             CodewordRepr::Adaptive => book.repr_bits(),
         };
-        let stream = huffman::deflate_chunks(symbols, &book, ctx.chunk_symbols, ctx.threads);
+        let cs = ctx.chunk_symbols.max(1);
+        let chunks = src.map_chunks(cs, ctx.threads, |_, chunk| deflate_one(chunk, &book));
+        let stream = DeflatedStream { chunks, chunk_symbols: cs };
         Ok(EncodedSymbols { aux: lengths, stream, repr_bits, codebook_time })
     }
 

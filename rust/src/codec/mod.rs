@@ -31,6 +31,7 @@ pub mod cost;
 pub mod fle;
 pub mod huffman_stage;
 pub mod rle;
+pub mod source;
 
 use anyhow::{bail, Result};
 
@@ -41,6 +42,7 @@ pub use cost::CostModel;
 pub use fle::FleStage;
 pub use huffman_stage::HuffmanStage;
 pub use rle::RleStage;
+pub use source::SymbolSource;
 
 /// Concrete encoder backends — the domain of the archive header's encoder
 /// tag and of the `CUSZA3` per-chunk tag table. Adding a backend means a
@@ -206,7 +208,18 @@ pub struct EncodedSymbols {
 pub trait EncoderStage: Send + Sync {
     fn kind(&self) -> EncoderKind;
 
-    fn encode(&self, symbols: &[u16], ctx: &EncodeContext) -> Result<EncodedSymbols>;
+    /// Encode a (possibly multi-slab) symbol stream. Backends pull chunk
+    /// windows straight out of the source — no field-wide flatten — and
+    /// stitch boundary-straddling windows through an arena-loaned buffer.
+    fn encode_source(&self, src: &SymbolSource<'_>, ctx: &EncodeContext)
+        -> Result<EncodedSymbols>;
+
+    /// Slice adapter for callers that already hold one contiguous
+    /// buffer (tests, benches): identical output to
+    /// [`EncoderStage::encode_source`] over `from_slice`.
+    fn encode(&self, symbols: &[u16], ctx: &EncodeContext) -> Result<EncodedSymbols> {
+        self.encode_source(&SymbolSource::from_slice(symbols), ctx)
+    }
 
     /// Inverse of [`EncoderStage::encode`]. `aux` and `stream` come from an
     /// untrusted archive: implementations must error (never panic) on
@@ -376,6 +389,49 @@ mod tests {
     fn stages_report_their_kind() {
         for k in EncoderKind::ALL {
             assert_eq!(stage_for(k).kind(), k);
+        }
+    }
+
+    /// Every backend must produce identical output whether it reads one
+    /// contiguous buffer or pulls windows out of a multi-slab source —
+    /// including chunk windows that straddle slab boundaries.
+    #[test]
+    fn slab_source_encode_matches_slice_encode_for_every_stage() {
+        use crate::config::CodewordRepr;
+        use crate::util::prng::Rng;
+        let dict = 1024usize;
+        let mut rng = Rng::new(31);
+        let symbols: Vec<u16> = (0..12_000)
+            .map(|i| {
+                if i % 5 == 0 {
+                    512 // runs for RLE
+                } else {
+                    ((rng.normal() * 20.0) as i32 + 512).clamp(0, dict as i32 - 1) as u16
+                }
+            })
+            .collect();
+        let mut freq = vec![0u64; dict];
+        for &s in &symbols {
+            freq[s as usize] += 1;
+        }
+        let slab_len = 3000; // 4 slabs; chunk 1300 straddles boundaries
+        let slabs: Vec<&[u16]> = symbols.chunks(slab_len).collect();
+        let src = SymbolSource::from_slabs(slabs, slab_len).unwrap();
+        let ctx = EncodeContext {
+            dict_size: dict,
+            chunk_symbols: 1300,
+            threads: 4,
+            codeword_repr: CodewordRepr::Adaptive,
+            freq: &freq,
+        };
+        for k in EncoderKind::ALL {
+            let stage = stage_for(k);
+            let a = stage.encode_source(&src, &ctx).unwrap();
+            let b = stage.encode(&symbols, &ctx).unwrap();
+            assert_eq!(a.aux, b.aux, "{}", k.name());
+            assert_eq!(a.stream, b.stream, "{}", k.name());
+            let out = stage.decode(&a.aux, &a.stream, dict, 4, symbols.len()).unwrap();
+            assert_eq!(out, symbols, "{}", k.name());
         }
     }
 }

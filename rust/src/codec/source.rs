@@ -1,0 +1,213 @@
+//! [`SymbolSource`]: a zero-copy view over the per-slab quant-code
+//! vectors, replacing the old phase-C flatten that copied every slab's
+//! codes into one field-wide `Vec<u16>` before encoding.
+//!
+//! The encoder stages consume the symbol stream chunk by chunk, and the
+//! stream is just the slab-major concatenation of the per-slab `codes`
+//! vectors (every slab is padded to the same `slab_len`). So instead of
+//! materializing that concatenation, the stages pull chunk windows
+//! straight out of the slabs: a window that lies inside one slab is a
+//! plain subslice (the common case — the default chunk size divides the
+//! built-in slab lengths), and a window that straddles a slab boundary is
+//! stitched into a small caller-provided buffer (loaned from the
+//! thread-local [`crate::util::arena`] in the hot path). Either way each
+//! symbol is read exactly once by the encoder instead of once for the
+//! flatten plus once for the encode.
+
+use anyhow::{bail, Result};
+
+use crate::util::arena;
+use crate::util::pool::parallel_map_range;
+
+/// A borrowed, logically-contiguous u16 symbol stream backed by one or
+/// more equal-length slab slices.
+pub struct SymbolSource<'a> {
+    slabs: Vec<&'a [u16]>,
+    slab_len: usize,
+    total: usize,
+}
+
+impl<'a> SymbolSource<'a> {
+    /// View a single contiguous slice as a source (tests, benches, and
+    /// the default [`super::EncoderStage::encode`] adapter).
+    pub fn from_slice(symbols: &'a [u16]) -> SymbolSource<'a> {
+        SymbolSource {
+            total: symbols.len(),
+            slab_len: symbols.len().max(1),
+            slabs: vec![symbols],
+        }
+    }
+
+    /// View the slab-major concatenation of `slabs`, each of which must
+    /// be exactly `slab_len` symbols (the compressor pads every slab to
+    /// the spec length).
+    pub fn from_slabs(slabs: Vec<&'a [u16]>, slab_len: usize) -> Result<SymbolSource<'a>> {
+        if slab_len == 0 {
+            bail!("slab length must be positive");
+        }
+        for (i, s) in slabs.iter().enumerate() {
+            if s.len() != slab_len {
+                bail!("slab {i} has {} symbols, expected {slab_len}", s.len());
+            }
+        }
+        Ok(SymbolSource { total: slab_len * slabs.len(), slab_len, slabs })
+    }
+
+    /// Total symbols in the stream.
+    pub fn len(&self) -> usize {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Borrow the window `[lo, hi)` of the logical stream. Returns a
+    /// direct subslice when the window lies within one slab; otherwise
+    /// stitches the parts into `stitch` (cleared first) and returns it.
+    /// The caller hands in the stitch buffer so hot loops can reuse one
+    /// arena-loaned allocation across many chunks.
+    pub fn chunk<'s>(&'s self, lo: usize, hi: usize, stitch: &'s mut Vec<u16>) -> &'s [u16] {
+        assert!(lo <= hi && hi <= self.total, "window {lo}..{hi} outside 0..{}", self.total);
+        if lo == hi {
+            return &[];
+        }
+        let si = lo / self.slab_len;
+        let off = lo - si * self.slab_len;
+        if hi <= (si + 1) * self.slab_len {
+            return &self.slabs[si][off..off + (hi - lo)];
+        }
+        stitch.clear();
+        stitch.reserve(hi - lo);
+        let mut pos = lo;
+        while pos < hi {
+            let si = pos / self.slab_len;
+            let off = pos - si * self.slab_len;
+            let take = (self.slab_len - off).min(hi - pos);
+            stitch.extend_from_slice(&self.slabs[si][off..off + take]);
+            pos += take;
+        }
+        stitch
+    }
+
+    /// Run `f(chunk_index, window)` over every `chunk_symbols`-sized
+    /// window of the stream across `threads` workers, collecting results
+    /// in chunk order. This is THE chunk-windowing idiom every encoder
+    /// backend shares: windows inside one slab are zero-copy subslices,
+    /// windows straddling a slab boundary stitch through an arena-loaned
+    /// buffer reused across each worker's chunks.
+    pub fn map_chunks<R, F>(&self, chunk_symbols: usize, threads: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize, &[u16]) -> R + Sync,
+    {
+        let cs = chunk_symbols.max(1);
+        let nchunks = self.total.div_ceil(cs);
+        parallel_map_range(threads, nchunks, |ci| {
+            let lo = ci * cs;
+            let hi = (lo + cs).min(self.total);
+            arena::with_u16(|stitch| f(ci, self.chunk(lo, hi, stitch)))
+        })
+    }
+
+    /// Materialize the whole stream (diagnostics / compatibility shims —
+    /// the encode hot path never calls this).
+    pub fn to_vec(&self) -> Vec<u16> {
+        let mut out = Vec::with_capacity(self.total);
+        for s in &self.slabs {
+            out.extend_from_slice(s);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slabs3() -> Vec<Vec<u16>> {
+        (0..3u16)
+            .map(|s| (0..100u16).map(|i| s * 1000 + i).collect())
+            .collect()
+    }
+
+    #[test]
+    fn from_slabs_matches_flat_reference_for_every_window() {
+        let owned = slabs3();
+        let src =
+            SymbolSource::from_slabs(owned.iter().map(|v| v.as_slice()).collect(), 100).unwrap();
+        let flat: Vec<u16> = owned.iter().flatten().copied().collect();
+        assert_eq!(src.len(), 300);
+        assert_eq!(src.to_vec(), flat);
+        let mut stitch = Vec::new();
+        // windows chosen to hit: inside-slab, exact-slab, straddling one
+        // boundary, straddling both boundaries, empty, full
+        for (lo, hi) in [
+            (0, 0),
+            (0, 100),
+            (5, 37),
+            (100, 200),
+            (90, 110),
+            (95, 205),
+            (0, 300),
+            (299, 300),
+        ] {
+            assert_eq!(src.chunk(lo, hi, &mut stitch), &flat[lo..hi], "{lo}..{hi}");
+        }
+    }
+
+    #[test]
+    fn aligned_windows_are_zero_copy() {
+        let owned = slabs3();
+        let src =
+            SymbolSource::from_slabs(owned.iter().map(|v| v.as_slice()).collect(), 100).unwrap();
+        let mut stitch = Vec::new();
+        let w = src.chunk(100, 150, &mut stitch);
+        // a within-slab window must alias the slab storage, not the stitch
+        assert_eq!(w.as_ptr(), owned[1][0..].as_ptr());
+        assert!(stitch.is_empty(), "aligned window must not touch the stitch buffer");
+    }
+
+    #[test]
+    fn from_slice_covers_the_whole_slice() {
+        let v: Vec<u16> = (0..257).collect();
+        let src = SymbolSource::from_slice(&v);
+        assert_eq!(src.len(), 257);
+        let mut stitch = Vec::new();
+        assert_eq!(src.chunk(13, 250, &mut stitch), &v[13..250]);
+        let empty = SymbolSource::from_slice(&[]);
+        assert_eq!(empty.len(), 0);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn map_chunks_matches_manual_windows() {
+        let owned = slabs3();
+        let src =
+            SymbolSource::from_slabs(owned.iter().map(|v| v.as_slice()).collect(), 100).unwrap();
+        let flat: Vec<u16> = owned.iter().flatten().copied().collect();
+        // 70 does not divide 100: most windows straddle slab boundaries
+        for threads in [1usize, 4] {
+            let sums = src.map_chunks(70, threads, |ci, w| (ci, w.iter().map(|&x| x as u64).sum::<u64>()));
+            let want: Vec<(usize, u64)> = flat
+                .chunks(70)
+                .enumerate()
+                .map(|(ci, w)| (ci, w.iter().map(|&x| x as u64).sum::<u64>()))
+                .collect();
+            assert_eq!(sums, want, "threads={threads}");
+        }
+        // empty stream: no chunks, no calls
+        assert!(SymbolSource::from_slice(&[]).map_chunks(70, 4, |_, _| ()).is_empty());
+    }
+
+    #[test]
+    fn uneven_slabs_are_rejected() {
+        let a = vec![1u16; 10];
+        let b = vec![2u16; 9];
+        assert!(SymbolSource::from_slabs(vec![&a, &b], 10).is_err());
+        assert!(SymbolSource::from_slabs(vec![&a], 0).is_err());
+        // zero slabs is a valid empty stream
+        let none = SymbolSource::from_slabs(Vec::new(), 4).unwrap();
+        assert_eq!(none.len(), 0);
+    }
+}

@@ -104,11 +104,7 @@ impl CuszConfig {
     }
 
     pub fn effective_threads(&self) -> usize {
-        if self.threads > 0 {
-            self.threads
-        } else {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
-        }
+        crate::util::pool::effective_threads(self.threads)
     }
 }
 

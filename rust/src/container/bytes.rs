@@ -12,6 +12,23 @@ impl ByteWriter {
         Self::default()
     }
 
+    /// Build a writer over a caller-provided buffer (cleared first) so
+    /// arena-loaned scratch keeps its capacity across serializations.
+    /// Pair with [`ByteWriter::finish`] and hand the Vec back.
+    pub fn from_vec(mut buf: Vec<u8>) -> Self {
+        buf.clear();
+        ByteWriter { buf }
+    }
+
+    /// Bytes written so far.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
     pub fn bytes(&mut self, b: &[u8]) {
         self.buf.extend_from_slice(b);
     }
@@ -68,11 +85,17 @@ impl<'a> ByteReader<'a> {
     }
 
     pub fn take(&mut self, n: usize) -> Result<Vec<u8>> {
+        Ok(self.take_ref(n)?.to_vec())
+    }
+
+    /// Borrow the next `n` bytes without copying (segment payloads and
+    /// other windows that are decoded in place).
+    pub fn take_ref(&mut self, n: usize) -> Result<&'a [u8]> {
         // checked_add: n comes from untrusted length fields and may be
         // near usize::MAX after corruption
         match self.pos.checked_add(n) {
             Some(end) if end <= self.buf.len() => {
-                let out = self.buf[self.pos..end].to_vec();
+                let out = &self.buf[self.pos..end];
                 self.pos = end;
                 Ok(out)
             }
@@ -137,10 +160,9 @@ impl<'a> ByteReader<'a> {
     }
 }
 
-/// CRC-32 (IEEE), table-driven.
-pub fn crc32(data: &[u8]) -> u32 {
+fn crc_table() -> &'static [u32; 256] {
     static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
-    let table = TABLE.get_or_init(|| {
+    TABLE.get_or_init(|| {
         let mut t = [0u32; 256];
         for (i, e) in t.iter_mut().enumerate() {
             let mut c = i as u32;
@@ -150,12 +172,46 @@ pub fn crc32(data: &[u8]) -> u32 {
             *e = c;
         }
         t
-    });
-    let mut c = !0u32;
-    for &b in data {
-        c = table[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
+    })
+}
+
+/// CRC-32 (IEEE), table-driven.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut h = Crc32::new();
+    h.update(data);
+    h.finish()
+}
+
+/// Incremental CRC-32 — lets streaming writers (e.g. a shard append that
+/// never buffers the payload) digest data as it flows past.
+#[derive(Debug, Clone)]
+pub struct Crc32 {
+    state: u32,
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Self::new()
     }
-    !c
+}
+
+impl Crc32 {
+    pub fn new() -> Self {
+        Crc32 { state: !0u32 }
+    }
+
+    pub fn update(&mut self, data: &[u8]) {
+        let table = crc_table();
+        let mut c = self.state;
+        for &b in data {
+            c = table[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
+        }
+        self.state = c;
+    }
+
+    pub fn finish(&self) -> u32 {
+        !self.state
+    }
 }
 
 #[cfg(test)]
@@ -187,6 +243,39 @@ mod tests {
     fn crc32_known_vector() {
         // "123456789" -> 0xCBF43926 (IEEE CRC-32 check value)
         assert_eq!(crc32(b"123456789"), 0xcbf43926);
+    }
+
+    #[test]
+    fn incremental_crc_matches_one_shot() {
+        let mut h = Crc32::new();
+        h.update(b"123");
+        h.update(b"");
+        h.update(b"456789");
+        assert_eq!(h.finish(), 0xcbf43926);
+    }
+
+    #[test]
+    fn take_ref_borrows_without_copy() {
+        let buf = [1u8, 2, 3, 4, 5];
+        let mut r = ByteReader::new(&buf);
+        let a = r.take_ref(2).unwrap();
+        assert_eq!(a, &buf[..2]);
+        assert_eq!(a.as_ptr(), buf.as_ptr());
+        assert_eq!(r.remaining(), 3);
+        assert!(r.take_ref(4).is_err());
+    }
+
+    #[test]
+    fn from_vec_reuses_capacity() {
+        let mut w = ByteWriter::from_vec(Vec::with_capacity(128));
+        assert!(w.is_empty());
+        w.u32(9);
+        assert_eq!(w.len(), 4);
+        let v = w.finish();
+        assert!(v.capacity() >= 128);
+        // and residue is cleared on reuse
+        let w2 = ByteWriter::from_vec(v);
+        assert!(w2.is_empty());
     }
 
     #[test]

@@ -7,10 +7,14 @@
 //! version 2 adds a codec-granularity byte — when it says `Chunk`, the
 //! body carries a per-chunk encoder tag table and the header's encoder
 //! tag records only the majority backend (an `ls`-level summary).
-//! Which parser runs is selected by the container magic
-//! ([`crate::container::MAGIC_V0`] / [`crate::container::MAGIC_V1`] /
-//! [`crate::container::MAGIC`]), since the legacy layout's first byte is
-//! a name-length byte and cannot be distinguished in-band.
+//! Version 3 keeps the version-2 header layout byte for byte; what it
+//! changes is the **body**: a gzip/zstd lossless tail is framed over
+//! independent segments so both sides of the tail run chunk-parallel
+//! (see `container::mod`). Which parser runs is selected by the
+//! container magic ([`crate::container::MAGIC_V0`] /
+//! [`crate::container::MAGIC_V1`] / [`crate::container::MAGIC`]), since
+//! the legacy layout's first byte is a name-length byte and cannot be
+//! distinguished in-band.
 
 use anyhow::{bail, Result};
 
@@ -18,8 +22,9 @@ use super::bytes::{ByteReader, ByteWriter};
 use crate::codec::{CodecGranularity, EncoderKind};
 use crate::config::ErrorBound;
 
-/// The archive format version this build writes.
-pub const FORMAT_VERSION: u8 = 2;
+/// The archive format version this build writes. Version 3 = segmented
+/// (chunk-parallel) lossless tail; headers are layout-identical to v2.
+pub const FORMAT_VERSION: u8 = 3;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LosslessTag {

@@ -11,14 +11,27 @@
 //! archives, whose header adds a codec-granularity byte and whose body
 //! may carry a per-chunk tag table + per-chunk sidecar records. Unknown
 //! magics, versions, and tags all fail cleanly.
+//!
+//! Serialization is a single streaming pass: [`Archive::write_into`]
+//! builds the body once in arena-reused scratch and streams it to any
+//! sink; [`Archive::serialized_len`] prices a `None`-tail archive purely
+//! arithmetically; and from format version 3 on, a gzip/zstd lossless
+//! tail is framed over independent fixed-size segments
+//! ([`TAIL_SEGMENT_BYTES`] of raw body each) so both the tail encode and
+//! decode run chunk-parallel. Version ≤ 2 payloads keep their monolithic
+//! tail byte-for-byte.
 
 pub mod bytes;
 pub mod header;
+
+use std::io::{self, Read, Write};
 
 use anyhow::{bail, Context, Result};
 
 use crate::codec::{CodecGranularity, EncoderKind};
 use crate::huffman::deflate::{DeflatedChunk, DeflatedStream};
+use crate::util::arena;
+use crate::util::pool::{effective_threads as tail_threads, parallel_map_range};
 use bytes::{ByteReader, ByteWriter};
 pub use header::{Header, LosslessTag, FORMAT_VERSION};
 
@@ -26,7 +39,9 @@ pub use header::{Header, LosslessTag, FORMAT_VERSION};
 pub const MAGIC_V0: &[u8; 8] = b"CUSZA1\0\0";
 /// Magic of format-version-1 (field-tagged, pre-granularity) archives.
 pub const MAGIC_V1: &[u8; 8] = b"CUSZA2\0\0";
-/// Magic of current (granularity-aware, chunk-taggable) archives.
+/// Magic of current (granularity-aware, chunk-taggable) archives. Format
+/// versions 2 (monolithic lossless tail) and 3 (segmented tail) both
+/// travel under it; the header's version byte selects the body parser.
 pub const MAGIC: &[u8; 8] = b"CUSZA3\0\0";
 
 /// Largest chunk geometry (symbols per chunk) the format accepts. Real
@@ -35,6 +50,193 @@ pub const MAGIC: &[u8; 8] = b"CUSZA3\0\0";
 /// sides: the parser rejects larger values as corrupt, and the compressor
 /// refuses to produce archives it could not read back.
 pub const MAX_CHUNK_SYMBOLS: usize = 1 << 24;
+
+/// Raw body bytes per lossless-tail segment in version-3 archives. The
+/// segmentation is a property of the *writer* (readers accept any) and
+/// must not depend on thread count, so archives stay byte-deterministic;
+/// 1 MiB keeps the zstd/gzip ratio loss negligible while giving the tail
+/// enough segments to use every core on multi-MB fields.
+pub const TAIL_SEGMENT_BYTES: usize = 1 << 20;
+
+/// Floor for the bench/tuning segment-size override: framing overhead is
+/// 16 bytes per segment, so segments below this are never worth writing.
+const MIN_TAIL_SEGMENT_BYTES: usize = 64 * 1024;
+
+thread_local! {
+    /// Lossless-tail encodes performed by this thread — the probe behind
+    /// the "exactly one serialization pass per compressed field"
+    /// regression test. Thread-local so concurrent tests don't pollute
+    /// each other's deltas.
+    static TAIL_ENCODES: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+/// Number of gzip/zstd tail encodes this thread has performed (each
+/// serialization of a tail-compressed archive counts once, however many
+/// segments it frames). Diagnostics / regression tests.
+pub fn lossless_tail_encodes() -> u64 {
+    TAIL_ENCODES.with(|c| c.get())
+}
+
+/// Write one `[u64 len][u32 crc][payload]` section to a streaming sink.
+fn write_section<W: Write>(w: &mut W, payload: &[u8]) -> io::Result<u64> {
+    w.write_all(&(payload.len() as u64).to_le_bytes())?;
+    w.write_all(&bytes::crc32(payload).to_le_bytes())?;
+    w.write_all(payload)?;
+    Ok(12 + payload.len() as u64)
+}
+
+/// Compress one tail segment with the tagged codec (same codecs and
+/// levels as the legacy monolithic tail, so v≤2 re-serialization stays
+/// byte-compatible).
+fn compress_tail_segment(data: &[u8], tag: LosslessTag) -> io::Result<Vec<u8>> {
+    match tag {
+        LosslessTag::None => unreachable!("None tail never reaches the segment encoder"),
+        LosslessTag::Gzip => {
+            use flate2::{write::GzEncoder, Compression};
+            let mut enc = GzEncoder::new(Vec::new(), Compression::fast());
+            enc.write_all(data)?;
+            enc.finish()
+        }
+        LosslessTag::Zstd => zstd::encode_all(data, 3),
+    }
+}
+
+/// Decompress one tail segment straight into its slot of the body
+/// buffer (no intermediate Vec): the segment must yield exactly
+/// `dst.len()` bytes — a short stream fails `read_exact`, and a stream
+/// with leftover data fails the EOF probe.
+fn decompress_tail_segment_into(comp: &[u8], tag: LosslessTag, dst: &mut [u8]) -> Result<()> {
+    fn drain_into(mut dec: impl Read, dst: &mut [u8]) -> Result<()> {
+        dec.read_exact(dst)
+            .context("corrupt archive: tail segment shorter than declared")?;
+        let mut probe = [0u8; 1];
+        if dec
+            .read(&mut probe)
+            .context("corrupt archive: tail segment trailing data unreadable")?
+            != 0
+        {
+            bail!(
+                "corrupt archive: tail segment decompresses past its declared {} bytes",
+                dst.len()
+            );
+        }
+        Ok(())
+    }
+    match tag {
+        LosslessTag::None => unreachable!("None tail never reaches the segment decoder"),
+        LosslessTag::Gzip => drain_into(flate2::read::GzDecoder::new(comp), dst),
+        LosslessTag::Zstd => drain_into(
+            zstd::stream::read::Decoder::new(comp).context("unzstd tail segment")?,
+            dst,
+        ),
+    }
+}
+
+/// Frame the serialized body as independent compressed segments (the
+/// version-3 tail): `[u64 raw_total][u32 n_segments]` + per-segment
+/// `[u64 raw_len][u64 comp_len]` table + concatenated payloads. Segments
+/// compress in parallel; output bytes are independent of thread count.
+fn encode_segmented_tail(
+    body: &[u8],
+    tag: LosslessTag,
+    threads: usize,
+    segment_bytes: usize,
+) -> io::Result<Vec<u8>> {
+    let seg = segment_bytes.max(MIN_TAIL_SEGMENT_BYTES);
+    let nsegs = body.len().div_ceil(seg).max(1);
+    let parts: Vec<io::Result<Vec<u8>>> =
+        parallel_map_range(tail_threads(threads).min(nsegs), nsegs, |i| {
+            let lo = i * seg;
+            let hi = ((i + 1) * seg).min(body.len());
+            compress_tail_segment(&body[lo..hi], tag)
+        });
+    let mut payloads = Vec::with_capacity(nsegs);
+    for p in parts {
+        payloads.push(p?);
+    }
+    let comp_total: usize = payloads.iter().map(|p| p.len()).sum();
+    let mut out = ByteWriter::from_vec(Vec::with_capacity(12 + nsegs * 16 + comp_total));
+    out.u64(body.len() as u64);
+    out.u32(nsegs as u32);
+    for (i, p) in payloads.iter().enumerate() {
+        let lo = i * seg;
+        let hi = ((i + 1) * seg).min(body.len());
+        out.u64((hi - lo) as u64);
+        out.u64(p.len() as u64);
+    }
+    for p in &payloads {
+        out.bytes(p);
+    }
+    Ok(out.finish())
+}
+
+/// Parse and decompress a version-3 segmented tail. Every count is
+/// bounded before allocation: the declared raw total against the
+/// header-derived cap, the segment table against the payload size, and
+/// each segment's inflation against its declared raw length.
+fn decode_segmented_tail(
+    payload: &[u8],
+    tag: LosslessTag,
+    cap: u64,
+    threads: usize,
+) -> Result<Vec<u8>> {
+    let mut b = ByteReader::new(payload);
+    let raw_total = b.u64()?;
+    if raw_total > cap {
+        bail!("corrupt archive: decompressed body exceeds {cap}-byte cap");
+    }
+    let nsegs = b.u32()? as usize;
+    if nsegs > b.remaining() / 16 {
+        bail!("corrupt archive: {nsegs} tail segments exceeds payload");
+    }
+    let mut lens = Vec::with_capacity(nsegs);
+    let mut sum_raw = 0u64;
+    for _ in 0..nsegs {
+        let raw = b.u64()?;
+        let comp = b.u64()?;
+        sum_raw = sum_raw
+            .checked_add(raw)
+            .context("corrupt archive: segment raw lengths overflow")?;
+        lens.push((raw, comp));
+    }
+    if sum_raw != raw_total {
+        bail!("corrupt archive: segment raw lengths sum to {sum_raw}, expected {raw_total}");
+    }
+    let mut segs = Vec::with_capacity(nsegs);
+    for &(_, comp) in &lens {
+        segs.push(b.take_ref(comp as usize).context("tail segment payload")?);
+    }
+    if b.remaining() != 0 {
+        bail!(
+            "corrupt archive: {} trailing bytes after tail segments",
+            b.remaining()
+        );
+    }
+    // decompress every segment straight into its disjoint slot of the
+    // one body buffer — no per-segment Vecs, no concatenation pass. The
+    // allocation is bounded by the cap check above; the mutexes hand each
+    // worker exclusive access to its slice (taken once, uncontended).
+    let mut out = vec![0u8; raw_total as usize];
+    let mut slots = Vec::with_capacity(nsegs);
+    let mut rest: &mut [u8] = &mut out;
+    for &(raw, _) in &lens {
+        // mem::take so each split reborrows a fresh local, letting the
+        // slot borrows outlive the loop body
+        let (slot, tail) = std::mem::take(&mut rest).split_at_mut(raw as usize);
+        slots.push(std::sync::Mutex::new(slot));
+        rest = tail;
+    }
+    let parts: Vec<Result<()>> =
+        parallel_map_range(tail_threads(threads).min(nsegs.max(1)), nsegs, |i| {
+            let mut slot = slots[i].lock().expect("slot mutex poisoned");
+            decompress_tail_segment_into(segs[i], tag, &mut **slot)
+        });
+    for p in parts {
+        p?;
+    }
+    drop(slots);
+    Ok(out)
+}
 
 /// One compressed field.
 #[derive(Debug, Clone, PartialEq)]
@@ -65,31 +267,64 @@ pub struct Archive {
 
 impl Archive {
     /// Total compressed size in bytes (what CR is computed against).
+    /// Delegates to [`Archive::serialized_len`]: arithmetic (no
+    /// serialization at all) for `None`-tail archives, one tail encode
+    /// otherwise — never a full `to_bytes` materialization.
     pub fn compressed_bytes(&self) -> usize {
-        self.to_bytes().len()
+        self.serialized_len()
     }
 
-    pub fn to_bytes(&self) -> Vec<u8> {
-        // pre-granularity layouts have no chunk-tag sections: writing one
-        // silently would decode wrong under an old parser — fail loudly
-        assert!(
-            self.header.version >= 2
-                || (self.chunk_tags.is_empty() && self.chunk_aux.is_empty()),
-            "version-{} archives cannot carry a per-chunk tag table",
-            self.header.version
-        );
-        let mut w = ByteWriter::new();
-        // headers serialize in their own version's layout, so each must
-        // travel under the matching magic for parsers to agree
-        w.bytes(match self.header.version {
-            0 => MAGIC_V0,
-            1 => MAGIC_V1,
-            _ => MAGIC,
-        });
-        let header_bytes = self.header.to_bytes();
-        w.section(&header_bytes);
+    /// Exact on-disk size of this archive. For `LosslessTag::None` the
+    /// answer is computed arithmetically from the container layout
+    /// (header + tag table + stream words + outlier/verbatim records) —
+    /// no byte is serialized. For gzip/zstd tails the compressed size is
+    /// not knowable without compressing, so this performs one streaming
+    /// serialization into a counting sink (one lossless-tail encode; hot
+    /// paths that also need the bytes should use
+    /// [`Archive::write_into`]/[`Archive::to_bytes`] once instead).
+    pub fn serialized_len(&self) -> usize {
+        match self.header.lossless {
+            LosslessTag::None => {
+                let header_len = self.header.to_bytes().len();
+                // magic + header section framing + body section framing
+                8 + 12 + header_len + 12 + self.body_raw_len()
+            }
+            _ => self
+                .write_into(&mut io::sink())
+                .expect("counting serialization cannot fail") as usize,
+        }
+    }
 
-        let mut body = ByteWriter::new();
+    /// Cheap capacity hint for a serialization buffer: exact for `None`
+    /// tails, a compressed-size guess otherwise. Never encodes anything.
+    pub fn serialized_len_hint(&self) -> usize {
+        match self.header.lossless {
+            LosslessTag::None => self.serialized_len(),
+            _ => 1024 + self.body_raw_len() / 3,
+        }
+    }
+
+    /// Arithmetic length of the serialized (uncompressed) body.
+    fn body_raw_len(&self) -> usize {
+        let mut n = 4 + self.encoder_aux.len(); // aux length + bytes
+        n += 8; // chunk count + chunk geometry
+        for c in &self.stream.chunks {
+            n += 8 + 4 + 4 + c.words.len() * 8;
+        }
+        if self.header.version >= 2 {
+            n += 4 + self.chunk_tags.len();
+            if !self.chunk_tags.is_empty() {
+                n += self.chunk_aux.iter().map(|a| 1 + a.len()).sum::<usize>();
+            }
+        }
+        n += 8 + self.outliers.len() * 12;
+        n += 8 + self.verbatim.len() * 12;
+        n
+    }
+
+    /// Serialize the body fields (everything between the header section
+    /// and the lossless tail) into `body`.
+    fn write_body(&self, body: &mut ByteWriter) {
         body.u32(self.encoder_aux.len() as u32);
         body.bytes(&self.encoder_aux);
 
@@ -133,21 +368,79 @@ impl Archive {
             body.u64(pos);
             body.f32(val);
         }
+    }
 
-        let body_bytes = body.finish();
-        let body_bytes = match self.header.lossless {
-            LosslessTag::None => body_bytes,
-            LosslessTag::Gzip => {
-                use flate2::{write::GzEncoder, Compression};
-                use std::io::Write;
-                let mut enc = GzEncoder::new(Vec::new(), Compression::fast());
-                enc.write_all(&body_bytes).expect("gzip");
-                enc.finish().expect("gzip finish")
-            }
-            LosslessTag::Zstd => zstd::encode_all(&body_bytes[..], 3).expect("zstd"),
-        };
-        w.section(&body_bytes);
-        w.finish()
+    /// Stream the archive into any writer — the single serialization
+    /// path (`to_bytes`, `Store::add`, the serve sinks, and the CLI all
+    /// sit on top of it). The body is built once in an arena-reused
+    /// scratch buffer and flows straight to the sink; no second
+    /// full-archive buffer exists. Returns the bytes written.
+    pub fn write_into<W: Write>(&self, w: &mut W) -> io::Result<u64> {
+        self.write_into_with(w, 0, TAIL_SEGMENT_BYTES)
+    }
+
+    /// [`Archive::write_into`] with explicit knobs: `threads` for the
+    /// parallel tail segment encode (0 = all cores; output bytes never
+    /// depend on it) and `segment_bytes` for the raw bytes per tail
+    /// segment (a bench/tuning override — changing it changes the wire
+    /// bytes, so production writers stick to [`TAIL_SEGMENT_BYTES`]).
+    pub fn write_into_with<W: Write>(
+        &self,
+        w: &mut W,
+        threads: usize,
+        segment_bytes: usize,
+    ) -> io::Result<u64> {
+        // pre-granularity layouts have no chunk-tag sections: writing one
+        // silently would decode wrong under an old parser — fail loudly
+        assert!(
+            self.header.version >= 2
+                || (self.chunk_tags.is_empty() && self.chunk_aux.is_empty()),
+            "version-{} archives cannot carry a per-chunk tag table",
+            self.header.version
+        );
+        let mut total = 0u64;
+        // headers serialize in their own version's layout, so each must
+        // travel under the matching magic for parsers to agree
+        w.write_all(match self.header.version {
+            0 => MAGIC_V0,
+            1 => MAGIC_V1,
+            _ => MAGIC,
+        })?;
+        total += 8;
+        total += write_section(w, &self.header.to_bytes())?;
+
+        total += arena::with_u8(|scratch| -> io::Result<u64> {
+            let mut bw = ByteWriter::from_vec(std::mem::take(scratch));
+            self.write_body(&mut bw);
+            let body = bw.finish();
+            let written = match self.header.lossless {
+                LosslessTag::None => write_section(w, &body)?,
+                tag => {
+                    TAIL_ENCODES.with(|c| c.set(c.get() + 1));
+                    if self.header.version >= 3 {
+                        let tail = encode_segmented_tail(&body, tag, threads, segment_bytes)?;
+                        write_section(w, &tail)?
+                    } else {
+                        // legacy monolithic tail: byte-compatible with
+                        // the v0–v2 writers (same codecs, same levels)
+                        let blob = compress_tail_segment(&body, tag)?;
+                        write_section(w, &blob)?
+                    }
+                }
+            };
+            *scratch = body; // return the capacity to the arena
+            Ok(written)
+        })?;
+        Ok(total)
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        // exact for uncompressed tails, a no-encode estimate otherwise —
+        // never serialized_len() here, which would encode a compressed
+        // tail a second time just to size the buffer
+        let mut out = Vec::with_capacity(self.serialized_len_hint());
+        self.write_into(&mut out).expect("writing to a Vec cannot fail");
+        out
     }
 
     /// Read the magic + header section, dispatching to the right header
@@ -192,6 +485,14 @@ impl Archive {
     }
 
     pub fn from_bytes(data: &[u8]) -> Result<Archive> {
+        Self::from_bytes_with_threads(data, 0)
+    }
+
+    /// [`Archive::from_bytes`] with an explicit worker count for the
+    /// parallel segmented-tail decode (0 = all cores). Batch pipelines
+    /// that already fan out across fields pass their per-job thread
+    /// budget to avoid oversubscription.
+    pub fn from_bytes_with_threads(data: &[u8], threads: usize) -> Result<Archive> {
         let mut r = ByteReader::new(data);
         let header = Self::read_header(&mut r)?;
 
@@ -202,9 +503,10 @@ impl Archive {
         let cap = decompressed_body_cap(&header);
         let body_bytes = match header.lossless {
             LosslessTag::None => body_raw,
+            // version-3 tails are segment-framed and decode in parallel
+            tag if header.version >= 3 => decode_segmented_tail(&body_raw, tag, cap, threads)?,
             LosslessTag::Gzip => {
                 use flate2::read::GzDecoder;
-                use std::io::Read;
                 let mut out = Vec::new();
                 GzDecoder::new(&body_raw[..])
                     .take(cap + 1)
@@ -216,7 +518,6 @@ impl Archive {
                 out
             }
             LosslessTag::Zstd => {
-                use std::io::Read;
                 let dec = zstd::stream::read::Decoder::new(&body_raw[..]).context("unzstd")?;
                 let mut out = Vec::new();
                 dec.take(cap + 1).read_to_end(&mut out).context("unzstd")?;
@@ -547,5 +848,163 @@ mod tests {
         let a = sample_archive(LosslessTag::None);
         let bytes = a.to_bytes();
         assert!(Archive::from_bytes(&bytes[..bytes.len() / 2]).is_err());
+    }
+
+    /// An archive whose raw body comfortably exceeds the minimum tail
+    /// segment size, so small segment overrides produce real multi-
+    /// segment tails.
+    fn big_archive(lossless: LosslessTag) -> Archive {
+        let mut a = sample_archive(lossless);
+        a.stream = DeflatedStream {
+            chunks: (0..8)
+                .map(|c| DeflatedChunk {
+                    words: (0..4096u64).map(|i| i.wrapping_mul(0x9e3779b97f4a7c15) ^ c).collect(),
+                    bits: 4096 * 64,
+                    symbols: 4096,
+                })
+                .collect(),
+            chunk_symbols: 4096,
+        };
+        a
+    }
+
+    /// Locate the body section and recompute its CRC (hostile-writer
+    /// simulation: structurally-corrupt but CRC-consistent payloads).
+    fn rewrite_body_crc(bytes: &mut [u8]) {
+        let header_len = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        let off = 20 + header_len;
+        let body_len = u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap()) as usize;
+        let crc = bytes::crc32(&bytes[off + 12..off + 12 + body_len]);
+        bytes[off + 8..off + 12].copy_from_slice(&crc.to_le_bytes());
+    }
+
+    fn body_payload_offset(bytes: &[u8]) -> usize {
+        let header_len = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        20 + header_len + 12
+    }
+
+    #[test]
+    fn serialized_len_matches_to_bytes_for_every_tail() {
+        for tag in [LosslessTag::None, LosslessTag::Gzip, LosslessTag::Zstd] {
+            for a in [sample_archive(tag), big_archive(tag)] {
+                assert_eq!(a.serialized_len(), a.to_bytes().len(), "{tag:?}");
+                assert_eq!(a.compressed_bytes(), a.serialized_len(), "{tag:?}");
+            }
+            let mut mixed = sample_mixed_archive();
+            mixed.header.lossless = tag;
+            assert_eq!(mixed.serialized_len(), mixed.to_bytes().len(), "mixed {tag:?}");
+        }
+        // legacy versions: the arithmetic covers the version-gated
+        // sections too
+        for version in [0u8, 1] {
+            let mut a = sample_archive(LosslessTag::None);
+            a.header.version = version;
+            assert_eq!(a.serialized_len(), a.to_bytes().len(), "v{version}");
+        }
+    }
+
+    #[test]
+    fn write_into_matches_to_bytes_and_ignores_thread_count() {
+        for tag in [LosslessTag::None, LosslessTag::Zstd, LosslessTag::Gzip] {
+            let a = big_archive(tag);
+            let reference = a.to_bytes();
+            for threads in [1usize, 3, 8] {
+                let mut out = Vec::new();
+                let n = a.write_into_with(&mut out, threads, TAIL_SEGMENT_BYTES).unwrap();
+                assert_eq!(n as usize, out.len());
+                assert_eq!(out, reference, "{tag:?} threads={threads}");
+            }
+            assert_eq!(Archive::from_bytes(&reference).unwrap(), a, "{tag:?}");
+        }
+    }
+
+    #[test]
+    fn v3_segmented_tail_roundtrips_multisegment() {
+        for tag in [LosslessTag::Gzip, LosslessTag::Zstd] {
+            let a = big_archive(tag);
+            // force small segments so the ~256 KB body splits
+            let mut bytes = Vec::new();
+            a.write_into_with(&mut bytes, 4, 64 * 1024).unwrap();
+            let off = body_payload_offset(&bytes);
+            let nsegs = u32::from_le_bytes(bytes[off + 8..off + 12].try_into().unwrap());
+            assert!(nsegs > 1, "{tag:?}: expected a multi-segment tail, got {nsegs}");
+            for threads in [0usize, 1, 5] {
+                let b = Archive::from_bytes_with_threads(&bytes, threads).unwrap();
+                assert_eq!(b, a, "{tag:?} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn v2_archives_keep_the_monolithic_tail() {
+        let mut a = big_archive(LosslessTag::Gzip);
+        a.header.version = 2;
+        let bytes = a.to_bytes();
+        let off = body_payload_offset(&bytes);
+        // a v2 gzip body starts with the gzip magic, not a segment table
+        assert_eq!(&bytes[off..off + 2], &[0x1f, 0x8b]);
+        assert_eq!(Archive::from_bytes(&bytes).unwrap(), a);
+        // while the v3 body starts with its raw-length word
+        let v3 = big_archive(LosslessTag::Gzip).to_bytes();
+        let off3 = body_payload_offset(&v3);
+        assert_ne!(&v3[off3..off3 + 2], &[0x1f, 0x8b]);
+    }
+
+    #[test]
+    fn corrupt_tail_segments_fail_cleanly() {
+        let a = big_archive(LosslessTag::Zstd);
+        let mut bytes = Vec::new();
+        a.write_into_with(&mut bytes, 2, 64 * 1024).unwrap();
+        let off = body_payload_offset(&bytes);
+
+        // a bit flip in a segment payload is caught by the section CRC
+        let mut flipped = bytes.clone();
+        let n = flipped.len();
+        flipped[n - 9] ^= 0x40;
+        assert!(Archive::from_bytes(&flipped).is_err());
+
+        // hostile writer: inflate a segment's raw length (CRC fixed up) —
+        // the sum check must reject before any decode allocates for it
+        let mut lied = bytes.clone();
+        lied[off + 12..off + 20].copy_from_slice(&u64::MAX.to_le_bytes());
+        rewrite_body_crc(&mut lied);
+        assert!(Archive::from_bytes(&lied).is_err());
+
+        // hostile writer: raw total past the header cap (and the matching
+        // first-segment raw length, so the sum check is not what trips)
+        let mut bomb = bytes.clone();
+        let huge = 1u64 << 62;
+        bomb[off..off + 8].copy_from_slice(&huge.to_le_bytes());
+        bomb[off + 12..off + 20].copy_from_slice(&huge.to_le_bytes());
+        rewrite_body_crc(&mut bomb);
+        let err = Archive::from_bytes(&bomb).unwrap_err();
+        assert!(err.to_string().contains("cap"), "{err:#}");
+
+        // hostile writer: segment count inflated past the payload
+        let mut many = bytes.clone();
+        many[off + 8..off + 12].copy_from_slice(&u32::MAX.to_le_bytes());
+        rewrite_body_crc(&mut many);
+        assert!(Archive::from_bytes(&many).is_err());
+
+        // truncation anywhere in the tail is rejected
+        assert!(Archive::from_bytes(&bytes[..bytes.len() - 5]).is_err());
+    }
+
+    #[test]
+    fn tail_encodes_exactly_once_per_serialization() {
+        let plain = sample_archive(LosslessTag::None);
+        let before = lossless_tail_encodes();
+        let _ = plain.to_bytes();
+        let _ = plain.serialized_len();
+        assert_eq!(lossless_tail_encodes() - before, 0, "None tail never encodes");
+
+        let zstd = sample_archive(LosslessTag::Zstd);
+        let before = lossless_tail_encodes();
+        let bytes = zstd.to_bytes();
+        assert_eq!(lossless_tail_encodes() - before, 1, "one encode per to_bytes");
+        let _ = Archive::from_bytes(&bytes).unwrap();
+        assert_eq!(lossless_tail_encodes() - before, 1, "decode never re-encodes");
+        let _ = zstd.serialized_len();
+        assert_eq!(lossless_tail_encodes() - before, 2, "serialized_len on a compressed tail is one more encode");
     }
 }

@@ -4,25 +4,20 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::{CompressStats, Coordinator};
+use super::{CompressStats, CompressedField, Coordinator};
 use crate::codec::{
     self, chunked, CodecGranularity, CostModel, EncodeContext, EncoderChoice, EncoderKind,
+    SymbolSource,
 };
-use crate::container::{Archive, Header, LosslessTag, FORMAT_VERSION, MAX_CHUNK_SYMBOLS};
+use crate::container::{self, Archive, Header, LosslessTag, FORMAT_VERSION, MAX_CHUNK_SYMBOLS};
 use crate::field::Field;
 use crate::huffman;
 use crate::metrics::StageTimer;
-use std::cell::RefCell;
 
 use crate::sz::blocks::tile_grid;
 use crate::sz::dual_quant;
+use crate::util::arena;
 use crate::util::pool::parallel_map;
-
-thread_local! {
-    /// Per-worker gather buffer, reused across slabs (page-fault avoidance,
-    /// EXPERIMENTS.md §Perf iteration 3).
-    static GATHER: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
-}
 
 /// Output of the quant phase for one slab.
 struct SlabQuant {
@@ -34,7 +29,7 @@ struct SlabQuant {
     hist: Vec<u32>,
 }
 
-pub fn compress(coord: &Coordinator, field: &Field) -> Result<(Archive, CompressStats)> {
+pub fn compress(coord: &Coordinator, field: &Field) -> Result<CompressedField> {
     let cfg = &coord.cfg;
     // refuse to produce an archive the parser would reject as corrupt
     if cfg.chunk_symbols == 0 || cfg.chunk_symbols > MAX_CHUNK_SYMBOLS {
@@ -63,8 +58,11 @@ pub fn compress(coord: &Coordinator, field: &Field) -> Result<(Archive, Compress
     let t0 = Instant::now();
     let threads = cfg.effective_threads();
     let slabs: Vec<Result<SlabQuant>> = parallel_map(threads, &grid, |_, idx| {
-        GATHER.with(|cell| {
-            let mut buf = cell.borrow_mut();
+        // per-worker gather buffer loaned from the thread-local arena,
+        // reused across slabs — and, on long-lived batch workers, across
+        // whole fields (page-fault avoidance, EXPERIMENTS.md §Perf
+        // iteration 3)
+        arena::with_f32(|buf| {
             if buf.len() != spec.len() {
                 buf.clear();
                 buf.resize(spec.len(), 0.0);
@@ -74,8 +72,8 @@ pub fn compress(coord: &Coordinator, field: &Field) -> Result<(Archive, Compress
             if idx.valid != spec.shape {
                 buf.fill(0.0);
             }
-            crate::sz::blocks::gather_slab_into(&field.data, &kernel_dims, &spec, idx, &mut buf);
-            let data: &[f32] = &buf;
+            crate::sz::blocks::gather_slab_into(&field.data, &kernel_dims, &spec, idx, buf);
+            let data: &[f32] = buf;
             let full = coord.engine().compress_slab_full(&spec, data, abs_eb, dict)?;
             let verbatim = if range_safe {
                 Vec::new()
@@ -104,16 +102,21 @@ pub fn compress(coord: &Coordinator, field: &Field) -> Result<(Archive, Compress
     }
     timer.add("2.histogram", t0.elapsed());
 
-    // ---- phase C: flatten codes, gather global outliers ---------------
+    // ---- phase C: view the slab codes in place, gather outliers --------
+    // No field-wide flatten: the codec stages pull chunk windows straight
+    // out of the per-slab `codes` vectors through a `SymbolSource`
+    // (boundary-straddling windows stitch through the thread-local
+    // arena), so each symbol is touched once — by its encoder.
     let t0 = Instant::now();
     let slab_len = spec.len();
-    let total_symbols = slab_len * quants.len();
-    let mut symbols = Vec::with_capacity(total_symbols);
+    let symbols = SymbolSource::from_slabs(
+        quants.iter().map(|q| q.codes.as_slice()).collect(),
+        slab_len,
+    )?;
     let mut outliers = Vec::new();
     let mut verbatim = Vec::new();
     for (si, q) in quants.iter().enumerate() {
         let base = (si * slab_len) as u64;
-        symbols.extend_from_slice(&q.codes);
         outliers.extend(q.outliers.iter().map(|&(p, d)| (base + p as u64, d)));
         verbatim.extend(q.verbatim.iter().map(|&(p, v)| (base + p as u64, v)));
     }
@@ -164,7 +167,7 @@ pub fn compress(coord: &Coordinator, field: &Field) -> Result<(Archive, Compress
             EncoderChoice::Rle => EncoderKind::Rle,
             EncoderChoice::Auto => codec::auto_select(&freq),
         };
-        let enc = codec::stage_for(kind).encode(&symbols, &ctx)?;
+        let enc = codec::stage_for(kind).encode_source(&symbols, &ctx)?;
         let mut counts = [0usize; EncoderKind::ALL.len()];
         counts[kind.to_tag() as usize] = enc.stream.chunks.len();
         encoder_kind = kind;
@@ -213,12 +216,23 @@ pub fn compress(coord: &Coordinator, field: &Field) -> Result<(Archive, Compress
         outliers,
         verbatim,
     };
+
+    // ---- serialize: the one and only pass -------------------------------
+    // One streaming write produces the bytes every consumer (CLI file,
+    // store shard, serve sink) uses, and its length is the stats' size —
+    // the old `compressed_bytes()` re-serialization (a second lossless-
+    // tail encode per field) is gone, regression-locked by
+    // `tests/zero_copy.rs`.
+    let mut bytes = Vec::with_capacity(archive.serialized_len_hint());
+    archive
+        .write_into_with(&mut bytes, threads, container::TAIL_SEGMENT_BYTES)
+        .expect("writing to a Vec cannot fail");
     timer.add("6.container", t0.elapsed());
     timer.add("total", t_total.elapsed());
 
     let stats = CompressStats {
         original_bytes: field.size_bytes(),
-        compressed_bytes: archive.compressed_bytes(),
+        compressed_bytes: bytes.len(),
         n_slabs: archive.header.n_slabs,
         n_outliers: archive.outliers.len(),
         n_verbatim: archive.verbatim.len(),
@@ -230,5 +244,5 @@ pub fn compress(coord: &Coordinator, field: &Field) -> Result<(Archive, Compress
         abs_eb,
         timer,
     };
-    Ok((archive, stats))
+    Ok(CompressedField { archive, bytes, stats })
 }

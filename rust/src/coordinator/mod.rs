@@ -22,6 +22,18 @@ use crate::sz::blocks::{builtin_variants, select_spec, SlabSpec};
 
 pub use stats::{CompressStats, DecompressStats};
 
+/// A compressed field together with its one-and-only serialization.
+///
+/// The compressor serializes exactly once (`bytes` is what the CLI
+/// writes, the store appends, and the serve sink consumes) and the stats
+/// are priced off that same pass — no consumer ever re-serializes, so a
+/// gzip/zstd lossless tail is encoded exactly once per field.
+pub struct CompressedField {
+    pub archive: Archive,
+    pub bytes: Vec<u8>,
+    pub stats: CompressStats,
+}
+
 pub struct Coordinator {
     pub cfg: CuszConfig,
     engine: Box<dyn QuantEngine>,
@@ -83,6 +95,15 @@ impl Coordinator {
     }
 
     pub fn compress_with_stats(&self, field: &Field) -> Result<(Archive, CompressStats)> {
+        let c = self.compress_encoded(field)?;
+        Ok((c.archive, c.stats))
+    }
+
+    /// Compress and serialize in one pass: the returned
+    /// [`CompressedField`] carries the archive, its bytes, and stats
+    /// priced off those bytes. The hot paths (CLI, store, serve) use
+    /// this so the lossless tail is encoded exactly once per field.
+    pub fn compress_encoded(&self, field: &Field) -> Result<CompressedField> {
         compressor::compress(self, field)
     }
 

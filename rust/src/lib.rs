@@ -83,9 +83,9 @@ pub mod testkit;
 pub mod util;
 pub mod zfp;
 
-pub use codec::{CodecGranularity, CodecSpec, EncoderChoice, EncoderKind};
+pub use codec::{CodecGranularity, CodecSpec, EncoderChoice, EncoderKind, SymbolSource};
 pub use config::{CuszConfig, ErrorBound};
-pub use coordinator::Coordinator;
+pub use coordinator::{CompressedField, Coordinator};
 pub use field::Field;
 pub use serve::{BatchCompressor, BatchConfig, BatchDecompressor, DrainStats, ServiceStats};
 pub use store::Store;

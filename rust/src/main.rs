@@ -51,6 +51,7 @@ fn main() {
         "selftest" => cmd_selftest(rest),
         "store" => cmd_store(rest),
         "serve" => cmd_serve(rest),
+        "bench" => cmd_bench(rest),
         "--help" | "-h" | "help" => {
             println!("{}", usage());
             Ok(())
@@ -85,6 +86,9 @@ fn usage() -> String {
        serve       --batch --store B.cuszb --dataset D [--count N]\n\
                    [--workers W] [--queue N] [--shards N]\n\
                    [--compact-threshold F]\n\
+       bench       [--out BENCH_pipeline.json] [--datasets d1,d2,..]\n\
+                   [--scale N] [--quick] — machine-readable pipeline\n\
+                   throughput/ratio report (per-stage GB/s, e2e, CR)\n\
      \n\
      Common options: --backend pjrt|cpu, --threads N, --chunk N,\n\
        --dict N, --repr adaptive|u32|u64, --codec huffman|fle|rle|auto,\n\
@@ -202,11 +206,13 @@ fn cmd_compress(args: &[String]) -> Result<()> {
         .unwrap_or_else(|| "field".into());
     let field = Field::new(name, dims, data)?;
     let coord = Coordinator::new(cfg)?;
-    let (archive, stats) = coord.compress_with_stats(&field)?;
+    // one serialization pass: the bytes the stats were priced off are
+    // the bytes that hit the disk
+    let compressed = coord.compress_encoded(&field)?;
     let out = if cli.get("out").is_empty() { format!("{input}.cusza") } else { cli.get("out") };
-    std::fs::write(&out, archive.to_bytes())?;
+    std::fs::write(&out, &compressed.bytes)?;
     println!("engine: {}", coord.engine_name());
-    println!("{}", stats.report());
+    println!("{}", compressed.stats.report());
     println!("wrote {out}");
     Ok(())
 }
@@ -367,11 +373,12 @@ fn cmd_store_add(args: &[String]) -> Result<()> {
     }
 
     let coord = Coordinator::new_with_fallback(common_config(&cli)?)?;
-    let (archive, stats) = coord.compress_with_stats(&field)?;
+    let compressed = coord.compress_encoded(&field)?;
     let mut store = Store::open_or_create(cli.get("store"), shards)?;
-    let entry = store.add(&archive)?;
+    // append the worker's single serialization as-is
+    let entry = store.add_bytes(&compressed.archive.header.field_name, &compressed.bytes)?;
     println!("engine: {}", coord.engine_name());
-    println!("{}", stats.report());
+    println!("{}", compressed.stats.report());
     println!(
         "added '{}' to {} (shard {}, offset {}, {} bytes)",
         entry.name,
@@ -622,6 +629,178 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     }
     println!("{}", stats.report());
     println!("store: {} ({} fields)", cli.get("store"), store.len());
+    Ok(())
+}
+
+fn bench_field_name(ds: Dataset) -> &'static str {
+    match ds {
+        Dataset::Hacc => "vx",
+        Dataset::CesmAtm => "CLDHGH",
+        Dataset::Hurricane => "CLOUDf48",
+        Dataset::Nyx => "baryon_density",
+        Dataset::Qmcpack => "einspline",
+    }
+}
+
+fn jnum(v: f64) -> String {
+    if v.is_finite() { format!("{v:.4}") } else { "0".into() }
+}
+
+/// `cusz bench`: the perf trajectory tracker. Measures per-stage and
+/// end-to-end compress/decompress throughput plus compression ratio per
+/// datagen profile, and compares the streaming segmented serialization
+/// against an emulation of the pre-zero-copy path (two single-threaded
+/// monolithic serializations per field: one for `compressed_bytes()`,
+/// one for the actual output). Emits `BENCH_pipeline.json` so CI archives
+/// comparable numbers across PRs.
+fn cmd_bench(args: &[String]) -> Result<()> {
+    use cusz::util::bench::{print_table, Bench};
+
+    let cli = with_common(Cli::new("cusz bench", "machine-readable pipeline throughput report"))
+        .opt("out", "BENCH_pipeline.json", "output JSON path")
+        .opt("datasets", "", "comma-separated datasets (default: all five)")
+        .opt("scale", "1", "axis scale multiplier for the synthetic fields")
+        .opt("seed", "42", "generator seed")
+        .flag("quick", "smoke-test reps (also via CUSZ_BENCH_QUICK=1)")
+        .parse(args)?;
+    let quick = cli.has_flag("quick")
+        || std::env::var("CUSZ_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let bench = if quick { Bench::quick() } else { Bench::default() };
+    let base_cfg = common_config(&cli)?;
+    let threads = base_cfg.effective_threads();
+    let seed: u64 = cli.get_parsed("seed")?;
+    let scale: usize = cli.get_parsed("scale")?;
+    let datasets: Vec<Dataset> = if cli.get("datasets").is_empty() {
+        Dataset::ALL.to_vec()
+    } else {
+        cli.get("datasets")
+            .split(',')
+            .map(Dataset::parse)
+            .collect::<Result<_>>()?
+    };
+    let profiles = [
+        ("huffman+zstd", EncoderChoice::Huffman, LosslessStage::Zstd, CodecGranularity::Field),
+        ("auto-chunk+zstd", EncoderChoice::Auto, LosslessStage::Zstd, CodecGranularity::Chunk),
+        ("huffman+none", EncoderChoice::Huffman, LosslessStage::None, CodecGranularity::Field),
+    ];
+
+    let mut rows = Vec::new();
+    let mut json_profiles: Vec<String> = Vec::new();
+    let mut engine_name = "";
+    for &ds in &datasets {
+        let field = datagen::generate_scaled(ds, bench_field_name(ds), seed, scale);
+        let bytes = field.size_bytes();
+        let mb = bytes as f64 / 1e6;
+        for (pname, encoder, lossless, granularity) in profiles {
+            let mut cfg = base_cfg.clone();
+            cfg.codec = CodecSpec { encoder, lossless, granularity };
+            let coord = Coordinator::new_with_fallback(cfg)?;
+            engine_name = coord.engine_name();
+
+            let mut compressed = None;
+            let rc = bench.run(&format!("{} {pname} compress", ds.name()), bytes, || {
+                compressed = Some(coord.compress_encoded(&field).unwrap());
+            });
+            let c = compressed.unwrap();
+            let rd = bench.run(&format!("{} {pname} decompress", ds.name()), bytes, || {
+                let a = Archive::from_bytes(&c.bytes).unwrap();
+                std::hint::black_box(coord.decompress(&a).unwrap().data.len());
+            });
+            // serialization stage: the new path (one parallel segmented
+            // write at the configured thread count — the same write the
+            // compress measurement above performed) vs the pre-zero-copy
+            // path (two single-threaded monolithic writes per field)
+            let rs_seg = bench.run(&format!("{} {pname} serialize", ds.name()), bytes, || {
+                c.archive
+                    .write_into_with(
+                        &mut std::io::sink(),
+                        threads,
+                        cusz::container::TAIL_SEGMENT_BYTES,
+                    )
+                    .unwrap();
+            });
+            let rs_mono =
+                bench.run(&format!("{} {pname} serialize-legacy-x2", ds.name()), bytes, || {
+                    for _ in 0..2 {
+                        c.archive
+                            .write_into_with(&mut std::io::sink(), 1, usize::MAX)
+                            .unwrap();
+                    }
+                });
+            let g = |d: std::time::Duration| bytes as f64 / d.as_secs_f64().max(1e-12) / 1e9;
+            let ratio = bytes as f64 / c.bytes.len().max(1) as f64;
+            let stage_speedup =
+                rs_mono.mean.as_secs_f64() / rs_seg.mean.as_secs_f64().max(1e-12);
+            let old_e2e =
+                rc.mean.as_secs_f64() - rs_seg.mean.as_secs_f64() + rs_mono.mean.as_secs_f64();
+            let e2e_speedup = old_e2e / rc.mean.as_secs_f64().max(1e-12);
+            let t = &c.stats.timer;
+
+            rows.push(vec![
+                format!("{} {pname}", ds.name()),
+                format!("{mb:.0}"),
+                format!("{ratio:.2}"),
+                format!("{:.3}", g(rc.mean)),
+                format!("{:.3}", g(rd.mean)),
+                format!("{stage_speedup:.2}x"),
+                format!("{e2e_speedup:.2}x"),
+            ]);
+            json_profiles.push(format!(
+                concat!(
+                    "    {{\"dataset\": \"{}\", \"field\": \"{}\", \"codec\": \"{}\", ",
+                    "\"lossless\": \"{}\", \"granularity\": \"{}\",\n",
+                    "     \"original_mb\": {}, \"compressed_mb\": {}, \"ratio\": {},\n",
+                    "     \"compress_gbps\": {}, \"decompress_gbps\": {},\n",
+                    "     \"stages\": {{\"predict_quant_gbps\": {}, \"histogram_gbps\": {}, ",
+                    "\"codebook_ms\": {}, \"encode_deflate_gbps\": {}, \"container_gbps\": {}}},\n",
+                    "     \"serialize\": {{\"segmented_ms\": {}, \"monolithic_x2_ms\": {}, ",
+                    "\"stage_speedup\": {}, \"e2e_speedup_vs_monolithic\": {}}}}}"
+                ),
+                ds.name(),
+                bench_field_name(ds),
+                encoder.name(),
+                match lossless {
+                    LosslessStage::None => "none",
+                    LosslessStage::Gzip => "gzip",
+                    LosslessStage::Zstd => "zstd",
+                },
+                granularity.name(),
+                jnum(mb),
+                jnum(c.bytes.len() as f64 / 1e6),
+                jnum(ratio),
+                jnum(g(rc.mean)),
+                jnum(g(rd.mean)),
+                jnum(g(t.total("1.predict-quant"))),
+                jnum(g(t.total("2.histogram"))),
+                jnum(t.total("3.codebook").as_secs_f64() * 1e3),
+                jnum(g(t.total("5.encode-deflate"))),
+                jnum(g(t.total("6.container"))),
+                jnum(rs_seg.mean.as_secs_f64() * 1e3),
+                jnum(rs_mono.mean.as_secs_f64() * 1e3),
+                jnum(stage_speedup),
+                jnum(e2e_speedup),
+            ));
+        }
+    }
+
+    print_table(
+        "Pipeline bench (GB/s of original data; speedups vs pre-zero-copy serialization)",
+        &["dataset/profile", "MB", "CR", "compress", "decompress", "ser-stage", "e2e"],
+        &rows,
+    );
+
+    let json = format!(
+        "{{\n  \"schema\": \"cusz-bench-pipeline/v1\",\n  \"engine\": \"{}\",\n  \
+         \"threads\": {},\n  \"quick\": {},\n  \"scale\": {},\n  \"profiles\": [\n{}\n  ]\n}}\n",
+        engine_name,
+        threads,
+        quick,
+        scale,
+        json_profiles.join(",\n")
+    );
+    let out = cli.get("out");
+    std::fs::write(&out, &json).with_context(|| format!("writing {out}"))?;
+    println!("\nwrote {out} ({} profiles)", json_profiles.len());
     Ok(())
 }
 

@@ -22,7 +22,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::container::Archive;
-use crate::coordinator::{CompressStats, Coordinator, DecompressStats};
+use crate::coordinator::{CompressStats, CompressedField, Coordinator, DecompressStats};
 use crate::field::Field;
 use crate::store::Store;
 use crate::util::pool::{bounded, FanStage};
@@ -52,11 +52,7 @@ impl Default for BatchConfig {
 
 impl BatchConfig {
     pub fn effective_workers(&self) -> usize {
-        if self.workers > 0 {
-            self.workers
-        } else {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
-        }
+        crate::util::pool::effective_threads(self.workers)
     }
 }
 
@@ -188,14 +184,17 @@ impl BatchCompressor {
     }
 
     /// Stream `fields` through the worker pipeline, handing each finished
-    /// archive (with its stats) to `sink` on the calling thread. A sink
-    /// error aborts the run (producer and workers unwind via channel
-    /// hang-up); per-job compression errors are collected, not fatal.
+    /// [`CompressedField`] (archive + its single serialization + stats)
+    /// to `sink` on the calling thread. Workers serialize inside
+    /// `compress_encoded`, so sinks write `bytes` as-is and never
+    /// re-serialize. A sink error aborts the run (producer and workers
+    /// unwind via channel hang-up); per-job compression errors are
+    /// collected, not fatal.
     pub fn run<I, S>(&self, fields: I, mut sink: S) -> Result<ServiceStats>
     where
         I: IntoIterator<Item = Field>,
         I::IntoIter: Send + 'static,
-        S: FnMut(&str, Archive, &CompressStats) -> Result<()>,
+        S: FnMut(&str, CompressedField) -> Result<()>,
     {
         let workers = self.cfg.effective_workers();
         let depth = self.cfg.queue_depth.max(1);
@@ -204,7 +203,7 @@ impl BatchCompressor {
         let coord = Arc::clone(&self.coord);
         let fan = FanStage::spawn(rx, workers, depth, "compress", move |field: Field| {
             let name = field.name.clone();
-            (name, coord.compress_with_stats(&field))
+            (name, coord.compress_encoded(&field))
         });
         let fields = fields.into_iter();
         let producer = std::thread::Builder::new()
@@ -223,8 +222,9 @@ impl BatchCompressor {
         let mut sink_err = None;
         for (name, result) in fan.rx.iter() {
             match result {
-                Ok((archive, job_stats)) => {
-                    if let Err(e) = sink(&name, archive, &job_stats) {
+                Ok(compressed) => {
+                    let job_stats = compressed.stats.clone();
+                    if let Err(e) = sink(&name, compressed) {
                         sink_err = Some(e.context(format!("sink failed on '{name}'")));
                         break;
                     }
@@ -252,9 +252,11 @@ impl BatchCompressor {
     }
 
     /// Convenience: run the batch and write every archive into `store`
-    /// under its field name. The store's index is committed once at the
-    /// end of the run (payload appends are still immediate), so ingesting
-    /// N fields costs one index rewrite instead of N. After the drain, if
+    /// under its field name. Each worker's single serialization is
+    /// appended as-is (`Store::add_bytes`) — the store never re-encodes.
+    /// The store's index is committed once at the end of the run (payload
+    /// appends are still immediate), so ingesting N fields costs one
+    /// index rewrite instead of N. After the drain, if
     /// `BatchConfig::compact_threshold` is set and the store's dead bytes
     /// exceed that fraction of its live bytes, the bundle is compacted in
     /// place (atomic directory swap) and the reclaimed bytes recorded.
@@ -264,7 +266,11 @@ impl BatchCompressor {
         I::IntoIter: Send + 'static,
     {
         store.set_deferred_index(true)?;
-        let result = self.run(fields, |_name, archive, _stats| store.add(&archive).map(|_| ()));
+        let result = self.run(fields, |_name, c| {
+            store
+                .add_bytes(&c.archive.header.field_name, &c.bytes)
+                .map(|_| ())
+        });
         // commit whatever landed, even if the run errored mid-stream
         let commit = store.set_deferred_index(false);
         let mut stats = result?;
@@ -346,9 +352,13 @@ impl BatchDecompressor {
         let depth = self.cfg.queue_depth.max(1);
         let (tx, rx) = bounded::<(String, Vec<u8>)>(depth);
         let coord = Arc::clone(&self.coord);
+        // the drain pool already fans out across fields: split the
+        // machine-wide thread budget across the workers so a drain does
+        // not multiply the segmented-tail decode by the worker count
+        let job_threads = (self.coord.cfg.effective_threads() / workers).max(1);
         let fan = FanStage::spawn(rx, workers, depth, "decompress", move |job: (String, Vec<u8>)| {
             let (name, bytes) = job;
-            let result = Archive::from_bytes(&bytes)
+            let result = Archive::from_bytes_with_threads(&bytes, job_threads)
                 .and_then(|archive| coord.decompress_with_stats(&archive));
             (name, result)
         });
@@ -483,7 +493,7 @@ mod tests {
             BatchConfig { workers: 2, queue_depth: 1, ..Default::default() },
         );
         let mut seen = 0usize;
-        let result = batch.run(fields(50), |_, _, _| {
+        let result = batch.run(fields(50), |_, _| {
             seen += 1;
             if seen >= 3 {
                 anyhow::bail!("store full");
@@ -491,6 +501,26 @@ mod tests {
             Ok(())
         });
         assert!(result.is_err());
+    }
+
+    #[test]
+    fn sink_receives_the_single_serialization() {
+        // the bytes handed to the sink must be exactly what the archive
+        // serializes to — the sink never needs (and never triggers) a
+        // second serialization pass
+        let batch = BatchCompressor::new(coordinator(), BatchConfig::default());
+        let mut checked = 0usize;
+        batch
+            .run(fields(3), |name, c| {
+                assert_eq!(c.archive.header.field_name, name);
+                assert_eq!(c.bytes.len(), c.stats.compressed_bytes);
+                let reparsed = Archive::from_bytes(&c.bytes).unwrap();
+                assert_eq!(reparsed, c.archive);
+                checked += 1;
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(checked, 3);
     }
 
     #[test]

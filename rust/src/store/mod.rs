@@ -33,12 +33,12 @@ pub mod index;
 pub mod lock;
 
 use std::fs::{self, File, OpenOptions};
-use std::io::{Read, Seek, SeekFrom, Write};
+use std::io::{self, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use crate::container::bytes::crc32;
+use crate::container::bytes::{crc32, Crc32};
 use crate::container::Archive;
 
 pub use index::{StoreEntry, StoreIndex};
@@ -63,6 +63,39 @@ pub struct Store {
 
 fn shard_file_name(i: u32) -> String {
     format!("shard-{i:04}.cuszs")
+}
+
+/// Digests everything written through it, so a streamed shard append can
+/// record the payload CRC without ever buffering the payload.
+struct CrcWriter<W: Write> {
+    inner: W,
+    crc: Crc32,
+}
+
+impl<W: Write> CrcWriter<W> {
+    fn new(inner: W) -> Self {
+        CrcWriter { inner, crc: Crc32::new() }
+    }
+
+    fn crc(&self) -> u32 {
+        self.crc.finish()
+    }
+
+    fn into_inner(self) -> W {
+        self.inner
+    }
+}
+
+impl<W: Write> Write for CrcWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        let n = self.inner.write(buf)?;
+        self.crc.update(&buf[..n]);
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
 }
 
 impl Store {
@@ -221,21 +254,50 @@ impl Store {
     }
 
     /// Compress-side entry point: append one archive under its header's
-    /// field name. Fails on duplicate names (remove first).
+    /// field name, streaming the serialization straight into the shard
+    /// file — the payload is never materialized in memory, and the CRC
+    /// the index records is digested as the bytes flow past. Fails on
+    /// duplicate names (remove first). A write error mid-stream leaves
+    /// unindexed partial bytes in the shard (dead space, reclaimed by
+    /// compaction), never a corrupt index entry.
     pub fn add(&mut self, archive: &Archive) -> Result<StoreEntry> {
-        self.add_bytes(&archive.header.field_name, &archive.to_bytes())
+        let name = archive.header.field_name.clone();
+        self.append_streamed(
+            &name,
+            archive.header_digest(),
+            archive.header.dims.clone(),
+            // `&mut w`: write_into is generic over a sized writer, so it
+            // takes a &mut to the trait-object reference itself
+            |mut w| archive.write_into(&mut w).map_err(anyhow::Error::from),
+        )
     }
 
     /// Append a pre-serialized `.cusza` payload under `name`. Validates
     /// the payload's framing (magic + header section) before committing.
     pub fn add_bytes(&mut self, name: &str, payload: &[u8]) -> Result<StoreEntry> {
+        let header = Archive::peek_header(payload)
+            .with_context(|| format!("payload for '{name}' is not a valid .cusza archive"))?;
+        self.append_streamed(name, crc32(&header.to_bytes()), header.dims, |w| {
+            w.write_all(payload)?;
+            Ok(payload.len() as u64)
+        })
+    }
+
+    /// The one append path both entry points share: duplicate-name
+    /// check, least-loaded shard choice, CRC-digesting streamed write,
+    /// index-entry commit. `write` streams the payload into the provided
+    /// sink and returns its byte length.
+    fn append_streamed(
+        &mut self,
+        name: &str,
+        header_digest: u32,
+        dims: Vec<usize>,
+        write: impl FnOnce(&mut dyn Write) -> Result<u64>,
+    ) -> Result<StoreEntry> {
         self.ensure_writer_lock()?;
         if self.find(name).is_some() {
             bail!("field '{name}' already in store (remove it first)");
         }
-        let header = Archive::peek_header(payload)
-            .with_context(|| format!("payload for '{name}' is not a valid .cusza archive"))?;
-        let header_digest = crc32(&header.to_bytes());
 
         // least-loaded shard keeps payloads spread for parallel readers
         let shard = self
@@ -251,21 +313,26 @@ impl Store {
             .open(&path)
             .with_context(|| format!("opening shard {}", path.display()))?;
         let offset = f.seek(SeekFrom::End(0))?;
-        f.write_all(payload)
-            .with_context(|| format!("appending to shard {}", path.display()))?;
+        let mut w = CrcWriter::new(BufWriter::new(&mut f));
+        let len = write(&mut w)
+            .with_context(|| format!("appending '{name}' to shard {}", path.display()))?;
+        let payload_crc = w.crc();
+        w.into_inner()
+            .flush()
+            .with_context(|| format!("flushing shard {}", path.display()))?;
         f.flush()?;
 
         let entry = StoreEntry {
             name: name.to_string(),
             shard,
             offset,
-            len: payload.len() as u64,
-            payload_crc: crc32(payload),
+            len,
+            payload_crc,
             header_digest,
-            dims: header.dims,
+            dims,
         };
         self.index.entries.push(entry.clone());
-        self.shard_sizes[shard as usize] = offset + payload.len() as u64;
+        self.shard_sizes[shard as usize] = offset + len;
         if !self.defer_index {
             self.write_index()?;
         }

@@ -1,0 +1,148 @@
+//! Thread-local scratch arenas: reusable buffers for the hot encode path.
+//!
+//! The compressor's inner loops need short-lived scratch — the slab
+//! gather buffer, the chunk stitch buffer when a codec window straddles a
+//! slab boundary, the serialized archive body — and allocating them per
+//! call turns the encode path into an allocator benchmark. Each `with_*`
+//! helper loans a `Vec` from a small per-thread pool and returns it when
+//! the closure exits, so a worker that processes many chunks (or a
+//! long-lived `serve` worker that processes many fields) pays for the
+//! allocation once and reuses the capacity thereafter.
+//!
+//! Contract: the loaned buffer's **contents and length are unspecified**
+//! (it arrives exactly as the previous user left it) — callers must
+//! `clear()`/`resize()` for their own needs. This is deliberate: the slab
+//! gather path overwrites every element of a full slab and must not pay
+//! for a redundant zeroing pass (EXPERIMENTS.md §Perf iteration 3).
+//!
+//! Pools are bounded both in entry count and per-buffer capacity so a
+//! one-off huge loan on a long-lived thread does not pin memory forever;
+//! a buffer that grew beyond [`MAX_RETAINED_BYTES`] is dropped instead of
+//! pooled. Panic safety: if the closure unwinds, the buffer is simply
+//! dropped — the pool never sees a poisoned entry.
+
+use std::cell::RefCell;
+
+/// Max buffers retained per type per thread.
+const MAX_POOLED: usize = 4;
+/// Total capacity budget (in bytes) a pool may retain, per element type
+/// per thread. 256 MiB covers one serialized body for the largest bench
+/// fields; the budget is for the whole pool, so a worker that once saw a
+/// huge field pins at most one body-sized buffer, not `MAX_POOLED` of
+/// them.
+const MAX_RETAINED_BYTES: usize = 256 << 20;
+
+macro_rules! scratch_pool {
+    ($(#[$doc:meta])* $pool:ident, $with:ident, $t:ty) => {
+        thread_local! {
+            static $pool: RefCell<Vec<Vec<$t>>> = const { RefCell::new(Vec::new()) };
+        }
+
+        $(#[$doc])*
+        pub fn $with<R>(f: impl FnOnce(&mut Vec<$t>) -> R) -> R {
+            let mut buf: Vec<$t> = $pool
+                .with(|p| p.borrow_mut().pop())
+                .unwrap_or_default();
+            let out = f(&mut buf);
+            if buf.capacity() > 0 {
+                $pool.with(|p| {
+                    let mut p = p.borrow_mut();
+                    let retained: usize = p
+                        .iter()
+                        .map(|b| b.capacity() * std::mem::size_of::<$t>())
+                        .sum();
+                    if p.len() < MAX_POOLED
+                        && retained + buf.capacity() * std::mem::size_of::<$t>()
+                            <= MAX_RETAINED_BYTES
+                    {
+                        p.push(buf);
+                    }
+                });
+            }
+            out
+        }
+    };
+}
+
+scratch_pool!(
+    /// Loan a `Vec<u16>` — the codec chunk stitch buffer (symbol windows
+    /// that straddle slab boundaries).
+    U16_POOL, with_u16, u16
+);
+scratch_pool!(
+    /// Loan a `Vec<u8>` — serialized-body and lossless-tail scratch.
+    U8_POOL, with_u8, u8
+);
+scratch_pool!(
+    /// Loan a `Vec<f32>` — the per-slab gather buffer.
+    F32_POOL, with_f32, f32
+);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_is_reused_across_loans() {
+        // warm the pool with a grown buffer...
+        with_u16(|b| {
+            b.clear();
+            b.resize(10_000, 7);
+        });
+        // ...and the next loan on this thread starts with that capacity
+        let cap = with_u16(|b| b.capacity());
+        assert!(cap >= 10_000, "pool did not retain capacity ({cap})");
+    }
+
+    #[test]
+    fn contents_are_unspecified_but_owned() {
+        with_u8(|b| {
+            b.clear();
+            b.extend_from_slice(b"residue");
+        });
+        // a second loan may see the residue — that is the documented
+        // contract; clearing makes it usable
+        with_u8(|b| {
+            b.clear();
+            assert!(b.is_empty());
+        });
+    }
+
+    #[test]
+    fn nested_loans_get_distinct_buffers() {
+        with_f32(|outer| {
+            outer.clear();
+            outer.push(1.0);
+            with_f32(|inner| {
+                inner.clear();
+                inner.push(2.0);
+                assert_ne!(outer.as_ptr(), inner.as_ptr());
+            });
+            assert_eq!(outer[0], 1.0);
+        });
+    }
+
+    #[test]
+    fn threads_have_isolated_pools() {
+        with_u16(|b| {
+            b.clear();
+            b.resize(5000, 1);
+        });
+        let other_cap = std::thread::spawn(|| with_u16(|b| b.capacity()))
+            .join()
+            .unwrap();
+        // a fresh thread starts cold (0 capacity from a default Vec)
+        assert_eq!(other_cap, 0);
+    }
+
+    #[test]
+    fn oversized_buffers_are_not_hoarded() {
+        let huge = MAX_RETAINED_BYTES + 16;
+        with_u8(|b| {
+            b.clear();
+            b.reserve_exact(huge);
+        });
+        // next loan must not hand back the >cap buffer
+        with_u8(|b| assert!(b.capacity() * std::mem::size_of::<u8>() <= MAX_RETAINED_BYTES));
+    }
+}

@@ -3,6 +3,7 @@
 //! [`pool`] ~ a bounded-queue worker pool (tokio substitute for this
 //! pipeline's needs), [`cli`] ~ clap, [`bench`] ~ criterion.
 
+pub mod arena;
 pub mod bench;
 pub mod bitio;
 pub mod cli;

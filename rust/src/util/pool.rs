@@ -7,21 +7,49 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
 
+/// Resolve a worker-count knob: positive values pass through, 0 means
+/// one per available core (fallback 4 when the core count is unknown).
+/// The one home of this fallback — `CuszConfig::effective_threads`,
+/// `BatchConfig::effective_workers`, and the container's tail codec all
+/// delegate here.
+pub fn effective_threads(threads: usize) -> usize {
+    if threads > 0 {
+        threads
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    }
+}
+
 /// Run `f(i, &items[i])` for every index across `threads` workers and
-/// collect results in order. Work-stealing via an atomic cursor keeps load
-/// balanced when chunk costs vary (tail chunks, zero-heavy blocks).
+/// collect results in order. Built on the range-native
+/// [`parallel_map_range`], so no index vector is ever materialized.
 pub fn parallel_map<T, R, F>(threads: usize, items: &[T], f: F) -> Vec<R>
 where
     T: Sync,
     R: Send,
     F: Fn(usize, &T) -> R + Sync,
 {
-    let threads = threads.max(1).min(items.len().max(1));
-    if threads <= 1 || items.len() <= 1 {
-        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    parallel_map_range(threads, items.len(), |i| f(i, &items[i]))
+}
+
+/// Run `f(i)` for every `i in 0..n` across `threads` workers and collect
+/// results in order. Work-stealing via an atomic cursor keeps load
+/// balanced when per-index costs vary (tail chunks, zero-heavy blocks).
+/// Range-native: the work list is the range itself — nothing is
+/// materialized per item, and the `threads <= 1` path collects directly
+/// with no `Vec<Option<R>>` slots and no atomics.
+pub fn parallel_map_range<R, F>(threads: usize, n: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        // single-thread fast path: straight collect, no slot vector
+        return (0..n).map(&f).collect();
     }
     let cursor = AtomicUsize::new(0);
-    let mut out: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
     let out_ptr = SendPtr(out.as_mut_ptr());
 
     std::thread::scope(|s| {
@@ -30,10 +58,10 @@ where
                 let out_ptr = out_ptr; // copy the Send wrapper into the thread
                 loop {
                     let i = cursor.fetch_add(1, Ordering::Relaxed);
-                    if i >= items.len() {
+                    if i >= n {
                         break;
                     }
-                    let r = f(i, &items[i]);
+                    let r = f(i);
                     // SAFETY: each index is claimed exactly once by the
                     // atomic cursor, so writes are disjoint; the scope
                     // guarantees `out` outlives all workers.
@@ -44,16 +72,6 @@ where
     });
 
     out.into_iter().map(|r| r.expect("slot filled")).collect()
-}
-
-/// Like `parallel_map` but over index ranges (avoids materializing items).
-pub fn parallel_map_range<R, F>(threads: usize, n: usize, f: F) -> Vec<R>
-where
-    R: Send,
-    F: Fn(usize) -> R + Sync,
-{
-    let idx: Vec<usize> = (0..n).collect();
-    parallel_map(threads, &idx, |_, &i| f(i))
 }
 
 struct SendPtr<T>(*mut T);
@@ -198,6 +216,41 @@ mod tests {
         let empty: Vec<u32> = vec![];
         assert!(parallel_map(8, &empty, |_, &x| x).is_empty());
         assert_eq!(parallel_map(8, &[42u32], |_, &x| x + 1), vec![43]);
+    }
+
+    #[test]
+    fn parallel_map_range_matches_sequential_reference() {
+        for threads in [1usize, 2, 7, 32] {
+            for n in [0usize, 1, 2, 63, 1000] {
+                let out = parallel_map_range(threads, n, |i| i * i + 1);
+                let want: Vec<usize> = (0..n).map(|i| i * i + 1).collect();
+                assert_eq!(out, want, "threads={threads} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_map_range_runs_every_index_once() {
+        let count = AtomicU64::new(0);
+        let seen_sum = AtomicU64::new(0);
+        parallel_map_range(4, 777, |i| {
+            count.fetch_add(1, Ordering::Relaxed);
+            seen_sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 777);
+        assert_eq!(seen_sum.load(Ordering::Relaxed), 776 * 777 / 2);
+    }
+
+    #[test]
+    fn single_thread_path_runs_on_calling_thread() {
+        // the fast path must not spawn: thread-identity observable via
+        // a thread-local side effect
+        thread_local! {
+            static HITS: std::cell::Cell<u32> = const { std::cell::Cell::new(0) };
+        }
+        HITS.with(|h| h.set(0));
+        parallel_map_range(1, 100, |_| HITS.with(|h| h.set(h.get() + 1)));
+        assert_eq!(HITS.with(|h| h.get()), 100);
     }
 
     #[test]

@@ -2,11 +2,13 @@
 """Golden-fixture generator for the archive-format compatibility corpus.
 
 Emits byte-exact legacy archives (CUSZA1 = format version 0, CUSZA2 =
-format version 1) plus a `.cuszb` bundle containing them, together with
-the exact f32 field each archive decodes to. `tests/format_compat.rs`
-decodes every fixture with the current code and compares byte-for-byte —
-so a format bump that would orphan old payloads fails CI instead of
-shipping.
+format version 1), current-generation CUSZA3 archives (format version 3:
+granularity byte, optional per-chunk tag table, and the segmented
+gzip lossless tail introduced by the zero-copy encode path), plus a
+`.cuszb` bundle, together with the exact f32 field every archive decodes
+to. `tests/format_compat.rs` decodes every fixture with the current code
+and compares byte-for-byte — so a format bump that would orphan old (or
+current) payloads fails CI instead of shipping.
 
 The payloads are built from first principles (bit-level mirrors of the
 canonical-Huffman and FLE chunk codecs, the container framing, and the
@@ -186,10 +188,13 @@ def pstr(s):
     return struct.pack("<I", len(b)) + b
 
 
-def header_bytes(version, encoder_tag, name, eb_mode, eb_value, repr_bits, lossless_tag):
+def header_bytes(version, encoder_tag, name, eb_mode, eb_value, repr_bits, lossless_tag,
+                 granularity=0):
     h = b""
     if version >= 1:
         h += struct.pack("<BB", version, encoder_tag)
+    if version >= 2:
+        h += struct.pack("<B", granularity)
     h += pstr(name)
     h += struct.pack("<I", 1) + struct.pack("<Q", N)      # dims
     h += pstr("1d_64k")                                    # variant
@@ -201,13 +206,19 @@ def header_bytes(version, encoder_tag, name, eb_mode, eb_value, repr_bits, lossl
     return h
 
 
-def body_bytes(aux, chunks, outliers, verbatim):
+def body_bytes(aux, chunks, outliers, verbatim, version=1, chunk_tags=None, chunk_aux=None):
     b = struct.pack("<I", len(aux)) + aux
     b += struct.pack("<II", len(chunks), CHUNK)
     for words, bits, symbols in chunks:
         b += struct.pack("<QII", bits, symbols, len(words))
         for w in words:
             b += struct.pack("<Q", w)
+    if version >= 2:
+        tags = bytes(chunk_tags or [])
+        b += struct.pack("<I", len(tags)) + tags
+        if tags:
+            for rec in chunk_aux:
+                b += struct.pack("<B", len(rec)) + bytes(rec)
     b += struct.pack("<Q", len(outliers))
     for pos, d in outliers:
         b += struct.pack("<Qi", pos, d)
@@ -217,8 +228,24 @@ def body_bytes(aux, chunks, outliers, verbatim):
     return b
 
 
-def archive_bytes(magic, header, body, gzip_body=False):
-    if gzip_body:
+def segmented_gzip_tail(body, seg_bytes):
+    """Mirror of container::encode_segmented_tail (format version 3):
+    [u64 raw_total][u32 n_segments] + per-segment [u64 raw][u64 comp]
+    table + concatenated gzip payloads."""
+    nsegs = max(1, -(-len(body) // seg_bytes))
+    parts = [gzip.compress(body[i * seg_bytes:(i + 1) * seg_bytes], mtime=0)
+             for i in range(nsegs)]
+    out = struct.pack("<QI", len(body), nsegs)
+    for i, p in enumerate(parts):
+        raw = min((i + 1) * seg_bytes, len(body)) - i * seg_bytes
+        out += struct.pack("<QQ", raw, len(p))
+    return out + b"".join(parts)
+
+
+def archive_bytes(magic, header, body, gzip_body=False, gzip_seg_bytes=None):
+    if gzip_seg_bytes is not None:
+        body = segmented_gzip_tail(body, gzip_seg_bytes)
+    elif gzip_body:
         body = gzip.compress(body, mtime=0)
     return magic + section(header) + section(body)
 
@@ -280,10 +307,51 @@ def main():
         body_fle,
     )
 
+    # CUSZA3 / format version 3: granularity byte in the header, tag-table
+    # section in the body (empty at field granularity), segmented gzip
+    # tail. Small 16 KiB segments force a real multi-segment table on the
+    # ~84 KB body (the Rust writer's floor is larger; readers accept any).
+    body_fle_v3 = body_bytes(fle_aux, fle, outliers, verbatim, version=3)
+    v3_fle = archive_bytes(
+        b"CUSZA3\x00\x00",
+        header_bytes(3, 1, "fixture/v3-fle", 0, ABS_EB, max(fle_aux), 0),
+        body_fle_v3,
+    )
+    body_huff_v3 = body_bytes(huff_aux, huff, outliers, verbatim, version=3)
+    v3_gzseg = archive_bytes(
+        b"CUSZA3\x00\x00",
+        header_bytes(3, 0, "fixture/v3-huffman-gzipseg", 1, 1e-3, 32, 1),
+        body_huff_v3,
+        gzip_seg_bytes=16 * 1024,
+    )
+    # chunk granularity: even chunks huffman (sharing the all-10 codebook
+    # in the field aux), odd chunks FLE (1-byte width sidecar records)
+    mixed_chunks, mixed_tags, mixed_aux = [], [], []
+    for ci in range(len(huff)):
+        if ci % 2 == 0:
+            mixed_chunks.append(huff[ci])
+            mixed_tags.append(0)
+            mixed_aux.append(b"")
+        else:
+            mixed_chunks.append(fle[ci])
+            mixed_tags.append(1)
+            mixed_aux.append(bytes([fle_aux[ci]]))
+    body_mixed_v3 = body_bytes(huff_aux, mixed_chunks, outliers, verbatim,
+                               version=3, chunk_tags=mixed_tags, chunk_aux=mixed_aux)
+    v3_mixed = archive_bytes(
+        b"CUSZA3\x00\x00",
+        header_bytes(3, 0, "fixture/v3-mixed-gzipseg", 0, ABS_EB, 32, 1, granularity=1),
+        body_mixed_v3,
+        gzip_seg_bytes=16 * 1024,
+    )
+
     for name, data in [
         ("v0_huffman_none.cusza", v0),
         ("v1_huffman_gzip.cusza", v1_gz),
         ("v1_fle_none.cusza", v1_fle),
+        ("v3_fle_none.cusza", v3_fle),
+        ("v3_huffman_gzipseg.cusza", v3_gzseg),
+        ("v3_mixed_gzipseg.cusza", v3_mixed),
     ]:
         with open(os.path.join(HERE, name), "wb") as f:
             f.write(data)

@@ -1,7 +1,9 @@
 //! Golden-fixture compatibility corpus: pre-built `CUSZA1` (format
-//! version 0) and `CUSZA2` (format version 1) archives plus a `.cuszb`
-//! bundle, committed under `tests/fixtures/` with the exact f32 field
-//! each one decodes to (see `fixtures/make_fixtures.py` for provenance).
+//! version 0), `CUSZA2` (format version 1), and `CUSZA3` (format
+//! version 3: granularity byte, tag table, segmented lossless tail)
+//! archives plus a `.cuszb` bundle, committed under `tests/fixtures/`
+//! with the exact f32 field each one decodes to (see
+//! `fixtures/make_fixtures.py` for provenance).
 //!
 //! Every fixture must keep decoding byte-for-byte under the current
 //! code, and the uncompressed ones must re-serialize to their original
@@ -47,6 +49,7 @@ fn check_fixture(
     name: &str,
     version: u8,
     encoder: EncoderKind,
+    granularity: CodecGranularity,
     expect_byte_stable: bool,
 ) -> Archive {
     let bytes = std::fs::read(fixture_path(name)).unwrap();
@@ -54,8 +57,12 @@ fn check_fixture(
         .unwrap_or_else(|e| panic!("{name}: no longer parses: {e:#}"));
     assert_eq!(archive.header.version, version, "{name}");
     assert_eq!(archive.header.encoder, encoder, "{name}");
-    assert_eq!(archive.header.granularity, CodecGranularity::Field, "{name}");
-    assert!(archive.chunk_tags.is_empty(), "{name}: legacy archives have no tag table");
+    assert_eq!(archive.header.granularity, granularity, "{name}");
+    assert_eq!(
+        granularity == CodecGranularity::Chunk,
+        !archive.chunk_tags.is_empty(),
+        "{name}: tag table presence must match the granularity byte"
+    );
     assert_eq!(Archive::peek_header(&bytes).unwrap(), archive.header, "{name}");
 
     let expected = expected_field();
@@ -86,7 +93,13 @@ fn check_fixture(
 
 #[test]
 fn v0_huffman_fixture_decodes() {
-    let a = check_fixture("v0_huffman_none.cusza", 0, EncoderKind::Huffman, true);
+    let a = check_fixture(
+        "v0_huffman_none.cusza",
+        0,
+        EncoderKind::Huffman,
+        CodecGranularity::Field,
+        true,
+    );
     assert_eq!(a.header.field_name, "fixture/v0-huffman");
     assert_eq!(a.header.eb, ErrorBound::Abs(0.03125));
     assert_eq!(a.outliers.len(), 34);
@@ -97,31 +110,88 @@ fn v0_huffman_fixture_decodes() {
 fn v1_huffman_gzip_fixture_decodes() {
     // gzip bodies are not byte-stable across deflate implementations, so
     // only the decode direction is pinned for this one
-    let a = check_fixture("v1_huffman_gzip.cusza", 1, EncoderKind::Huffman, false);
+    let a = check_fixture(
+        "v1_huffman_gzip.cusza",
+        1,
+        EncoderKind::Huffman,
+        CodecGranularity::Field,
+        false,
+    );
     assert_eq!(a.header.field_name, "fixture/v1-huffman-gzip");
     assert_eq!(a.header.eb, ErrorBound::ValRel(1e-3));
 }
 
 #[test]
 fn v1_fle_fixture_decodes() {
-    let a = check_fixture("v1_fle_none.cusza", 1, EncoderKind::Fle, true);
+    let a =
+        check_fixture("v1_fle_none.cusza", 1, EncoderKind::Fle, CodecGranularity::Field, true);
     assert_eq!(a.header.field_name, "fixture/v1-fle");
     // FLE sidecar: one width byte per chunk
     assert_eq!(a.encoder_aux.len(), a.stream.chunks.len());
 }
 
 #[test]
+fn v3_fle_fixture_decodes_and_is_byte_stable() {
+    // the current generation, uncompressed: parse + decode + re-serialize
+    // byte-for-byte (store payload CRCs depend on the re-serialization)
+    let a =
+        check_fixture("v3_fle_none.cusza", 3, EncoderKind::Fle, CodecGranularity::Field, true);
+    assert_eq!(a.header.field_name, "fixture/v3-fle");
+    assert_eq!(a.encoder_aux.len(), a.stream.chunks.len());
+}
+
+#[test]
+fn v3_segmented_gzip_fixture_decodes() {
+    // the zero-copy encode path's segmented lossless tail: the fixture
+    // carries a real multi-segment table (16 KiB segments over an ~84 KB
+    // body) and must keep decoding even if the writer's segment sizing
+    // changes — segmentation is a writer property, readers accept any
+    let a = check_fixture(
+        "v3_huffman_gzipseg.cusza",
+        3,
+        EncoderKind::Huffman,
+        CodecGranularity::Field,
+        false,
+    );
+    assert_eq!(a.header.field_name, "fixture/v3-huffman-gzipseg");
+}
+
+#[test]
+fn v3_mixed_granularity_segmented_fixture_decodes() {
+    // chunk granularity (huffman/FLE tag table) under a segmented tail
+    let a = check_fixture(
+        "v3_mixed_gzipseg.cusza",
+        3,
+        EncoderKind::Huffman,
+        CodecGranularity::Chunk,
+        false,
+    );
+    assert_eq!(a.header.field_name, "fixture/v3-mixed-gzipseg");
+    assert_eq!(a.chunk_tags.len(), a.stream.chunks.len());
+    assert!(a.chunk_tags.contains(&EncoderKind::Huffman.to_tag()));
+    assert!(a.chunk_tags.contains(&EncoderKind::Fle.to_tag()));
+}
+
+#[test]
 fn all_fixture_archives_decode_to_the_same_field() {
-    // three encodings of one field: their symbol streams must agree
+    // six encodings of one field: their symbol streams must agree
     let coord = cpu_coordinator();
     let mut decoded = Vec::new();
-    for name in ["v0_huffman_none.cusza", "v1_huffman_gzip.cusza", "v1_fle_none.cusza"] {
+    for name in [
+        "v0_huffman_none.cusza",
+        "v1_huffman_gzip.cusza",
+        "v1_fle_none.cusza",
+        "v3_fle_none.cusza",
+        "v3_huffman_gzipseg.cusza",
+        "v3_mixed_gzipseg.cusza",
+    ] {
         let archive = Archive::from_bytes(&std::fs::read(fixture_path(name)).unwrap()).unwrap();
         decoded.push(coord.decompress(&archive).unwrap().data);
     }
     let bits = |v: &Vec<f32>| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
-    assert_eq!(bits(&decoded[0]), bits(&decoded[1]));
-    assert_eq!(bits(&decoded[0]), bits(&decoded[2]));
+    for other in &decoded[1..] {
+        assert_eq!(bits(&decoded[0]), bits(other));
+    }
 }
 
 #[test]

@@ -177,7 +177,7 @@ fn prop_versioned_header_roundtrip_and_tag_rejection() {
 
 #[test]
 fn prop_codec_matrix_roundtrip_error_bound() {
-    use cusz::codec::{CodecSpec, EncoderChoice};
+    use cusz::codec::{CodecGranularity, CodecSpec, EncoderChoice};
     use cusz::config::LosslessStage;
 
     check("every codec combination obeys eb through archive bytes", |rng| {
@@ -188,6 +188,7 @@ fn prop_codec_matrix_roundtrip_error_bound() {
                 &[EncoderChoice::Huffman, EncoderChoice::Fle, EncoderChoice::Auto],
             ),
             lossless: *gen::pick(rng, &[LosslessStage::None, LosslessStage::Zstd]),
+            granularity: *gen::pick(rng, &[CodecGranularity::Field, CodecGranularity::Chunk]),
         };
         let coord = Coordinator::new(CuszConfig {
             backend: BackendKind::Cpu,
@@ -207,6 +208,54 @@ fn prop_codec_matrix_roundtrip_error_bound() {
                 field.data[i], out.data[i]
             )),
         }
+    });
+}
+
+#[test]
+fn prop_streaming_writer_matches_to_bytes_and_len() {
+    use cusz::codec::{CodecSpec, EncoderChoice};
+    use cusz::config::LosslessStage;
+    use cusz::container::Archive;
+
+    check("write_into == to_bytes; serialized_len == len; roundtrip", |rng| {
+        let (field, eb) = random_field(rng);
+        let codec = CodecSpec {
+            encoder: *gen::pick(
+                rng,
+                &[EncoderChoice::Huffman, EncoderChoice::Fle, EncoderChoice::Rle],
+            ),
+            lossless: *gen::pick(
+                rng,
+                &[LosslessStage::None, LosslessStage::Gzip, LosslessStage::Zstd],
+            ),
+            ..Default::default()
+        };
+        let coord = Coordinator::new(CuszConfig {
+            backend: BackendKind::Cpu,
+            eb: ErrorBound::Abs(eb),
+            codec,
+            ..Default::default()
+        })
+        .unwrap();
+        let archive = coord.compress(&field).map_err(|e| e.to_string())?;
+        let bytes = archive.to_bytes();
+        let mut streamed = Vec::new();
+        let n = archive.write_into(&mut streamed).map_err(|e| e.to_string())?;
+        if streamed != bytes {
+            return Err(format!("{codec:?}: write_into differs from to_bytes"));
+        }
+        if n as usize != bytes.len() || archive.serialized_len() != bytes.len() {
+            return Err(format!(
+                "{codec:?}: serialized_len {} / written {n} != {}",
+                archive.serialized_len(),
+                bytes.len()
+            ));
+        }
+        let back = Archive::from_bytes(&bytes).map_err(|e| e.to_string())?;
+        if back != archive {
+            return Err(format!("{codec:?}: archive != from_bytes(write_into(archive))"));
+        }
+        Ok(())
     });
 }
 

@@ -1,0 +1,193 @@
+//! Zero-copy encode path acceptance tests: exactly one serialization
+//! pass (one lossless-tail encode) per compressed field, the streaming
+//! writer's identities (`write_into` == `to_bytes`, `serialized_len` ==
+//! `to_bytes().len()`) across the codec matrix, segmented-tail
+//! corruption behavior, and end-to-end correctness when codec chunk
+//! windows straddle slab boundaries (the `SymbolSource` stitch path).
+
+use cusz::codec::{CodecGranularity, CodecSpec, EncoderChoice};
+use cusz::config::{BackendKind, CuszConfig, ErrorBound, LosslessStage};
+use cusz::container::{self, Archive};
+use cusz::coordinator::Coordinator;
+use cusz::field::Field;
+use cusz::metrics;
+use cusz::store::Store;
+use cusz::testkit::fields::{make, Regime};
+use cusz::testkit::tmp_dir;
+
+const EB: f32 = 1e-3;
+
+fn coordinator(codec: CodecSpec) -> Coordinator {
+    Coordinator::new(CuszConfig {
+        backend: BackendKind::Cpu,
+        eb: ErrorBound::Abs(EB as f64),
+        codec,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+fn sample_field(n: usize, seed: u64) -> Field {
+    Field::new(format!("zc-{seed}"), vec![n], make(Regime::Smooth, n, seed)).unwrap()
+}
+
+/// THE regression test for the old `compressed_bytes()` double
+/// serialization: compressing one field (stats included) and landing its
+/// bytes in a store must perform exactly ONE lossless-tail encode. The
+/// probe is a thread-local counter in `container`, so concurrent tests
+/// cannot pollute the delta.
+#[test]
+fn one_field_compression_is_one_tail_encode() {
+    let coord = coordinator(CodecSpec {
+        encoder: EncoderChoice::Huffman,
+        lossless: LosslessStage::Zstd,
+        ..Default::default()
+    });
+    let field = sample_field(40_000, 1);
+
+    let before = container::lossless_tail_encodes();
+    let compressed = coord.compress_encoded(&field).unwrap();
+    assert_eq!(
+        container::lossless_tail_encodes() - before,
+        1,
+        "compress_encoded (stats included) must encode the tail exactly once"
+    );
+
+    // landing the bytes in a bundle re-uses the same serialization
+    let dir = tmp_dir("zero-copy-store");
+    let mut store = Store::create(&dir, 1).unwrap();
+    store
+        .add_bytes(&compressed.archive.header.field_name, &compressed.bytes)
+        .unwrap();
+    assert_eq!(
+        container::lossless_tail_encodes() - before,
+        1,
+        "the store append must not re-serialize"
+    );
+
+    // and the stats were priced off those very bytes
+    assert_eq!(compressed.stats.compressed_bytes, compressed.bytes.len());
+    let restored = coord.decompress(&store.get(&field.name).unwrap()).unwrap();
+    assert_eq!(metrics::verify_error_bound(&field.data, &restored.data, EB), None);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// The legacy `Store::add(&archive)` path streams one serialization
+/// straight into the shard — also a single tail encode, with no payload
+/// buffer in between.
+#[test]
+fn store_add_streams_a_single_serialization() {
+    let coord = coordinator(CodecSpec {
+        encoder: EncoderChoice::Fle,
+        lossless: LosslessStage::Gzip,
+        ..Default::default()
+    });
+    let field = sample_field(30_000, 2);
+    let archive = coord.compress(&field).unwrap();
+
+    let dir = tmp_dir("zero-copy-store-add");
+    let mut store = Store::create(&dir, 1).unwrap();
+    let before = container::lossless_tail_encodes();
+    let entry = store.add(&archive).unwrap();
+    assert_eq!(container::lossless_tail_encodes() - before, 1);
+    assert_eq!(entry.len as usize, archive.serialized_len());
+
+    // integrity survives the streamed write: CRC-checked read + decode
+    let restored = store.get(&field.name).unwrap();
+    assert_eq!(restored, archive);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn serialized_len_is_exact_across_the_codec_matrix() {
+    let encoders = [
+        EncoderChoice::Huffman,
+        EncoderChoice::Fle,
+        EncoderChoice::Rle,
+        EncoderChoice::Auto,
+    ];
+    let tails = [LosslessStage::None, LosslessStage::Gzip, LosslessStage::Zstd];
+    let grains = [CodecGranularity::Field, CodecGranularity::Chunk];
+    let field = sample_field(50_000, 3);
+    for encoder in encoders {
+        for lossless in tails {
+            for granularity in grains {
+                let coord = coordinator(CodecSpec { encoder, lossless, granularity });
+                let archive = coord.compress(&field).unwrap();
+                let bytes = archive.to_bytes();
+                assert_eq!(
+                    archive.serialized_len(),
+                    bytes.len(),
+                    "{encoder:?}/{lossless:?}/{granularity:?}"
+                );
+                let mut streamed = Vec::new();
+                archive.write_into(&mut streamed).unwrap();
+                assert_eq!(streamed, bytes, "{encoder:?}/{lossless:?}/{granularity:?}");
+            }
+        }
+    }
+}
+
+/// Chunk windows that straddle slab boundaries (chunk size not dividing
+/// the slab length, multi-slab field) must roundtrip across every
+/// backend — the `SymbolSource` stitch path end to end.
+#[test]
+fn straddling_chunk_windows_roundtrip() {
+    let n = 1 << 17; // two 1d_64k slabs
+    for encoder in [
+        EncoderChoice::Huffman,
+        EncoderChoice::Fle,
+        EncoderChoice::Rle,
+        EncoderChoice::Auto,
+    ] {
+        for granularity in [CodecGranularity::Field, CodecGranularity::Chunk] {
+            let coord = Coordinator::new(CuszConfig {
+                backend: BackendKind::Cpu,
+                eb: ErrorBound::Abs(EB as f64),
+                // 3000 does not divide 65536: windows straddle the slab
+                // boundary and the tail chunk is irregular
+                chunk_symbols: 3000,
+                codec: CodecSpec { encoder, lossless: LosslessStage::Zstd, granularity },
+                ..Default::default()
+            })
+            .unwrap();
+            let field = sample_field(n, 7);
+            let compressed = coord.compress_encoded(&field).unwrap();
+            let restored = Archive::from_bytes(&compressed.bytes).unwrap();
+            let out = coord.decompress(&restored).unwrap();
+            assert_eq!(
+                metrics::verify_error_bound(&field.data, &out.data, EB),
+                None,
+                "{encoder:?}/{granularity:?}"
+            );
+        }
+    }
+}
+
+/// Corrupting a v3 segmented tail fails cleanly: truncations and bit
+/// flips error (no panic), and a lying segment table cannot force an
+/// allocation past the header-derived cap.
+#[test]
+fn segmented_tail_corruption_fails_cleanly() {
+    let coord = coordinator(CodecSpec {
+        encoder: EncoderChoice::Huffman,
+        lossless: LosslessStage::Zstd,
+        ..Default::default()
+    });
+    // big enough that the ~175 KB quant body still fits several probes
+    let field = sample_field(1 << 16, 9);
+    let bytes = coord.compress_encoded(&field).unwrap().bytes;
+    assert!(Archive::from_bytes(&bytes).is_ok());
+
+    // every truncation point errors, never panics
+    for cut in [1usize, 9, 21, bytes.len() / 2, bytes.len() - 1] {
+        assert!(Archive::from_bytes(&bytes[..cut]).is_err(), "cut {cut}");
+    }
+    // bit flips across the whole archive (magic, header, segment table,
+    // segment payloads) are rejected
+    for pos in (0..bytes.len()).step_by(bytes.len() / 23 + 1) {
+        let mut flipped = bytes.clone();
+        flipped[pos] ^= 0x10;
+        assert!(Archive::from_bytes(&flipped).is_err(), "flip at {pos}");
+    }
+}
