@@ -21,7 +21,6 @@ use super::cost::{self, CostModel};
 use super::{fle, rle, EncodeContext, EncoderKind, SymbolSource};
 use crate::huffman::{self, CanonicalCodebook, ReverseCodebook};
 use crate::huffman::deflate::{DeflatedChunk, DeflatedStream};
-use crate::util::pool::parallel_map_range;
 
 /// Output of a per-chunk encode: the tag table plus everything each tag's
 /// decoder needs.
@@ -115,19 +114,20 @@ pub fn encode_chunked(
     })
 }
 
-/// Decode a mixed archive's symbol stream. All inputs are untrusted:
-/// tag/sidecar/stream inconsistencies must error (never panic), and the
-/// claimed symbol total is capped against `max_symbols` before any chunk
-/// allocates.
-pub fn decode_chunked(
+/// Decode a mixed archive's symbol stream straight into `sink`'s per-slab
+/// destination windows — the zero-copy decompress path. All inputs are
+/// untrusted: tag/sidecar/stream inconsistencies must error (never
+/// panic), and the sink's window partition rejects any claimed symbol
+/// count that disagrees with the expected total before a chunk decodes.
+pub fn decode_chunked_into(
     tags: &[u8],
     shared_aux: &[u8],
     chunk_aux: &[Vec<u8>],
     stream: &DeflatedStream,
     dict_size: usize,
     threads: usize,
-    max_symbols: usize,
-) -> Result<Vec<u16>> {
+    sink: &mut super::SymbolSink<'_>,
+) -> Result<()> {
     if tags.len() != stream.chunks.len() {
         bail!(
             "chunk tag table has {} tags for {} chunks",
@@ -140,12 +140,6 @@ pub fn decode_chunked(
             "per-chunk sidecar has {} records for {} chunks",
             chunk_aux.len(),
             stream.chunks.len()
-        );
-    }
-    if stream.total_symbols() > max_symbols as u64 {
-        bail!(
-            "chunked stream claims {} symbols, caller expects at most {max_symbols}",
-            stream.total_symbols()
         );
     }
     let kinds: Vec<EncoderKind> = tags
@@ -165,10 +159,10 @@ pub fn decode_chunked(
     };
     let radius = (dict_size / 2) as i32;
     let cs = stream.chunk_symbols.max(1);
-    let parts: Vec<Result<Vec<u16>>> = parallel_map_range(threads, stream.chunks.len(), |ci| {
+    sink.fill_chunks(stream, threads, |ci, window| {
         let chunk = &stream.chunks[ci];
         // per-chunk symbol counts are untrusted too: bound by the chunk
-        // geometry before any backend allocates for them
+        // geometry on top of the sink's total-count partition
         if chunk.symbols as usize > cs {
             bail!(
                 "corrupt chunk {ci}: {} symbols exceeds chunk geometry {cs}",
@@ -183,7 +177,11 @@ pub fn decode_chunked(
                         chunk_aux[ci].len()
                     );
                 }
-                huffman::inflate::inflate_one_strict(chunk, rev.as_ref().expect("rev built"))
+                huffman::inflate::inflate_one_into_strict(
+                    chunk,
+                    rev.as_ref().expect("rev built"),
+                    window,
+                )
             }
             EncoderKind::Fle => {
                 let &[w] = chunk_aux[ci].as_slice() else {
@@ -192,15 +190,45 @@ pub fn decode_chunked(
                         chunk_aux[ci].len()
                     );
                 };
-                fle::decode_chunk(chunk, w, radius, dict_size, cs)
+                fle::decode_chunk_into(chunk, w, radius, dict_size, window)
             }
-            EncoderKind::Rle => rle::decode_chunk(chunk, &chunk_aux[ci], radius, dict_size, cs),
+            EncoderKind::Rle => {
+                rle::decode_chunk_into(chunk, &chunk_aux[ci], radius, dict_size, window)
+            }
         }
-    });
-    let mut out = Vec::with_capacity(stream.total_symbols() as usize);
-    for p in parts {
-        out.extend(p?);
+    })
+}
+
+/// Materializing adapter over [`decode_chunked_into`] (tests, benches,
+/// the pre-fusion baseline): rejects a claimed symbol total beyond
+/// `max_symbols` before allocating, and counts against the
+/// [`super::symbol_buffer_materializations`] probe.
+pub fn decode_chunked(
+    tags: &[u8],
+    shared_aux: &[u8],
+    chunk_aux: &[Vec<u8>],
+    stream: &DeflatedStream,
+    dict_size: usize,
+    threads: usize,
+    max_symbols: usize,
+) -> Result<Vec<u16>> {
+    if stream.total_symbols() > max_symbols as u64 {
+        bail!(
+            "chunked stream claims {} symbols, caller expects at most {max_symbols}",
+            stream.total_symbols()
+        );
     }
+    super::note_symbol_materialization();
+    let mut out = vec![0u16; stream.total_symbols() as usize];
+    decode_chunked_into(
+        tags,
+        shared_aux,
+        chunk_aux,
+        stream,
+        dict_size,
+        threads,
+        &mut super::SymbolSink::from_slice(&mut out),
+    )?;
     Ok(out)
 }
 

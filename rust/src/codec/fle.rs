@@ -21,7 +21,6 @@ use anyhow::{bail, Result};
 use super::{EncodeContext, EncodedSymbols, EncoderKind, EncoderStage, SymbolSource};
 use crate::huffman::deflate::{DeflatedChunk, DeflatedStream};
 use crate::util::bitio::{BitReader, BitWriter};
-use crate::util::pool::parallel_map_range;
 
 /// Hard ceiling on a chunk's bit width: the transform of any u16 symbol
 /// at any radius fits 17 bits, so anything larger in a sidecar is corrupt.
@@ -116,14 +115,23 @@ pub(super) fn encode_chunk(symbols: &[u16], radius: i32) -> (u8, DeflatedChunk) 
     (w as u8, DeflatedChunk { words, bits, symbols: n as u32 })
 }
 
-pub(super) fn decode_chunk(
+/// Decode one chunk straight into its destination window (a `SymbolSink`
+/// slab slice or stitch buffer); the window length is authoritative and
+/// the chunk's claimed symbol count must match it.
+pub(super) fn decode_chunk_into(
     chunk: &DeflatedChunk,
     width: u8,
     radius: i32,
     dict: usize,
-    chunk_symbols: usize,
-) -> Result<Vec<u16>> {
-    let n = chunk.symbols as usize;
+    out: &mut [u16],
+) -> Result<()> {
+    let n = out.len();
+    if chunk.symbols as usize != n {
+        bail!(
+            "corrupt FLE chunk: claims {} symbols for a {n}-symbol window",
+            chunk.symbols
+        );
+    }
     let w = width as u32;
     if w > MAX_WIDTH {
         bail!("corrupt FLE sidecar: width {w} exceeds {MAX_WIDTH}");
@@ -137,11 +145,7 @@ pub(super) fn decode_chunk(
     if chunk.bits > chunk.words.len() as u64 * 64 {
         bail!("corrupt FLE chunk: {} bits in {} words", chunk.bits, chunk.words.len());
     }
-    if w == 0 && n > chunk_symbols {
-        bail!("corrupt FLE chunk: zero-width chunk claims {n} symbols");
-    }
     let mut r = BitReader::new(&chunk.words, chunk.bits);
-    let mut out = Vec::with_capacity(n);
     let mut done = 0usize;
     while done < n {
         let gl = (n - done).min(64) as u32;
@@ -156,12 +160,12 @@ pub(super) fn decode_chunk(
                 word &= word - 1;
             }
         }
-        for &v in vals.iter().take(gl as usize) {
-            out.push(untransform(v, radius, dict)?);
+        for (slot, &v) in out[done..done + gl as usize].iter_mut().zip(vals.iter()) {
+            *slot = untransform(v, radius, dict)?;
         }
         done += gl as usize;
     }
-    Ok(out)
+    Ok(())
 }
 
 impl EncoderStage for FleStage {
@@ -195,14 +199,14 @@ impl EncoderStage for FleStage {
         })
     }
 
-    fn decode(
+    fn decode_into(
         &self,
         aux: &[u8],
         stream: &DeflatedStream,
         dict_size: usize,
         threads: usize,
-        max_symbols: usize,
-    ) -> Result<Vec<u16>> {
+        sink: &mut crate::codec::SymbolSink<'_>,
+    ) -> Result<()> {
         if aux.len() != stream.chunks.len() {
             bail!(
                 "FLE sidecar has {} widths for {} chunks",
@@ -210,26 +214,14 @@ impl EncoderStage for FleStage {
                 stream.chunks.len()
             );
         }
-        // width > 0 chunks are bounded by their backing words, but
-        // zero-width chunks carry no payload at all — without this cap a
-        // tiny crafted archive could claim terabytes of zero symbols
-        if stream.total_symbols() > max_symbols as u64 {
-            bail!(
-                "FLE stream claims {} symbols, caller expects at most {max_symbols}",
-                stream.total_symbols()
-            );
-        }
+        // width > 0 chunks are bounded by their backing words; zero-width
+        // chunks carry no payload at all, but the sink's window partition
+        // caps every claimed count against the expected total, so a tiny
+        // crafted archive cannot claim terabytes of zero symbols
         let radius = (dict_size / 2) as i32;
-        let cs = stream.chunk_symbols.max(1);
-        let parts: Vec<Result<Vec<u16>>> =
-            parallel_map_range(threads, stream.chunks.len(), |ci| {
-                decode_chunk(&stream.chunks[ci], aux[ci], radius, dict_size, cs)
-            });
-        let mut out = Vec::with_capacity(stream.total_symbols() as usize);
-        for p in parts {
-            out.extend(p?);
-        }
-        Ok(out)
+        sink.fill_chunks(stream, threads, |ci, window| {
+            decode_chunk_into(&stream.chunks[ci], aux[ci], radius, dict_size, window)
+        })
     }
 }
 

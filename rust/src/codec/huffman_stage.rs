@@ -47,25 +47,21 @@ impl EncoderStage for HuffmanStage {
         Ok(EncodedSymbols { aux: lengths, stream, repr_bits, codebook_time })
     }
 
-    fn decode(
+    fn decode_into(
         &self,
         aux: &[u8],
         stream: &crate::huffman::deflate::DeflatedStream,
         dict_size: usize,
         threads: usize,
-        max_symbols: usize,
-    ) -> Result<Vec<u16>> {
+        sink: &mut crate::codec::SymbolSink<'_>,
+    ) -> Result<()> {
         if aux.len() > dict_size {
             bail!("codebook has {} lengths for dict size {dict_size}", aux.len());
         }
-        if stream.total_symbols() > max_symbols as u64 {
-            bail!(
-                "stream claims {} symbols, caller expects at most {max_symbols}",
-                stream.total_symbols()
-            );
-        }
         let rev = ReverseCodebook::from_lengths(aux)?;
-        huffman::inflate::inflate_chunks_strict(stream, &rev, threads)
+        sink.fill_chunks(stream, threads, |ci, window| {
+            huffman::inflate::inflate_one_into_strict(&stream.chunks[ci], &rev, window)
+        })
     }
 }
 

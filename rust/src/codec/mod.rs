@@ -31,6 +31,7 @@ pub mod cost;
 pub mod fle;
 pub mod huffman_stage;
 pub mod rle;
+pub mod sink;
 pub mod source;
 
 use anyhow::{bail, Result};
@@ -42,7 +43,28 @@ pub use cost::CostModel;
 pub use fle::FleStage;
 pub use huffman_stage::HuffmanStage;
 pub use rle::RleStage;
+pub use sink::SymbolSink;
 pub use source::SymbolSource;
+
+thread_local! {
+    /// Whole-field symbol buffers materialized by this thread — the probe
+    /// behind the "the fused decompress path never builds a monolithic
+    /// `Vec<u16>`" regression test. Bumped by the materializing
+    /// [`EncoderStage::decode`] adapter and by [`chunked::decode_chunked`];
+    /// the `decode_into` sink paths never touch it. Thread-local so
+    /// concurrent tests don't pollute each other's deltas.
+    static SYMBOL_MATERIALIZATIONS: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+/// Number of whole-field symbol buffers this thread has materialized on
+/// the decode side. Diagnostics / regression tests.
+pub fn symbol_buffer_materializations() -> u64 {
+    SYMBOL_MATERIALIZATIONS.with(|c| c.get())
+}
+
+pub(crate) fn note_symbol_materialization() {
+    SYMBOL_MATERIALIZATIONS.with(|c| c.set(c.get() + 1));
+}
 
 /// Concrete encoder backends — the domain of the archive header's encoder
 /// tag and of the `CUSZA3` per-chunk tag table. Adding a backend means a
@@ -221,13 +243,30 @@ pub trait EncoderStage: Send + Sync {
         self.encode_source(&SymbolSource::from_slice(symbols), ctx)
     }
 
-    /// Inverse of [`EncoderStage::encode`]. `aux` and `stream` come from an
+    /// Inverse of [`EncoderStage::encode_source`]: decode the stream
+    /// directly into `sink`'s per-slab destination windows — no
+    /// whole-field symbol buffer. `aux` and `stream` come from an
     /// untrusted archive: implementations must error (never panic) on
-    /// inconsistent sidecar/stream combinations, and must reject streams
-    /// claiming more than `max_symbols` total symbols *before* allocating
-    /// for them (the caller knows the expected count from the header's
-    /// geometry; a crafted stream must not turn symbol counts into
-    /// unbounded allocations).
+    /// inconsistent sidecar/stream combinations, and the sink's window
+    /// partition rejects streams whose claimed symbol counts disagree
+    /// with `sink.len()` *before* any chunk decodes, so a crafted count
+    /// can neither overrun a window nor drive an allocation.
+    fn decode_into(
+        &self,
+        aux: &[u8],
+        stream: &DeflatedStream,
+        dict_size: usize,
+        threads: usize,
+        sink: &mut SymbolSink<'_>,
+    ) -> Result<()>;
+
+    /// Materializing adapter over [`EncoderStage::decode_into`] for
+    /// callers that want one contiguous buffer (tests, benches, the
+    /// pre-fusion baseline). Rejects streams claiming more than
+    /// `max_symbols` total symbols — or any chunk claiming more than the
+    /// stream's chunk geometry — *before* allocating. Counts against the
+    /// [`symbol_buffer_materializations`] probe; the hot decompress path
+    /// never calls this.
     fn decode(
         &self,
         aux: &[u8],
@@ -235,7 +274,25 @@ pub trait EncoderStage: Send + Sync {
         dict_size: usize,
         threads: usize,
         max_symbols: usize,
-    ) -> Result<Vec<u16>>;
+    ) -> Result<Vec<u16>> {
+        let total = stream.total_symbols();
+        if total > max_symbols as u64 {
+            bail!("stream claims {total} symbols, caller expects at most {max_symbols}");
+        }
+        let cs = stream.chunk_symbols.max(1);
+        for (ci, c) in stream.chunks.iter().enumerate() {
+            if c.symbols as usize > cs {
+                bail!(
+                    "corrupt chunk {ci}: {} symbols exceeds chunk geometry {cs}",
+                    c.symbols
+                );
+            }
+        }
+        note_symbol_materialization();
+        let mut out = vec![0u16; total as usize];
+        self.decode_into(aux, stream, dict_size, threads, &mut SymbolSink::from_slice(&mut out))?;
+        Ok(out)
+    }
 }
 
 /// Static backend registry: every [`EncoderKind`] maps to one stateless

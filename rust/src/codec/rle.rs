@@ -23,7 +23,6 @@ use super::fle::{transform, untransform, MAX_WIDTH};
 use super::{EncodeContext, EncodedSymbols, EncoderKind, EncoderStage, SymbolSource};
 use crate::huffman::deflate::{DeflatedChunk, DeflatedStream};
 use crate::util::bitio::{BitReader, BitWriter};
-use crate::util::pool::parallel_map_range;
 
 /// Hard ceiling on the run-length field width: run lengths are bounded by
 /// the chunk geometry (≤ 2^24 symbols), so a wider sidecar is corrupt.
@@ -64,13 +63,17 @@ pub(super) fn encode_chunk(symbols: &[u16], radius: i32) -> ([u8; 2], DeflatedCh
     ([w as u8, r as u8], DeflatedChunk { words, bits, symbols: symbols.len() as u32 })
 }
 
-pub(super) fn decode_chunk(
+/// Decode one chunk's run stream straight into its destination window (a
+/// `SymbolSink` slab slice or stitch buffer); the window length is
+/// authoritative — runs expand at most to it, so a crafted chunk cannot
+/// turn a few run bits into an unbounded expansion.
+pub(super) fn decode_chunk_into(
     chunk: &DeflatedChunk,
     aux: &[u8],
     radius: i32,
     dict: usize,
-    chunk_symbols: usize,
-) -> Result<Vec<u16>> {
+    out: &mut [u16],
+) -> Result<()> {
     let &[w, r] = aux else {
         bail!("corrupt RLE sidecar: record has {} bytes, want {SIDECAR_BYTES}", aux.len());
     };
@@ -81,12 +84,12 @@ pub(super) fn decode_chunk(
     if r > MAX_RUN_WIDTH {
         bail!("corrupt RLE sidecar: run width {r} exceeds {MAX_RUN_WIDTH}");
     }
-    let n = chunk.symbols as usize;
-    // the symbol count is untrusted: bound it by the chunk geometry the
-    // caller knows *before* allocating, so a crafted chunk cannot turn a
-    // few run bits into an unbounded expansion
-    if n > chunk_symbols {
-        bail!("corrupt RLE chunk: {n} symbols exceeds chunk geometry {chunk_symbols}");
+    let n = out.len();
+    if chunk.symbols as usize != n {
+        bail!(
+            "corrupt RLE chunk: claims {} symbols for a {n}-symbol window",
+            chunk.symbols
+        );
     }
     if chunk.bits > chunk.words.len() as u64 * 64 {
         bail!("corrupt RLE chunk: {} bits in {} words", chunk.bits, chunk.words.len());
@@ -98,8 +101,8 @@ pub(super) fn decode_chunk(
         bail!("corrupt RLE chunk: zero-width runs claim {n} symbols");
     }
     let mut reader = BitReader::new(&chunk.words, chunk.bits);
-    let mut out = Vec::with_capacity(n);
-    while out.len() < n {
+    let mut filled = 0usize;
+    while filled < n {
         let Some(v) = reader.read(w) else {
             bail!("corrupt RLE chunk: truncated run stream");
         };
@@ -107,16 +110,17 @@ pub(super) fn decode_chunk(
             bail!("corrupt RLE chunk: truncated run length");
         };
         let len = lm1 as usize + 1;
-        if out.len() + len > n {
+        if filled + len > n {
             bail!("corrupt RLE chunk: run of {len} overruns {n} symbols");
         }
         let sym = untransform(v as u32, radius, dict)?;
-        out.resize(out.len() + len, sym);
+        out[filled..filled + len].fill(sym);
+        filled += len;
     }
     if reader.remaining() != 0 {
         bail!("corrupt RLE chunk: {} trailing bits", reader.remaining());
     }
-    Ok(out)
+    Ok(())
 }
 
 impl EncoderStage for RleStage {
@@ -150,14 +154,14 @@ impl EncoderStage for RleStage {
         })
     }
 
-    fn decode(
+    fn decode_into(
         &self,
         aux: &[u8],
         stream: &DeflatedStream,
         dict_size: usize,
         threads: usize,
-        max_symbols: usize,
-    ) -> Result<Vec<u16>> {
+        sink: &mut crate::codec::SymbolSink<'_>,
+    ) -> Result<()> {
         if aux.len() != stream.chunks.len() * SIDECAR_BYTES {
             bail!(
                 "RLE sidecar has {} bytes for {} chunks",
@@ -165,31 +169,19 @@ impl EncoderStage for RleStage {
                 stream.chunks.len()
             );
         }
-        // run streams expand: cap the claimed total before any chunk
-        // allocates (mirrors the FLE zero-width-chunk hardening)
-        if stream.total_symbols() > max_symbols as u64 {
-            bail!(
-                "RLE stream claims {} symbols, caller expects at most {max_symbols}",
-                stream.total_symbols()
-            );
-        }
+        // run streams expand: the sink's window partition caps every
+        // claimed count against the expected total before any chunk
+        // decodes (mirrors the FLE zero-width-chunk hardening)
         let radius = (dict_size / 2) as i32;
-        let cs = stream.chunk_symbols.max(1);
-        let parts: Vec<Result<Vec<u16>>> =
-            parallel_map_range(threads, stream.chunks.len(), |ci| {
-                decode_chunk(
-                    &stream.chunks[ci],
-                    &aux[ci * SIDECAR_BYTES..(ci + 1) * SIDECAR_BYTES],
-                    radius,
-                    dict_size,
-                    cs,
-                )
-            });
-        let mut out = Vec::with_capacity(stream.total_symbols() as usize);
-        for p in parts {
-            out.extend(p?);
-        }
-        Ok(out)
+        sink.fill_chunks(stream, threads, |ci, window| {
+            decode_chunk_into(
+                &stream.chunks[ci],
+                &aux[ci * SIDECAR_BYTES..(ci + 1) * SIDECAR_BYTES],
+                radius,
+                dict_size,
+                window,
+            )
+        })
     }
 }
 

@@ -1,0 +1,290 @@
+//! [`SymbolSink`]: the decode-side counterpart of [`super::SymbolSource`]
+//! — a writable, logically-contiguous view over per-slab destination
+//! windows, replacing the whole-field `Vec<u16>` the decoders used to
+//! return (and the concatenation copy that built it).
+//!
+//! Decode stages produce the symbol stream chunk by chunk, and the
+//! stream is the slab-major concatenation of the per-slab code buffers
+//! (every slab padded to the same `slab_len`). So instead of decoding
+//! every chunk into its own vector and gluing them into one monolithic
+//! buffer that the decompressor immediately re-splits per slab, the
+//! stages write each decoded chunk window straight into its slice of the
+//! per-slab destinations: a window inside one slab is a plain mutable
+//! subslice, and a window straddling a slab boundary decodes into an
+//! arena-loaned stitch buffer that is copied out to the spanned slabs.
+//! Either way each symbol is written once — by its decoder — and the
+//! whole-field symbol buffer never exists (regression-locked by the
+//! [`super::symbol_buffer_materializations`] probe).
+
+use anyhow::{bail, Context, Result};
+
+use crate::huffman::deflate::DeflatedStream;
+use crate::util::arena;
+use crate::util::pool::parallel_map_range;
+
+/// A borrowed, logically-contiguous u16 symbol destination backed by one
+/// or more equal-length slab slices. Construct with [`SymbolSink::from_slabs`]
+/// (the decompressor's per-slab code buffers) or [`SymbolSink::from_slice`]
+/// (the materializing compatibility adapter).
+pub struct SymbolSink<'a> {
+    /// One pointer per slab; each points at `slab_len` writable slots.
+    slabs: Vec<*mut u16>,
+    slab_len: usize,
+    total: usize,
+    _borrow: std::marker::PhantomData<&'a mut [u16]>,
+}
+
+// SAFETY: the raw pointers are only dereferenced inside
+// `fill_chunks`, which hands every worker a *disjoint* window of the
+// logical stream (windows are the prefix-sum partition of the chunk
+// symbol counts), and the `&mut self` receiver guarantees no other
+// access to the underlying buffers for the duration of the fill — the
+// same disjoint-index discipline as `util::pool::parallel_map_range`.
+unsafe impl Send for SymbolSink<'_> {}
+unsafe impl Sync for SymbolSink<'_> {}
+
+impl<'a> SymbolSink<'a> {
+    /// View one contiguous buffer as the whole stream (the materializing
+    /// [`super::EncoderStage::decode`] adapter and tests).
+    pub fn from_slice(buf: &'a mut [u16]) -> SymbolSink<'a> {
+        SymbolSink {
+            total: buf.len(),
+            slab_len: buf.len().max(1),
+            slabs: vec![buf.as_mut_ptr()],
+            _borrow: std::marker::PhantomData,
+        }
+    }
+
+    /// View the slab-major concatenation of `slabs` as the destination;
+    /// each slab must be exactly `slab_len` symbols (the compressor pads
+    /// every slab to the spec length).
+    pub fn from_slabs(slabs: Vec<&'a mut [u16]>, slab_len: usize) -> Result<SymbolSink<'a>> {
+        if slab_len == 0 {
+            bail!("slab length must be positive");
+        }
+        let mut ptrs = Vec::with_capacity(slabs.len());
+        for (i, s) in slabs.into_iter().enumerate() {
+            if s.len() != slab_len {
+                bail!("slab {i} has {} symbol slots, expected {slab_len}", s.len());
+            }
+            ptrs.push(s.as_mut_ptr());
+        }
+        Ok(SymbolSink {
+            total: slab_len * ptrs.len(),
+            slab_len,
+            slabs: ptrs,
+            _borrow: std::marker::PhantomData,
+        })
+    }
+
+    /// Total symbol slots in the destination.
+    pub fn len(&self) -> usize {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Run `f(chunk_index, window)` for every chunk of `stream`, across
+    /// `threads` workers, where `window` is the chunk's slice of the
+    /// logical destination (the prefix-sum partition of the per-chunk
+    /// symbol counts). This is THE chunk-windowing idiom every decoder
+    /// backend shares — the mirror of `SymbolSource::map_chunks`: windows
+    /// inside one slab are written in place, windows straddling a slab
+    /// boundary decode into an arena-loaned stitch buffer that is copied
+    /// out afterwards.
+    ///
+    /// The per-chunk symbol counts are untrusted: the partition is
+    /// validated against the sink's total *before* any chunk decodes, so
+    /// a stream claiming the wrong symbol count fails cleanly here and a
+    /// lying count can never write outside its window.
+    pub fn fill_chunks<F>(&mut self, stream: &DeflatedStream, threads: usize, f: F) -> Result<()>
+    where
+        F: Fn(usize, &mut [u16]) -> Result<()> + Sync,
+    {
+        let mut offsets = Vec::with_capacity(stream.chunks.len() + 1);
+        let mut acc = 0u64;
+        offsets.push(0usize);
+        for (ci, c) in stream.chunks.iter().enumerate() {
+            acc += c.symbols as u64;
+            if acc > self.total as u64 {
+                bail!(
+                    "chunk {ci} pushes the stream past the expected {} symbols",
+                    self.total
+                );
+            }
+            offsets.push(acc as usize);
+        }
+        if acc != self.total as u64 {
+            bail!("stream yields {acc} symbols, expected {}", self.total);
+        }
+        let results: Vec<Result<()>> = parallel_map_range(threads, stream.chunks.len(), |ci| {
+            self.with_window(offsets[ci], offsets[ci + 1], |w| f(ci, w))
+        });
+        for (ci, r) in results.into_iter().enumerate() {
+            r.with_context(|| format!("decoding chunk {ci}"))?;
+        }
+        Ok(())
+    }
+
+    /// Hand `f` the writable window `[lo, hi)` of the logical stream: a
+    /// direct subslice when the window lies within one slab, otherwise an
+    /// arena-loaned stitch buffer whose contents are copied out to the
+    /// spanned slabs after `f` returns (even on error — the caller bails,
+    /// so partially-decoded residue is never observed).
+    ///
+    /// Private: callers go through [`SymbolSink::fill_chunks`], whose
+    /// prefix-sum partition is what makes concurrent windows disjoint.
+    fn with_window<R>(&self, lo: usize, hi: usize, f: impl FnOnce(&mut [u16]) -> R) -> R {
+        debug_assert!(lo <= hi && hi <= self.total, "window {lo}..{hi} outside 0..{}", self.total);
+        if lo == hi {
+            return f(&mut []);
+        }
+        let si = lo / self.slab_len;
+        let off = lo - si * self.slab_len;
+        if hi <= (si + 1) * self.slab_len {
+            // SAFETY: `fill_chunks` hands each worker a disjoint [lo, hi)
+            // window and holds `&mut self`, so no other reference to
+            // these slots exists; the pointer stays valid for `'a`.
+            let w = unsafe { std::slice::from_raw_parts_mut(self.slabs[si].add(off), hi - lo) };
+            return f(w);
+        }
+        arena::with_u16(|stitch| {
+            stitch.clear();
+            stitch.resize(hi - lo, 0);
+            let r = f(stitch);
+            let mut pos = lo;
+            let mut src = 0usize;
+            while pos < hi {
+                let si = pos / self.slab_len;
+                let off = pos - si * self.slab_len;
+                let take = (self.slab_len - off).min(hi - pos);
+                // SAFETY: same disjoint-window argument as above; the
+                // stitch buffer and the slab storage never overlap.
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        stitch.as_ptr().add(src),
+                        self.slabs[si].add(off),
+                        take,
+                    );
+                }
+                pos += take;
+                src += take;
+            }
+            r
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::huffman::deflate::DeflatedChunk;
+
+    /// A stream whose chunks carry only symbol counts — enough to drive
+    /// the window partition; the fill closures ignore the chunk payloads.
+    fn counts_stream(counts: &[u32], cs: usize) -> DeflatedStream {
+        DeflatedStream {
+            chunks: counts
+                .iter()
+                .map(|&symbols| DeflatedChunk { words: Vec::new(), bits: 0, symbols })
+                .collect(),
+            chunk_symbols: cs,
+        }
+    }
+
+    #[test]
+    fn fill_chunks_matches_flat_reference_including_straddles() {
+        // slab_len 100, chunk 70: most windows straddle slab boundaries
+        for threads in [1usize, 4] {
+            let mut slabs: Vec<Vec<u16>> = vec![vec![0; 100]; 3];
+            {
+                let views: Vec<&mut [u16]> =
+                    slabs.iter_mut().map(|v| v.as_mut_slice()).collect();
+                let mut sink = SymbolSink::from_slabs(views, 100).unwrap();
+                let stream = counts_stream(&[70, 70, 70, 70, 20], 70);
+                sink.fill_chunks(&stream, threads, |ci, w| {
+                    for (k, slot) in w.iter_mut().enumerate() {
+                        *slot = (ci * 70 + k) as u16;
+                    }
+                    Ok(())
+                })
+                .unwrap();
+            }
+            let flat: Vec<u16> = slabs.iter().flatten().copied().collect();
+            let want: Vec<u16> = (0..300u16).collect();
+            assert_eq!(flat, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn from_slice_covers_the_whole_buffer() {
+        let mut buf = vec![0u16; 257];
+        let mut sink = SymbolSink::from_slice(&mut buf);
+        assert_eq!(sink.len(), 257);
+        assert!(!sink.is_empty());
+        let stream = counts_stream(&[100, 100, 57], 100);
+        sink.fill_chunks(&stream, 2, |ci, w| {
+            w.fill(ci as u16 + 1);
+            Ok(())
+        })
+        .unwrap();
+        assert!(buf[..100].iter().all(|&v| v == 1));
+        assert!(buf[100..200].iter().all(|&v| v == 2));
+        assert!(buf[200..].iter().all(|&v| v == 3));
+    }
+
+    #[test]
+    fn symbol_count_mismatches_are_rejected_before_decoding() {
+        let mut buf = vec![0u16; 100];
+        let mut sink = SymbolSink::from_slice(&mut buf);
+        // short stream
+        let stream = counts_stream(&[40, 40], 40);
+        assert!(sink.fill_chunks(&stream, 1, |_, _| Ok(())).is_err());
+        // a chunk pushing past the sink must fail before its decoder runs
+        let stream = counts_stream(&[40, u32::MAX], 40);
+        let calls = std::sync::atomic::AtomicUsize::new(0);
+        assert!(sink
+            .fill_chunks(&stream, 1, |_, _| {
+                calls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                Ok(())
+            })
+            .is_err());
+        assert_eq!(
+            calls.load(std::sync::atomic::Ordering::Relaxed),
+            0,
+            "no chunk may decode once the partition is rejected"
+        );
+    }
+
+    #[test]
+    fn chunk_errors_carry_their_index() {
+        let mut slabs: Vec<Vec<u16>> = vec![vec![0; 50]; 2];
+        let views: Vec<&mut [u16]> = slabs.iter_mut().map(|v| v.as_mut_slice()).collect();
+        let mut sink = SymbolSink::from_slabs(views, 50).unwrap();
+        let stream = counts_stream(&[60, 40], 60);
+        let err = sink
+            .fill_chunks(&stream, 1, |ci, _| {
+                if ci == 1 {
+                    bail!("boom");
+                }
+                Ok(())
+            })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("chunk 1"), "{err:#}");
+    }
+
+    #[test]
+    fn uneven_slabs_and_zero_len_rejected() {
+        let mut a = vec![0u16; 10];
+        let mut b = vec![0u16; 9];
+        assert!(SymbolSink::from_slabs(vec![&mut a, &mut b], 10).is_err());
+        let mut c = vec![0u16; 10];
+        assert!(SymbolSink::from_slabs(vec![&mut c], 0).is_err());
+        // zero slabs is a valid empty destination: an empty stream fills it
+        let mut sink = SymbolSink::from_slabs(Vec::new(), 4).unwrap();
+        assert!(sink.is_empty());
+        sink.fill_chunks(&counts_stream(&[], 4), 2, |_, _| Ok(())).unwrap();
+    }
+}

@@ -259,9 +259,16 @@ pub struct Archive {
     pub stream: DeflatedStream,
     /// Prediction outliers: (global position in the slab-major stream,
     /// exact integer delta). Symbol 0 marks their slots in the stream.
+    /// Format contract: positions are strictly increasing — the
+    /// compressor emits them slab-major in order and the slab-parallel
+    /// decoder splits the channel per slab with `partition_point`.
     pub outliers: Vec<(u64, i32)>,
     /// Range outliers: (global position, verbatim f32) — prequant-cap
     /// clamps and non-finite values, overwritten after reconstruction.
+    /// Format contract: positions are sorted ascending across slabs
+    /// (within-slab duplicates/order are tolerated; the owning slab's
+    /// worker applies its range in list order), same `partition_point`
+    /// split as `outliers`.
     pub verbatim: Vec<(u64, f32)>,
 }
 

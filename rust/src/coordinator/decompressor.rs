@@ -1,29 +1,52 @@
-//! Per-field decompression orchestration (Figure 1, bottom path):
-//! decode via the header-tagged encoder stage → rebuild deltas (patch
-//! outliers) → inverse Lorenzo (engine) → scatter slabs → verbatim
-//! overwrite.
+//! Per-field decompression orchestration (Figure 1, bottom path),
+//! mirroring the zero-copy encode path: decode via the header-tagged
+//! encoder stage straight into per-slab symbol buffers (a
+//! [`codec::SymbolSink`], no whole-field `Vec<u16>`), then one
+//! slab-parallel fused pass — patch prediction outliers, inverse
+//! Lorenzo, verbatim overwrites, scatter — over arena-loaned scratch
+//! into a partitioned output view.
+//!
+//! The outlier and verbatim side channels are stored sorted by global
+//! (slab-major) position, so each worker locates its slab's entries with
+//! `partition_point` instead of the old whole-channel validation scan +
+//! shared sequential cursor; hostile inputs (out-of-range or unsorted
+//! positions) still fail cleanly, now inside the owning slab's worker.
+//!
+//! The pre-fusion materializing path is kept as
+//! [`decompress_materializing`]: `cusz bench` prices the fused pipeline
+//! against it, and the acceptance tests assert both produce bit-identical
+//! fields.
 
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 use super::{Coordinator, DecompressStats};
-use crate::codec;
+use crate::codec::{self, SymbolSink};
 use crate::container::Archive;
 use crate::field::Field;
 use crate::metrics::StageTimer;
-use crate::sz::blocks::{scatter_slab, tile_grid};
-use crate::util::pool::parallel_map;
+use crate::sz::blocks::{scatter_slab, tile_grid, PartitionedField, SlabIndex, SlabSpec};
+use crate::util::arena;
+use crate::util::pool::{parallel_map, parallel_map_range};
 
 pub fn decompress(coord: &Coordinator, archive: &Archive) -> Result<(Field, DecompressStats)> {
-    let cfg = &coord.cfg;
-    let mut timer = StageTimer::new();
-    let t_total = Instant::now();
-    let h = &archive.header;
-    let abs_eb = h.abs_eb;
-    let radius = (h.dict_size / 2) as i32;
+    decompress_with_threads(coord, archive, coord.cfg.effective_threads())
+}
 
-    // geometry must reproduce compression exactly
+/// Geometry shared by the fused and baseline paths: must reproduce
+/// compression exactly.
+struct Geometry {
+    logical_dims: Vec<usize>,
+    kernel_dims: Vec<usize>,
+    spec: SlabSpec,
+    grid: Vec<SlabIndex>,
+    abs_eb: f32,
+    radius: i32,
+}
+
+fn resolve_geometry(coord: &Coordinator, archive: &Archive) -> Result<Geometry> {
+    let h = &archive.header;
     let logical_dims = h.dims.clone();
     let kernel_dims = if logical_dims.len() == 4 {
         vec![logical_dims[0], logical_dims[1], logical_dims[2] * logical_dims[3]]
@@ -41,14 +64,183 @@ pub fn decompress(coord: &Coordinator, archive: &Archive) -> Result<(Field, Deco
     if grid.len() != h.n_slabs {
         bail!("slab count mismatch: {} vs {}", grid.len(), h.n_slabs);
     }
+    Ok(Geometry {
+        logical_dims,
+        kernel_dims,
+        spec,
+        grid,
+        abs_eb: h.abs_eb,
+        radius: (h.dict_size / 2) as i32,
+    })
+}
 
-    // ---- decode the symbol stream --------------------------------------
-    // the stage is picked by the archive's tags, not the config: a
-    // Huffman coordinator decodes FLE/RLE archives and vice versa, and a
-    // mixed-granularity archive dispatches per chunk from its tag table
-    let t0 = Instant::now();
-    let threads = cfg.effective_threads();
+/// Split a sorted global-position side channel into per-slab index
+/// ranges via `partition_point` (O(S log N) instead of the old O(N)
+/// whole-channel pre-scan). Returns `n_slabs` half-open `[lo, hi)`
+/// ranges tiling the channel. On a sorted channel the ranges are exact;
+/// an unsorted channel still yields ranges that tile `[0, len)`, so
+/// every entry lands in *some* slab's range and the per-slab in-range /
+/// ordering checks catch the corruption there. The only case those
+/// checks cannot see — entries past the final boundary — is rejected
+/// here.
+fn split_channel_ranges<T>(
+    entries: &[T],
+    pos: impl Fn(&T) -> u64,
+    slab_len: usize,
+    n_slabs: usize,
+    what: &str,
+) -> Result<Vec<(usize, usize)>> {
+    let mut bounds = Vec::with_capacity(n_slabs + 1);
+    bounds.push(0usize);
+    for si in 1..=n_slabs {
+        let limit = (si * slab_len) as u64;
+        bounds.push(entries.partition_point(|e| pos(e) < limit));
+    }
+    let covered = *bounds.last().expect("bounds non-empty");
+    if covered != entries.len() {
+        bail!("{what} position {} out of range", pos(&entries[covered]));
+    }
+    Ok(bounds.windows(2).map(|w| (w[0], w[1])).collect())
+}
+
+/// The fused zero-copy decompress path. `threads` is the worker budget
+/// for every stage (the segmented-tail decode upstream takes its own
+/// budget at parse time); batch pipelines pass their per-job share.
+pub fn decompress_with_threads(
+    coord: &Coordinator,
+    archive: &Archive,
+    threads: usize,
+) -> Result<(Field, DecompressStats)> {
+    let threads = threads.max(1);
+    let mut timer = StageTimer::new();
+    let t_total = Instant::now();
+    let h = &archive.header;
+    let geo = resolve_geometry(coord, archive)?;
+    let (spec, grid) = (&geo.spec, &geo.grid);
     let slab_len = spec.len();
+
+    // ---- stage 1: decode chunk-parallel into per-slab code buffers ----
+    // The stage is picked by the archive's tags, not the config: a
+    // Huffman coordinator decodes FLE/RLE archives and vice versa, and a
+    // mixed-granularity archive dispatches per chunk from its tag table.
+    // Decoded chunk windows land directly in the slab buffers (straddles
+    // stitch through the arena) — the whole-field symbol buffer of the
+    // materializing path never exists.
+    let t0 = Instant::now();
+    let mut slab_codes: Vec<Vec<u16>> = grid.iter().map(|_| vec![0u16; slab_len]).collect();
+    {
+        let views: Vec<&mut [u16]> = slab_codes.iter_mut().map(|v| v.as_mut_slice()).collect();
+        let mut sink = SymbolSink::from_slabs(views, slab_len.max(1))?;
+        if !archive.chunk_tags.is_empty() {
+            codec::chunked::decode_chunked_into(
+                &archive.chunk_tags,
+                &archive.encoder_aux,
+                &archive.chunk_aux,
+                &archive.stream,
+                h.dict_size,
+                threads,
+                &mut sink,
+            )?;
+        } else {
+            codec::stage_for(h.encoder).decode_into(
+                &archive.encoder_aux,
+                &archive.stream,
+                h.dict_size,
+                threads,
+                &mut sink,
+            )?;
+        }
+    }
+    timer.add("1.decode", t0.elapsed());
+
+    // ---- stage 2: fused per-slab patch → inverse Lorenzo → verbatim →
+    // scatter, one slab-parallel pass over arena-loaned scratch ----------
+    let t0 = Instant::now();
+    let outlier_ranges =
+        split_channel_ranges(&archive.outliers, |o| o.0, slab_len, grid.len(), "outlier")?;
+    let verbatim_ranges =
+        split_channel_ranges(&archive.verbatim, |v| v.0, slab_len, grid.len(), "verbatim")?;
+    let n: usize = geo.kernel_dims.iter().product();
+    let mut out = vec![0f32; n];
+    // one worker per slab: build deltas in arena-loaned i32 scratch,
+    // patch this slab's outlier range, reconstruct in place into
+    // arena-loaned f32 scratch, apply this slab's verbatim range, and
+    // scatter into the slab's disjoint region of the output view
+    let fuse_slab = |si: usize, view: &PartitionedField<'_>| -> Result<()> {
+        let base = (si * slab_len) as u64;
+        let end = base + slab_len as u64;
+        let codes = &slab_codes[si];
+        arena::with_i32(|delta| -> Result<()> {
+            delta.clear();
+            delta.extend(codes.iter().map(|&c| if c == 0 { 0 } else { c as i32 - geo.radius }));
+            // patch prediction outliers: this slab's sorted range, found
+            // by partition_point — hostile-input checks stay per slab
+            let (lo, hi) = outlier_ranges[si];
+            let mut prev: Option<u64> = None;
+            for &(pos, d) in &archive.outliers[lo..hi] {
+                if pos < base || pos >= end {
+                    bail!("outlier position {pos} outside slab {si} (channel not sorted?)");
+                }
+                if prev.is_some_and(|p| pos <= p) {
+                    bail!("outlier positions not strictly increasing");
+                }
+                prev = Some(pos);
+                delta[(pos - base) as usize] = d;
+            }
+            arena::with_f32(|slab| -> Result<()> {
+                slab.clear();
+                slab.resize(slab_len, 0.0);
+                coord.engine().decompress_slab_into(spec, delta, geo.abs_eb, slab)?;
+                // verbatim overwrites in slab coordinates (padding slots
+                // are dropped by the valid-region scatter below, exactly
+                // as the old field-offset mapping dropped them)
+                let (lo, hi) = verbatim_ranges[si];
+                for &(pos, val) in &archive.verbatim[lo..hi] {
+                    if pos < base || pos >= end {
+                        bail!("verbatim position {pos} outside slab {si} (channel not sorted?)");
+                    }
+                    slab[(pos - base) as usize] = val;
+                }
+                view.scatter(&geo.kernel_dims, spec, &grid[si], slab);
+                Ok(())
+            })
+        })
+    };
+    let results: Vec<Result<()>> = {
+        let view = PartitionedField::new(&mut out);
+        parallel_map_range(threads, grid.len(), |si| fuse_slab(si, &view))
+    };
+    for (si, r) in results.into_iter().enumerate() {
+        r.with_context(|| format!("slab {si}"))?;
+    }
+    timer.add("2.patch-reverse-scatter", t0.elapsed());
+    timer.add("total", t_total.elapsed());
+
+    let field = Field::new(h.field_name.clone(), geo.logical_dims, out)?;
+    let stats = DecompressStats { timer, original_bytes: field.size_bytes(), threads };
+    Ok((field, stats))
+}
+
+/// The pre-fusion decompress path: decode to one whole-field symbol
+/// buffer, rebuild per-slab deltas sequentially behind a shared cursor,
+/// inverse-Lorenzo behind `Mutex` cells, scatter and patch verbatim
+/// serially. Kept (not emulated) so `cusz bench` prices the fused
+/// pipeline against the real thing and tests can assert bit-identical
+/// output; not wired to any production entry point.
+pub fn decompress_materializing(
+    coord: &Coordinator,
+    archive: &Archive,
+) -> Result<(Field, DecompressStats)> {
+    let mut timer = StageTimer::new();
+    let t_total = Instant::now();
+    let h = &archive.header;
+    let geo = resolve_geometry(coord, archive)?;
+    let (spec, grid) = (&geo.spec, &geo.grid);
+    let slab_len = spec.len();
+    let threads = coord.cfg.effective_threads();
+
+    // ---- decode the symbol stream (whole-field materialization) --------
+    let t0 = Instant::now();
     let expected_symbols = slab_len * grid.len();
     let symbols = if !archive.chunk_tags.is_empty() {
         codec::chunked::decode_chunked(
@@ -76,8 +268,6 @@ pub fn decompress(coord: &Coordinator, archive: &Archive) -> Result<(Field, Deco
 
     // ---- rebuild per-slab deltas (patch prediction outliers) -----------
     let t0 = Instant::now();
-    // outliers are stored sorted by global (slab-major) position; split
-    // them per slab so each worker patches its own range
     for w in archive.outliers.windows(2) {
         if w[0].0 >= w[1].0 {
             bail!("outlier positions not strictly increasing");
@@ -93,7 +283,7 @@ pub fn decompress(coord: &Coordinator, archive: &Archive) -> Result<(Field, Deco
     for si in 0..grid.len() {
         let syms = &symbols[si * slab_len..(si + 1) * slab_len];
         let mut delta: Vec<i32> =
-            syms.iter().map(|&c| if c == 0 { 0 } else { c as i32 - radius }).collect();
+            syms.iter().map(|&c| if c == 0 { 0 } else { c as i32 - geo.radius }).collect();
         let base = (si * slab_len) as u64;
         let end = base + slab_len as u64;
         while oi < archive.outliers.len() && archive.outliers[oi].0 < end {
@@ -107,17 +297,17 @@ pub fn decompress(coord: &Coordinator, archive: &Archive) -> Result<(Field, Deco
 
     // ---- inverse Lorenzo per slab, scatter into the field ---------------
     let t0 = Instant::now();
-    let n: usize = kernel_dims.iter().product();
+    let n: usize = geo.kernel_dims.iter().product();
     let deltas_cell: Vec<std::sync::Mutex<Vec<i32>>> =
         slab_deltas.into_iter().map(std::sync::Mutex::new).collect();
     let slabs: Vec<Result<Vec<f32>>> = parallel_map(threads, &deltas_cell, |_, cell| {
         let delta = std::mem::take(&mut *cell.lock().unwrap());
-        coord.engine().decompress_slab_owned(&spec, delta, abs_eb)
+        coord.engine().decompress_slab_owned(spec, delta, geo.abs_eb)
     });
     let mut out = vec![0f32; n];
-    for (si, (slab, idx)) in slabs.into_iter().zip(&grid).enumerate() {
+    for (si, (slab, idx)) in slabs.into_iter().zip(grid).enumerate() {
         let slab = slab.with_context(|| format!("slab {si}"))?;
-        scatter_slab(&mut out, &kernel_dims, &spec, idx, &slab);
+        scatter_slab(&mut out, &geo.kernel_dims, spec, idx, &slab);
     }
     timer.add("3.reverse-predict-quant", t0.elapsed());
 
@@ -131,23 +321,23 @@ pub fn decompress(coord: &Coordinator, archive: &Archive) -> Result<(Field, Deco
         if si >= grid.len() {
             bail!("verbatim slab {si} out of range");
         }
-        if let Some(field_off) = slab_to_field_offset(&kernel_dims, &spec, &grid[si], within) {
+        if let Some(field_off) = slab_to_field_offset(&geo.kernel_dims, spec, &grid[si], within) {
             out[field_off] = val;
         }
     }
     timer.add("4.verbatim", t0.elapsed());
     timer.add("total", t_total.elapsed());
 
-    let field = Field::new(h.field_name.clone(), logical_dims, out)?;
-    let stats = DecompressStats { timer, original_bytes: field.size_bytes() };
+    let field = Field::new(h.field_name.clone(), geo.logical_dims, out)?;
+    let stats = DecompressStats { timer, original_bytes: field.size_bytes(), threads };
     Ok((field, stats))
 }
 
 /// Map an in-slab row-major offset to the field offset (None if padding).
 fn slab_to_field_offset(
     dims: &[usize],
-    spec: &crate::sz::blocks::SlabSpec,
-    idx: &crate::sz::blocks::SlabIndex,
+    spec: &SlabSpec,
+    idx: &SlabIndex,
     within: usize,
 ) -> Option<usize> {
     let nd = dims.len();
@@ -187,5 +377,29 @@ mod tests {
         assert_eq!(slab_to_field_offset(&dims, &spec, idx, 3), None);
         // row 1 entirely padding (valid rows = 1)
         assert_eq!(slab_to_field_offset(&dims, &spec, idx, 4), None);
+    }
+
+    #[test]
+    fn channel_ranges_tile_a_sorted_channel() {
+        let entries: Vec<(u64, i32)> = vec![(0, 1), (5, 2), (9, 3), (10, 4), (25, 5)];
+        let ranges = split_channel_ranges(&entries, |e| e.0, 10, 3, "outlier").unwrap();
+        assert_eq!(ranges, vec![(0, 3), (3, 4), (4, 5)]);
+        // empty channel: every slab gets an empty range
+        let none: Vec<(u64, i32)> = Vec::new();
+        assert_eq!(
+            split_channel_ranges(&none, |e| e.0, 10, 2, "outlier").unwrap(),
+            vec![(0, 0), (0, 0)]
+        );
+    }
+
+    #[test]
+    fn channel_ranges_reject_out_of_range_positions() {
+        // a position at/past the stream end is the one corruption the
+        // per-slab checks cannot see — it must be rejected at the split
+        let entries: Vec<(u64, i32)> = vec![(3, 1), (30, 2)];
+        let err = split_channel_ranges(&entries, |e| e.0, 10, 3, "outlier").unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err:#}");
+        // even when no slab exists at all
+        assert!(split_channel_ranges(&entries, |e| e.0, 10, 0, "outlier").is_err());
     }
 }

@@ -114,6 +114,29 @@ impl Coordinator {
     pub fn decompress_with_stats(&self, archive: &Archive) -> Result<(Field, DecompressStats)> {
         decompressor::decompress(self, archive)
     }
+
+    /// Decompress with an explicit worker budget for the chunk-parallel
+    /// decode and the fused slab pass. Batch pipelines that already fan
+    /// out across fields pass their per-job share instead of the
+    /// config-wide count, mirroring the segmented-tail decode budget.
+    pub fn decompress_with_threads(
+        &self,
+        archive: &Archive,
+        threads: usize,
+    ) -> Result<(Field, DecompressStats)> {
+        decompressor::decompress_with_threads(self, archive, threads)
+    }
+
+    /// The pre-fusion materializing decompress path — the baseline
+    /// `cusz bench` prices the fused pipeline against (and the
+    /// bit-identical-output oracle in the acceptance tests). Not a
+    /// production entry point.
+    pub fn decompress_materializing(
+        &self,
+        archive: &Archive,
+    ) -> Result<(Field, DecompressStats)> {
+        decompressor::decompress_materializing(self, archive)
+    }
 }
 
 #[cfg(test)]

@@ -76,6 +76,9 @@ impl CompressStats {
 pub struct DecompressStats {
     pub timer: StageTimer,
     pub original_bytes: usize,
+    /// Worker threads the decode + fused slab pass actually ran with
+    /// (the CLI/serve budget after the 0 = all-cores fallback).
+    pub threads: usize,
 }
 
 #[cfg(test)]

@@ -62,6 +62,33 @@ impl Field {
             self.dims.clone()
         }
     }
+
+    /// Stream this field's raw little-endian f32 bytes into `w` —
+    /// see [`write_f32_into`].
+    pub fn write_f32_into<W: std::io::Write>(&self, w: &mut W) -> std::io::Result<()> {
+        write_f32_into(&self.data, w)
+    }
+}
+
+/// Stream `data` as little-endian f32 bytes into `w` through a bounded,
+/// arena-loaned chunk buffer — the decompressed-field output path for the
+/// CLI and `store get --all`. The old path built the entire byte image
+/// in memory first (a second full-field buffer next to the f32 data);
+/// this one tops out at one ~64 KiB scratch buffer per thread, reused
+/// across fields.
+pub fn write_f32_into<W: std::io::Write>(data: &[f32], w: &mut W) -> std::io::Result<()> {
+    const CHUNK_VALUES: usize = 16 * 1024;
+    crate::util::arena::with_u8(|buf| {
+        for vals in data.chunks(CHUNK_VALUES) {
+            buf.clear();
+            buf.reserve(vals.len() * 4);
+            for v in vals {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+            w.write_all(buf)?;
+        }
+        Ok(())
+    })
 }
 
 #[cfg(test)]
@@ -85,5 +112,24 @@ mod tests {
     fn four_d_folds_to_three() {
         let f = Field::new("q", vec![2, 3, 4, 5], vec![0.0; 120]).unwrap();
         assert_eq!(f.kernel_dims(), vec![2, 3, 20]);
+    }
+
+    #[test]
+    fn streamed_f32_bytes_match_the_materialized_image() {
+        // crosses the chunk boundary (16 Ki values) and covers specials
+        let mut data: Vec<f32> = (0..40_000).map(|i| (i as f32).sin() * 1e3).collect();
+        data[7] = f32::NAN;
+        data[9] = f32::NEG_INFINITY;
+        let mut streamed = Vec::new();
+        write_f32_into(&data, &mut streamed).unwrap();
+        let mut reference = Vec::with_capacity(data.len() * 4);
+        for v in &data {
+            reference.extend_from_slice(&v.to_le_bytes());
+        }
+        assert_eq!(streamed, reference);
+        // empty fields write nothing
+        let mut empty = Vec::new();
+        write_f32_into(&[], &mut empty).unwrap();
+        assert!(empty.is_empty());
     }
 }

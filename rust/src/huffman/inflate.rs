@@ -76,22 +76,41 @@ fn decode_chunk_into(
     want
 }
 
-/// Decode exactly one chunk, erroring (never panicking) when it
-/// under-produces — the per-chunk entry point used by mixed-granularity
-/// archives, where only some chunks are Huffman-tagged. The caller must
-/// bound `chunk.symbols` (it is untrusted) before this allocates.
+/// Decode exactly one chunk into a caller-provided window, erroring
+/// (never panicking) when the chunk under-produces or its claimed symbol
+/// count disagrees with the window — the per-chunk entry point of the
+/// zero-copy decompress path (`SymbolSink` windows) and of
+/// mixed-granularity archives, where only some chunks are Huffman-tagged.
+pub fn inflate_one_into_strict(
+    chunk: &super::deflate::DeflatedChunk,
+    rev: &ReverseCodebook,
+    out: &mut [u16],
+) -> anyhow::Result<()> {
+    if chunk.symbols as usize != out.len() {
+        anyhow::bail!(
+            "corrupt huffman chunk: claims {} symbols for a {}-symbol window",
+            chunk.symbols,
+            out.len()
+        );
+    }
+    let got = decode_chunk_into(chunk, rev, out);
+    if got != out.len() {
+        anyhow::bail!(
+            "corrupt huffman chunk: produced {got} of {} symbols",
+            out.len()
+        );
+    }
+    Ok(())
+}
+
+/// Materializing wrapper over [`inflate_one_into_strict`]. The caller
+/// must bound `chunk.symbols` (it is untrusted) before this allocates.
 pub fn inflate_one_strict(
     chunk: &super::deflate::DeflatedChunk,
     rev: &ReverseCodebook,
 ) -> anyhow::Result<Vec<u16>> {
     let mut out = vec![0u16; chunk.symbols as usize];
-    let got = decode_chunk_into(chunk, rev, &mut out);
-    if got != chunk.symbols as usize {
-        anyhow::bail!(
-            "corrupt huffman chunk: produced {got} of {} symbols",
-            chunk.symbols
-        );
-    }
+    inflate_one_into_strict(chunk, rev, &mut out)?;
     Ok(out)
 }
 

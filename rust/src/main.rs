@@ -162,11 +162,13 @@ fn read_f32_file(path: &str) -> Result<Vec<f32>> {
 }
 
 fn write_f32_file(path: &str, data: &[f32]) -> Result<()> {
-    let mut bytes = Vec::with_capacity(data.len() * 4);
-    for v in data {
-        bytes.extend_from_slice(&v.to_le_bytes());
-    }
-    std::fs::write(path, bytes).with_context(|| format!("writing {path}"))
+    // stream through a bounded arena buffer — no full-field byte image
+    // between the decompressed f32 data and the file
+    let file = std::fs::File::create(path).with_context(|| format!("creating {path}"))?;
+    let mut w = std::io::BufWriter::new(file);
+    cusz::field::write_f32_into(data, &mut w).with_context(|| format!("writing {path}"))?;
+    use std::io::Write;
+    w.flush().with_context(|| format!("flushing {path}"))
 }
 
 fn cmd_gen(args: &[String]) -> Result<()> {
@@ -224,12 +226,14 @@ fn cmd_decompress(args: &[String]) -> Result<()> {
         .parse(args)?;
     let cfg = common_config(&cli)?;
     let input = cli.get("input");
-    let archive = Archive::from_bytes(&std::fs::read(&input)?)?;
+    // thread the CLI budget through to the v3 segmented-tail decode so
+    // the parallel tail is exercised outside serve too (0 = all cores)
+    let archive = Archive::from_bytes_with_threads(&std::fs::read(&input)?, cfg.threads)?;
     let coord = Coordinator::new(cfg)?;
     let (field, stats) = coord.decompress_with_stats(&archive)?;
     let out = if cli.get("out").is_empty() { format!("{input}.out.f32") } else { cli.get("out") };
     write_f32_file(&out, &field.data)?;
-    println!("engine: {}", coord.engine_name());
+    println!("engine: {}  decode threads: {}", coord.engine_name(), stats.threads);
     println!("{}", stats.timer.report(stats.original_bytes));
     println!("wrote {out} (dims {:?})", field.dims);
     Ok(())
@@ -648,11 +652,14 @@ fn jnum(v: f64) -> String {
 
 /// `cusz bench`: the perf trajectory tracker. Measures per-stage and
 /// end-to-end compress/decompress throughput plus compression ratio per
-/// datagen profile, and compares the streaming segmented serialization
-/// against an emulation of the pre-zero-copy path (two single-threaded
-/// monolithic serializations per field: one for `compressed_bytes()`,
-/// one for the actual output). Emits `BENCH_pipeline.json` so CI archives
-/// comparable numbers across PRs.
+/// datagen profile, and compares (a) the streaming segmented
+/// serialization against an emulation of the pre-zero-copy encode path
+/// (two single-threaded monolithic serializations per field) and (b) the
+/// fused slab-parallel decompress pipeline against the real pre-fusion
+/// materializing path (`decompress_materializing`). Emits
+/// `BENCH_pipeline.json` (schema `cusz-bench-pipeline/v2`, now with
+/// per-stage decompress GB/s + the decompress e2e speedup) so CI
+/// archives comparable numbers across PRs.
 fn cmd_bench(args: &[String]) -> Result<()> {
     use cusz::util::bench::{print_table, Bench};
 
@@ -702,10 +709,23 @@ fn cmd_bench(args: &[String]) -> Result<()> {
                 compressed = Some(coord.compress_encoded(&field).unwrap());
             });
             let c = compressed.unwrap();
+            let mut dstats = None;
             let rd = bench.run(&format!("{} {pname} decompress", ds.name()), bytes, || {
                 let a = Archive::from_bytes(&c.bytes).unwrap();
-                std::hint::black_box(coord.decompress(&a).unwrap().data.len());
+                let (f, s) = coord.decompress_with_stats(&a).unwrap();
+                std::hint::black_box(f.data.len());
+                dstats = Some(s);
             });
+            let dstats = dstats.unwrap();
+            // the pre-fusion baseline: whole-field symbol buffer, serial
+            // patch/scatter/verbatim stages — the real old path, kept in
+            // the tree so the speedup is measured, not estimated
+            let rd_mono =
+                bench.run(&format!("{} {pname} decompress-materializing", ds.name()), bytes, || {
+                    let a = Archive::from_bytes(&c.bytes).unwrap();
+                    let (f, _) = coord.decompress_materializing(&a).unwrap();
+                    std::hint::black_box(f.data.len());
+                });
             // serialization stage: the new path (one parallel segmented
             // write at the configured thread count — the same write the
             // compress measurement above performed) vs the pre-zero-copy
@@ -734,7 +754,9 @@ fn cmd_bench(args: &[String]) -> Result<()> {
             let old_e2e =
                 rc.mean.as_secs_f64() - rs_seg.mean.as_secs_f64() + rs_mono.mean.as_secs_f64();
             let e2e_speedup = old_e2e / rc.mean.as_secs_f64().max(1e-12);
+            let d_speedup = rd_mono.mean.as_secs_f64() / rd.mean.as_secs_f64().max(1e-12);
             let t = &c.stats.timer;
+            let dt = &dstats.timer;
 
             rows.push(vec![
                 format!("{} {pname}", ds.name()),
@@ -744,7 +766,11 @@ fn cmd_bench(args: &[String]) -> Result<()> {
                 format!("{:.3}", g(rd.mean)),
                 format!("{stage_speedup:.2}x"),
                 format!("{e2e_speedup:.2}x"),
+                format!("{d_speedup:.2}x"),
             ]);
+            // per-stage decompress GB/s come from the last timed rep's
+            // instrumented StageTimer (stage shares are stable across reps)
+            let dg = |stage: &str| bytes as f64 / dt.total(stage).as_secs_f64().max(1e-12) / 1e9;
             json_profiles.push(format!(
                 concat!(
                     "    {{\"dataset\": \"{}\", \"field\": \"{}\", \"codec\": \"{}\", ",
@@ -753,6 +779,9 @@ fn cmd_bench(args: &[String]) -> Result<()> {
                     "     \"compress_gbps\": {}, \"decompress_gbps\": {},\n",
                     "     \"stages\": {{\"predict_quant_gbps\": {}, \"histogram_gbps\": {}, ",
                     "\"codebook_ms\": {}, \"encode_deflate_gbps\": {}, \"container_gbps\": {}}},\n",
+                    "     \"decompress_stages\": {{\"decode_gbps\": {}, ",
+                    "\"fused_patch_reverse_scatter_gbps\": {}, \"threads\": {}}},\n",
+                    "     \"decompress_speedup_e2e_vs_materializing\": {},\n",
                     "     \"serialize\": {{\"segmented_ms\": {}, \"monolithic_x2_ms\": {}, ",
                     "\"stage_speedup\": {}, \"e2e_speedup_vs_monolithic\": {}}}}}"
                 ),
@@ -775,6 +804,10 @@ fn cmd_bench(args: &[String]) -> Result<()> {
                 jnum(t.total("3.codebook").as_secs_f64() * 1e3),
                 jnum(g(t.total("5.encode-deflate"))),
                 jnum(g(t.total("6.container"))),
+                jnum(dg("1.decode")),
+                jnum(dg("2.patch-reverse-scatter")),
+                dstats.threads,
+                jnum(d_speedup),
                 jnum(rs_seg.mean.as_secs_f64() * 1e3),
                 jnum(rs_mono.mean.as_secs_f64() * 1e3),
                 jnum(stage_speedup),
@@ -784,13 +817,14 @@ fn cmd_bench(args: &[String]) -> Result<()> {
     }
 
     print_table(
-        "Pipeline bench (GB/s of original data; speedups vs pre-zero-copy serialization)",
-        &["dataset/profile", "MB", "CR", "compress", "decompress", "ser-stage", "e2e"],
+        "Pipeline bench (GB/s of original data; speedups vs the pre-zero-copy \
+         serialization and the materializing decompress path)",
+        &["dataset/profile", "MB", "CR", "compress", "decompress", "ser-stage", "e2e", "d-e2e"],
         &rows,
     );
 
     let json = format!(
-        "{{\n  \"schema\": \"cusz-bench-pipeline/v1\",\n  \"engine\": \"{}\",\n  \
+        "{{\n  \"schema\": \"cusz-bench-pipeline/v2\",\n  \"engine\": \"{}\",\n  \
          \"threads\": {},\n  \"quick\": {},\n  \"scale\": {},\n  \"profiles\": [\n{}\n  ]\n}}\n",
         engine_name,
         threads,

@@ -79,6 +79,29 @@ pub trait QuantEngine: Send + Sync {
     fn decompress_slab_owned(&self, spec: &SlabSpec, delta: Vec<i32>, eb: f32) -> Result<Vec<f32>> {
         self.decompress_slab(spec, &delta, eb)
     }
+
+    /// Buffer-to-buffer decompression: reconstruct into a caller-provided
+    /// output, consuming `delta` as scratch — the fused decompress pass's
+    /// allocation-free entry point (both buffers arena-loaned). The
+    /// default copies through [`QuantEngine::decompress_slab`]; the CPU
+    /// mirror overrides with the true in-place kernel.
+    fn decompress_slab_into(
+        &self,
+        spec: &SlabSpec,
+        delta: &mut [i32],
+        eb: f32,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let v = self.decompress_slab(spec, delta, eb)?;
+        anyhow::ensure!(
+            v.len() == out.len(),
+            "engine produced {} values for a {}-element slab",
+            v.len(),
+            out.len()
+        );
+        out.copy_from_slice(&v);
+        Ok(())
+    }
 }
 
 /// Pure-Rust engine (Algorithm 2 mirror). Bit-exact with the PJRT path.
@@ -107,6 +130,17 @@ impl QuantEngine for CpuEngine {
 
     fn decompress_slab_owned(&self, spec: &SlabSpec, delta: Vec<i32>, eb: f32) -> Result<Vec<f32>> {
         Ok(dual_quant::reconstruct_slab_owned(delta, spec, eb))
+    }
+
+    fn decompress_slab_into(
+        &self,
+        spec: &SlabSpec,
+        delta: &mut [i32],
+        eb: f32,
+        out: &mut [f32],
+    ) -> Result<()> {
+        dual_quant::reconstruct_slab_into(delta, spec, eb, out);
+        Ok(())
     }
 
     fn name(&self) -> &'static str {

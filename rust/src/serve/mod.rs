@@ -354,12 +354,17 @@ impl BatchDecompressor {
         let coord = Arc::clone(&self.coord);
         // the drain pool already fans out across fields: split the
         // machine-wide thread budget across the workers so a drain does
-        // not multiply the segmented-tail decode by the worker count
+        // not multiply the segmented-tail decode — or the fused
+        // decode→inverse-Lorenzo→scatter pass — by the worker count.
+        // Workers are long-lived, so the fused pass's arena-loaned slab
+        // scratch (delta/reconstruction buffers, chunk stitch windows)
+        // is allocated once per worker thread and reused across every
+        // job of the drain.
         let job_threads = (self.coord.cfg.effective_threads() / workers).max(1);
         let fan = FanStage::spawn(rx, workers, depth, "decompress", move |job: (String, Vec<u8>)| {
             let (name, bytes) = job;
             let result = Archive::from_bytes_with_threads(&bytes, job_threads)
-                .and_then(|archive| coord.decompress_with_stats(&archive));
+                .and_then(|archive| coord.decompress_with_threads(&archive, job_threads));
             (name, result)
         });
         let names: Vec<String> = store.list().iter().map(|e| e.name.clone()).collect();

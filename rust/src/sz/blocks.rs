@@ -130,6 +130,58 @@ pub fn scatter_slab(out: &mut [f32], dims: &[usize], spec: &SlabSpec, idx: &Slab
     });
 }
 
+/// A partitioned view of the output field for *parallel* slab scatter.
+///
+/// `tile_grid` assigns every slab index a disjoint valid region of the
+/// field (tiles partition the index space; each scatter writes only its
+/// tile's `valid` extent), so concurrent [`PartitionedField::scatter`]
+/// calls for **distinct** indices of one grid never alias — the same
+/// disjoint-write discipline as `util::pool::parallel_map_range`. This is
+/// what lets the fused decompress pass retire the old collect-then-serial-
+/// scatter loop (and its `Mutex<Vec<i32>>` cells).
+///
+/// Contract: callers must scatter each grid index at most once per view.
+pub struct PartitionedField<'a> {
+    data: *mut f32,
+    len: usize,
+    _borrow: std::marker::PhantomData<&'a mut [f32]>,
+}
+
+// SAFETY: the raw pointer is only written through `scatter`, whose
+// per-slab regions are disjoint for distinct grid indices (see above),
+// and the `&'a mut` borrow in the constructor keeps every other access
+// to the buffer out for the view's lifetime.
+unsafe impl Send for PartitionedField<'_> {}
+unsafe impl Sync for PartitionedField<'_> {}
+
+impl<'a> PartitionedField<'a> {
+    pub fn new(out: &'a mut [f32]) -> PartitionedField<'a> {
+        PartitionedField {
+            data: out.as_mut_ptr(),
+            len: out.len(),
+            _borrow: std::marker::PhantomData,
+        }
+    }
+
+    /// Scatter `slab` into `idx`'s region, dropping padding — the
+    /// shared-view equivalent of [`scatter_slab`].
+    pub fn scatter(&self, dims: &[usize], spec: &SlabSpec, idx: &SlabIndex, slab: &[f32]) {
+        assert_eq!(slab.len(), spec.len());
+        copy_slab(dims, spec, idx, |field_off, slab_off, n| {
+            assert!(field_off + n <= self.len, "scatter row outside the field");
+            // SAFETY: rows of distinct grid indices are disjoint (see the
+            // type-level argument) and bounds-checked just above.
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    slab.as_ptr().add(slab_off),
+                    self.data.add(field_off),
+                    n,
+                );
+            }
+        });
+    }
+}
+
 /// Visit each contiguous valid row: f(field_offset, slab_offset, len).
 fn copy_slab<F: FnMut(usize, usize, usize)>(
     dims: &[usize],
@@ -218,6 +270,33 @@ mod tests {
             scatter_slab(&mut out, &dims, &spec, idx, &slab);
         }
         assert_eq!(out, data);
+    }
+
+    #[test]
+    fn parallel_partitioned_scatter_matches_serial() {
+        use crate::util::pool::parallel_map_range;
+        let dims = [37usize, 53];
+        let n: usize = dims.iter().product();
+        let data: Vec<f32> = (0..n).map(|i| (i as f32).cos()).collect();
+        let spec = SlabSpec::new("t", &[16, 16], &[4, 4]);
+        let grid = tile_grid(&dims, &spec);
+        let slabs: Vec<Vec<f32>> =
+            grid.iter().map(|idx| gather_slab(&data, &dims, &spec, idx)).collect();
+
+        let mut serial = vec![f32::NAN; n];
+        for (idx, slab) in grid.iter().zip(&slabs) {
+            scatter_slab(&mut serial, &dims, &spec, idx, slab);
+        }
+
+        let mut parallel = vec![f32::NAN; n];
+        {
+            let view = PartitionedField::new(&mut parallel);
+            parallel_map_range(4, grid.len(), |si| {
+                view.scatter(&dims, &spec, &grid[si], &slabs[si]);
+            });
+        }
+        assert_eq!(parallel, serial);
+        assert_eq!(parallel, data);
     }
 
     #[test]

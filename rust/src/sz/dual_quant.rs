@@ -101,6 +101,22 @@ pub fn reconstruct_slab_owned(mut acc: Vec<i32>, spec: &SlabSpec, eb: f32) -> Ve
     unsafe { Vec::from_raw_parts(md.as_mut_ptr() as *mut f32, md.len(), md.capacity()) }
 }
 
+/// Buffer-to-buffer variant for the fused decompress pass: `delta` is
+/// consumed as reconstruction scratch (left holding the prefix-summed
+/// integers) and the scaled f32 output lands in `out` — no allocation at
+/// all, so both buffers can be loaned from the thread-local arena.
+/// Bit-exact with [`reconstruct_slab_owned`] (same kernel, same scale
+/// expression).
+pub fn reconstruct_slab_into(delta: &mut [i32], spec: &SlabSpec, eb: f32, out: &mut [f32]) {
+    assert_eq!(delta.len(), spec.len());
+    assert_eq!(out.len(), spec.len());
+    lorenzo::reconstruct_nd(delta, &spec.shape, &spec.block);
+    let scale = 2.0f32 * eb;
+    for (o, &v) in out.iter_mut().zip(delta.iter()) {
+        *o = v as f32 * scale;
+    }
+}
+
 /// True when no value in `data` can clamp at the prequant cap for this eb —
 /// the common fast path that lets the coordinator skip the verbatim scan.
 pub fn range_safe(max_abs: f32, eb: f32) -> bool {
@@ -147,6 +163,22 @@ mod tests {
         let slack = 4.0 * f32::EPSILON * data.iter().fold(0f32, |a, &b| a.max(b.abs()));
         for (o, d) in out.iter().zip(&data) {
             assert!((o - d).abs() <= eb + slack, "{o} vs {d}");
+        }
+    }
+
+    #[test]
+    fn reconstruct_into_is_bit_exact_with_owned() {
+        let mut rng = Rng::new(31);
+        let s = spec();
+        let data: Vec<f32> = (0..s.len()).map(|_| rng.normal() * 5.0).collect();
+        let eb = 1e-3f32;
+        let delta = dual_quant_delta(&data, &s, eb);
+        let owned = reconstruct_slab_owned(delta.clone(), &s, eb);
+        let mut scratch = delta.clone();
+        let mut out = vec![0f32; s.len()];
+        reconstruct_slab_into(&mut scratch, &s, eb, &mut out);
+        for (a, b) in owned.iter().zip(&out) {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 

@@ -1,9 +1,12 @@
-//! Thread-local scratch arenas: reusable buffers for the hot encode path.
+//! Thread-local scratch arenas: reusable buffers for the hot encode and
+//! decode paths.
 //!
-//! The compressor's inner loops need short-lived scratch — the slab
-//! gather buffer, the chunk stitch buffer when a codec window straddles a
-//! slab boundary, the serialized archive body — and allocating them per
-//! call turns the encode path into an allocator benchmark. Each `with_*`
+//! The compressor's and decompressor's inner loops need short-lived
+//! scratch — the slab gather buffer, the chunk stitch buffer when a
+//! codec window straddles a slab boundary, the serialized archive body,
+//! the fused decompress pass's per-slab delta and reconstruction
+//! buffers — and allocating them per call turns the hot paths into an
+//! allocator benchmark. Each `with_*`
 //! helper loans a `Vec` from a small per-thread pool and returns it when
 //! the closure exits, so a worker that processes many chunks (or a
 //! long-lived `serve` worker that processes many fields) pays for the
@@ -74,8 +77,15 @@ scratch_pool!(
     U8_POOL, with_u8, u8
 );
 scratch_pool!(
-    /// Loan a `Vec<f32>` — the per-slab gather buffer.
+    /// Loan a `Vec<f32>` — the per-slab gather buffer (encode) and the
+    /// per-slab reconstruction buffer (the fused decompress pass).
     F32_POOL, with_f32, f32
+);
+scratch_pool!(
+    /// Loan a `Vec<i32>` — the per-slab delta buffer of the fused
+    /// decompress pass (patched quant deltas, consumed in place by the
+    /// inverse-Lorenzo kernel).
+    I32_POOL, with_i32, i32
 );
 
 #[cfg(test)]

@@ -1,0 +1,188 @@
+//! Fused decompress path acceptance tests: thread-count invariance
+//! (threads 1 vs 8 produce byte-identical fields across the codec ×
+//! granularity matrix), bit-equivalence with the pre-fusion
+//! materializing baseline, the no-whole-field-symbol-buffer probe
+//! (`zero_copy.rs`-style regression lock), and hostile outlier/verbatim
+//! side channels failing cleanly under the per-slab `partition_point`
+//! split.
+
+use cusz::codec::{self, CodecGranularity, CodecSpec, EncoderChoice};
+use cusz::config::{BackendKind, CuszConfig, ErrorBound, LosslessStage};
+use cusz::container::Archive;
+use cusz::coordinator::Coordinator;
+use cusz::field::Field;
+use cusz::metrics;
+use cusz::testkit::fields::{make, Regime};
+
+const EB: f32 = 1e-3;
+
+fn coordinator(codec: CodecSpec, threads: usize) -> Coordinator {
+    Coordinator::new(CuszConfig {
+        backend: BackendKind::Cpu,
+        eb: ErrorBound::Abs(EB as f64),
+        codec,
+        threads,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+/// A multi-slab field that exercises every side channel: rough data for
+/// prediction outliers, plus non-finite and huge values for verbatim.
+fn spiky_field(n: usize, seed: u64) -> Field {
+    let mut data = make(Regime::Noisy, n, seed);
+    data[7] = f32::NAN;
+    data[n / 2] = f32::INFINITY;
+    data[n - 3] = 3.4e38;
+    Field::new(format!("fused-{seed}"), vec![n], data).unwrap()
+}
+
+#[test]
+fn thread_count_invariance_across_the_codec_matrix() {
+    let n = 1 << 17; // two 1d_64k slabs
+    for encoder in [
+        EncoderChoice::Huffman,
+        EncoderChoice::Fle,
+        EncoderChoice::Rle,
+        EncoderChoice::Auto,
+    ] {
+        for granularity in [CodecGranularity::Field, CodecGranularity::Chunk] {
+            let codec = CodecSpec { encoder, lossless: LosslessStage::Zstd, granularity };
+            let field = spiky_field(n, 11);
+            let c1 = coordinator(codec, 1);
+            let c8 = coordinator(codec, 8);
+            let bytes = c1.compress_encoded(&field).unwrap().bytes;
+            let a1 = Archive::from_bytes_with_threads(&bytes, 1).unwrap();
+            let a8 = Archive::from_bytes_with_threads(&bytes, 8).unwrap();
+            let (f1, s1) = c1.decompress_with_stats(&a1).unwrap();
+            let (f8, s8) = c8.decompress_with_stats(&a8).unwrap();
+            assert_eq!(s1.threads, 1, "{encoder:?}/{granularity:?}");
+            assert_eq!(s8.threads, 8, "{encoder:?}/{granularity:?}");
+            let bits = |f: &Field| f.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&f1), bits(&f8), "{encoder:?}/{granularity:?}: threads 1 vs 8");
+            // and the fused path is bit-identical to the materializing
+            // baseline it replaced
+            let (fb, _) = c1.decompress_materializing(&a1).unwrap();
+            assert_eq!(bits(&f1), bits(&fb), "{encoder:?}/{granularity:?}: fused vs baseline");
+            // NaN compares unequal, so check the bound on the finite side
+            // and the specials explicitly
+            assert!(f1.data[7].is_nan());
+            assert_eq!(f1.data[n / 2], f32::INFINITY);
+            assert_eq!(f1.data[n - 3], 3.4e38);
+            let finite: Vec<f32> = field
+                .data
+                .iter()
+                .map(|&v| if v.is_finite() { v } else { 0.0 })
+                .collect();
+            let out_finite: Vec<f32> = f1
+                .data
+                .iter()
+                .map(|&v| if v.is_finite() { v } else { 0.0 })
+                .collect();
+            assert_eq!(
+                metrics::verify_error_bound(&finite, &out_finite, EB),
+                None,
+                "{encoder:?}/{granularity:?}"
+            );
+        }
+    }
+}
+
+/// THE regression lock for the fused path: decompressing a field must
+/// materialize no whole-field symbol buffer. The probe is a thread-local
+/// counter bumped by the materializing decode adapters — the fused
+/// `decode_into` sink path never touches it, and the kept baseline
+/// demonstrates the probe actually fires.
+#[test]
+fn fused_path_materializes_no_whole_field_symbol_buffer() {
+    for granularity in [CodecGranularity::Field, CodecGranularity::Chunk] {
+        let codec = CodecSpec {
+            encoder: EncoderChoice::Auto,
+            lossless: LosslessStage::Zstd,
+            granularity,
+        };
+        let coord = coordinator(codec, 4);
+        let field = spiky_field(1 << 17, 3);
+        let bytes = coord.compress_encoded(&field).unwrap().bytes;
+        let archive = Archive::from_bytes(&bytes).unwrap();
+
+        let before = codec::symbol_buffer_materializations();
+        let _ = coord.decompress(&archive).unwrap();
+        assert_eq!(
+            codec::symbol_buffer_materializations() - before,
+            0,
+            "{granularity:?}: the fused path must not build a whole-field symbol buffer"
+        );
+        // sanity: the baseline does exactly one materialization, so the
+        // probe is live and counting on this thread
+        let _ = coord.decompress_materializing(&archive).unwrap();
+        assert_eq!(
+            codec::symbol_buffer_materializations() - before,
+            1,
+            "{granularity:?}: the materializing baseline must bump the probe once"
+        );
+    }
+}
+
+/// Hostile side channels must fail cleanly under the per-slab
+/// `partition_point` split: out-of-range, unsorted, and duplicate
+/// positions all error (no panic, no wrong output), exactly as the old
+/// whole-channel validation scan did.
+#[test]
+fn hostile_outlier_and_verbatim_channels_fail_cleanly() {
+    let coord = coordinator(CodecSpec::default(), 4);
+    let field = spiky_field(100_000, 9); // two slabs, padding in the last
+    let archive = coord.compress(&field).unwrap();
+    // sanity: the untouched archive decodes
+    coord.decompress(&archive).unwrap();
+    let slab_len: u64 = 1 << 16;
+
+    // outlier past the end of the slab stream
+    let mut a = archive.clone();
+    a.outliers.push((2 * slab_len, 1));
+    assert!(coord.decompress(&a).is_err(), "out-of-range outlier");
+
+    // unsorted outliers within one slab
+    let mut a = archive.clone();
+    a.outliers = vec![(10, 1), (5, 2)];
+    assert!(coord.decompress(&a).is_err(), "unsorted outliers");
+
+    // duplicate outlier positions
+    let mut a = archive.clone();
+    a.outliers = vec![(7, 1), (7, 2)];
+    assert!(coord.decompress(&a).is_err(), "duplicate outliers");
+
+    // unsorted across slabs: a slab-1 position before a slab-0 position
+    let mut a = archive.clone();
+    a.outliers = vec![(slab_len + 5, 1), (5, 2)];
+    assert!(coord.decompress(&a).is_err(), "cross-slab unsorted outliers");
+
+    // verbatim past the end of the slab stream
+    let mut a = archive.clone();
+    a.verbatim.push((u64::MAX, 1.0));
+    assert!(coord.decompress(&a).is_err(), "out-of-range verbatim");
+
+    // verbatim unsorted across slabs (within-slab order is free — the
+    // owning worker applies its range in list order)
+    let mut a = archive.clone();
+    a.verbatim = vec![(slab_len + 5, 1.0), (5, 2.0)];
+    assert!(coord.decompress(&a).is_err(), "cross-slab unsorted verbatim");
+}
+
+/// The serve-side drain hands its per-job thread budget to the fused
+/// pass; a budget of 1 must behave exactly like any other (already
+/// covered above) and the stats must report what actually ran.
+#[test]
+fn explicit_thread_budget_is_reported_in_stats() {
+    let coord = coordinator(CodecSpec::default(), 0);
+    let field = spiky_field(1 << 16, 21);
+    let archive = coord.compress(&field).unwrap();
+    for budget in [1usize, 3] {
+        let (out, stats) = coord.decompress_with_threads(&archive, budget).unwrap();
+        assert_eq!(stats.threads, budget);
+        assert_eq!(out.dims, field.dims);
+    }
+    // the default entry point resolves the config budget (0 = all cores)
+    let (_, stats) = coord.decompress_with_stats(&archive).unwrap();
+    assert!(stats.threads >= 1);
+}
