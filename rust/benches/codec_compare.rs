@@ -288,6 +288,38 @@ fn main() {
         "per-chunk auto {chunked_bytes} B worse than best uniform {best_uniform} B"
     );
 
+    // ---- measured-throughput feedback: CostModel::from_registry --------
+    // The per-backend loop above ran every encoder through the
+    // instrumented stages, so the global telemetry registry now holds
+    // real symbols/ns per backend. Close the loop: a model whose
+    // throughput factors are derived from those recorded spans must hold
+    // the same 2% oracle tolerance (chunk-level selection is priced on
+    // exact bits + sidecar, so calibration adjusts throughput tiebreaks
+    // without ever degrading selection — locked here, not assumed).
+    let calibrated = CostModel::from_registry(cusz::obs::global());
+    let chunked_cal = codec::chunked::encode_chunked(&mixed_src, &ctx, &calibrated).unwrap();
+    let cal_bytes = chunked_cal.stream.payload_bytes()
+        + chunked_cal.shared_aux.len()
+        + chunked_cal.chunk_aux.iter().map(|a| a.len()).sum::<usize>()
+        + chunked_cal.tags.len();
+    let cal_gap = cal_bytes as f64 / oracle_bytes as f64;
+    println!(
+        "registry-calibrated model: {:.2}% of oracle \
+         (huffman_factor {:.3}, rle_factor {:.3})",
+        cal_gap * 100.0,
+        calibrated.huffman_throughput_factor,
+        calibrated.rle_throughput_factor,
+    );
+    assert!(
+        cal_gap <= 1.02,
+        "registry-calibrated model {cal_bytes} B strays >2% from oracle {oracle_bytes} B"
+    );
+
+    report.push_str(&format!(
+        "calibrated huffman_throughput_factor {:.4} rle_throughput_factor {:.4} \
+         calibrated_oracle_gap {cal_gap:.4}\n",
+        calibrated.huffman_throughput_factor, calibrated.rle_throughput_factor,
+    ));
     report.push_str(&format!(
         "mixed per_chunk_auto_bytes {chunked_bytes} oracle_bytes {oracle_bytes} \
          best_uniform_bytes {best_uniform} oracle_gap {oracle_gap:.4}\n"

@@ -69,21 +69,30 @@ pub fn encode_chunked(
     let parts: Vec<(EncoderKind, Vec<u8>, DeflatedChunk)> =
         src.map_chunks(cs, ctx.threads, |_, chunk| {
             let probe = cost::probe_chunk(chunk, &lengths, radius);
-            match model.select_chunk(&probe) {
-                EncoderKind::Huffman => (
-                    EncoderKind::Huffman,
-                    Vec::new(),
-                    huffman::deflate::deflate_one(chunk, &book),
-                ),
+            let kind = model.select_chunk(&probe);
+            // per-chunk telemetry: one Instant pair + three static-key
+            // counter bumps against microseconds of encode work
+            let t0 = Instant::now();
+            let (aux, c) = match kind {
+                EncoderKind::Huffman => {
+                    (Vec::new(), huffman::deflate::deflate_one(chunk, &book))
+                }
                 EncoderKind::Fle => {
                     let (w, c) = fle::encode_chunk(chunk, radius);
-                    (EncoderKind::Fle, vec![w], c)
+                    (vec![w], c)
                 }
                 EncoderKind::Rle => {
                     let (rec, c) = rle::encode_chunk(chunk, radius);
-                    (EncoderKind::Rle, rec.to_vec(), c)
+                    (rec.to_vec(), c)
                 }
-            }
+            };
+            super::record_codec_encode(
+                kind,
+                chunk.len() as u64,
+                (c.words.len() * 8 + aux.len()) as u64,
+                t0.elapsed().as_nanos() as u64,
+            );
+            (kind, aux, c)
         });
 
     let nchunks = parts.len();
@@ -169,7 +178,9 @@ pub fn decode_chunked_into(
                 chunk.symbols
             );
         }
-        match kinds[ci] {
+        let kind = kinds[ci];
+        let t0 = Instant::now();
+        let result = match kind {
             EncoderKind::Huffman => {
                 if !chunk_aux[ci].is_empty() {
                     bail!(
@@ -195,7 +206,16 @@ pub fn decode_chunked_into(
             EncoderKind::Rle => {
                 rle::decode_chunk_into(chunk, &chunk_aux[ci], radius, dict_size, window)
             }
+        };
+        if result.is_ok() {
+            super::record_codec_decode(
+                kind,
+                chunk.symbols as u64,
+                (chunk.words.len() * 8 + chunk_aux[ci].len()) as u64,
+                t0.elapsed().as_nanos() as u64,
+            );
         }
+        result
     })
 }
 

@@ -63,6 +63,48 @@ impl CostModel {
         rle_sidecar_bits: 16,
     };
 
+    /// Calibrate the field-level throughput factors from the telemetry
+    /// registry: per-backend encode throughput (symbols/ns) recorded by
+    /// the instrumented stages becomes the multiplier that prices
+    /// slower-decoding backends' bits against the FLE hot loop —
+    /// measured on *this* host and workload rather than the dev-testbed
+    /// `MEASURED` constants. Backends with no recorded traffic fall back
+    /// to the `MEASURED` value; factors are clamped to a sane band so a
+    /// cold or skewed registry can never invert the selection logic. The
+    /// exact per-chunk sidecar bits are physical constants of the wire
+    /// format and are never recalibrated.
+    pub fn from_registry(reg: &crate::obs::Registry) -> CostModel {
+        let throughput = |kind: EncoderKind| -> Option<f64> {
+            let keys = super::codec_counter_keys(kind);
+            let ns = reg.counter_value(keys.encode_ns);
+            let symbols = reg.counter_value(keys.encode_symbols);
+            if ns == 0 || symbols == 0 {
+                None
+            } else {
+                Some(symbols as f64 / ns as f64)
+            }
+        };
+        let fle = throughput(EncoderKind::Fle);
+        let factor = |kind: EncoderKind, fallback: f64, hi: f64| match (fle, throughput(kind)) {
+            (Some(f), Some(t)) if t > 0.0 => (f / t).clamp(1.0, hi),
+            _ => fallback,
+        };
+        CostModel {
+            huffman_throughput_factor: factor(
+                EncoderKind::Huffman,
+                Self::MEASURED.huffman_throughput_factor,
+                2.0,
+            ),
+            rle_throughput_factor: factor(
+                EncoderKind::Rle,
+                Self::MEASURED.rle_throughput_factor,
+                1.5,
+            ),
+            fle_sidecar_bits: Self::MEASURED.fle_sidecar_bits,
+            rle_sidecar_bits: Self::MEASURED.rle_sidecar_bits,
+        }
+    }
+
     /// Resolve `auto` for one field from its merged quant-code histogram.
     pub fn select_field(&self, freq: &[u64]) -> EncoderKind {
         let width = fle::width_for_histogram(freq);
@@ -281,6 +323,44 @@ mod tests {
                 .1;
             assert_eq!(picked_cost, min.1);
         }
+    }
+
+    #[test]
+    fn from_registry_falls_back_and_clamps() {
+        use crate::codec::codec_counter_keys;
+        use crate::obs::Registry;
+        // empty registry: every factor falls back to MEASURED
+        let empty = Registry::new();
+        assert_eq!(CostModel::from_registry(&empty), CostModel::MEASURED);
+
+        // recorded throughputs: fle 2 sym/ns, huffman 0.5, rle 4
+        let reg = Registry::new();
+        let put = |kind: EncoderKind, symbols: u64, ns: u64| {
+            let k = codec_counter_keys(kind);
+            reg.add(k.encode_symbols, symbols);
+            reg.add(k.encode_ns, ns);
+        };
+        put(EncoderKind::Fle, 2_000, 1_000);
+        put(EncoderKind::Huffman, 500, 1_000);
+        put(EncoderKind::Rle, 4_000, 1_000);
+        let m = CostModel::from_registry(&reg);
+        // huffman 4x slower would give 4.0 — clamped to the 2.0 ceiling
+        assert_eq!(m.huffman_throughput_factor, 2.0);
+        // rle faster than fle would give 0.5 — clamped up to 1.0
+        assert_eq!(m.rle_throughput_factor, 1.0);
+        // sidecar bits are wire-format constants, never recalibrated
+        assert_eq!(m.fle_sidecar_bits, CostModel::MEASURED.fle_sidecar_bits);
+        assert_eq!(m.rle_sidecar_bits, CostModel::MEASURED.rle_sidecar_bits);
+
+        // per-chunk selection ignores throughput factors entirely, so a
+        // calibrated model and MEASURED agree chunk-by-chunk (the bench's
+        // oracle-tolerance acceptance rests on this)
+        let symbols: Vec<u16> = (0..4096).map(|i| (384 + (i * 7) % 257) as u16).collect();
+        let freq = hist(&symbols, 1024);
+        let lengths = huffman::build_lengths(&freq);
+        let p = probe_chunk(&symbols, &lengths, 512);
+        assert_eq!(m.select_chunk(&p), CostModel::MEASURED.select_chunk(&p));
+        assert_eq!(m.chunk_costs(&p), CostModel::MEASURED.chunk_costs(&p));
     }
 
     #[test]

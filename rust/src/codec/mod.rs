@@ -62,8 +62,109 @@ pub fn symbol_buffer_materializations() -> u64 {
     SYMBOL_MATERIALIZATIONS.with(|c| c.get())
 }
 
+/// Registry name of the process-wide materialization counter (the
+/// thread-local probe above folded into [`crate::obs`] as a first-class
+/// counter; the per-thread cell stays for delta-based regression tests).
+pub const MATERIALIZATIONS_COUNTER: &str = "codec.symbol_materializations";
+
+static MATERIALIZATIONS: crate::obs::StaticCounter =
+    crate::obs::StaticCounter::new(MATERIALIZATIONS_COUNTER);
+
 pub(crate) fn note_symbol_materialization() {
     SYMBOL_MATERIALIZATIONS.with(|c| c.set(c.get() + 1));
+    MATERIALIZATIONS.incr();
+}
+
+/// Per-backend telemetry counter names (`codec.<backend>.<metric>`).
+/// `*_ns`/`*_symbols` pairs are what [`CostModel::from_registry`] turns
+/// into measured throughput factors.
+#[derive(Debug, Clone, Copy)]
+pub struct CodecCounterKeys {
+    pub encode_symbols: &'static str,
+    pub encode_bytes: &'static str,
+    pub encode_ns: &'static str,
+    pub decode_symbols: &'static str,
+    pub decode_bytes: &'static str,
+    pub decode_ns: &'static str,
+}
+
+pub fn codec_counter_keys(kind: EncoderKind) -> CodecCounterKeys {
+    match kind {
+        EncoderKind::Huffman => CodecCounterKeys {
+            encode_symbols: "codec.huffman.encode_symbols",
+            encode_bytes: "codec.huffman.encode_bytes",
+            encode_ns: "codec.huffman.encode_ns",
+            decode_symbols: "codec.huffman.decode_symbols",
+            decode_bytes: "codec.huffman.decode_bytes",
+            decode_ns: "codec.huffman.decode_ns",
+        },
+        EncoderKind::Fle => CodecCounterKeys {
+            encode_symbols: "codec.fle.encode_symbols",
+            encode_bytes: "codec.fle.encode_bytes",
+            encode_ns: "codec.fle.encode_ns",
+            decode_symbols: "codec.fle.decode_symbols",
+            decode_bytes: "codec.fle.decode_bytes",
+            decode_ns: "codec.fle.decode_ns",
+        },
+        EncoderKind::Rle => CodecCounterKeys {
+            encode_symbols: "codec.rle.encode_symbols",
+            encode_bytes: "codec.rle.encode_bytes",
+            encode_ns: "codec.rle.encode_ns",
+            decode_symbols: "codec.rle.decode_symbols",
+            decode_bytes: "codec.rle.decode_bytes",
+            decode_ns: "codec.rle.decode_ns",
+        },
+    }
+}
+
+// Static-key fast path for the per-chunk paths: after the first bump each
+// call is three relaxed sharded fetch_adds — no registry lock, no lookup.
+// Rows indexed by `EncoderKind::to_tag()`; columns are
+// [enc_symbols, enc_bytes, enc_ns, dec_symbols, dec_bytes, dec_ns].
+use crate::obs::StaticCounter;
+static CODEC_COUNTERS: [[StaticCounter; 6]; 3] = [
+    [
+        StaticCounter::new("codec.huffman.encode_symbols"),
+        StaticCounter::new("codec.huffman.encode_bytes"),
+        StaticCounter::new("codec.huffman.encode_ns"),
+        StaticCounter::new("codec.huffman.decode_symbols"),
+        StaticCounter::new("codec.huffman.decode_bytes"),
+        StaticCounter::new("codec.huffman.decode_ns"),
+    ],
+    [
+        StaticCounter::new("codec.fle.encode_symbols"),
+        StaticCounter::new("codec.fle.encode_bytes"),
+        StaticCounter::new("codec.fle.encode_ns"),
+        StaticCounter::new("codec.fle.decode_symbols"),
+        StaticCounter::new("codec.fle.decode_bytes"),
+        StaticCounter::new("codec.fle.decode_ns"),
+    ],
+    [
+        StaticCounter::new("codec.rle.encode_symbols"),
+        StaticCounter::new("codec.rle.encode_bytes"),
+        StaticCounter::new("codec.rle.encode_ns"),
+        StaticCounter::new("codec.rle.decode_symbols"),
+        StaticCounter::new("codec.rle.decode_bytes"),
+        StaticCounter::new("codec.rle.decode_ns"),
+    ],
+];
+
+/// Record one encode against `kind`'s registry counters. `symbols` is
+/// the input symbol count, `bytes` the encoded output (stream + sidecar).
+pub(crate) fn record_codec_encode(kind: EncoderKind, symbols: u64, bytes: u64, ns: u64) {
+    let row = &CODEC_COUNTERS[kind.to_tag() as usize];
+    row[0].add(symbols);
+    row[1].add(bytes);
+    row[2].add(ns);
+}
+
+/// Record one decode against `kind`'s registry counters. `bytes` is the
+/// encoded input consumed (stream + sidecar).
+pub(crate) fn record_codec_decode(kind: EncoderKind, symbols: u64, bytes: u64, ns: u64) {
+    let row = &CODEC_COUNTERS[kind.to_tag() as usize];
+    row[3].add(symbols);
+    row[4].add(bytes);
+    row[5].add(ns);
 }
 
 /// Concrete encoder backends — the domain of the archive header's encoder
@@ -295,12 +396,60 @@ pub trait EncoderStage: Send + Sync {
     }
 }
 
+/// Telemetry wrapper around a concrete backend: every `encode_source` /
+/// `decode_into` that flows through [`stage_for`] records per-kind
+/// symbols / bytes / nanoseconds into the registry — one `Instant` pair
+/// and three sharded counter bumps per whole-field call, so the overhead
+/// is unmeasurable next to the encode itself.
+struct Instrumented<S>(S);
+
+impl<S: EncoderStage> EncoderStage for Instrumented<S> {
+    fn kind(&self) -> EncoderKind {
+        self.0.kind()
+    }
+
+    fn encode_source(
+        &self,
+        src: &SymbolSource<'_>,
+        ctx: &EncodeContext,
+    ) -> Result<EncodedSymbols> {
+        let t0 = std::time::Instant::now();
+        let out = self.0.encode_source(src, ctx)?;
+        record_codec_encode(
+            self.kind(),
+            src.len() as u64,
+            (out.stream.payload_bytes() + out.aux.len()) as u64,
+            t0.elapsed().as_nanos() as u64,
+        );
+        Ok(out)
+    }
+
+    fn decode_into(
+        &self,
+        aux: &[u8],
+        stream: &DeflatedStream,
+        dict_size: usize,
+        threads: usize,
+        sink: &mut SymbolSink<'_>,
+    ) -> Result<()> {
+        let t0 = std::time::Instant::now();
+        self.0.decode_into(aux, stream, dict_size, threads, sink)?;
+        record_codec_decode(
+            self.kind(),
+            stream.total_symbols(),
+            (stream.payload_bytes() + aux.len()) as u64,
+            t0.elapsed().as_nanos() as u64,
+        );
+        Ok(())
+    }
+}
+
 /// Static backend registry: every [`EncoderKind`] maps to one stateless
-/// stage instance.
+/// (telemetry-wrapped) stage instance.
 pub fn stage_for(kind: EncoderKind) -> &'static dyn EncoderStage {
-    static HUFFMAN: HuffmanStage = HuffmanStage;
-    static FLE: FleStage = FleStage;
-    static RLE: RleStage = RleStage;
+    static HUFFMAN: Instrumented<HuffmanStage> = Instrumented(HuffmanStage);
+    static FLE: Instrumented<FleStage> = Instrumented(FleStage);
+    static RLE: Instrumented<RleStage> = Instrumented(RleStage);
     match kind {
         EncoderKind::Huffman => &HUFFMAN,
         EncoderKind::Fle => &FLE,

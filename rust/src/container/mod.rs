@@ -77,6 +77,19 @@ pub fn lossless_tail_encodes() -> u64 {
     TAIL_ENCODES.with(|c| c.get())
 }
 
+/// Registry name of the process-wide tail-encode counter (the probe
+/// above folded into [`crate::obs`]; the per-thread cell stays for
+/// delta-based regression tests).
+pub const TAIL_ENCODES_COUNTER: &str = "container.lossless_tail_encodes";
+
+static TAIL_ENCODES_GLOBAL: crate::obs::StaticCounter =
+    crate::obs::StaticCounter::new(TAIL_ENCODES_COUNTER);
+
+fn note_tail_encode() {
+    TAIL_ENCODES.with(|c| c.set(c.get() + 1));
+    TAIL_ENCODES_GLOBAL.incr();
+}
+
 /// Write one `[u64 len][u32 crc][payload]` section to a streaming sink.
 fn write_section<W: Write>(w: &mut W, payload: &[u8]) -> io::Result<u64> {
     w.write_all(&(payload.len() as u64).to_le_bytes())?;
@@ -423,7 +436,7 @@ impl Archive {
             let written = match self.header.lossless {
                 LosslessTag::None => write_section(w, &body)?,
                 tag => {
-                    TAIL_ENCODES.with(|c| c.set(c.get() + 1));
+                    note_tail_encode();
                     if self.header.version >= 3 {
                         let tail = encode_segmented_tail(&body, tag, threads, segment_bytes)?;
                         write_section(w, &tail)?

@@ -12,7 +12,7 @@ use crate::codec::{
 use crate::container::{self, Archive, Header, LosslessTag, FORMAT_VERSION, MAX_CHUNK_SYMBOLS};
 use crate::field::Field;
 use crate::huffman;
-use crate::metrics::StageTimer;
+use crate::obs::{self, keys, RunTimings};
 
 use crate::sz::blocks::tile_grid;
 use crate::sz::dual_quant;
@@ -38,8 +38,12 @@ pub fn compress(coord: &Coordinator, field: &Field) -> Result<CompressedField> {
             cfg.chunk_symbols
         );
     }
-    let mut timer = StageTimer::new();
+    let mut timer = RunTimings::new();
     let t_total = Instant::now();
+    // stage spans carry the original field bytes so registry-level GB/s
+    // follows the paper's convention (footnote 4: throughput against
+    // original data size)
+    let field_bytes = field.size_bytes() as u64;
 
     // ---- resolve error bound & geometry ------------------------------
     let (lo, hi) = field.value_range();
@@ -92,7 +96,7 @@ pub fn compress(coord: &Coordinator, field: &Field) -> Result<CompressedField> {
     for s in slabs {
         quants.push(s?);
     }
-    timer.add("1.predict-quant", t0.elapsed());
+    timer.add_recorded("1.predict-quant", keys::COMPRESS_PREDICT_QUANT, t0.elapsed(), field_bytes);
 
     // ---- phase B: histogram merge ------------------------------------
     let t0 = Instant::now();
@@ -100,7 +104,7 @@ pub fn compress(coord: &Coordinator, field: &Field) -> Result<CompressedField> {
     for q in &quants {
         huffman::histogram::merge_into(&mut freq, &q.hist);
     }
-    timer.add("2.histogram", t0.elapsed());
+    timer.add_recorded("2.histogram", keys::COMPRESS_HISTOGRAM, t0.elapsed(), field_bytes);
 
     // ---- phase C: view the slab codes in place, gather outliers --------
     // No field-wide flatten: the codec stages pull chunk windows straight
@@ -120,7 +124,7 @@ pub fn compress(coord: &Coordinator, field: &Field) -> Result<CompressedField> {
         outliers.extend(q.outliers.iter().map(|&(p, d)| (base + p as u64, d)));
         verbatim.extend(q.verbatim.iter().map(|&(p, v)| (base + p as u64, v)));
     }
-    timer.add("4.gather-outliers", t0.elapsed());
+    timer.add_recorded("4.gather-outliers", keys::COMPRESS_GATHER_OUTLIERS, t0.elapsed(), field_bytes);
 
     // ---- phase D: resolve the codec, run the encoder stage(s) ----------
     // `auto` adapts to smoothness (cuSZ+-style): at field granularity it
@@ -182,8 +186,13 @@ pub fn compress(coord: &Coordinator, field: &Field) -> Result<CompressedField> {
     }
     // keep the Table 7 breakdown rows: table/codebook construction is
     // reported apart from the streaming encode it precedes
-    timer.add("3.codebook", codebook_time);
-    timer.add("5.encode-deflate", t0.elapsed().saturating_sub(codebook_time));
+    timer.add_recorded("3.codebook", keys::COMPRESS_CODEBOOK, codebook_time, field_bytes);
+    timer.add_recorded(
+        "5.encode-deflate",
+        keys::COMPRESS_ENCODE,
+        t0.elapsed().saturating_sub(codebook_time),
+        field_bytes,
+    );
 
     // ---- assemble ------------------------------------------------------
     let t0 = Instant::now();
@@ -227,8 +236,9 @@ pub fn compress(coord: &Coordinator, field: &Field) -> Result<CompressedField> {
     archive
         .write_into_with(&mut bytes, threads, container::TAIL_SEGMENT_BYTES)
         .expect("writing to a Vec cannot fail");
-    timer.add("6.container", t0.elapsed());
-    timer.add("total", t_total.elapsed());
+    timer.add_recorded("6.container", keys::COMPRESS_CONTAINER, t0.elapsed(), field_bytes);
+    timer.add_recorded("total", keys::COMPRESS_TOTAL, t_total.elapsed(), field_bytes);
+    obs::global().add("compress.fields", 1);
 
     let stats = CompressStats {
         original_bytes: field.size_bytes(),

@@ -25,7 +25,7 @@ use super::{Coordinator, DecompressStats};
 use crate::codec::{self, SymbolSink};
 use crate::container::Archive;
 use crate::field::Field;
-use crate::metrics::StageTimer;
+use crate::obs::{self, keys, RunTimings};
 use crate::sz::blocks::{scatter_slab, tile_grid, PartitionedField, SlabIndex, SlabSpec};
 use crate::util::arena;
 use crate::util::pool::{parallel_map, parallel_map_range};
@@ -112,12 +112,14 @@ pub fn decompress_with_threads(
     threads: usize,
 ) -> Result<(Field, DecompressStats)> {
     let threads = threads.max(1);
-    let mut timer = StageTimer::new();
+    let mut timer = RunTimings::new();
     let t_total = Instant::now();
     let h = &archive.header;
     let geo = resolve_geometry(coord, archive)?;
     let (spec, grid) = (&geo.spec, &geo.grid);
     let slab_len = spec.len();
+    // original (reconstructed) bytes, the paper's throughput denominator
+    let field_bytes = (slab_len * grid.len() * 4) as u64;
 
     // ---- stage 1: decode chunk-parallel into per-slab code buffers ----
     // The stage is picked by the archive's tags, not the config: a
@@ -151,7 +153,7 @@ pub fn decompress_with_threads(
             )?;
         }
     }
-    timer.add("1.decode", t0.elapsed());
+    timer.add_recorded("1.decode", keys::DECOMPRESS_DECODE, t0.elapsed(), field_bytes);
 
     // ---- stage 2: fused per-slab patch → inverse Lorenzo → verbatim →
     // scatter, one slab-parallel pass over arena-loaned scratch ----------
@@ -213,8 +215,14 @@ pub fn decompress_with_threads(
     for (si, r) in results.into_iter().enumerate() {
         r.with_context(|| format!("slab {si}"))?;
     }
-    timer.add("2.patch-reverse-scatter", t0.elapsed());
-    timer.add("total", t_total.elapsed());
+    timer.add_recorded(
+        "2.patch-reverse-scatter",
+        keys::DECOMPRESS_FUSED_RECONSTRUCT,
+        t0.elapsed(),
+        field_bytes,
+    );
+    timer.add_recorded("total", keys::DECOMPRESS_TOTAL, t_total.elapsed(), field_bytes);
+    obs::global().add("decompress.fields", 1);
 
     let field = Field::new(h.field_name.clone(), geo.logical_dims, out)?;
     let stats = DecompressStats { timer, original_bytes: field.size_bytes(), threads };
@@ -231,7 +239,9 @@ pub fn decompress_materializing(
     coord: &Coordinator,
     archive: &Archive,
 ) -> Result<(Field, DecompressStats)> {
-    let mut timer = StageTimer::new();
+    // local-only timings: the baseline must not pollute the global
+    // registry's production stage aggregates it is benchmarked against
+    let mut timer = RunTimings::new();
     let t_total = Instant::now();
     let h = &archive.header;
     let geo = resolve_geometry(coord, archive)?;

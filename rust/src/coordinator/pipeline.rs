@@ -12,6 +12,7 @@ use anyhow::Result;
 use super::{CompressStats, Coordinator};
 use crate::container::Archive;
 use crate::field::Field;
+use crate::obs::{self, keys};
 
 /// Aggregate results of a streaming run.
 #[derive(Debug, Default)]
@@ -54,11 +55,17 @@ where
     let mut report = PipelineReport::default();
     for field in rx {
         let name = field.name.clone();
+        // spans, not a mutable timer: each iteration records wall time +
+        // bytes into the shared registry without any &mut aliasing
+        let span = obs::span(keys::PIPELINE_COMPRESS).with_bytes(field.size_bytes() as u64);
         let (archive, stats) = coord.compress_with_stats(&field)?;
+        drop(span);
         report.fields += 1;
         report.original_bytes += stats.original_bytes;
         report.compressed_bytes += stats.compressed_bytes;
+        let sink_span = obs::span(keys::PIPELINE_SINK).with_bytes(stats.compressed_bytes as u64);
         sink(&name, archive)?;
+        drop(sink_span);
         report.per_field.push((name, stats));
     }
     report.wall_seconds = t0.elapsed().as_secs_f64();

@@ -1,11 +1,11 @@
 //! Per-run statistics: stage timings (Table 7 rows) and size accounting.
 
 use crate::codec::{CodecGranularity, EncoderKind};
-use crate::metrics::StageTimer;
+use crate::obs::RunTimings;
 
 #[derive(Debug, Clone, Default)]
 pub struct CompressStats {
-    pub timer: StageTimer,
+    pub timer: RunTimings,
     pub original_bytes: usize,
     pub compressed_bytes: usize,
     pub n_slabs: usize,
@@ -74,7 +74,7 @@ impl CompressStats {
 
 #[derive(Debug, Clone, Default)]
 pub struct DecompressStats {
-    pub timer: StageTimer,
+    pub timer: RunTimings,
     pub original_bytes: usize,
     /// Worker threads the decode + fused slab pass actually ran with
     /// (the CLI/serve budget after the 0 = all-cores fallback).

@@ -16,7 +16,9 @@
 //!   in `auto` mode per field or per chunk by a measured cost model),
 //!   and owns the versioned archive format ([`container`]), baselines
 //!   ([`sz`], [`zfp`]), synthetic datasets ([`datagen`]) and metrics
-//!   ([`metrics`]).
+//!   ([`metrics`]). Every layer records into the unified telemetry
+//!   registry ([`obs`]): lock-free counters, per-stage spans, and latency
+//!   histograms, exported as a versioned JSON snapshot or Prometheus text.
 //! * **Serving layer**: the [`store`] module bundles many compressed
 //!   fields into one sharded `.cuszb` archive with a footer index and
 //!   random-access per-field decompression, and [`serve`] runs a batched
@@ -75,6 +77,7 @@ pub mod datagen;
 pub mod field;
 pub mod huffman;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod store;

@@ -93,7 +93,7 @@ fn usage() -> String {
      Common options: --backend pjrt|cpu, --threads N, --chunk N,\n\
        --dict N, --repr adaptive|u32|u64, --codec huffman|fle|rle|auto,\n\
        --codec-granularity field|chunk, --lossless none|gzip|zstd,\n\
-       --artifacts DIR"
+       --artifacts DIR, --metrics-out PATH (cusz-metrics/v1 JSON snapshot)"
         .to_string()
 }
 
@@ -147,6 +147,25 @@ fn with_common(cli: Cli) -> Cli {
         )
         .opt("lossless", "none", "final lossless stage: none|gzip|zstd")
         .opt("artifacts", "artifacts", "AOT artifact directory")
+        .opt(
+            "metrics-out",
+            "",
+            "write a cusz-metrics/v1 JSON snapshot of the telemetry registry on exit",
+        )
+}
+
+/// `--metrics-out PATH`: dump the global telemetry registry — every
+/// counter, per-stage span aggregate, and latency histogram the command's
+/// work recorded — as a versioned JSON snapshot.
+fn write_metrics_snapshot(cli: &Cli) -> Result<()> {
+    let path = cli.get("metrics-out");
+    if path.is_empty() {
+        return Ok(());
+    }
+    std::fs::write(&path, cusz::obs::global().snapshot().to_json())
+        .with_context(|| format!("writing metrics snapshot {path}"))?;
+    println!("wrote metrics snapshot {path}");
+    Ok(())
 }
 
 fn parse_dims(s: &str) -> Result<Vec<usize>> {
@@ -216,7 +235,7 @@ fn cmd_compress(args: &[String]) -> Result<()> {
     println!("engine: {}", coord.engine_name());
     println!("{}", compressed.stats.report());
     println!("wrote {out}");
-    Ok(())
+    write_metrics_snapshot(&cli)
 }
 
 fn cmd_decompress(args: &[String]) -> Result<()> {
@@ -236,7 +255,7 @@ fn cmd_decompress(args: &[String]) -> Result<()> {
     println!("engine: {}  decode threads: {}", coord.engine_name(), stats.threads);
     println!("{}", stats.timer.report(stats.original_bytes));
     println!("wrote {out} (dims {:?})", field.dims);
-    Ok(())
+    write_metrics_snapshot(&cli)
 }
 
 fn cmd_roundtrip(args: &[String]) -> Result<()> {
@@ -272,7 +291,7 @@ fn cmd_roundtrip(args: &[String]) -> Result<()> {
         None => println!("  error bound  RESPECTED"),
         Some(i) => bail!("error bound VIOLATED at index {i}"),
     }
-    Ok(())
+    write_metrics_snapshot(&cli)
 }
 
 fn cmd_stats(args: &[String]) -> Result<()> {
@@ -304,7 +323,7 @@ fn cmd_stats(args: &[String]) -> Result<()> {
             100.0 * nearmin as f64 / field.len() as f64
         );
     }
-    Ok(())
+    write_metrics_snapshot(&cli)
 }
 
 fn cmd_store(args: &[String]) -> Result<()> {
@@ -349,7 +368,7 @@ fn cmd_store_add(args: &[String]) -> Result<()> {
         let mut store = Store::open_or_create(cli.get("store"), shards)?;
         let entry = store.add_bytes(&name, &payload)?;
         println!("added '{}' ({} bytes, shard {})", entry.name, entry.len, entry.shard);
-        return Ok(());
+        return write_metrics_snapshot(&cli);
     }
 
     let mut field = if !cli.get("dataset").is_empty() {
@@ -391,7 +410,7 @@ fn cmd_store_add(args: &[String]) -> Result<()> {
         entry.offset,
         entry.len
     );
-    Ok(())
+    write_metrics_snapshot(&cli)
 }
 
 fn cmd_store_get(args: &[String]) -> Result<()> {
@@ -428,7 +447,7 @@ fn cmd_store_get(args: &[String]) -> Result<()> {
         write_f32_file(&cli.get("out"), &field.data)?;
         println!("wrote {} (dims {:?})", cli.get("out"), field.dims);
     }
-    Ok(())
+    write_metrics_snapshot(&cli)
 }
 
 /// `store get --all`: batch-decompress the whole bundle via the
@@ -495,6 +514,8 @@ fn store_get_all(cli: &Cli, store: &Store) -> Result<()> {
         println!("  {name:<34} FAILED: {err}");
     }
     println!("{}", stats.report());
+    // snapshot first so partial-failure drains still leave telemetry behind
+    write_metrics_snapshot(cli)?;
     if stats.failed > 0 {
         bail!(
             "{} of {} fields failed to restore (see FAILED lines above)",
@@ -633,7 +654,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     }
     println!("{}", stats.report());
     println!("store: {} ({} fields)", cli.get("store"), store.len());
-    Ok(())
+    write_metrics_snapshot(&cli)
 }
 
 fn bench_field_name(ds: Dataset) -> &'static str {
@@ -650,6 +671,21 @@ fn jnum(v: f64) -> String {
     if v.is_finite() { format!("{v:.4}") } else { "0".into() }
 }
 
+/// Host/commit provenance stamp for bench artifacts. `placeholder` marks
+/// numbers that were committed as schema examples, not measured on CI.
+fn generated_by_json(placeholder: bool) -> String {
+    let clean = |v: String| {
+        v.chars().filter(|c| c.is_ascii_alphanumeric() || "-._".contains(*c)).collect::<String>()
+    };
+    let host = std::env::var("HOSTNAME").map(clean).unwrap_or_default();
+    let commit = std::env::var("GITHUB_SHA").map(clean).unwrap_or_default();
+    format!(
+        "{{\"host\": \"{}\", \"commit\": \"{}\", \"placeholder\": {placeholder}}}",
+        if host.is_empty() { "unknown".into() } else { host },
+        if commit.is_empty() { "unknown".into() } else { commit },
+    )
+}
+
 /// `cusz bench`: the perf trajectory tracker. Measures per-stage and
 /// end-to-end compress/decompress throughput plus compression ratio per
 /// datagen profile, and compares (a) the streaming segmented
@@ -657,9 +693,10 @@ fn jnum(v: f64) -> String {
 /// (two single-threaded monolithic serializations per field) and (b) the
 /// fused slab-parallel decompress pipeline against the real pre-fusion
 /// materializing path (`decompress_materializing`). Emits
-/// `BENCH_pipeline.json` (schema `cusz-bench-pipeline/v2`, now with
-/// per-stage decompress GB/s + the decompress e2e speedup) so CI
-/// archives comparable numbers across PRs.
+/// `BENCH_pipeline.json` (schema `cusz-bench-pipeline/v3`: per-stage
+/// GB/s, a `generated_by` host/commit stamp, and an `obs` section
+/// embedding the full cusz-metrics/v1 telemetry snapshot the run
+/// produced) so CI archives comparable numbers across PRs.
 fn cmd_bench(args: &[String]) -> Result<()> {
     use cusz::util::bench::{print_table, Bench};
 
@@ -823,19 +860,25 @@ fn cmd_bench(args: &[String]) -> Result<()> {
         &rows,
     );
 
+    // the full telemetry snapshot rides along: every stage span, codec
+    // counter, and histogram the benched pipelines recorded
+    let obs_json = cusz::obs::global().snapshot().to_json();
     let json = format!(
-        "{{\n  \"schema\": \"cusz-bench-pipeline/v2\",\n  \"engine\": \"{}\",\n  \
-         \"threads\": {},\n  \"quick\": {},\n  \"scale\": {},\n  \"profiles\": [\n{}\n  ]\n}}\n",
+        "{{\n  \"schema\": \"cusz-bench-pipeline/v3\",\n  \"engine\": \"{}\",\n  \
+         \"threads\": {},\n  \"quick\": {},\n  \"scale\": {},\n  \
+         \"generated_by\": {},\n  \"profiles\": [\n{}\n  ],\n  \"obs\": {}\n}}\n",
         engine_name,
         threads,
         quick,
         scale,
-        json_profiles.join(",\n")
+        generated_by_json(false),
+        json_profiles.join(",\n"),
+        obs_json.trim_end(),
     );
     let out = cli.get("out");
     std::fs::write(&out, &json).with_context(|| format!("writing {out}"))?;
     println!("\nwrote {out} ({} profiles)", json_profiles.len());
-    Ok(())
+    write_metrics_snapshot(&cli)
 }
 
 fn cmd_selftest(args: &[String]) -> Result<()> {
@@ -862,5 +905,5 @@ fn cmd_selftest(args: &[String]) -> Result<()> {
         checked += 1;
     }
     println!("selftest passed: {checked} fields bit-exact across PJRT and CPU");
-    Ok(())
+    write_metrics_snapshot(&cli)
 }

@@ -1,9 +1,12 @@
 //! Compression-quality and performance metrics: PSNR/RMSE (paper footnote
-//! 6), error-bound verification, compression ratio / bitrate, and stage
-//! timers for the Table 7 breakdowns.
+//! 6), error-bound verification, and compression ratio / bitrate. Stage
+//! timing for the Table 7 breakdowns now lives in [`crate::obs`]
+//! (`RunTimings` + the global registry); the [`timer`] module remains as
+//! a deprecated shim.
 
 pub mod psnr;
 pub mod timer;
 
 pub use psnr::{bitrate_bits, compression_ratio, max_abs_error, psnr, rmse, verify_error_bound};
+#[allow(deprecated)]
 pub use timer::StageTimer;

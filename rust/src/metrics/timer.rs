@@ -1,14 +1,21 @@
 //! Per-stage wall-clock accounting for the Table 7 breakdown rows.
+//!
+//! Deprecated shim: `StageTimer` is single-threaded (`&mut self`) and
+//! records nowhere but itself. The pipeline now uses
+//! [`crate::obs::RunTimings`] (same per-run API and report format) plus
+//! the global [`crate::obs::Registry`] for cross-thread aggregation.
 
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
+#[deprecated(note = "use cusz::obs::RunTimings (same API) + the obs registry")]
 #[derive(Debug, Default, Clone)]
 pub struct StageTimer {
     totals: BTreeMap<String, Duration>,
     counts: BTreeMap<String, u64>,
 }
 
+#[allow(deprecated)]
 impl StageTimer {
     pub fn new() -> Self {
         Self::default()
@@ -69,6 +76,7 @@ impl StageTimer {
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
 

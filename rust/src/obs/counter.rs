@@ -1,0 +1,135 @@
+//! Lock-free monotonic counters, sharded across cache lines so the fused
+//! slab-parallel paths can bump them from every worker thread without
+//! bouncing a single hot line (the same trick cuSZ's kernel counters use
+//! on-device: per-block partials merged at readout).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock};
+
+pub(crate) const SHARDS: usize = 16;
+
+#[repr(align(64))]
+#[derive(Debug, Default)]
+struct PaddedU64(AtomicU64);
+
+/// A monotonically increasing counter. `add` touches one cache-line-padded
+/// shard chosen per thread; `get` sums all shards (reads may race writes,
+/// which is fine for telemetry — each shard read is itself atomic).
+#[derive(Debug)]
+pub struct Counter {
+    shards: [PaddedU64; SHARDS],
+}
+
+static NEXT_SHARD: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static SHARD: usize = NEXT_SHARD.fetch_add(1, Ordering::Relaxed) % SHARDS;
+}
+
+#[inline]
+fn shard_index() -> usize {
+    SHARD.with(|s| *s)
+}
+
+impl Default for Counter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Counter {
+    pub fn new() -> Self {
+        Counter { shards: std::array::from_fn(|_| PaddedU64::default()) }
+    }
+
+    #[inline]
+    pub fn add(&self, v: u64) {
+        self.shards[shard_index()].0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn incr(&self) {
+        self.add(1);
+    }
+
+    /// Sum of all shards.
+    pub fn get(&self) -> u64 {
+        self.shards.iter().map(|s| s.0.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Zero every shard in place (the `Arc` identity is preserved so
+    /// `StaticCounter` caches stay valid).
+    pub fn reset(&self) {
+        for s in &self.shards {
+            s.0.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Static-key fast path: resolves the registry entry once per process and
+/// caches the `Arc`, so hot-path call sites pay one `OnceLock` load plus a
+/// relaxed `fetch_add` — no map lookup, no lock.
+pub struct StaticCounter {
+    name: &'static str,
+    cell: OnceLock<Arc<Counter>>,
+}
+
+impl StaticCounter {
+    pub const fn new(name: &'static str) -> Self {
+        StaticCounter { name, cell: OnceLock::new() }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    #[inline]
+    fn cell(&self) -> &Arc<Counter> {
+        self.cell.get_or_init(|| crate::obs::global().counter(self.name))
+    }
+
+    #[inline]
+    pub fn add(&self, v: u64) {
+        self.cell().add(v);
+    }
+
+    #[inline]
+    pub fn incr(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.cell().get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_and_get() {
+        let c = Counter::new();
+        c.add(3);
+        c.incr();
+        assert_eq!(c.get(), 4);
+        c.reset();
+        assert_eq!(c.get(), 0);
+    }
+
+    #[test]
+    fn sums_across_threads() {
+        let c = std::sync::Arc::new(Counter::new());
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let c = c.clone();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        c.add(2);
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 16_000);
+    }
+}

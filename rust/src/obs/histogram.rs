@@ -1,0 +1,205 @@
+//! Streaming log2-bucketed histograms with percentile readout.
+//!
+//! 256 buckets cover the whole `u64` range: values below 16 get exact
+//! unit buckets; above that, each power-of-two decade is split into four
+//! quarter-decade sub-buckets (an HDR-style layout), bounding relative
+//! error at a bucket midpoint to ~12.5%. Recording is a handful of
+//! relaxed atomic ops — safe from any worker thread, no locks.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub const BUCKETS: usize = 256;
+const LINEAR_LIMIT: u64 = 16;
+
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+/// Bucket index for a value. Exact below `LINEAR_LIMIT`; otherwise
+/// `16 + (exponent - 4) * 4 + quarter` where `quarter` is the two bits
+/// below the leading one.
+pub fn bucket_of(v: u64) -> usize {
+    if v < LINEAR_LIMIT {
+        return v as usize;
+    }
+    let e = 63 - v.leading_zeros() as usize; // >= 4
+    let sub = ((v >> (e - 2)) & 3) as usize;
+    (16 + (e - 4) * 4 + sub).min(BUCKETS - 1)
+}
+
+/// Inclusive `(lo, hi)` value range of bucket `b`. Buckets tile the u64
+/// range contiguously: `bounds(b).1 + 1 == bounds(b + 1).0`.
+pub fn bucket_bounds(b: usize) -> (u64, u64) {
+    debug_assert!(b < BUCKETS);
+    if b < LINEAR_LIMIT as usize {
+        return (b as u64, b as u64);
+    }
+    let e = 4 + (b - 16) / 4;
+    let sub = ((b - 16) % 4) as u64;
+    let width = 1u64 << (e - 2);
+    let lo = (1u64 << e) + sub * width;
+    (lo, lo + (width - 1))
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Consistent-enough point-in-time copy for readout. Concurrent
+    /// recorders may land between field reads; telemetry tolerates that.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let count = self.count.load(Ordering::Relaxed);
+        let mut nonzero = Vec::new();
+        for (b, slot) in self.buckets.iter().enumerate() {
+            let c = slot.load(Ordering::Relaxed);
+            if c > 0 {
+                let (lo, hi) = bucket_bounds(b);
+                nonzero.push((lo, hi, c));
+            }
+        }
+        HistogramSnapshot {
+            count,
+            sum: self.sum.load(Ordering::Relaxed),
+            min: if count == 0 { 0 } else { self.min.load(Ordering::Relaxed) },
+            max: self.max.load(Ordering::Relaxed),
+            buckets: nonzero,
+        }
+    }
+
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+        self.min.store(u64::MAX, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Materialized histogram state: only non-empty buckets, as
+/// `(lo, hi, count)` triples in ascending value order.
+#[derive(Debug, Clone, Default)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub min: u64,
+    pub max: u64,
+    pub buckets: Vec<(u64, u64, u64)>,
+}
+
+impl HistogramSnapshot {
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Quantile estimate via rank scan with linear interpolation inside
+    /// the target bucket, clamped to the observed min/max. `q` in [0, 1].
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = q * (self.count as f64 - 1.0);
+        let mut cum = 0u64;
+        for &(lo, hi, c) in &self.buckets {
+            if (cum + c) as f64 > target {
+                let lo = lo.max(self.min) as f64;
+                let hi = hi.min(self.max) as f64;
+                let frac = if c > 1 { (target - cum as f64) / (c - 1) as f64 } else { 0.5 };
+                return lo + frac * (hi - lo).max(0.0);
+            }
+            cum += c;
+        }
+        self.max as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_tile_u64_contiguously() {
+        let mut prev_hi = None::<u64>;
+        for b in 0..BUCKETS {
+            let (lo, hi) = bucket_bounds(b);
+            if let Some(p) = prev_hi {
+                assert_eq!(lo, p + 1, "gap before bucket {b}");
+            }
+            assert!(lo <= hi);
+            prev_hi = Some(hi);
+        }
+        assert_eq!(prev_hi, Some(u64::MAX));
+    }
+
+    #[test]
+    fn every_value_lands_in_its_bounds() {
+        let probes: Vec<u64> = (0..2000)
+            .chain([1 << 20, (1 << 20) + 1, u64::MAX, 1 << 62, (1 << 63) - 1, 1 << 63])
+            .chain((4..63).map(|e| 1u64 << e))
+            .chain((4..63).map(|e| (1u64 << e) - 1))
+            .collect();
+        for v in probes {
+            let b = bucket_of(v);
+            let (lo, hi) = bucket_bounds(b);
+            assert!(lo <= v && v <= hi, "value {v} outside bucket {b} = [{lo}, {hi}]");
+        }
+    }
+
+    #[test]
+    fn record_and_snapshot() {
+        let h = Histogram::new();
+        for v in [3u64, 3, 100, 5000] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 4);
+        assert_eq!(s.sum, 5106);
+        assert_eq!(s.min, 3);
+        assert_eq!(s.max, 5000);
+        assert_eq!(s.buckets.iter().map(|&(_, _, c)| c).sum::<u64>(), 4);
+        h.reset();
+        assert_eq!(h.snapshot().count, 0);
+    }
+
+    #[test]
+    fn empty_percentile_is_zero() {
+        assert_eq!(HistogramSnapshot::default().percentile(0.5), 0.0);
+    }
+}

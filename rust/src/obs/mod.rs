@@ -1,0 +1,487 @@
+//! Unified telemetry layer: a process-wide registry of named counters,
+//! per-stage span aggregates, and latency histograms.
+//!
+//! Everything is std-only and lock-free on the hot path: counters and
+//! stage stats are sharded `AtomicU64`s (see [`counter`]), histograms are
+//! atomic bucket arrays (see [`histogram`]), and the registry maps are
+//! behind an `RwLock` that instrumented code touches only on first use of
+//! a key (static call sites cache the `Arc` via [`StaticCounter`]).
+//!
+//! Readout comes in three forms: a versioned JSON [`Snapshot`]
+//! (`cusz … --metrics-out <path>`), Prometheus text exposition
+//! ([`Registry::render_text`]), and the per-run [`RunTimings`] that
+//! feeds `CompressStats`/`DecompressStats` reports — the same numbers
+//! cuSZ's Table 7 stage breakdown is built from.
+
+pub mod counter;
+pub mod histogram;
+pub mod span;
+
+pub use counter::{Counter, StaticCounter};
+pub use histogram::{bucket_bounds, bucket_of, Histogram, HistogramSnapshot};
+pub use span::{Span, StageStat};
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, OnceLock, RwLock};
+use std::time::{Duration, Instant};
+
+/// Documented metric names. Stage keys follow `<phase>.<stage>`; every
+/// key in [`keys::DOCUMENTED_STAGES`] is recorded by a full
+/// compress+decompress roundtrip and locked by a regression test.
+pub mod keys {
+    pub const COMPRESS_PREDICT_QUANT: &str = "compress.predict_quant";
+    pub const COMPRESS_HISTOGRAM: &str = "compress.histogram";
+    pub const COMPRESS_CODEBOOK: &str = "compress.codebook";
+    pub const COMPRESS_GATHER_OUTLIERS: &str = "compress.gather_outliers";
+    pub const COMPRESS_ENCODE: &str = "compress.encode";
+    pub const COMPRESS_CONTAINER: &str = "compress.container";
+    pub const COMPRESS_TOTAL: &str = "compress.total";
+    pub const DECOMPRESS_DECODE: &str = "decompress.decode";
+    pub const DECOMPRESS_FUSED_RECONSTRUCT: &str = "decompress.fused_reconstruct";
+    pub const DECOMPRESS_TOTAL: &str = "decompress.total";
+
+    /// Stage keys every compress→decompress roundtrip must record.
+    pub const DOCUMENTED_STAGES: &[&str] = &[
+        COMPRESS_PREDICT_QUANT,
+        COMPRESS_HISTOGRAM,
+        COMPRESS_CODEBOOK,
+        COMPRESS_GATHER_OUTLIERS,
+        COMPRESS_ENCODE,
+        COMPRESS_CONTAINER,
+        COMPRESS_TOTAL,
+        DECOMPRESS_DECODE,
+        DECOMPRESS_FUSED_RECONSTRUCT,
+        DECOMPRESS_TOTAL,
+    ];
+
+    // Streaming pipeline / batch service spans.
+    pub const PIPELINE_COMPRESS: &str = "pipeline.compress";
+    pub const PIPELINE_SINK: &str = "pipeline.sink";
+    pub const SERVE_COMPRESS_JOB: &str = "serve.compress.job";
+    pub const SERVE_DECOMPRESS_JOB: &str = "serve.decompress.job";
+
+    // Latency histograms (values are nanoseconds).
+    pub const HIST_COMPRESS_JOB_NS: &str = "serve.compress.job_ns";
+    pub const HIST_DECOMPRESS_JOB_NS: &str = "serve.decompress.job_ns";
+
+    // Queue-depth counter pair: depth = enqueued - dequeued.
+    pub const SERVE_QUEUE_ENQUEUED: &str = "serve.queue.enqueued";
+    pub const SERVE_QUEUE_DEQUEUED: &str = "serve.queue.dequeued";
+}
+
+/// Process-wide registry of counters, stage aggregates, and histograms.
+/// Keys are `&'static str` by design: instrumentation uses fixed names,
+/// and snapshots iterate `BTreeMap`s so output ordering is deterministic.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: RwLock<BTreeMap<&'static str, Arc<Counter>>>,
+    stages: RwLock<BTreeMap<&'static str, Arc<StageStat>>>,
+    hists: RwLock<BTreeMap<&'static str, Arc<Histogram>>>,
+}
+
+static GLOBAL: OnceLock<Registry> = OnceLock::new();
+
+/// The process-wide registry all built-in instrumentation records into.
+pub fn global() -> &'static Registry {
+    GLOBAL.get_or_init(Registry::new)
+}
+
+/// Open a span against a stage of the global registry.
+pub fn span(key: &'static str) -> Span {
+    global().span(key)
+}
+
+fn get_or_insert<T: Default>(
+    map: &RwLock<BTreeMap<&'static str, Arc<T>>>,
+    name: &'static str,
+) -> Arc<T> {
+    if let Some(v) = map.read().expect("obs registry poisoned").get(name) {
+        return v.clone();
+    }
+    map.write()
+        .expect("obs registry poisoned")
+        .entry(name)
+        .or_default()
+        .clone()
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &'static str) -> Arc<Counter> {
+        get_or_insert(&self.counters, name)
+    }
+
+    pub fn stage(&self, name: &'static str) -> Arc<StageStat> {
+        get_or_insert(&self.stages, name)
+    }
+
+    pub fn histogram(&self, name: &'static str) -> Arc<Histogram> {
+        get_or_insert(&self.hists, name)
+    }
+
+    /// Current value of a counter, 0 if never registered.
+    pub fn counter_value(&self, name: &str) -> u64 {
+        self.counters
+            .read()
+            .expect("obs registry poisoned")
+            .get(name)
+            .map(|c| c.get())
+            .unwrap_or(0)
+    }
+
+    /// Total recorded nanoseconds for a stage, 0 if never registered.
+    pub fn stage_ns(&self, name: &str) -> u64 {
+        self.stages
+            .read()
+            .expect("obs registry poisoned")
+            .get(name)
+            .map(|s| s.total_ns())
+            .unwrap_or(0)
+    }
+
+    pub fn add(&self, name: &'static str, v: u64) {
+        self.counter(name).add(v);
+    }
+
+    pub fn span(&self, key: &'static str) -> Span {
+        Span::enter(self.stage(key))
+    }
+
+    /// Zero every registered instrument in place. Registered names (and
+    /// the `Arc`s cached by `StaticCounter`s) survive.
+    pub fn reset(&self) {
+        for c in self.counters.read().expect("obs registry poisoned").values() {
+            c.reset();
+        }
+        for s in self.stages.read().expect("obs registry poisoned").values() {
+            s.reset();
+        }
+        for h in self.hists.read().expect("obs registry poisoned").values() {
+            h.reset();
+        }
+    }
+
+    /// Point-in-time copy of every instrument, sorted by name.
+    pub fn snapshot(&self) -> Snapshot {
+        let counters = self
+            .counters
+            .read()
+            .expect("obs registry poisoned")
+            .iter()
+            .map(|(&k, v)| (k.to_string(), v.get()))
+            .collect();
+        let stages = self
+            .stages
+            .read()
+            .expect("obs registry poisoned")
+            .iter()
+            .map(|(&k, v)| {
+                (
+                    k.to_string(),
+                    StageSnapshot { ns: v.total_ns(), calls: v.calls(), bytes: v.bytes() },
+                )
+            })
+            .collect();
+        let histograms = self
+            .hists
+            .read()
+            .expect("obs registry poisoned")
+            .iter()
+            .map(|(&k, v)| (k.to_string(), v.snapshot()))
+            .collect();
+        Snapshot { counters, stages, histograms }
+    }
+
+    /// Prometheus text exposition (one sample per line). Metric names are
+    /// fixed; instrument names become label values with `.` preserved.
+    pub fn render_text(&self) -> String {
+        let snap = self.snapshot();
+        let mut out = String::new();
+        out.push_str("# TYPE cusz_counter counter\n");
+        for (name, v) in &snap.counters {
+            out.push_str(&format!("cusz_counter{{name=\"{name}\"}} {v}\n"));
+        }
+        out.push_str("# TYPE cusz_stage_ns_total counter\n");
+        out.push_str("# TYPE cusz_stage_calls_total counter\n");
+        out.push_str("# TYPE cusz_stage_bytes_total counter\n");
+        for (name, s) in &snap.stages {
+            out.push_str(&format!("cusz_stage_ns_total{{stage=\"{name}\"}} {}\n", s.ns));
+            out.push_str(&format!("cusz_stage_calls_total{{stage=\"{name}\"}} {}\n", s.calls));
+            out.push_str(&format!("cusz_stage_bytes_total{{stage=\"{name}\"}} {}\n", s.bytes));
+        }
+        out.push_str("# TYPE cusz_histogram_count counter\n");
+        out.push_str("# TYPE cusz_histogram_quantile gauge\n");
+        for (name, h) in &snap.histograms {
+            out.push_str(&format!("cusz_histogram_count{{hist=\"{name}\"}} {}\n", h.count));
+            out.push_str(&format!("cusz_histogram_sum{{hist=\"{name}\"}} {}\n", h.sum));
+            for (q, label) in [(0.5, "0.5"), (0.95, "0.95"), (0.99, "0.99")] {
+                out.push_str(&format!(
+                    "cusz_histogram_quantile{{hist=\"{name}\",quantile=\"{label}\"}} {}\n",
+                    jnum(h.percentile(q))
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageSnapshot {
+    pub ns: u64,
+    pub calls: u64,
+    pub bytes: u64,
+}
+
+impl StageSnapshot {
+    /// GB/s against the recorded byte volume (bytes/ns == GB/s).
+    pub fn gbps(&self) -> f64 {
+        if self.ns == 0 {
+            0.0
+        } else {
+            self.bytes as f64 / self.ns as f64
+        }
+    }
+}
+
+/// Versioned, self-describing snapshot — the payload behind
+/// `--metrics-out` and the `obs` section of `BENCH_pipeline.json`.
+#[derive(Debug, Clone, Default)]
+pub struct Snapshot {
+    pub counters: Vec<(String, u64)>,
+    pub stages: Vec<(String, StageSnapshot)>,
+    pub histograms: Vec<(String, HistogramSnapshot)>,
+}
+
+/// Render a float as a JSON-safe number (non-finite collapses to 0).
+fn jnum(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6}")
+    } else {
+        "0".to_string()
+    }
+}
+
+impl Snapshot {
+    pub const SCHEMA: &'static str = "cusz-metrics/v1";
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.iter().find(|(k, _)| k == name).map(|&(_, v)| v).unwrap_or(0)
+    }
+
+    pub fn stage(&self, name: &str) -> Option<StageSnapshot> {
+        self.stages.iter().find(|(k, _)| k == name).map(|&(_, s)| s)
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&HistogramSnapshot> {
+        self.histograms.iter().find(|(k, _)| k == name).map(|(_, h)| h)
+    }
+
+    /// Hand-rolled JSON (names are fixed identifiers, no escaping
+    /// needed). Deterministic: maps are emitted in sorted key order.
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("{{\n  \"schema\": \"{}\",\n", Self::SCHEMA));
+        s.push_str("  \"counters\": {");
+        for (i, (name, v)) in self.counters.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!("\n    \"{name}\": {v}"));
+        }
+        s.push_str("\n  },\n  \"stages\": {");
+        for (i, (name, st)) in self.stages.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "\n    \"{name}\": {{\"ns\": {}, \"calls\": {}, \"bytes\": {}, \"gbps\": {}}}",
+                st.ns,
+                st.calls,
+                st.bytes,
+                jnum(st.gbps())
+            ));
+        }
+        s.push_str("\n  },\n  \"histograms\": {");
+        for (i, (name, h)) in self.histograms.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let buckets = h
+                .buckets
+                .iter()
+                .map(|&(lo, hi, c)| format!("[{lo}, {hi}, {c}]"))
+                .collect::<Vec<_>>()
+                .join(", ");
+            s.push_str(&format!(
+                "\n    \"{name}\": {{\"count\": {}, \"sum\": {}, \"min\": {}, \"max\": {}, \
+                 \"p50\": {}, \"p95\": {}, \"p99\": {}, \"buckets\": [{buckets}]}}",
+                h.count,
+                h.sum,
+                h.min,
+                h.max,
+                jnum(h.percentile(0.50)),
+                jnum(h.percentile(0.95)),
+                jnum(h.percentile(0.99)),
+            ));
+        }
+        s.push_str("\n  }\n}\n");
+        s
+    }
+}
+
+/// Per-run stage accounting: the drop-in successor of the old
+/// `metrics::StageTimer`, carried inside `CompressStats`/`DecompressStats`
+/// so per-field reports keep their exact shape. Unlike the old timer it
+/// can also mirror each measurement into the global [`Registry`] (see
+/// [`RunTimings::add_recorded`]), which is where worker threads merge.
+#[derive(Debug, Clone, Default)]
+pub struct RunTimings {
+    totals: BTreeMap<String, Duration>,
+    counts: BTreeMap<String, u64>,
+}
+
+impl RunTimings {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `stage`, accumulating locally only.
+    pub fn time<R>(&mut self, stage: &str, f: impl FnOnce() -> R) -> R {
+        let t0 = Instant::now();
+        let r = f();
+        self.add(stage, t0.elapsed());
+        r
+    }
+
+    /// Accumulate locally only (used by baseline paths that must not
+    /// pollute the global registry, e.g. the materializing decompressor).
+    pub fn add(&mut self, stage: &str, d: Duration) {
+        *self.totals.entry(stage.to_string()).or_default() += d;
+        *self.counts.entry(stage.to_string()).or_default() += 1;
+    }
+
+    /// Accumulate locally *and* record `(d, bytes)` into the global
+    /// registry under `key` — the bridge from per-run reports to the
+    /// process-wide snapshot.
+    pub fn add_recorded(&mut self, stage: &str, key: &'static str, d: Duration, bytes: u64) {
+        self.add(stage, d);
+        global().stage(key).record(d, bytes);
+    }
+
+    pub fn total(&self, stage: &str) -> Duration {
+        self.totals.get(stage).copied().unwrap_or_default()
+    }
+
+    pub fn merge(&mut self, other: &RunTimings) {
+        for (k, v) in &other.totals {
+            *self.totals.entry(k.clone()).or_default() += *v;
+        }
+        for (k, v) in &other.counts {
+            *self.counts.entry(k.clone()).or_default() += *v;
+        }
+    }
+
+    /// (stage, total, calls, GB/s against `bytes`) rows, name-sorted.
+    pub fn rows(&self, bytes: usize) -> Vec<(String, Duration, u64, f64)> {
+        self.totals
+            .iter()
+            .map(|(k, &d)| {
+                let gbps = if d.as_nanos() > 0 {
+                    bytes as f64 / d.as_secs_f64() / 1e9
+                } else {
+                    f64::INFINITY
+                };
+                (k.clone(), d, self.counts[k], gbps)
+            })
+            .collect()
+    }
+
+    pub fn report(&self, bytes: usize) -> String {
+        let mut s = String::new();
+        for (stage, d, n, gbps) in self.rows(bytes) {
+            s.push_str(&format!(
+                "  {stage:<28} {:>10.3} ms  x{n:<5} {gbps:>9.3} GB/s\n",
+                d.as_secs_f64() * 1e3
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_counters_and_stages() {
+        let r = Registry::new();
+        r.add("t.counter", 5);
+        r.add("t.counter", 2);
+        assert_eq!(r.counter_value("t.counter"), 7);
+        assert_eq!(r.counter_value("t.never"), 0);
+        r.stage("t.stage").record(Duration::from_millis(2), 64);
+        assert!(r.stage_ns("t.stage") > 0);
+        let snap = r.snapshot();
+        assert_eq!(snap.counter("t.counter"), 7);
+        assert_eq!(snap.stage("t.stage").unwrap().bytes, 64);
+        r.reset();
+        assert_eq!(r.counter_value("t.counter"), 0);
+    }
+
+    #[test]
+    fn snapshot_json_shape() {
+        let r = Registry::new();
+        r.add("t.c", 1);
+        r.stage("t.s").record(Duration::from_micros(10), 1000);
+        r.histogram("t.h").record(42);
+        let json = r.snapshot().to_json();
+        assert!(json.contains("\"schema\": \"cusz-metrics/v1\""));
+        assert!(json.contains("\"t.c\": 1"));
+        assert!(json.contains("\"t.s\""));
+        assert!(json.contains("\"buckets\""));
+        // must parse as a single balanced object
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+    }
+
+    #[test]
+    fn render_text_exposition() {
+        let r = Registry::new();
+        r.add("t.c", 3);
+        r.histogram("t.h").record(1000);
+        let text = r.render_text();
+        assert!(text.contains("cusz_counter{name=\"t.c\"} 3"));
+        assert!(text.contains("cusz_histogram_count{hist=\"t.h\"} 1"));
+    }
+
+    #[test]
+    fn run_timings_matches_legacy_behavior() {
+        let mut t = RunTimings::new();
+        t.add("quant", Duration::from_millis(10));
+        t.add("quant", Duration::from_millis(5));
+        t.add("huffman", Duration::from_millis(1));
+        assert_eq!(t.total("quant"), Duration::from_millis(15));
+        assert_eq!(t.rows(0).len(), 2);
+        let mut b = RunTimings::new();
+        b.add("quant", Duration::from_millis(2));
+        b.add("y", Duration::from_millis(3));
+        t.merge(&b);
+        assert_eq!(t.total("quant"), Duration::from_millis(17));
+        assert_eq!(t.total("y"), Duration::from_millis(3));
+        let report = t.report(1 << 20);
+        assert!(report.contains("quant"));
+        assert!(report.contains("GB/s"));
+    }
+
+    #[test]
+    fn add_recorded_mirrors_into_global() {
+        let key = keys::PIPELINE_SINK; // reuse a static key for the test
+        let before = global().stage_ns(key);
+        let mut t = RunTimings::new();
+        t.add_recorded("sink", key, Duration::from_micros(7), 9);
+        assert_eq!(t.total("sink"), Duration::from_micros(7));
+        assert!(global().stage_ns(key) > before);
+    }
+}

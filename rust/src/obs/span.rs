@@ -1,0 +1,153 @@
+//! Per-stage aggregates and RAII span timers.
+//!
+//! A `StageStat` is three sharded counters — nanoseconds, calls, bytes —
+//! so any number of worker threads can close spans against the same stage
+//! concurrently. A `Span` measures one timed region and folds itself into
+//! its stage (and optionally a latency histogram) on drop.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::counter::Counter;
+use super::histogram::Histogram;
+
+#[derive(Debug, Default)]
+pub struct StageStat {
+    ns: Counter,
+    calls: Counter,
+    bytes: Counter,
+}
+
+impl StageStat {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn record(&self, elapsed: Duration, bytes: u64) {
+        self.ns.add(elapsed.as_nanos() as u64);
+        self.calls.incr();
+        self.bytes.add(bytes);
+    }
+
+    pub fn total_ns(&self) -> u64 {
+        self.ns.get()
+    }
+
+    pub fn calls(&self) -> u64 {
+        self.calls.get()
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.bytes.get()
+    }
+
+    /// Throughput against the recorded byte volume.
+    pub fn gbps(&self) -> f64 {
+        let ns = self.ns.get();
+        if ns == 0 {
+            0.0
+        } else {
+            self.bytes.get() as f64 / ns as f64
+        }
+    }
+
+    pub fn reset(&self) {
+        self.ns.reset();
+        self.calls.reset();
+        self.bytes.reset();
+    }
+}
+
+/// RAII timer: created via [`crate::obs::Registry::span`] (or
+/// [`Span::enter`]), records wall time + byte volume into its stage when
+/// dropped. Attach bytes with [`Span::with_bytes`]/[`Span::add_bytes`];
+/// attach a latency histogram (elapsed ns) with [`Span::with_histogram`].
+#[must_use = "a span records on drop; binding it to _ ends it immediately"]
+pub struct Span {
+    stat: Arc<StageStat>,
+    hist: Option<Arc<Histogram>>,
+    bytes: u64,
+    t0: Instant,
+}
+
+impl Span {
+    pub fn enter(stat: Arc<StageStat>) -> Self {
+        Span { stat, hist: None, bytes: 0, t0: Instant::now() }
+    }
+
+    pub fn with_bytes(mut self, bytes: u64) -> Self {
+        self.bytes = bytes;
+        self
+    }
+
+    pub fn with_histogram(mut self, hist: Arc<Histogram>) -> Self {
+        self.hist = Some(hist);
+        self
+    }
+
+    pub fn add_bytes(&mut self, bytes: u64) {
+        self.bytes += bytes;
+    }
+
+    /// End the span now, returning the elapsed wall time.
+    pub fn finish(self) -> Duration {
+        let d = self.t0.elapsed();
+        drop(self);
+        d
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let d = self.t0.elapsed();
+        self.stat.record(d, self.bytes);
+        if let Some(h) = &self.hist {
+            h.record(d.as_nanos() as u64);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_records_on_drop() {
+        let stat = Arc::new(StageStat::new());
+        {
+            let mut s = Span::enter(stat.clone()).with_bytes(100);
+            s.add_bytes(28);
+        }
+        assert_eq!(stat.calls(), 1);
+        assert_eq!(stat.bytes(), 128);
+        assert!(stat.total_ns() > 0);
+    }
+
+    #[test]
+    fn span_feeds_histogram() {
+        let stat = Arc::new(StageStat::new());
+        let hist = Arc::new(Histogram::new());
+        let d = Span::enter(stat.clone()).with_histogram(hist.clone()).finish();
+        assert!(d.as_nanos() > 0 || d.is_zero()); // finish returns elapsed
+        assert_eq!(hist.snapshot().count, 1);
+        assert_eq!(stat.calls(), 1);
+    }
+
+    #[test]
+    fn concurrent_spans_merge_exactly() {
+        let stat = Arc::new(StageStat::new());
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let stat = stat.clone();
+                s.spawn(move || {
+                    for _ in 0..50 {
+                        let _span = Span::enter(stat.clone()).with_bytes(64);
+                    }
+                });
+            }
+        });
+        assert_eq!(stat.calls(), 400);
+        assert_eq!(stat.bytes(), 400 * 64);
+    }
+}

@@ -24,8 +24,24 @@ use anyhow::{Context, Result};
 use crate::container::Archive;
 use crate::coordinator::{CompressStats, CompressedField, Coordinator, DecompressStats};
 use crate::field::Field;
+use crate::obs::{self, keys, RunTimings};
 use crate::store::Store;
 use crate::util::pool::{bounded, FanStage};
+
+/// Exact percentile (linear interpolation) over *sorted* nanosecond
+/// samples, reported in milliseconds. The service keeps every job's
+/// latency, so percentiles here are oracle-exact; the registry's
+/// log2-bucketed histograms carry the streaming approximation.
+fn percentile_ms(sorted_ns: &[u64], q: f64) -> f64 {
+    if sorted_ns.is_empty() {
+        return 0.0;
+    }
+    let rank = q.clamp(0.0, 1.0) * (sorted_ns.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    (sorted_ns[lo] as f64 * (1.0 - frac) + sorted_ns[hi] as f64 * frac) / 1e6
+}
 
 /// Tuning for the batch front end.
 #[derive(Debug, Clone)]
@@ -67,6 +83,11 @@ pub struct ServiceStats {
     pub n_verbatim: usize,
     pub encoded_bits: u64,
     pub wall_seconds: f64,
+    /// Worker threads the batch ran with (for utilization).
+    pub workers: usize,
+    /// Per-job wall nanoseconds, completion order (successful jobs only).
+    /// Mirrored into the `serve.compress.job_ns` registry histogram.
+    pub job_ns: Vec<u64>,
     /// Dead bytes reclaimed by auto-compaction after the drain (0 when
     /// the threshold was not crossed or auto-compaction is disabled).
     pub compacted_bytes: u64,
@@ -119,6 +140,54 @@ impl ServiceStats {
         counts
     }
 
+    /// Per-encoder *compressed byte* totals across every job (field-level
+    /// resolution: a chunk-granularity job's bytes tally under its
+    /// majority backend, same attribution as [`ServiceStats::encoder_counts`]).
+    pub fn encoder_bytes(&self) -> Vec<(&'static str, usize)> {
+        let mut totals: Vec<(&'static str, usize)> = Vec::new();
+        for (_, s) in &self.per_job {
+            let name = s.encoder.name();
+            match totals.iter_mut().find(|(n, _)| *n == name) {
+                Some((_, b)) => *b += s.compressed_bytes,
+                None => totals.push((name, s.compressed_bytes)),
+            }
+        }
+        totals
+    }
+
+    /// Job latency (p50, p95, p99) in milliseconds, exact over the
+    /// recorded per-job samples. `None` until a job completes.
+    pub fn latency_percentiles(&self) -> Option<(f64, f64, f64)> {
+        if self.job_ns.is_empty() {
+            return None;
+        }
+        let mut v = self.job_ns.clone();
+        v.sort_unstable();
+        Some((percentile_ms(&v, 0.50), percentile_ms(&v, 0.95), percentile_ms(&v, 0.99)))
+    }
+
+    /// Fraction of worker wall time spent inside jobs: sum of job
+    /// nanoseconds over `workers x wall`. 1.0 means the pool never idled.
+    pub fn worker_utilization(&self) -> f64 {
+        let budget_ns = self.wall_seconds * 1e9 * self.workers.max(1) as f64;
+        if budget_ns <= 0.0 {
+            return 0.0;
+        }
+        let busy: u64 = self.job_ns.iter().sum();
+        (busy as f64 / budget_ns).min(1.0)
+    }
+
+    /// Stage timings merged across every job — feeds the per-stage GB/s
+    /// rows of [`ServiceStats::report`] (against original bytes, paper
+    /// footnote 4 convention).
+    pub fn stage_timings(&self) -> RunTimings {
+        let mut t = RunTimings::new();
+        for (_, s) in &self.per_job {
+            t.merge(&s.timer);
+        }
+        t
+    }
+
     pub fn compression_ratio(&self) -> f64 {
         self.original_bytes as f64 / self.compressed_bytes.max(1) as f64
     }
@@ -164,6 +233,29 @@ impl ServiceStats {
                 self.compacted_bytes as f64 / 1e6
             ));
         }
+        if let Some((p50, p95, p99)) = self.latency_percentiles() {
+            s.push_str(&format!(
+                "\n  job latency ms  p50 {p50:.3}  p95 {p95:.3}  p99 {p99:.3}  \
+                 (workers {}, utilization {:.0}%)",
+                self.workers,
+                self.worker_utilization() * 100.0,
+            ));
+        }
+        let enc_bytes = self.encoder_bytes();
+        if !enc_bytes.is_empty() {
+            let cols = enc_bytes
+                .iter()
+                .map(|(n, b)| format!("{n}:{:.2} MB", *b as f64 / 1e6))
+                .collect::<Vec<_>>()
+                .join("  ");
+            s.push_str(&format!("\n  encoder bytes   {cols}"));
+        }
+        let timings = self.stage_timings();
+        let stage_rows = timings.report(self.original_bytes);
+        if !stage_rows.is_empty() {
+            s.push('\n');
+            s.push_str(stage_rows.trim_end_matches('\n'));
+        }
         s
     }
 }
@@ -202,8 +294,14 @@ impl BatchCompressor {
         let (tx, rx) = bounded::<Field>(depth);
         let coord = Arc::clone(&self.coord);
         let fan = FanStage::spawn(rx, workers, depth, "compress", move |field: Field| {
+            obs::global().add(keys::SERVE_QUEUE_DEQUEUED, 1);
             let name = field.name.clone();
-            (name, coord.compress_encoded(&field))
+            let span = obs::span(keys::SERVE_COMPRESS_JOB)
+                .with_bytes(field.size_bytes() as u64)
+                .with_histogram(obs::global().histogram(keys::HIST_COMPRESS_JOB_NS));
+            let result = coord.compress_encoded(&field);
+            let ns = span.finish().as_nanos() as u64;
+            (name, result, ns)
         });
         let fields = fields.into_iter();
         let producer = std::thread::Builder::new()
@@ -213,14 +311,15 @@ impl BatchCompressor {
                     if tx.send(f).is_err() {
                         break; // pipeline shut down early
                     }
+                    obs::global().add(keys::SERVE_QUEUE_ENQUEUED, 1);
                 }
             })
             .context("spawning field producer")?;
 
         let t0 = Instant::now();
-        let mut stats = ServiceStats::default();
+        let mut stats = ServiceStats { workers, ..Default::default() };
         let mut sink_err = None;
-        for (name, result) in fan.rx.iter() {
+        for (name, result, job_ns) in fan.rx.iter() {
             match result {
                 Ok(compressed) => {
                     let job_stats = compressed.stats.clone();
@@ -229,6 +328,7 @@ impl BatchCompressor {
                         break;
                     }
                     stats.absorb(&name, &job_stats);
+                    stats.job_ns.push(job_ns);
                 }
                 Err(e) => {
                     stats.failed += 1;
@@ -296,6 +396,15 @@ pub struct DrainStats {
     /// Total bytes of restored (uncompressed) field data.
     pub original_bytes: usize,
     pub wall_seconds: f64,
+    /// Worker threads the drain ran with (for utilization).
+    pub workers: usize,
+    /// Per-job wall nanoseconds, completion order (successful jobs only).
+    /// Mirrored into the `serve.decompress.job_ns` registry histogram.
+    pub job_ns: Vec<u64>,
+    /// Stage timings merged across every drained job (decode, fused
+    /// reconstruct, total) — the decompress mirror of
+    /// [`ServiceStats::stage_timings`].
+    pub timer: RunTimings,
     /// (field name, error) for entries that failed to read or decode.
     pub errors: Vec<(String, String)>,
 }
@@ -306,15 +415,50 @@ impl DrainStats {
         self.original_bytes as f64 / self.wall_seconds.max(1e-12) / 1e9
     }
 
+    /// Job latency (p50, p95, p99) in milliseconds, exact over the
+    /// recorded per-job samples. `None` until a job completes.
+    pub fn latency_percentiles(&self) -> Option<(f64, f64, f64)> {
+        if self.job_ns.is_empty() {
+            return None;
+        }
+        let mut v = self.job_ns.clone();
+        v.sort_unstable();
+        Some((percentile_ms(&v, 0.50), percentile_ms(&v, 0.95), percentile_ms(&v, 0.99)))
+    }
+
+    /// Fraction of worker wall time spent inside jobs.
+    pub fn worker_utilization(&self) -> f64 {
+        let budget_ns = self.wall_seconds * 1e9 * self.workers.max(1) as f64;
+        if budget_ns <= 0.0 {
+            return 0.0;
+        }
+        let busy: u64 = self.job_ns.iter().sum();
+        (busy as f64 / budget_ns).min(1.0)
+    }
+
     pub fn report(&self) -> String {
-        format!(
+        let mut s = format!(
             "drained {} ok / {} failed  {:.2} MB restored  {:.3} GB/s  (wall {:.3}s)",
             self.jobs,
             self.failed,
             self.original_bytes as f64 / 1e6,
             self.throughput_gbps(),
             self.wall_seconds,
-        )
+        );
+        if let Some((p50, p95, p99)) = self.latency_percentiles() {
+            s.push_str(&format!(
+                "\n  job latency ms  p50 {p50:.3}  p95 {p95:.3}  p99 {p99:.3}  \
+                 (workers {}, utilization {:.0}%)",
+                self.workers,
+                self.worker_utilization() * 100.0,
+            ));
+        }
+        let stage_rows = self.timer.report(self.original_bytes);
+        if !stage_rows.is_empty() {
+            s.push('\n');
+            s.push_str(stage_rows.trim_end_matches('\n'));
+        }
+        s
     }
 }
 
@@ -362,15 +506,23 @@ impl BatchDecompressor {
         // job of the drain.
         let job_threads = (self.coord.cfg.effective_threads() / workers).max(1);
         let fan = FanStage::spawn(rx, workers, depth, "decompress", move |job: (String, Vec<u8>)| {
+            obs::global().add(keys::SERVE_QUEUE_DEQUEUED, 1);
             let (name, bytes) = job;
+            let mut span = obs::span(keys::SERVE_DECOMPRESS_JOB)
+                .with_histogram(obs::global().histogram(keys::HIST_DECOMPRESS_JOB_NS));
             let result = Archive::from_bytes_with_threads(&bytes, job_threads)
                 .and_then(|archive| coord.decompress_with_threads(&archive, job_threads));
-            (name, result)
+            if let Ok((field, _)) = &result {
+                // restored bytes — the paper's decompression denominator
+                span.add_bytes(field.size_bytes() as u64);
+            }
+            let ns = span.finish().as_nanos() as u64;
+            (name, result, ns)
         });
         let names: Vec<String> = store.list().iter().map(|e| e.name.clone()).collect();
 
         let t0 = Instant::now();
-        let mut stats = DrainStats::default();
+        let mut stats = DrainStats { workers, ..Default::default() };
         let mut sink_err = None;
         let mut producer_panicked = false;
         // the producer borrows `store`, so it runs under a scope; the fan
@@ -386,21 +538,24 @@ impl BatchDecompressor {
                             if tx.send((name, bytes)).is_err() {
                                 break; // pipeline shut down early
                             }
+                            obs::global().add(keys::SERVE_QUEUE_ENQUEUED, 1);
                         }
                         Err(e) => read_errors.push((name, format!("{e:#}"))),
                     }
                 }
                 read_errors
             });
-            for (name, result) in fan.rx.iter() {
+            for (name, result, job_ns) in fan.rx.iter() {
                 match result {
                     Ok((field, job_stats)) => {
                         stats.original_bytes += field.size_bytes();
+                        stats.timer.merge(&job_stats.timer);
                         if let Err(e) = sink(&name, field, &job_stats) {
                             sink_err = Some(e.context(format!("sink failed on '{name}'")));
                             break;
                         }
                         stats.jobs += 1;
+                        stats.job_ns.push(job_ns);
                     }
                     Err(e) => {
                         stats.failed += 1;
@@ -488,6 +643,56 @@ mod tests {
             let out = coord.decompress(&store.get(&f.name).unwrap()).unwrap();
             assert_eq!(metrics::verify_error_bound(&f.data, &out.data, EB), None, "{}", f.name);
         }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn service_stats_record_latency_utilization_and_encoder_bytes() {
+        let dir = tmp_dir("serve-latency");
+        let mut store = Store::create(&dir, 1).unwrap();
+        let batch = BatchCompressor::new(
+            coordinator(),
+            BatchConfig { workers: 2, queue_depth: 2, ..Default::default() },
+        );
+        let stats = batch.run_into_store(fields(5), &mut store).unwrap();
+        assert_eq!(stats.workers, 2);
+        assert_eq!(stats.job_ns.len(), 5);
+        let (p50, p95, p99) = stats.latency_percentiles().unwrap();
+        assert!(p50 > 0.0 && p50 <= p95 && p95 <= p99);
+        let util = stats.worker_utilization();
+        assert!(util > 0.0 && util <= 1.0, "utilization {util}");
+        let enc_total: usize = stats.encoder_bytes().iter().map(|(_, b)| b).sum();
+        assert_eq!(enc_total, stats.compressed_bytes);
+        // per-stage rows merged across jobs must cover the compress stages
+        let timings = stats.stage_timings();
+        assert!(timings.total("total").as_nanos() > 0);
+        let report = stats.report();
+        assert!(report.contains("p50"), "{report}");
+        assert!(report.contains("encoder bytes"), "{report}");
+        assert!(report.contains("GB/s"), "{report}");
+        // the registry's streaming histogram saw every job too
+        let snap = crate::obs::global().snapshot();
+        let hist = snap.histogram(crate::obs::keys::HIST_COMPRESS_JOB_NS).unwrap();
+        assert!(hist.count >= 5);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn queue_depth_counters_balance_after_a_run() {
+        let reg = crate::obs::global();
+        let dir = tmp_dir("serve-queue");
+        let mut store = Store::create(&dir, 1).unwrap();
+        let enq0 = reg.counter_value(keys::SERVE_QUEUE_ENQUEUED);
+        let deq0 = reg.counter_value(keys::SERVE_QUEUE_DEQUEUED);
+        let batch = BatchCompressor::new(
+            coordinator(),
+            BatchConfig { workers: 2, queue_depth: 2, ..Default::default() },
+        );
+        batch.run_into_store(fields(6), &mut store).unwrap();
+        // other tests share the global registry, so assert on deltas:
+        // this run enqueued >= 6 and, once drained, dequeues match.
+        assert!(reg.counter_value(keys::SERVE_QUEUE_ENQUEUED) >= enq0 + 6);
+        assert!(reg.counter_value(keys::SERVE_QUEUE_DEQUEUED) >= deq0 + 6);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
@@ -717,6 +922,13 @@ mod tests {
         assert_eq!(stats.failed, 0);
         assert!(stats.original_bytes > 0);
         assert_eq!(restored.len(), 9);
+        // drain-side telemetry: per-job latency, merged stage rows
+        assert_eq!(stats.job_ns.len(), 9);
+        assert_eq!(stats.workers, 3);
+        let (p50, _, p99) = stats.latency_percentiles().unwrap();
+        assert!(p50 > 0.0 && p50 <= p99);
+        assert!(stats.timer.total("total").as_nanos() > 0);
+        assert!(stats.report().contains("p50"));
         for orig in &originals {
             let (entry_name, out) =
                 restored.iter().find(|(_, f)| f.name == orig.name).unwrap();

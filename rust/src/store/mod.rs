@@ -47,6 +47,18 @@ pub use lock::StoreLock;
 pub const SHARD_MAGIC: &[u8; 8] = b"CUSZS1\0\0";
 const INDEX_FILE: &str = "index.cuszi";
 
+// Store I/O telemetry (static-key fast path into the obs registry).
+static WRITE_BYTES: crate::obs::StaticCounter =
+    crate::obs::StaticCounter::new("store.write_bytes");
+static READ_BYTES: crate::obs::StaticCounter =
+    crate::obs::StaticCounter::new("store.read_bytes");
+static CRC_CHECKS: crate::obs::StaticCounter =
+    crate::obs::StaticCounter::new("store.crc_checks");
+static COMPACTIONS: crate::obs::StaticCounter =
+    crate::obs::StaticCounter::new("store.compactions");
+static COMPACTED_BYTES: crate::obs::StaticCounter =
+    crate::obs::StaticCounter::new("store.compacted_bytes");
+
 /// An open `.cuszb` bundle.
 pub struct Store {
     dir: PathBuf,
@@ -322,6 +334,8 @@ impl Store {
             .with_context(|| format!("flushing shard {}", path.display()))?;
         f.flush()?;
 
+        WRITE_BYTES.add(len);
+
         let entry = StoreEntry {
             name: name.to_string(),
             shard,
@@ -348,9 +362,11 @@ impl Store {
         let mut buf = vec![0u8; e.len as usize];
         f.read_exact(&mut buf)
             .with_context(|| format!("reading '{}' from {}", e.name, path.display()))?;
+        CRC_CHECKS.incr();
         if crc32(&buf) != e.payload_crc {
             bail!("field '{}': payload CRC mismatch (corrupt shard)", e.name);
         }
+        READ_BYTES.add(e.len);
         Ok(buf)
     }
 
@@ -375,6 +391,7 @@ impl Store {
         let bytes = self.read_entry(e)?;
         let header = Archive::peek_header(&bytes)
             .with_context(|| format!("field '{name}': payload framing"))?;
+        CRC_CHECKS.incr();
         if crc32(&header.to_bytes()) != e.header_digest {
             bail!("field '{name}': header digest mismatch (payload rewritten since indexing?)");
         }
@@ -498,6 +515,8 @@ impl Store {
                 graveyard.display()
             );
         }
+        COMPACTIONS.incr();
+        COMPACTED_BYTES.add(reclaimed);
         Ok(reclaimed)
     }
 

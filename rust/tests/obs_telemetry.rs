@@ -1,0 +1,190 @@
+//! Telemetry-layer integration locks: streaming-histogram percentiles vs
+//! a sorted oracle, deterministic multi-thread counter/span merging, the
+//! roundtrip-records-every-documented-stage regression, registry-backed
+//! codec counters, and snapshot/exposition shape.
+
+use cusz::codec::{codec_counter_keys, stage_for, EncodeContext, EncoderKind};
+use cusz::config::{BackendKind, CodewordRepr, CuszConfig, ErrorBound};
+use cusz::coordinator::Coordinator;
+use cusz::datagen::{self, Dataset};
+use cusz::obs::{self, keys, Histogram, Registry};
+use cusz::util::prng::Rng;
+
+fn cpu_coordinator() -> Coordinator {
+    Coordinator::new(CuszConfig {
+        backend: BackendKind::Cpu,
+        eb: ErrorBound::ValRel(1e-4),
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+/// Exact percentile over a sorted sample — the oracle the streaming
+/// log2-bucketed histogram is held against.
+fn oracle_percentile(sorted: &[u64], q: f64) -> f64 {
+    let rank = q * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] as f64 * (1.0 - frac) + sorted[hi] as f64 * frac
+}
+
+#[test]
+fn histogram_percentiles_track_sorted_oracle() {
+    // latency-shaped samples: a lognormal-ish body with a heavy tail,
+    // spanning several powers of two — the regime the quarter-decade
+    // sub-bucketing must hold its <= 12.5% midpoint error bound in
+    let mut rng = Rng::new(99);
+    let mut values: Vec<u64> = (0..20_000)
+        .map(|_| {
+            let base = (rng.normal().mul_add(0.6, 11.0)).exp(); // e^11 ~ 60k ns
+            base.max(1.0) as u64
+        })
+        .collect();
+    let hist = Histogram::new();
+    for &v in &values {
+        hist.record(v);
+    }
+    values.sort_unstable();
+    let snap = hist.snapshot();
+    assert_eq!(snap.count, 20_000);
+    assert_eq!(snap.min, values[0]);
+    assert_eq!(snap.max, *values.last().unwrap());
+    for q in [0.50, 0.95, 0.99] {
+        let oracle = oracle_percentile(&values, q);
+        let est = snap.percentile(q);
+        let rel = (est - oracle).abs() / oracle;
+        // bucket midpoint error bound is 12.5%; leave interpolation slack
+        assert!(rel <= 0.15, "p{q}: est {est:.0} vs oracle {oracle:.0} (rel {rel:.3})");
+    }
+
+    // the linear region (< 16) is exact, so small-value percentiles are too
+    let small = Histogram::new();
+    for v in 0..16u64 {
+        small.record(v);
+    }
+    let s = small.snapshot();
+    assert_eq!(s.percentile(0.0), 0.0);
+    assert_eq!(s.percentile(1.0), 15.0);
+}
+
+#[test]
+fn eight_thread_fixed_workload_merges_exactly() {
+    // a private registry so parallel tests can't perturb the counts
+    let reg = Registry::new();
+    std::thread::scope(|s| {
+        for t in 0..8 {
+            let reg = &reg;
+            s.spawn(move || {
+                for i in 0..100u64 {
+                    reg.add("t.jobs", 1);
+                    reg.add("t.bytes", 64);
+                    let span = reg.span("t.work").with_bytes(32);
+                    drop(span);
+                    reg.histogram("t.lat").record(t * 100 + i + 1);
+                }
+            });
+        }
+    });
+    assert_eq!(reg.counter_value("t.jobs"), 800);
+    assert_eq!(reg.counter_value("t.bytes"), 800 * 64);
+    let snap = reg.snapshot();
+    let work = snap.stage("t.work").unwrap();
+    assert_eq!(work.calls, 800);
+    assert_eq!(work.bytes, 800 * 32);
+    assert!(work.ns > 0);
+    let lat = snap.histogram("t.lat").unwrap();
+    assert_eq!(lat.count, 800);
+    assert_eq!(lat.min, 1);
+    assert_eq!(lat.max, 800);
+    // reset zeroes in place; keys survive for cached static call sites
+    reg.reset();
+    assert_eq!(reg.counter_value("t.jobs"), 0);
+    assert_eq!(reg.snapshot().stage("t.work").unwrap().calls, 0);
+}
+
+#[test]
+fn roundtrip_records_every_documented_stage() {
+    let reg = obs::global();
+    let before: Vec<u64> = keys::DOCUMENTED_STAGES.iter().map(|k| reg.stage_ns(k)).collect();
+    let fields_before = reg.counter_value("compress.fields");
+
+    let coord = cpu_coordinator();
+    let field = datagen::generate(Dataset::CesmAtm, "CLDHGH", 3);
+    let (archive, _) = coord.compress_with_stats(&field).unwrap();
+    let (out, _) = coord.decompress_with_stats(&archive).unwrap();
+    assert_eq!(out.dims, field.dims);
+
+    for (key, &b) in keys::DOCUMENTED_STAGES.iter().zip(&before) {
+        let after = reg.stage_ns(key);
+        assert!(after > b, "stage '{key}' recorded no time during a full roundtrip");
+    }
+    assert!(reg.counter_value("compress.fields") > fields_before);
+    assert!(reg.counter_value("decompress.fields") > 0);
+}
+
+#[test]
+fn instrumented_codec_stages_feed_backend_counters() {
+    let mut rng = Rng::new(5);
+    let dict = 1024usize;
+    let symbols: Vec<u16> = (0..1 << 14).map(|_| rng.below(dict as u64) as u16).collect();
+    let mut freq = vec![0u64; dict];
+    for &s in &symbols {
+        freq[s as usize] += 1;
+    }
+    let ctx = EncodeContext {
+        dict_size: dict,
+        chunk_symbols: 4096,
+        threads: 2,
+        codeword_repr: CodewordRepr::Adaptive,
+        freq: &freq,
+    };
+    let reg = obs::global();
+    for kind in EncoderKind::ALL {
+        let k = codec_counter_keys(kind);
+        let enc_syms0 = reg.counter_value(k.encode_symbols);
+        let enc_ns0 = reg.counter_value(k.encode_ns);
+        let dec_syms0 = reg.counter_value(k.decode_symbols);
+        let stage = stage_for(kind);
+        let enc = stage.encode(&symbols, &ctx).unwrap();
+        let out = stage.decode(&enc.aux, &enc.stream, dict, 2, symbols.len()).unwrap();
+        assert_eq!(out, symbols);
+        assert_eq!(
+            reg.counter_value(k.encode_symbols),
+            enc_syms0 + symbols.len() as u64,
+            "{} encode_symbols",
+            kind.name()
+        );
+        assert!(reg.counter_value(k.encode_ns) > enc_ns0, "{} encode_ns", kind.name());
+        assert_eq!(
+            reg.counter_value(k.decode_symbols),
+            dec_syms0 + symbols.len() as u64,
+            "{} decode_symbols",
+            kind.name()
+        );
+    }
+}
+
+#[test]
+fn snapshot_and_exposition_carry_the_roundtrip() {
+    let coord = cpu_coordinator();
+    let field = datagen::generate(Dataset::Nyx, "baryon_density", 11);
+    let (archive, _) = coord.compress_with_stats(&field).unwrap();
+    coord.decompress_with_stats(&archive).unwrap();
+
+    let snap = obs::global().snapshot();
+    let json = snap.to_json();
+    assert!(json.contains("\"schema\": \"cusz-metrics/v1\""));
+    // every documented stage appears with non-zero time and bytes
+    for key in keys::DOCUMENTED_STAGES {
+        let st = snap.stage(key).unwrap_or_else(|| panic!("stage '{key}' missing"));
+        assert!(st.ns > 0 && st.calls > 0 && st.bytes > 0, "stage '{key}' empty");
+        assert!(st.gbps() > 0.0, "stage '{key}' has no throughput");
+        assert!(json.contains(&format!("\"{key}\"")), "stage '{key}' not in JSON");
+    }
+    assert_eq!(json.matches('{').count(), json.matches('}').count());
+
+    let text = obs::global().render_text();
+    assert!(text.contains("cusz_stage_ns_total{stage=\"compress.predict_quant\"}"));
+    assert!(text.contains("cusz_counter{name=\"compress.fields\"}"));
+}
