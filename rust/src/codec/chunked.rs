@@ -20,7 +20,7 @@ use anyhow::{bail, Result};
 use super::cost::{self, CostModel};
 use super::{fle, rle, EncodeContext, EncoderKind, SymbolSource};
 use crate::huffman::{self, CanonicalCodebook, ReverseCodebook};
-use crate::huffman::deflate::{DeflatedChunk, DeflatedStream};
+use crate::huffman::deflate::{DeflatedChunk, DeflatedStream, GapTable};
 
 /// Output of a per-chunk encode: the tag table plus everything each tag's
 /// decoder needs.
@@ -34,6 +34,10 @@ pub struct ChunkedEncoded {
     /// empty — it uses `shared_aux`).
     pub chunk_aux: Vec<Vec<u8>>,
     pub stream: DeflatedStream,
+    /// Per-chunk Huffman gap tables (subchunk bit-offset index for the
+    /// parallel decode path); empty inner vecs for FLE/RLE chunks and for
+    /// Huffman chunks below the subchunk granularity.
+    pub gaps: Vec<GapTable>,
     /// Chunk tally per backend, indexed by [`EncoderKind::to_tag`] — the
     /// `CompressStats` / `ServiceStats` adaptive-selection report.
     pub counts: [usize; EncoderKind::ALL.len()],
@@ -49,6 +53,18 @@ pub fn encode_chunked(
     src: &SymbolSource<'_>,
     ctx: &EncodeContext,
     model: &CostModel,
+) -> Result<ChunkedEncoded> {
+    encode_chunked_within(src, ctx, model, [true; 3])
+}
+
+/// [`encode_chunked`] with the per-chunk argmin restricted to the
+/// backends `allowed` leaves open (indexed by `EncoderKind::to_tag`) —
+/// the `--target-gbps` pruning hook. At least one entry must be true.
+pub fn encode_chunked_within(
+    src: &SymbolSource<'_>,
+    ctx: &EncodeContext,
+    model: &CostModel,
+    allowed: [bool; 3],
 ) -> Result<ChunkedEncoded> {
     if ctx.freq.len() != ctx.dict_size {
         bail!(
@@ -66,24 +82,25 @@ pub fn encode_chunked(
 
     let radius = (ctx.dict_size / 2) as i32;
     let cs = ctx.chunk_symbols.max(1);
-    let parts: Vec<(EncoderKind, Vec<u8>, DeflatedChunk)> =
+    let parts: Vec<(EncoderKind, Vec<u8>, DeflatedChunk, GapTable)> =
         src.map_chunks(cs, ctx.threads, |_, chunk| {
             let probe = cost::probe_chunk(chunk, &lengths, radius);
-            let kind = model.select_chunk(&probe);
+            let kind = model.select_chunk_within(&probe, allowed);
             // per-chunk telemetry: one Instant pair + three static-key
             // counter bumps against microseconds of encode work
             let t0 = Instant::now();
-            let (aux, c) = match kind {
+            let (aux, c, gaps) = match kind {
                 EncoderKind::Huffman => {
-                    (Vec::new(), huffman::deflate::deflate_one(chunk, &book))
+                    let (c, gaps) = huffman::deflate_one_gap(chunk, &book);
+                    (Vec::new(), c, gaps)
                 }
                 EncoderKind::Fle => {
                     let (w, c) = fle::encode_chunk(chunk, radius);
-                    (vec![w], c)
+                    (vec![w], c, GapTable::new())
                 }
                 EncoderKind::Rle => {
                     let (rec, c) = rle::encode_chunk(chunk, radius);
-                    (rec.to_vec(), c)
+                    (rec.to_vec(), c, GapTable::new())
                 }
             };
             super::record_codec_encode(
@@ -92,16 +109,17 @@ pub fn encode_chunked(
                 (c.words.len() * 8 + aux.len()) as u64,
                 t0.elapsed().as_nanos() as u64,
             );
-            (kind, aux, c)
+            (kind, aux, c, gaps)
         });
 
     let nchunks = parts.len();
     let mut tags = Vec::with_capacity(nchunks);
     let mut chunk_aux = Vec::with_capacity(nchunks);
     let mut chunks = Vec::with_capacity(nchunks);
+    let mut gaps = Vec::with_capacity(nchunks);
     let mut counts = [0usize; EncoderKind::ALL.len()];
     let mut max_w = 0u32;
-    for (kind, aux, c) in parts {
+    for (kind, aux, c, g) in parts {
         counts[kind.to_tag() as usize] += 1;
         if kind != EncoderKind::Huffman {
             max_w = max_w.max(aux.iter().map(|&b| b as u32).sum());
@@ -109,6 +127,7 @@ pub fn encode_chunked(
         tags.push(kind.to_tag());
         chunk_aux.push(aux);
         chunks.push(c);
+        gaps.push(g);
     }
     let any_huffman = counts[EncoderKind::Huffman.to_tag() as usize] > 0;
     let repr_bits = if any_huffman { book.repr_bits() } else { max_w.max(1) };
@@ -117,6 +136,7 @@ pub fn encode_chunked(
         shared_aux: if any_huffman { lengths } else { Vec::new() },
         chunk_aux,
         stream: DeflatedStream { chunks, chunk_symbols: cs },
+        gaps,
         counts,
         repr_bits,
         codebook_time,
@@ -137,6 +157,33 @@ pub fn decode_chunked_into(
     threads: usize,
     sink: &mut super::SymbolSink<'_>,
 ) -> Result<()> {
+    decode_chunked_into_with_gaps(tags, shared_aux, chunk_aux, stream, &[], dict_size, threads, sink)
+}
+
+/// [`decode_chunked_into`] with per-chunk Huffman gap tables: a
+/// Huffman-tagged chunk whose table is non-empty decodes
+/// subchunk-parallel with the thread budget left over after the outer
+/// chunk fan-out. `gaps` is untrusted (it travels in the archive body) —
+/// empty means no gap content, otherwise one table per chunk, each
+/// validated by the gap decoder before any subchunk decodes.
+#[allow(clippy::too_many_arguments)]
+pub fn decode_chunked_into_with_gaps(
+    tags: &[u8],
+    shared_aux: &[u8],
+    chunk_aux: &[Vec<u8>],
+    stream: &DeflatedStream,
+    gaps: &[GapTable],
+    dict_size: usize,
+    threads: usize,
+    sink: &mut super::SymbolSink<'_>,
+) -> Result<()> {
+    if !gaps.is_empty() && gaps.len() != stream.chunks.len() {
+        bail!(
+            "gap sidecar has {} tables for {} chunks",
+            gaps.len(),
+            stream.chunks.len()
+        );
+    }
     if tags.len() != stream.chunks.len() {
         bail!(
             "chunk tag table has {} tags for {} chunks",
@@ -168,6 +215,9 @@ pub fn decode_chunked_into(
     };
     let radius = (dict_size / 2) as i32;
     let cs = stream.chunk_symbols.max(1);
+    // subchunk budget per gap-tabled Huffman chunk once the outer chunk
+    // fan-out has claimed its share of the workers
+    let inner = (threads / stream.chunks.len().max(1)).max(1);
     sink.fill_chunks(stream, threads, |ci, window| {
         let chunk = &stream.chunks[ci];
         // per-chunk symbol counts are untrusted too: bound by the chunk
@@ -188,10 +238,13 @@ pub fn decode_chunked_into(
                         chunk_aux[ci].len()
                     );
                 }
-                huffman::inflate::inflate_one_into_strict(
+                let table = gaps.get(ci).map(|g| g.as_slice()).unwrap_or(&[]);
+                huffman::inflate_one_gap_into_strict(
                     chunk,
+                    table,
                     rev.as_ref().expect("rev built"),
                     window,
+                    inner,
                 )
             }
             EncoderKind::Fle => {
@@ -344,6 +397,74 @@ mod tests {
                 kind.name()
             );
         }
+    }
+
+    #[test]
+    fn gap_tables_cover_huffman_chunks_and_decode_parallel() {
+        // chunks larger than the subchunk granularity, so Huffman-tagged
+        // chunks record real gap tables
+        let cs = crate::huffman::GAP_SUBCHUNK + 1500;
+        let symbols = mixed_symbols(9, cs, 7);
+        let mut freq = vec![0u64; 1024];
+        for &s in &symbols {
+            freq[s as usize] += 1;
+        }
+        let enc = encode_chunked(
+            &SymbolSource::from_slice(&symbols),
+            &ctx(&freq, cs),
+            &CostModel::MEASURED,
+        )
+        .unwrap();
+        assert_eq!(enc.gaps.len(), enc.tags.len());
+        let huffman_tag = EncoderKind::Huffman.to_tag();
+        for (ci, tag) in enc.tags.iter().enumerate() {
+            if *tag == huffman_tag {
+                assert!(!enc.gaps[ci].is_empty(), "chunk {ci}: huffman chunk lost its table");
+            } else {
+                assert!(enc.gaps[ci].is_empty(), "chunk {ci}: non-huffman chunk has a table");
+            }
+        }
+        assert!(enc.counts[huffman_tag as usize] > 0, "no huffman chunk in the mix");
+        for threads in [1usize, 4, 16] {
+            let mut out = vec![0u16; symbols.len()];
+            decode_chunked_into_with_gaps(
+                &enc.tags,
+                &enc.shared_aux,
+                &enc.chunk_aux,
+                &enc.stream,
+                &enc.gaps,
+                1024,
+                threads,
+                &mut super::super::SymbolSink::from_slice(&mut out),
+            )
+            .unwrap();
+            assert_eq!(out, symbols, "threads={threads}");
+        }
+        // gap-less decode of the same stream agrees (serial fallback)
+        let out = decode_chunked(
+            &enc.tags,
+            &enc.shared_aux,
+            &enc.chunk_aux,
+            &enc.stream,
+            1024,
+            2,
+            symbols.len(),
+        )
+        .unwrap();
+        assert_eq!(out, symbols);
+        // wrong-cardinality gap sidecar is rejected
+        let mut out = vec![0u16; symbols.len()];
+        assert!(decode_chunked_into_with_gaps(
+            &enc.tags,
+            &enc.shared_aux,
+            &enc.chunk_aux,
+            &enc.stream,
+            &enc.gaps[..enc.gaps.len() - 1],
+            1024,
+            2,
+            &mut super::super::SymbolSink::from_slice(&mut out),
+        )
+        .is_err());
     }
 
     #[test]

@@ -107,18 +107,28 @@ impl CostModel {
 
     /// Resolve `auto` for one field from its merged quant-code histogram.
     pub fn select_field(&self, freq: &[u64]) -> EncoderKind {
+        self.select_field_within(freq, [true; 3])
+    }
+
+    /// [`CostModel::select_field`] restricted to the backends `allowed`
+    /// leaves open (indexed by [`EncoderKind::to_tag`]) — the
+    /// `--target-gbps` pruning hook. At least one entry must be true.
+    pub fn select_field_within(&self, freq: &[u64], allowed: [bool; 3]) -> EncoderKind {
         let width = fle::width_for_histogram(freq);
-        if width == 0 {
+        if width == 0 && allowed[EncoderKind::Fle.to_tag() as usize] {
             // degenerate stream (empty or only outlier markers): FLE
             // stores 0 bits/symbol
             return EncoderKind::Fle;
         }
         let e = self.estimate_field(freq, width);
-        argmin([
-            (EncoderKind::Huffman, e.huffman_bits),
-            (EncoderKind::Fle, e.fle_bits),
-            (EncoderKind::Rle, e.rle_bits),
-        ])
+        argmin_within(
+            [
+                (EncoderKind::Huffman, e.huffman_bits),
+                (EncoderKind::Fle, e.fle_bits),
+                (EncoderKind::Rle, e.rle_bits),
+            ],
+            allowed,
+        )
     }
 
     /// Field-level stream-cost estimates in (throughput-weighted) bits.
@@ -177,18 +187,76 @@ impl CostModel {
     /// per-chunk costs (ties go to the earlier entry — Huffman shares the
     /// field codebook, so equal bytes favor no extra sidecar).
     pub fn select_chunk(&self, p: &ChunkProbe) -> EncoderKind {
-        argmin(self.chunk_costs(p).map(|(k, b)| (k, b as f64)))
+        self.select_chunk_within(p, [true; 3])
+    }
+
+    /// [`CostModel::select_chunk`] restricted to the backends `allowed`
+    /// leaves open (indexed by [`EncoderKind::to_tag`]) — the
+    /// `--target-gbps` pruning hook. At least one entry must be true.
+    pub fn select_chunk_within(&self, p: &ChunkProbe, allowed: [bool; 3]) -> EncoderKind {
+        argmin_within(self.chunk_costs(p).map(|(k, b)| (k, b as f64)), allowed)
     }
 }
 
-fn argmin(costs: [(EncoderKind, f64); 3]) -> EncoderKind {
-    let mut best = costs[0];
-    for &c in &costs[1..] {
-        if c.1 < best.1 {
-            best = c;
+fn argmin_within(costs: [(EncoderKind, f64); 3], allowed: [bool; 3]) -> EncoderKind {
+    let mut best: Option<(EncoderKind, f64)> = None;
+    for &(k, c) in &costs {
+        if !allowed[k.to_tag() as usize] {
+            continue;
+        }
+        let better = match best {
+            None => true,
+            Some((_, b)) => c < b,
+        };
+        if better {
+            best = Some((k, c));
         }
     }
-    best.0
+    best.expect("allowed mask excludes every backend").0
+}
+
+/// Which backends meet a decode-throughput budget, from the telemetry
+/// registry's measured decode rates (`codec.<k>.decode_symbols` symbols →
+/// ×4 original bytes, over `codec.<k>.decode_ns`) — the `--target-gbps`
+/// knob behind `auto`. Semantics chosen so the knob can only *prune*,
+/// never strand: a non-positive target or a backend with no recorded
+/// decode traffic passes (nothing measured, nothing to prune on), and if
+/// every measured backend misses the budget the fastest one stays
+/// allowed so selection always has somewhere to go.
+pub fn allowed_for_target(reg: &crate::obs::Registry, target_gbps: f64) -> [bool; 3] {
+    if !(target_gbps > 0.0) {
+        return [true; 3];
+    }
+    let mut rate = [None::<f64>; 3];
+    for kind in EncoderKind::ALL {
+        let keys = super::codec_counter_keys(kind);
+        let ns = reg.counter_value(keys.decode_ns);
+        let symbols = reg.counter_value(keys.decode_symbols);
+        if ns > 0 && symbols > 0 {
+            // bytes/ns == GB/s against the original f32 payload
+            rate[kind.to_tag() as usize] = Some(symbols as f64 * 4.0 / ns as f64);
+        }
+    }
+    let mut allowed = [false; 3];
+    for kind in EncoderKind::ALL {
+        let i = kind.to_tag() as usize;
+        allowed[i] = match rate[i] {
+            Some(r) => r >= target_gbps,
+            None => true,
+        };
+    }
+    if allowed.iter().all(|&a| !a) {
+        let fastest = EncoderKind::ALL
+            .into_iter()
+            .max_by(|a, b| {
+                let ra = rate[a.to_tag() as usize].unwrap_or(0.0);
+                let rb = rate[b.to_tag() as usize].unwrap_or(0.0);
+                ra.total_cmp(&rb)
+            })
+            .expect("ALL is non-empty");
+        allowed[fastest.to_tag() as usize] = true;
+    }
+    allowed
 }
 
 /// Field-level estimates (throughput-weighted bits; see [`CostModel`]).
@@ -361,6 +429,62 @@ mod tests {
         let p = probe_chunk(&symbols, &lengths, 512);
         assert_eq!(m.select_chunk(&p), CostModel::MEASURED.select_chunk(&p));
         assert_eq!(m.chunk_costs(&p), CostModel::MEASURED.chunk_costs(&p));
+    }
+
+    #[test]
+    fn target_gbps_prunes_on_measured_decode_rates() {
+        use crate::codec::codec_counter_keys;
+        use crate::obs::Registry;
+        // no target: everything allowed, even with telemetry present
+        let reg = Registry::new();
+        assert_eq!(allowed_for_target(&reg, 0.0), [true; 3]);
+        assert_eq!(allowed_for_target(&reg, -1.0), [true; 3]);
+        // empty registry: nothing measured, nothing pruned
+        assert_eq!(allowed_for_target(&reg, 100.0), [true; 3]);
+
+        // decode rates: huffman 1 GB/s, fle 8 GB/s, rle 2 GB/s
+        // (symbols × 4 bytes over ns)
+        let put = |kind: EncoderKind, symbols: u64, ns: u64| {
+            let k = codec_counter_keys(kind);
+            reg.add(k.decode_symbols, symbols);
+            reg.add(k.decode_ns, ns);
+        };
+        put(EncoderKind::Huffman, 1_000, 4_000);
+        put(EncoderKind::Fle, 8_000, 4_000);
+        put(EncoderKind::Rle, 2_000, 4_000);
+        // budget between huffman and rle: huffman pruned
+        assert_eq!(allowed_for_target(&reg, 1.5), [false, true, true]);
+        // budget between rle and fle: only fle survives
+        assert_eq!(allowed_for_target(&reg, 4.0), [false, true, false]);
+        // budget above everything: the fastest backend stays allowed
+        assert_eq!(allowed_for_target(&reg, 100.0), [false, true, false]);
+    }
+
+    #[test]
+    fn selection_within_respects_the_mask() {
+        let model = CostModel::MEASURED;
+        // constant field: unrestricted auto picks RLE
+        let mut constant = vec![0u64; 1024];
+        constant[512] = 1_000_000;
+        constant[513] = 1000;
+        constant[511] = 1000;
+        assert_eq!(model.select_field(&constant), EncoderKind::Rle);
+        // with RLE pruned the next-cheapest backend wins instead
+        let mut no_rle = [true; 3];
+        no_rle[EncoderKind::Rle.to_tag() as usize] = false;
+        let picked = model.select_field_within(&constant, no_rle);
+        assert_ne!(picked, EncoderKind::Rle);
+        // per chunk: same contract against the exact probe
+        let symbols = vec![512u16; 4096];
+        let freq = hist(&symbols, 1024);
+        let lengths = huffman::build_lengths(&freq);
+        let p = probe_chunk(&symbols, &lengths, 512);
+        assert_eq!(model.select_chunk(&p), EncoderKind::Rle);
+        assert_ne!(model.select_chunk_within(&p, no_rle), EncoderKind::Rle);
+        // a single-backend mask is honored verbatim
+        let mut only_huffman = [false; 3];
+        only_huffman[EncoderKind::Huffman.to_tag() as usize] = true;
+        assert_eq!(model.select_chunk_within(&p, only_huffman), EncoderKind::Huffman);
     }
 
     #[test]

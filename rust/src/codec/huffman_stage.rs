@@ -10,10 +10,107 @@ use anyhow::{bail, Result};
 
 use super::{EncodeContext, EncodedSymbols, EncoderKind, EncoderStage, SymbolSource};
 use crate::config::CodewordRepr;
-use crate::huffman::deflate::{deflate_one, DeflatedStream};
+use crate::huffman::deflate::{deflate_one, deflate_one_gap, DeflatedStream, GapTable};
 use crate::huffman::{self, CanonicalCodebook, ReverseCodebook};
 
 pub struct HuffmanStage;
+
+/// [`HuffmanStage::encode_source`] with gap-table recording: deflates
+/// through [`deflate_one_gap`], so every chunk larger than the subchunk
+/// granularity also yields its `(bit_offset, symbol_count)` index. The
+/// bitstream is bit-identical to the plain path; only the sidecar table
+/// is new. Telemetry is recorded here (this entry point bypasses the
+/// `Instrumented` wrapper behind [`super::stage_for`]).
+pub fn encode_source_with_gaps(
+    src: &SymbolSource<'_>,
+    ctx: &EncodeContext,
+) -> Result<(EncodedSymbols, Vec<GapTable>)> {
+    let t0 = Instant::now();
+    let out = encode_source_gap_inner(src, ctx)?;
+    super::record_codec_encode(
+        EncoderKind::Huffman,
+        src.len() as u64,
+        (out.0.stream.payload_bytes() + out.0.aux.len()) as u64,
+        t0.elapsed().as_nanos() as u64,
+    );
+    Ok(out)
+}
+
+fn encode_source_gap_inner(
+    src: &SymbolSource<'_>,
+    ctx: &EncodeContext,
+) -> Result<(EncodedSymbols, Vec<GapTable>)> {
+    if ctx.freq.len() != ctx.dict_size {
+        bail!(
+            "histogram has {} bins for dict size {}",
+            ctx.freq.len(),
+            ctx.dict_size
+        );
+    }
+    let t0 = Instant::now();
+    let lengths = huffman::build_lengths(ctx.freq);
+    let book = CanonicalCodebook::from_lengths(&lengths)?;
+    let codebook_time = t0.elapsed();
+    let repr_bits = match ctx.codeword_repr {
+        CodewordRepr::U32 => 32,
+        CodewordRepr::U64 => 64,
+        CodewordRepr::Adaptive => book.repr_bits(),
+    };
+    let cs = ctx.chunk_symbols.max(1);
+    let parts = src.map_chunks(cs, ctx.threads, |_, chunk| deflate_one_gap(chunk, &book));
+    let mut chunks = Vec::with_capacity(parts.len());
+    let mut gaps = Vec::with_capacity(parts.len());
+    for (c, g) in parts {
+        chunks.push(c);
+        gaps.push(g);
+    }
+    let stream = DeflatedStream { chunks, chunk_symbols: cs };
+    Ok((EncodedSymbols { aux: lengths, stream, repr_bits, codebook_time }, gaps))
+}
+
+/// Gap-aware inverse of [`encode_source_with_gaps`]: chunks whose gap
+/// table is non-empty decode subchunk-parallel through
+/// [`huffman::inflate_one_gap_into_strict`] with the thread budget that
+/// remains after the outer chunk fan-out, so a single large chunk still
+/// saturates all cores. `gaps` comes from an untrusted archive — the gap
+/// decoder validates every table before any subchunk decodes. Telemetry
+/// is recorded here (this entry point bypasses the `Instrumented`
+/// wrapper behind [`super::stage_for`]).
+pub fn decode_into_gap(
+    aux: &[u8],
+    stream: &DeflatedStream,
+    gaps: &[GapTable],
+    dict_size: usize,
+    threads: usize,
+    sink: &mut crate::codec::SymbolSink<'_>,
+) -> Result<()> {
+    if aux.len() > dict_size {
+        bail!("codebook has {} lengths for dict size {dict_size}", aux.len());
+    }
+    if !gaps.is_empty() && gaps.len() != stream.chunks.len() {
+        bail!(
+            "gap sidecar has {} tables for {} chunks",
+            gaps.len(),
+            stream.chunks.len()
+        );
+    }
+    let t0 = Instant::now();
+    let rev = ReverseCodebook::from_lengths(aux)?;
+    // threads left per chunk once the outer fan-out has claimed its share:
+    // a single-chunk stream hands the whole budget to the subchunk pass
+    let inner = (threads / stream.chunks.len().max(1)).max(1);
+    sink.fill_chunks(stream, threads, |ci, window| {
+        let table = gaps.get(ci).map(|g| g.as_slice()).unwrap_or(&[]);
+        huffman::inflate_one_gap_into_strict(&stream.chunks[ci], table, &rev, window, inner)
+    })?;
+    super::record_codec_decode(
+        EncoderKind::Huffman,
+        stream.total_symbols(),
+        (stream.payload_bytes() + aux.len()) as u64,
+        t0.elapsed().as_nanos() as u64,
+    );
+    Ok(())
+}
 
 impl EncoderStage for HuffmanStage {
     fn kind(&self) -> EncoderKind {
@@ -98,6 +195,72 @@ mod tests {
         assert_eq!(enc.aux, lengths);
         let out = stage.decode(&enc.aux, &enc.stream, dict, 4, symbols.len()).unwrap();
         assert_eq!(out, symbols);
+    }
+
+    #[test]
+    fn gap_encode_matches_plain_and_decodes_parallel() {
+        let dict = 1024usize;
+        let mut rng = Rng::new(17);
+        // one chunk spanning several subchunks: the single-large-chunk
+        // decode shape the gap path exists for
+        let n = crate::huffman::GAP_SUBCHUNK * 5 + 321;
+        let symbols: Vec<u16> = (0..n)
+            .map(|_| ((rng.normal() * 12.0) as i32 + 512).clamp(0, dict as i32 - 1) as u16)
+            .collect();
+        let mut freq = vec![0u64; dict];
+        for &s in &symbols {
+            freq[s as usize] += 1;
+        }
+        let ctx = EncodeContext {
+            dict_size: dict,
+            chunk_symbols: n,
+            threads: 4,
+            codeword_repr: CodewordRepr::Adaptive,
+            freq: &freq,
+        };
+        let src = crate::codec::SymbolSource::from_slice(&symbols);
+        let (enc, gaps) = encode_source_with_gaps(&src, &ctx).unwrap();
+        let plain = HuffmanStage.encode_source(&src, &ctx).unwrap();
+        assert_eq!(enc.stream, plain.stream, "gap recording changed the bitstream");
+        assert_eq!(enc.aux, plain.aux);
+        assert_eq!(gaps.len(), 1);
+        assert_eq!(gaps[0].len(), n.div_ceil(crate::huffman::GAP_SUBCHUNK));
+        for threads in [1usize, 2, 8] {
+            let mut out = vec![0u16; n];
+            decode_into_gap(
+                &enc.aux,
+                &enc.stream,
+                &gaps,
+                dict,
+                threads,
+                &mut crate::codec::SymbolSink::from_slice(&mut out),
+            )
+            .unwrap();
+            assert_eq!(out, symbols, "threads={threads}");
+        }
+        // an empty gap list falls back to the serial per-chunk decode
+        let mut out = vec![0u16; n];
+        decode_into_gap(
+            &enc.aux,
+            &enc.stream,
+            &[],
+            dict,
+            4,
+            &mut crate::codec::SymbolSink::from_slice(&mut out),
+        )
+        .unwrap();
+        assert_eq!(out, symbols);
+        // a gap list of the wrong cardinality is rejected
+        let mut out = vec![0u16; n];
+        assert!(decode_into_gap(
+            &enc.aux,
+            &enc.stream,
+            &[gaps[0].clone(), gaps[0].clone()],
+            dict,
+            4,
+            &mut crate::codec::SymbolSink::from_slice(&mut out),
+        )
+        .is_err());
     }
 
     #[test]

@@ -33,6 +33,46 @@ pub const SIDECAR_BYTES: usize = 2;
 
 pub struct RleStage;
 
+/// Four u16 lanes packed little-endian into one u64 scan word.
+#[inline]
+fn pack4(s: &[u16], k: usize) -> u64 {
+    (s[k] as u64)
+        | (s[k + 1] as u64) << 16
+        | (s[k + 2] as u64) << 32
+        | (s[k + 3] as u64) << 48
+}
+
+/// Run detection as a u64-word kernel: the packed window is XORed with
+/// itself shifted one lane, so each 16-bit lane (two byte lanes — 8 byte
+/// lanes per word) is nonzero exactly where consecutive symbols differ.
+/// A byte-mask collapse plus `trailing_zeros` finds the first boundary;
+/// an all-zero word extends the run by four symbols per op. Returns the
+/// exclusive end of the run starting at `i`.
+///
+/// Scanning raw symbols is sound because the magnitude transform is
+/// injective (locked by `fle::tests::full_bijection_small_dict`): equal
+/// transformed values ⇔ equal symbols.
+#[inline]
+fn run_end(symbols: &[u16], i: usize) -> usize {
+    let n = symbols.len();
+    let mut j = i + 1;
+    while j + 4 <= n {
+        let x = pack4(symbols, j - 1) ^ pack4(symbols, j);
+        if x == 0 {
+            j += 4;
+            continue;
+        }
+        // collapse each 16-bit lane into its low byte, then locate the
+        // first nonzero lane
+        let m = (x | (x >> 8)) & 0x00FF_00FF_00FF_00FF;
+        return j + (m.trailing_zeros() / 16) as usize;
+    }
+    while j < n && symbols[j] == symbols[i] {
+        j += 1;
+    }
+    j
+}
+
 /// Encode one chunk; returns the `[w, r]` sidecar record and the framed
 /// run stream. Public within the codec so mixed-granularity archives can
 /// tag individual chunks as RLE.
@@ -40,16 +80,15 @@ pub(super) fn encode_chunk(symbols: &[u16], radius: i32) -> ([u8; 2], DeflatedCh
     let mut runs: Vec<(u32, u32)> = Vec::new();
     let mut all = 0u32;
     let mut max_run = 1u32;
-    for &s in symbols {
-        let v = transform(s, radius);
+    let mut i = 0usize;
+    while i < symbols.len() {
+        let j = run_end(symbols, i);
+        let v = transform(symbols[i], radius);
+        let len = (j - i) as u32;
         all |= v;
-        match runs.last_mut() {
-            Some((pv, len)) if *pv == v => {
-                *len += 1;
-                max_run = max_run.max(*len);
-            }
-            _ => runs.push((v, 1)),
-        }
+        max_run = max_run.max(len);
+        runs.push((v, len));
+        i = j;
     }
     let w = 32 - all.leading_zeros();
     let r = if max_run <= 1 { 0 } else { 32 - (max_run - 1).leading_zeros() };
@@ -244,6 +283,73 @@ mod tests {
             roundtrip(&symbols, dict, 4096);
             roundtrip(&symbols, dict, 257);
         }
+    }
+
+    /// The pre-kernel symbol-at-a-time run builder, kept verbatim as the
+    /// oracle the u64 XOR+byte-mask scan is locked against.
+    fn encode_chunk_scalar(symbols: &[u16], radius: i32) -> ([u8; 2], DeflatedChunk) {
+        let mut runs: Vec<(u32, u32)> = Vec::new();
+        let mut all = 0u32;
+        let mut max_run = 1u32;
+        for &s in symbols {
+            let v = transform(s, radius);
+            all |= v;
+            match runs.last_mut() {
+                Some((pv, len)) if *pv == v => {
+                    *len += 1;
+                    max_run = max_run.max(*len);
+                }
+                _ => runs.push((v, 1)),
+            }
+        }
+        let w = 32 - all.leading_zeros();
+        let r = if max_run <= 1 { 0 } else { 32 - (max_run - 1).leading_zeros() };
+        let mut writer = BitWriter::with_capacity_bits(runs.len() * (w + r) as usize);
+        for &(v, len) in &runs {
+            writer.write(v as u64, w);
+            writer.write((len - 1) as u64, r);
+        }
+        let (words, bits) = writer.finish();
+        ([w as u8, r as u8], DeflatedChunk { words, bits, symbols: symbols.len() as u32 })
+    }
+
+    #[test]
+    fn word_scan_matches_scalar_oracle_bit_for_bit() {
+        let mut rng = Rng::new(91);
+        let radius = 512i32;
+        for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 63, 64, 65, 1000, 4096, 10_001] {
+            // adversarial run structure: geometric run lengths from 1 up,
+            // boundaries landing on every lane alignment
+            let mut symbols = Vec::with_capacity(n);
+            let mut v = 512u16;
+            while symbols.len() < n {
+                let len = 1 + (rng.below(9) * rng.below(9)) as usize;
+                let take = len.min(n - symbols.len());
+                symbols.extend(std::iter::repeat(v).take(take));
+                v = if rng.f32() < 0.1 { 0 } else { (500 + rng.below(25)) as u16 };
+            }
+            let (aux_k, c_k) = encode_chunk(&symbols, radius);
+            let (aux_s, c_s) = encode_chunk_scalar(&symbols, radius);
+            assert_eq!(aux_k, aux_s, "n={n}");
+            assert_eq!(c_k, c_s, "n={n}: kernel scan diverged from scalar oracle");
+        }
+    }
+
+    #[test]
+    fn run_end_finds_every_boundary_alignment() {
+        // runs of every length 1..=20 back to back: boundaries hit every
+        // position of the 4-lane scan window
+        let mut symbols = Vec::new();
+        for len in 1usize..=20 {
+            symbols.extend(std::iter::repeat((100 + len) as u16).take(len));
+        }
+        let mut i = 0usize;
+        for len in 1usize..=20 {
+            let j = super::run_end(&symbols, i);
+            assert_eq!(j - i, len, "run starting at {i}");
+            i = j;
+        }
+        assert_eq!(i, symbols.len());
     }
 
     #[test]

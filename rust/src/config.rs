@@ -74,6 +74,13 @@ pub struct CuszConfig {
     /// Which symbol encoder backend + lossless tail stage (the pluggable
     /// codec pipeline; `Auto` resolves per field from the histogram).
     pub codec: CodecSpec,
+    /// Decode-throughput budget in GB/s for `auto` codec selection: when
+    /// positive, backends whose measured decode rate (telemetry registry,
+    /// original bytes over decode time) misses the budget are pruned
+    /// before the cost model's size argmin — trading compression ratio
+    /// for decompression speed. 0 (default) disables pruning; backends
+    /// with no recorded decode traffic are never pruned.
+    pub target_gbps: f64,
     /// Worker threads for coarse-grained (chunk) parallelism. 0 = all cores.
     pub threads: usize,
     /// Directory holding `manifest.tsv` + HLO artifacts.
@@ -91,6 +98,7 @@ impl Default for CuszConfig {
             chunk_symbols: 4096,
             codeword_repr: CodewordRepr::Adaptive,
             codec: CodecSpec::default(),
+            target_gbps: 0.0,
             threads: 0,
             artifacts_dir: PathBuf::from("artifacts"),
             queue_depth: 4,

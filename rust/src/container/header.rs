@@ -10,9 +10,11 @@
 //! Version 3 keeps the version-2 header layout byte for byte; what it
 //! changes is the **body**: a gzip/zstd lossless tail is framed over
 //! independent segments so both sides of the tail run chunk-parallel
-//! (see `container::mod`). Which parser runs is selected by the
-//! container magic ([`crate::container::MAGIC_V0`] /
-//! [`crate::container::MAGIC_V1`] / [`crate::container::MAGIC`]), since
+//! (see `container::mod`). Version 4 likewise keeps the header layout
+//! and adds an optional per-chunk Huffman gap-table section to the
+//! body. Which parser runs is selected by the container magic
+//! ([`crate::container::MAGIC_V0`] / [`crate::container::MAGIC_V1`] /
+//! [`crate::container::MAGIC_V3`] / [`crate::container::MAGIC`]), since
 //! the legacy layout's first byte is a name-length byte and cannot be
 //! distinguished in-band.
 
@@ -22,9 +24,11 @@ use super::bytes::{ByteReader, ByteWriter};
 use crate::codec::{CodecGranularity, EncoderKind};
 use crate::config::ErrorBound;
 
-/// The archive format version this build writes. Version 3 = segmented
-/// (chunk-parallel) lossless tail; headers are layout-identical to v2.
-pub const FORMAT_VERSION: u8 = 3;
+/// The archive format version this build writes. Version 4 = optional
+/// per-chunk Huffman gap tables in the body (subchunk bit-offset index
+/// for intra-chunk parallel decode); headers stay layout-identical to
+/// v2/v3 — only the body framing and the container magic change.
+pub const FORMAT_VERSION: u8 = 4;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LosslessTag {
@@ -138,7 +142,7 @@ impl Header {
         w.finish()
     }
 
-    /// Parse a versioned (`CUSZA2`/`CUSZA3` magic) header. Rejects
+    /// Parse a versioned (`CUSZA2`/`CUSZA3`/`CUSZA4` magic) header. Rejects
     /// version bytes this build does not understand, unknown encoder
     /// tags, and unknown granularity tags.
     pub fn from_bytes(bytes: &[u8]) -> Result<Header> {

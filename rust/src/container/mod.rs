@@ -5,12 +5,14 @@
 //! tag table (mixed-granularity archives), the outlier side channels, and
 //! per-section CRC32s (DESIGN.md §6).
 //!
-//! Three magics coexist: [`MAGIC_V0`] marks pre-codec archives (legacy
+//! Four magics coexist: [`MAGIC_V0`] marks pre-codec archives (legacy
 //! header layout, Huffman implied), [`MAGIC_V1`] marks PR 2's
-//! field-tagged archives — both still decode. [`MAGIC`] marks current
-//! archives, whose header adds a codec-granularity byte and whose body
-//! may carry a per-chunk tag table + per-chunk sidecar records. Unknown
-//! magics, versions, and tags all fail cleanly.
+//! field-tagged archives, and [`MAGIC_V3`] marks the granularity-aware
+//! CUSZA3 generation (format versions 2–3) — all still decode
+//! byte-for-byte. [`MAGIC`] marks current (version 4) archives, whose
+//! body may additionally carry per-chunk Huffman gap tables (the
+//! subchunk bit-offset index that makes intra-chunk decode parallel).
+//! Unknown magics, versions, and tags all fail cleanly.
 //!
 //! Serialization is a single streaming pass: [`Archive::write_into`]
 //! builds the body once in arena-reused scratch and streams it to any
@@ -39,10 +41,13 @@ pub use header::{Header, LosslessTag, FORMAT_VERSION};
 pub const MAGIC_V0: &[u8; 8] = b"CUSZA1\0\0";
 /// Magic of format-version-1 (field-tagged, pre-granularity) archives.
 pub const MAGIC_V1: &[u8; 8] = b"CUSZA2\0\0";
-/// Magic of current (granularity-aware, chunk-taggable) archives. Format
+/// Magic of the granularity-aware, chunk-taggable generation. Format
 /// versions 2 (monolithic lossless tail) and 3 (segmented tail) both
 /// travel under it; the header's version byte selects the body parser.
-pub const MAGIC: &[u8; 8] = b"CUSZA3\0\0";
+pub const MAGIC_V3: &[u8; 8] = b"CUSZA3\0\0";
+/// Magic of current (format version 4) archives, whose body may carry
+/// per-chunk Huffman gap tables after the chunk-tag section.
+pub const MAGIC: &[u8; 8] = b"CUSZA4\0\0";
 
 /// Largest chunk geometry (symbols per chunk) the format accepts. Real
 /// configs top out at 2^16; the bound keeps a crafted stream from turning
@@ -283,6 +288,15 @@ pub struct Archive {
     /// worker applies its range in list order), same `partition_point`
     /// split as `outliers`.
     pub verbatim: Vec<(u64, f32)>,
+    /// Per-chunk Huffman gap tables (format version ≥ 4): for each
+    /// stream chunk, the `(bit_offset, symbol_count)` subchunk index
+    /// recorded at deflate time, empty for chunks with no table (small
+    /// chunks, non-Huffman chunks). An empty outer vec means the archive
+    /// carries no gap section content (it still frames a zero count at
+    /// v≥4). Treated as untrusted input on read: the decoder validates
+    /// every table against the chunk's bit/symbol totals before any
+    /// subchunk decodes in parallel.
+    pub gap_tables: Vec<Vec<(u64, u32)>>,
 }
 
 impl Archive {
@@ -337,6 +351,12 @@ impl Archive {
                 n += self.chunk_aux.iter().map(|a| 1 + a.len()).sum::<usize>();
             }
         }
+        if self.header.version >= 4 {
+            n += 4; // gap-table chunk count
+            if !self.gap_tables.is_empty() {
+                n += self.gap_tables.iter().map(|g| 4 + g.len() * 12).sum::<usize>();
+            }
+        }
         n += 8 + self.outliers.len() * 12;
         n += 8 + self.verbatim.len() * 12;
         n
@@ -374,6 +394,20 @@ impl Archive {
                     );
                     body.u8(aux.len() as u8);
                     body.bytes(aux);
+                }
+            }
+        }
+
+        if self.header.version >= 4 {
+            // gap-table section: all-or-nothing like the tag table — the
+            // outer count is 0 (no gap content) or exactly the chunk
+            // count, with per-chunk tables allowed to be empty
+            body.u32(self.gap_tables.len() as u32);
+            for gaps in &self.gap_tables {
+                body.u32(gaps.len() as u32);
+                for &(off, count) in gaps {
+                    body.u64(off);
+                    body.u32(count);
                 }
             }
         }
@@ -418,12 +452,19 @@ impl Archive {
             "version-{} archives cannot carry a per-chunk tag table",
             self.header.version
         );
+        // pre-v4 layouts likewise have no gap-table section
+        assert!(
+            self.header.version >= 4 || self.gap_tables.is_empty(),
+            "version-{} archives cannot carry Huffman gap tables",
+            self.header.version
+        );
         let mut total = 0u64;
         // headers serialize in their own version's layout, so each must
         // travel under the matching magic for parsers to agree
         w.write_all(match self.header.version {
             0 => MAGIC_V0,
             1 => MAGIC_V1,
+            2 | 3 => MAGIC_V3,
             _ => MAGIC,
         })?;
         total += 8;
@@ -470,7 +511,7 @@ impl Archive {
         let magic = r.take(8)?;
         let legacy = if magic == MAGIC_V0 {
             true
-        } else if magic == MAGIC_V1 || magic == MAGIC {
+        } else if magic == MAGIC_V1 || magic == MAGIC_V3 || magic == MAGIC {
             false
         } else {
             bail!("not a cusza archive (bad magic)");
@@ -480,8 +521,16 @@ impl Archive {
             return Header::from_bytes_v0(&header_bytes);
         }
         let header = Header::from_bytes(&header_bytes)?;
-        let expect_v1 = magic == MAGIC_V1;
-        if expect_v1 != (header.version == 1) {
+        // each magic admits exactly its own version range: V1 ↔ 1,
+        // V3 ↔ 2–3, current ↔ 4+ — a mismatch means a spliced payload
+        let version_ok = if magic == MAGIC_V1 {
+            header.version == 1
+        } else if magic == MAGIC_V3 {
+            header.version == 2 || header.version == 3
+        } else {
+            header.version >= 4
+        };
+        if !version_ok {
             bail!(
                 "archive magic disagrees with header version {} (spliced payload?)",
                 header.version
@@ -608,6 +657,33 @@ impl Archive {
             (Vec::new(), Vec::new())
         };
 
+        // per-chunk Huffman gap tables (format version >= 4). Untrusted:
+        // counts are bounded against the bytes present before allocating;
+        // the *semantic* validation (offsets monotone, within the chunk's
+        // bit length, symbol counts summing to the chunk total) happens in
+        // the gap decoder, which re-checks every table it actually uses.
+        let gap_tables = if header.version >= 4 {
+            let ngap = b.u32()? as usize;
+            if ngap != 0 && ngap != nchunks {
+                bail!("corrupt archive: {ngap} gap tables for {nchunks} chunks");
+            }
+            let mut tables = Vec::with_capacity(ngap);
+            for _ in 0..ngap {
+                let nentries = b.u32()? as usize;
+                if nentries > b.remaining() / 12 {
+                    bail!("corrupt archive: {nentries} gap entries exceeds payload");
+                }
+                let mut gaps = Vec::with_capacity(nentries);
+                for _ in 0..nentries {
+                    gaps.push((b.u64()?, b.u32()?));
+                }
+                tables.push(gaps);
+            }
+            tables
+        } else {
+            Vec::new()
+        };
+
         let nout = b.u64()? as usize;
         if nout > b.remaining() / 12 {
             bail!("corrupt archive: {nout} outliers exceeds payload");
@@ -633,6 +709,7 @@ impl Archive {
             stream: DeflatedStream { chunks, chunk_symbols },
             outliers,
             verbatim,
+            gap_tables,
         })
     }
 }
@@ -683,7 +760,16 @@ mod tests {
             },
             outliers: vec![(7, -123456), (99_999, 777)],
             verbatim: vec![(123, f32::NAN), (456, 1e30)],
+            gap_tables: Vec::new(),
         }
+    }
+
+    /// A v4 archive carrying a gap table for each chunk (second empty:
+    /// chunks below the subchunk granularity record no entries).
+    fn sample_gap_archive(lossless: LosslessTag) -> Archive {
+        let mut a = sample_archive(lossless);
+        a.gap_tables = vec![vec![(0, 20), (57, 20)], Vec::new()];
+        a
     }
 
     fn sample_mixed_archive() -> Archive {
@@ -803,17 +889,74 @@ mod tests {
 
     #[test]
     fn spliced_magic_version_mismatch_rejected() {
-        // a version-2 header smuggled under the CUSZA2 magic (and vice
+        // a version-4 header smuggled under an older magic (and vice
         // versa) must be rejected even though both parts are well-formed
         let a = sample_archive(LosslessTag::None);
         let mut bytes = a.to_bytes();
         bytes[..8].copy_from_slice(MAGIC_V1);
+        assert!(Archive::from_bytes(&bytes).is_err());
+        let mut bytes = a.to_bytes();
+        bytes[..8].copy_from_slice(MAGIC_V3);
         assert!(Archive::from_bytes(&bytes).is_err());
         let mut a1 = sample_archive(LosslessTag::None);
         a1.header.version = 1;
         let mut bytes = a1.to_bytes();
         bytes[..8].copy_from_slice(MAGIC);
         assert!(Archive::from_bytes(&bytes).is_err());
+        // a v3 (CUSZA3) archive relabeled with the current magic would
+        // misparse its gap-less body — rejected at the header gate
+        let mut a3 = sample_archive(LosslessTag::None);
+        a3.header.version = 3;
+        let mut bytes = a3.to_bytes();
+        assert_eq!(&bytes[..8], MAGIC_V3);
+        bytes[..8].copy_from_slice(MAGIC);
+        assert!(Archive::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn v4_gap_tables_roundtrip() {
+        for tag in [LosslessTag::None, LosslessTag::Zstd] {
+            let a = sample_gap_archive(tag);
+            let bytes = a.to_bytes();
+            assert_eq!(&bytes[..8], MAGIC);
+            let b = Archive::from_bytes(&bytes).unwrap();
+            assert_eq!(b.gap_tables, a.gap_tables, "{tag:?}");
+            assert_eq!(b, a, "{tag:?}");
+        }
+        // a gap-less v4 archive frames a zero table count and reads back
+        // with an empty outer vec
+        let plain = sample_archive(LosslessTag::None);
+        let b = Archive::from_bytes(&plain.to_bytes()).unwrap();
+        assert!(b.gap_tables.is_empty());
+    }
+
+    #[test]
+    fn hostile_gap_section_fails_cleanly() {
+        let a = sample_gap_archive(LosslessTag::None);
+        let bytes = a.to_bytes();
+        let off = body_payload_offset(&bytes);
+        // the gap section sits after aux (4+1024), chunk geometry (8),
+        // two chunks (8+4+4+16 and 8+4+4+8), and the v2 tag section (4)
+        let gap_off = off + 4 + 1024 + 8 + 32 + 24 + 4;
+        assert_eq!(
+            u32::from_le_bytes(bytes[gap_off..gap_off + 4].try_into().unwrap()),
+            2,
+            "gap section not where the layout arithmetic says"
+        );
+
+        // outer count that matches neither 0 nor nchunks
+        let mut wrong = bytes.clone();
+        wrong[gap_off..gap_off + 4].copy_from_slice(&1u32.to_le_bytes());
+        rewrite_body_crc(&mut wrong);
+        let err = Archive::from_bytes(&wrong).unwrap_err();
+        assert!(err.to_string().contains("gap tables"), "{err:#}");
+
+        // entry count inflated past the payload: bounded before allocation
+        let mut bloated = bytes.clone();
+        bloated[gap_off + 4..gap_off + 8].copy_from_slice(&u32::MAX.to_le_bytes());
+        rewrite_body_crc(&mut bloated);
+        let err = Archive::from_bytes(&bloated).unwrap_err();
+        assert!(err.to_string().contains("gap entries"), "{err:#}");
     }
 
     #[test]
@@ -913,10 +1056,12 @@ mod tests {
             let mut mixed = sample_mixed_archive();
             mixed.header.lossless = tag;
             assert_eq!(mixed.serialized_len(), mixed.to_bytes().len(), "mixed {tag:?}");
+            let gap = sample_gap_archive(tag);
+            assert_eq!(gap.serialized_len(), gap.to_bytes().len(), "gap {tag:?}");
         }
         // legacy versions: the arithmetic covers the version-gated
         // sections too
-        for version in [0u8, 1] {
+        for version in [0u8, 1, 2, 3] {
             let mut a = sample_archive(LosslessTag::None);
             a.header.version = version;
             assert_eq!(a.serialized_len(), a.to_bytes().len(), "v{version}");

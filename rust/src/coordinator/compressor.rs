@@ -6,7 +6,7 @@ use anyhow::Result;
 
 use super::{CompressStats, CompressedField, Coordinator};
 use crate::codec::{
-    self, chunked, CodecGranularity, CostModel, EncodeContext, EncoderChoice, EncoderKind,
+    self, chunked, cost, CodecGranularity, CostModel, EncodeContext, EncoderChoice, EncoderKind,
     SymbolSource,
 };
 use crate::container::{self, Archive, Header, LosslessTag, FORMAT_VERSION, MAX_CHUNK_SYMBOLS};
@@ -139,11 +139,19 @@ pub fn compress(coord: &Coordinator, field: &Field) -> Result<CompressedField> {
         codeword_repr: cfg.codeword_repr,
         freq: &freq,
     };
-    let per_chunk_auto = cfg.codec.encoder == EncoderChoice::Auto
-        && cfg.codec.granularity == CodecGranularity::Chunk;
-    let (encoder_kind, granularity, encoder_aux, chunk_tags, chunk_aux, stream, repr_bits, codebook_time, chunk_counts);
+    let is_auto = cfg.codec.encoder == EncoderChoice::Auto;
+    let per_chunk_auto = is_auto && cfg.codec.granularity == CodecGranularity::Chunk;
+    // `--target-gbps`: prune backends whose measured decode rate misses
+    // the budget before `auto`'s size argmin (forced choices are never
+    // overridden — the knob only narrows what `auto` may pick)
+    let allowed = if is_auto {
+        cost::allowed_for_target(obs::global(), cfg.target_gbps)
+    } else {
+        [true; 3]
+    };
+    let (encoder_kind, granularity, encoder_aux, chunk_tags, chunk_aux, stream, repr_bits, codebook_time, chunk_counts, gap_tables);
     if per_chunk_auto {
-        let enc = chunked::encode_chunked(&symbols, &ctx, &CostModel::MEASURED)?;
+        let enc = chunked::encode_chunked_within(&symbols, &ctx, &CostModel::MEASURED, allowed)?;
         // the header's field-level tag records the majority backend (an
         // `ls`-level summary; decode follows the per-chunk tag table)
         encoder_kind = EncoderKind::ALL
@@ -164,14 +172,22 @@ pub fn compress(coord: &Coordinator, field: &Field) -> Result<CompressedField> {
         repr_bits = enc.repr_bits;
         codebook_time = enc.codebook_time;
         chunk_counts = enc.counts;
+        gap_tables = enc.gaps;
     } else {
         let kind = match cfg.codec.encoder {
             EncoderChoice::Huffman => EncoderKind::Huffman,
             EncoderChoice::Fle => EncoderKind::Fle,
             EncoderChoice::Rle => EncoderKind::Rle,
-            EncoderChoice::Auto => codec::auto_select(&freq),
+            EncoderChoice::Auto => CostModel::MEASURED.select_field_within(&freq, allowed),
         };
-        let enc = codec::stage_for(kind).encode_source(&symbols, &ctx)?;
+        // Huffman goes through the gap-recording path so any chunk larger
+        // than the subchunk granularity carries its parallel-decode index
+        // (bitstream unchanged; only the sidecar table is new)
+        let (enc, gaps) = if kind == EncoderKind::Huffman {
+            codec::huffman_stage::encode_source_with_gaps(&symbols, &ctx)?
+        } else {
+            (codec::stage_for(kind).encode_source(&symbols, &ctx)?, Vec::new())
+        };
         let mut counts = [0usize; EncoderKind::ALL.len()];
         counts[kind.to_tag() as usize] = enc.stream.chunks.len();
         encoder_kind = kind;
@@ -183,6 +199,7 @@ pub fn compress(coord: &Coordinator, field: &Field) -> Result<CompressedField> {
         repr_bits = enc.repr_bits;
         codebook_time = enc.codebook_time;
         chunk_counts = counts;
+        gap_tables = gaps;
     }
     // keep the Table 7 breakdown rows: table/codebook construction is
     // reported apart from the streaming encode it precedes
@@ -224,6 +241,13 @@ pub fn compress(coord: &Coordinator, field: &Field) -> Result<CompressedField> {
         stream,
         outliers,
         verbatim,
+        // all-empty tables carry no information: write a bare zero count
+        // instead of nchunks empty frames
+        gap_tables: if gap_tables.iter().all(|g| g.is_empty()) {
+            Vec::new()
+        } else {
+            gap_tables
+        },
     };
 
     // ---- serialize: the one and only pass -------------------------------
@@ -252,6 +276,14 @@ pub fn compress(coord: &Coordinator, field: &Field) -> Result<CompressedField> {
         granularity,
         chunk_counts,
         abs_eb,
+        target_gbps: cfg.target_gbps,
+        pruned: {
+            let mut p = [false; 3];
+            for (i, &a) in allowed.iter().enumerate() {
+                p[i] = !a;
+            }
+            p
+        },
         timer,
     };
     Ok(CompressedField { archive, bytes, stats })

@@ -134,11 +134,24 @@ pub fn decompress_with_threads(
         let views: Vec<&mut [u16]> = slab_codes.iter_mut().map(|v| v.as_mut_slice()).collect();
         let mut sink = SymbolSink::from_slabs(views, slab_len.max(1))?;
         if !archive.chunk_tags.is_empty() {
-            codec::chunked::decode_chunked_into(
+            codec::chunked::decode_chunked_into_with_gaps(
                 &archive.chunk_tags,
                 &archive.encoder_aux,
                 &archive.chunk_aux,
                 &archive.stream,
+                &archive.gap_tables,
+                h.dict_size,
+                threads,
+                &mut sink,
+            )?;
+        } else if h.encoder == codec::EncoderKind::Huffman && !archive.gap_tables.is_empty() {
+            // gap-tabled Huffman archive: chunks fan out across workers
+            // and each large chunk splits further across its subchunks,
+            // so even a single-chunk field saturates the thread budget
+            codec::huffman_stage::decode_into_gap(
+                &archive.encoder_aux,
+                &archive.stream,
+                &archive.gap_tables,
                 h.dict_size,
                 threads,
                 &mut sink,

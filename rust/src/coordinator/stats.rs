@@ -26,6 +26,13 @@ pub struct CompressStats {
     /// granularity this is the measured cost model's per-chunk verdict.
     pub chunk_counts: [usize; EncoderKind::ALL.len()],
     pub abs_eb: f32,
+    /// Decode-throughput budget (`--target-gbps`) this field was
+    /// compressed under; 0 when the knob was off.
+    pub target_gbps: f64,
+    /// Backends the budget pruned before `auto`'s selection argmin,
+    /// indexed by [`EncoderKind::to_tag`]; all-false when nothing was
+    /// pruned (knob off, forced encoder, or every backend met the budget).
+    pub pruned: [bool; EncoderKind::ALL.len()],
 }
 
 impl CompressStats {
@@ -53,10 +60,26 @@ impl CompressStats {
         if parts.is_empty() { "-".to_string() } else { parts.join(" ") }
     }
 
+    /// Backends the `--target-gbps` budget pruned, e.g. `huffman rle`;
+    /// `-` when nothing was pruned.
+    pub fn pruned_report(&self) -> String {
+        let parts: Vec<&str> = EncoderKind::ALL
+            .into_iter()
+            .filter(|&k| self.pruned[k.to_tag() as usize])
+            .map(|k| k.name())
+            .collect();
+        if parts.is_empty() { "-".to_string() } else { parts.join(" ") }
+    }
+
     pub fn report(&self) -> String {
+        let target = if self.target_gbps > 0.0 {
+            format!(", target {:.1} GB/s pruned {}", self.target_gbps, self.pruned_report())
+        } else {
+            String::new()
+        };
         format!(
             "original {:.2} MB -> compressed {:.2} MB  CR {:.2}x  bitrate {:.2} b/v  \
-             (encoder {} [{} granularity, chunks {}], outliers {}, verbatim {}, repr u{})\n{}",
+             (encoder {} [{} granularity, chunks {}], outliers {}, verbatim {}, repr u{}{})\n{}",
             self.original_bytes as f64 / 1e6,
             self.compressed_bytes as f64 / 1e6,
             self.compression_ratio(),
@@ -67,6 +90,7 @@ impl CompressStats {
             self.n_outliers,
             self.n_verbatim,
             self.repr_bits,
+            target,
             self.timer.report(self.original_bytes)
         )
     }

@@ -7,6 +7,17 @@ use super::CanonicalCodebook;
 use crate::util::bitio::BitWriter;
 use crate::util::pool::parallel_map_range;
 
+/// Gap-array subchunk granularity (arXiv 2201.09118): every
+/// `GAP_SUBCHUNK` symbols the deflater records the bit offset where the
+/// next subchunk starts, so inflate can fan subchunks of one chunk across
+/// threads instead of walking the whole chunk serially.
+pub const GAP_SUBCHUNK: usize = 4096;
+
+/// Per-subchunk gap table for one chunk: `(bit_offset, symbol_count)` per
+/// subchunk, in stream order. Empty when the chunk fits one subchunk (the
+/// serial decode is already optimal there).
+pub type GapTable = Vec<(u64, u32)>;
+
 /// One deflated chunk: packed words + exact bit length + symbol count.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DeflatedChunk {
@@ -65,6 +76,28 @@ pub fn deflate_one(symbols: &[u16], book: &CanonicalCodebook) -> DeflatedChunk {
     }
     let (words, bits) = w.finish();
     DeflatedChunk { words, bits, symbols: symbols.len() as u32 }
+}
+
+/// [`deflate_one`] plus a recorded gap table: the writer's bit position is
+/// sampled at every `GAP_SUBCHUNK` boundary. The emitted chunk is
+/// bit-identical to `deflate_one`'s — the table is pure metadata on the
+/// side — so archives with and without gap tables carry the same payload.
+pub fn deflate_one_gap(symbols: &[u16], book: &CanonicalCodebook) -> (DeflatedChunk, GapTable) {
+    if symbols.len() <= GAP_SUBCHUNK {
+        return (deflate_one(symbols, book), GapTable::new());
+    }
+    let mut w =
+        BitWriter::with_capacity_bits(symbols.len() * book.max_len.max(1) as usize);
+    let mut gaps = GapTable::with_capacity(symbols.len().div_ceil(GAP_SUBCHUNK));
+    for sub in symbols.chunks(GAP_SUBCHUNK) {
+        gaps.push((w.len_bits(), sub.len() as u32));
+        for &s in sub {
+            let (c, l) = book.lookup(s);
+            w.write(c, l);
+        }
+    }
+    let (words, bits) = w.finish();
+    (DeflatedChunk { words, bits, symbols: symbols.len() as u32 }, gaps)
 }
 
 /// Deflate a pre-encoded fixed-length u32 array (Table 4's second phase:
@@ -149,6 +182,26 @@ mod tests {
         let s = deflate_chunks(&syms, &book, 100, 3);
         assert_eq!(s.chunks.len(), 11);
         assert_eq!(s.chunks.last().unwrap().symbols, 1);
+    }
+
+    #[test]
+    fn gap_deflate_is_bit_identical_and_table_is_exact() {
+        let (syms, book) = setup(GAP_SUBCHUNK * 3 + 777);
+        let plain = deflate_one(&syms, &book);
+        let (gapped, gaps) = deflate_one_gap(&syms, &book);
+        assert_eq!(plain, gapped);
+        assert_eq!(gaps.len(), 4);
+        assert_eq!(gaps[0], (0, GAP_SUBCHUNK as u32));
+        assert_eq!(gaps[3].1, 777);
+        assert_eq!(gaps.iter().map(|&(_, c)| c as u64).sum::<u64>(), syms.len() as u64);
+        // each offset is exactly where a prefix deflate ends
+        for (si, &(off, _)) in gaps.iter().enumerate() {
+            let prefix = deflate_one(&syms[..si * GAP_SUBCHUNK], &book);
+            assert_eq!(off, prefix.bits, "subchunk {si}");
+        }
+        // small chunks carry no table
+        let (_, empty) = deflate_one_gap(&syms[..GAP_SUBCHUNK], &book);
+        assert!(empty.is_empty());
     }
 
     #[test]

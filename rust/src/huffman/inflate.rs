@@ -1,60 +1,53 @@
 //! Inflating: per-chunk canonical Huffman decoding (paper §3.3).
 //!
-//! Within a chunk, decoding is inherently sequential (variable-length
-//! codes are a loop-carried dependency, as the paper notes); across
-//! chunks it parallelizes coarsely. Inflate must use the chunk geometry
-//! chosen at deflate time (Table 6's constraint).
+//! Within a chunk, plain decoding is inherently sequential (variable-
+//! length codes are a loop-carried dependency, as the paper notes);
+//! across chunks it parallelizes coarsely. Inflate must use the chunk
+//! geometry chosen at deflate time (Table 6's constraint). When the
+//! archive carries a gap table ([`super::deflate::deflate_one_gap`]),
+//! [`inflate_one_gap_into_strict`] breaks the intra-chunk dependency too:
+//! subchunks resume at recorded bit offsets and decode in parallel.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::deflate::DeflatedChunk;
 use super::{DeflatedStream, ReverseCodebook};
+use crate::codec::SymbolSink;
 use crate::util::bitio::BitReader;
-use crate::util::pool::parallel_map;
 
 /// Decode an entire stream back to symbols.
 ///
-/// Chunks decode directly into disjoint slices of one output buffer (no
-/// per-chunk vectors, no concatenation copy) — chunk geometry is fixed at
-/// deflate time, so slice boundaries are known up front.
+/// Chunks decode directly into the disjoint prefix-sum windows of one
+/// output buffer — the same unsafe-free split [`SymbolSink`] hands every
+/// decoder backend — so there are no per-chunk `Mutex` slots, no per-chunk
+/// vectors, and no concatenation copy. The partition follows the chunks'
+/// own symbol counts, so irregular (hand-built) geometries need no
+/// sequential fallback either.
 pub fn inflate_chunks(stream: &DeflatedStream, rev: &ReverseCodebook, threads: usize) -> Vec<u16> {
     let total = stream.total_symbols() as usize;
-    let cs = stream.chunk_symbols.max(1);
     let mut out = vec![0u16; total];
-    // geometry check: every chunk but the last must hold exactly cs symbols
-    let regular = stream
-        .chunks
-        .iter()
-        .take(stream.chunks.len().saturating_sub(1))
-        .all(|c| c.symbols as usize == cs);
-    if !regular {
-        // irregular (hand-built) stream: fall back to sequential decode
-        let mut pos = 0usize;
-        for chunk in &stream.chunks {
-            let n = decode_chunk_into(chunk, rev, &mut out[pos..]);
-            pos += n;
-        }
-        out.truncate(pos);
-        return out;
-    }
-    let tasks: Vec<(usize, std::sync::Mutex<&mut [u16]>)> = out
-        .chunks_mut(cs)
-        .enumerate()
-        .map(|(i, s)| (i, std::sync::Mutex::new(s)))
-        .collect();
-    let counts = parallel_map(threads, &tasks, |_, (i, slot)| {
-        let mut slice = slot.lock().unwrap();
-        decode_chunk_into(&stream.chunks[*i], rev, &mut slice)
-    });
-    drop(tasks);
-    let produced: usize = counts.iter().sum();
+    let counts: Vec<AtomicUsize> = stream.chunks.iter().map(|_| AtomicUsize::new(0)).collect();
+    SymbolSink::from_slice(&mut out)
+        .fill_chunks(stream, threads, |ci, window| {
+            let n = decode_chunk_into(&stream.chunks[ci], rev, window);
+            counts[ci].store(n, Ordering::Relaxed);
+            Ok(())
+        })
+        .expect("a buffer sized to the stream total always partitions");
+    let produced: usize = counts.iter().map(|c| c.load(Ordering::Relaxed)).sum();
     if produced != total {
-        // a corrupt chunk under-produced mid-buffer: redo sequentially,
-        // compacting, so strict callers see the true (short) symbol count
-        let mut seq = vec![0u16; total];
-        let mut pos = 0usize;
-        for chunk in &stream.chunks {
-            pos += decode_chunk_into(chunk, rev, &mut seq[pos..]);
+        // One or more corrupt chunks under-produced mid-buffer. Reuse the
+        // already-decoded prefixes: compact each chunk's produced symbols
+        // forward in place instead of re-decoding the whole stream.
+        let mut write = 0usize;
+        let mut read = 0usize;
+        for (ci, chunk) in stream.chunks.iter().enumerate() {
+            let n = counts[ci].load(Ordering::Relaxed);
+            out.copy_within(read..read + n, write);
+            write += n;
+            read += chunk.symbols as usize;
         }
-        seq.truncate(pos);
-        return seq;
+        out.truncate(write);
     }
     out
 }
@@ -101,6 +94,97 @@ pub fn inflate_one_into_strict(
         );
     }
     Ok(())
+}
+
+/// Gap-array decode of one chunk (arXiv 2201.09118): the recorded
+/// per-subchunk `(bit_offset, symbol_count)` table turns the chunk's
+/// "inherently sequential" bit walk into independent subchunk decodes that
+/// fan across `threads` workers — the path that lets a *single large
+/// chunk* saturate all cores.
+///
+/// The gap table is untrusted archive input. It is validated against the
+/// chunk's own `bits`/`symbols` totals before any subchunk decodes
+/// (offsets strictly increasing from 0, in range, counts positive and
+/// summing exactly), and every subchunk decode must land exactly on the
+/// next recorded offset — so a hostile table that disagrees with the real
+/// bitstream fails cleanly, and a table that passes is *proof* the result
+/// is bit-identical to the serial walk. An absent/trivial table (or a
+/// single-thread budget) falls back to [`inflate_one_into_strict`].
+pub fn inflate_one_gap_into_strict(
+    chunk: &DeflatedChunk,
+    gaps: &[(u64, u32)],
+    rev: &ReverseCodebook,
+    out: &mut [u16],
+    threads: usize,
+) -> anyhow::Result<()> {
+    if gaps.len() <= 1 || threads <= 1 {
+        return inflate_one_into_strict(chunk, rev, out);
+    }
+    if chunk.symbols as usize != out.len() {
+        anyhow::bail!(
+            "corrupt huffman chunk: claims {} symbols for a {}-symbol window",
+            chunk.symbols,
+            out.len()
+        );
+    }
+    if chunk.bits > chunk.words.len() as u64 * 64 {
+        anyhow::bail!(
+            "corrupt huffman chunk: {} bits in {} words",
+            chunk.bits,
+            chunk.words.len()
+        );
+    }
+    let mut total = 0u64;
+    for (si, &(off, count)) in gaps.iter().enumerate() {
+        if count == 0 {
+            anyhow::bail!("corrupt gap table: subchunk {si} claims zero symbols");
+        }
+        if si == 0 && off != 0 {
+            anyhow::bail!("corrupt gap table: first subchunk starts at bit {off}");
+        }
+        if si > 0 && off <= gaps[si - 1].0 {
+            anyhow::bail!("corrupt gap table: offsets not strictly increasing at subchunk {si}");
+        }
+        if off >= chunk.bits {
+            anyhow::bail!(
+                "corrupt gap table: subchunk {si} starts at bit {off} of {}",
+                chunk.bits
+            );
+        }
+        total += count as u64;
+    }
+    if total != chunk.symbols as u64 {
+        anyhow::bail!(
+            "corrupt gap table: subchunks claim {total} symbols, chunk claims {}",
+            chunk.symbols
+        );
+    }
+    // Reuse the sink's prefix-sum partition to hand each subchunk its
+    // disjoint window of `out`; a counts-only stream drives the split.
+    let sub_stream = DeflatedStream {
+        chunks: gaps
+            .iter()
+            .map(|&(_, symbols)| DeflatedChunk { words: Vec::new(), bits: 0, symbols })
+            .collect(),
+        chunk_symbols: gaps[0].1 as usize,
+    };
+    SymbolSink::from_slice(out).fill_chunks(&sub_stream, threads, |si, window| {
+        let end = if si + 1 < gaps.len() { gaps[si + 1].0 } else { chunk.bits };
+        let mut r = BitReader::new_at(&chunk.words, chunk.bits, gaps[si].0);
+        for slot in window.iter_mut() {
+            match rev.decode(&mut r) {
+                Some(s) => *slot = s,
+                None => anyhow::bail!("corrupt huffman subchunk {si}: truncated mid-stream"),
+            }
+        }
+        if r.position() != end {
+            anyhow::bail!(
+                "corrupt gap table: subchunk {si} ends at bit {} instead of {end}",
+                r.position()
+            );
+        }
+        Ok(())
+    })
 }
 
 /// Materializing wrapper over [`inflate_one_into_strict`]. The caller
@@ -154,6 +238,102 @@ mod tests {
             let out = inflate_chunks_strict(&stream, &rev, 4).unwrap();
             assert_eq!(out, syms, "chunk {chunk}");
         }
+    }
+
+    fn gap_setup(n: usize) -> (Vec<u16>, CanonicalCodebook, ReverseCodebook) {
+        let mut rng = Rng::new(44);
+        let syms: Vec<u16> = (0..n)
+            .map(|_| ((rng.normal() * 25.0) as i32 + 512).clamp(0, 1023) as u16)
+            .collect();
+        let mut freq = vec![0u64; 1024];
+        for &s in &syms {
+            freq[s as usize] += 1;
+        }
+        let lengths = build_lengths(&freq);
+        let book = CanonicalCodebook::from_lengths(&lengths).unwrap();
+        let rev = ReverseCodebook::from_lengths(&lengths).unwrap();
+        (syms, book, rev)
+    }
+
+    #[test]
+    fn gap_decode_is_bit_identical_to_serial() {
+        use crate::huffman::deflate::{deflate_one_gap, GAP_SUBCHUNK};
+        for n in [GAP_SUBCHUNK + 1, GAP_SUBCHUNK * 4, GAP_SUBCHUNK * 7 + 123] {
+            let (syms, book, rev) = gap_setup(n);
+            let (chunk, gaps) = deflate_one_gap(&syms, &book);
+            assert!(gaps.len() > 1);
+            let mut serial = vec![0u16; n];
+            inflate_one_into_strict(&chunk, &rev, &mut serial).unwrap();
+            for threads in [1usize, 2, 4, 8] {
+                let mut gap = vec![0u16; n];
+                inflate_one_gap_into_strict(&chunk, &gaps, &rev, &mut gap, threads).unwrap();
+                assert_eq!(gap, serial, "n={n} threads={threads}");
+                assert_eq!(gap, syms);
+            }
+        }
+    }
+
+    #[test]
+    fn hostile_gap_tables_fail_cleanly() {
+        use crate::huffman::deflate::{deflate_one_gap, GAP_SUBCHUNK};
+        let (syms, book, rev) = gap_setup(GAP_SUBCHUNK * 3 + 50);
+        let (chunk, gaps) = deflate_one_gap(&syms, &book);
+        let mut out = vec![0u16; syms.len()];
+        let check = |gaps: &[(u64, u32)]| {
+            inflate_one_gap_into_strict(&chunk, gaps, &rev, &mut vec![0u16; syms.len()], 4)
+        };
+        // the honest table decodes
+        inflate_one_gap_into_strict(&chunk, &gaps, &rev, &mut out, 4).unwrap();
+
+        // offsets out of order
+        let mut bad = gaps.clone();
+        bad.swap(1, 2);
+        assert!(check(&bad).is_err());
+        // offset past chunk.bits
+        let mut bad = gaps.clone();
+        bad[2].0 = chunk.bits + 7;
+        assert!(check(&bad).is_err());
+        // first offset nonzero
+        let mut bad = gaps.clone();
+        bad[0].0 = 3;
+        assert!(check(&bad).is_err());
+        // offset nudged off a codeword boundary: end-position check trips
+        let mut bad = gaps.clone();
+        bad[1].0 += 1;
+        assert!(check(&bad).is_err());
+        // symbol counts inflated (sum mismatch)
+        let mut bad = gaps.clone();
+        bad[1].1 += 10;
+        assert!(check(&bad).is_err());
+        // counts shuffled to keep the sum but break subchunk windows
+        let mut bad = gaps.clone();
+        bad[1].1 += 10;
+        bad[2].1 -= 10;
+        assert!(check(&bad).is_err());
+        // zero-count subchunk
+        let mut bad = gaps.clone();
+        bad[2].1 = 0;
+        assert!(check(&bad).is_err());
+        // serial fallback ignores an empty table
+        inflate_one_gap_into_strict(&chunk, &[], &rev, &mut out, 4).unwrap();
+        assert_eq!(out, syms);
+    }
+
+    #[test]
+    fn corrupt_chunks_keep_already_decoded_prefixes() {
+        let (syms, book, rev) = gap_setup(4000);
+        let mut stream = deflate_chunks(&syms, &book, 500, 2);
+        // truncate chunk 5's bitstream: its decode under-produces
+        stream.chunks[5].bits = stream.chunks[5].bits.saturating_sub(40);
+        let out = inflate_chunks(&stream, &rev, 4);
+        assert!(out.len() < syms.len());
+        // chunks 0..5 decoded in place and survived compaction verbatim
+        assert_eq!(&out[..2500], &syms[..2500]);
+        // whatever chunk 5 produced is a prefix of its original symbols
+        let tail_produced = out.len() - 2500 - 1000; // chunks 6,7 (500 each) follow
+        assert_eq!(&out[2500..2500 + tail_produced], &syms[2500..2500 + tail_produced]);
+        // chunks 6 and 7 decoded fully and were compacted forward
+        assert_eq!(&out[2500 + tail_produced..], &syms[3000..]);
     }
 
     #[test]

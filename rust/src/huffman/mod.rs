@@ -13,10 +13,10 @@ pub mod inflate;
 pub mod tree;
 
 pub use codebook::{CanonicalCodebook, ReverseCodebook};
-pub use deflate::{deflate_chunks, DeflatedStream};
+pub use deflate::{deflate_chunks, deflate_one_gap, DeflatedStream, GapTable, GAP_SUBCHUNK};
 pub use encode::{encode_fixed_u32, encode_fixed_u64};
 pub use histogram::{histogram, histogram_parallel};
-pub use inflate::inflate_chunks;
+pub use inflate::{inflate_chunks, inflate_one_gap_into_strict};
 pub use tree::build_lengths;
 
 #[cfg(test)]

@@ -93,6 +93,7 @@ fn usage() -> String {
      Common options: --backend pjrt|cpu, --threads N, --chunk N,\n\
        --dict N, --repr adaptive|u32|u64, --codec huffman|fle|rle|auto,\n\
        --codec-granularity field|chunk, --lossless none|gzip|zstd,\n\
+       --target-gbps F (prune auto backends below this decode rate),\n\
        --artifacts DIR, --metrics-out PATH (cusz-metrics/v1 JSON snapshot)"
         .to_string()
 }
@@ -126,6 +127,7 @@ fn common_config(cli: &Cli) -> Result<CuszConfig> {
             },
             granularity: CodecGranularity::parse(&cli.get("codec-granularity"))?,
         },
+        target_gbps: cli.get_parsed("target-gbps")?,
         artifacts_dir: PathBuf::from(cli.get("artifacts")),
         ..Default::default()
     })
@@ -146,6 +148,12 @@ fn with_common(cli: Cli) -> Cli {
             "auto-selection grain: field (one backend) or chunk (tag table)",
         )
         .opt("lossless", "none", "final lossless stage: none|gzip|zstd")
+        .opt(
+            "target-gbps",
+            "0",
+            "decode-throughput budget in GB/s: `auto` prunes backends whose \
+             measured decode rate misses it (0 = off)",
+        )
         .opt("artifacts", "artifacts", "AOT artifact directory")
         .opt(
             "metrics-out",
@@ -686,6 +694,100 @@ fn generated_by_json(placeholder: bool) -> String {
     )
 }
 
+/// Schema-v4 `kernels` section: the gap-array parallel Huffman decode of
+/// a single-chunk stream (chunk-level parallelism pinned to zero, so all
+/// speedup comes from subchunk fan-out) timed head-to-head against the
+/// serial decode of the *same* bitstream, plus the u64-word FLE bitplane
+/// kernel. CI's bench-smoke gate reads `huffman_gap_decode.speedup` and
+/// fails the build when the gap path regresses to the serial rate on a
+/// multicore runner.
+fn bench_kernels(
+    bench: &cusz::util::bench::Bench,
+    threads: usize,
+    quick: bool,
+    seed: u64,
+) -> Result<String> {
+    use cusz::codec::{
+        huffman_stage, stage_for, EncodeContext, EncoderKind, SymbolSink, SymbolSource,
+    };
+
+    let dict = 1024usize;
+    let n: usize = if quick { 1 << 20 } else { 1 << 22 };
+    let kbytes = n * 4; // GB/s convention: original f32 bytes per symbol
+    // deterministic xorshift symbols spread over the dict
+    let mut symbols = vec![0u16; n];
+    let mut state: u64 = seed | 1;
+    for s in symbols.iter_mut() {
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        *s = (state % dict as u64) as u16;
+    }
+    let mut freq = vec![0u64; dict];
+    for &s in &symbols {
+        freq[s as usize] += 1;
+    }
+    let ctx = EncodeContext {
+        dict_size: dict,
+        chunk_symbols: n, // ONE deflate chunk: no chunk-level parallelism
+        threads,
+        codeword_repr: CodewordRepr::Adaptive,
+        freq: &freq,
+    };
+    let src = SymbolSource::from_slice(&symbols);
+    let (enc, gaps) = huffman_stage::encode_source_with_gaps(&src, &ctx)?;
+    if enc.stream.chunks.len() != 1 {
+        bail!("kernel bench stream must be a single chunk");
+    }
+    let subchunks = gaps.first().map_or(0, |g| g.len());
+
+    let mut out = vec![0u16; n];
+    let r_gap = bench.run("huffman gap-decode (single chunk)", kbytes, || {
+        let mut sink = SymbolSink::from_slice(&mut out);
+        huffman_stage::decode_into_gap(&enc.aux, &enc.stream, &gaps, dict, threads, &mut sink)
+            .unwrap();
+    });
+    if out != symbols {
+        bail!("gap decode does not match the encoded symbols");
+    }
+    out.fill(0);
+    let r_ser = bench.run("huffman serial decode (single chunk)", kbytes, || {
+        let mut sink = SymbolSink::from_slice(&mut out);
+        huffman_stage::decode_into_gap(&enc.aux, &enc.stream, &[], dict, threads, &mut sink)
+            .unwrap();
+    });
+    if out != symbols {
+        bail!("serial decode does not match the encoded symbols");
+    }
+
+    let fle = stage_for(EncoderKind::Fle);
+    let fenc = fle.encode_source(&src, &ctx)?;
+    let r_fle = bench.run("fle word-kernel decode", kbytes, || {
+        let mut sink = SymbolSink::from_slice(&mut out);
+        fle.decode_into(&fenc.aux, &fenc.stream, dict, threads, &mut sink).unwrap();
+    });
+
+    let g = |d: std::time::Duration| kbytes as f64 / d.as_secs_f64().max(1e-12) / 1e9;
+    let speedup = r_ser.mean.as_secs_f64() / r_gap.mean.as_secs_f64().max(1e-12);
+    println!(
+        "kernels: huffman gap-decode {:.3} GB/s vs serial {:.3} GB/s \
+         ({speedup:.2}x at {threads} threads, {subchunks} subchunks); \
+         fle word-kernel {:.3} GB/s",
+        g(r_gap.mean),
+        g(r_ser.mean),
+        g(r_fle.mean)
+    );
+    Ok(format!(
+        "{{\"huffman_gap_decode\": {{\"gbps\": {}, \"serial_gbps\": {}, \"speedup\": {}, \
+         \"threads\": {threads}, \"subchunks\": {subchunks}, \"symbols\": {n}}}, \
+         \"fle_word_kernel\": {{\"gbps\": {}, \"threads\": {threads}}}}}",
+        jnum(g(r_gap.mean)),
+        jnum(g(r_ser.mean)),
+        jnum(speedup),
+        jnum(g(r_fle.mean)),
+    ))
+}
+
 /// `cusz bench`: the perf trajectory tracker. Measures per-stage and
 /// end-to-end compress/decompress throughput plus compression ratio per
 /// datagen profile, and compares (a) the streaming segmented
@@ -693,10 +795,12 @@ fn generated_by_json(placeholder: bool) -> String {
 /// (two single-threaded monolithic serializations per field) and (b) the
 /// fused slab-parallel decompress pipeline against the real pre-fusion
 /// materializing path (`decompress_materializing`). Emits
-/// `BENCH_pipeline.json` (schema `cusz-bench-pipeline/v3`: per-stage
-/// GB/s, a `generated_by` host/commit stamp, and an `obs` section
-/// embedding the full cusz-metrics/v1 telemetry snapshot the run
-/// produced) so CI archives comparable numbers across PRs.
+/// `BENCH_pipeline.json` (schema `cusz-bench-pipeline/v4`: per-stage
+/// GB/s, a `kernels` section timing the gap-array parallel Huffman
+/// decode of a single-chunk stream against its serial path plus the
+/// u64-word FLE kernel, a `generated_by` host/commit stamp, and an
+/// `obs` section embedding the full cusz-metrics/v1 telemetry snapshot
+/// the run produced) so CI archives comparable numbers across PRs.
 fn cmd_bench(args: &[String]) -> Result<()> {
     use cusz::util::bench::{print_table, Bench};
 
@@ -860,18 +964,21 @@ fn cmd_bench(args: &[String]) -> Result<()> {
         &rows,
     );
 
+    let kernels_json = bench_kernels(&bench, threads, quick, seed)?;
+
     // the full telemetry snapshot rides along: every stage span, codec
     // counter, and histogram the benched pipelines recorded
     let obs_json = cusz::obs::global().snapshot().to_json();
     let json = format!(
-        "{{\n  \"schema\": \"cusz-bench-pipeline/v3\",\n  \"engine\": \"{}\",\n  \
+        "{{\n  \"schema\": \"cusz-bench-pipeline/v4\",\n  \"engine\": \"{}\",\n  \
          \"threads\": {},\n  \"quick\": {},\n  \"scale\": {},\n  \
-         \"generated_by\": {},\n  \"profiles\": [\n{}\n  ],\n  \"obs\": {}\n}}\n",
+         \"generated_by\": {},\n  \"kernels\": {},\n  \"profiles\": [\n{}\n  ],\n  \"obs\": {}\n}}\n",
         engine_name,
         threads,
         quick,
         scale,
         generated_by_json(false),
+        kernels_json,
         json_profiles.join(",\n"),
         obs_json.trim_end(),
     );

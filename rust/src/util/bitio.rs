@@ -78,6 +78,21 @@ impl<'a> BitReader<'a> {
         BitReader { words, pos_bits: 0, len_bits }
     }
 
+    /// Reader starting mid-stream at `pos_bits` — the gap-array decode
+    /// entry point, where each subchunk resumes at a recorded bit offset.
+    /// `pos_bits` is clamped to `len_bits` so a hostile offset can at
+    /// worst read nothing, never out of bounds.
+    pub fn new_at(words: &'a [u64], len_bits: u64, pos_bits: u64) -> Self {
+        debug_assert!(len_bits as usize <= words.len() * 64);
+        BitReader { words, pos_bits: pos_bits.min(len_bits), len_bits }
+    }
+
+    /// Absolute bit position from the start of the stream.
+    #[inline]
+    pub fn position(&self) -> u64 {
+        self.pos_bits
+    }
+
     #[inline]
     pub fn remaining(&self) -> u64 {
         self.len_bits - self.pos_bits
@@ -206,5 +221,26 @@ mod tests {
         let (words, bits) = BitWriter::new().finish();
         assert!(words.is_empty());
         assert_eq!(bits, 0);
+    }
+
+    #[test]
+    fn new_at_resumes_mid_stream() {
+        let mut w = BitWriter::new();
+        for i in 0..200u64 {
+            w.write(i, 11);
+        }
+        let (words, bits) = w.finish();
+        for start in [0usize, 1, 5, 63, 64, 100, 199] {
+            let mut r = BitReader::new_at(&words, bits, start as u64 * 11);
+            assert_eq!(r.position(), start as u64 * 11);
+            for i in start as u64..200 {
+                assert_eq!(r.read(11), Some(i), "resume at {start}");
+            }
+            assert_eq!(r.read(1), None);
+        }
+        // hostile offsets clamp instead of reading out of bounds
+        let mut past = BitReader::new_at(&words, bits, bits + 1000);
+        assert_eq!(past.remaining(), 0);
+        assert_eq!(past.read(1), None);
     }
 }

@@ -2,11 +2,12 @@
 """Golden-fixture generator for the archive-format compatibility corpus.
 
 Emits byte-exact legacy archives (CUSZA1 = format version 0, CUSZA2 =
-format version 1), current-generation CUSZA3 archives (format version 3:
-granularity byte, optional per-chunk tag table, and the segmented
-gzip lossless tail introduced by the zero-copy encode path), plus a
-`.cuszb` bundle, together with the exact f32 field every archive decodes
-to. `tests/format_compat.rs` decodes every fixture with the current code
+format version 1), CUSZA3 archives (format version 3: granularity byte,
+optional per-chunk tag table, and the segmented gzip lossless tail
+introduced by the zero-copy encode path), a current-generation CUSZA4
+archive (format version 4: per-chunk Huffman gap tables for subchunk-
+parallel decode), plus a `.cuszb` bundle, together with the exact f32
+field every archive decodes to. `tests/format_compat.rs` decodes every fixture with the current code
 and compares byte-for-byte — so a format bump that would orphan old (or
 current) payloads fails CI instead of shipping.
 
@@ -125,17 +126,38 @@ def expected_field(codes, outliers, verbatim):
 
 # ---------- symbol encoders (mirrors of the Rust chunk codecs) ----------
 
-def huffman_chunks(codes):
+def huffman_chunks(codes, chunk=CHUNK):
     """All-1024-symbols-at-length-10 canonical codebook: codeword of
     symbol s is s itself, emitted bit-reversed LSB-first (codebook.rs)."""
     chunks = []
-    for lo in range(0, N, CHUNK):
+    for lo in range(0, N, chunk):
         w = BitWriter()
-        for s in codes[lo:lo + CHUNK]:
+        seg = codes[lo:lo + chunk]
+        for s in seg:
             w.write(rev_bits(s, 10), 10)
         words, bits = w.finish()
-        chunks.append((words, bits, CHUNK))
+        chunks.append((words, bits, len(seg)))
     return bytes([10] * DICT), chunks
+
+
+GAP_SUBCHUNK = 4096  # mirror of huffman::GAP_SUBCHUNK
+
+
+def gap_tables_for(chunks):
+    """Mirror of deflate_one_gap's sidecar under the all-length-10
+    codebook: one (bit offset, symbol count) entry per 4096-symbol
+    subchunk; chunks at or under the granularity carry no table."""
+    tables = []
+    for _words, _bits, symbols in chunks:
+        if symbols <= GAP_SUBCHUNK:
+            tables.append([])
+            continue
+        table = []
+        for lo in range(0, symbols, GAP_SUBCHUNK):
+            n = min(GAP_SUBCHUNK, symbols - lo)
+            table.append((lo * 10, n))  # every codeword is 10 bits
+        tables.append(table)
+    return tables
 
 
 def transform(s):
@@ -189,7 +211,7 @@ def pstr(s):
 
 
 def header_bytes(version, encoder_tag, name, eb_mode, eb_value, repr_bits, lossless_tag,
-                 granularity=0):
+                 granularity=0, chunk_symbols=CHUNK):
     h = b""
     if version >= 1:
         h += struct.pack("<BB", version, encoder_tag)
@@ -200,15 +222,16 @@ def header_bytes(version, encoder_tag, name, eb_mode, eb_value, repr_bits, lossl
     h += pstr("1d_64k")                                    # variant
     h += struct.pack("<B", eb_mode) + struct.pack("<d", eb_value)
     h += struct.pack("<f", ABS_EB)
-    h += struct.pack("<III", DICT, CHUNK, repr_bits)
+    h += struct.pack("<III", DICT, chunk_symbols, repr_bits)
     h += struct.pack("<B", lossless_tag)
     h += struct.pack("<Q", 1)                              # n_slabs
     return h
 
 
-def body_bytes(aux, chunks, outliers, verbatim, version=1, chunk_tags=None, chunk_aux=None):
+def body_bytes(aux, chunks, outliers, verbatim, version=1, chunk_tags=None, chunk_aux=None,
+               chunk_symbols=CHUNK, gap_tables=None):
     b = struct.pack("<I", len(aux)) + aux
-    b += struct.pack("<II", len(chunks), CHUNK)
+    b += struct.pack("<II", len(chunks), chunk_symbols)
     for words, bits, symbols in chunks:
         b += struct.pack("<QII", bits, symbols, len(words))
         for w in words:
@@ -219,6 +242,13 @@ def body_bytes(aux, chunks, outliers, verbatim, version=1, chunk_tags=None, chun
         if tags:
             for rec in chunk_aux:
                 b += struct.pack("<B", len(rec)) + bytes(rec)
+    if version >= 4:
+        gts = gap_tables or []
+        b += struct.pack("<I", len(gts))
+        for gt in gts:
+            b += struct.pack("<I", len(gt))
+            for off, cnt in gt:
+                b += struct.pack("<QI", off, cnt)
     b += struct.pack("<Q", len(outliers))
     for pos, d in outliers:
         b += struct.pack("<Qi", pos, d)
@@ -345,6 +375,24 @@ def main():
         gzip_seg_bytes=16 * 1024,
     )
 
+    # CUSZA4 / format version 4: per-chunk Huffman gap tables. Larger
+    # 16384-symbol chunks so each chunk carries a real 4-entry table
+    # (4096-symbol chunks would record none); no lossless tail, so the
+    # Rust writer's gap-section framing is locked byte-for-byte against
+    # this independent mirror.
+    CHUNK_V4 = 16384
+    _, huff_v4 = huffman_chunks(codes, chunk=CHUNK_V4)
+    gaps_v4 = gap_tables_for(huff_v4)
+    assert all(len(t) == CHUNK_V4 // GAP_SUBCHUNK for t in gaps_v4)
+    body_huff_v4 = body_bytes(huff_aux, huff_v4, outliers, verbatim, version=4,
+                              chunk_symbols=CHUNK_V4, gap_tables=gaps_v4)
+    v4_gap = archive_bytes(
+        b"CUSZA4\x00\x00",
+        header_bytes(4, 0, "fixture/v4-huffman-gap", 0, ABS_EB, 32, 0,
+                     chunk_symbols=CHUNK_V4),
+        body_huff_v4,
+    )
+
     for name, data in [
         ("v0_huffman_none.cusza", v0),
         ("v1_huffman_gzip.cusza", v1_gz),
@@ -352,6 +400,7 @@ def main():
         ("v3_fle_none.cusza", v3_fle),
         ("v3_huffman_gzipseg.cusza", v3_gzseg),
         ("v3_mixed_gzipseg.cusza", v3_mixed),
+        ("v4_huffman_gap.cusza", v4_gap),
     ]:
         with open(os.path.join(HERE, name), "wb") as f:
             f.write(data)

@@ -1,13 +1,14 @@
 //! Golden-fixture compatibility corpus: pre-built `CUSZA1` (format
-//! version 0), `CUSZA2` (format version 1), and `CUSZA3` (format
-//! version 3: granularity byte, tag table, segmented lossless tail)
-//! archives plus a `.cuszb` bundle, committed under `tests/fixtures/`
-//! with the exact f32 field each one decodes to (see
-//! `fixtures/make_fixtures.py` for provenance).
+//! version 0), `CUSZA2` (format version 1), `CUSZA3` (format version 3:
+//! granularity byte, tag table, segmented lossless tail), and `CUSZA4`
+//! (format version 4: per-chunk Huffman gap tables) archives plus a
+//! `.cuszb` bundle, committed under `tests/fixtures/` with the exact
+//! f32 field each one decodes to (see `fixtures/make_fixtures.py` for
+//! provenance).
 //!
 //! Every fixture must keep decoding byte-for-byte under the current
 //! code, and the uncompressed ones must re-serialize to their original
-//! bytes — so a format bump (like this PR's `CUSZA3`) can never silently
+//! bytes — so a format bump (like this PR's `CUSZA4`) can never silently
 //! orphan old payloads. If one of these tests fails, the format change
 //! broke backward compatibility; fix the code, don't regenerate the
 //! fixtures.
@@ -173,8 +174,40 @@ fn v3_mixed_granularity_segmented_fixture_decodes() {
 }
 
 #[test]
+fn v4_huffman_gap_fixture_decodes_and_is_byte_stable() {
+    // format version 4: per-chunk gap tables under larger 16384-symbol
+    // chunks. No lossless tail, so the byte-stability check locks the
+    // current writer's gap-section framing against the python mirror
+    // that built the fixture — and the decode exercises the subchunk-
+    // parallel gap path end to end.
+    let a = check_fixture(
+        "v4_huffman_gap.cusza",
+        4,
+        EncoderKind::Huffman,
+        CodecGranularity::Field,
+        true,
+    );
+    assert_eq!(a.header.field_name, "fixture/v4-huffman-gap");
+    assert_eq!(a.header.chunk_symbols, 16384);
+    assert_eq!(a.gap_tables.len(), a.stream.chunks.len());
+    for (gt, chunk) in a.gap_tables.iter().zip(&a.stream.chunks) {
+        assert_eq!(gt.len(), 4, "16384-symbol chunk = four 4096-symbol subchunks");
+        assert_eq!(gt[0], (0, 4096));
+        assert_eq!(gt.iter().map(|&(_, c)| c as u64).sum::<u64>(), chunk.symbols as u64);
+    }
+    // stripping the sidecar must decode to the same bits (serial path)
+    let mut serial = a.clone();
+    serial.gap_tables = Vec::new();
+    let coord = cpu_coordinator();
+    let gap_out = coord.decompress(&a).unwrap();
+    let ser_out = coord.decompress(&serial).unwrap();
+    let bits = |d: &[f32]| d.iter().map(|v| v.to_bits()).collect::<Vec<u32>>();
+    assert_eq!(bits(&gap_out.data), bits(&ser_out.data));
+}
+
+#[test]
 fn all_fixture_archives_decode_to_the_same_field() {
-    // six encodings of one field: their symbol streams must agree
+    // seven encodings of one field: their symbol streams must agree
     let coord = cpu_coordinator();
     let mut decoded = Vec::new();
     for name in [
@@ -184,6 +217,7 @@ fn all_fixture_archives_decode_to_the_same_field() {
         "v3_fle_none.cusza",
         "v3_huffman_gzipseg.cusza",
         "v3_mixed_gzipseg.cusza",
+        "v4_huffman_gap.cusza",
     ] {
         let archive = Archive::from_bytes(&std::fs::read(fixture_path(name)).unwrap()).unwrap();
         decoded.push(coord.decompress(&archive).unwrap().data);
@@ -216,7 +250,7 @@ fn legacy_bundle_opens_and_decodes() {
 }
 
 #[test]
-fn current_writer_emits_cusza3_while_fixtures_stay_readable() {
+fn current_writer_emits_cusza4_while_fixtures_stay_readable() {
     // one coordinator handles both generations: fresh archives carry the
     // new magic, fixtures keep decoding beside them
     let coord = cpu_coordinator();

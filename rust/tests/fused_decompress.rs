@@ -169,6 +169,45 @@ fn hostile_outlier_and_verbatim_channels_fail_cleanly() {
     assert!(coord.decompress(&a).is_err(), "cross-slab unsorted verbatim");
 }
 
+/// The gap-array acceptance shape: ONE deflate chunk covering the whole
+/// field, so chunk-level parallelism is zero and only the gap-table
+/// subchunk fan-out can use the thread budget. The decode must stay
+/// bit-identical to the serial path at every budget.
+#[test]
+fn single_chunk_gap_decode_is_thread_invariant() {
+    let n = 1 << 16; // one 1d_64k slab = one 64k-symbol deflate chunk
+    let field = spiky_field(n, 5);
+    let mk = |threads: usize| {
+        Coordinator::new(CuszConfig {
+            backend: BackendKind::Cpu,
+            eb: ErrorBound::Abs(EB as f64),
+            chunk_symbols: n,
+            threads,
+            ..Default::default()
+        })
+        .unwrap()
+    };
+    let c1 = mk(1);
+    let bytes = c1.compress_encoded(&field).unwrap().bytes;
+    let archive = Archive::from_bytes(&bytes).unwrap();
+    assert_eq!(archive.stream.chunks.len(), 1, "field must be one deflate chunk");
+    assert_eq!(archive.gap_tables.len(), 1, "the chunk must carry a gap table");
+    assert_eq!(archive.gap_tables[0].len(), n / cusz::huffman::GAP_SUBCHUNK);
+    let bits = |f: &Field| f.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+    let (f1, s1) = c1.decompress_with_stats(&archive).unwrap();
+    assert_eq!(s1.threads, 1);
+    for threads in [2usize, 8] {
+        let (ft, st) = mk(threads).decompress_with_stats(&archive).unwrap();
+        assert_eq!(st.threads, threads);
+        assert_eq!(bits(&f1), bits(&ft), "threads 1 vs {threads}");
+    }
+    // a gap-stripped copy (the pure serial path) agrees bit for bit
+    let mut serial = archive.clone();
+    serial.gap_tables = Vec::new();
+    let (fs, _) = mk(8).decompress_with_stats(&serial).unwrap();
+    assert_eq!(bits(&f1), bits(&fs), "gap vs serial decode");
+}
+
 /// The serve-side drain hands its per-job thread budget to the fused
 /// pass; a budget of 1 must behave exactly like any other (already
 /// covered above) and the stats must report what actually ran.

@@ -412,6 +412,107 @@ fn prop_chunk_tag_and_sidecar_corruption_fails_cleanly() {
 }
 
 #[test]
+fn prop_gap_decode_matches_serial_bit_for_bit() {
+    use cusz::codec::{CodecGranularity, CodecSpec, EncoderChoice};
+    use cusz::config::LosslessStage;
+
+    check("gap-array parallel decode == serial decode", |rng| {
+        // chunks well past GAP_SUBCHUNK so real gap tables are recorded
+        let n = gen::usize_in(rng, 10_000, 90_000);
+        let scale = *gen::pick(rng, &[1e-2f32, 1.0]);
+        let data = gen::f32_vec(rng, n, scale);
+        let field = Field::new("gap", vec![n], data).unwrap();
+        let encoder = *gen::pick(rng, &[EncoderChoice::Huffman, EncoderChoice::Auto]);
+        let granularity = *gen::pick(rng, &[CodecGranularity::Field, CodecGranularity::Chunk]);
+        let chunk_symbols = *gen::pick(rng, &[8192usize, 16384, 65536]);
+        let mk = |threads: usize| {
+            Coordinator::new(CuszConfig {
+                backend: BackendKind::Cpu,
+                eb: ErrorBound::Abs(1e-2 * scale as f64),
+                chunk_symbols,
+                threads,
+                codec: CodecSpec { encoder, granularity, lossless: LosslessStage::None },
+                ..Default::default()
+            })
+            .unwrap()
+        };
+        let archive = mk(0).compress(&field).map_err(|e| e.to_string())?;
+        if encoder == EncoderChoice::Huffman && archive.gap_tables.is_empty() {
+            return Err("forced huffman with large chunks recorded no gap tables".into());
+        }
+        // the wire roundtrip preserves the gap sidecar exactly
+        let restored = cusz::container::Archive::from_bytes(&archive.to_bytes())
+            .map_err(|e| e.to_string())?;
+        if restored.gap_tables != archive.gap_tables {
+            return Err("gap tables changed across serialization".into());
+        }
+        let coord = mk(*gen::pick(rng, &[2usize, 4, 8]));
+        let gap_out = coord.decompress(&restored).map_err(|e| e.to_string())?;
+        // strip the sidecar: the serial path must produce the same bits
+        let mut serial = restored;
+        serial.gap_tables = Vec::new();
+        let serial_out = coord.decompress(&serial).map_err(|e| e.to_string())?;
+        let bits = |f: &Field| f.data.iter().map(|v| v.to_bits()).collect::<Vec<u32>>();
+        if bits(&gap_out) != bits(&serial_out) {
+            return Err(format!("{encoder:?}/{granularity:?}: gap and serial decodes differ"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hostile_gap_tables_fail_cleanly() {
+    // big chunks so every archive carries a real multi-entry gap table
+    let coord = Coordinator::new(CuszConfig {
+        backend: BackendKind::Cpu,
+        eb: ErrorBound::Abs(1e-2),
+        chunk_symbols: 16384,
+        ..Default::default()
+    })
+    .unwrap();
+
+    check("corrupt gap sidecars error, never panic", |rng| {
+        let n = gen::usize_in(rng, 20_000, 70_000);
+        let data = gen::f32_vec(rng, n, 1.0);
+        let field = Field::new("hostile-gap", vec![n], data).unwrap();
+        let archive = coord.compress(&field).map_err(|e| e.to_string())?;
+        if archive.gap_tables.is_empty() || archive.gap_tables[0].len() < 2 {
+            return Err("expected a multi-entry gap table".into());
+        }
+        // sanity: the untouched archive decodes
+        coord.decompress(&archive).map_err(|e| e.to_string())?;
+
+        // the offset table is untrusted input: every structural lie must
+        // be rejected before any subchunk decodes — no panic, no output
+        let mut a = archive.clone();
+        let k = a.gap_tables[0].len();
+        let which = rng.below(6);
+        match which {
+            0 => a.gap_tables[0][0].0 = 1,              // first offset not 0
+            1 => a.gap_tables[0][k - 1].0 = u64::MAX,   // offset past the bitstream
+            2 => a.gap_tables[0].swap(0, 1),            // offsets out of order
+            3 => a.gap_tables[0][k - 1].1 = u32::MAX,   // inflated symbol count
+            4 => a.gap_tables.push(Vec::new()),         // cardinality mismatch
+            _ => a.gap_tables[0][k - 1].1 = 0,          // zero-symbol subchunk
+        }
+        if coord.decompress(&a).is_ok() {
+            return Err(format!("gap mutation {which} decoded successfully"));
+        }
+        // and through the byte path: the parser either rejects the frame
+        // outright or hands the decoder a table it then rejects
+        match cusz::container::Archive::from_bytes(&a.to_bytes()) {
+            Err(_) => {}
+            Ok(r) => {
+                if coord.decompress(&r).is_ok() {
+                    return Err(format!("gap mutation {which} decoded from bytes"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_store_open_rejects_corrupt_index() {
     use cusz::store::Store;
 
