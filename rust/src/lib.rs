@@ -91,4 +91,5 @@ pub use config::{CuszConfig, ErrorBound};
 pub use coordinator::{CompressedField, Coordinator};
 pub use field::Field;
 pub use serve::{BatchCompressor, BatchConfig, BatchDecompressor, DrainStats, ServiceStats};
+pub use serve::{Daemon, DaemonConfig, DaemonHandle, DaemonStats, LoadReport, LoadgenConfig};
 pub use store::Store;

@@ -51,6 +51,7 @@ fn main() {
         "selftest" => cmd_selftest(rest),
         "store" => cmd_store(rest),
         "serve" => cmd_serve(rest),
+        "loadgen" => cmd_loadgen(rest),
         "bench" => cmd_bench(rest),
         "--help" | "-h" | "help" => {
             println!("{}", usage());
@@ -86,6 +87,16 @@ fn usage() -> String {
        serve       --batch --store B.cuszb --dataset D [--count N]\n\
                    [--workers W] [--queue N] [--shards N]\n\
                    [--compact-threshold F]\n\
+       serve       --daemon --store B.cuszb [--addr HOST:PORT]\n\
+                   [--workers W] [--queue N] [--max-conns N]\n\
+                   [--read-timeout-ms N] [--write-timeout-ms N]\n\
+                   [--max-body-mb N] — long-running TCP front end\n\
+                   (length-prefixed frames; see README 'Serving')\n\
+       loadgen     [--addr HOST:PORT] [--clients N] [--requests N]\n\
+                   [--put-ratio F] [--pattern steady|bursty|diurnal]\n\
+                   [--elems N] [--pace-us N] [--quick] [--shutdown]\n\
+                   [--out BENCH_serve.json] — drive a running daemon,\n\
+                   emit p50/p95/p99 + throughput (cusz-bench-serve/v1)\n\
        bench       [--out BENCH_pipeline.json] [--datasets d1,d2,..]\n\
                    [--scale N] [--quick] — machine-readable pipeline\n\
                    throughput/ratio report (per-stage GB/s, e2e, CR)\n\
@@ -593,22 +604,37 @@ fn cmd_store_rm(args: &[String]) -> Result<()> {
 
 fn cmd_serve(args: &[String]) -> Result<()> {
     let cli = with_common(Cli::new("cusz serve", "batched streaming compression service"))
-        .flag("batch", "batch mode: drain a finite field stream (required)")
+        .flag("batch", "batch mode: drain a finite field stream")
+        .flag("daemon", "daemon mode: long-running TCP front end (README 'Serving')")
         .req("store", "output .cuszb bundle (created if absent)")
         .opt("shards", "4", "shard count when creating the bundle")
-        .req("dataset", "hacc|cesm|hurricane|nyx|qmcpack")
-        .opt("count", "8", "number of fields to stream")
-        .opt("seed", "42", "base generator seed")
+        .opt("dataset", "", "hacc|cesm|hurricane|nyx|qmcpack (required with --batch)")
+        .opt("count", "8", "number of fields to stream (batch mode)")
+        .opt("seed", "42", "base generator seed (batch mode)")
         .opt("workers", "0", "concurrent compression jobs (0 = all cores)")
-        .opt("queue", "4", "bounded queue depth between stages")
+        .opt("queue", "4", "bounded job-queue depth (daemon: full queue sheds BUSY)")
         .opt(
             "compact-threshold",
             "0",
             "auto-compact after the drain when dead bytes exceed this fraction of live bytes (0 = off)",
         )
+        .opt("addr", "127.0.0.1:9599", "daemon listen address")
+        .opt("max-conns", "64", "daemon concurrent-connection cap (excess sheds BUSY)")
+        .opt("read-timeout-ms", "10000", "daemon per-connection read timeout")
+        .opt("write-timeout-ms", "10000", "daemon per-connection write timeout")
+        .opt("max-body-mb", "64", "daemon wire-frame body limit in MB")
         .parse(args)?;
+    if cli.has_flag("daemon") {
+        if cli.has_flag("batch") {
+            bail!("--batch and --daemon are mutually exclusive");
+        }
+        return serve_daemon(&cli);
+    }
     if !cli.has_flag("batch") {
-        bail!("only --batch mode is implemented (a finite stream drained to completion)");
+        bail!("pick a mode: --batch (finite stream) or --daemon (socket front end)");
+    }
+    if cli.get("dataset").is_empty() {
+        bail!("--batch requires --dataset");
     }
     let mut cfg = common_config(&cli)?;
     // Job-level concurrency comes from the batch layer; keep each job's
@@ -663,6 +689,101 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     println!("{}", stats.report());
     println!("store: {} ({} fields)", cli.get("store"), store.len());
     write_metrics_snapshot(&cli)
+}
+
+/// `cusz serve --daemon`: bind the socket front end over a writable
+/// store and block until a drain (SIGTERM/SIGINT, wire `SHUTDOWN`)
+/// completes, then print the final stats and metrics snapshot.
+fn serve_daemon(cli: &Cli) -> Result<()> {
+    let mut cfg = common_config(cli)?;
+    // per-job parallelism is split across the daemon's worker pool; keep
+    // each job narrow by default, same discipline as the batch path
+    if cfg.threads == 0 {
+        cfg.threads = 2;
+    }
+    let coord = std::sync::Arc::new(Coordinator::new_with_fallback(cfg)?);
+    let store = Store::open_or_create(cli.get("store"), cli.get_parsed("shards")?)?;
+    let read_ms: u64 = cli.get_parsed("read-timeout-ms")?;
+    let write_ms: u64 = cli.get_parsed("write-timeout-ms")?;
+    let max_body_mb: usize = cli.get_parsed("max-body-mb")?;
+    let dcfg = cusz::serve::DaemonConfig {
+        workers: cli.get_parsed("workers")?,
+        queue_depth: cli.get_parsed("queue")?,
+        max_connections: cli.get_parsed("max-conns")?,
+        read_timeout: std::time::Duration::from_millis(read_ms),
+        write_timeout: std::time::Duration::from_millis(write_ms),
+        limits: cusz::serve::Limits {
+            max_body_bytes: max_body_mb.saturating_mul(1 << 20),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    cusz::serve::install_signal_drain();
+    let handle = cusz::serve::Daemon::spawn(coord.clone(), store, cli.get("addr"), dcfg)?;
+    println!(
+        "engine: {}  daemon listening on {}  (SIGTERM or wire SHUTDOWN drains)",
+        coord.engine_name(),
+        handle.addr()
+    );
+    let stats = handle.wait()?;
+    println!("{}", stats.report());
+    write_metrics_snapshot(cli)
+}
+
+/// `cusz loadgen`: drive a running daemon with mixed put/get traffic and
+/// write the `cusz-bench-serve/v1` report.
+fn cmd_loadgen(args: &[String]) -> Result<()> {
+    let cli = Cli::new("cusz loadgen", "mixed put/get traffic generator for the serve daemon")
+        .opt("addr", "127.0.0.1:9599", "daemon address")
+        .opt("clients", "8", "simulated clients (one thread + persistent connection each)")
+        .opt("requests", "256", "total requests across all clients")
+        .opt("put-ratio", "0.5", "fraction of requests that are PUTs")
+        .opt("pattern", "steady", "arrival pattern: steady|bursty|diurnal")
+        .opt("elems", "65536", "elements per generated field (4 bytes each)")
+        .opt("pace-us", "0", "base inter-arrival delay per client in microseconds (0 = closed loop)")
+        .opt("seed", "42", "workload seed")
+        .opt("out", "BENCH_serve.json", "report path, empty to skip (cusz-bench-serve/v1)")
+        .flag("quick", "CI smoke sizing: 4 clients, 96 requests, 16k elems")
+        .flag("shutdown", "send a wire SHUTDOWN to the daemon after the run")
+        .parse(args)?;
+    let pace_us: u64 = cli.get_parsed("pace-us")?;
+    let mut lcfg = cusz::serve::LoadgenConfig {
+        addr: cli.get("addr"),
+        clients: cli.get_parsed("clients")?,
+        requests: cli.get_parsed("requests")?,
+        put_ratio: cli.get_parsed("put-ratio")?,
+        pattern: cusz::serve::ArrivalPattern::parse(&cli.get("pattern"))?,
+        elems: cli.get_parsed("elems")?,
+        pace: std::time::Duration::from_micros(pace_us),
+        seed: cli.get_parsed("seed")?,
+        ..Default::default()
+    };
+    if cli.has_flag("quick") {
+        lcfg.clients = 4;
+        lcfg.requests = 96;
+        lcfg.elems = 16384;
+    }
+    let report = cusz::serve::loadgen::run(&lcfg)?;
+    println!("{}", report.report());
+    let out = cli.get("out");
+    if !out.is_empty() {
+        std::fs::write(&out, report.to_json()).with_context(|| format!("writing {out}"))?;
+        println!("wrote {out}");
+    }
+    if cli.has_flag("shutdown") {
+        let mut client =
+            cusz::serve::Client::connect(&lcfg.addr, lcfg.read_timeout, lcfg.write_timeout)?;
+        client.shutdown_server()?;
+        println!("sent shutdown to {}", lcfg.addr);
+    }
+    if report.put.failed + report.get.failed > 0 {
+        bail!(
+            "loadgen saw {} failed puts and {} failed gets",
+            report.put.failed,
+            report.get.failed
+        );
+    }
+    Ok(())
 }
 
 fn bench_field_name(ds: Dataset) -> &'static str {

@@ -67,6 +67,21 @@ pub mod keys {
     // Queue-depth counter pair: depth = enqueued - dequeued.
     pub const SERVE_QUEUE_ENQUEUED: &str = "serve.queue.enqueued";
     pub const SERVE_QUEUE_DEQUEUED: &str = "serve.queue.dequeued";
+
+    // Serve daemon (`cusz serve --daemon`): per-request spans, latency
+    // histograms, and admission-control counters.
+    pub const SERVE_DAEMON_PUT: &str = "serve.daemon.put";
+    pub const SERVE_DAEMON_GET: &str = "serve.daemon.get";
+    pub const HIST_DAEMON_PUT_NS: &str = "serve.daemon.put_ns";
+    pub const HIST_DAEMON_GET_NS: &str = "serve.daemon.get_ns";
+    pub const SERVE_DAEMON_CONNECTIONS: &str = "serve.daemon.connections";
+    pub const SERVE_DAEMON_REQUESTS: &str = "serve.daemon.requests";
+    /// Admissions refused (queue full or connection cap) with `BUSY`.
+    pub const SERVE_DAEMON_SHED: &str = "serve.daemon.shed";
+    pub const SERVE_DAEMON_ERRORS: &str = "serve.daemon.errors";
+    // Daemon job-queue depth pair: depth = enqueued - dequeued.
+    pub const SERVE_DAEMON_QUEUE_ENQUEUED: &str = "serve.daemon.queue.enqueued";
+    pub const SERVE_DAEMON_QUEUE_DEQUEUED: &str = "serve.daemon.queue.dequeued";
 }
 
 /// Process-wide registry of counters, stage aggregates, and histograms.

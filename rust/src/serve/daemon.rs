@@ -1,0 +1,657 @@
+//! `cusz serve --daemon`: the long-running socket front end over the
+//! batch-serving machinery — persistent TCP connections speaking the
+//! [`super::wire`] frame protocol, a bounded job queue feeding a shared
+//! worker pool, and a graceful drain that finishes every accepted job
+//! before the process exits.
+//!
+//! ## Thread architecture
+//!
+//! ```text
+//! acceptor (1)        non-blocking accept + 5ms shutdown poll; sheds
+//!                     connections above `max_connections` with BUSY
+//! connection (<=N)    one per live client: parse frame -> try_send job
+//!                     -> await its reply channel -> write response
+//! worker (W)          shared pool draining the bounded job queue:
+//!                     compress+store (PUT) or load+decompress (GET)
+//! ```
+//!
+//! ## Admission control and overload
+//!
+//! The job queue is a `sync_channel(queue_depth)`; connection threads
+//! submit with `try_send`, so a full queue is an immediate `BUSY`
+//! response — the daemon never buffers unbounded work and never blocks a
+//! connection behind another client's backlog. Once a job is accepted
+//! (enqueued), it is never dropped: the connection thread waits on the
+//! job's reply channel, so a connection cannot close (and the drain
+//! cannot finish) before every accepted job has been processed and,
+//! for PUTs, committed to the store.
+//!
+//! ## Graceful drain
+//!
+//! `SIGTERM`/`SIGINT` (via [`install_signal_drain`]), a wire `SHUTDOWN`
+//! frame, or [`DaemonHandle::trigger_drain`] all set one flag. The
+//! acceptor stops accepting and closes the listener; connection threads
+//! close as soon as their in-flight request is answered (idle ones
+//! within one read-timeout); dropping the master job sender lets the
+//! workers drain the remaining queue and exit; stats are finalized last.
+//! Every job whose `OK` a client saw is durable in the store.
+//!
+//! ## Failure containment
+//!
+//! Worker jobs run under [`super::contain_panic`]: a panicking or
+//! poisoned job becomes a per-request `SERVER_ERROR` response, never a
+//! dead worker or a wedged drain. A poisoned store lock is likewise a
+//! per-request error — the daemon stays up.
+
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::container::Archive;
+use crate::coordinator::{CompressStats, Coordinator};
+use crate::field::Field;
+use crate::obs::{self, keys};
+use crate::store::Store;
+use crate::util::pool;
+
+use super::wire::{self, RawResponse, Request, Status, WireError};
+use super::{contain_panic, ServiceStats};
+
+/// Process-global drain flag, set by the signal handler installed with
+/// [`install_signal_drain`]. Checked by every daemon's acceptor loop.
+static SIGNAL_DRAIN: AtomicBool = AtomicBool::new(false);
+
+/// Install a `SIGTERM`/`SIGINT` handler that requests a graceful drain
+/// (async-signal-safe: one atomic store). Called by the `cusz serve
+/// --daemon` CLI path; library embedders and tests use
+/// [`DaemonHandle::trigger_drain`] instead. No-op off Unix.
+pub fn install_signal_drain() {
+    #[cfg(unix)]
+    {
+        unsafe extern "C" fn on_signal(_sig: i32) {
+            SIGNAL_DRAIN.store(true, Ordering::SeqCst);
+        }
+        // minimal in-tree libc binding: the return value (previous
+        // handler) is pointer-sized and unused
+        extern "C" {
+            fn signal(signum: i32, handler: unsafe extern "C" fn(i32)) -> usize;
+        }
+        const SIGINT: i32 = 2;
+        const SIGTERM: i32 = 15;
+        unsafe {
+            signal(SIGTERM, on_signal);
+            signal(SIGINT, on_signal);
+        }
+    }
+}
+
+/// Whether a process-level drain signal has been received.
+pub fn drain_requested() -> bool {
+    SIGNAL_DRAIN.load(Ordering::SeqCst)
+}
+
+/// Daemon tuning. Defaults suit tests and smoke runs; the CLI maps its
+/// flags onto every field except the `fault_*` hooks, which exist only
+/// for the fault-injection test battery.
+#[derive(Debug, Clone)]
+pub struct DaemonConfig {
+    /// Worker threads draining the job queue (0 = one per core).
+    pub workers: usize,
+    /// Bounded job-queue depth; a full queue sheds with `BUSY`.
+    pub queue_depth: usize,
+    /// Concurrent connections; excess connects are answered `BUSY` and
+    /// dropped without a handler thread.
+    pub max_connections: usize,
+    /// Per-connection socket read timeout (bounds slow-loris writers and
+    /// idle connections; also the drain-latency bound for idle conns).
+    pub read_timeout: Duration,
+    /// Per-connection socket write timeout (bounds unread responses).
+    pub write_timeout: Duration,
+    /// Wire-parser allocation bounds.
+    pub limits: wire::Limits,
+    /// Test-only fault injection: a PUT under this name panics inside
+    /// the worker (proves panic containment end to end).
+    pub fault_panic_name: Option<String>,
+    /// Test-only fault injection: every PUT sleeps this long before
+    /// compressing (makes overload and drain races deterministic).
+    pub fault_put_delay: Option<Duration>,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> Self {
+        DaemonConfig {
+            workers: 0,
+            queue_depth: 8,
+            max_connections: 64,
+            read_timeout: Duration::from_secs(10),
+            write_timeout: Duration::from_secs(10),
+            limits: wire::Limits::default(),
+            fault_panic_name: None,
+            fault_put_delay: None,
+        }
+    }
+}
+
+/// Aggregate daemon statistics, finalized when the drain completes. The
+/// PUT side is a full [`ServiceStats`] (same per-job absorption as the
+/// batch path), so `latency_percentiles`, encoder tallies, and the rest
+/// of the service-level readout apply unchanged.
+#[derive(Debug, Clone, Default)]
+pub struct DaemonStats {
+    /// Connections accepted (including ones shed at the connection cap).
+    pub connections: usize,
+    /// Request frames parsed across all connections.
+    pub requests: usize,
+    /// Compress-side aggregate (jobs, bytes, per-job latency, errors).
+    pub put: ServiceStats,
+    /// Successful GETs.
+    pub gets: usize,
+    /// GETs that failed (read, CRC, or decode error) — not-found excluded.
+    pub gets_failed: usize,
+    /// GETs for names not in the store.
+    pub gets_not_found: usize,
+    /// Restored (decompressed) bytes served by successful GETs.
+    pub restored_bytes: usize,
+    /// Per-GET wall nanoseconds, completion order (successful only).
+    pub get_ns: Vec<u64>,
+    /// Jobs/connections shed by admission control (full queue or
+    /// connection cap).
+    pub shed: usize,
+    /// Frames rejected as malformed.
+    pub bad_requests: usize,
+    /// Worker threads the daemon ran with.
+    pub workers: usize,
+    /// Listener-open to drain-complete wall time.
+    pub wall_seconds: f64,
+}
+
+impl DaemonStats {
+    /// GET latency (p50, p95, p99) in milliseconds over the recorded
+    /// samples. `None` until a GET completes.
+    pub fn get_latency_percentiles(&self) -> Option<(f64, f64, f64)> {
+        if self.get_ns.is_empty() {
+            return None;
+        }
+        let mut v = self.get_ns.clone();
+        v.sort_unstable();
+        Some((
+            super::percentile_ms(&v, 0.50),
+            super::percentile_ms(&v, 0.95),
+            super::percentile_ms(&v, 0.99),
+        ))
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "daemon: {} connections, {} requests, shed {}, bad {}  \
+             (workers {}, wall {:.3}s)",
+            self.connections,
+            self.requests,
+            self.shed,
+            self.bad_requests,
+            self.workers,
+            self.wall_seconds,
+        );
+        s.push_str(&format!(
+            "\ngets: {} ok / {} failed / {} not found  {:.2} MB restored",
+            self.gets,
+            self.gets_failed,
+            self.gets_not_found,
+            self.restored_bytes as f64 / 1e6,
+        ));
+        if let Some((p50, p95, p99)) = self.get_latency_percentiles() {
+            s.push_str(&format!("  latency ms  p50 {p50:.3}  p95 {p95:.3}  p99 {p99:.3}"));
+        }
+        s.push_str(&format!("\nputs: {}", self.put.report()));
+        s
+    }
+}
+
+/// One accepted job. The reply channel has depth 1, so worker sends
+/// never block; a connection that died mid-wait just drops the receiver
+/// and the send is ignored (the job's effect — a store commit — stands).
+enum Job {
+    Put { field: Field, reply: SyncSender<RawResponse> },
+    Get { name: String, reply: SyncSender<RawResponse> },
+}
+
+struct Shared {
+    coord: Arc<Coordinator>,
+    store: Mutex<Store>,
+    cfg: DaemonConfig,
+    /// Effective worker count (`cfg.workers` with 0 resolved to cores).
+    workers: usize,
+    /// Per-job internal thread budget (machine threads split across the
+    /// worker pool, same oversubscription discipline as the batch drain).
+    job_threads: usize,
+    shutdown: AtomicBool,
+    active_conns: AtomicUsize,
+    stats: Mutex<DaemonStats>,
+    started: Instant,
+}
+
+impl Shared {
+    fn draining(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst) || drain_requested()
+    }
+
+    /// Stats under a poison-tolerant lock: a panic while holding the
+    /// stats mutex must not turn every later request into an error.
+    fn stats_mut(&self) -> MutexGuard<'_, DaemonStats> {
+        self.stats.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+}
+
+/// Spawner for the daemon. `Daemon::spawn` binds, starts the worker pool
+/// and acceptor, and returns a [`DaemonHandle`]; the daemon then runs
+/// until a drain is triggered.
+pub struct Daemon;
+
+/// Handle to a running daemon: its bound address, a drain trigger, and
+/// `wait`/`shutdown` to join it and collect the final [`DaemonStats`].
+pub struct DaemonHandle {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    acceptor: JoinHandle<()>,
+}
+
+impl DaemonHandle {
+    /// The bound listen address (resolves `:0` ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Request a graceful drain (idempotent, non-blocking).
+    pub fn trigger_drain(&self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// Block until the daemon has fully drained, then return its stats.
+    pub fn wait(self) -> Result<DaemonStats> {
+        self.acceptor.join().map_err(|_| anyhow!("daemon acceptor thread panicked"))?;
+        let stats = self.shared.stats_mut().clone();
+        Ok(stats)
+    }
+
+    /// Trigger a drain and wait for it to complete.
+    pub fn shutdown(self) -> Result<DaemonStats> {
+        self.trigger_drain();
+        self.wait()
+    }
+}
+
+impl Daemon {
+    /// Bind `addr`, start `cfg.workers` job workers and the acceptor,
+    /// and return immediately. The daemon owns `store` (single-writer
+    /// lock semantics carry over) and shares `coord` across workers.
+    pub fn spawn(
+        coord: Arc<Coordinator>,
+        store: Store,
+        addr: impl ToSocketAddrs,
+        cfg: DaemonConfig,
+    ) -> Result<DaemonHandle> {
+        let listener = TcpListener::bind(addr).context("binding daemon listener")?;
+        let local = listener.local_addr().context("resolving daemon listen address")?;
+        // non-blocking accept so the loop can poll the drain flag
+        listener.set_nonblocking(true).context("setting listener non-blocking")?;
+
+        let workers = pool::effective_threads(cfg.workers);
+        let job_threads = (coord.cfg.effective_threads() / workers).max(1);
+        let (job_tx, job_rx) = pool::bounded::<Job>(cfg.queue_depth.max(1));
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let shared = Arc::new(Shared {
+            coord,
+            store: Mutex::new(store),
+            cfg,
+            workers,
+            job_threads,
+            shutdown: AtomicBool::new(false),
+            active_conns: AtomicUsize::new(0),
+            stats: Mutex::new(DaemonStats::default()),
+            started: Instant::now(),
+        });
+
+        let mut worker_handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let shared = Arc::clone(&shared);
+            let rx = Arc::clone(&job_rx);
+            let handle = std::thread::Builder::new()
+                .name(format!("daemon-worker-{w}"))
+                .spawn(move || worker_loop(&shared, &rx))
+                .context("spawning daemon worker")?;
+            // on a partial spawn failure the already-running workers exit
+            // when job_tx is dropped by the error return below
+            worker_handles.push(handle);
+        }
+
+        let acceptor = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("daemon-accept".into())
+                .spawn(move || {
+                    accept_loop(&shared, listener, job_tx, worker_handles);
+                })
+                .context("spawning daemon acceptor")?
+        };
+
+        Ok(DaemonHandle { addr: local, shared, acceptor })
+    }
+}
+
+/// The acceptor owns the listener, every connection handle, and the
+/// master job sender; its exit sequence IS the drain protocol (see the
+/// module docs).
+fn accept_loop(
+    shared: &Arc<Shared>,
+    listener: TcpListener,
+    job_tx: SyncSender<Job>,
+    worker_handles: Vec<JoinHandle<()>>,
+) {
+    let mut conn_handles: Vec<JoinHandle<()>> = Vec::new();
+    while !shared.draining() {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                shared.stats_mut().connections += 1;
+                obs::global().add(keys::SERVE_DAEMON_CONNECTIONS, 1);
+                if shared.active_conns.load(Ordering::Acquire) >= shared.cfg.max_connections {
+                    shed_connection(shared, stream, "connection limit reached");
+                    continue;
+                }
+                shared.active_conns.fetch_add(1, Ordering::AcqRel);
+                let conn_shared = Arc::clone(shared);
+                let conn_tx = job_tx.clone();
+                let spawned = std::thread::Builder::new().name("daemon-conn".into()).spawn(
+                    move || {
+                        handle_connection(&conn_shared, &conn_tx, stream);
+                        conn_shared.active_conns.fetch_sub(1, Ordering::AcqRel);
+                    },
+                );
+                match spawned {
+                    Ok(h) => conn_handles.push(h),
+                    Err(_) => {
+                        // closure (and stream) dropped: client sees EOF;
+                        // count it as shed so overload is visible
+                        shared.active_conns.fetch_sub(1, Ordering::AcqRel);
+                        shared.stats_mut().shed += 1;
+                        obs::global().add(keys::SERVE_DAEMON_SHED, 1);
+                    }
+                }
+                // reap finished handlers so the vec stays bounded by the
+                // live-connection cap
+                conn_handles.retain(|h| !h.is_finished());
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+    // Drain: close the listener first (new connects are refused), then
+    // wait for every connection to finish its in-flight request.
+    drop(listener);
+    for h in conn_handles {
+        let _ = h.join();
+    }
+    // All producers gone: dropping the master sender lets workers finish
+    // whatever is still queued and exit.
+    drop(job_tx);
+    for h in worker_handles {
+        let _ = h.join();
+    }
+    let wall = shared.started.elapsed().as_secs_f64();
+    let mut stats = shared.stats_mut();
+    stats.wall_seconds = wall;
+    stats.workers = shared.workers;
+    stats.put.wall_seconds = wall;
+    stats.put.workers = shared.workers;
+}
+
+/// Answer an over-capacity connection with `BUSY` and drop it.
+fn shed_connection(shared: &Arc<Shared>, mut stream: TcpStream, msg: &str) {
+    shared.stats_mut().shed += 1;
+    obs::global().add(keys::SERVE_DAEMON_SHED, 1);
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_write_timeout(Some(shared.cfg.write_timeout));
+    let _ = wire::write_response(&mut stream, Status::Busy, msg.as_bytes());
+}
+
+/// One persistent connection: parse frames until EOF, timeout, drain, or
+/// a framing violation; submit PUT/GET jobs through admission control
+/// and relay their replies.
+fn handle_connection(shared: &Arc<Shared>, job_tx: &SyncSender<Job>, mut stream: TcpStream) {
+    // accepted sockets do not inherit the listener's non-blocking mode on
+    // every platform — force blocking + timeouts explicitly
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(shared.cfg.read_timeout));
+    let _ = stream.set_write_timeout(Some(shared.cfg.write_timeout));
+    let _ = stream.set_nodelay(true);
+    loop {
+        if shared.draining() {
+            break; // persistent connections close on drain; clients see EOF
+        }
+        let req = match wire::read_request(&mut stream, &shared.cfg.limits) {
+            Ok(Some(req)) => req,
+            Ok(None) => break, // clean close
+            Err(WireError::Malformed(msg)) => {
+                shared.stats_mut().bad_requests += 1;
+                obs::global().add(keys::SERVE_DAEMON_ERRORS, 1);
+                // best effort: after a framing violation the stream
+                // cannot be resynchronized, so answer and close
+                let _ = wire::write_response(&mut stream, Status::BadRequest, msg.as_bytes());
+                break;
+            }
+            Err(WireError::Io(_)) => break, // timeout / reset / slow loris
+        };
+        shared.stats_mut().requests += 1;
+        obs::global().add(keys::SERVE_DAEMON_REQUESTS, 1);
+        let ok = match req {
+            Request::Ping => {
+                wire::write_response(&mut stream, Status::Ok, b"pong").is_ok()
+            }
+            Request::Stats => {
+                let snapshot = obs::global().snapshot().to_json();
+                wire::write_response(&mut stream, Status::Ok, snapshot.as_bytes()).is_ok()
+            }
+            Request::Shutdown => {
+                shared.shutdown.store(true, Ordering::SeqCst);
+                let _ = wire::write_response(&mut stream, Status::Ok, b"draining");
+                break;
+            }
+            Request::Put { field } => {
+                let (reply_tx, reply_rx) = pool::bounded::<RawResponse>(1);
+                submit_job(shared, job_tx, Job::Put { field, reply: reply_tx }, reply_rx, &mut stream)
+            }
+            Request::Get { name } => {
+                let (reply_tx, reply_rx) = pool::bounded::<RawResponse>(1);
+                submit_job(shared, job_tx, Job::Get { name, reply: reply_tx }, reply_rx, &mut stream)
+            }
+        };
+        if !ok {
+            break; // response write failed: connection is gone
+        }
+    }
+}
+
+/// Admission control: `try_send` into the bounded queue — full means an
+/// immediate `BUSY`, accepted means we block on the reply channel (the
+/// no-accepted-job-is-ever-dropped invariant). Returns whether the
+/// connection is still usable.
+fn submit_job(
+    shared: &Arc<Shared>,
+    job_tx: &SyncSender<Job>,
+    job: Job,
+    reply_rx: Receiver<RawResponse>,
+    stream: &mut TcpStream,
+) -> bool {
+    match job_tx.try_send(job) {
+        Ok(()) => {
+            obs::global().add(keys::SERVE_DAEMON_QUEUE_ENQUEUED, 1);
+            match reply_rx.recv() {
+                Ok(resp) => wire::write_response(stream, resp.status, &resp.body).is_ok(),
+                Err(_) => {
+                    // worker pool died mid-job (should be unreachable —
+                    // jobs are panic-contained); report, keep daemon up
+                    obs::global().add(keys::SERVE_DAEMON_ERRORS, 1);
+                    let _ = wire::write_response(
+                        stream,
+                        Status::ServerError,
+                        b"worker dropped the job reply",
+                    );
+                    false
+                }
+            }
+        }
+        Err(TrySendError::Full(_)) => {
+            shared.stats_mut().shed += 1;
+            obs::global().add(keys::SERVE_DAEMON_SHED, 1);
+            wire::write_response(stream, Status::Busy, b"job queue full").is_ok()
+        }
+        Err(TrySendError::Disconnected(_)) => {
+            let _ = wire::write_response(stream, Status::ShuttingDown, b"daemon draining");
+            false
+        }
+    }
+}
+
+/// Shared worker loop: drain the job queue until every sender is gone.
+fn worker_loop(shared: &Arc<Shared>, rx: &Arc<Mutex<Receiver<Job>>>) {
+    loop {
+        // hold the queue lock only for the dequeue, never for the work
+        let job = match rx.lock() {
+            Ok(guard) => guard.recv(),
+            Err(_) => break, // queue lock poisoned: no safe dequeue left
+        };
+        let Ok(job) = job else {
+            break; // all senders dropped: drain complete
+        };
+        obs::global().add(keys::SERVE_DAEMON_QUEUE_DEQUEUED, 1);
+        match job {
+            Job::Put { field, reply } => {
+                let name = field.name.clone();
+                let span = obs::span(keys::SERVE_DAEMON_PUT)
+                    .with_bytes(field.size_bytes() as u64)
+                    .with_histogram(obs::global().histogram(keys::HIST_DAEMON_PUT_NS));
+                let (resp, cstats) = process_put(shared, &field);
+                let ns = span.finish().as_nanos() as u64;
+                {
+                    let mut stats = shared.stats_mut();
+                    match &cstats {
+                        Some(cs) => {
+                            stats.put.absorb(&name, cs);
+                            stats.put.job_ns.push(ns);
+                        }
+                        None => {
+                            stats.put.failed += 1;
+                            stats.put.errors.push((name.clone(), resp.text()));
+                        }
+                    }
+                }
+                if resp.status != Status::Ok {
+                    obs::global().add(keys::SERVE_DAEMON_ERRORS, 1);
+                }
+                // stats first, then the ack: a client that saw OK can
+                // trust both the store commit and the accounting
+                let _ = reply.send(resp);
+            }
+            Job::Get { name, reply } => {
+                let mut span = obs::span(keys::SERVE_DAEMON_GET)
+                    .with_histogram(obs::global().histogram(keys::HIST_DAEMON_GET_NS));
+                let (resp, restored) = process_get(shared, &name);
+                span.add_bytes(restored as u64);
+                let ns = span.finish().as_nanos() as u64;
+                {
+                    let mut stats = shared.stats_mut();
+                    match resp.status {
+                        Status::Ok => {
+                            stats.gets += 1;
+                            stats.restored_bytes += restored;
+                            stats.get_ns.push(ns);
+                        }
+                        Status::NotFound => stats.gets_not_found += 1,
+                        _ => stats.gets_failed += 1,
+                    }
+                }
+                if resp.status != Status::Ok && resp.status != Status::NotFound {
+                    obs::global().add(keys::SERVE_DAEMON_ERRORS, 1);
+                }
+                let _ = reply.send(resp);
+            }
+        }
+    }
+}
+
+/// PUT: compress (panic-contained, outside the store lock), then upsert
+/// the serialized archive into the store. Every failure mode — injected
+/// panic, compression error, poisoned store lock, write error — is a
+/// per-request `SERVER_ERROR`.
+fn process_put(shared: &Shared, field: &Field) -> (RawResponse, Option<CompressStats>) {
+    let compressed = contain_panic("daemon put", || {
+        if shared.cfg.fault_panic_name.as_deref() == Some(field.name.as_str()) {
+            panic!("injected worker fault for '{}'", field.name);
+        }
+        if let Some(delay) = shared.cfg.fault_put_delay {
+            std::thread::sleep(delay);
+        }
+        shared.coord.compress_encoded(field)
+    });
+    let compressed = match compressed {
+        Ok(c) => c,
+        Err(e) => return (RawResponse::error(Status::ServerError, format!("{e:#}")), None),
+    };
+    let entry = match shared.store.lock() {
+        Ok(mut store) => store.put_bytes(&field.name, &compressed.bytes),
+        Err(_) => {
+            return (
+                RawResponse::error(Status::ServerError, "store lock poisoned"),
+                None,
+            )
+        }
+    };
+    match entry {
+        Ok(entry) => {
+            let ack = wire::encode_put_ack(entry.len, compressed.stats.original_bytes as u64);
+            (RawResponse::ok(ack.to_vec()), Some(compressed.stats))
+        }
+        Err(e) => (RawResponse::error(Status::ServerError, format!("{e:#}")), None),
+    }
+}
+
+/// GET: checked store read under the lock (CRC + header digest), then
+/// decode + decompress outside it (panic-contained). Returns the wire
+/// field payload and the restored byte count.
+fn process_get(shared: &Shared, name: &str) -> (RawResponse, usize) {
+    let bytes = match shared.store.lock() {
+        Ok(store) => {
+            if store.find(name).is_none() {
+                return (
+                    RawResponse::error(Status::NotFound, format!("'{name}' not in store")),
+                    0,
+                );
+            }
+            store.get_bytes_checked(name)
+        }
+        Err(_) => return (RawResponse::error(Status::ServerError, "store lock poisoned"), 0),
+    };
+    let bytes = match bytes {
+        Ok(b) => b,
+        Err(e) => return (RawResponse::error(Status::ServerError, format!("{e:#}")), 0),
+    };
+    let job_threads = shared.job_threads;
+    let coord = &shared.coord;
+    let result = contain_panic("daemon get", || {
+        let archive = Archive::from_bytes_with_threads(&bytes, job_threads)?;
+        let (field, _stats) = coord.decompress_with_threads(&archive, job_threads)?;
+        let payload = wire::encode_field_payload(&field)?;
+        Ok((payload, field.size_bytes()))
+    });
+    match result {
+        Ok((payload, restored)) => (RawResponse::ok(payload), restored),
+        Err(e) => (RawResponse::error(Status::ServerError, format!("{e:#}")), 0),
+    }
+}

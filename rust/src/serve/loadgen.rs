@@ -1,0 +1,571 @@
+//! `cusz loadgen`: the traffic generator for the serve daemon — N
+//! simulated clients over persistent connections driving a mixed
+//! put/get workload with steady, bursty, or diurnal arrival patterns,
+//! reporting latency percentiles and throughput as a
+//! `cusz-bench-serve/v1` JSON artifact (`BENCH_serve.json`, validated
+//! in CI like `BENCH_pipeline.json`).
+//!
+//! Semantics worth knowing when reading the numbers:
+//!
+//! * Each client keeps one connection and reconnects on transport
+//!   errors (counted in `reconnects`); a `BUSY` shed is retried with
+//!   exponential backoff up to `busy_retries` times and counted per
+//!   attempt, so the `busy` column measures how often admission control
+//!   fired, while `failed` measures work that never landed.
+//! * Latency samples (`p50/p95/p99`) are the round-trip of the
+//!   *successful* attempt only — shed-and-retried time shows up in
+//!   throughput, not in the percentile columns.
+//! * PUTs are upserts of fields the client generates locally
+//!   (`testkit::fields` regimes, deterministic from `seed`); GETs pick
+//!   uniformly among names that client has already stored, so every GET
+//!   has a well-defined expected answer.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::field::Field;
+use crate::testkit::fields::{make, Regime};
+use crate::util::prng::Rng;
+
+use super::wire::{Client, GetOutcome, PutOutcome};
+
+/// Inter-arrival shaping for the simulated clients.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalPattern {
+    /// Jittered constant rate.
+    Steady,
+    /// Back-to-back bursts separated by long gaps (mean rate ~= steady).
+    Bursty,
+    /// One sinusoidal "day" across the run: rate swings 0..2x the base.
+    Diurnal,
+}
+
+impl ArrivalPattern {
+    pub fn parse(s: &str) -> Result<ArrivalPattern> {
+        match s {
+            "steady" => Ok(ArrivalPattern::Steady),
+            "bursty" => Ok(ArrivalPattern::Bursty),
+            "diurnal" => Ok(ArrivalPattern::Diurnal),
+            other => bail!("unknown arrival pattern '{other}' (steady|bursty|diurnal)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ArrivalPattern::Steady => "steady",
+            ArrivalPattern::Bursty => "bursty",
+            ArrivalPattern::Diurnal => "diurnal",
+        }
+    }
+}
+
+/// Load-generator tuning; the `cusz loadgen` CLI maps onto every field.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Daemon address, e.g. `127.0.0.1:9599`.
+    pub addr: String,
+    /// Simulated clients (threads, one persistent connection each).
+    pub clients: usize,
+    /// Total requests across all clients.
+    pub requests: usize,
+    /// Fraction of requests that are PUTs (a client's first request is
+    /// always a PUT so its GETs have something to read).
+    pub put_ratio: f64,
+    pub pattern: ArrivalPattern,
+    /// Elements per generated 1-D field (4 bytes each).
+    pub elems: usize,
+    /// Base inter-arrival delay per client (0 = closed-loop, as fast as
+    /// the daemon answers).
+    pub pace: Duration,
+    pub seed: u64,
+    /// BUSY-shed retries per request before counting it failed.
+    pub busy_retries: usize,
+    /// Connect attempts (50 ms apart) — absorbs daemon start-up races.
+    pub connect_retries: usize,
+    pub read_timeout: Duration,
+    pub write_timeout: Duration,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: "127.0.0.1:9599".into(),
+            clients: 8,
+            requests: 256,
+            put_ratio: 0.5,
+            pattern: ArrivalPattern::Steady,
+            elems: 1 << 16,
+            pace: Duration::ZERO,
+            seed: 42,
+            busy_retries: 8,
+            connect_retries: 40,
+            read_timeout: Duration::from_secs(10),
+            write_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// Per-operation tally (one for PUT, one for GET).
+#[derive(Debug, Clone, Default)]
+pub struct OpStats {
+    /// Wire round-trips attempted (includes BUSY retries).
+    pub attempts: usize,
+    pub ok: usize,
+    /// BUSY responses observed (each is one shed admission).
+    pub busy: usize,
+    pub not_found: usize,
+    /// Requests that never succeeded (error response, retries exhausted,
+    /// or transport loss).
+    pub failed: usize,
+    /// Requests abandoned because the daemon reported it was draining.
+    pub shutdown: usize,
+    /// Field payload bytes moved by successful operations.
+    pub bytes: u64,
+    /// Wall nanoseconds of each successful round-trip.
+    pub ns: Vec<u64>,
+}
+
+impl OpStats {
+    fn merge(&mut self, other: &OpStats) {
+        self.attempts += other.attempts;
+        self.ok += other.ok;
+        self.busy += other.busy;
+        self.not_found += other.not_found;
+        self.failed += other.failed;
+        self.shutdown += other.shutdown;
+        self.bytes += other.bytes;
+        self.ns.extend_from_slice(&other.ns);
+    }
+
+    /// (p50, p95, p99) in milliseconds over successful round-trips.
+    pub fn latency_percentiles(&self) -> Option<(f64, f64, f64)> {
+        if self.ns.is_empty() {
+            return None;
+        }
+        let mut v = self.ns.clone();
+        v.sort_unstable();
+        Some((
+            super::percentile_ms(&v, 0.50),
+            super::percentile_ms(&v, 0.95),
+            super::percentile_ms(&v, 0.99),
+        ))
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.ns.is_empty() {
+            return 0.0;
+        }
+        self.ns.iter().sum::<u64>() as f64 / self.ns.len() as f64 / 1e6
+    }
+}
+
+/// Aggregate result of a load run; serializes to `cusz-bench-serve/v1`.
+#[derive(Debug, Clone, Default)]
+pub struct LoadReport {
+    pub addr: String,
+    pub clients: usize,
+    pub requests: usize,
+    pub put_ratio: f64,
+    pub pattern: &'static str,
+    pub elems: usize,
+    pub put: OpStats,
+    pub get: OpStats,
+    pub reconnects: usize,
+    pub wall_seconds: f64,
+}
+
+impl LoadReport {
+    pub const SCHEMA: &'static str = "cusz-bench-serve/v1";
+
+    /// Successful operations per second of wall time.
+    pub fn throughput_rps(&self) -> f64 {
+        (self.put.ok + self.get.ok) as f64 / self.wall_seconds.max(1e-12)
+    }
+
+    pub fn to_json(&self) -> String {
+        fn num(v: f64) -> String {
+            if v.is_finite() { format!("{v:.4}") } else { "0".into() }
+        }
+        fn clean(v: &str) -> String {
+            v.chars()
+                .filter(|c| c.is_ascii_alphanumeric() || ".:-_[]".contains(*c))
+                .collect()
+        }
+        fn op_json(op: &OpStats, extra: &str) -> String {
+            let (p50, p95, p99) = op.latency_percentiles().unwrap_or((0.0, 0.0, 0.0));
+            format!(
+                "{{\"attempts\": {}, \"ok\": {}, \"busy\": {}, \"failed\": {}, \
+                 \"shutdown\": {}{extra}, \"mb\": {}, \"mean_ms\": {}, \
+                 \"p50_ms\": {}, \"p95_ms\": {}, \"p99_ms\": {}}}",
+                op.attempts,
+                op.ok,
+                op.busy,
+                op.failed,
+                op.shutdown,
+                num(op.bytes as f64 / 1e6),
+                num(op.mean_ms()),
+                num(p50),
+                num(p95),
+                num(p99),
+            )
+        }
+        let host = std::env::var("HOSTNAME").map(|v| clean(&v)).unwrap_or_default();
+        let commit = std::env::var("GITHUB_SHA").map(|v| clean(&v)).unwrap_or_default();
+        format!(
+            "{{\n  \"schema\": \"{}\",\n  \"generated_by\": {{\"host\": \"{}\", \
+             \"commit\": \"{}\", \"placeholder\": false}},\n  \
+             \"addr\": \"{}\",\n  \"clients\": {},\n  \"requests\": {},\n  \
+             \"put_ratio\": {},\n  \"pattern\": \"{}\",\n  \"elems\": {},\n  \
+             \"wall_seconds\": {},\n  \"throughput_rps\": {},\n  \
+             \"reconnects\": {},\n  \"put\": {},\n  \"get\": {}\n}}\n",
+            Self::SCHEMA,
+            if host.is_empty() { "unknown".into() } else { host },
+            if commit.is_empty() { "unknown".into() } else { commit },
+            clean(&self.addr),
+            self.clients,
+            self.requests,
+            num(self.put_ratio),
+            self.pattern,
+            self.elems,
+            num(self.wall_seconds),
+            num(self.throughput_rps()),
+            self.reconnects,
+            op_json(&self.put, ""),
+            op_json(&self.get, &format!(", \"not_found\": {}", self.get.not_found)),
+        )
+    }
+
+    pub fn report(&self) -> String {
+        let fmt_op = |label: &str, op: &OpStats| {
+            let (p50, p95, p99) = op.latency_percentiles().unwrap_or((0.0, 0.0, 0.0));
+            format!(
+                "{label}: {} ok / {} busy / {} failed  {:.2} MB  \
+                 latency ms  p50 {p50:.3}  p95 {p95:.3}  p99 {p99:.3}",
+                op.ok,
+                op.busy,
+                op.failed,
+                op.bytes as f64 / 1e6,
+            )
+        };
+        format!(
+            "loadgen: {} clients x {} requests ({} pattern, {:.0}% puts)  \
+             {:.1} req/s over {:.3}s, {} reconnects\n{}\n{}",
+            self.clients,
+            self.requests,
+            self.pattern,
+            self.put_ratio * 100.0,
+            self.throughput_rps(),
+            self.wall_seconds,
+            self.reconnects,
+            fmt_op("puts", &self.put),
+            fmt_op("gets", &self.get),
+        )
+    }
+}
+
+#[derive(Debug, Default)]
+struct Tally {
+    put: OpStats,
+    get: OpStats,
+    reconnects: usize,
+}
+
+enum Step {
+    Continue,
+    Stop,
+}
+
+/// Run the load against a live daemon and aggregate every client tally.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
+    if cfg.clients == 0 {
+        bail!("loadgen needs at least one client");
+    }
+    if cfg.elems == 0 {
+        bail!("loadgen needs at least one element per field");
+    }
+    if !(0.0..=1.0).contains(&cfg.put_ratio) {
+        bail!("put ratio must be in [0, 1], got {}", cfg.put_ratio);
+    }
+    let mut report = LoadReport {
+        addr: cfg.addr.clone(),
+        clients: cfg.clients,
+        requests: cfg.requests,
+        put_ratio: cfg.put_ratio,
+        pattern: cfg.pattern.name(),
+        elems: cfg.elems,
+        ..Default::default()
+    };
+    if cfg.requests == 0 {
+        // connectivity check only (used by readiness probes)
+        let mut client = connect_with_retry(cfg)?;
+        client.ping().context("pinging daemon")?;
+        return Ok(report);
+    }
+    let t0 = Instant::now();
+    let tallies: Vec<Tally> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..cfg.clients)
+            .map(|i| scope.spawn(move || client_loop(cfg, i)))
+            .collect();
+        // a panicking client thread forfeits its tally but must not sink
+        // the whole run
+        handles.into_iter().map(|h| h.join().unwrap_or_default()).collect()
+    });
+    report.wall_seconds = t0.elapsed().as_secs_f64();
+    for t in &tallies {
+        report.put.merge(&t.put);
+        report.get.merge(&t.get);
+        report.reconnects += t.reconnects;
+    }
+    Ok(report)
+}
+
+fn connect_with_retry(cfg: &LoadgenConfig) -> Result<Client> {
+    let mut last_err = None;
+    for _ in 0..cfg.connect_retries.max(1) {
+        match Client::connect(&cfg.addr, cfg.read_timeout, cfg.write_timeout) {
+            Ok(c) => return Ok(c),
+            Err(e) => {
+                last_err = Some(e);
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+    Err(last_err
+        .unwrap_or_else(|| anyhow::anyhow!("no connect attempts made"))
+        .context(format!("connecting to daemon at {}", cfg.addr)))
+}
+
+/// Inter-arrival delay for request `progress` (0..1) of a client's run.
+fn pace_delay(pattern: ArrivalPattern, progress: f64, base: Duration, rng: &mut Rng) -> Duration {
+    if base.is_zero() {
+        return Duration::ZERO;
+    }
+    let jitter = 0.5 + rng.f64(); // 0.5..1.5
+    let scale = match pattern {
+        ArrivalPattern::Steady => 1.0,
+        // ~1 arrival in 8 pays an 8x gap; the rest are back-to-back
+        ArrivalPattern::Bursty => {
+            if rng.f64() < 0.125 {
+                8.0
+            } else {
+                0.0
+            }
+        }
+        ArrivalPattern::Diurnal => 1.0 + (progress * std::f64::consts::TAU).sin(),
+    };
+    Duration::from_secs_f64((base.as_secs_f64() * scale * jitter).max(0.0))
+}
+
+fn client_loop(cfg: &LoadgenConfig, client_idx: usize) -> Tally {
+    let mut tally = Tally::default();
+    let mut rng =
+        Rng::new(cfg.seed ^ 0x9e3779b97f4a7c15u64.wrapping_mul(client_idx as u64 + 1));
+    let mut client = match connect_with_retry(cfg) {
+        Ok(c) => c,
+        Err(_) => {
+            // daemon unreachable: every planned request of this client
+            // counts as failed so the report shows the outage
+            tally.put.failed += per_client_requests(cfg, client_idx);
+            return tally;
+        }
+    };
+    let n = per_client_requests(cfg, client_idx);
+    let mut names: Vec<String> = Vec::new();
+    for k in 0..n {
+        let delay = pace_delay(cfg.pattern, k as f64 / n.max(1) as f64, cfg.pace, &mut rng);
+        if !delay.is_zero() {
+            std::thread::sleep(delay);
+        }
+        let is_put = names.is_empty() || (rng.f64() < cfg.put_ratio);
+        let step = if is_put {
+            let name = format!("lg-{client_idx}-{}", names.len());
+            let regime = Regime::ALL[(client_idx + names.len()) % Regime::ALL.len()];
+            let data = make(regime, cfg.elems, cfg.seed + (client_idx * 7919 + k) as u64);
+            // dims/data lengths agree by construction
+            let field = Field { name: name.clone(), dims: vec![cfg.elems], data };
+            do_put(cfg, &mut client, &field, &mut tally, &mut names)
+        } else {
+            let name = names[rng.below(names.len() as u64) as usize].clone();
+            do_get(cfg, &mut client, &name, &mut tally)
+        };
+        if matches!(step, Step::Stop) {
+            break;
+        }
+    }
+    tally
+}
+
+fn per_client_requests(cfg: &LoadgenConfig, client_idx: usize) -> usize {
+    let base = cfg.requests / cfg.clients;
+    let extra = usize::from(client_idx < cfg.requests % cfg.clients);
+    base + extra
+}
+
+fn do_put(
+    cfg: &LoadgenConfig,
+    client: &mut Client,
+    field: &Field,
+    tally: &mut Tally,
+    names: &mut Vec<String>,
+) -> Step {
+    for attempt in 0..=cfg.busy_retries {
+        tally.put.attempts += 1;
+        let t0 = Instant::now();
+        match client.put(field) {
+            Ok(PutOutcome::Stored { .. }) => {
+                tally.put.ok += 1;
+                tally.put.ns.push(t0.elapsed().as_nanos() as u64);
+                tally.put.bytes += field.size_bytes() as u64;
+                names.push(field.name.clone());
+                return Step::Continue;
+            }
+            Ok(PutOutcome::Busy) => {
+                tally.put.busy += 1;
+                if attempt == cfg.busy_retries {
+                    break;
+                }
+                std::thread::sleep(backoff(attempt));
+            }
+            Ok(PutOutcome::ShuttingDown) => {
+                tally.put.shutdown += 1;
+                return Step::Stop;
+            }
+            Ok(PutOutcome::Failed(_)) => {
+                tally.put.failed += 1;
+                return Step::Continue;
+            }
+            Err(_) => {
+                // transport loss: reconnect and retry (PUT is an upsert,
+                // so at-least-once delivery is safe)
+                tally.reconnects += 1;
+                match connect_with_retry(cfg) {
+                    Ok(c) => *client = c,
+                    Err(_) => {
+                        tally.put.failed += 1;
+                        return Step::Stop;
+                    }
+                }
+                if attempt == cfg.busy_retries {
+                    break;
+                }
+            }
+        }
+    }
+    tally.put.failed += 1;
+    Step::Continue
+}
+
+fn do_get(cfg: &LoadgenConfig, client: &mut Client, name: &str, tally: &mut Tally) -> Step {
+    for attempt in 0..=cfg.busy_retries {
+        tally.get.attempts += 1;
+        let t0 = Instant::now();
+        match client.get(name) {
+            Ok(GetOutcome::Field(field)) => {
+                tally.get.ok += 1;
+                tally.get.ns.push(t0.elapsed().as_nanos() as u64);
+                tally.get.bytes += field.size_bytes() as u64;
+                return Step::Continue;
+            }
+            Ok(GetOutcome::Busy) => {
+                tally.get.busy += 1;
+                if attempt == cfg.busy_retries {
+                    break;
+                }
+                std::thread::sleep(backoff(attempt));
+            }
+            Ok(GetOutcome::ShuttingDown) => {
+                tally.get.shutdown += 1;
+                return Step::Stop;
+            }
+            Ok(GetOutcome::NotFound) => {
+                // should be impossible (we only GET names we stored);
+                // count it so the report surfaces the anomaly
+                tally.get.not_found += 1;
+                return Step::Continue;
+            }
+            Ok(GetOutcome::Failed(_)) => {
+                tally.get.failed += 1;
+                return Step::Continue;
+            }
+            Err(_) => {
+                tally.reconnects += 1;
+                match connect_with_retry(cfg) {
+                    Ok(c) => *client = c,
+                    Err(_) => {
+                        tally.get.failed += 1;
+                        return Step::Stop;
+                    }
+                }
+                if attempt == cfg.busy_retries {
+                    break;
+                }
+            }
+        }
+    }
+    tally.get.failed += 1;
+    Step::Continue
+}
+
+fn backoff(attempt: usize) -> Duration {
+    Duration::from_millis(1u64 << attempt.min(6))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pattern_parse_roundtrips() {
+        for p in [ArrivalPattern::Steady, ArrivalPattern::Bursty, ArrivalPattern::Diurnal] {
+            assert_eq!(ArrivalPattern::parse(p.name()).unwrap(), p);
+        }
+        assert!(ArrivalPattern::parse("nope").is_err());
+    }
+
+    #[test]
+    fn report_json_carries_schema_and_percentiles() {
+        let mut report = LoadReport {
+            addr: "127.0.0.1:9599".into(),
+            clients: 2,
+            requests: 8,
+            put_ratio: 0.5,
+            pattern: "bursty",
+            elems: 64,
+            wall_seconds: 1.0,
+            ..Default::default()
+        };
+        report.put.ok = 4;
+        report.put.attempts = 5;
+        report.put.busy = 1;
+        report.put.ns = vec![1_000_000, 2_000_000, 3_000_000, 4_000_000];
+        report.get.ok = 4;
+        report.get.ns = vec![500_000; 4];
+        let json = report.to_json();
+        assert!(json.contains("\"schema\": \"cusz-bench-serve/v1\""), "{json}");
+        assert!(json.contains("\"p99_ms\""), "{json}");
+        assert!(json.contains("\"not_found\": 0"), "{json}");
+        assert!(json.contains("\"throughput_rps\": 8.0000"), "{json}");
+        let (p50, p95, p99) = report.put.latency_percentiles().unwrap();
+        assert!(p50 <= p95 && p95 <= p99);
+        assert!(report.report().contains("p50"));
+    }
+
+    #[test]
+    fn pace_delay_is_zero_for_closed_loop() {
+        let mut rng = Rng::new(7);
+        for pattern in [ArrivalPattern::Steady, ArrivalPattern::Bursty, ArrivalPattern::Diurnal] {
+            assert_eq!(pace_delay(pattern, 0.5, Duration::ZERO, &mut rng), Duration::ZERO);
+        }
+        // bounded above for nonzero base
+        let d = pace_delay(ArrivalPattern::Diurnal, 0.25, Duration::from_millis(2), &mut rng);
+        assert!(d <= Duration::from_millis(2 * 2 * 2));
+    }
+
+    #[test]
+    fn per_client_split_covers_every_request() {
+        let cfg = LoadgenConfig { clients: 3, requests: 10, ..Default::default() };
+        let total: usize = (0..3).map(|i| per_client_requests(&cfg, i)).sum();
+        assert_eq!(total, 10);
+    }
+}

@@ -28,6 +28,33 @@ use crate::obs::{self, keys, RunTimings};
 use crate::store::Store;
 use crate::util::pool::{bounded, FanStage};
 
+pub mod daemon;
+pub mod loadgen;
+pub mod wire;
+
+pub use daemon::{install_signal_drain, Daemon, DaemonConfig, DaemonHandle, DaemonStats};
+pub use loadgen::{ArrivalPattern, LoadReport, LoadgenConfig};
+pub use wire::{Client, GetOutcome, Limits, PutOutcome};
+
+/// Run `f`, converting a panic into an ordinary error instead of letting
+/// it unwind through a worker pool. Batch and daemon workers wrap every
+/// job in this so one poisoned job surfaces as a per-job error entry (or
+/// a per-request `SERVER_ERROR` frame) while the pool keeps draining —
+/// the service must outlive any single bad field.
+pub fn contain_panic<T>(label: &str, f: impl FnOnce() -> Result<T>) -> Result<T> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+        Ok(result) => result,
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "opaque panic payload".to_string());
+            Err(anyhow::anyhow!("{label} panicked: {msg}"))
+        }
+    }
+}
+
 /// Exact percentile (linear interpolation) over *sorted* nanosecond
 /// samples, reported in milliseconds. The service keeps every job's
 /// latency, so percentiles here are oracle-exact; the registry's
@@ -293,16 +320,17 @@ impl BatchCompressor {
 
         let (tx, rx) = bounded::<Field>(depth);
         let coord = Arc::clone(&self.coord);
-        let fan = FanStage::spawn(rx, workers, depth, "compress", move |field: Field| {
+        let fan = FanStage::try_spawn(rx, workers, depth, "compress", move |field: Field| {
             obs::global().add(keys::SERVE_QUEUE_DEQUEUED, 1);
             let name = field.name.clone();
             let span = obs::span(keys::SERVE_COMPRESS_JOB)
                 .with_bytes(field.size_bytes() as u64)
                 .with_histogram(obs::global().histogram(keys::HIST_COMPRESS_JOB_NS));
-            let result = coord.compress_encoded(&field);
+            let result = contain_panic("compress job", || coord.compress_encoded(&field));
             let ns = span.finish().as_nanos() as u64;
             (name, result, ns)
-        });
+        })
+        .context("spawning compress workers")?;
         let fields = fields.into_iter();
         let producer = std::thread::Builder::new()
             .name("field-producer".into())
@@ -505,20 +533,23 @@ impl BatchDecompressor {
         // is allocated once per worker thread and reused across every
         // job of the drain.
         let job_threads = (self.coord.cfg.effective_threads() / workers).max(1);
-        let fan = FanStage::spawn(rx, workers, depth, "decompress", move |job: (String, Vec<u8>)| {
+        let fan = FanStage::try_spawn(rx, workers, depth, "decompress", move |job: (String, Vec<u8>)| {
             obs::global().add(keys::SERVE_QUEUE_DEQUEUED, 1);
             let (name, bytes) = job;
             let mut span = obs::span(keys::SERVE_DECOMPRESS_JOB)
                 .with_histogram(obs::global().histogram(keys::HIST_DECOMPRESS_JOB_NS));
-            let result = Archive::from_bytes_with_threads(&bytes, job_threads)
-                .and_then(|archive| coord.decompress_with_threads(&archive, job_threads));
+            let result = contain_panic("decompress job", || {
+                Archive::from_bytes_with_threads(&bytes, job_threads)
+                    .and_then(|archive| coord.decompress_with_threads(&archive, job_threads))
+            });
             if let Ok((field, _)) = &result {
                 // restored bytes — the paper's decompression denominator
                 span.add_bytes(field.size_bytes() as u64);
             }
             let ns = span.finish().as_nanos() as u64;
             (name, result, ns)
-        });
+        })
+        .context("spawning decompress workers")?;
         let names: Vec<String> = store.list().iter().map(|e| e.name.clone()).collect();
 
         let t0 = Instant::now();
@@ -966,5 +997,54 @@ mod tests {
         });
         assert!(result.is_err());
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn contain_panic_converts_panics_to_errors() {
+        assert_eq!(contain_panic("job", || Ok(7)).unwrap(), 7);
+        let err = contain_panic("job", || -> Result<()> { panic!("boom {}", 3) });
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("job panicked"), "{msg}");
+        assert!(msg.contains("boom 3"), "{msg}");
+        let err = contain_panic("job", || -> Result<()> { panic!("static payload") });
+        assert!(format!("{:#}", err.unwrap_err()).contains("static payload"));
+    }
+
+    #[test]
+    fn poisoned_job_does_not_take_down_the_pool() {
+        // regression-lock for the unwrap audit: one panicking job must
+        // surface as a per-job error while the fan stage keeps draining
+        // the jobs behind it
+        let (tx, rx) = bounded::<usize>(2);
+        let fan = FanStage::try_spawn(rx, 2, 2, "poison", move |i: usize| {
+            contain_panic("poison job", || {
+                if i == 3 {
+                    panic!("job {i} is poisoned");
+                }
+                Ok(i * 2)
+            })
+        })
+        .unwrap();
+        let feeder = std::thread::spawn(move || {
+            for i in 0..8 {
+                if tx.send(i).is_err() {
+                    break;
+                }
+            }
+        });
+        let (mut ok, mut failed) = (0usize, 0usize);
+        for result in fan.rx.iter() {
+            match result {
+                Ok(_) => ok += 1,
+                Err(e) => {
+                    failed += 1;
+                    assert!(format!("{e:#}").contains("poisoned"));
+                }
+            }
+        }
+        fan.join();
+        feeder.join().unwrap();
+        assert_eq!(ok, 7);
+        assert_eq!(failed, 1);
     }
 }

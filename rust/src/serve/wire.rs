@@ -1,0 +1,701 @@
+//! Wire protocol for the `cusz serve --daemon` socket front end: a
+//! little-endian length-prefixed binary frame format (spec'd in the
+//! README "Serving" section) plus the [`Client`] used by `cusz loadgen`
+//! and the serving test battery.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Hostile-input safety.** Every declared length is validated
+//!    against [`Limits`] *before* any allocation, all arithmetic on
+//!    attacker-controlled sizes is checked, and a framing violation is a
+//!    clean [`WireError::Malformed`] — never a panic, never an OOM. The
+//!    proptests in `tests/proptests.rs` fuzz truncation, garbage, and
+//!    oversized declared lengths against exactly these entry points.
+//! 2. **Timeout-friendly streaming.** Parsers work over `impl Read` so
+//!    the daemon's per-connection socket timeouts bound a slow-loris
+//!    writer: a stalled partial frame surfaces as [`WireError::Io`] and
+//!    the connection is dropped.
+//! 3. **No dependencies.** std only; the frame layout is simple enough
+//!    to desk-verify against the README spec byte by byte.
+//!
+//! ## Frame layout
+//!
+//! Request (client → daemon), 12-byte header then two variable parts:
+//!
+//! ```text
+//! [0..2)  magic  b"cZ"
+//! [2]     version (1)
+//! [3]     opcode  (1=PUT 2=GET 3=STATS 4=PING 5=SHUTDOWN)
+//! [4..6)  name_len  u16 LE
+//! [6..8)  reserved (must be 0)
+//! [8..12) body_len  u32 LE
+//! then: name_len bytes of UTF-8 name, body_len bytes of body
+//! ```
+//!
+//! Response (daemon → client), 8-byte header then the body:
+//!
+//! ```text
+//! [0..2)  magic  b"cZ"
+//! [2]     version (1)
+//! [3]     status  (0=OK 1=BUSY 2=NOT_FOUND 3=BAD_REQUEST 4=SERVER_ERROR
+//!                  5=SHUTTING_DOWN)
+//! [4..8)  body_len  u32 LE
+//! then: body_len bytes (OK: opcode-specific payload; errors: UTF-8 text)
+//! ```
+//!
+//! Field payload (PUT request body, GET OK response body):
+//!
+//! ```text
+//! [0]          ndims  u8 (1..=4)
+//! [1..1+4n)    dims   ndims x u32 LE (each >= 1)
+//! [..]         data   product(dims) x f32 LE
+//! ```
+
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::field::Field;
+
+pub const MAGIC: [u8; 2] = *b"cZ";
+pub const VERSION: u8 = 1;
+pub const REQ_HEADER_LEN: usize = 12;
+pub const RESP_HEADER_LEN: usize = 8;
+
+/// Parser allocation bounds, enforced on every declared length *before*
+/// the corresponding buffer is allocated. The daemon CLI exposes
+/// `--max-body-mb`; tests shrink these to fuzz the rejection paths.
+#[derive(Debug, Clone)]
+pub struct Limits {
+    /// Longest accepted field name, bytes.
+    pub max_name_bytes: usize,
+    /// Largest accepted request/response body, bytes.
+    pub max_body_bytes: usize,
+}
+
+impl Default for Limits {
+    fn default() -> Self {
+        Limits { max_name_bytes: 1024, max_body_bytes: 64 << 20 }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Opcode {
+    Put = 1,
+    Get = 2,
+    Stats = 3,
+    Ping = 4,
+    Shutdown = 5,
+}
+
+impl Opcode {
+    pub fn from_u8(v: u8) -> Option<Opcode> {
+        match v {
+            1 => Some(Opcode::Put),
+            2 => Some(Opcode::Get),
+            3 => Some(Opcode::Stats),
+            4 => Some(Opcode::Ping),
+            5 => Some(Opcode::Shutdown),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Status {
+    Ok = 0,
+    Busy = 1,
+    NotFound = 2,
+    BadRequest = 3,
+    ServerError = 4,
+    ShuttingDown = 5,
+}
+
+impl Status {
+    pub fn from_u8(v: u8) -> Option<Status> {
+        match v {
+            0 => Some(Status::Ok),
+            1 => Some(Status::Busy),
+            2 => Some(Status::NotFound),
+            3 => Some(Status::BadRequest),
+            4 => Some(Status::ServerError),
+            5 => Some(Status::ShuttingDown),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed request frame. `Put` carries the decoded [`Field`] (the
+/// request name becomes `Field::name`, so the wire field payload never
+/// duplicates the name).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Put { field: Field },
+    Get { name: String },
+    Stats,
+    Ping,
+    Shutdown,
+}
+
+/// A response frame before opcode-specific body interpretation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RawResponse {
+    pub status: Status,
+    pub body: Vec<u8>,
+}
+
+impl RawResponse {
+    pub fn ok(body: Vec<u8>) -> Self {
+        RawResponse { status: Status::Ok, body }
+    }
+
+    pub fn error(status: Status, msg: impl AsRef<str>) -> Self {
+        RawResponse { status, body: msg.as_ref().as_bytes().to_vec() }
+    }
+
+    /// Error body as text (lossy; error bodies are always UTF-8 on the
+    /// daemon side, but the client never trusts that).
+    pub fn text(&self) -> String {
+        String::from_utf8_lossy(&self.body).into_owned()
+    }
+}
+
+/// Protocol-layer failure, split by recovery strategy: `Io` means the
+/// transport died (timeout, reset, mid-frame EOF on the response path) —
+/// drop the connection; `Malformed` means the peer violated the framing —
+/// answer `BAD_REQUEST` (daemon side) and close, since resynchronizing
+/// inside a corrupt byte stream is not possible.
+#[derive(Debug)]
+pub enum WireError {
+    Io(io::Error),
+    Malformed(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "wire i/o: {e}"),
+            WireError::Malformed(m) => write!(f, "malformed frame: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<io::Error> for WireError {
+    fn from(e: io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
+
+fn malformed(msg: impl Into<String>) -> WireError {
+    WireError::Malformed(msg.into())
+}
+
+/// `read_exact` with mid-frame EOF reclassified as a framing violation
+/// (a peer that hangs up inside a frame sent a truncated frame; a peer
+/// that times out is an I/O condition and keeps its `Io` kind).
+fn read_exact_frame(r: &mut impl Read, buf: &mut [u8], what: &str) -> Result<(), WireError> {
+    match r.read_exact(buf) {
+        Ok(()) => Ok(()),
+        Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => {
+            Err(malformed(format!("truncated {what}")))
+        }
+        Err(e) => Err(WireError::Io(e)),
+    }
+}
+
+/// Read one request frame. `Ok(None)` is a clean close: EOF exactly on a
+/// frame boundary, the normal end of a persistent connection.
+pub fn read_request(r: &mut impl Read, limits: &Limits) -> Result<Option<Request>, WireError> {
+    let mut header = [0u8; REQ_HEADER_LEN];
+    // Fill the header manually so a clean EOF before the first byte is
+    // distinguishable from truncation inside the header.
+    let mut got = 0usize;
+    while got < header.len() {
+        match r.read(&mut header[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(malformed(format!(
+                    "truncated header ({got} of {REQ_HEADER_LEN} bytes)"
+                )))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    if header[0..2] != MAGIC {
+        return Err(malformed(format!("bad magic {:02x}{:02x}", header[0], header[1])));
+    }
+    if header[2] != VERSION {
+        return Err(malformed(format!("unsupported version {}", header[2])));
+    }
+    let opcode = Opcode::from_u8(header[3])
+        .ok_or_else(|| malformed(format!("unknown opcode {}", header[3])))?;
+    let name_len = u16::from_le_bytes([header[4], header[5]]) as usize;
+    let reserved = u16::from_le_bytes([header[6], header[7]]);
+    if reserved != 0 {
+        return Err(malformed(format!("reserved bytes must be 0, got {reserved}")));
+    }
+    let body_len = u32::from_le_bytes([header[8], header[9], header[10], header[11]]) as usize;
+    // limits BEFORE allocation — an attacker-declared 4 GiB body is
+    // rejected while still costing zero bytes of buffer
+    if name_len > limits.max_name_bytes {
+        return Err(malformed(format!(
+            "name length {name_len} exceeds limit {}",
+            limits.max_name_bytes
+        )));
+    }
+    if body_len > limits.max_body_bytes {
+        return Err(malformed(format!(
+            "body length {body_len} exceeds limit {}",
+            limits.max_body_bytes
+        )));
+    }
+    match opcode {
+        Opcode::Put | Opcode::Get => {
+            if name_len == 0 {
+                return Err(malformed("PUT/GET requires a non-empty name"));
+            }
+        }
+        Opcode::Stats | Opcode::Ping | Opcode::Shutdown => {
+            if name_len != 0 || body_len != 0 {
+                return Err(malformed("STATS/PING/SHUTDOWN take no name or body"));
+            }
+        }
+    }
+    if opcode == Opcode::Get && body_len != 0 {
+        return Err(malformed("GET takes no body"));
+    }
+    let mut name_bytes = vec![0u8; name_len];
+    read_exact_frame(r, &mut name_bytes, "name")?;
+    let name = String::from_utf8(name_bytes)
+        .map_err(|_| malformed("name is not valid UTF-8"))?;
+    let mut body = vec![0u8; body_len];
+    read_exact_frame(r, &mut body, "body")?;
+    let req = match opcode {
+        Opcode::Put => {
+            let field =
+                parse_field_payload(&body, &name).map_err(malformed)?;
+            Request::Put { field }
+        }
+        Opcode::Get => Request::Get { name },
+        Opcode::Stats => Request::Stats,
+        Opcode::Ping => Request::Ping,
+        Opcode::Shutdown => Request::Shutdown,
+    };
+    Ok(Some(req))
+}
+
+/// Assemble one request frame from parts. `Err` only when the name/body
+/// cannot be represented in the header's fixed-width length fields.
+pub fn encode_request_parts(opcode: Opcode, name: &str, body: &[u8]) -> Result<Vec<u8>> {
+    let name_len: u16 = name
+        .len()
+        .try_into()
+        .map_err(|_| anyhow!("name length {} exceeds u16", name.len()))?;
+    let body_len: u32 = body
+        .len()
+        .try_into()
+        .map_err(|_| anyhow!("body length {} exceeds u32", body.len()))?;
+    let mut out = Vec::with_capacity(REQ_HEADER_LEN + name.len() + body.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(opcode as u8);
+    out.extend_from_slice(&name_len.to_le_bytes());
+    out.extend_from_slice(&0u16.to_le_bytes());
+    out.extend_from_slice(&body_len.to_le_bytes());
+    out.extend_from_slice(name.as_bytes());
+    out.extend_from_slice(body);
+    Ok(out)
+}
+
+/// Encode a full [`Request`] (the proptest roundtrip entry point; the
+/// [`Client`] uses [`encode_request_parts`] to avoid cloning field data).
+pub fn encode_request(req: &Request) -> Result<Vec<u8>> {
+    match req {
+        Request::Put { field } => {
+            encode_request_parts(Opcode::Put, &field.name, &encode_field_payload(field)?)
+        }
+        Request::Get { name } => encode_request_parts(Opcode::Get, name, &[]),
+        Request::Stats => encode_request_parts(Opcode::Stats, "", &[]),
+        Request::Ping => encode_request_parts(Opcode::Ping, "", &[]),
+        Request::Shutdown => encode_request_parts(Opcode::Shutdown, "", &[]),
+    }
+}
+
+/// Write a response frame: 8-byte header + body.
+pub fn write_response(w: &mut impl Write, status: Status, body: &[u8]) -> io::Result<()> {
+    let body_len: u32 = body.len().try_into().map_err(|_| {
+        io::Error::new(io::ErrorKind::InvalidInput, "response body exceeds u32")
+    })?;
+    let mut header = [0u8; RESP_HEADER_LEN];
+    header[0..2].copy_from_slice(&MAGIC);
+    header[2] = VERSION;
+    header[3] = status as u8;
+    header[4..8].copy_from_slice(&body_len.to_le_bytes());
+    w.write_all(&header)?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Read one response frame. EOF anywhere (including before the first
+/// byte — the daemon owes a response to every request) is an error.
+pub fn read_response(r: &mut impl Read, limits: &Limits) -> Result<RawResponse, WireError> {
+    let mut header = [0u8; RESP_HEADER_LEN];
+    match r.read_exact(&mut header) {
+        Ok(()) => {}
+        Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => {
+            // a drained daemon closes persistent connections instead of
+            // answering: keep the Io kind so clients can reconnect/stop
+            return Err(WireError::Io(e));
+        }
+        Err(e) => return Err(WireError::Io(e)),
+    }
+    if header[0..2] != MAGIC {
+        return Err(malformed(format!("bad response magic {:02x}{:02x}", header[0], header[1])));
+    }
+    if header[2] != VERSION {
+        return Err(malformed(format!("unsupported response version {}", header[2])));
+    }
+    let status = Status::from_u8(header[3])
+        .ok_or_else(|| malformed(format!("unknown status {}", header[3])))?;
+    let body_len = u32::from_le_bytes([header[4], header[5], header[6], header[7]]) as usize;
+    if body_len > limits.max_body_bytes {
+        return Err(malformed(format!(
+            "response body length {body_len} exceeds limit {}",
+            limits.max_body_bytes
+        )));
+    }
+    let mut body = vec![0u8; body_len];
+    read_exact_frame(r, &mut body, "response body")?;
+    Ok(RawResponse { status, body })
+}
+
+/// Serialize a field as the wire payload: `u8 ndims, ndims x u32 dims,
+/// product x f32 LE`. Errors only when a dim exceeds `u32` (the wire
+/// format's addressable limit).
+pub fn encode_field_payload(field: &Field) -> Result<Vec<u8>> {
+    let ndims: u8 = field
+        .dims
+        .len()
+        .try_into()
+        .ok()
+        .filter(|&n| (1..=4).contains(&n))
+        .ok_or_else(|| anyhow!("field must have 1..=4 dims, got {}", field.dims.len()))?;
+    let mut out = Vec::with_capacity(1 + 4 * field.dims.len() + 4 * field.data.len());
+    out.push(ndims);
+    for &d in &field.dims {
+        let d: u32 = d.try_into().map_err(|_| anyhow!("dim {d} exceeds u32"))?;
+        out.extend_from_slice(&d.to_le_bytes());
+    }
+    for &v in &field.data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    Ok(out)
+}
+
+/// Parse a wire field payload. All size arithmetic is checked and
+/// validated against the (already limit-checked) payload length, so a
+/// hostile dims vector cannot drive allocation past the body it arrived
+/// in. Returns `Err(reason)` — the caller wraps it in the right
+/// status/error type for its side of the protocol.
+pub fn parse_field_payload(bytes: &[u8], name: &str) -> Result<Field, String> {
+    if bytes.is_empty() {
+        return Err("empty field payload".into());
+    }
+    let ndims = bytes[0] as usize;
+    if !(1..=4).contains(&ndims) {
+        return Err(format!("ndims must be 1..=4, got {ndims}"));
+    }
+    let dims_end = 1 + 4 * ndims;
+    if bytes.len() < dims_end {
+        return Err(format!(
+            "payload too short for {ndims} dims ({} < {dims_end} bytes)",
+            bytes.len()
+        ));
+    }
+    let mut dims = Vec::with_capacity(ndims);
+    for i in 0..ndims {
+        let o = 1 + 4 * i;
+        let d = u32::from_le_bytes([bytes[o], bytes[o + 1], bytes[o + 2], bytes[o + 3]]);
+        if d == 0 {
+            return Err(format!("dim {i} is zero"));
+        }
+        dims.push(d as usize);
+    }
+    let elems = dims
+        .iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .ok_or_else(|| format!("dims {dims:?} overflow"))?;
+    let data_bytes = elems
+        .checked_mul(4)
+        .ok_or_else(|| format!("element count {elems} overflows byte length"))?;
+    if bytes.len() - dims_end != data_bytes {
+        return Err(format!(
+            "dims {dims:?} declare {data_bytes} data bytes but payload has {}",
+            bytes.len() - dims_end
+        ));
+    }
+    let data: Vec<f32> = bytes[dims_end..]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Field::new(name, dims, data).map_err(|e| e.to_string())
+}
+
+/// PUT acknowledgement body: compressed (stored) and original byte
+/// counts, two u64 LE.
+pub fn encode_put_ack(stored_bytes: u64, original_bytes: u64) -> [u8; 16] {
+    let mut out = [0u8; 16];
+    out[0..8].copy_from_slice(&stored_bytes.to_le_bytes());
+    out[8..16].copy_from_slice(&original_bytes.to_le_bytes());
+    out
+}
+
+pub fn parse_put_ack(body: &[u8]) -> Result<(u64, u64)> {
+    if body.len() != 16 {
+        return Err(anyhow!("PUT ack must be 16 bytes, got {}", body.len()));
+    }
+    let stored = u64::from_le_bytes(body[0..8].try_into().unwrap());
+    let original = u64::from_le_bytes(body[8..16].try_into().unwrap());
+    Ok((stored, original))
+}
+
+/// One PUT's result as seen by a client.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PutOutcome {
+    /// Stored and durable: `(compressed_bytes, original_bytes)`.
+    Stored { compressed_bytes: u64, original_bytes: u64 },
+    /// Shed by admission control — retry later.
+    Busy,
+    /// Daemon is draining; no new work is admitted.
+    ShuttingDown,
+    /// The daemon rejected or failed the request (message attached).
+    Failed(String),
+}
+
+/// One GET's result as seen by a client.
+#[derive(Debug, Clone, PartialEq)]
+pub enum GetOutcome {
+    Field(Field),
+    NotFound,
+    Busy,
+    ShuttingDown,
+    Failed(String),
+}
+
+/// A persistent-connection protocol client over one `TcpStream`. All
+/// methods are synchronous request/response; transport errors surface as
+/// `Err` (callers reconnect), protocol statuses as typed outcomes.
+pub struct Client {
+    stream: TcpStream,
+    limits: Limits,
+}
+
+impl Client {
+    pub fn connect(addr: &str, read_timeout: Duration, write_timeout: Duration) -> Result<Client> {
+        let stream =
+            TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+        stream.set_read_timeout(Some(read_timeout))?;
+        stream.set_write_timeout(Some(write_timeout))?;
+        stream.set_nodelay(true)?;
+        Ok(Client { stream, limits: Limits::default() })
+    }
+
+    pub fn with_limits(mut self, limits: Limits) -> Self {
+        self.limits = limits;
+        self
+    }
+
+    fn send(&mut self, opcode: Opcode, name: &str, body: &[u8]) -> Result<RawResponse> {
+        let frame = encode_request_parts(opcode, name, body)?;
+        self.stream.write_all(&frame).context("writing request")?;
+        self.stream.flush().context("flushing request")?;
+        read_response(&mut self.stream, &self.limits)
+            .map_err(|e| anyhow!("reading response: {e}"))
+    }
+
+    /// Compress-and-store `field` under `field.name` (upsert).
+    pub fn put(&mut self, field: &Field) -> Result<PutOutcome> {
+        let body = encode_field_payload(field)?;
+        let resp = self.send(Opcode::Put, &field.name, &body)?;
+        Ok(match resp.status {
+            Status::Ok => {
+                let (compressed_bytes, original_bytes) = parse_put_ack(&resp.body)?;
+                PutOutcome::Stored { compressed_bytes, original_bytes }
+            }
+            Status::Busy => PutOutcome::Busy,
+            Status::ShuttingDown => PutOutcome::ShuttingDown,
+            Status::NotFound => PutOutcome::Failed("unexpected NOT_FOUND for PUT".into()),
+            Status::BadRequest | Status::ServerError => PutOutcome::Failed(resp.text()),
+        })
+    }
+
+    /// Fetch and decompress the field stored under `name`.
+    pub fn get(&mut self, name: &str) -> Result<GetOutcome> {
+        let resp = self.send(Opcode::Get, name, &[])?;
+        Ok(match resp.status {
+            Status::Ok => {
+                let field = parse_field_payload(&resp.body, name)
+                    .map_err(|e| anyhow!("decoding GET response: {e}"))?;
+                GetOutcome::Field(field)
+            }
+            Status::NotFound => GetOutcome::NotFound,
+            Status::Busy => GetOutcome::Busy,
+            Status::ShuttingDown => GetOutcome::ShuttingDown,
+            Status::BadRequest | Status::ServerError => GetOutcome::Failed(resp.text()),
+        })
+    }
+
+    pub fn ping(&mut self) -> Result<()> {
+        let resp = self.send(Opcode::Ping, "", &[])?;
+        match resp.status {
+            Status::Ok => Ok(()),
+            s => Err(anyhow!("ping answered {s:?}: {}", resp.text())),
+        }
+    }
+
+    /// Fetch the daemon's live telemetry snapshot (cusz-metrics/v1 JSON).
+    pub fn stats(&mut self) -> Result<String> {
+        let resp = self.send(Opcode::Stats, "", &[])?;
+        match resp.status {
+            Status::Ok => Ok(resp.text()),
+            s => Err(anyhow!("stats answered {s:?}: {}", resp.text())),
+        }
+    }
+
+    /// Ask the daemon to drain and exit (same path as SIGTERM).
+    pub fn shutdown_server(&mut self) -> Result<()> {
+        let resp = self.send(Opcode::Shutdown, "", &[])?;
+        match resp.status {
+            Status::Ok | Status::ShuttingDown => Ok(()),
+            s => Err(anyhow!("shutdown answered {s:?}: {}", resp.text())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn small_field() -> Field {
+        Field::new("t", vec![2, 3], (0..6).map(|i| i as f32).collect()).unwrap()
+    }
+
+    #[test]
+    fn request_roundtrips_through_cursor() {
+        for req in [
+            Request::Put { field: small_field() },
+            Request::Get { name: "a/b".into() },
+            Request::Stats,
+            Request::Ping,
+            Request::Shutdown,
+        ] {
+            let bytes = encode_request(&req).unwrap();
+            let mut cur = Cursor::new(bytes);
+            let back = read_request(&mut cur, &Limits::default()).unwrap().unwrap();
+            assert_eq!(back, req);
+            // frame boundary: a second read is a clean EOF
+            assert!(read_request(&mut cur, &Limits::default()).unwrap().is_none());
+        }
+    }
+
+    #[test]
+    fn field_payload_roundtrips_bitwise() {
+        let field = Field::new(
+            "bits",
+            vec![4],
+            vec![0.0, -0.0, f32::MIN_POSITIVE, 1.5e30],
+        )
+        .unwrap();
+        let payload = encode_field_payload(&field).unwrap();
+        let back = parse_field_payload(&payload, "bits").unwrap();
+        assert_eq!(back.dims, field.dims);
+        let a: Vec<u32> = field.data.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = back.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn oversized_declared_lengths_rejected_before_allocation() {
+        let limits = Limits { max_name_bytes: 8, max_body_bytes: 64 };
+        // name_len = u16::MAX, body_len = u32::MAX: must reject from the
+        // 12 header bytes alone
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&MAGIC);
+        frame.push(VERSION);
+        frame.push(Opcode::Put as u8);
+        frame.extend_from_slice(&u16::MAX.to_le_bytes());
+        frame.extend_from_slice(&0u16.to_le_bytes());
+        frame.extend_from_slice(&u32::MAX.to_le_bytes());
+        let err = read_request(&mut Cursor::new(frame), &limits).unwrap_err();
+        assert!(matches!(err, WireError::Malformed(_)), "{err}");
+    }
+
+    #[test]
+    fn truncated_and_garbage_frames_fail_cleanly() {
+        let full = encode_request(&Request::Put { field: small_field() }).unwrap();
+        for cut in 1..full.len() {
+            let r = read_request(&mut Cursor::new(&full[..cut]), &Limits::default());
+            assert!(r.is_err(), "cut at {cut} must not parse");
+        }
+        let garbage = [0xde, 0xad, 0xbe, 0xef, 1, 2, 3, 4, 5, 6, 7, 8];
+        assert!(read_request(&mut Cursor::new(&garbage[..]), &Limits::default()).is_err());
+        // empty input is a clean close, not an error
+        assert!(read_request(&mut Cursor::new(&[][..]), &Limits::default()).unwrap().is_none());
+    }
+
+    #[test]
+    fn field_payload_rejects_dim_data_mismatch() {
+        // dims say 2x3=6 floats, body carries 5
+        let mut payload = vec![2u8];
+        payload.extend_from_slice(&2u32.to_le_bytes());
+        payload.extend_from_slice(&3u32.to_le_bytes());
+        payload.extend_from_slice(&vec![0u8; 5 * 4]);
+        assert!(parse_field_payload(&payload, "x").is_err());
+        // zero dim
+        let mut zero = vec![1u8];
+        zero.extend_from_slice(&0u32.to_le_bytes());
+        assert!(parse_field_payload(&zero, "x").is_err());
+        // overflowing dim product must not allocate or wrap
+        let mut huge = vec![4u8];
+        for _ in 0..4 {
+            huge.extend_from_slice(&u32::MAX.to_le_bytes());
+        }
+        assert!(parse_field_payload(&huge, "x").is_err());
+    }
+
+    #[test]
+    fn response_roundtrips_and_bounds_body() {
+        let mut buf = Vec::new();
+        write_response(&mut buf, Status::Busy, b"queue full").unwrap();
+        let resp = read_response(&mut Cursor::new(&buf), &Limits::default()).unwrap();
+        assert_eq!(resp.status, Status::Busy);
+        assert_eq!(resp.text(), "queue full");
+        // declared response body over the limit is rejected from the header
+        let mut header = [0u8; RESP_HEADER_LEN];
+        header[0..2].copy_from_slice(&MAGIC);
+        header[2] = VERSION;
+        header[3] = Status::Ok as u8;
+        header[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        let limits = Limits { max_body_bytes: 16, ..Limits::default() };
+        assert!(matches!(
+            read_response(&mut Cursor::new(&header), &limits),
+            Err(WireError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn put_ack_roundtrips() {
+        let body = encode_put_ack(123, 456);
+        assert_eq!(parse_put_ack(&body).unwrap(), (123, 456));
+        assert!(parse_put_ack(&body[..8]).is_err());
+    }
+}

@@ -295,6 +295,28 @@ impl Store {
         })
     }
 
+    /// Whether `name` has a live index entry.
+    pub fn contains(&self, name: &str) -> bool {
+        self.find(name).is_some()
+    }
+
+    /// Upsert a pre-serialized `.cusza` payload under `name`: the daemon's
+    /// PUT path, where re-sending a field replaces the stored archive
+    /// instead of failing the duplicate-name check. The old entry (if any)
+    /// is dropped from the in-memory index and the new payload appended in
+    /// one index commit; the superseded payload becomes dead space for
+    /// compaction. On append failure the old entry is already gone — same
+    /// crash contract as `remove` followed by `add_bytes`.
+    pub fn put_bytes(&mut self, name: &str, payload: &[u8]) -> Result<StoreEntry> {
+        self.ensure_writer_lock()?;
+        if self.find(name).is_some() {
+            // in-memory retain only: add_bytes commits the index, so the
+            // upsert costs one index write, not two
+            self.index.entries.retain(|e| e.name != name);
+        }
+        self.add_bytes(name, payload)
+    }
+
     /// The one append path both entry points share: duplicate-name
     /// check, least-loaded shard choice, CRC-digesting streamed write,
     /// index-entry commit. `write` streams the payload into the provided
@@ -668,6 +690,31 @@ mod tests {
         assert!(store.add(&archive).is_err());
         assert!(store.get("nope").is_err());
         assert!(store.remove("nope").is_err());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn put_bytes_upserts_latest_payload() {
+        let dir = tmp_dir("store-upsert");
+        let coord = coordinator();
+        let mut store = Store::create(&dir, 1).unwrap();
+        let a = coord.compress(&sample_field(0)).unwrap();
+        let name = a.header.field_name.clone();
+        store.put_bytes(&name, &a.to_bytes()).unwrap();
+        assert!(store.contains(&name));
+        assert!(!store.contains("nope"));
+        // re-put a different payload under the same name: one live
+        // entry, old bytes become dead space, latest payload wins
+        let mut other = sample_field(0);
+        other.data[0] += 1.0;
+        other.name = name.clone();
+        let b = coord.compress(&other).unwrap();
+        store.put_bytes(&name, &b.to_bytes()).unwrap();
+        assert_eq!(store.len(), 1);
+        assert!(store.dead_bytes() > 0);
+        let restored = coord.decompress(&store.get(&name).unwrap()).unwrap();
+        assert!((restored.data[0] - other.data[0]).abs() <= 1e-3 as f32);
+        store.verify().unwrap();
         fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -136,6 +136,25 @@ impl<O: Send + 'static> FanStage<O> {
         I: Send + 'static,
         F: Fn(I) -> O + Send + Sync + 'static,
     {
+        Self::try_spawn(rx_in, workers, depth, name, f).expect("spawn fan stage")
+    }
+
+    /// Fallible spawn: thread creation failure (resource exhaustion)
+    /// becomes an error the service layer can report per-request instead
+    /// of a process abort. On partial failure the successfully spawned
+    /// workers are self-cleaning — the caller drops the input sender and
+    /// they drain to hang-up.
+    pub fn try_spawn<I, F>(
+        rx_in: Receiver<I>,
+        workers: usize,
+        depth: usize,
+        name: &str,
+        f: F,
+    ) -> std::io::Result<Self>
+    where
+        I: Send + 'static,
+        F: Fn(I) -> O + Send + Sync + 'static,
+    {
         let workers = workers.max(1);
         let (tx, rx) = sync_channel::<O>(depth.max(1));
         let shared_rx = Arc::new(Mutex::new(rx_in));
@@ -160,11 +179,10 @@ impl<O: Send + 'static> FanStage<O> {
                     if tx.send(f(item)).is_err() {
                         break; // downstream hung up
                     }
-                })
-                .expect("spawn fan stage");
+                })?;
             handles.push(handle);
         }
-        FanStage { rx, handles }
+        Ok(FanStage { rx, handles })
     }
 
     /// Number of worker threads.

@@ -593,3 +593,119 @@ fn prop_classic_sz_bound() {
         Ok(())
     });
 }
+
+// ---- wire protocol parser (serve daemon front end) ----
+//
+// Hostile-input battery in the same style as the sidecar/tag corruption
+// props above: truncated frames (the reader-side shape of slow-loris
+// partial writes), oversized declared lengths, and garbage bytes must
+// all produce clean errors under tight allocation limits — no panics,
+// no unbounded buffers.
+
+#[test]
+fn prop_wire_request_roundtrip() {
+    use cusz::serve::wire::{self, Limits, Request};
+    use std::io::Cursor;
+    check("wire request roundtrips through the parser", |rng| {
+        let req = match rng.below(4) {
+            0 => {
+                let ndim = gen::usize_in(rng, 1, 4);
+                let dims: Vec<usize> = (0..ndim).map(|_| gen::usize_in(rng, 1, 10)).collect();
+                let n: usize = dims.iter().product();
+                let data = gen::f32_vec(rng, n, 10.0);
+                let name = format!("f-{}", rng.below(1000));
+                Request::Put { field: Field::new(name, dims, data).unwrap() }
+            }
+            1 => Request::Get { name: format!("g-{}", rng.below(1000)) },
+            2 => Request::Stats,
+            _ => Request::Ping,
+        };
+        let bytes = wire::encode_request(&req).map_err(|e| e.to_string())?;
+        let mut cursor = Cursor::new(bytes);
+        let parsed = wire::read_request(&mut cursor, &Limits::default())
+            .map_err(|e| e.to_string())?
+            .ok_or("unexpected clean EOF")?;
+        if parsed != req {
+            return Err("roundtrip mismatch".into());
+        }
+        // a second read at the frame boundary is a clean EOF, not an error
+        match wire::read_request(&mut cursor, &Limits::default()) {
+            Ok(None) => Ok(()),
+            other => Err(format!("expected clean EOF after the frame, got {other:?}")),
+        }
+    });
+}
+
+#[test]
+fn prop_wire_truncation_fails_cleanly() {
+    use cusz::serve::wire::{self, Limits, Request};
+    use std::io::Cursor;
+    check("truncated frames error, never panic or parse", |rng| {
+        let req = if rng.below(2) == 0 {
+            let n = gen::usize_in(rng, 1, 64);
+            let data = gen::f32_vec(rng, n, 1.0);
+            Request::Put { field: Field::new("t", vec![n], data).unwrap() }
+        } else {
+            Request::Get { name: "a-name-long-enough-to-cut".into() }
+        };
+        let bytes = wire::encode_request(&req).map_err(|e| e.to_string())?;
+        let cut = gen::usize_in(rng, 0, bytes.len() - 1);
+        let mut cursor = Cursor::new(bytes[..cut].to_vec());
+        match wire::read_request(&mut cursor, &Limits::default()) {
+            // nothing sent at all: a clean close, not an error
+            Ok(None) if cut == 0 => Ok(()),
+            Ok(None) => Err(format!("mid-frame EOF at {cut} reported as clean close")),
+            Ok(Some(_)) => Err(format!("parsed a request from {cut} truncated bytes")),
+            Err(_) => Ok(()), // Malformed or Io — both clean outcomes
+        }
+    });
+}
+
+#[test]
+fn prop_wire_garbage_fails_cleanly() {
+    use cusz::serve::wire::{self, Limits};
+    use std::io::Cursor;
+    check("garbage bytes error under tight limits", |rng| {
+        let n = gen::usize_in(rng, 1, 96);
+        let bytes: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        let limits = Limits { max_name_bytes: 64, max_body_bytes: 4096 };
+        match wire::read_request(&mut Cursor::new(bytes), &limits) {
+            Ok(Some(_)) => Err("parsed a request out of random garbage".into()),
+            Ok(None) => Err("garbage reported as clean close".into()),
+            Err(_) => Ok(()),
+        }
+    });
+}
+
+#[test]
+fn prop_wire_oversized_declared_lengths_rejected() {
+    use cusz::serve::wire::{self, Limits, WireError};
+    use std::io::Cursor;
+    check("oversized declared lengths rejected before allocation", |rng| {
+        // hand-craft a header whose declared name/body lengths blow past
+        // the limits; the parser must reject on the declaration alone
+        let oversize_name = rng.below(2) == 0;
+        let name_len: u16 =
+            if oversize_name { gen::usize_in(rng, 65, u16::MAX as usize) as u16 } else { 4 };
+        let body_len: u32 = if oversize_name {
+            gen::usize_in(rng, 0, 4096) as u32
+        } else {
+            gen::usize_in(rng, 4097, u32::MAX as usize) as u32
+        };
+        let mut frame = Vec::new();
+        frame.extend_from_slice(b"cZ");
+        frame.push(1); // version
+        frame.push(1); // opcode PUT
+        frame.extend_from_slice(&name_len.to_le_bytes());
+        frame.extend_from_slice(&[0, 0]); // reserved
+        frame.extend_from_slice(&body_len.to_le_bytes());
+        // far less trailing data than declared: allocation of the declared
+        // size would be the bug this prop locks out
+        frame.extend_from_slice(&vec![0xAB; gen::usize_in(rng, 0, 32)]);
+        let limits = Limits { max_name_bytes: 64, max_body_bytes: 4096 };
+        match wire::read_request(&mut Cursor::new(frame), &limits) {
+            Err(WireError::Malformed(msg)) if !msg.is_empty() => Ok(()),
+            other => Err(format!("expected Malformed with a message, got {other:?}")),
+        }
+    });
+}

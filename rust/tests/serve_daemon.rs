@@ -1,0 +1,376 @@
+//! Serving test battery for `cusz serve --daemon` (L3): boot the real
+//! TCP front end on an ephemeral port and prove the service contracts —
+//! concurrent mixed put/get traffic round-trips exactly, overload sheds
+//! with `BUSY` without dropping accepted jobs, graceful drain loses
+//! nothing a client was acked for, and hostile/slow clients are bounded
+//! by the read timeout without wedging honest ones.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+use std::time::Duration;
+
+use cusz::config::{BackendKind, CuszConfig, ErrorBound};
+use cusz::container::Archive;
+use cusz::coordinator::Coordinator;
+use cusz::field::Field;
+use cusz::metrics;
+use cusz::serve::wire::{Client, GetOutcome, PutOutcome};
+use cusz::serve::{Daemon, DaemonConfig, DaemonHandle};
+use cusz::store::Store;
+use cusz::testkit::fields::{make, Regime};
+use cusz::testkit::tmp_dir;
+
+const EB: f64 = 1e-2;
+const TIMEOUT: Duration = Duration::from_secs(20);
+
+fn coordinator() -> Arc<Coordinator> {
+    Arc::new(
+        Coordinator::new(CuszConfig {
+            backend: BackendKind::Cpu,
+            eb: ErrorBound::Abs(EB),
+            threads: 1, // job-level parallelism comes from the daemon pool
+            ..Default::default()
+        })
+        .unwrap(),
+    )
+}
+
+fn spawn_daemon(tag: &str, cfg: DaemonConfig) -> (DaemonHandle, std::path::PathBuf) {
+    let dir = tmp_dir(tag);
+    let store = Store::create(&dir, 2).unwrap();
+    let handle = Daemon::spawn(coordinator(), store, "127.0.0.1:0", cfg).unwrap();
+    (handle, dir)
+}
+
+fn connect(handle: &DaemonHandle) -> Client {
+    Client::connect(&handle.addr().to_string(), TIMEOUT, TIMEOUT).unwrap()
+}
+
+fn sample_field(name: &str, i: usize) -> Field {
+    Field::new(
+        name.to_string(),
+        vec![48, 48],
+        make(Regime::ALL[i % Regime::ALL.len()], 48 * 48, i as u64),
+    )
+    .unwrap()
+}
+
+/// PUT with bounded BUSY retries (the polite-client loop).
+fn put_retry(client: &mut Client, field: &Field) -> PutOutcome {
+    for _ in 0..200 {
+        match client.put(field).unwrap() {
+            PutOutcome::Busy => std::thread::sleep(Duration::from_millis(5)),
+            other => return other,
+        }
+    }
+    PutOutcome::Busy
+}
+
+fn get_retry(client: &mut Client, name: &str) -> GetOutcome {
+    for _ in 0..200 {
+        match client.get(name).unwrap() {
+            GetOutcome::Busy => std::thread::sleep(Duration::from_millis(5)),
+            other => return other,
+        }
+    }
+    GetOutcome::Busy
+}
+
+#[test]
+fn concurrent_mixed_workload_roundtrips_byte_identical() {
+    let (handle, dir) = spawn_daemon(
+        "daemon-mixed",
+        DaemonConfig { workers: 2, queue_depth: 8, ..Default::default() },
+    );
+    let addr = handle.addr().to_string();
+
+    // local single-threaded reference: compression is lossy but
+    // deterministic, so the daemon's GET payload must be bit-identical
+    // to compress->decompress run locally with the same config
+    let reference = coordinator();
+
+    const CLIENTS: usize = 8;
+    const FIELDS_PER_CLIENT: usize = 3;
+    let failures: Arc<Mutex<Vec<String>>> = Arc::default();
+    std::thread::scope(|scope| {
+        for c in 0..CLIENTS {
+            let addr = addr.clone();
+            let reference = Arc::clone(&reference);
+            let failures = Arc::clone(&failures);
+            scope.spawn(move || {
+                let run = || -> anyhow::Result<()> {
+                    let mut client = Client::connect(&addr, TIMEOUT, TIMEOUT)?;
+                    let fields: Vec<Field> = (0..FIELDS_PER_CLIENT)
+                        .map(|j| sample_field(&format!("c{c}-f{j}"), c * FIELDS_PER_CLIENT + j))
+                        .collect();
+                    for f in &fields {
+                        match put_retry(&mut client, f) {
+                            PutOutcome::Stored { compressed_bytes, original_bytes } => {
+                                anyhow::ensure!(compressed_bytes > 0);
+                                anyhow::ensure!(original_bytes as usize == f.size_bytes());
+                            }
+                            other => anyhow::bail!("put {}: {:?}", f.name, other),
+                        }
+                    }
+                    for f in &fields {
+                        let restored = match get_retry(&mut client, &f.name) {
+                            GetOutcome::Field(r) => r,
+                            other => anyhow::bail!("get {}: {:?}", f.name, other),
+                        };
+                        anyhow::ensure!(restored.dims == f.dims, "{} dims", f.name);
+                        // within the error bound of the original...
+                        anyhow::ensure!(
+                            metrics::verify_error_bound(&f.data, &restored.data, EB).is_none(),
+                            "{} violates eb",
+                            f.name
+                        );
+                        // ...and bit-identical to the local reference
+                        let compressed = reference.compress_encoded(f)?;
+                        let archive = Archive::from_bytes(&compressed.bytes)?;
+                        let (expect, _) = reference.decompress_with_threads(&archive, 1)?;
+                        anyhow::ensure!(
+                            restored.data == expect.data,
+                            "{} not byte-identical to reference",
+                            f.name
+                        );
+                        // repeated GETs are stable
+                        match get_retry(&mut client, &f.name) {
+                            GetOutcome::Field(again) => {
+                                anyhow::ensure!(again.data == restored.data, "{} unstable", f.name)
+                            }
+                            other => anyhow::bail!("re-get {}: {:?}", f.name, other),
+                        }
+                    }
+                    Ok(())
+                };
+                if let Err(e) = run() {
+                    failures.lock().unwrap().push(format!("client {c}: {e:#}"));
+                }
+            });
+        }
+    });
+    assert!(failures.lock().unwrap().is_empty(), "{:?}", failures.lock().unwrap());
+
+    let stats = handle.shutdown().unwrap();
+    assert_eq!(stats.put.jobs, CLIENTS * FIELDS_PER_CLIENT);
+    assert_eq!(stats.put.failed, 0);
+    assert_eq!(stats.gets, 2 * CLIENTS * FIELDS_PER_CLIENT);
+    assert_eq!(stats.gets_failed, 0);
+    assert!(stats.connections >= CLIENTS);
+    assert!(stats.workers >= 1);
+    assert!(stats.put.latency_percentiles().is_some());
+    assert!(stats.get_latency_percentiles().is_some());
+    assert!(!stats.report().is_empty());
+
+    // everything acked is durable in the bundle on disk
+    let store = Store::open(&dir).unwrap();
+    assert_eq!(store.len(), CLIENTS * FIELDS_PER_CLIENT);
+    store.verify().unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn overload_sheds_busy_without_dropping_accepted_jobs() {
+    // one slow worker + depth-1 queue: a burst of simultaneous PUTs must
+    // split into explicit BUSY sheds and fully-served jobs, nothing else
+    let (handle, dir) = spawn_daemon(
+        "daemon-overload",
+        DaemonConfig {
+            workers: 1,
+            queue_depth: 1,
+            fault_put_delay: Some(Duration::from_millis(150)),
+            ..Default::default()
+        },
+    );
+    const BURST: usize = 6;
+    let barrier = Arc::new(Barrier::new(BURST));
+    let stored: Arc<Mutex<Vec<String>>> = Arc::default();
+    let busy = Arc::new(AtomicUsize::new(0));
+    std::thread::scope(|scope| {
+        for i in 0..BURST {
+            let handle = &handle;
+            let barrier = Arc::clone(&barrier);
+            let stored = Arc::clone(&stored);
+            let busy = Arc::clone(&busy);
+            scope.spawn(move || {
+                let mut client = connect(handle);
+                let field = sample_field(&format!("burst-{i}"), i);
+                barrier.wait();
+                match client.put(&field).unwrap() {
+                    PutOutcome::Stored { .. } => stored.lock().unwrap().push(field.name),
+                    PutOutcome::Busy => {
+                        busy.fetch_add(1, Ordering::SeqCst);
+                    }
+                    other => panic!("unexpected outcome: {other:?}"),
+                }
+            });
+        }
+    });
+    let stored = Arc::try_unwrap(stored).unwrap().into_inner().unwrap();
+    let busy = busy.load(Ordering::SeqCst);
+    assert_eq!(stored.len() + busy, BURST);
+    assert!(busy >= 1, "burst of {BURST} against a 1-deep queue must shed");
+    assert!(!stored.is_empty(), "at least one job must be served");
+
+    let stats = handle.shutdown().unwrap();
+    assert!(stats.shed >= busy);
+    assert_eq!(stats.put.jobs, stored.len());
+    assert_eq!(stats.put.failed, 0);
+
+    // exactly the acked names are in the store: accepted jobs were never
+    // dropped, shed jobs never half-landed
+    let store = Store::open(&dir).unwrap();
+    let mut names: Vec<String> = store.list().iter().map(|e| e.name.clone()).collect();
+    let mut acked = stored.clone();
+    names.sort();
+    acked.sort();
+    assert_eq!(names, acked);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn graceful_drain_loses_nothing_and_closes_listener() {
+    let (handle, dir) = spawn_daemon(
+        "daemon-drain",
+        DaemonConfig {
+            workers: 2,
+            queue_depth: 8,
+            fault_put_delay: Some(Duration::from_millis(40)),
+            ..Default::default()
+        },
+    );
+    let acked: Arc<Mutex<Vec<String>>> = Arc::default();
+    std::thread::scope(|scope| {
+        for c in 0..4 {
+            let handle = &handle;
+            let acked = Arc::clone(&acked);
+            scope.spawn(move || {
+                let mut client = connect(handle);
+                'fields: for j in 0..2 {
+                    let field = sample_field(&format!("drain-{c}-{j}"), c * 2 + j);
+                    loop {
+                        match client.put(&field) {
+                            Ok(PutOutcome::Stored { .. }) => {
+                                acked.lock().unwrap().push(field.name.clone());
+                                break;
+                            }
+                            Ok(PutOutcome::Busy) => {
+                                std::thread::sleep(Duration::from_millis(5));
+                            }
+                            // drain raced ahead of this request (explicit
+                            // refusal or connection closed): acceptable, as
+                            // long as nothing *acked* is lost
+                            Ok(PutOutcome::ShuttingDown) | Err(_) => break 'fields,
+                            Ok(PutOutcome::Failed(e)) => panic!("put failed: {e}"),
+                        }
+                    }
+                }
+            });
+        }
+        // trigger the drain while puts are in flight (each takes >=40ms)
+        std::thread::sleep(Duration::from_millis(60));
+        handle.trigger_drain();
+    });
+    let addr = handle.addr();
+    let stats = handle.wait().unwrap();
+    let acked = Arc::try_unwrap(acked).unwrap().into_inner().unwrap();
+    assert!(!acked.is_empty(), "drain fired before any put completed");
+    assert_eq!(stats.put.jobs, acked.len());
+
+    // listener is closed after the drain
+    assert!(
+        std::net::TcpStream::connect_timeout(&addr, Duration::from_millis(500)).is_err(),
+        "post-drain connect should be refused"
+    );
+
+    // every acked name survived into the on-disk bundle
+    let store = Store::open(&dir).unwrap();
+    for name in &acked {
+        assert!(store.contains(name), "acked '{name}' lost by drain");
+    }
+    store.verify().unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn slow_loris_is_bounded_and_does_not_wedge_honest_clients() {
+    let (handle, dir) = spawn_daemon(
+        "daemon-loris",
+        DaemonConfig {
+            workers: 1,
+            read_timeout: Duration::from_millis(300),
+            ..Default::default()
+        },
+    );
+    // hostile client: write half a header, then stall
+    let mut loris = std::net::TcpStream::connect(handle.addr()).unwrap();
+    {
+        use std::io::Write;
+        loris.write_all(&[b'c', b'Z', 1, 1]).unwrap();
+        loris.flush().unwrap();
+    }
+    // honest client is served while the loris stalls
+    let mut client = connect(&handle);
+    client.ping().unwrap();
+    let field = sample_field("honest", 0);
+    assert!(matches!(put_retry(&mut client, &field), PutOutcome::Stored { .. }));
+
+    // the loris connection is closed within ~read_timeout, not held open
+    loris.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut buf = [0u8; 64];
+    let t0 = std::time::Instant::now();
+    loop {
+        use std::io::Read;
+        match loris.read(&mut buf) {
+            Ok(0) => break,          // server closed
+            Ok(_) => continue,       // (a BadRequest response is fine too)
+            Err(_) => break,         // reset
+        }
+    }
+    assert!(t0.elapsed() < Duration::from_secs(5), "loris held past the timeout");
+
+    // garbage framing gets an explicit BadRequest then close, never a hang
+    {
+        use std::io::{Read, Write};
+        let mut garbage = std::net::TcpStream::connect(handle.addr()).unwrap();
+        garbage.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        garbage.write_all(b"XXXXXXXXXXXX").unwrap();
+        let mut resp = Vec::new();
+        let _ = garbage.read_to_end(&mut resp);
+        assert!(resp.len() >= 4, "expected a BadRequest response, got {resp:?}");
+        assert_eq!(&resp[0..2], b"cZ");
+        assert_eq!(resp[3], 3, "status byte should be BAD_REQUEST");
+    }
+
+    let stats = handle.shutdown().unwrap();
+    assert_eq!(stats.put.jobs, 1);
+    assert!(stats.bad_requests >= 1, "garbage frame must be counted");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn stats_ping_notfound_and_wire_shutdown() {
+    let (handle, dir) =
+        spawn_daemon("daemon-misc", DaemonConfig { workers: 1, ..Default::default() });
+    let mut client = connect(&handle);
+    client.ping().unwrap();
+
+    assert!(matches!(get_retry(&mut client, "nope"), GetOutcome::NotFound));
+
+    let field = sample_field("present", 1);
+    assert!(matches!(put_retry(&mut client, &field), PutOutcome::Stored { .. }));
+    assert!(matches!(get_retry(&mut client, "present"), GetOutcome::Field(_)));
+
+    // STATS returns the live cusz-metrics/v1 snapshot with daemon keys
+    let snapshot = client.stats().unwrap();
+    assert!(snapshot.contains("cusz-metrics/v1"), "{snapshot}");
+    assert!(snapshot.contains("serve.daemon."), "{snapshot}");
+
+    // wire-level SHUTDOWN drains the daemon
+    client.shutdown_server().unwrap();
+    let stats = handle.wait().unwrap();
+    assert_eq!(stats.gets_not_found, 1);
+    assert_eq!(stats.put.jobs, 1);
+    assert!(stats.requests >= 5);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
