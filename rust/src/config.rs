@@ -5,6 +5,7 @@
 use std::path::PathBuf;
 
 pub use crate::codec::{CodecGranularity, CodecSpec, EncoderChoice};
+pub use crate::store::Durability;
 
 /// Error-bound mode. The paper evaluates with the value-range-based
 /// relative bound (`valrel`, footnote 2): `abs_eb = valrel * (max - min)`.
@@ -87,6 +88,9 @@ pub struct CuszConfig {
     pub artifacts_dir: PathBuf,
     /// Bounded queue depth between pipeline stages (backpressure).
     pub queue_depth: usize,
+    /// How hard store mutations are pushed to stable storage before the
+    /// operation (and any PUT ack built on it) completes.
+    pub durability: Durability,
 }
 
 impl Default for CuszConfig {
@@ -102,6 +106,7 @@ impl Default for CuszConfig {
             threads: 0,
             artifacts_dir: PathBuf::from("artifacts"),
             queue_depth: 4,
+            durability: Durability::default(),
         }
     }
 }

@@ -7,7 +7,7 @@
 //!   roundtrip   compress+decompress a dataset field, report CR/PSNR/bound
 //!   stats       Table 9-style percentile statistics for a field
 //!   selftest    cross-validate the PJRT path against the CPU mirror
-//!   store       multi-field `.cuszb` bundle: add / get / ls / rm
+//!   store       multi-field `.cuszb` bundle: add / get / ls / rm / fsck
 //!   serve       batched streaming compression service into a store
 //!
 //! Examples:
@@ -31,7 +31,7 @@ use cusz::datagen::{self, Dataset};
 use cusz::field::Field;
 use cusz::metrics;
 use cusz::serve::{BatchCompressor, BatchConfig, BatchDecompressor};
-use cusz::store::Store;
+use cusz::store::{Durability, Store};
 use cusz::util::cli::Cli;
 
 fn main() {
@@ -84,19 +84,23 @@ fn usage() -> String {
                    --all [--out-dir DIR] [--workers W] [--queue N])\n\
        store ls    --store B.cuszb [--verify]\n\
        store rm    --store B.cuszb --name NAME\n\
+       store fsck  --store B.cuszb [--repair] [--quarantine] — integrity\n\
+                   scrub; exits 0 clean / 1 unrepaired / 2 fatal\n\
        serve       --batch --store B.cuszb --dataset D [--count N]\n\
                    [--workers W] [--queue N] [--shards N]\n\
                    [--compact-threshold F]\n\
        serve       --daemon --store B.cuszb [--addr HOST:PORT]\n\
                    [--workers W] [--queue N] [--max-conns N]\n\
                    [--read-timeout-ms N] [--write-timeout-ms N]\n\
-                   [--max-body-mb N] — long-running TCP front end\n\
+                   [--max-body-mb N] [--durability none|flush|sync]\n\
+                   [--scrub-interval-ms N] — long-running TCP front end\n\
                    (length-prefixed frames; see README 'Serving')\n\
        loadgen     [--addr HOST:PORT] [--clients N] [--requests N]\n\
                    [--put-ratio F] [--pattern steady|bursty|diurnal]\n\
                    [--elems N] [--pace-us N] [--quick] [--shutdown]\n\
-                   [--out BENCH_serve.json] — drive a running daemon,\n\
-                   emit p50/p95/p99 + throughput (cusz-bench-serve/v1)\n\
+                   [--acked-log PATH] [--out BENCH_serve.json] — drive a\n\
+                   running daemon, emit p50/p95/p99 + throughput\n\
+                   (cusz-bench-serve/v1)\n\
        bench       [--out BENCH_pipeline.json] [--datasets d1,d2,..]\n\
                    [--scale N] [--quick] — machine-readable pipeline\n\
                    throughput/ratio report (per-stage GB/s, e2e, CR)\n\
@@ -105,6 +109,8 @@ fn usage() -> String {
        --dict N, --repr adaptive|u32|u64, --codec huffman|fle|rle|auto,\n\
        --codec-granularity field|chunk, --lossless none|gzip|zstd,\n\
        --target-gbps F (prune auto backends below this decode rate),\n\
+       --durability none|flush|sync (how hard store writes are pushed to\n\
+       stable storage before the operation/ack completes),\n\
        --artifacts DIR, --metrics-out PATH (cusz-metrics/v1 JSON snapshot)"
         .to_string()
 }
@@ -140,6 +146,7 @@ fn common_config(cli: &Cli) -> Result<CuszConfig> {
         },
         target_gbps: cli.get_parsed("target-gbps")?,
         artifacts_dir: PathBuf::from(cli.get("artifacts")),
+        durability: Durability::parse(&cli.get("durability"))?,
         ..Default::default()
     })
 }
@@ -166,6 +173,13 @@ fn with_common(cli: Cli) -> Cli {
              measured decode rate misses it (0 = off)",
         )
         .opt("artifacts", "artifacts", "AOT artifact directory")
+        .opt(
+            "durability",
+            "flush",
+            "store write durability: none (page cache), flush (default; index \
+             fsynced before publish), sync (payload + index + directory fsynced \
+             before the operation — and any PUT ack — completes)",
+        )
         .opt(
             "metrics-out",
             "",
@@ -355,8 +369,36 @@ fn cmd_store(args: &[String]) -> Result<()> {
         "get" => cmd_store_get(rest),
         "ls" => cmd_store_ls(rest),
         "rm" => cmd_store_rm(rest),
-        other => bail!("unknown store action '{other}' (add|get|ls|rm)\n\n{}", usage()),
+        "fsck" => cmd_store_fsck(rest),
+        other => bail!("unknown store action '{other}' (add|get|ls|rm|fsck)\n\n{}", usage()),
     }
+}
+
+/// `cusz store fsck`: offline integrity scrub over a bundle. Exits with
+/// the report's CI-usable code — 0 clean (or fully repaired), 1
+/// unrepaired findings remain, 2 fatal (unreadable index, locked store)
+/// — instead of the generic error path, so scripts can branch on it.
+fn cmd_store_fsck(args: &[String]) -> Result<()> {
+    let cli = Cli::new("cusz store fsck", "scan (and optionally repair) a .cuszb bundle")
+        .req("store", ".cuszb bundle path")
+        .flag(
+            "repair",
+            "fix what is fixable: finish/roll back an interrupted compaction, \
+             truncate torn tails, drop corrupt entries, sweep stale artifacts",
+        )
+        .flag(
+            "quarantine",
+            "with --repair: move corrupt payloads into quarantine/ (kept for \
+             forensics; GETs answer QUARANTINED until the name is re-PUT)",
+        )
+        .parse(args)?;
+    let opts = cusz::store::FsckOptions {
+        repair: cli.has_flag("repair") || cli.has_flag("quarantine"),
+        quarantine: cli.has_flag("quarantine"),
+    };
+    let report = cusz::store::fsck::fsck(cli.get("store"), &opts)?;
+    println!("{}", report.render());
+    std::process::exit(report.exit_code());
 }
 
 fn cmd_store_add(args: &[String]) -> Result<()> {
@@ -385,6 +427,7 @@ fn cmd_store_add(args: &[String]) -> Result<()> {
             cli.get("name")
         };
         let mut store = Store::open_or_create(cli.get("store"), shards)?;
+        store.set_durability(Durability::parse(&cli.get("durability"))?);
         let entry = store.add_bytes(&name, &payload)?;
         println!("added '{}' ({} bytes, shard {})", entry.name, entry.len, entry.shard);
         return write_metrics_snapshot(&cli);
@@ -417,6 +460,7 @@ fn cmd_store_add(args: &[String]) -> Result<()> {
     let coord = Coordinator::new_with_fallback(common_config(&cli)?)?;
     let compressed = coord.compress_encoded(&field)?;
     let mut store = Store::open_or_create(cli.get("store"), shards)?;
+    store.set_durability(Durability::parse(&cli.get("durability"))?);
     // append the worker's single serialization as-is
     let entry = store.add_bytes(&compressed.archive.header.field_name, &compressed.bytes)?;
     println!("engine: {}", coord.engine_name());
@@ -591,8 +635,10 @@ fn cmd_store_rm(args: &[String]) -> Result<()> {
     let cli = Cli::new("cusz store rm", "remove a field from a bundle")
         .req("store", ".cuszb bundle path")
         .req("name", "field name to remove")
+        .opt("durability", "flush", "index publish durability: none|flush|sync")
         .parse(args)?;
     let mut store = Store::open_writable(cli.get("store"))?;
+    store.set_durability(Durability::parse(&cli.get("durability"))?);
     store.remove(&cli.get("name"))?;
     println!(
         "removed '{}' ({} fields remain; payload bytes reclaimed on compaction)",
@@ -623,6 +669,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt("read-timeout-ms", "10000", "daemon per-connection read timeout")
         .opt("write-timeout-ms", "10000", "daemon per-connection write timeout")
         .opt("max-body-mb", "64", "daemon wire-frame body limit in MB")
+        .opt(
+            "scrub-interval-ms",
+            "1000",
+            "daemon background scrubber: CRC-verify one stored entry per interval, \
+             quarantining corrupt payloads (0 = off)",
+        )
         .parse(args)?;
     if cli.has_flag("daemon") {
         if cli.has_flag("batch") {
@@ -659,6 +711,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .collect();
 
     let mut store = Store::open_or_create(cli.get("store"), cli.get_parsed("shards")?)?;
+    store.set_durability(Durability::parse(&cli.get("durability"))?);
     let batch_cfg = BatchConfig {
         workers: cli.get_parsed("workers")?,
         queue_depth: cli.get_parsed("queue")?,
@@ -702,10 +755,14 @@ fn serve_daemon(cli: &Cli) -> Result<()> {
         cfg.threads = 2;
     }
     let coord = std::sync::Arc::new(Coordinator::new_with_fallback(cfg)?);
-    let store = Store::open_or_create(cli.get("store"), cli.get_parsed("shards")?)?;
+    let mut store = Store::open_or_create(cli.get("store"), cli.get_parsed("shards")?)?;
+    // PUT acks are sent only after put_bytes returns, so the configured
+    // level decides what an acked write has survived (see README)
+    store.set_durability(Durability::parse(&cli.get("durability"))?);
     let read_ms: u64 = cli.get_parsed("read-timeout-ms")?;
     let write_ms: u64 = cli.get_parsed("write-timeout-ms")?;
     let max_body_mb: usize = cli.get_parsed("max-body-mb")?;
+    let scrub_ms: u64 = cli.get_parsed("scrub-interval-ms")?;
     let dcfg = cusz::serve::DaemonConfig {
         workers: cli.get_parsed("workers")?,
         queue_depth: cli.get_parsed("queue")?,
@@ -715,6 +772,11 @@ fn serve_daemon(cli: &Cli) -> Result<()> {
         limits: cusz::serve::Limits {
             max_body_bytes: max_body_mb.saturating_mul(1 << 20),
             ..Default::default()
+        },
+        scrub_interval: if scrub_ms == 0 {
+            None
+        } else {
+            Some(std::time::Duration::from_millis(scrub_ms))
         },
         ..Default::default()
     };
@@ -743,6 +805,12 @@ fn cmd_loadgen(args: &[String]) -> Result<()> {
         .opt("pace-us", "0", "base inter-arrival delay per client in microseconds (0 = closed loop)")
         .opt("seed", "42", "workload seed")
         .opt("out", "BENCH_serve.json", "report path, empty to skip (cusz-bench-serve/v1)")
+        .opt(
+            "acked-log",
+            "",
+            "write every daemon-acked PUT name here (one per line) — a \
+             post-crash fsck can then audit that no acked write was lost",
+        )
         .flag("quick", "CI smoke sizing: 4 clients, 96 requests, 16k elems")
         .flag("shutdown", "send a wire SHUTDOWN to the daemon after the run")
         .parse(args)?;
@@ -765,6 +833,17 @@ fn cmd_loadgen(args: &[String]) -> Result<()> {
     }
     let report = cusz::serve::loadgen::run(&lcfg)?;
     println!("{}", report.report());
+    // the acked log is the crash-recovery audit trail: write it before
+    // any failure bail so a killed daemon still leaves the evidence
+    let acked_log = cli.get("acked-log");
+    if !acked_log.is_empty() {
+        let mut lines = report.acked_names.join("\n");
+        if !lines.is_empty() {
+            lines.push('\n');
+        }
+        std::fs::write(&acked_log, lines).with_context(|| format!("writing {acked_log}"))?;
+        println!("wrote {} acked names to {acked_log}", report.acked_names.len());
+    }
     let out = cli.get("out");
     if !out.is_empty() {
         std::fs::write(&out, report.to_json()).with_context(|| format!("writing {out}"))?;

@@ -82,6 +82,16 @@ pub mod keys {
     // Daemon job-queue depth pair: depth = enqueued - dequeued.
     pub const SERVE_DAEMON_QUEUE_ENQUEUED: &str = "serve.daemon.queue.enqueued";
     pub const SERVE_DAEMON_QUEUE_DEQUEUED: &str = "serve.daemon.queue.dequeued";
+
+    // Background incremental store scrubber (daemon `--scrub-interval-ms`):
+    // entries CRC-checked, corruptions detected, fields quarantined, and
+    // payload bytes scanned. GETs refused because the field sits in
+    // quarantine are counted separately from generic errors.
+    pub const STORE_SCRUB_CHECKED: &str = "store.scrub.checked";
+    pub const STORE_SCRUB_CORRUPT: &str = "store.scrub.corrupt";
+    pub const STORE_SCRUB_QUARANTINED: &str = "store.scrub.quarantined";
+    pub const STORE_SCRUB_BYTES: &str = "store.scrub.bytes";
+    pub const SERVE_DAEMON_GET_QUARANTINED: &str = "serve.daemon.get_quarantined";
 }
 
 /// Process-wide registry of counters, stage aggregates, and histograms.

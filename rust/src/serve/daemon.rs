@@ -121,6 +121,13 @@ pub struct DaemonConfig {
     /// Test-only fault injection: every PUT sleeps this long before
     /// compressing (makes overload and drain races deterministic).
     pub fault_put_delay: Option<Duration>,
+    /// Background scrubber cadence: every interval, one stored entry is
+    /// CRC-verified (round-robin); a corrupt payload is pulled into
+    /// `quarantine/` and its later GETs answer `QUARANTINED` while the
+    /// daemon keeps serving. `None` disables the scrubber. The one-entry
+    /// -per-tick pace rate-limits the extra read I/O, and the store lock
+    /// is held only for that single check.
+    pub scrub_interval: Option<Duration>,
 }
 
 impl Default for DaemonConfig {
@@ -134,6 +141,7 @@ impl Default for DaemonConfig {
             limits: wire::Limits::default(),
             fault_panic_name: None,
             fault_put_delay: None,
+            scrub_interval: None,
         }
     }
 }
@@ -327,6 +335,17 @@ impl Daemon {
                 .context("spawning daemon worker")?;
             // on a partial spawn failure the already-running workers exit
             // when job_tx is dropped by the error return below
+            worker_handles.push(handle);
+        }
+
+        if shared.cfg.scrub_interval.is_some() {
+            let scrub_shared = Arc::clone(&shared);
+            let handle = std::thread::Builder::new()
+                .name("daemon-scrub".into())
+                .spawn(move || scrub_loop(&scrub_shared))
+                .context("spawning daemon scrubber")?;
+            // joined with the workers: the scrubber exits on the same
+            // drain flag the acceptor sets before joining worker_handles
             worker_handles.push(handle);
         }
 
@@ -586,6 +605,57 @@ fn worker_loop(shared: &Arc<Shared>, rx: &Arc<Mutex<Receiver<Job>>>) {
     }
 }
 
+/// Background incremental scrubber: every `scrub_interval`, CRC-verify
+/// one stored entry (round-robin over the index) and quarantine it on a
+/// checked-read failure. Sleeps in short chunks so a drain is honored
+/// within ~5ms regardless of the configured cadence.
+fn scrub_loop(shared: &Arc<Shared>) {
+    let interval = match shared.cfg.scrub_interval {
+        Some(i) => i,
+        None => return,
+    };
+    let mut cursor: usize = 0;
+    while !shared.draining() {
+        let mut slept = Duration::ZERO;
+        while slept < interval && !shared.draining() {
+            let chunk = Duration::from_millis(5).min(interval - slept);
+            std::thread::sleep(chunk);
+            slept += chunk;
+        }
+        if shared.draining() {
+            break;
+        }
+        let Ok(mut store) = shared.store.lock() else {
+            break; // store lock poisoned: request workers answer per-call
+        };
+        let entries = store.list();
+        if entries.is_empty() {
+            continue;
+        }
+        cursor %= entries.len();
+        let name = entries[cursor].name.clone();
+        cursor += 1;
+        match store.get_bytes_checked(&name) {
+            Ok(bytes) => {
+                obs::global().add(keys::STORE_SCRUB_CHECKED, 1);
+                obs::global().add(keys::STORE_SCRUB_BYTES, bytes.len() as u64);
+            }
+            Err(e) => {
+                obs::global().add(keys::STORE_SCRUB_CHECKED, 1);
+                obs::global().add(keys::STORE_SCRUB_CORRUPT, 1);
+                let reason = format!("scrubber: {e:#}");
+                match store.quarantine(&name, &reason) {
+                    Ok(()) => {
+                        obs::global().add(keys::STORE_SCRUB_QUARANTINED, 1);
+                        eprintln!("scrub: quarantined '{name}': {e:#}");
+                    }
+                    Err(qe) => eprintln!("scrub: '{name}' corrupt but not quarantined: {qe:#}"),
+                }
+            }
+        }
+    }
+}
+
 /// PUT: compress (panic-contained, outside the store lock), then upsert
 /// the serialized archive into the store. Every failure mode — injected
 /// panic, compression error, poisoned store lock, write error — is a
@@ -629,6 +699,19 @@ fn process_get(shared: &Shared, name: &str) -> (RawResponse, usize) {
     let bytes = match shared.store.lock() {
         Ok(store) => {
             if store.find(name).is_none() {
+                // quarantined fields are out of the live index but not
+                // forgotten: answer with the dedicated integrity status,
+                // not NOT_FOUND (the client did store this name)
+                if store.is_quarantined(name) {
+                    obs::global().add(keys::SERVE_DAEMON_GET_QUARANTINED, 1);
+                    return (
+                        RawResponse::error(
+                            Status::Quarantined,
+                            format!("'{name}' is quarantined (corrupt payload; re-PUT to clear)"),
+                        ),
+                        0,
+                    );
+                }
                 return (
                     RawResponse::error(Status::NotFound, format!("'{name}' not in store")),
                     0,

@@ -173,6 +173,10 @@ pub struct LoadReport {
     pub get: OpStats,
     pub reconnects: usize,
     pub wall_seconds: f64,
+    /// Every name whose PUT the daemon acked (`Stored`), across all
+    /// clients. A durability check after a daemon crash asserts exactly
+    /// these names survive; not serialized into the JSON report.
+    pub acked_names: Vec<String>,
 }
 
 impl LoadReport {
@@ -269,6 +273,9 @@ struct Tally {
     put: OpStats,
     get: OpStats,
     reconnects: usize,
+    /// Names whose PUT ack this client saw (drives the GET mix and the
+    /// post-crash durability audit).
+    acked: Vec<String>,
 }
 
 enum Step {
@@ -312,10 +319,11 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
         handles.into_iter().map(|h| h.join().unwrap_or_default()).collect()
     });
     report.wall_seconds = t0.elapsed().as_secs_f64();
-    for t in &tallies {
+    for t in tallies {
         report.put.merge(&t.put);
         report.get.merge(&t.get);
         report.reconnects += t.reconnects;
+        report.acked_names.extend(t.acked);
     }
     Ok(report)
 }
@@ -393,6 +401,7 @@ fn client_loop(cfg: &LoadgenConfig, client_idx: usize) -> Tally {
             break;
         }
     }
+    tally.acked = names;
     tally
 }
 
@@ -484,7 +493,7 @@ fn do_get(cfg: &LoadgenConfig, client: &mut Client, name: &str, tally: &mut Tall
                 tally.get.not_found += 1;
                 return Step::Continue;
             }
-            Ok(GetOutcome::Failed(_)) => {
+            Ok(GetOutcome::Quarantined) | Ok(GetOutcome::Failed(_)) => {
                 tally.get.failed += 1;
                 return Step::Continue;
             }

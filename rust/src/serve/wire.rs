@@ -38,7 +38,7 @@
 //! [0..2)  magic  b"cZ"
 //! [2]     version (1)
 //! [3]     status  (0=OK 1=BUSY 2=NOT_FOUND 3=BAD_REQUEST 4=SERVER_ERROR
-//!                  5=SHUTTING_DOWN)
+//!                  5=SHUTTING_DOWN 6=QUARANTINED)
 //! [4..8)  body_len  u32 LE
 //! then: body_len bytes (OK: opcode-specific payload; errors: UTF-8 text)
 //! ```
@@ -113,6 +113,10 @@ pub enum Status {
     BadRequest = 3,
     ServerError = 4,
     ShuttingDown = 5,
+    /// The named field exists but was pulled into quarantine by the
+    /// scrubber or `fsck` — a per-request integrity error, distinct from
+    /// both NOT_FOUND (never stored) and SERVER_ERROR (daemon fault).
+    Quarantined = 6,
 }
 
 impl Status {
@@ -124,6 +128,7 @@ impl Status {
             3 => Some(Status::BadRequest),
             4 => Some(Status::ServerError),
             5 => Some(Status::ShuttingDown),
+            6 => Some(Status::Quarantined),
             _ => None,
         }
     }
@@ -487,6 +492,9 @@ pub enum GetOutcome {
     NotFound,
     Busy,
     ShuttingDown,
+    /// The field exists but sits in quarantine (corrupt payload captured
+    /// by the scrubber or fsck). A fresh PUT under the same name clears it.
+    Quarantined,
     Failed(String),
 }
 
@@ -533,7 +541,11 @@ impl Client {
             Status::Busy => PutOutcome::Busy,
             Status::ShuttingDown => PutOutcome::ShuttingDown,
             Status::NotFound => PutOutcome::Failed("unexpected NOT_FOUND for PUT".into()),
-            Status::BadRequest | Status::ServerError => PutOutcome::Failed(resp.text()),
+            // PUT never answers QUARANTINED (an upsert supersedes the
+            // quarantine verdict), so fold it into the failure arm.
+            Status::BadRequest | Status::ServerError | Status::Quarantined => {
+                PutOutcome::Failed(resp.text())
+            }
         })
     }
 
@@ -549,6 +561,7 @@ impl Client {
             Status::NotFound => GetOutcome::NotFound,
             Status::Busy => GetOutcome::Busy,
             Status::ShuttingDown => GetOutcome::ShuttingDown,
+            Status::Quarantined => GetOutcome::Quarantined,
             Status::BadRequest | Status::ServerError => GetOutcome::Failed(resp.text()),
         })
     }

@@ -1,0 +1,88 @@
+//! Named crashpoints inside every store mutation, for crash-recovery
+//! testing. Setting `CUSZ_CRASHPOINT=<name>` in the environment makes the
+//! process `abort()` the moment execution reaches that point, simulating
+//! a kill -9 at the most inconvenient instant of an append, index
+//! publish, compaction swap, remove, or quarantine move. The harness in
+//! `tests/crash_recovery.rs` runs each point in a child process, lets it
+//! die, then asserts that reopen + fsck restore a consistent store with
+//! every durably-acked write intact.
+//!
+//! The registry is always compiled (it is a single cached env read and a
+//! string compare per point — nanoseconds on the hot path, and zero
+//! branches once the `OnceLock` resolves to `None` in production where
+//! the variable is unset).
+
+use std::sync::OnceLock;
+
+/// Environment variable naming the crashpoint to arm.
+pub const ENV: &str = "CUSZ_CRASHPOINT";
+
+/// Append: payload streamed into the shard's userspace buffer, nothing
+/// flushed or synced yet, index untouched.
+pub const APPEND_WRITTEN: &str = "append.written";
+/// Append: payload flushed to the OS, not yet synced, index untouched.
+pub const APPEND_FLUSHED: &str = "append.flushed";
+/// Append: payload durable (`sync_data` done under `Durability::Sync`),
+/// index commit not yet started — the classic orphan-bytes window.
+pub const APPEND_SYNCED: &str = "append.synced";
+/// Index publish: tmp file fully written, not yet synced or renamed.
+pub const INDEX_TMP_WRITTEN: &str = "index.tmp_written";
+/// Index publish: tmp renamed over the live index, parent directory not
+/// yet fsynced.
+pub const INDEX_RENAMED: &str = "index.renamed";
+/// Remove: entry dropped from the in-memory index, on-disk index not yet
+/// rewritten.
+pub const REMOVE_UNCOMMITTED: &str = "remove.uncommitted";
+/// Compaction: staging bundle fully built, swap-intent marker not yet
+/// written.
+pub const COMPACT_STAGED: &str = "compact.staged";
+/// Compaction: swap-intent marker durable, first rename not yet issued.
+pub const COMPACT_INTENT: &str = "compact.intent";
+/// Compaction: old bundle renamed aside to the graveyard, compacted
+/// staging not yet installed — the window the marker exists to cover.
+pub const COMPACT_OLD_ASIDE: &str = "compact.old_aside";
+/// Compaction: compacted bundle installed, graveyard and marker still on
+/// disk.
+pub const COMPACT_INSTALLED: &str = "compact.installed";
+/// Quarantine: payload copied into `quarantine/`, manifest not yet
+/// updated, entry still live.
+pub const QUARANTINE_COPIED: &str = "quarantine.copied";
+/// Quarantine: manifest updated, index entry not yet dropped.
+pub const QUARANTINE_MANIFESTED: &str = "quarantine.manifested";
+
+/// Every registered crashpoint; the harness iterates this list, so a new
+/// point added here is automatically exercised.
+pub const ALL: &[&str] = &[
+    APPEND_WRITTEN,
+    APPEND_FLUSHED,
+    APPEND_SYNCED,
+    INDEX_TMP_WRITTEN,
+    INDEX_RENAMED,
+    REMOVE_UNCOMMITTED,
+    COMPACT_STAGED,
+    COMPACT_INTENT,
+    COMPACT_OLD_ASIDE,
+    COMPACT_INSTALLED,
+    QUARANTINE_COPIED,
+    QUARANTINE_MANIFESTED,
+];
+
+fn armed() -> Option<&'static str> {
+    static ARMED: OnceLock<Option<String>> = OnceLock::new();
+    ARMED
+        .get_or_init(|| std::env::var(ENV).ok().filter(|s| !s.is_empty()))
+        .as_deref()
+}
+
+/// Abort the process if `point` is the armed crashpoint. No-op (one
+/// pointer load + branch) when `CUSZ_CRASHPOINT` is unset.
+#[inline]
+pub fn fire(point: &str) {
+    if let Some(target) = armed() {
+        if target == point {
+            // stderr so the harness can confirm the point actually fired
+            eprintln!("[cusz] crashpoint '{point}' armed: aborting");
+            std::process::abort();
+        }
+    }
+}

@@ -1,0 +1,642 @@
+//! `fsck` for `.cuszb` bundles: a full scrub that classifies every kind
+//! of damage a crash or bit rot can leave behind, and (optionally)
+//! repairs it in place.
+//!
+//! The scrub is deliberately tolerant where [`super::Store::open`] is
+//! strict: a damaged bundle must still *scan* so the damage can be
+//! classified and repaired, so fsck reads the index and shards itself
+//! with bounded buffers (payloads are CRC-verified in 1 MiB chunks —
+//! a hostile or huge index entry never drives an unbounded allocation).
+//!
+//! Findings and their repairs:
+//!
+//! | finding            | meaning                                   | repair |
+//! |--------------------|-------------------------------------------|--------|
+//! | interrupted-swap   | compaction swap crashed mid-rename        | finish or roll back from the intent marker |
+//! | stale-artifact     | leftover index tmp / dead-pid lock file / unmanifested quarantine copy | remove |
+//! | missing-shard      | index names a shard file that is gone     | drop its entries, recreate the (empty) shard |
+//! | bad-shard-magic    | shard exists but its 8-byte magic is wrong| rewrite the magic in place |
+//! | torn-entry         | entry overruns shard EOF (torn append) or sits inside the magic | drop the entry |
+//! | duplicate-entry    | two index entries share a name            | keep the first, drop the rest |
+//! | corrupt-payload    | payload bytes fail the indexed CRC        | quarantine (with `--quarantine`) or drop |
+//! | header-mismatch    | payload CRC is fine but the archive header disagrees with the index | quarantine or drop |
+//! | orphan-tail        | shard bytes past the last indexed byte (crashed append or dead space) | truncate (repair mode only — in scan mode tail bytes are reported as reclaimable, not flagged, since unindexed bytes were never acked) |
+//!
+//! Exit-code contract (`FsckReport::exit_code`, used by
+//! `cusz store fsck` and CI): **0** clean — or, with `--repair`, every
+//! finding repaired; **1** findings remain unrepaired; **2** fatal (index
+//! unreadable, store locked by a live writer, I/O failure).
+
+use std::collections::HashSet;
+use std::fs::{self, File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::container::bytes::{crc32, Crc32};
+use crate::container::Archive;
+
+use super::index::{StoreEntry, StoreIndex};
+use super::lock::StoreLock;
+use super::{
+    append_quarantine_manifest, fsync_dir, quarantine_file_name, shard_file_name,
+    sweep_stale_artifacts, Store, INDEX_FILE, QUARANTINE_DIR, SHARD_MAGIC,
+};
+
+/// Payloads are CRC-verified through a buffer of this size.
+const CHUNK: usize = 1 << 20;
+/// Archive headers are tiny; this prefix is plenty to re-peek one.
+const PREFIX_CAP: usize = 64 << 10;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FsckOptions {
+    /// Repair what can be repaired (implies taking the writer lock).
+    pub repair: bool,
+    /// With `repair`: move unreadable payloads into `quarantine/` instead
+    /// of discarding them outright.
+    pub quarantine: bool,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FindingKind {
+    InterruptedSwap,
+    StaleArtifact,
+    MissingShard,
+    BadShardMagic,
+    TornEntry,
+    DuplicateEntry,
+    CorruptPayload,
+    HeaderMismatch,
+    OrphanTail,
+}
+
+impl FindingKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            FindingKind::InterruptedSwap => "interrupted-swap",
+            FindingKind::StaleArtifact => "stale-artifact",
+            FindingKind::MissingShard => "missing-shard",
+            FindingKind::BadShardMagic => "bad-shard-magic",
+            FindingKind::TornEntry => "torn-entry",
+            FindingKind::DuplicateEntry => "duplicate-entry",
+            FindingKind::CorruptPayload => "corrupt-payload",
+            FindingKind::HeaderMismatch => "header-mismatch",
+            FindingKind::OrphanTail => "orphan-tail",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub kind: FindingKind,
+    pub detail: String,
+    pub repaired: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct FsckReport {
+    pub findings: Vec<Finding>,
+    /// Entries whose payloads were fully CRC-verified.
+    pub entries_checked: usize,
+    pub bytes_checked: u64,
+    /// Names moved into `quarantine/` by this run.
+    pub quarantined: Vec<String>,
+    /// Unindexed bytes at shard tails (crashed appends, dead space after
+    /// an upsert). Informational in scan mode; truncated under repair.
+    pub tail_bytes: u64,
+    /// Scrub could not proceed at all (unreadable index, locked store).
+    pub fatal: Option<String>,
+}
+
+impl FsckReport {
+    pub fn clean(&self) -> bool {
+        self.fatal.is_none() && self.findings.is_empty()
+    }
+
+    pub fn unrepaired(&self) -> usize {
+        self.findings.iter().filter(|f| !f.repaired).count()
+    }
+
+    /// 0 clean / fully repaired · 1 findings remain · 2 fatal.
+    pub fn exit_code(&self) -> i32 {
+        if self.fatal.is_some() {
+            2
+        } else if self.unrepaired() > 0 {
+            1
+        } else {
+            0
+        }
+    }
+
+    fn push(&mut self, kind: FindingKind, detail: impl Into<String>, repaired: bool) {
+        self.findings.push(Finding { kind, detail: detail.into(), repaired });
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        if let Some(fatal) = &self.fatal {
+            out.push_str(&format!("fatal: {fatal}\n"));
+        }
+        for f in &self.findings {
+            let mark = if f.repaired { "repaired" } else { "unrepaired" };
+            out.push_str(&format!("  [{}] {} ({mark})\n", f.kind.label(), f.detail));
+        }
+        for name in &self.quarantined {
+            out.push_str(&format!("  quarantined '{name}'\n"));
+        }
+        out.push_str(&format!(
+            "checked {} entr{} ({} payload bytes); {} reclaimable tail byte(s)\n",
+            self.entries_checked,
+            if self.entries_checked == 1 { "y" } else { "ies" },
+            self.bytes_checked,
+            self.tail_bytes,
+        ));
+        out.push_str(&format!(
+            "status: {} ({} finding(s), {} unrepaired) → exit {}\n",
+            if self.clean() { "clean" } else { "damaged" },
+            self.findings.len(),
+            self.unrepaired(),
+            self.exit_code()
+        ));
+        out
+    }
+}
+
+/// Scrub (and with [`FsckOptions::repair`], heal) the bundle at `dir`.
+/// Never panics on hostile input: unreadable structures become findings
+/// or a `fatal` classification, and `Err` is reserved for environmental
+/// I/O failure. A repair pass is convergent — a second scan of a
+/// repaired bundle is clean.
+pub fn fsck(dir: impl AsRef<Path>, opts: &FsckOptions) -> Result<FsckReport> {
+    let dir = dir.as_ref();
+    let mut report = FsckReport::default();
+
+    // interrupted compaction swap: recover first so the index we scrub is
+    // the installed (or rolled-back) one
+    if let Some(detail) = super::swap_leftovers(dir) {
+        if opts.repair {
+            match Store::recover_interrupted_swap(dir) {
+                Ok(()) => report.push(FindingKind::InterruptedSwap, detail, true),
+                Err(e) => {
+                    report.fatal = Some(format!("recovering interrupted swap: {e:#}"));
+                    return Ok(report);
+                }
+            }
+        } else {
+            report.push(FindingKind::InterruptedSwap, detail, false);
+        }
+    }
+
+    // repair mutates: hold the writer lock so we can't race a live writer
+    let _lock = if opts.repair {
+        match StoreLock::acquire(dir) {
+            Ok(l) => Some(l),
+            Err(e) => {
+                report.fatal = Some(format!("cannot lock store for repair: {e:#}"));
+                return Ok(report);
+            }
+        }
+    } else {
+        None
+    };
+
+    let raw = match fs::read(dir.join(INDEX_FILE)) {
+        Ok(raw) => raw,
+        Err(e) => {
+            report.fatal = Some(format!(
+                "reading store index in {}: {e} (an unreadable index is not repairable \
+                 in place — restore it from a replica)",
+                dir.display()
+            ));
+            return Ok(report);
+        }
+    };
+    let index = match StoreIndex::from_bytes(&raw) {
+        Ok(index) => index,
+        Err(e) => {
+            report.fatal = Some(format!(
+                "parsing store index in {}: {e:#} (an unreadable index is not \
+                 repairable in place — restore it from a replica)",
+                dir.display()
+            ));
+            return Ok(report);
+        }
+    };
+
+    for detail in sweep_stale_artifacts(dir, opts.repair)? {
+        report.push(FindingKind::StaleArtifact, detail, opts.repair);
+    }
+
+    // shard framing: presence, length, magic
+    let mut shard_len: Vec<Option<u64>> = Vec::with_capacity(index.n_shards as usize);
+    let mut bad_magic: Vec<u32> = Vec::new();
+    for i in 0..index.n_shards {
+        let path = dir.join(shard_file_name(i));
+        match fs::metadata(&path) {
+            Err(_) => {
+                shard_len.push(None);
+                report.push(
+                    FindingKind::MissingShard,
+                    format!("shard file {} is missing", path.display()),
+                    opts.repair, // recreated (empty) below, entries dropped
+                );
+            }
+            Ok(md) => {
+                let len = md.len();
+                let magic_ok = len >= SHARD_MAGIC.len() as u64 && {
+                    let mut m = [0u8; 8];
+                    File::open(&path)
+                        .and_then(|mut f| f.read_exact(&mut m))
+                        .map(|()| &m == SHARD_MAGIC)
+                        .unwrap_or(false)
+                };
+                if !magic_ok {
+                    bad_magic.push(i);
+                    report.push(
+                        FindingKind::BadShardMagic,
+                        format!("{} has a damaged shard magic", path.display()),
+                        opts.repair,
+                    );
+                }
+                shard_len.push(Some(len.max(SHARD_MAGIC.len() as u64)));
+            }
+        }
+    }
+
+    // entry-by-entry: bounds against the real files, then payload CRC and
+    // header digest
+    let mut keep: Vec<StoreEntry> = Vec::with_capacity(index.entries.len());
+    let mut seen: HashSet<&str> = HashSet::new();
+    let mut dropped = false;
+    for e in &index.entries {
+        if !seen.insert(e.name.as_str()) {
+            report.push(
+                FindingKind::DuplicateEntry,
+                format!("duplicate entry '{}' (keeping the first)", e.name),
+                opts.repair,
+            );
+            dropped = true;
+            continue;
+        }
+        let Some(Some(len)) = shard_len.get(e.shard as usize).copied() else {
+            report.push(
+                FindingKind::TornEntry,
+                format!("entry '{}' references missing shard {}", e.name, e.shard),
+                opts.repair,
+            );
+            dropped = true;
+            continue;
+        };
+        let end = e.offset.checked_add(e.len);
+        if e.offset < SHARD_MAGIC.len() as u64 || end.is_none() || end.unwrap() > len {
+            report.push(
+                FindingKind::TornEntry,
+                format!(
+                    "entry '{}' overruns shard {} (offset {} + len {} vs {} bytes) — torn tail",
+                    e.name, e.shard, e.offset, e.len, len
+                ),
+                opts.repair,
+            );
+            dropped = true;
+            continue;
+        }
+        let path = dir.join(shard_file_name(e.shard));
+        let verdict = match verify_payload(&path, e) {
+            Err(err) => Some((
+                FindingKind::CorruptPayload,
+                format!("entry '{}': payload unreadable ({err})", e.name),
+            )),
+            Ok(check) => {
+                report.entries_checked += 1;
+                report.bytes_checked += e.len;
+                if check.crc != e.payload_crc {
+                    Some((
+                        FindingKind::CorruptPayload,
+                        format!("entry '{}': payload CRC mismatch (bit rot?)", e.name),
+                    ))
+                } else {
+                    match Archive::peek_header(&check.prefix) {
+                        Ok(h) if crc32(&h.to_bytes()) == e.header_digest => None,
+                        Ok(_) => Some((
+                            FindingKind::HeaderMismatch,
+                            format!("entry '{}': header digest disagrees with index", e.name),
+                        )),
+                        Err(err) => Some((
+                            FindingKind::HeaderMismatch,
+                            format!("entry '{}': payload framing unreadable ({err:#})", e.name),
+                        )),
+                    }
+                }
+            }
+        };
+        match verdict {
+            None => keep.push(e.clone()),
+            Some((kind, detail)) => {
+                if opts.repair && opts.quarantine {
+                    let file = quarantine_file_name(e.shard, e.offset);
+                    let qdir = dir.join(QUARANTINE_DIR);
+                    fs::create_dir_all(&qdir)
+                        .with_context(|| format!("creating {}", qdir.display()))?;
+                    copy_range(&path, e.offset, e.len, &qdir.join(&file))
+                        .with_context(|| format!("quarantining '{}'", e.name))?;
+                    append_quarantine_manifest(
+                        dir,
+                        &e.name,
+                        &file,
+                        &format!("fsck: {}", kind.label()),
+                        true,
+                    )?;
+                    report.quarantined.push(e.name.clone());
+                    report.push(kind, format!("{detail} — moved to quarantine/"), true);
+                } else if opts.repair {
+                    report.push(
+                        kind,
+                        format!("{detail} — entry dropped (bytes remain as dead space)"),
+                        true,
+                    );
+                } else {
+                    report.push(kind, detail, false);
+                }
+                dropped = true;
+            }
+        }
+    }
+
+    // orphaned / torn tail bytes past the last indexed byte of each shard
+    let live: &[StoreEntry] = if opts.repair { &keep } else { &index.entries };
+    for i in 0..index.n_shards {
+        let Some(Some(len)) = shard_len.get(i as usize).copied() else { continue };
+        let live_end = live
+            .iter()
+            .filter(|e| e.shard == i)
+            .filter_map(|e| e.offset.checked_add(e.len))
+            .max()
+            .unwrap_or(0)
+            .max(SHARD_MAGIC.len() as u64);
+        if len > live_end {
+            report.tail_bytes += len - live_end;
+            if opts.repair {
+                let path = dir.join(shard_file_name(i));
+                let f = OpenOptions::new()
+                    .write(true)
+                    .open(&path)
+                    .with_context(|| format!("opening {}", path.display()))?;
+                f.set_len(live_end)
+                    .with_context(|| format!("truncating {}", path.display()))?;
+                f.sync_all().ok();
+                report.push(
+                    FindingKind::OrphanTail,
+                    format!(
+                        "shard {i}: {} unindexed tail byte(s) truncated",
+                        len - live_end
+                    ),
+                    true,
+                );
+            }
+        }
+    }
+
+    if opts.repair {
+        // heal shard framing now that doomed entries are dropped
+        for i in bad_magic {
+            let path = dir.join(shard_file_name(i));
+            let mut f = OpenOptions::new()
+                .write(true)
+                .open(&path)
+                .with_context(|| format!("opening {}", path.display()))?;
+            f.write_all(SHARD_MAGIC)
+                .with_context(|| format!("rewriting magic in {}", path.display()))?;
+            f.sync_all().ok();
+        }
+        for (i, len) in shard_len.iter().enumerate() {
+            if len.is_none() {
+                let path = dir.join(shard_file_name(i as u32));
+                let mut f = File::create(&path)
+                    .with_context(|| format!("recreating {}", path.display()))?;
+                f.write_all(SHARD_MAGIC)?;
+                f.sync_all().ok();
+            }
+        }
+        if dropped {
+            let healed = StoreIndex { n_shards: index.n_shards, entries: keep };
+            publish_index(dir, &healed)?;
+        }
+    }
+
+    Ok(report)
+}
+
+struct PayloadCheck {
+    crc: u32,
+    /// First `min(len, PREFIX_CAP)` bytes, for re-peeking the header.
+    prefix: Vec<u8>,
+}
+
+/// Chunked CRC over one entry's byte range — bounded memory no matter
+/// what the index claims the length is (the range was already validated
+/// against the real file size).
+fn verify_payload(path: &Path, e: &StoreEntry) -> std::io::Result<PayloadCheck> {
+    let mut f = File::open(path)?;
+    f.seek(SeekFrom::Start(e.offset))?;
+    let mut crc = Crc32::new();
+    let mut prefix = Vec::with_capacity(PREFIX_CAP.min(e.len as usize));
+    let mut buf = vec![0u8; CHUNK.min((e.len as usize).max(1))];
+    let mut remaining = e.len;
+    while remaining > 0 {
+        let n = buf.len().min(remaining as usize);
+        f.read_exact(&mut buf[..n])?;
+        crc.update(&buf[..n]);
+        if prefix.len() < PREFIX_CAP {
+            let take = n.min(PREFIX_CAP - prefix.len());
+            prefix.extend_from_slice(&buf[..take]);
+        }
+        remaining -= n as u64;
+    }
+    Ok(PayloadCheck { crc: crc.finish(), prefix })
+}
+
+fn copy_range(src: &Path, offset: u64, len: u64, dest: &Path) -> std::io::Result<()> {
+    let mut f = File::open(src)?;
+    f.seek(SeekFrom::Start(offset))?;
+    let mut out = File::create(dest)?;
+    let mut buf = vec![0u8; CHUNK.min((len as usize).max(1))];
+    let mut remaining = len;
+    while remaining > 0 {
+        let n = buf.len().min(remaining as usize);
+        f.read_exact(&mut buf[..n])?;
+        out.write_all(&buf[..n])?;
+        remaining -= n as u64;
+    }
+    out.sync_all()
+}
+
+/// Atomically publish a repaired index with the full durability
+/// discipline (tmp fsync, rename, directory fsync) — a repair must never
+/// introduce the very torn state it exists to remove.
+fn publish_index(dir: &Path, index: &StoreIndex) -> Result<()> {
+    let tmp = dir.join(format!("{INDEX_FILE}.tmp"));
+    {
+        let mut f =
+            File::create(&tmp).with_context(|| format!("writing {}", tmp.display()))?;
+        f.write_all(&index.to_bytes())?;
+        f.sync_data()
+            .with_context(|| format!("syncing {}", tmp.display()))?;
+    }
+    let final_path = dir.join(INDEX_FILE);
+    fs::rename(&tmp, &final_path)
+        .with_context(|| format!("committing {}", final_path.display()))?;
+    fsync_dir(dir)?;
+    Ok(())
+}
+
+/// Convenience for tests and callers that already hold a path: scrub
+/// without repairing.
+pub fn scan(dir: impl AsRef<Path>) -> Result<FsckReport> {
+    fsck(dir, &FsckOptions::default())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BackendKind, CuszConfig, ErrorBound};
+    use crate::coordinator::Coordinator;
+    use crate::field::Field;
+    use crate::testkit::fields::{make, Regime};
+    use crate::testkit::tmp_dir;
+
+    fn coordinator() -> Coordinator {
+        Coordinator::new(CuszConfig {
+            backend: BackendKind::Cpu,
+            eb: ErrorBound::Abs(1e-3),
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    fn seeded_store(tag: &str, n_fields: u64, n_shards: usize) -> std::path::PathBuf {
+        let dir = tmp_dir(tag);
+        let coord = coordinator();
+        let mut store = Store::create(&dir, n_shards).unwrap();
+        for i in 0..n_fields {
+            let f = Field::new(
+                format!("field-{i}"),
+                vec![32, 32],
+                make(Regime::ALL[(i % 3) as usize], 32 * 32, i),
+            )
+            .unwrap();
+            store.add(&coord.compress(&f).unwrap()).unwrap();
+        }
+        dir
+    }
+
+    #[test]
+    fn clean_store_scans_clean() {
+        let dir = seeded_store("fsck-clean", 3, 2);
+        let report = scan(&dir).unwrap();
+        assert!(report.clean(), "{}", report.render());
+        assert_eq!(report.exit_code(), 0);
+        assert_eq!(report.entries_checked, 3);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn bit_flip_is_classified_and_quarantined() {
+        let dir = seeded_store("fsck-flip", 2, 1);
+        // flip a byte in the middle of the first entry's payload
+        let store = Store::open(&dir).unwrap();
+        let e = store.list()[0].clone();
+        drop(store);
+        let path = dir.join(shard_file_name(0));
+        let mut bytes = fs::read(&path).unwrap();
+        bytes[(e.offset + e.len / 2) as usize] ^= 0xff;
+        fs::write(&path, &bytes).unwrap();
+
+        let report = scan(&dir).unwrap();
+        assert_eq!(report.exit_code(), 1);
+        assert!(report
+            .findings
+            .iter()
+            .any(|f| f.kind == FindingKind::CorruptPayload && !f.repaired));
+
+        let report =
+            fsck(&dir, &FsckOptions { repair: true, quarantine: true }).unwrap();
+        assert_eq!(report.exit_code(), 0, "{}", report.render());
+        assert_eq!(report.quarantined, vec![e.name.clone()]);
+
+        // convergent: second pass clean; the store opens and remembers
+        let report = scan(&dir).unwrap();
+        assert!(report.clean(), "{}", report.render());
+        let store = Store::open_writable(&dir).unwrap();
+        assert!(store.is_quarantined(&e.name));
+        assert!(!store.contains(&e.name));
+        store.verify().unwrap();
+        drop(store);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn torn_tail_and_overrun_entry_repair() {
+        let dir = seeded_store("fsck-torn", 2, 1);
+        let path = dir.join(shard_file_name(0));
+        // torn append: unindexed garbage at the tail
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(&[0xAB; 257]).unwrap();
+        drop(f);
+        let report = scan(&dir).unwrap();
+        assert!(report.clean(), "unindexed tail bytes are not a defect");
+        assert_eq!(report.tail_bytes, 257);
+
+        // index claiming bytes past EOF: a torn acked write
+        let raw = fs::read(dir.join(INDEX_FILE)).unwrap();
+        let mut index = StoreIndex::from_bytes(&raw).unwrap();
+        index.entries[0].len += 10_000;
+        fs::write(dir.join(INDEX_FILE), index.to_bytes()).unwrap();
+        let report = scan(&dir).unwrap();
+        assert_eq!(report.exit_code(), 1);
+        assert!(report.findings.iter().any(|f| f.kind == FindingKind::TornEntry));
+
+        let report = fsck(&dir, &FsckOptions { repair: true, quarantine: false }).unwrap();
+        assert_eq!(report.exit_code(), 0, "{}", report.render());
+        let report = scan(&dir).unwrap();
+        assert!(report.clean(), "{}", report.render());
+        // the torn entry is gone, the intact one still reads
+        let store = Store::open(&dir).unwrap();
+        assert_eq!(store.len(), 1);
+        store.verify().unwrap();
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_shard_and_unreadable_index() {
+        let dir = seeded_store("fsck-missing", 2, 2);
+        fs::remove_file(dir.join(shard_file_name(1))).unwrap();
+        let report = scan(&dir).unwrap();
+        assert_eq!(report.exit_code(), 1);
+        assert!(report.findings.iter().any(|f| f.kind == FindingKind::MissingShard));
+        let report = fsck(&dir, &FsckOptions { repair: true, quarantine: false }).unwrap();
+        assert_eq!(report.exit_code(), 0, "{}", report.render());
+        assert!(scan(&dir).unwrap().clean());
+        Store::open(&dir).unwrap().verify().unwrap();
+
+        // a trashed index is fatal (exit 2), never a panic
+        fs::write(dir.join(INDEX_FILE), b"not an index at all").unwrap();
+        let report = scan(&dir).unwrap();
+        assert_eq!(report.exit_code(), 2);
+        assert!(report.fatal.is_some());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn repair_is_locked_out_by_live_writer() {
+        let dir = seeded_store("fsck-lock", 1, 1);
+        let store = Store::open_writable(&dir).unwrap();
+        let report = fsck(&dir, &FsckOptions { repair: true, quarantine: false }).unwrap();
+        assert_eq!(report.exit_code(), 2);
+        drop(store);
+        assert_eq!(fsck(&dir, &FsckOptions { repair: true, quarantine: false })
+            .unwrap()
+            .exit_code(), 0);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -179,14 +179,35 @@ impl Drop for StoreLock {
 }
 
 #[cfg(target_os = "linux")]
-fn process_alive(pid: u32) -> bool {
+pub(crate) fn process_alive(pid: u32) -> bool {
     pid == std::process::id() || Path::new(&format!("/proc/{pid}")).exists()
 }
 
 #[cfg(not(target_os = "linux"))]
-fn process_alive(_pid: u32) -> bool {
+pub(crate) fn process_alive(_pid: u32) -> bool {
     // no portable liveness probe without extra deps: never break locks
     true
+}
+
+/// Pid embedded in a lock-machinery artifact file name — a staged
+/// `.writer.lock.<pid>.tmp` or a captured `.writer.lock.broken.<pid>.<seq>`
+/// — if `name` is one. Store recovery sweeps artifacts whose owner died
+/// mid-acquire or mid-break, which would otherwise accumulate forever.
+pub(crate) fn artifact_pid(name: &str) -> Option<u32> {
+    let rest = name.strip_prefix(".writer.lock.")?;
+    if let Some(rest) = rest.strip_prefix("broken.") {
+        let (pid, _seq) = rest.split_once('.')?;
+        return pid.parse().ok();
+    }
+    rest.strip_suffix(".tmp")?.parse().ok()
+}
+
+/// Whether the bundle's writer lock file exists and names a live process.
+pub(crate) fn holder_alive(dir: &Path) -> bool {
+    let Ok(holder) = fs::read_to_string(dir.join(LOCK_FILE)) else {
+        return false;
+    };
+    holder.trim().parse::<u32>().map(process_alive).unwrap_or(false)
 }
 
 #[cfg(test)]
@@ -235,6 +256,15 @@ mod tests {
         }
         assert!(!path.exists());
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn artifact_pid_parses_machinery_names() {
+        assert_eq!(artifact_pid(".writer.lock.1234.tmp"), Some(1234));
+        assert_eq!(artifact_pid(".writer.lock.broken.99.7"), Some(99));
+        assert_eq!(artifact_pid("writer.lock"), None);
+        assert_eq!(artifact_pid("index.cuszi"), None);
+        assert_eq!(artifact_pid(".writer.lock.notapid.tmp"), None);
     }
 
     #[test]

@@ -28,10 +28,25 @@
 //! ([`lock::StoreLock`]): the first mutating call acquires it, a second
 //! writer process fails fast instead of interleaving shard appends.
 //! Readers ([`Store::open`]) never take the lock.
+//!
+//! Crash consistency: mutations honor a [`Durability`] level (userspace
+//! flush / index fsync / full shard + directory sync), and
+//! [`Store::open_writable`] runs a recovery pass — truncating torn or
+//! orphaned shard tails past the last index-referenced byte, finishing or
+//! rolling back an interrupted compaction swap from its durable intent
+//! marker, and sweeping stale machinery files — so a crashed writer's
+//! bundle always reopens into a consistent state. Deeper damage (bit rot,
+//! index/shard disagreement) is the [`fsck`] scrubber's job; fields it
+//! can't salvage move to a `quarantine/` subdir instead of failing the
+//! bundle. [`crashpoints`] provides the injection hooks the recovery
+//! test harness aborts at.
 
+pub mod crashpoints;
+pub mod fsck;
 pub mod index;
 pub mod lock;
 
+use std::collections::BTreeSet;
 use std::fs::{self, File, OpenOptions};
 use std::io::{self, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
@@ -41,11 +56,190 @@ use anyhow::{bail, Context, Result};
 use crate::container::bytes::{crc32, Crc32};
 use crate::container::Archive;
 
+pub use fsck::{FsckOptions, FsckReport};
 pub use index::{StoreEntry, StoreIndex};
 pub use lock::StoreLock;
 
 pub const SHARD_MAGIC: &[u8; 8] = b"CUSZS1\0\0";
-const INDEX_FILE: &str = "index.cuszi";
+pub(crate) const INDEX_FILE: &str = "index.cuszi";
+/// Subdirectory (inside the bundle) holding payload copies of fields
+/// pulled from service, plus the manifest naming them.
+pub const QUARANTINE_DIR: &str = "quarantine";
+pub const QUARANTINE_MANIFEST: &str = "MANIFEST";
+
+/// How hard mutations are pushed toward stable storage before they are
+/// declared done — the ack-vs-durability contract for callers (the serve
+/// daemon acks a PUT only after [`Store::put_bytes`] returns, i.e. after
+/// this level's sync point).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Durability {
+    /// Userspace flush only: fastest; a crashed *process* loses nothing
+    /// it was told was stored, but a crashed *machine* may.
+    None,
+    /// `None` plus the index tmp file is fsynced before its rename, so a
+    /// published index is never torn (the default).
+    #[default]
+    Flush,
+    /// Full discipline: shard `sync_data` before the index references the
+    /// new bytes, index tmp fsync, and a directory fsync after every
+    /// rename (index publish, compaction swap) — an acked write survives
+    /// power loss.
+    Sync,
+}
+
+impl Durability {
+    pub fn parse(s: &str) -> Result<Durability> {
+        match s {
+            "none" => Ok(Durability::None),
+            "flush" => Ok(Durability::Flush),
+            "sync" => Ok(Durability::Sync),
+            _ => bail!("unknown durability level '{s}' (expected none|flush|sync)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Durability::None => "none",
+            Durability::Flush => "flush",
+            Durability::Sync => "sync",
+        }
+    }
+}
+
+/// fsync a directory so a rename inside it is durable. No-op off unix,
+/// where directory handles can't be synced portably.
+pub(crate) fn fsync_dir(dir: &Path) -> Result<()> {
+    if cfg!(unix) {
+        File::open(dir)
+            .and_then(|f| f.sync_all())
+            .with_context(|| format!("fsyncing directory {}", dir.display()))?;
+    }
+    Ok(())
+}
+
+fn hex_encode(bytes: &[u8]) -> String {
+    bytes.iter().map(|b| format!("{b:02x}")).collect()
+}
+
+fn hex_nibble(c: u8) -> Option<u8> {
+    match c {
+        b'0'..=b'9' => Some(c - b'0'),
+        b'a'..=b'f' => Some(c - b'a' + 10),
+        b'A'..=b'F' => Some(c - b'A' + 10),
+        _ => None,
+    }
+}
+
+fn hex_decode(s: &str) -> Option<Vec<u8>> {
+    let b = s.as_bytes();
+    if b.len() % 2 != 0 {
+        return None;
+    }
+    b.chunks(2)
+        .map(|p| Some((hex_nibble(p[0])? << 4) | hex_nibble(p[1])?))
+        .collect()
+}
+
+/// Parse `quarantine/MANIFEST` into `(field name, payload file)` rows.
+/// Tolerant: damaged or unknown lines are skipped, so a half-written
+/// manifest from a crashed quarantine move can never fail an open.
+/// Field names are hex-encoded on disk (they are arbitrary UTF-8 and may
+/// contain the manifest's own separators).
+pub(crate) fn read_quarantine_manifest(dir: &Path) -> Vec<(String, String)> {
+    let path = dir.join(QUARANTINE_DIR).join(QUARANTINE_MANIFEST);
+    let Ok(raw) = fs::read_to_string(&path) else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    for line in raw.lines() {
+        let mut parts = line.splitn(4, ' ');
+        if parts.next() != Some("q1") {
+            continue;
+        }
+        let (Some(hexname), Some(file)) = (parts.next(), parts.next()) else {
+            continue;
+        };
+        let Some(name) = hex_decode(hexname).and_then(|b| String::from_utf8(b).ok()) else {
+            continue;
+        };
+        out.push((name, file.to_string()));
+    }
+    out
+}
+
+/// Append one quarantine record; `sync` forces it to stable storage.
+pub(crate) fn append_quarantine_manifest(
+    dir: &Path,
+    name: &str,
+    file: &str,
+    reason: &str,
+    sync: bool,
+) -> Result<()> {
+    let qdir = dir.join(QUARANTINE_DIR);
+    fs::create_dir_all(&qdir)
+        .with_context(|| format!("creating {}", qdir.display()))?;
+    let path = qdir.join(QUARANTINE_MANIFEST);
+    let mut f = OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let reason: String =
+        reason.chars().map(|c| if c == '\n' || c == '\r' { ' ' } else { c }).collect();
+    writeln!(f, "q1 {} {} {}", hex_encode(name.as_bytes()), file, reason)
+        .with_context(|| format!("appending to {}", path.display()))?;
+    f.flush()?;
+    if sync {
+        f.sync_data()
+            .with_context(|| format!("syncing {}", path.display()))?;
+    }
+    Ok(())
+}
+
+/// Stale machinery files inside a bundle: a leftover `index.cuszi.tmp`
+/// from a crashed publish, lock-breaker captures / staged lock tmps whose
+/// owner died, and unmanifested `quarantine/` payload copies from a
+/// crashed quarantine move. Returns one description per artifact found;
+/// removes them when `remove` is set.
+pub(crate) fn sweep_stale_artifacts(dir: &Path, remove: bool) -> Result<Vec<String>> {
+    let mut found = Vec::new();
+    let tmp = dir.join(format!("{INDEX_FILE}.tmp"));
+    if tmp.exists() {
+        found.push(format!("half-published index {}", tmp.display()));
+        if remove {
+            fs::remove_file(&tmp)
+                .with_context(|| format!("removing {}", tmp.display()))?;
+        }
+    }
+    for entry in fs::read_dir(dir).with_context(|| format!("listing {}", dir.display()))? {
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if let Some(pid) = lock::artifact_pid(&name) {
+            if !lock::process_alive(pid) {
+                found.push(format!("stale lock artifact {name} (pid {pid} is dead)"));
+                if remove {
+                    let _ = fs::remove_file(entry.path());
+                }
+            }
+        }
+    }
+    let qdir = dir.join(QUARANTINE_DIR);
+    if qdir.is_dir() {
+        let manifested: std::collections::HashSet<String> =
+            read_quarantine_manifest(dir).into_iter().map(|(_, f)| f).collect();
+        for entry in fs::read_dir(&qdir)? {
+            let entry = entry?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if name != QUARANTINE_MANIFEST && !manifested.contains(&name) {
+                found.push(format!("unmanifested quarantine copy {name}"));
+                if remove {
+                    let _ = fs::remove_file(entry.path());
+                }
+            }
+        }
+    }
+    Ok(found)
+}
 
 // Store I/O telemetry (static-key fast path into the obs registry).
 static WRITE_BYTES: crate::obs::StaticCounter =
@@ -58,6 +252,12 @@ static COMPACTIONS: crate::obs::StaticCounter =
     crate::obs::StaticCounter::new("store.compactions");
 static COMPACTED_BYTES: crate::obs::StaticCounter =
     crate::obs::StaticCounter::new("store.compacted_bytes");
+static QUARANTINED: crate::obs::StaticCounter =
+    crate::obs::StaticCounter::new("store.quarantined");
+static RECOVER_TRUNCATED: crate::obs::StaticCounter =
+    crate::obs::StaticCounter::new("store.recover.truncated_bytes");
+static RECOVER_ARTIFACTS: crate::obs::StaticCounter =
+    crate::obs::StaticCounter::new("store.recover.artifacts");
 
 /// An open `.cuszb` bundle.
 pub struct Store {
@@ -71,10 +271,53 @@ pub struct Store {
     /// Held writer lock (None for read-only opens until a mutating call
     /// acquires it lazily).
     lock: Option<StoreLock>,
+    /// Durability level mutations honor (see [`Durability`]).
+    durability: Durability,
+    /// Names pulled from service into `quarantine/` (the manifest minus
+    /// live index entries). GETs of these get a distinct "quarantined"
+    /// classification instead of a generic miss.
+    quarantined: BTreeSet<String>,
 }
 
-fn shard_file_name(i: u32) -> String {
+pub(crate) fn shard_file_name(i: u32) -> String {
     format!("shard-{i:04}.cuszs")
+}
+
+/// Description of compaction-swap leftovers at `dir` that recovery should
+/// act on, or `None` when there is nothing to do — including when the
+/// leftovers belong to a *live* process (the swap-intent marker names the
+/// compacting pid, and the bundle lock names a live writer), which must
+/// be left alone.
+pub(crate) fn swap_leftovers(dir: &Path) -> Option<String> {
+    let paths = SwapPaths::of(dir);
+    let mut present: Vec<&str> = Vec::new();
+    if paths.marker.exists() {
+        present.push("swap-intent marker");
+    }
+    if paths.staging.exists() {
+        present.push("staging dir");
+    }
+    if paths.graveyard.exists() {
+        present.push("graveyard dir");
+    }
+    if present.is_empty() {
+        return None;
+    }
+    if let Ok(raw) = fs::read_to_string(&paths.marker) {
+        if let Some(pid) = raw.lines().nth(1).and_then(|l| l.trim().parse::<u32>().ok()) {
+            if lock::process_alive(pid) {
+                return None; // swap in flight, owner alive
+            }
+        }
+    }
+    if dir.join(INDEX_FILE).exists() && lock::holder_alive(dir) {
+        return None; // a live writer owns the bundle and its leftovers
+    }
+    Some(format!(
+        "interrupted compaction swap of {} ({} left behind)",
+        dir.display(),
+        present.join(" + ")
+    ))
 }
 
 /// Digests everything written through it, so a streamed shard append can
@@ -151,6 +394,8 @@ impl Store {
             shard_sizes: vec![SHARD_MAGIC.len() as u64; n_shards],
             defer_index: false,
             lock: Some(lock),
+            durability: Durability::default(),
+            quarantined: BTreeSet::new(),
         };
         store.write_index()?;
         Ok(store)
@@ -174,9 +419,22 @@ impl Store {
     /// Open an existing bundle and acquire the writer lock immediately
     /// (instead of lazily on the first mutating call), so lock conflicts
     /// surface before any work is done.
+    ///
+    /// This is also the crash-recovery entry point: before the strict
+    /// open it finishes or rolls back an interrupted compaction swap
+    /// (from the durable swap-intent marker), and once the lock is held
+    /// it reconciles the bundle — stale machinery files are swept and
+    /// torn or orphaned shard tails past the last index-referenced byte
+    /// are truncated away. Bytes removed this way were never committed to
+    /// the index, so they were never acked to any caller.
     pub fn open_writable(dir: impl AsRef<Path>) -> Result<Store> {
-        let mut store = Store::open(dir)?;
+        let dir = dir.as_ref();
+        Store::recover_interrupted_swap(dir)?;
+        let mut store = Store::open(dir).map_err(|e| {
+            e.context("opening for write (if the bundle is damaged, run `cusz store fsck --repair`)")
+        })?;
         store.ensure_writer_lock()?;
+        store.reconcile()?;
         Ok(store)
     }
 
@@ -232,7 +490,32 @@ impl Store {
                 bail!("duplicate entry '{}' in index", e.name);
             }
         }
-        Ok(Store { dir, index, shard_sizes, defer_index: false, lock: None })
+        // quarantined = manifest minus live entries: a field re-put after
+        // quarantine (or a manifest line from a half-finished move whose
+        // index commit never landed) is live again, manifest notwithstanding
+        let mut quarantined: BTreeSet<String> =
+            read_quarantine_manifest(&dir).into_iter().map(|(name, _)| name).collect();
+        for e in &index.entries {
+            quarantined.remove(&e.name);
+        }
+        Ok(Store {
+            dir,
+            index,
+            shard_sizes,
+            defer_index: false,
+            lock: None,
+            durability: Durability::default(),
+            quarantined,
+        })
+    }
+
+    /// Set the durability level honored by subsequent mutations.
+    pub fn set_durability(&mut self, durability: Durability) {
+        self.durability = durability;
+    }
+
+    pub fn durability(&self) -> Durability {
+        self.durability
     }
 
     /// Lazily acquire the writer lock; every mutating entry point calls
@@ -314,7 +597,10 @@ impl Store {
             // upsert costs one index write, not two
             self.index.entries.retain(|e| e.name != name);
         }
-        self.add_bytes(name, payload)
+        let entry = self.add_bytes(name, payload)?;
+        // a fresh payload supersedes any quarantine verdict on the name
+        self.quarantined.remove(name);
+        Ok(entry)
     }
 
     /// The one append path both entry points share: duplicate-name
@@ -351,10 +637,20 @@ impl Store {
         let len = write(&mut w)
             .with_context(|| format!("appending '{name}' to shard {}", path.display()))?;
         let payload_crc = w.crc();
+        crashpoints::fire(crashpoints::APPEND_WRITTEN);
         w.into_inner()
             .flush()
             .with_context(|| format!("flushing shard {}", path.display()))?;
         f.flush()?;
+        crashpoints::fire(crashpoints::APPEND_FLUSHED);
+        // the payload must be durable before the index can reference it:
+        // an index entry pointing at unsynced bytes would turn power loss
+        // into a torn read of an acked write
+        if self.durability == Durability::Sync {
+            f.sync_data()
+                .with_context(|| format!("syncing shard {}", path.display()))?;
+        }
+        crashpoints::fire(crashpoints::APPEND_SYNCED);
 
         WRITE_BYTES.add(len);
 
@@ -437,6 +733,7 @@ impl Store {
         if self.index.entries.len() == before {
             bail!("field '{name}' not in store");
         }
+        crashpoints::fire(crashpoints::REMOVE_UNCOMMITTED);
         if self.defer_index {
             return Ok(());
         }
@@ -447,6 +744,7 @@ impl Store {
     /// dead space `remove` leaves behind).
     pub fn compact_into(&self, dest: impl AsRef<Path>) -> Result<Store> {
         let mut out = Store::create(dest, self.index.n_shards as usize)?;
+        out.durability = self.durability;
         for e in &self.index.entries {
             let payload = self.read_entry(e)?;
             out.add_bytes(&e.name, &payload)?;
@@ -459,48 +757,56 @@ impl Store {
     /// rollback if the install rename fails). Returns the number of dead
     /// bytes reclaimed.
     ///
-    /// A crash exactly between the two renames can leave the bundle at
-    /// the sibling `<name>.old-tmp` path (nothing is ever half-mixed or
-    /// deleted before the new bundle is installed); recover by renaming
-    /// it back. Reader handles opened *before* the swap become invalid:
-    /// `Store` reopens shard files by path on every read, so a stale
-    /// handle's offsets no longer match the compacted shards and its
-    /// reads fail cleanly with CRC mismatches — reopen after compaction.
-    /// New opens see the compacted bundle.
+    /// A durable swap-intent marker (`<name>.swap-intent`, written before
+    /// the first rename, removed after cleanup) closes the crash window
+    /// between the two renames: [`Store::open_writable`] and `fsck` use
+    /// the marker plus whichever of the staging/graveyard directories
+    /// survive to finish or roll back a half-done swap deterministically.
+    /// Reader handles opened *before* the swap become invalid: `Store`
+    /// reopens shard files by path on every read, so a stale handle's
+    /// offsets no longer match the compacted shards and its reads fail
+    /// cleanly with CRC mismatches — reopen after compaction. New opens
+    /// see the compacted bundle.
     pub fn compact_in_place(&mut self) -> Result<u64> {
         self.ensure_writer_lock()?;
         let reclaimed = self.dead_bytes();
         if reclaimed == 0 {
             return Ok(0);
         }
-        let file_name = self
-            .dir
-            .file_name()
-            .map(|s| s.to_string_lossy().into_owned())
-            .unwrap_or_else(|| "store".into());
-        let parent = self
-            .dir
-            .parent()
-            .filter(|p| !p.as_os_str().is_empty())
-            .map(Path::to_path_buf)
-            .unwrap_or_else(|| PathBuf::from("."));
-        let staging = parent.join(format!("{file_name}.compact-tmp"));
-        let graveyard = parent.join(format!("{file_name}.old-tmp"));
-        for leftover in [&staging, &graveyard] {
+        let paths = SwapPaths::of(&self.dir);
+        for leftover in [&paths.staging, &paths.graveyard] {
             if leftover.exists() {
                 fs::remove_dir_all(leftover)
                     .with_context(|| format!("clearing stale {}", leftover.display()))?;
             }
         }
-        let mut fresh = self.compact_into(&staging)?;
+        let _ = fs::remove_file(&paths.marker);
+        let mut fresh = self.compact_into(&paths.staging)?;
+        crashpoints::fire(crashpoints::COMPACT_STAGED);
+        // Publish the swap intent durably before touching the live bundle:
+        // recovery keys off this marker (which names the compacting pid,
+        // so a concurrent opener can tell a crash from a swap in flight).
+        {
+            let mut mf = File::create(&paths.marker)
+                .with_context(|| format!("writing {}", paths.marker.display()))?;
+            write!(mf, "cuszb swap-intent v1\n{}\n", std::process::id())?;
+            mf.sync_all()
+                .with_context(|| format!("syncing {}", paths.marker.display()))?;
+        }
+        fsync_dir(&paths.parent)?;
+        crashpoints::fire(crashpoints::COMPACT_INTENT);
         // Swap. Our own (still armed) lock file travels with the renames;
         // it is only disarmed once the new bundle is fully installed, so
         // any failure path below leaves this handle locked and usable.
-        fs::rename(&self.dir, &graveyard)
-            .with_context(|| format!("moving old bundle to {}", graveyard.display()))?;
-        if let Err(e) = fs::rename(&staging, &self.dir) {
+        fs::rename(&self.dir, &paths.graveyard)
+            .with_context(|| format!("moving old bundle to {}", paths.graveyard.display()))?;
+        crashpoints::fire(crashpoints::COMPACT_OLD_ASIDE);
+        if let Err(e) = fs::rename(&paths.staging, &self.dir) {
             // roll the old bundle back into place (its lock file included)
-            let rollback = fs::rename(&graveyard, &self.dir);
+            let rollback = fs::rename(&paths.graveyard, &self.dir);
+            if rollback.is_ok() {
+                let _ = fs::remove_file(&paths.marker);
+            }
             return Err(anyhow::Error::new(e).context(match rollback {
                 Ok(()) => format!(
                     "installing compacted bundle at {} (old bundle restored)",
@@ -510,10 +816,14 @@ impl Store {
                     "installing compacted bundle at {} (rollback also failed: {r}; \
                      old bundle is at {})",
                     self.dir.display(),
-                    graveyard.display()
+                    paths.graveyard.display()
                 ),
             }));
         }
+        if self.durability == Durability::Sync {
+            fsync_dir(&paths.parent)?;
+        }
+        crashpoints::fire(crashpoints::COMPACT_INSTALLED);
         // The swap is complete: `fresh`'s lock file now sits at
         // dir/writer.lock, and our old lock file is inside the graveyard.
         // Disarm the old lock so its Drop doesn't delete the new one.
@@ -529,13 +839,21 @@ impl Store {
         self.lock = fresh.lock.take();
         // the compaction itself has fully succeeded at this point; failing
         // to clear the graveyard is not worth failing the operation over —
-        // the next compact_in_place clears stale leftovers on entry
-        if let Err(e) = fs::remove_dir_all(&graveyard) {
-            eprintln!(
+        // recovery-on-open (or the next compaction) clears stale leftovers.
+        // The marker outlives the graveyard so recovery knows a surviving
+        // graveyard belongs to a *finished* swap.
+        match fs::remove_dir_all(&paths.graveyard) {
+            Ok(()) => {
+                let _ = fs::remove_file(&paths.marker);
+                if self.durability == Durability::Sync {
+                    let _ = fsync_dir(&paths.parent);
+                }
+            }
+            Err(e) => eprintln!(
                 "[cusz] warning: compacted bundle installed, but removing the old \
-                 bundle at {} failed ({e}); it will be cleared on the next compaction",
-                graveyard.display()
-            );
+                 bundle at {} failed ({e}); it will be cleared on the next open",
+                paths.graveyard.display()
+            ),
         }
         COMPACTIONS.incr();
         COMPACTED_BYTES.add(reclaimed);
@@ -600,12 +918,222 @@ impl Store {
     fn write_index(&self) -> Result<()> {
         let tmp = self.dir.join(format!("{INDEX_FILE}.tmp"));
         let final_path = self.dir.join(INDEX_FILE);
-        fs::write(&tmp, self.index.to_bytes())
-            .with_context(|| format!("writing {}", tmp.display()))?;
+        {
+            let mut f = File::create(&tmp)
+                .with_context(|| format!("writing {}", tmp.display()))?;
+            f.write_all(&self.index.to_bytes())
+                .with_context(|| format!("writing {}", tmp.display()))?;
+            crashpoints::fire(crashpoints::INDEX_TMP_WRITTEN);
+            // the tmp must be durable before the rename publishes it, or a
+            // power cut can leave a torn index at the final path
+            if self.durability >= Durability::Flush {
+                f.sync_data()
+                    .with_context(|| format!("syncing {}", tmp.display()))?;
+            }
+        }
         fs::rename(&tmp, &final_path)
             .with_context(|| format!("committing {}", final_path.display()))?;
+        crashpoints::fire(crashpoints::INDEX_RENAMED);
+        if self.durability == Durability::Sync {
+            fsync_dir(&self.dir)?;
+        }
         Ok(())
     }
+
+    /// Pull a field from service into `quarantine/`: its payload bytes are
+    /// copied aside (unverified — the field is being quarantined precisely
+    /// because they are suspect), recorded in the quarantine manifest, and
+    /// the index entry dropped. The name then reads back as *quarantined*
+    /// rather than missing ([`Store::is_quarantined`]), until a fresh
+    /// `put_bytes` under the same name supersedes the verdict.
+    pub fn quarantine(&mut self, name: &str, reason: &str) -> Result<()> {
+        self.ensure_writer_lock()?;
+        let e = self
+            .find(name)
+            .with_context(|| format!("field '{name}' not in store"))?
+            .clone();
+        let path = self.shard_path(e.shard);
+        let mut f = File::open(&path)
+            .with_context(|| format!("opening shard {}", path.display()))?;
+        f.seek(SeekFrom::Start(e.offset))?;
+        let mut buf = vec![0u8; e.len as usize];
+        f.read_exact(&mut buf)
+            .with_context(|| format!("reading '{name}' from {}", path.display()))?;
+        let qdir = self.dir.join(QUARANTINE_DIR);
+        fs::create_dir_all(&qdir)
+            .with_context(|| format!("creating {}", qdir.display()))?;
+        let file = quarantine_file_name(e.shard, e.offset);
+        let qpath = qdir.join(&file);
+        let mut qf = File::create(&qpath)
+            .with_context(|| format!("writing {}", qpath.display()))?;
+        qf.write_all(&buf)?;
+        if self.durability == Durability::Sync {
+            qf.sync_all()?;
+            fsync_dir(&qdir)?;
+        }
+        crashpoints::fire(crashpoints::QUARANTINE_COPIED);
+        append_quarantine_manifest(
+            &self.dir,
+            name,
+            &file,
+            reason,
+            self.durability == Durability::Sync,
+        )?;
+        crashpoints::fire(crashpoints::QUARANTINE_MANIFESTED);
+        self.index.entries.retain(|x| x.name != name);
+        if !self.defer_index {
+            self.write_index()?;
+        }
+        self.quarantined.insert(name.to_string());
+        QUARANTINED.incr();
+        Ok(())
+    }
+
+    /// Whether `name` sits in quarantine (manifested, no live entry).
+    pub fn is_quarantined(&self, name: &str) -> bool {
+        self.quarantined.contains(name)
+    }
+
+    /// Quarantined names, sorted.
+    pub fn quarantined_names(&self) -> Vec<&str> {
+        self.quarantined.iter().map(String::as_str).collect()
+    }
+
+    /// Finish or roll back a compaction swap that crashed mid-flight,
+    /// using the swap-intent marker plus whichever of the staging and
+    /// graveyard directories survive. Also sweeps marker-less stale
+    /// staging/graveyard leftovers. Safe against a live compactor: the
+    /// marker names the compacting pid and the bundle lock names a live
+    /// writer, and both are left alone while their owner is alive.
+    pub(crate) fn recover_interrupted_swap(dir: &Path) -> Result<()> {
+        if swap_leftovers(dir).is_none() {
+            return Ok(());
+        }
+        let paths = SwapPaths::of(dir);
+        let dir_live = dir.join(INDEX_FILE).exists();
+        if paths.marker.exists() {
+            if dir_live {
+                // swap never started (staging still aside) or fully
+                // completed with cleanup interrupted — either way the
+                // bundle at `dir` is authoritative; discard the side dirs
+                remove_stale_dir(&paths.staging)?;
+                remove_stale_dir(&paths.graveyard)?;
+            } else if Store::open(&paths.staging).is_ok() {
+                // old bundle renamed aside, install crashed: finish the swap
+                fs::rename(&paths.staging, dir).with_context(|| {
+                    format!("installing staged bundle at {}", dir.display())
+                })?;
+                fsync_dir(&paths.parent)?;
+                remove_stale_dir(&paths.graveyard)?;
+            } else if paths.graveyard.join(INDEX_FILE).exists() {
+                // staging missing or invalid: roll the old bundle back
+                fs::rename(&paths.graveyard, dir).with_context(|| {
+                    format!("rolling old bundle back to {}", dir.display())
+                })?;
+                fsync_dir(&paths.parent)?;
+                remove_stale_dir(&paths.staging)?;
+            } else {
+                bail!(
+                    "interrupted compaction of {}: neither the staging nor the \
+                     graveyard directory holds a usable bundle",
+                    dir.display()
+                );
+            }
+            let _ = fs::remove_file(&paths.marker);
+            let _ = fsync_dir(&paths.parent);
+            RECOVER_ARTIFACTS.incr();
+        } else {
+            // no marker: a stale staging dir is always discardable, and a
+            // graveyard shadowing a missing bundle is a pre-marker-era
+            // crash between the two renames — roll it back
+            if !dir_live && paths.graveyard.join(INDEX_FILE).exists() {
+                fs::rename(&paths.graveyard, dir).with_context(|| {
+                    format!("rolling old bundle back to {}", dir.display())
+                })?;
+                fsync_dir(&paths.parent)?;
+            }
+            remove_stale_dir(&paths.staging)?;
+            remove_stale_dir(&paths.graveyard)?;
+        }
+        Ok(())
+    }
+
+    /// Post-lock reconciliation: sweep stale machinery files and truncate
+    /// every shard back to its last index-referenced byte, reclaiming
+    /// torn tails from crashed appends and orphaned (never-indexed, never-
+    /// acked) payload bytes.
+    fn reconcile(&mut self) -> Result<()> {
+        let swept = sweep_stale_artifacts(&self.dir, true)?;
+        RECOVER_ARTIFACTS.add(swept.len() as u64);
+        for shard in 0..self.index.n_shards {
+            let live_end = self
+                .index
+                .entries
+                .iter()
+                .filter(|e| e.shard == shard)
+                .map(|e| e.offset + e.len)
+                .max()
+                .unwrap_or(0)
+                .max(SHARD_MAGIC.len() as u64);
+            let actual = self.shard_sizes[shard as usize];
+            if actual > live_end {
+                let path = self.shard_path(shard);
+                let f = OpenOptions::new()
+                    .write(true)
+                    .open(&path)
+                    .with_context(|| format!("opening shard {}", path.display()))?;
+                f.set_len(live_end)
+                    .with_context(|| format!("truncating {}", path.display()))?;
+                if self.durability == Durability::Sync {
+                    f.sync_all()?;
+                }
+                self.shard_sizes[shard as usize] = live_end;
+                RECOVER_TRUNCATED.add(actual - live_end);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The sibling paths a compaction swap runs through.
+pub(crate) struct SwapPaths {
+    pub(crate) parent: PathBuf,
+    pub(crate) staging: PathBuf,
+    pub(crate) graveyard: PathBuf,
+    pub(crate) marker: PathBuf,
+}
+
+impl SwapPaths {
+    pub(crate) fn of(dir: &Path) -> SwapPaths {
+        let file_name = dir
+            .file_name()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "store".into());
+        let parent = dir
+            .parent()
+            .filter(|p| !p.as_os_str().is_empty())
+            .map(Path::to_path_buf)
+            .unwrap_or_else(|| PathBuf::from("."));
+        SwapPaths {
+            staging: parent.join(format!("{file_name}.compact-tmp")),
+            graveyard: parent.join(format!("{file_name}.old-tmp")),
+            marker: parent.join(format!("{file_name}.swap-intent")),
+            parent,
+        }
+    }
+}
+
+pub(crate) fn quarantine_file_name(shard: u32, offset: u64) -> String {
+    format!("q-{shard:04}-{offset:012}.bin")
+}
+
+fn remove_stale_dir(path: &Path) -> Result<()> {
+    if path.exists() {
+        fs::remove_dir_all(path)
+            .with_context(|| format!("clearing stale {}", path.display()))?;
+        RECOVER_ARTIFACTS.incr();
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -909,6 +1437,167 @@ mod tests {
         let mut store = Store::create(&dir, 1).unwrap();
         assert!(store.add_bytes("junk", b"definitely not an archive").is_err());
         assert!(store.is_empty());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn durability_parses_and_orders() {
+        assert_eq!(Durability::parse("none").unwrap(), Durability::None);
+        assert_eq!(Durability::parse("flush").unwrap(), Durability::Flush);
+        assert_eq!(Durability::parse("sync").unwrap(), Durability::Sync);
+        assert!(Durability::parse("paranoid").is_err());
+        assert!(Durability::None < Durability::Flush);
+        assert!(Durability::Flush < Durability::Sync);
+        assert_eq!(Durability::default(), Durability::Flush);
+        assert_eq!(Durability::Sync.name(), "sync");
+    }
+
+    #[test]
+    fn sync_durability_exercises_every_mutation() {
+        let dir = tmp_dir("store-sync");
+        let coord = coordinator();
+        let mut store = Store::create(&dir, 2).unwrap();
+        store.set_durability(Durability::Sync);
+        assert_eq!(store.durability(), Durability::Sync);
+        for i in 0..4 {
+            store.add(&coord.compress(&sample_field(i)).unwrap()).unwrap();
+        }
+        store.remove("field-1").unwrap();
+        assert!(store.compact_in_place().unwrap() > 0);
+        assert_eq!(store.durability(), Durability::Sync, "survives the swap");
+        store.verify().unwrap();
+        drop(store);
+        let store = Store::open(&dir).unwrap();
+        assert_eq!(store.len(), 3);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn torn_tail_truncated_on_writable_open() {
+        let dir = tmp_dir("store-torn-tail");
+        let coord = coordinator();
+        {
+            let mut store = Store::create(&dir, 1).unwrap();
+            for i in 0..2 {
+                store.add(&coord.compress(&sample_field(i)).unwrap()).unwrap();
+            }
+        }
+        // a crashed append leaves unindexed garbage at the shard tail
+        let path = dir.join(shard_file_name(0));
+        let clean_len = fs::metadata(&path).unwrap().len();
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(&[0x5A; 1234]).unwrap();
+        drop(f);
+        // a read-only open keeps the strict view (tail is dead space)…
+        assert!(Store::open(&dir).unwrap().dead_bytes() >= 1234);
+        // …and a writable open reclaims it
+        let store = Store::open_writable(&dir).unwrap();
+        assert_eq!(store.len(), 2);
+        assert_eq!(fs::metadata(&path).unwrap().len(), clean_len);
+        store.verify().unwrap();
+        drop(store);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn stale_artifacts_swept_on_writable_open() {
+        let dir = tmp_dir("store-stale");
+        let coord = coordinator();
+        {
+            let mut store = Store::create(&dir, 1).unwrap();
+            store.add(&coord.compress(&sample_field(0)).unwrap()).unwrap();
+        }
+        // crashed index publish + dead writer's lock machinery
+        fs::write(dir.join("index.cuszi.tmp"), b"half-written index").unwrap();
+        fs::write(dir.join(".writer.lock.4000000000.tmp"), b"4000000000").unwrap();
+        fs::write(dir.join(".writer.lock.broken.4000000001.0"), b"junk").unwrap();
+        let store = Store::open_writable(&dir).unwrap();
+        store.verify().unwrap();
+        drop(store);
+        let leftovers: Vec<String> = fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n.contains(".tmp") || n.contains("broken"))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn interrupted_swap_rolls_back_from_graveyard() {
+        let dir = tmp_dir("store-swap-rb");
+        let coord = coordinator();
+        {
+            let mut store = Store::create(&dir, 1).unwrap();
+            for i in 0..3 {
+                store.add(&coord.compress(&sample_field(i)).unwrap()).unwrap();
+            }
+        }
+        // crash window: old bundle renamed aside, install never happened
+        let paths = SwapPaths::of(&dir);
+        fs::rename(&dir, &paths.graveyard).unwrap();
+        fs::write(&paths.marker, "cuszb swap-intent v1\n4000000000\n").unwrap();
+        let store = Store::open_writable(&dir).unwrap();
+        assert_eq!(store.len(), 3);
+        store.verify().unwrap();
+        assert!(!paths.marker.exists());
+        assert!(!paths.graveyard.exists());
+        drop(store);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn interrupted_swap_completes_from_staging() {
+        let dir = tmp_dir("store-swap-fwd");
+        let coord = coordinator();
+        let paths = SwapPaths::of(&dir);
+        {
+            let mut staged = Store::create(&paths.staging, 1).unwrap();
+            for i in 0..2 {
+                staged.add(&coord.compress(&sample_field(i)).unwrap()).unwrap();
+            }
+        }
+        // crash window: intent durable, old bundle renamed aside, install
+        // of the staged bundle never happened
+        fs::write(&paths.marker, "cuszb swap-intent v1\n4000000000\n").unwrap();
+        fs::remove_dir_all(&dir).unwrap(); // tmp_dir pre-created it empty
+        let store = Store::open_writable(&dir).unwrap();
+        assert_eq!(store.len(), 2);
+        store.verify().unwrap();
+        assert!(!paths.marker.exists());
+        assert!(!paths.staging.exists());
+        drop(store);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn quarantine_pulls_field_and_reopen_remembers() {
+        let dir = tmp_dir("store-quarantine");
+        let coord = coordinator();
+        let mut store = Store::create(&dir, 1).unwrap();
+        let a = coord.compress(&sample_field(0)).unwrap();
+        let b = coord.compress(&sample_field(1)).unwrap();
+        store.add(&a).unwrap();
+        store.add(&b).unwrap();
+        store.quarantine("field-0", "test: simulated bit rot").unwrap();
+        assert!(store.is_quarantined("field-0"));
+        assert!(!store.contains("field-0"));
+        assert!(store.get("field-0").is_err());
+        assert!(store.contains("field-1"));
+        assert_eq!(store.quarantined_names(), vec!["field-0"]);
+        // the payload copy and manifest are on disk
+        assert!(dir.join(QUARANTINE_DIR).join(QUARANTINE_MANIFEST).exists());
+        drop(store);
+        // reopen remembers the verdict
+        let mut store = Store::open_writable(&dir).unwrap();
+        assert!(store.is_quarantined("field-0"));
+        // a fresh put under the same name supersedes it
+        store.put_bytes("field-0", &a.to_bytes()).unwrap();
+        assert!(!store.is_quarantined("field-0"));
+        assert!(store.contains("field-0"));
+        drop(store);
+        let store = Store::open(&dir).unwrap();
+        assert!(!store.is_quarantined("field-0"));
         fs::remove_dir_all(&dir).unwrap();
     }
 }

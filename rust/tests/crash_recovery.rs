@@ -1,0 +1,211 @@
+//! Crashpoint-injection harness: for every registered crashpoint
+//! (`cusz::store::crashpoints::ALL`), run the covering store mutation in
+//! a child process with `CUSZ_CRASHPOINT` armed, let the child `abort()`
+//! at the point, then prove recovery from the wreckage:
+//!
+//! - `cusz store fsck --repair --quarantine` converges (exit 0, and a
+//!   second scan is clean);
+//! - the store reopens writable and fully verifies;
+//! - every write the driver had durably acked *before* the crash is
+//!   still present and bit-identical;
+//! - no torn swap state (staging / graveyard / swap-intent marker) and
+//!   no stale machinery files survive.
+//!
+//! The child is this same test binary re-invoked with `--exact
+//! crash_child`; the `crash_child` test is a no-op unless `CUSZ_CRASH_OP`
+//! is set, so it is invisible to a normal `cargo test` run.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::process::Command;
+
+use cusz::config::{BackendKind, CuszConfig, ErrorBound};
+use cusz::coordinator::Coordinator;
+use cusz::field::Field;
+use cusz::store::fsck::{fsck, scan};
+use cusz::store::{crashpoints, Durability, FsckOptions, Store};
+use cusz::testkit::fields::{make, Regime};
+use cusz::testkit::tmp_dir;
+
+/// Which store mutation the child performs (driver -> child).
+const OP_ENV: &str = "CUSZ_CRASH_OP";
+/// The bundle directory the child operates on (driver -> child).
+const DIR_ENV: &str = "CUSZ_CRASH_DIR";
+/// Printed by the child only if its op ran to completion — i.e. the
+/// armed crashpoint never fired, which the driver treats as a harness
+/// bug (a registered point its op does not reach).
+const DONE: &str = "CRASH-CHILD-COMPLETED";
+
+fn coordinator() -> Coordinator {
+    Coordinator::new(CuszConfig {
+        backend: BackendKind::Cpu,
+        eb: ErrorBound::Abs(1e-3),
+        threads: 1,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+fn payload_for(name: &str, seed: u64) -> Vec<u8> {
+    let f = Field::new(
+        name.to_string(),
+        vec![32, 32],
+        make(Regime::ALL[(seed % 3) as usize], 32 * 32, seed),
+    )
+    .unwrap();
+    coordinator().compress_encoded(&f).unwrap().bytes
+}
+
+/// Build a fresh seed bundle for one crash run. Returns the exact payload
+/// bytes of every durably-acked field — the driver's ground truth for the
+/// post-crash bit-identity audit. `f_bad` (quarantine op only) is
+/// deliberately corrupted after its ack and excluded from the map.
+fn seed_store(tag: &str, op: &str) -> (PathBuf, BTreeMap<String, Vec<u8>>) {
+    let dir = tmp_dir(tag);
+    let mut store = Store::create(&dir, 2).unwrap();
+    store.set_durability(Durability::Sync);
+    let mut kept = BTreeMap::new();
+    for i in 0..3u64 {
+        let name = format!("f{i}");
+        let payload = payload_for(&name, i);
+        store.add_bytes(&name, &payload).unwrap();
+        kept.insert(name, payload);
+    }
+    match op {
+        "compact" => {
+            // re-put f1 so the bundle carries dead bytes worth compacting
+            let p = kept["f1"].clone();
+            store.put_bytes("f1", &p).unwrap();
+            assert!(store.dead_bytes() > 0);
+        }
+        "quarantine" => {
+            let p = payload_for("f_bad", 9);
+            let e = store.put_bytes("f_bad", &p).unwrap();
+            drop(store);
+            // flip a payload byte so the child has a real corruption to move
+            let path = dir.join(format!("shard-{:04}.cuszs", e.shard));
+            let mut bytes = std::fs::read(&path).unwrap();
+            bytes[(e.offset + e.len / 2) as usize] ^= 0xff;
+            std::fs::write(&path, &bytes).unwrap();
+            return (dir, kept);
+        }
+        _ => {}
+    }
+    drop(store);
+    (dir, kept)
+}
+
+/// The mutation that covers a crashpoint's namespace. `index.*` points
+/// fire inside every index publish; the append op reaches them.
+fn op_for(point: &str) -> &'static str {
+    for (prefix, op) in [
+        ("append.", "append"),
+        ("index.", "append"),
+        ("remove.", "remove"),
+        ("compact.", "compact"),
+        ("quarantine.", "quarantine"),
+    ] {
+        if point.starts_with(prefix) {
+            return op;
+        }
+    }
+    panic!("crashpoint '{point}' has no covering op — extend op_for()");
+}
+
+/// Child half of the harness: performs one store mutation under
+/// `Durability::Sync` with a crashpoint armed via the environment, and
+/// dies mid-operation when execution reaches it.
+#[test]
+fn crash_child() {
+    let Ok(op) = std::env::var(OP_ENV) else {
+        return; // normal test run: nothing to do
+    };
+    let dir = PathBuf::from(std::env::var(DIR_ENV).expect("CUSZ_CRASH_DIR not set"));
+    let mut store = Store::open_writable(&dir).expect("child: open store");
+    store.set_durability(Durability::Sync);
+    match op.as_str() {
+        "append" => {
+            let payload = payload_for("crashme", 7);
+            store.put_bytes("crashme", &payload).expect("child: put");
+        }
+        "remove" => {
+            store.remove("f0").expect("child: remove");
+        }
+        "compact" => {
+            store.compact_in_place().expect("child: compact");
+        }
+        "quarantine" => {
+            store.quarantine("f_bad", "harness-injected corruption").expect("child: quarantine");
+        }
+        other => panic!("child: unknown crash op '{other}'"),
+    }
+    println!("{DONE}");
+}
+
+#[test]
+fn every_crashpoint_recovers_without_losing_acked_writes() {
+    let exe = std::env::current_exe().expect("test binary path");
+    for &point in crashpoints::ALL {
+        let op = op_for(point);
+        let tag = format!("crash-{}", point.replace('.', "-"));
+        let (dir, kept) = seed_store(&tag, op);
+
+        let out = Command::new(&exe)
+            .args(["crash_child", "--exact", "--nocapture", "--test-threads=1"])
+            .env(crashpoints::ENV, point)
+            .env(OP_ENV, op)
+            .env(DIR_ENV, &dir)
+            .output()
+            .expect("spawning crash child");
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        assert!(
+            !out.status.success(),
+            "{point}: child exited cleanly instead of aborting\n{stdout}"
+        );
+        assert!(
+            !stdout.contains(DONE),
+            "{point}: the armed crashpoint never fired — '{op}' ran to completion\n{stdout}"
+        );
+
+        // recovery: repair converges, and a second scan finds nothing
+        let report = fsck(&dir, &FsckOptions { repair: true, quarantine: true })
+            .unwrap_or_else(|e| panic!("{point}: fsck errored: {e:#}"));
+        assert_eq!(report.exit_code(), 0, "{point}: repair left findings:\n{}", report.render());
+        let rescan = scan(&dir).unwrap_or_else(|e| panic!("{point}: rescan errored: {e:#}"));
+        assert!(rescan.clean(), "{point}: repair did not converge:\n{}", rescan.render());
+
+        // the store reopens writable (its own reconciliation path) and
+        // every durably-acked write survived, bit for bit
+        let store = Store::open_writable(&dir)
+            .unwrap_or_else(|e| panic!("{point}: reopen failed: {e:#}"));
+        store.verify().unwrap_or_else(|e| panic!("{point}: verify failed: {e:#}"));
+        for (name, payload) in &kept {
+            assert!(store.contains(name), "{point}: acked field '{name}' lost");
+            let got = store
+                .get_bytes(name)
+                .unwrap_or_else(|e| panic!("{point}: reading acked '{name}': {e:#}"));
+            assert_eq!(&got, payload, "{point}: acked field '{name}' not bit-identical");
+        }
+        drop(store);
+
+        // no torn swap state outlives recovery
+        let parent = dir.parent().unwrap().to_path_buf();
+        let base = dir.file_name().unwrap().to_string_lossy().into_owned();
+        for suffix in ["compact-tmp", "old-tmp", "swap-intent"] {
+            let p = parent.join(format!("{base}.{suffix}"));
+            assert!(!p.exists(), "{point}: leftover swap state {}", p.display());
+        }
+        // ... and no stale machinery inside the bundle (the writer lock
+        // itself was released when the store handle dropped above)
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let n = entry.unwrap().file_name().to_string_lossy().into_owned();
+            assert!(
+                !n.ends_with(".tmp") && !n.starts_with(".writer.lock."),
+                "{point}: stale artifact '{n}' survived recovery"
+            );
+            assert_ne!(n, "writer.lock", "{point}: writer lock leaked");
+        }
+
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -238,3 +238,95 @@ fn archive_corruption_fails_cleanly_at_every_layer() {
     assert!(store.verify().is_err());
     std::fs::remove_dir_all(&dir).unwrap();
 }
+
+#[test]
+fn scrubber_quarantines_bit_rot_while_daemon_keeps_serving() {
+    let dir = tmp_dir("fault-scrub");
+    let store = Store::create(&dir, 1).unwrap();
+    let handle = Daemon::spawn(
+        coordinator(),
+        store,
+        "127.0.0.1:0",
+        DaemonConfig {
+            workers: 1,
+            scrub_interval: Some(Duration::from_millis(5)),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let mut client = Client::connect(&handle.addr().to_string(), TIMEOUT, TIMEOUT).unwrap();
+
+    put_ok(&mut client, &sample_field("good", 0));
+    put_ok(&mut client, &sample_field("rotten", 1));
+
+    // counters are process-global across the test binary: assert deltas
+    let obs = cusz::obs::global();
+    let corrupt_before = obs.counter_value(cusz::obs::keys::STORE_SCRUB_CORRUPT);
+    let quarantined_before = obs.counter_value(cusz::obs::keys::STORE_SCRUB_QUARANTINED);
+    let get_q_before = obs.counter_value(cusz::obs::keys::SERVE_DAEMON_GET_QUARANTINED);
+
+    // bit-rot the rotten entry's payload on disk behind the daemon's back
+    {
+        let snapshot = Store::open(&dir).unwrap();
+        let entry = snapshot
+            .list()
+            .iter()
+            .find(|e| e.name == "rotten")
+            .cloned()
+            .expect("rotten committed");
+        let shard_path = dir.join(format!("shard-{:04}.cuszs", entry.shard));
+        let mut f =
+            std::fs::OpenOptions::new().read(true).write(true).open(shard_path).unwrap();
+        f.seek(SeekFrom::Start(entry.offset + entry.len / 2)).unwrap();
+        let mut byte = [0u8; 1];
+        f.read_exact(&mut byte).unwrap();
+        f.seek(SeekFrom::Start(entry.offset + entry.len / 2)).unwrap();
+        f.write_all(&[byte[0] ^ 0xFF]).unwrap();
+        f.flush().unwrap();
+    }
+
+    // the background scrubber's round-robin reaches the rotten entry and
+    // pulls it into quarantine; its GETs then answer the dedicated
+    // QUARANTINED status (not SERVER_ERROR, not NOT_FOUND)
+    let deadline = std::time::Instant::now() + TIMEOUT;
+    loop {
+        match client.get("rotten").unwrap() {
+            GetOutcome::Quarantined => break,
+            GetOutcome::Failed(_) | GetOutcome::Busy => {
+                assert!(
+                    std::time::Instant::now() < deadline,
+                    "scrubber never quarantined the corrupt entry"
+                );
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            other => panic!("get rotten: {other:?}"),
+        }
+    }
+    assert!(obs.counter_value(cusz::obs::keys::STORE_SCRUB_CORRUPT) > corrupt_before);
+    assert!(obs.counter_value(cusz::obs::keys::STORE_SCRUB_QUARANTINED) > quarantined_before);
+    assert!(obs.counter_value(cusz::obs::keys::SERVE_DAEMON_GET_QUARANTINED) > get_q_before);
+
+    // the daemon is unaffected: pings, healthy GETs, and fresh PUTs work
+    client.ping().unwrap();
+    match client.get("good").unwrap() {
+        GetOutcome::Field(f) => assert_eq!(f.dims, vec![40, 40]),
+        other => panic!("get good: {other:?}"),
+    }
+    put_ok(&mut client, &sample_field("after", 2));
+
+    // an upsert under the quarantined name supersedes the verdict
+    put_ok(&mut client, &sample_field("rotten", 3));
+    match client.get("rotten").unwrap() {
+        GetOutcome::Field(f) => assert_eq!(f.dims, vec![40, 40]),
+        other => panic!("get rotten after re-put: {other:?}"),
+    }
+
+    handle.shutdown().unwrap();
+    // the quarantine is on disk: a cold writable open remembers nothing
+    // for "rotten" (re-put cleared it) and the store fully verifies
+    let store = Store::open_writable(&dir).unwrap();
+    assert!(!store.is_quarantined("rotten"));
+    store.verify().unwrap();
+    drop(store);
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -709,3 +709,162 @@ fn prop_wire_oversized_declared_lengths_rejected() {
         }
     });
 }
+
+#[test]
+fn prop_fsck_classifies_mutilations_and_repair_converges() {
+    use cusz::store::fsck::{fsck, scan};
+    use cusz::store::{FsckOptions, Store, StoreIndex};
+
+    // one pristine two-shard bundle, snapshotted in memory; every case
+    // restores the snapshot and then mutilates a fresh copy
+    let dir = cusz::testkit::tmp_dir("prop-fsck");
+    let coord = coordinator(1e-2);
+    let mut store = Store::create(&dir, 2).unwrap();
+    for i in 0..4u64 {
+        let data: Vec<f32> =
+            (0..1500).map(|k| ((k as f32) * 0.02).sin() * (i + 1) as f32).collect();
+        let field = Field::new(format!("f{i}"), vec![1500], data).unwrap();
+        store.add(&coord.compress(&field).unwrap()).unwrap();
+    }
+    drop(store);
+    let pristine: Vec<(String, Vec<u8>)> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| {
+            let e = e.unwrap();
+            (e.file_name().to_string_lossy().into_owned(), std::fs::read(e.path()).unwrap())
+        })
+        .collect();
+    let restore = |dir: &std::path::Path| {
+        for entry in std::fs::read_dir(dir).unwrap() {
+            let p = entry.unwrap().path();
+            if p.is_dir() {
+                std::fs::remove_dir_all(&p).unwrap();
+            } else {
+                std::fs::remove_file(&p).unwrap();
+            }
+        }
+        for (name, bytes) in &pristine {
+            std::fs::write(dir.join(name), bytes).unwrap();
+        }
+    };
+    let shard_path =
+        |dir: &std::path::Path, i: u64| dir.join(format!("shard-{i:04}.cuszs"));
+
+    check("fsck classifies random mutilations; repair converges", |rng| {
+        restore(&dir);
+        for _ in 0..gen::usize_in(rng, 1, 3) {
+            match rng.below(8) {
+                0 => {
+                    // payload / framing bit flip inside a shard (skipped
+                    // if an earlier mutilation already deleted it)
+                    let p = shard_path(&dir, rng.below(2));
+                    let Ok(mut b) = std::fs::read(&p) else { continue };
+                    if !b.is_empty() {
+                        let pos = gen::usize_in(rng, 0, b.len() - 1);
+                        b[pos] ^= 1 << gen::usize_in(rng, 0, 7);
+                        std::fs::write(&p, &b).map_err(|e| e.to_string())?;
+                    }
+                }
+                1 => {
+                    // torn write: truncate a shard anywhere, even mid-magic
+                    let p = shard_path(&dir, rng.below(2));
+                    let Ok(meta) = std::fs::metadata(&p) else { continue };
+                    let keep = rng.below(meta.len() + 1);
+                    std::fs::OpenOptions::new()
+                        .write(true)
+                        .open(&p)
+                        .and_then(|f| f.set_len(keep))
+                        .map_err(|e| e.to_string())?;
+                }
+                2 => {
+                    // torn append: unindexed garbage at a shard tail
+                    let p = shard_path(&dir, rng.below(2));
+                    let n = gen::usize_in(rng, 1, 2048);
+                    let junk: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+                    let Ok(mut b) = std::fs::read(&p) else { continue };
+                    b.extend_from_slice(&junk);
+                    std::fs::write(&p, &b).map_err(|e| e.to_string())?;
+                }
+                3 => {
+                    let _ = std::fs::remove_file(shard_path(&dir, rng.below(2)));
+                }
+                4 => {
+                    // index tampering at the byte level (usually fatal:
+                    // the framing CRC catches it)
+                    let p = dir.join("index.cuszi");
+                    let mut b = std::fs::read(&p).map_err(|e| e.to_string())?;
+                    if rng.below(4) == 0 {
+                        b.truncate(gen::usize_in(rng, 0, b.len().saturating_sub(1)));
+                    } else if !b.is_empty() {
+                        let pos = gen::usize_in(rng, 0, b.len() - 1);
+                        b[pos] ^= 1 << gen::usize_in(rng, 0, 7);
+                    }
+                    std::fs::write(&p, &b).map_err(|e| e.to_string())?;
+                }
+                5 => {
+                    // validly-framed index whose entry lens lie — including
+                    // absurd lengths a naive scrubber would try to allocate
+                    let p = dir.join("index.cuszi");
+                    let raw = std::fs::read(&p).map_err(|e| e.to_string())?;
+                    if let Ok(mut index) = StoreIndex::from_bytes(&raw) {
+                        if !index.entries.is_empty() {
+                            let k = rng.below(index.entries.len() as u64) as usize;
+                            let bump = *gen::pick(rng, &[100u64, 1 << 20, 1 << 40]);
+                            index.entries[k].len =
+                                index.entries[k].len.saturating_add(bump);
+                            std::fs::write(&p, index.to_bytes())
+                                .map_err(|e| e.to_string())?;
+                        }
+                    }
+                }
+                6 => {
+                    // stale machinery: dead-writer lock debris + index tmp
+                    std::fs::write(dir.join("index.cuszi.tmp"), b"half an index")
+                        .map_err(|e| e.to_string())?;
+                    std::fs::write(dir.join(".writer.lock.4000000000.tmp"), b"4000000000")
+                        .map_err(|e| e.to_string())?;
+                }
+                _ => {
+                    // stomp the shard magic
+                    let p = shard_path(&dir, rng.below(2));
+                    let Ok(mut b) = std::fs::read(&p) else { continue };
+                    for (i, v) in b.iter_mut().take(8).enumerate() {
+                        *v = 0xA5 ^ i as u8;
+                    }
+                    std::fs::write(&p, &b).map_err(|e| e.to_string())?;
+                }
+            }
+        }
+
+        // a scan must always answer — classify or report fatal, never
+        // panic, never balloon (huge claimed lens are bounds-checked)
+        let first = scan(&dir).map_err(|e| format!("scan errored: {e:#}"))?;
+
+        // repair+quarantine converges, unless the index itself is beyond
+        // parsing (fatal by contract: restore from a replica)
+        let repaired = fsck(&dir, &FsckOptions { repair: true, quarantine: true })
+            .map_err(|e| format!("repair errored: {e:#}"))?;
+        if repaired.fatal.is_some() {
+            if first.fatal.is_none() {
+                return Err(format!(
+                    "repair went fatal where scan did not:\nscan:\n{}\nrepair:\n{}",
+                    first.render(),
+                    repaired.render()
+                ));
+            }
+            return Ok(());
+        }
+        if repaired.exit_code() != 0 {
+            return Err(format!("repair left findings:\n{}", repaired.render()));
+        }
+        let second = scan(&dir).map_err(|e| format!("rescan errored: {e:#}"))?;
+        if !second.clean() {
+            return Err(format!("repair did not converge:\n{}", second.render()));
+        }
+        // and the healed bundle is a real store again
+        let s = Store::open(&dir).map_err(|e| format!("repaired store won't open: {e:#}"))?;
+        s.verify().map_err(|e| format!("repaired store fails verify: {e:#}"))?;
+        Ok(())
+    });
+    std::fs::remove_dir_all(&dir).unwrap();
+}
