@@ -1,5 +1,6 @@
 //! Per-field compression orchestration (Figure 1, top path).
 
+use std::io::Read;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -10,11 +11,11 @@ use crate::codec::{
     SymbolSource,
 };
 use crate::container::{self, Archive, Header, LosslessTag, FORMAT_VERSION, MAX_CHUNK_SYMBOLS};
-use crate::field::Field;
+use crate::field::{self, Field};
 use crate::huffman;
 use crate::obs::{self, keys, RunTimings};
 
-use crate::sz::blocks::tile_grid;
+use crate::sz::blocks::{self, tile_grid, SlabSpec};
 use crate::sz::dual_quant;
 use crate::util::arena;
 use crate::util::pool::parallel_map;
@@ -27,6 +28,66 @@ struct SlabQuant {
     /// (in-slab position, verbatim f32) for cap/non-finite values.
     verbatim: Vec<(u32, f32)>,
     hist: Vec<u32>,
+}
+
+/// Value-range summary a [`compress_stream`] caller supplies when it has
+/// one (a CLI pre-scan of a seekable file, the daemon's pass over an
+/// already-buffered PUT body). Required for relative (`valrel`) error
+/// bounds — the bound cannot be resolved without the range — and optional
+/// for absolute bounds, where it only unlocks the fast range-safe path.
+/// With no hint the stream path conservatively runs the per-slab
+/// range-outlier scan, which finds nothing on finite in-range data, so
+/// the archive bytes still match the in-memory path.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StreamHint {
+    /// Minimum over finite values.
+    pub lo: f32,
+    /// Maximum over finite values.
+    pub hi: f32,
+    /// True iff every value in the stream is finite.
+    pub all_finite: bool,
+}
+
+impl StreamHint {
+    /// Summarize a slice of values (one pass): finite min/max + finiteness.
+    pub fn scan(data: &[f32]) -> StreamHint {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        let mut all_finite = true;
+        for &v in data {
+            if v.is_finite() {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            } else {
+                all_finite = false;
+            }
+        }
+        if lo > hi {
+            (lo, hi) = (0.0, 0.0);
+        }
+        StreamHint { lo, hi, all_finite }
+    }
+
+    /// Summarize a raw little-endian f32 byte image (daemon PUT bodies).
+    /// Trailing bytes short of a full value are ignored.
+    pub fn scan_le_bytes(bytes: &[u8]) -> StreamHint {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        let mut all_finite = true;
+        for b in bytes.chunks_exact(4) {
+            let v = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+            if v.is_finite() {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            } else {
+                all_finite = false;
+            }
+        }
+        if lo > hi {
+            (lo, hi) = (0.0, 0.0);
+        }
+        StreamHint { lo, hi, all_finite }
+    }
 }
 
 pub fn compress(coord: &Coordinator, field: &Field) -> Result<CompressedField> {
@@ -97,6 +158,137 @@ pub fn compress(coord: &Coordinator, field: &Field) -> Result<CompressedField> {
         quants.push(s?);
     }
     timer.add_recorded("1.predict-quant", keys::COMPRESS_PREDICT_QUANT, t0.elapsed(), field_bytes);
+
+    finish_compress(coord, &field.name, &field.dims, &spec, quants, abs_eb, field_bytes, timer, t_total)
+}
+
+/// Streaming compress: pull the field off `src` one *band* at a time
+/// (see [`blocks::band_plan`]) so the whole f32 field is never resident.
+///
+/// `src` must yield exactly `dims.product() * 4` little-endian f32 bytes.
+/// The window buffer holds `spec.shape[0]` rows; the per-slab u16 quant
+/// codes (2 B/elem) are kept in memory — they are the encoder's input —
+/// so peak working set is ~half the field plus one band, instead of the
+/// in-memory path's field + codes. Phases B–D are shared with
+/// [`compress`], so given the same effective `range_safe` decision (see
+/// [`StreamHint`]) the archive bytes are identical to the in-memory path.
+pub fn compress_stream(
+    coord: &Coordinator,
+    name: &str,
+    dims: &[usize],
+    src: &mut dyn Read,
+    hint: Option<StreamHint>,
+) -> Result<CompressedField> {
+    let cfg = &coord.cfg;
+    if cfg.chunk_symbols == 0 || cfg.chunk_symbols > MAX_CHUNK_SYMBOLS {
+        anyhow::bail!(
+            "chunk_symbols {} outside the supported range 1..={MAX_CHUNK_SYMBOLS}",
+            cfg.chunk_symbols
+        );
+    }
+    if dims.is_empty() || dims.len() > 4 {
+        anyhow::bail!("field must have 1..=4 dims, got {}", dims.len());
+    }
+    let mut timer = RunTimings::new();
+    let t_total = Instant::now();
+    let n: usize = dims.iter().product();
+    let field_bytes = (n * 4) as u64;
+
+    // ---- resolve error bound & geometry ------------------------------
+    let abs_eb = match cfg.eb {
+        crate::config::ErrorBound::Abs(_) => cfg.eb.resolve(0.0),
+        crate::config::ErrorBound::ValRel(_) => {
+            let h = hint.as_ref().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "valrel error bounds need a value-range hint to stream; \
+                     pre-scan the source (StreamHint) or use an absolute bound"
+                )
+            })?;
+            cfg.eb.resolve((h.hi - h.lo) as f64)
+        }
+    };
+    let kernel_dims = field::kernel_dims_of(dims);
+    let spec = coord.spec_for(&kernel_dims)?.clone();
+    let grid = tile_grid(&kernel_dims, &spec);
+    let dict = cfg.dict_size;
+    // without finiteness knowledge, stay conservative: the per-slab
+    // range-outlier scan stays on, and it finds nothing on finite
+    // in-range data — so the archive bytes still match `compress`
+    let range_safe = hint
+        .as_ref()
+        .is_some_and(|h| h.all_finite && dual_quant::range_safe(h.lo.abs().max(h.hi.abs()), abs_eb));
+
+    // ---- phase A: banded read + per-slab DUAL-QUANT ------------------
+    let t0 = Instant::now();
+    let threads = cfg.effective_threads();
+    let bands = blocks::band_plan(&kernel_dims, &spec, &grid);
+    let row_elems: usize = kernel_dims[1..].iter().product();
+    let mut band_buf = vec![0f32; spec.shape[0] * row_elems];
+    let mut quants: Vec<SlabQuant> = Vec::with_capacity(grid.len());
+    for band in &bands {
+        // a band is one contiguous run of the raw byte stream...
+        let elems = band.field_elems(&kernel_dims);
+        band_buf.truncate(elems); // only the tail band shrinks
+        field::read_f32_into(src, &mut band_buf[..elems])?;
+        // ...and one contiguous run of grid order, gathered band-locally
+        let mut band_dims = kernel_dims.clone();
+        band_dims[0] = band.rows;
+        let idxs = &grid[band.slab_lo..band.slab_hi];
+        let slabs: Vec<Result<SlabQuant>> = parallel_map(threads, idxs, |_, idx| {
+            let local = blocks::band_local(idx, band);
+            arena::with_f32(|buf| {
+                if buf.len() != spec.len() {
+                    buf.clear();
+                    buf.resize(spec.len(), 0.0);
+                }
+                if local.valid != spec.shape {
+                    buf.fill(0.0);
+                }
+                blocks::gather_slab_into(&band_buf, &band_dims, &spec, &local, buf);
+                let data: &[f32] = buf;
+                let full = coord.engine().compress_slab_full(&spec, data, abs_eb, dict)?;
+                let verbatim = if range_safe {
+                    Vec::new()
+                } else {
+                    dual_quant::find_range_outliers(data, abs_eb)
+                };
+                Ok(SlabQuant {
+                    codes: full.codes,
+                    outliers: full.outliers,
+                    verbatim,
+                    hist: full.hist,
+                })
+            })
+        });
+        for s in slabs {
+            quants.push(s?);
+        }
+    }
+    timer.add_recorded("1.predict-quant", keys::COMPRESS_PREDICT_QUANT, t0.elapsed(), field_bytes);
+
+    finish_compress(coord, name, dims, &spec, quants, abs_eb, field_bytes, timer, t_total)
+}
+
+/// Phases B–D + container assembly + the single serialize pass — shared
+/// verbatim by [`compress`] and [`compress_stream`], which is what makes
+/// the streamed archive bit-identical to the in-memory one: by the time
+/// either path reaches this point, all that remains of the field is the
+/// per-slab quant output.
+#[allow(clippy::too_many_arguments)]
+fn finish_compress(
+    coord: &Coordinator,
+    field_name: &str,
+    dims: &[usize],
+    spec: &SlabSpec,
+    quants: Vec<SlabQuant>,
+    abs_eb: f32,
+    field_bytes: u64,
+    mut timer: RunTimings,
+    t_total: Instant,
+) -> Result<CompressedField> {
+    let cfg = &coord.cfg;
+    let dict = cfg.dict_size;
+    let threads = cfg.effective_threads();
 
     // ---- phase B: histogram merge ------------------------------------
     let t0 = Instant::now();
@@ -224,8 +416,8 @@ pub fn compress(coord: &Coordinator, field: &Field) -> Result<CompressedField> {
             version: FORMAT_VERSION,
             encoder: encoder_kind,
             granularity,
-            field_name: field.name.clone(),
-            dims: field.dims.clone(),
+            field_name: field_name.to_string(),
+            dims: dims.to_vec(),
             variant: spec.name.clone(),
             eb: cfg.eb,
             abs_eb,
@@ -265,7 +457,7 @@ pub fn compress(coord: &Coordinator, field: &Field) -> Result<CompressedField> {
     obs::global().add("compress.fields", 1);
 
     let stats = CompressStats {
-        original_bytes: field.size_bytes(),
+        original_bytes: field_bytes as usize,
         compressed_bytes: bytes.len(),
         n_slabs: archive.header.n_slabs,
         n_outliers: archive.outliers.len(),

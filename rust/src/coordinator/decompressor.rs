@@ -17,6 +17,7 @@
 //! against it, and the acceptance tests assert both produce bit-identical
 //! fields.
 
+use std::io::Write;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
@@ -24,9 +25,11 @@ use anyhow::{bail, Context, Result};
 use super::{Coordinator, DecompressStats};
 use crate::codec::{self, SymbolSink};
 use crate::container::Archive;
-use crate::field::Field;
+use crate::field::{self, Field};
 use crate::obs::{self, keys, RunTimings};
-use crate::sz::blocks::{scatter_slab, tile_grid, PartitionedField, SlabIndex, SlabSpec};
+use crate::sz::blocks::{
+    band_local, band_plan, scatter_slab, tile_grid, PartitionedField, SlabIndex, SlabSpec,
+};
 use crate::util::arena;
 use crate::util::pool::{parallel_map, parallel_map_range};
 
@@ -122,14 +125,161 @@ pub fn decompress_with_threads(
     let field_bytes = (slab_len * grid.len() * 4) as u64;
 
     // ---- stage 1: decode chunk-parallel into per-slab code buffers ----
-    // The stage is picked by the archive's tags, not the config: a
-    // Huffman coordinator decodes FLE/RLE archives and vice versa, and a
-    // mixed-granularity archive dispatches per chunk from its tag table.
-    // Decoded chunk windows land directly in the slab buffers (straddles
-    // stitch through the arena) — the whole-field symbol buffer of the
-    // materializing path never exists.
     let t0 = Instant::now();
-    let mut slab_codes: Vec<Vec<u16>> = grid.iter().map(|_| vec![0u16; slab_len]).collect();
+    let slab_codes = decode_slab_codes(archive, slab_len, grid.len(), threads)?;
+    timer.add_recorded("1.decode", keys::DECOMPRESS_DECODE, t0.elapsed(), field_bytes);
+
+    // ---- stage 2: fused per-slab patch → inverse Lorenzo → verbatim →
+    // scatter, one slab-parallel pass over arena-loaned scratch ----------
+    let t0 = Instant::now();
+    let outlier_ranges =
+        split_channel_ranges(&archive.outliers, |o| o.0, slab_len, grid.len(), "outlier")?;
+    let verbatim_ranges =
+        split_channel_ranges(&archive.verbatim, |v| v.0, slab_len, grid.len(), "verbatim")?;
+    let n: usize = geo.kernel_dims.iter().product();
+    let mut out = vec![0f32; n];
+    // one worker per slab: build deltas in arena-loaned i32 scratch,
+    // patch this slab's outlier range, reconstruct in place into
+    // arena-loaned f32 scratch, apply this slab's verbatim range, and
+    // scatter into the slab's disjoint region of the output view
+    let results: Vec<Result<()>> = {
+        let view = PartitionedField::new(&mut out);
+        parallel_map_range(threads, grid.len(), |si| {
+            fuse_slab_into(
+                coord,
+                archive,
+                &geo,
+                &slab_codes,
+                &outlier_ranges,
+                &verbatim_ranges,
+                si,
+                &view,
+                &geo.kernel_dims,
+                &grid[si],
+            )
+        })
+    };
+    for (si, r) in results.into_iter().enumerate() {
+        r.with_context(|| format!("slab {si}"))?;
+    }
+    timer.add_recorded(
+        "2.patch-reverse-scatter",
+        keys::DECOMPRESS_FUSED_RECONSTRUCT,
+        t0.elapsed(),
+        field_bytes,
+    );
+    timer.add_recorded("total", keys::DECOMPRESS_TOTAL, t_total.elapsed(), field_bytes);
+    obs::global().add("decompress.fields", 1);
+
+    let field = Field::new(h.field_name.clone(), geo.logical_dims, out)?;
+    let stats = DecompressStats { timer, original_bytes: field.size_bytes(), threads };
+    Ok((field, stats))
+}
+
+/// Streaming decompress: the fused slab pass feeds straight into a
+/// `Write` sink, one *band* at a time (see [`band_plan`]), so the whole
+/// reconstructed f32 field is never resident.
+///
+/// Stage 1 (chunk-parallel decode into per-slab code buffers) is shared
+/// with [`decompress_with_threads`] — the codec layer validates the
+/// chunk partition over the whole symbol stream, and the codes cost only
+/// 2 B/elem. Stage 2 fuses each band's slabs in parallel into a reusable
+/// band buffer, streams the band's rows out as little-endian f32 bytes
+/// (layout identical in kernel and logical space — the 4D fold only
+/// merges trailing axes), and retires the band's code buffers, so peak
+/// working set falls from field + codes to codes + one band. The bytes
+/// written are exactly `Field::write_f32_into` of the in-memory result.
+/// The caller owns buffering and flushing of `sink`.
+pub fn decompress_stream_into(
+    coord: &Coordinator,
+    archive: &Archive,
+    threads: usize,
+    sink: &mut dyn Write,
+) -> Result<DecompressStats> {
+    let threads = threads.max(1);
+    let mut timer = RunTimings::new();
+    let t_total = Instant::now();
+    let geo = resolve_geometry(coord, archive)?;
+    let (spec, grid) = (&geo.spec, &geo.grid);
+    let slab_len = spec.len();
+    let field_bytes = (slab_len * grid.len() * 4) as u64;
+
+    // ---- stage 1: decode chunk-parallel into per-slab code buffers ----
+    let t0 = Instant::now();
+    let mut slab_codes = decode_slab_codes(archive, slab_len, grid.len(), threads)?;
+    timer.add_recorded("1.decode", keys::DECOMPRESS_DECODE, t0.elapsed(), field_bytes);
+
+    // ---- stage 2: band-streamed fuse → sink ---------------------------
+    let t0 = Instant::now();
+    let outlier_ranges =
+        split_channel_ranges(&archive.outliers, |o| o.0, slab_len, grid.len(), "outlier")?;
+    let verbatim_ranges =
+        split_channel_ranges(&archive.verbatim, |v| v.0, slab_len, grid.len(), "verbatim")?;
+    let bands = band_plan(&geo.kernel_dims, spec, grid);
+    let row_elems: usize = geo.kernel_dims[1..].iter().product();
+    let mut band_buf = vec![0f32; spec.shape[0] * row_elems];
+    for band in &bands {
+        let elems = band.field_elems(&geo.kernel_dims);
+        band_buf.truncate(elems); // only the tail band shrinks
+        let mut band_dims = geo.kernel_dims.clone();
+        band_dims[0] = band.rows;
+        // the band's valid slab regions tile the band buffer exactly, so
+        // every element is written before the band is streamed out
+        let results: Vec<Result<()>> = {
+            let view = PartitionedField::new(&mut band_buf[..elems]);
+            parallel_map_range(threads, band.slab_hi - band.slab_lo, |bi| {
+                let si = band.slab_lo + bi;
+                fuse_slab_into(
+                    coord,
+                    archive,
+                    &geo,
+                    &slab_codes,
+                    &outlier_ranges,
+                    &verbatim_ranges,
+                    si,
+                    &view,
+                    &band_dims,
+                    &band_local(&grid[si], band),
+                )
+            })
+        };
+        for (bi, r) in results.into_iter().enumerate() {
+            r.with_context(|| format!("slab {}", band.slab_lo + bi))?;
+        }
+        field::write_f32_into(&band_buf[..elems], sink)?;
+        // retire this band's code buffers: working set shrinks as we go
+        for codes in &mut slab_codes[band.slab_lo..band.slab_hi] {
+            *codes = Vec::new();
+        }
+    }
+    timer.add_recorded(
+        "2.patch-reverse-scatter",
+        keys::DECOMPRESS_FUSED_RECONSTRUCT,
+        t0.elapsed(),
+        field_bytes,
+    );
+    timer.add_recorded("total", keys::DECOMPRESS_TOTAL, t_total.elapsed(), field_bytes);
+    obs::global().add("decompress.fields", 1);
+
+    let n: usize = geo.kernel_dims.iter().product();
+    Ok(DecompressStats { timer, original_bytes: n * 4, threads })
+}
+
+/// Stage 1 of the fused and streaming paths: decode the symbol stream
+/// chunk-parallel into per-slab code buffers. The stage is picked by the
+/// archive's tags, not the config: a Huffman coordinator decodes FLE/RLE
+/// archives and vice versa, and a mixed-granularity archive dispatches
+/// per chunk from its tag table. Decoded chunk windows land directly in
+/// the slab buffers (straddles stitch through the arena) — the
+/// whole-field symbol buffer of the materializing path never exists.
+fn decode_slab_codes(
+    archive: &Archive,
+    slab_len: usize,
+    n_slabs: usize,
+    threads: usize,
+) -> Result<Vec<Vec<u16>>> {
+    let h = &archive.header;
+    let mut slab_codes: Vec<Vec<u16>> = (0..n_slabs).map(|_| vec![0u16; slab_len]).collect();
     {
         let views: Vec<&mut [u16]> = slab_codes.iter_mut().map(|v| v.as_mut_slice()).collect();
         let mut sink = SymbolSink::from_slabs(views, slab_len.max(1))?;
@@ -166,80 +316,68 @@ pub fn decompress_with_threads(
             )?;
         }
     }
-    timer.add_recorded("1.decode", keys::DECOMPRESS_DECODE, t0.elapsed(), field_bytes);
+    Ok(slab_codes)
+}
 
-    // ---- stage 2: fused per-slab patch → inverse Lorenzo → verbatim →
-    // scatter, one slab-parallel pass over arena-loaned scratch ----------
-    let t0 = Instant::now();
-    let outlier_ranges =
-        split_channel_ranges(&archive.outliers, |o| o.0, slab_len, grid.len(), "outlier")?;
-    let verbatim_ranges =
-        split_channel_ranges(&archive.verbatim, |v| v.0, slab_len, grid.len(), "verbatim")?;
-    let n: usize = geo.kernel_dims.iter().product();
-    let mut out = vec![0f32; n];
-    // one worker per slab: build deltas in arena-loaned i32 scratch,
-    // patch this slab's outlier range, reconstruct in place into
-    // arena-loaned f32 scratch, apply this slab's verbatim range, and
-    // scatter into the slab's disjoint region of the output view
-    let fuse_slab = |si: usize, view: &PartitionedField<'_>| -> Result<()> {
-        let base = (si * slab_len) as u64;
-        let end = base + slab_len as u64;
-        let codes = &slab_codes[si];
-        arena::with_i32(|delta| -> Result<()> {
-            delta.clear();
-            delta.extend(codes.iter().map(|&c| if c == 0 { 0 } else { c as i32 - geo.radius }));
-            // patch prediction outliers: this slab's sorted range, found
-            // by partition_point — hostile-input checks stay per slab
-            let (lo, hi) = outlier_ranges[si];
-            let mut prev: Option<u64> = None;
-            for &(pos, d) in &archive.outliers[lo..hi] {
-                if pos < base || pos >= end {
-                    bail!("outlier position {pos} outside slab {si} (channel not sorted?)");
-                }
-                if prev.is_some_and(|p| pos <= p) {
-                    bail!("outlier positions not strictly increasing");
-                }
-                prev = Some(pos);
-                delta[(pos - base) as usize] = d;
+/// The fused per-slab reconstruction: build deltas in arena-loaned i32
+/// scratch, patch this slab's outlier range, inverse-Lorenzo into
+/// arena-loaned f32 scratch, apply this slab's verbatim range, scatter
+/// into `view`. `scatter_dims`/`scatter_idx` address the view: the whole
+/// field (`kernel_dims` + the grid index) for the in-memory path, or a
+/// band buffer (band dims + the band-local index) for the streaming one.
+#[allow(clippy::too_many_arguments)]
+fn fuse_slab_into(
+    coord: &Coordinator,
+    archive: &Archive,
+    geo: &Geometry,
+    slab_codes: &[Vec<u16>],
+    outlier_ranges: &[(usize, usize)],
+    verbatim_ranges: &[(usize, usize)],
+    si: usize,
+    view: &PartitionedField<'_>,
+    scatter_dims: &[usize],
+    scatter_idx: &SlabIndex,
+) -> Result<()> {
+    let spec = &geo.spec;
+    let slab_len = spec.len();
+    let base = (si * slab_len) as u64;
+    let end = base + slab_len as u64;
+    let codes = &slab_codes[si];
+    arena::with_i32(|delta| -> Result<()> {
+        delta.clear();
+        delta.extend(codes.iter().map(|&c| if c == 0 { 0 } else { c as i32 - geo.radius }));
+        // patch prediction outliers: this slab's sorted range, found
+        // by partition_point — hostile-input checks stay per slab
+        let (lo, hi) = outlier_ranges[si];
+        let mut prev: Option<u64> = None;
+        for &(pos, d) in &archive.outliers[lo..hi] {
+            if pos < base || pos >= end {
+                bail!("outlier position {pos} outside slab {si} (channel not sorted?)");
             }
-            arena::with_f32(|slab| -> Result<()> {
-                slab.clear();
-                slab.resize(slab_len, 0.0);
-                coord.engine().decompress_slab_into(spec, delta, geo.abs_eb, slab)?;
-                // verbatim overwrites in slab coordinates (padding slots
-                // are dropped by the valid-region scatter below, exactly
-                // as the old field-offset mapping dropped them)
-                let (lo, hi) = verbatim_ranges[si];
-                for &(pos, val) in &archive.verbatim[lo..hi] {
-                    if pos < base || pos >= end {
-                        bail!("verbatim position {pos} outside slab {si} (channel not sorted?)");
-                    }
-                    slab[(pos - base) as usize] = val;
+            if prev.is_some_and(|p| pos <= p) {
+                bail!("outlier positions not strictly increasing");
+            }
+            prev = Some(pos);
+            delta[(pos - base) as usize] = d;
+        }
+        arena::with_f32(|slab| -> Result<()> {
+            slab.clear();
+            slab.resize(slab_len, 0.0);
+            coord.engine().decompress_slab_into(spec, delta, geo.abs_eb, slab)?;
+            // verbatim overwrites in slab coordinates (padding slots
+            // are dropped by the valid-region scatter below, exactly
+            // as the old field-offset mapping dropped them)
+            let (lo, hi) = verbatim_ranges[si];
+            for &(pos, val) in &archive.verbatim[lo..hi] {
+                if pos < base || pos >= end {
+                    bail!("verbatim position {pos} outside slab {si} (channel not sorted?)");
                 }
-                view.scatter(&geo.kernel_dims, spec, &grid[si], slab);
-                Ok(())
-            })
+                slab[(pos - base) as usize] = val;
+            }
+            view.scatter(scatter_dims, spec, scatter_idx, slab);
+            Ok(())
         })
-    };
-    let results: Vec<Result<()>> = {
-        let view = PartitionedField::new(&mut out);
-        parallel_map_range(threads, grid.len(), |si| fuse_slab(si, &view))
-    };
-    for (si, r) in results.into_iter().enumerate() {
-        r.with_context(|| format!("slab {si}"))?;
-    }
-    timer.add_recorded(
-        "2.patch-reverse-scatter",
-        keys::DECOMPRESS_FUSED_RECONSTRUCT,
-        t0.elapsed(),
-        field_bytes,
-    );
-    timer.add_recorded("total", keys::DECOMPRESS_TOTAL, t_total.elapsed(), field_bytes);
-    obs::global().add("decompress.fields", 1);
-
-    let field = Field::new(h.field_name.clone(), geo.logical_dims, out)?;
-    let stats = DecompressStats { timer, original_bytes: field.size_bytes(), threads };
-    Ok((field, stats))
+    })
 }
 
 /// The pre-fusion decompress path: decode to one whole-field symbol

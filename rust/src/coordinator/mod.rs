@@ -20,6 +20,7 @@ use crate::field::Field;
 use crate::runtime::{self, QuantEngine};
 use crate::sz::blocks::{builtin_variants, select_spec, SlabSpec};
 
+pub use compressor::StreamHint;
 pub use stats::{CompressStats, DecompressStats};
 
 /// A compressed field together with its one-and-only serialization.
@@ -105,6 +106,36 @@ impl Coordinator {
     /// this so the lossless tail is encoded exactly once per field.
     pub fn compress_encoded(&self, field: &Field) -> Result<CompressedField> {
         compressor::compress(self, field)
+    }
+
+    /// Streaming compress: pull `dims.product() * 4` little-endian f32
+    /// bytes off `src` one slab band at a time, never holding the whole
+    /// field. `hint` (a one-pass value-range summary) is required for
+    /// `valrel` error bounds and optional for absolute ones — see
+    /// [`compressor::StreamHint`]. With an equivalent hint the archive
+    /// bytes are identical to [`Coordinator::compress_encoded`].
+    pub fn compress_stream(
+        &self,
+        name: &str,
+        dims: &[usize],
+        src: &mut dyn std::io::Read,
+        hint: Option<compressor::StreamHint>,
+    ) -> Result<CompressedField> {
+        compressor::compress_stream(self, name, dims, src, hint)
+    }
+
+    /// Streaming decompress: the fused slab pass writes straight into
+    /// `sink` one band at a time, never holding the reconstructed field.
+    /// The bytes written equal `Field::write_f32_into` of
+    /// [`Coordinator::decompress_with_threads`]'s result. The caller owns
+    /// buffering/flushing of `sink`.
+    pub fn decompress_stream_into(
+        &self,
+        archive: &Archive,
+        threads: usize,
+        sink: &mut dyn std::io::Write,
+    ) -> Result<DecompressStats> {
+        decompressor::decompress_stream_into(self, archive, threads, sink)
     }
 
     pub fn decompress(&self, archive: &Archive) -> Result<Field> {
@@ -311,6 +342,129 @@ mod tests {
         let cr = field.size_bytes() as f64 / archive.compressed_bytes() as f64;
         assert!(cr > 4.0, "compression ratio {cr}");
         assert_eq!(stats.original_bytes, field.size_bytes());
+    }
+
+    fn field_le_bytes(data: &[f32]) -> Vec<u8> {
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for v in data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        bytes
+    }
+
+    #[test]
+    fn compress_stream_bytes_match_in_memory_compress() {
+        use crate::coordinator::compressor::StreamHint;
+        for dims in [vec![50_000usize], vec![300, 300], vec![40, 50, 60], vec![6, 8, 10, 12]] {
+            let n: usize = dims.iter().product();
+            let data = make(Regime::Smooth, n, 21);
+            let field = Field::new("s", dims.clone(), data).unwrap();
+            let coord = cpu_coordinator(ErrorBound::Abs(1e-3));
+            let whole = coord.compress_encoded(&field).unwrap();
+            // with a range hint the range-safe decision matches exactly
+            let hint = StreamHint::scan(&field.data);
+            let mut src = std::io::Cursor::new(field_le_bytes(&field.data));
+            let streamed = coord.compress_stream("s", &dims, &mut src, Some(hint)).unwrap();
+            assert_eq!(streamed.bytes, whole.bytes, "hinted stream differs for {dims:?}");
+            // without a hint (abs bound): conservative per-slab scans find
+            // nothing on finite in-range data — bytes still identical
+            let mut src = std::io::Cursor::new(field_le_bytes(&field.data));
+            let blind = coord.compress_stream("s", &dims, &mut src, None).unwrap();
+            assert_eq!(blind.bytes, whole.bytes, "blind stream differs for {dims:?}");
+            assert_eq!(streamed.stats.original_bytes, field.size_bytes());
+        }
+    }
+
+    #[test]
+    fn compress_stream_valrel_matches_and_requires_hint() {
+        use crate::coordinator::compressor::StreamHint;
+        let dims = vec![200usize, 300];
+        let data = make(Regime::Noisy, 200 * 300, 13);
+        let field = Field::new("r", dims.clone(), data).unwrap();
+        let coord = cpu_coordinator(ErrorBound::ValRel(1e-3));
+        let whole = coord.compress_encoded(&field).unwrap();
+        let hint = StreamHint::scan(&field.data);
+        let mut src = std::io::Cursor::new(field_le_bytes(&field.data));
+        let streamed = coord.compress_stream("r", &dims, &mut src, Some(hint)).unwrap();
+        assert_eq!(streamed.bytes, whole.bytes);
+        // valrel cannot resolve without a range
+        let mut src = std::io::Cursor::new(field_le_bytes(&field.data));
+        assert!(coord.compress_stream("r", &dims, &mut src, None).is_err());
+    }
+
+    #[test]
+    fn compress_stream_handles_nonfinite_without_hint() {
+        let mut data = make(Regime::Smooth, 4096, 6);
+        data[10] = f32::NAN;
+        data[20] = f32::INFINITY;
+        let dims = vec![4096usize];
+        let coord = cpu_coordinator(ErrorBound::Abs(1e-3));
+        let mut src = std::io::Cursor::new(field_le_bytes(&data));
+        let c = coord.compress_stream("nan", &dims, &mut src, None).unwrap();
+        let out = coord.decompress(&c.archive).unwrap();
+        assert!(out.data[10].is_nan());
+        assert_eq!(out.data[20], f32::INFINITY);
+    }
+
+    #[test]
+    fn compress_stream_rejects_short_source() {
+        let data = make(Regime::Smooth, 1000, 2);
+        let coord = cpu_coordinator(ErrorBound::Abs(1e-3));
+        let bytes = field_le_bytes(&data);
+        let mut short = std::io::Cursor::new(&bytes[..bytes.len() - 4]);
+        assert!(coord.compress_stream("s", &[1000], &mut short, None).is_err());
+    }
+
+    #[test]
+    fn decompress_stream_into_matches_materialized_bytes() {
+        for dims in [vec![50_000usize], vec![300, 300], vec![40, 50, 60], vec![6, 8, 10, 12]] {
+            let n: usize = dims.iter().product();
+            let data = make(Regime::Noisy, n, 17);
+            let field = Field::new("d", dims.clone(), data).unwrap();
+            let coord = cpu_coordinator(ErrorBound::Abs(1e-3));
+            let archive = coord.compress(&field).unwrap();
+            let (whole, _) = coord.decompress_with_threads(&archive, 4).unwrap();
+            let mut streamed = Vec::new();
+            let stats = coord.decompress_stream_into(&archive, 4, &mut streamed).unwrap();
+            assert_eq!(streamed, field_le_bytes(&whole.data), "stream differs for {dims:?}");
+            assert_eq!(stats.original_bytes, field.size_bytes());
+        }
+    }
+
+    #[test]
+    fn decompress_stream_into_carries_outliers_and_verbatim() {
+        // spiky data with non-finite and huge values exercises both side
+        // channels through the band-streamed fused pass
+        let mut data = make(Regime::Zeros, 70_000, 9);
+        data[123] = f32::NAN;
+        data[4567] = 3.4e38;
+        let field = Field::new("v", vec![70_000], data).unwrap();
+        let coord = cpu_coordinator(ErrorBound::Abs(1e-5));
+        let archive = coord.compress(&field).unwrap();
+        let (whole, _) = coord.decompress_with_threads(&archive, 3).unwrap();
+        let mut streamed = Vec::new();
+        coord.decompress_stream_into(&archive, 3, &mut streamed).unwrap();
+        assert_eq!(streamed, field_le_bytes(&whole.data));
+    }
+
+    #[test]
+    fn stream_roundtrip_stays_error_bounded() {
+        use crate::coordinator::compressor::StreamHint;
+        let dims = vec![120usize, 250];
+        let data = make(Regime::Noisy, 120 * 250, 29);
+        let field = Field::new("rt", dims.clone(), data).unwrap();
+        let coord = cpu_coordinator(ErrorBound::Abs(1e-3));
+        let hint = StreamHint::scan(&field.data);
+        let mut src = std::io::Cursor::new(field_le_bytes(&field.data));
+        let c = coord.compress_stream("rt", &dims, &mut src, Some(hint)).unwrap();
+        let restored = Archive::from_bytes(&c.bytes).unwrap();
+        let mut out_bytes = Vec::new();
+        coord.decompress_stream_into(&restored, 2, &mut out_bytes).unwrap();
+        let out: Vec<f32> = out_bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        assert_eq!(metrics::verify_error_bound(&field.data, &out, 1e-3), None);
     }
 
     #[test]

@@ -56,11 +56,7 @@ impl Field {
     /// Effective dimensionality for kernel selection: 4D fields fold their
     /// trailing two axes (QMCPACK einspline handling, DESIGN.md §3.4).
     pub fn kernel_dims(&self) -> Vec<usize> {
-        if self.dims.len() == 4 {
-            vec![self.dims[0], self.dims[1], self.dims[2] * self.dims[3]]
-        } else {
-            self.dims.clone()
-        }
+        kernel_dims_of(&self.dims)
     }
 
     /// Stream this field's raw little-endian f32 bytes into `w` —
@@ -68,6 +64,38 @@ impl Field {
     pub fn write_f32_into<W: std::io::Write>(&self, w: &mut W) -> std::io::Result<()> {
         write_f32_into(&self.data, w)
     }
+}
+
+/// [`Field::kernel_dims`] for a bare dims slice — used by the streaming
+/// compress path, which never constructs a `Field`. The fold only merges
+/// trailing axes, so row-major layout (and hence the raw byte stream) is
+/// identical in logical and kernel space.
+pub fn kernel_dims_of(dims: &[usize]) -> Vec<usize> {
+    if dims.len() == 4 {
+        vec![dims[0], dims[1], dims[2] * dims[3]]
+    } else {
+        dims.to_vec()
+    }
+}
+
+/// Fill `out` from `r`'s little-endian f32 bytes through a bounded,
+/// arena-loaned chunk buffer — the read-side mirror of
+/// [`write_f32_into`], used by the streaming compress path to pull one
+/// band of the field at a time off a file or socket without ever
+/// materializing the whole field.
+pub fn read_f32_into<R: std::io::Read>(r: &mut R, out: &mut [f32]) -> std::io::Result<()> {
+    const CHUNK_VALUES: usize = 16 * 1024;
+    crate::util::arena::with_u8(|buf| {
+        for vals in out.chunks_mut(CHUNK_VALUES) {
+            buf.clear();
+            buf.resize(vals.len() * 4, 0);
+            r.read_exact(buf)?;
+            for (v, b) in vals.iter_mut().zip(buf.chunks_exact(4)) {
+                *v = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+            }
+        }
+        Ok(())
+    })
 }
 
 /// Stream `data` as little-endian f32 bytes into `w` through a bounded,
@@ -131,5 +159,18 @@ mod tests {
         let mut empty = Vec::new();
         write_f32_into(&[], &mut empty).unwrap();
         assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn read_f32_into_mirrors_write() {
+        let data: Vec<f32> = (0..40_000).map(|i| (i as f32).cos() * 5.0 - 1.0).collect();
+        let mut bytes = Vec::new();
+        write_f32_into(&data, &mut bytes).unwrap();
+        let mut back = vec![0f32; data.len()];
+        read_f32_into(&mut std::io::Cursor::new(&bytes), &mut back).unwrap();
+        assert_eq!(back, data);
+        // short input is an error, not silent truncation
+        let mut short = std::io::Cursor::new(&bytes[..bytes.len() - 1]);
+        assert!(read_f32_into(&mut short, &mut back).is_err());
     }
 }

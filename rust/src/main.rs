@@ -26,7 +26,7 @@ use anyhow::{bail, Context, Result};
 use cusz::codec::{CodecGranularity, CodecSpec, EncoderChoice};
 use cusz::config::{BackendKind, CodewordRepr, CuszConfig, ErrorBound, LosslessStage};
 use cusz::container::Archive;
-use cusz::coordinator::Coordinator;
+use cusz::coordinator::{Coordinator, StreamHint};
 use cusz::datagen::{self, Dataset};
 use cusz::field::Field;
 use cusz::metrics;
@@ -92,15 +92,17 @@ fn usage() -> String {
        serve       --daemon --store B.cuszb [--addr HOST:PORT]\n\
                    [--workers W] [--queue N] [--max-conns N]\n\
                    [--read-timeout-ms N] [--write-timeout-ms N]\n\
-                   [--max-body-mb N] [--durability none|flush|sync]\n\
-                   [--scrub-interval-ms N] — long-running TCP front end\n\
-                   (length-prefixed frames; see README 'Serving')\n\
+                   [--max-body-mb N | --max-payload BYTES]\n\
+                   [--mem-budget BYTES|auto|unlimited] [--durability\n\
+                   none|flush|sync] [--scrub-interval-ms N] — long-running\n\
+                   TCP front end; requests past the memory budget shed\n\
+                   BUSY (length-prefixed frames; see README 'Serving')\n\
        loadgen     [--addr HOST:PORT] [--clients N] [--requests N]\n\
                    [--put-ratio F] [--pattern steady|bursty|diurnal]\n\
-                   [--elems N] [--pace-us N] [--quick] [--shutdown]\n\
-                   [--acked-log PATH] [--out BENCH_serve.json] — drive a\n\
-                   running daemon, emit p50/p95/p99 + throughput\n\
-                   (cusz-bench-serve/v1)\n\
+                   [--elems N] [--pace-us N] [--max-payload BYTES]\n\
+                   [--quick] [--shutdown] [--acked-log PATH]\n\
+                   [--out BENCH_serve.json] — drive a running daemon,\n\
+                   emit p50/p95/p99 + throughput (cusz-bench-serve/v1)\n\
        bench       [--out BENCH_pipeline.json] [--datasets d1,d2,..]\n\
                    [--scale N] [--quick] — machine-readable pipeline\n\
                    throughput/ratio report (per-stage GB/s, e2e, CR)\n\
@@ -205,12 +207,76 @@ fn parse_dims(s: &str) -> Result<Vec<usize>> {
     s.split(',').map(|d| d.parse::<usize>().context("parsing dims")).collect()
 }
 
-fn read_f32_file(path: &str) -> Result<Vec<f32>> {
-    let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
-    if bytes.len() % 4 != 0 {
-        bail!("{path}: size {} not a multiple of 4", bytes.len());
+/// One-pass chunked scan of a raw little-endian .f32 file: finite
+/// min/max plus finiteness, mirroring `StreamHint::scan` without loading
+/// the file. Value-range-relative bounds need this summary before the
+/// streaming compress pass can resolve the bound.
+fn scan_f32_file(path: &str) -> Result<StreamHint> {
+    use std::io::Read;
+    let file = std::fs::File::open(path).with_context(|| format!("reading {path}"))?;
+    let mut r = std::io::BufReader::new(file);
+    let mut buf = vec![0u8; 1 << 20];
+    let mut carry: Vec<u8> = Vec::with_capacity(4);
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    let mut all_finite = true;
+    let mut absorb = |v: f32| {
+        if v.is_finite() {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        } else {
+            all_finite = false;
+        }
+    };
+    loop {
+        let n = r.read(&mut buf).with_context(|| format!("reading {path}"))?;
+        if n == 0 {
+            break;
+        }
+        // short reads can split a value across chunks; carry the tail
+        let mut start = 0;
+        while !carry.is_empty() && carry.len() < 4 && start < n {
+            carry.push(buf[start]);
+            start += 1;
+        }
+        if carry.len() == 4 {
+            absorb(f32::from_le_bytes([carry[0], carry[1], carry[2], carry[3]]));
+            carry.clear();
+        }
+        let chunk = &buf[start..n];
+        for b in chunk.chunks_exact(4) {
+            absorb(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+        }
+        carry.extend_from_slice(chunk.chunks_exact(4).remainder());
     }
-    Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    if lo > hi {
+        (lo, hi) = (0.0, 0.0);
+    }
+    Ok(StreamHint { lo, hi, all_finite })
+}
+
+/// Open a raw .f32 file for the streaming compress pass, checking its
+/// size against the declared dims up front so a mismatch fails before
+/// any bands are consumed.
+fn open_f32_stream(path: &str, dims: &[usize]) -> Result<std::io::BufReader<std::fs::File>> {
+    let elems: u64 = dims.iter().map(|&d| d as u64).product();
+    let file = std::fs::File::open(path).with_context(|| format!("reading {path}"))?;
+    let len = file.metadata().with_context(|| format!("reading {path}"))?.len();
+    let want = elems.saturating_mul(4);
+    if len != want {
+        bail!("{path}: {len} bytes but dims {dims:?} need {want} ({elems} f32 values)");
+    }
+    Ok(std::io::BufReader::new(file))
+}
+
+/// Resolve the range hint the streaming compressor needs: value-relative
+/// bounds scan the file once; absolute bounds stream blind (the archive
+/// bytes are identical either way — see `Coordinator::compress_stream`).
+fn stream_hint_for(cfg: &CuszConfig, path: &str) -> Result<Option<StreamHint>> {
+    match cfg.eb {
+        ErrorBound::Abs(_) => Ok(None),
+        _ => Ok(Some(scan_f32_file(path)?)),
+    }
 }
 
 fn write_f32_file(path: &str, data: &[f32]) -> Result<()> {
@@ -253,16 +319,16 @@ fn cmd_compress(args: &[String]) -> Result<()> {
     let cfg = common_config(&cli)?;
     let dims = parse_dims(&cli.get("dims"))?;
     let input = cli.get("input");
-    let data = read_f32_file(&input)?;
     let name = PathBuf::from(&input)
         .file_stem()
         .map(|s| s.to_string_lossy().into_owned())
         .unwrap_or_else(|| "field".into());
-    let field = Field::new(name, dims, data)?;
+    let hint = stream_hint_for(&cfg, &input)?;
     let coord = Coordinator::new(cfg)?;
-    // one serialization pass: the bytes the stats were priced off are
-    // the bytes that hit the disk
-    let compressed = coord.compress_encoded(&field)?;
+    // stream the file through the bounded band window — peak memory is
+    // a few bands plus the archive, not the whole field
+    let mut src = open_f32_stream(&input, &dims)?;
+    let compressed = coord.compress_stream(&name, &dims, &mut src, hint)?;
     let out = if cli.get("out").is_empty() { format!("{input}.cusza") } else { cli.get("out") };
     std::fs::write(&out, &compressed.bytes)?;
     println!("engine: {}", coord.engine_name());
@@ -282,12 +348,17 @@ fn cmd_decompress(args: &[String]) -> Result<()> {
     // the parallel tail is exercised outside serve too (0 = all cores)
     let archive = Archive::from_bytes_with_threads(&std::fs::read(&input)?, cfg.threads)?;
     let coord = Coordinator::new(cfg)?;
-    let (field, stats) = coord.decompress_with_stats(&archive)?;
     let out = if cli.get("out").is_empty() { format!("{input}.out.f32") } else { cli.get("out") };
-    write_f32_file(&out, &field.data)?;
+    // fused slab pass straight into the file — no full-field buffer
+    // between the archive and the disk
+    let file = std::fs::File::create(&out).with_context(|| format!("creating {out}"))?;
+    let mut w = std::io::BufWriter::new(file);
+    let stats = coord.decompress_stream_into(&archive, coord.cfg.effective_threads(), &mut w)?;
+    use std::io::Write;
+    w.flush().with_context(|| format!("flushing {out}"))?;
     println!("engine: {}  decode threads: {}", coord.engine_name(), stats.threads);
     println!("{}", stats.timer.report(stats.original_bytes));
-    println!("wrote {out} (dims {:?})", field.dims);
+    println!("wrote {out} (dims {:?})", archive.header.dims);
     write_metrics_snapshot(&cli)
 }
 
@@ -433,6 +504,41 @@ fn cmd_store_add(args: &[String]) -> Result<()> {
         return write_metrics_snapshot(&cli);
     }
 
+    // raw .f32 file: stream it through the bounded band window instead
+    // of materializing the field (same archive bytes — see
+    // `Coordinator::compress_stream`)
+    if !cli.get("input").is_empty() {
+        let input = cli.get("input");
+        let dims = parse_dims(&cli.get("dims")).context("--input needs --dims")?;
+        let name = if cli.get("name").is_empty() {
+            PathBuf::from(&input)
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_else(|| "field".into())
+        } else {
+            cli.get("name")
+        };
+        let cfg = common_config(&cli)?;
+        let hint = stream_hint_for(&cfg, &input)?;
+        let coord = Coordinator::new_with_fallback(cfg)?;
+        let mut src = open_f32_stream(&input, &dims)?;
+        let compressed = coord.compress_stream(&name, &dims, &mut src, hint)?;
+        let mut store = Store::open_or_create(cli.get("store"), shards)?;
+        store.set_durability(Durability::parse(&cli.get("durability"))?);
+        let entry = store.add_bytes(&compressed.archive.header.field_name, &compressed.bytes)?;
+        println!("engine: {}", coord.engine_name());
+        println!("{}", compressed.stats.report());
+        println!(
+            "added '{}' to {} (shard {}, offset {}, {} bytes)",
+            entry.name,
+            cli.get("store"),
+            entry.shard,
+            entry.offset,
+            entry.len
+        );
+        return write_metrics_snapshot(&cli);
+    }
+
     let mut field = if !cli.get("dataset").is_empty() {
         let ds = Dataset::parse(&cli.get("dataset"))?;
         let fname = if cli.get("field").is_empty() {
@@ -441,15 +547,6 @@ fn cmd_store_add(args: &[String]) -> Result<()> {
             cli.get("field")
         };
         datagen::generate(ds, &fname, cli.get_parsed("seed")?)
-    } else if !cli.get("input").is_empty() {
-        let input = cli.get("input");
-        let data = read_f32_file(&input)?;
-        let dims = parse_dims(&cli.get("dims")).context("--input needs --dims")?;
-        let name = PathBuf::from(&input)
-            .file_stem()
-            .map(|s| s.to_string_lossy().into_owned())
-            .unwrap_or_else(|| "field".into());
-        Field::new(name, dims, data)?
     } else {
         bail!("store add needs --dataset, --input, or --archive");
     };
@@ -495,10 +592,10 @@ fn cmd_store_get(args: &[String]) -> Result<()> {
     }
     let archive = store.get(&cli.get("name"))?;
     let coord = Coordinator::new_with_fallback(common_config(&cli)?)?;
-    let (field, stats) = coord.decompress_with_stats(&archive)?;
     println!("engine: {}", coord.engine_name());
-    println!("{}", stats.timer.report(stats.original_bytes));
     if cli.get("out").is_empty() {
+        let (field, stats) = coord.decompress_with_stats(&archive)?;
+        println!("{}", stats.timer.report(stats.original_bytes));
         println!(
             "field '{}' dims {:?} ({} values, abs_eb {:.3e}) — pass --out to write .f32",
             field.name,
@@ -507,8 +604,17 @@ fn cmd_store_get(args: &[String]) -> Result<()> {
             archive.header.abs_eb
         );
     } else {
-        write_f32_file(&cli.get("out"), &field.data)?;
-        println!("wrote {} (dims {:?})", cli.get("out"), field.dims);
+        // restore straight through the fused slab pass into the file —
+        // peak memory is the archive plus a band window, not the field
+        let out = cli.get("out");
+        let file = std::fs::File::create(&out).with_context(|| format!("creating {out}"))?;
+        let mut w = std::io::BufWriter::new(file);
+        let stats =
+            coord.decompress_stream_into(&archive, coord.cfg.effective_threads(), &mut w)?;
+        use std::io::Write;
+        w.flush().with_context(|| format!("flushing {out}"))?;
+        println!("{}", stats.timer.report(stats.original_bytes));
+        println!("wrote {out} (dims {:?})", archive.header.dims);
     }
     write_metrics_snapshot(&cli)
 }
@@ -670,6 +776,20 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt("write-timeout-ms", "10000", "daemon per-connection write timeout")
         .opt("max-body-mb", "64", "daemon wire-frame body limit in MB")
         .opt(
+            "max-payload",
+            "",
+            "daemon wire-frame body limit as a byte figure (e.g. 4m, 1g); \
+             wins over --max-body-mb when set",
+        )
+        .opt(
+            "mem-budget",
+            "auto",
+            "daemon admission budget in bytes (k/m/g suffix). Requests whose \
+             estimated working set would push the in-flight total past this \
+             are shed with BUSY before the body is buffered. 'auto' = half \
+             of detected RAM; 'unlimited' disables byte-budget shedding",
+        )
+        .opt(
             "scrub-interval-ms",
             "1000",
             "daemon background scrubber: CRC-verify one stored entry per interval, \
@@ -763,16 +883,26 @@ fn serve_daemon(cli: &Cli) -> Result<()> {
     let write_ms: u64 = cli.get_parsed("write-timeout-ms")?;
     let max_body_mb: usize = cli.get_parsed("max-body-mb")?;
     let scrub_ms: u64 = cli.get_parsed("scrub-interval-ms")?;
+    let max_body_bytes = if cli.get("max-payload").is_empty() {
+        max_body_mb.saturating_mul(1 << 20)
+    } else {
+        usize::try_from(cusz::util::govern::parse_budget(&cli.get("max-payload"))?)
+            .context("--max-payload does not fit in usize")?
+    };
+    // u64::MAX ('unlimited'/'none') disables admission; any other figure
+    // becomes the governor's hard byte budget
+    let mem_budget = match cusz::util::govern::parse_budget(&cli.get("mem-budget"))? {
+        u64::MAX => None,
+        budget => Some(budget),
+    };
     let dcfg = cusz::serve::DaemonConfig {
         workers: cli.get_parsed("workers")?,
         queue_depth: cli.get_parsed("queue")?,
         max_connections: cli.get_parsed("max-conns")?,
         read_timeout: std::time::Duration::from_millis(read_ms),
         write_timeout: std::time::Duration::from_millis(write_ms),
-        limits: cusz::serve::Limits {
-            max_body_bytes: max_body_mb.saturating_mul(1 << 20),
-            ..Default::default()
-        },
+        limits: cusz::serve::Limits { max_body_bytes, ..Default::default() },
+        mem_budget,
         scrub_interval: if scrub_ms == 0 {
             None
         } else {
@@ -806,6 +936,12 @@ fn cmd_loadgen(args: &[String]) -> Result<()> {
         .opt("seed", "42", "workload seed")
         .opt("out", "BENCH_serve.json", "report path, empty to skip (cusz-bench-serve/v1)")
         .opt(
+            "max-payload",
+            "",
+            "client-side wire body limit as a byte figure (e.g. 4m, 1g); keep \
+             it at or above the daemon's or large GET replies fail client-side",
+        )
+        .opt(
             "acked-log",
             "",
             "write every daemon-acked PUT name here (one per line) — a \
@@ -830,6 +966,11 @@ fn cmd_loadgen(args: &[String]) -> Result<()> {
         lcfg.clients = 4;
         lcfg.requests = 96;
         lcfg.elems = 16384;
+    }
+    if !cli.get("max-payload").is_empty() {
+        lcfg.max_body_bytes =
+            usize::try_from(cusz::util::govern::parse_budget(&cli.get("max-payload"))?)
+                .context("--max-payload does not fit in usize")?;
     }
     let report = cusz::serve::loadgen::run(&lcfg)?;
     println!("{}", report.report());

@@ -92,6 +92,13 @@ pub mod keys {
     pub const STORE_SCRUB_QUARANTINED: &str = "store.scrub.quarantined";
     pub const STORE_SCRUB_BYTES: &str = "store.scrub.bytes";
     pub const SERVE_DAEMON_GET_QUARANTINED: &str = "serve.daemon.get_quarantined";
+
+    // Memory governor (daemon `--mem-budget` byte-budget admission):
+    // cumulative bytes admitted, monotonic high-water mark of
+    // concurrently reserved bytes, and reservations refused with `BUSY`.
+    pub const SERVE_MEM_RESERVED: &str = "serve.mem.reserved";
+    pub const SERVE_MEM_PEAK: &str = "serve.mem.peak";
+    pub const SERVE_MEM_SHED: &str = "serve.mem.shed";
 }
 
 /// Process-wide registry of counters, stage aggregates, and histograms.

@@ -54,13 +54,14 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Context, Result};
 
 use crate::container::Archive;
-use crate::coordinator::{CompressStats, Coordinator};
-use crate::field::Field;
+use crate::coordinator::{CompressStats, Coordinator, StreamHint};
 use crate::obs::{self, keys};
 use crate::store::Store;
+use crate::util::arena;
+use crate::util::govern::{MemoryGovernor, Reservation};
 use crate::util::pool;
 
-use super::wire::{self, RawResponse, Request, Status, WireError};
+use super::wire::{self, Opcode, RawResponse, RequestHeader, Status, WireError};
 use super::{contain_panic, ServiceStats};
 
 /// Process-global drain flag, set by the signal handler installed with
@@ -115,6 +116,15 @@ pub struct DaemonConfig {
     pub write_timeout: Duration,
     /// Wire-parser allocation bounds.
     pub limits: wire::Limits,
+    /// Process-wide memory budget for admitted work, bytes. Each PUT/GET
+    /// reserves an estimated working-set cost *before* its body is read
+    /// (sized from the already-limit-checked frame header); a request
+    /// that would push the aggregate past the budget is shed with `BUSY`
+    /// — admitted work is never dropped. `None` disables byte-budget
+    /// admission (the count gates — queue depth, connection cap — still
+    /// apply). The CLI default is half of detected RAM
+    /// ([`crate::util::govern::default_budget`]).
+    pub mem_budget: Option<u64>,
     /// Test-only fault injection: a PUT under this name panics inside
     /// the worker (proves panic containment end to end).
     pub fault_panic_name: Option<String>,
@@ -139,6 +149,7 @@ impl Default for DaemonConfig {
             read_timeout: Duration::from_secs(10),
             write_timeout: Duration::from_secs(10),
             limits: wire::Limits::default(),
+            mem_budget: None,
             fault_panic_name: None,
             fault_put_delay: None,
             scrub_interval: None,
@@ -224,15 +235,51 @@ impl DaemonStats {
 /// One accepted job. The reply channel has depth 1, so worker sends
 /// never block; a connection that died mid-wait just drops the receiver
 /// and the send is ignored (the job's effect — a store commit — stands).
+///
+/// A PUT carries the raw wire body (LE bytes, dims already validated by
+/// [`wire::parse_field_dims`]) rather than a decoded `Vec<f32>`: the
+/// worker streams the compressor straight over the byte region, halving
+/// the job's working set. The memory [`Reservation`] made at admission
+/// rides along and is released when the worker finishes the job.
 enum Job {
-    Put { field: Field, reply: SyncSender<RawResponse> },
-    Get { name: String, reply: SyncSender<RawResponse> },
+    Put {
+        name: String,
+        dims: Vec<usize>,
+        body: Vec<u8>,
+        data_off: usize,
+        reservation: Option<Reservation>,
+        reply: SyncSender<RawResponse>,
+    },
+    Get {
+        name: String,
+        reservation: Option<Reservation>,
+        reply: SyncSender<RawResponse>,
+    },
+}
+
+/// Estimated working-set cost of a PUT, priced from the declared body
+/// length alone (so admission can precede the body read): the raw body,
+/// plus roughly one body's worth of band/quant buffers in the streaming
+/// compressor, plus encode scratch. An estimate, not a measurement —
+/// the governor bounds aggregate admission, not exact RSS.
+fn put_cost(body_len: usize) -> u64 {
+    (body_len as u64).saturating_mul(3)
+}
+
+/// Estimated working-set cost of a GET, priced from the store index
+/// entry: the response payload (4 B/element) plus decode-side quant
+/// codes and band buffers (~2 B/element), plus the compressed payload
+/// itself.
+fn get_cost(elems: u64, stored_len: u64) -> u64 {
+    elems.saturating_mul(6).saturating_add(stored_len)
 }
 
 struct Shared {
     coord: Arc<Coordinator>,
     store: Mutex<Store>,
     cfg: DaemonConfig,
+    /// Byte-budget admission governor (`mem_budget`; unbounded if None).
+    governor: Arc<MemoryGovernor>,
     /// Effective worker count (`cfg.workers` with 0 resolved to cores).
     workers: usize,
     /// Per-job internal thread budget (machine threads split across the
@@ -313,10 +360,15 @@ impl Daemon {
         let job_threads = (coord.cfg.effective_threads() / workers).max(1);
         let (job_tx, job_rx) = pool::bounded::<Job>(cfg.queue_depth.max(1));
         let job_rx = Arc::new(Mutex::new(job_rx));
+        let governor = match cfg.mem_budget {
+            Some(budget) => MemoryGovernor::new(budget),
+            None => MemoryGovernor::unbounded(),
+        };
         let shared = Arc::new(Shared {
             coord,
             store: Mutex::new(store),
             cfg,
+            governor,
             workers,
             job_threads,
             shutdown: AtomicBool::new(false),
@@ -440,9 +492,44 @@ fn shed_connection(shared: &Arc<Shared>, mut stream: TcpStream, msg: &str) {
     let _ = wire::write_response(&mut stream, Status::Busy, msg.as_bytes());
 }
 
+/// Grant a byte reservation against the daemon's governor, mirroring the
+/// grant into the registry (`serve.mem.reserved` cumulative admitted
+/// bytes; `serve.mem.peak` published as peak-deltas since counters are
+/// monotonic). `None` means the budget would be exceeded — shed.
+fn admit(shared: &Shared, bytes: u64) -> Option<Reservation> {
+    let r = shared.governor.try_reserve(bytes)?;
+    obs::global().add(keys::SERVE_MEM_RESERVED, r.bytes());
+    let peak = shared.governor.peak_bytes();
+    let peak_counter = obs::global().counter(keys::SERVE_MEM_PEAK);
+    let published = peak_counter.get();
+    if peak > published {
+        peak_counter.add(peak - published);
+    }
+    Some(r)
+}
+
+/// Refuse a request on memory-budget grounds: drain its declared name
+/// and body through a bounded buffer (keeping the persistent-connection
+/// framing intact), record the shed, and answer `BUSY`. Returns whether
+/// the connection is still usable.
+fn shed_request(shared: &Shared, stream: &mut TcpStream, hdr: &RequestHeader) -> bool {
+    shared.stats_mut().shed += 1;
+    obs::global().add(keys::SERVE_DAEMON_SHED, 1);
+    obs::global().add(keys::SERVE_MEM_SHED, 1);
+    if wire::drain_request_rest(stream, hdr).is_err() {
+        return false; // truncated or dead stream: no frame boundary left
+    }
+    wire::write_response(stream, Status::Busy, b"memory budget exceeded").is_ok()
+}
+
 /// One persistent connection: parse frames until EOF, timeout, drain, or
 /// a framing violation; submit PUT/GET jobs through admission control
 /// and relay their replies.
+///
+/// Admission is header-first: the frame header declares the body length,
+/// so a PUT's byte-budget reservation is made (or refused) *before* the
+/// body is buffered — an oversized burst is shed while still costing one
+/// drain buffer, not a resident body per connection.
 fn handle_connection(shared: &Arc<Shared>, job_tx: &SyncSender<Job>, mut stream: TcpStream) {
     // accepted sockets do not inherit the listener's non-blocking mode on
     // every platform — force blocking + timeouts explicitly
@@ -454,8 +541,8 @@ fn handle_connection(shared: &Arc<Shared>, job_tx: &SyncSender<Job>, mut stream:
         if shared.draining() {
             break; // persistent connections close on drain; clients see EOF
         }
-        let req = match wire::read_request(&mut stream, &shared.cfg.limits) {
-            Ok(Some(req)) => req,
+        let hdr = match wire::read_request_header(&mut stream, &shared.cfg.limits) {
+            Ok(Some(hdr)) => hdr,
             Ok(None) => break, // clean close
             Err(WireError::Malformed(msg)) => {
                 shared.stats_mut().bad_requests += 1;
@@ -469,26 +556,114 @@ fn handle_connection(shared: &Arc<Shared>, job_tx: &SyncSender<Job>, mut stream:
         };
         shared.stats_mut().requests += 1;
         obs::global().add(keys::SERVE_DAEMON_REQUESTS, 1);
-        let ok = match req {
-            Request::Ping => {
-                wire::write_response(&mut stream, Status::Ok, b"pong").is_ok()
-            }
-            Request::Stats => {
+        let ok = match hdr.opcode {
+            // STATS/PING/SHUTDOWN frames were validated to carry no name
+            // or body, so the header is the whole frame.
+            Opcode::Ping => wire::write_response(&mut stream, Status::Ok, b"pong").is_ok(),
+            Opcode::Stats => {
                 let snapshot = obs::global().snapshot().to_json();
                 wire::write_response(&mut stream, Status::Ok, snapshot.as_bytes()).is_ok()
             }
-            Request::Shutdown => {
+            Opcode::Shutdown => {
                 shared.shutdown.store(true, Ordering::SeqCst);
                 let _ = wire::write_response(&mut stream, Status::Ok, b"draining");
                 break;
             }
-            Request::Put { field } => {
+            Opcode::Put => {
+                // reserve from the declared body length BEFORE reading
+                // the body
+                let Some(reservation) = admit(shared, put_cost(hdr.body_len)) else {
+                    if shed_request(shared, &mut stream, &hdr) {
+                        continue;
+                    }
+                    break;
+                };
+                let (name, body) = match wire::read_request_payload(&mut stream, &hdr) {
+                    Ok(p) => p,
+                    Err(WireError::Malformed(msg)) => {
+                        shared.stats_mut().bad_requests += 1;
+                        obs::global().add(keys::SERVE_DAEMON_ERRORS, 1);
+                        let _ = wire::write_response(
+                            &mut stream,
+                            Status::BadRequest,
+                            msg.as_bytes(),
+                        );
+                        break;
+                    }
+                    Err(WireError::Io(_)) => break,
+                };
+                let (dims, data_off) = match wire::parse_field_dims(&body) {
+                    Ok(v) => v,
+                    Err(msg) => {
+                        shared.stats_mut().bad_requests += 1;
+                        obs::global().add(keys::SERVE_DAEMON_ERRORS, 1);
+                        let _ = wire::write_response(
+                            &mut stream,
+                            Status::BadRequest,
+                            msg.as_bytes(),
+                        );
+                        break;
+                    }
+                };
                 let (reply_tx, reply_rx) = pool::bounded::<RawResponse>(1);
-                submit_job(shared, job_tx, Job::Put { field, reply: reply_tx }, reply_rx, &mut stream)
+                let job = Job::Put {
+                    name,
+                    dims,
+                    body,
+                    data_off,
+                    reservation: Some(reservation),
+                    reply: reply_tx,
+                };
+                submit_job(shared, job_tx, job, reply_rx, &mut stream)
             }
-            Request::Get { name } => {
+            Opcode::Get => {
+                let (name, _empty) = match wire::read_request_payload(&mut stream, &hdr) {
+                    Ok(p) => p,
+                    Err(WireError::Malformed(msg)) => {
+                        shared.stats_mut().bad_requests += 1;
+                        obs::global().add(keys::SERVE_DAEMON_ERRORS, 1);
+                        let _ = wire::write_response(
+                            &mut stream,
+                            Status::BadRequest,
+                            msg.as_bytes(),
+                        );
+                        break;
+                    }
+                    Err(WireError::Io(_)) => break,
+                };
+                // size the reservation from the store index (dims and
+                // stored length) before the job is queued; an unknown or
+                // unreadable name reserves nothing — the worker answers
+                // NOT_FOUND/QUARANTINED without meaningful memory cost
+                let cost = match shared.store.lock() {
+                    Ok(store) => store.find(&name).map(|e| get_cost(e.n_elements(), e.len)),
+                    Err(_) => None, // poisoned: the worker answers per-request
+                };
+                let reservation = match cost {
+                    Some(c) => match admit(shared, c) {
+                        Some(r) => Some(r),
+                        None => {
+                            // GET has no body to drain (validated above)
+                            shared.stats_mut().shed += 1;
+                            obs::global().add(keys::SERVE_DAEMON_SHED, 1);
+                            obs::global().add(keys::SERVE_MEM_SHED, 1);
+                            let ok = wire::write_response(
+                                &mut stream,
+                                Status::Busy,
+                                b"memory budget exceeded",
+                            )
+                            .is_ok();
+                            if ok {
+                                continue;
+                            }
+                            break;
+                        }
+                    },
+                    None => None,
+                };
                 let (reply_tx, reply_rx) = pool::bounded::<RawResponse>(1);
-                submit_job(shared, job_tx, Job::Get { name, reply: reply_tx }, reply_rx, &mut stream)
+                let job = Job::Get { name, reservation, reply: reply_tx };
+                submit_job(shared, job_tx, job, reply_rx, &mut stream)
             }
         };
         if !ok {
@@ -551,12 +726,15 @@ fn worker_loop(shared: &Arc<Shared>, rx: &Arc<Mutex<Receiver<Job>>>) {
         };
         obs::global().add(keys::SERVE_DAEMON_QUEUE_DEQUEUED, 1);
         match job {
-            Job::Put { field, reply } => {
-                let name = field.name.clone();
+            Job::Put { name, dims, body, data_off, reservation, reply } => {
                 let span = obs::span(keys::SERVE_DAEMON_PUT)
-                    .with_bytes(field.size_bytes() as u64)
+                    .with_bytes((body.len() - data_off) as u64)
                     .with_histogram(obs::global().histogram(keys::HIST_DAEMON_PUT_NS));
-                let (resp, cstats) = process_put(shared, &field);
+                let (resp, cstats) = process_put(shared, &name, &dims, &body, data_off);
+                // release the job's memory in admission order: body
+                // first, then the budget reservation it was priced under
+                drop(body);
+                drop(reservation);
                 let ns = span.finish().as_nanos() as u64;
                 {
                     let mut stats = shared.stats_mut();
@@ -578,10 +756,11 @@ fn worker_loop(shared: &Arc<Shared>, rx: &Arc<Mutex<Receiver<Job>>>) {
                 // trust both the store commit and the accounting
                 let _ = reply.send(resp);
             }
-            Job::Get { name, reply } => {
+            Job::Get { name, reservation, reply } => {
                 let mut span = obs::span(keys::SERVE_DAEMON_GET)
                     .with_histogram(obs::global().histogram(keys::HIST_DAEMON_GET_NS));
                 let (resp, restored) = process_get(shared, &name);
+                drop(reservation);
                 span.add_bytes(restored as u64);
                 let ns = span.finish().as_nanos() as u64;
                 {
@@ -602,6 +781,10 @@ fn worker_loop(shared: &Arc<Shared>, rx: &Arc<Mutex<Receiver<Job>>>) {
                 let _ = reply.send(resp);
             }
         }
+        // after every job, fall the thread-local scratch pools back to
+        // the retention watermark so one large job doesn't pin its
+        // working set in an idle worker
+        arena::trim_to_watermark(arena::DEFAULT_TRIM_WATERMARK);
     }
 }
 
@@ -656,26 +839,39 @@ fn scrub_loop(shared: &Arc<Shared>) {
     }
 }
 
-/// PUT: compress (panic-contained, outside the store lock), then upsert
-/// the serialized archive into the store. Every failure mode — injected
-/// panic, compression error, poisoned store lock, write error — is a
-/// per-request `SERVER_ERROR`.
-fn process_put(shared: &Shared, field: &Field) -> (RawResponse, Option<CompressStats>) {
+/// PUT: stream-compress the raw wire body (panic-contained, outside the
+/// store lock), then upsert the serialized archive into the store. The
+/// compressor pulls LE bytes one slab band at a time, so the job's
+/// working set is the body plus one band — never body plus a decoded
+/// `Vec<f32>`. A one-pass [`StreamHint`] scan reproduces exactly the
+/// range/finiteness decision of the in-memory path, so the stored
+/// archive bytes are identical to what `compress_encoded` would emit.
+/// Every failure mode — injected panic, compression error, poisoned
+/// store lock, write error — is a per-request `SERVER_ERROR`.
+fn process_put(
+    shared: &Shared,
+    name: &str,
+    dims: &[usize],
+    body: &[u8],
+    data_off: usize,
+) -> (RawResponse, Option<CompressStats>) {
     let compressed = contain_panic("daemon put", || {
-        if shared.cfg.fault_panic_name.as_deref() == Some(field.name.as_str()) {
-            panic!("injected worker fault for '{}'", field.name);
+        if shared.cfg.fault_panic_name.as_deref() == Some(name) {
+            panic!("injected worker fault for '{name}'");
         }
         if let Some(delay) = shared.cfg.fault_put_delay {
             std::thread::sleep(delay);
         }
-        shared.coord.compress_encoded(field)
+        let data = &body[data_off..];
+        let hint = StreamHint::scan_le_bytes(data);
+        shared.coord.compress_stream(name, dims, &mut io::Cursor::new(data), Some(hint))
     });
     let compressed = match compressed {
         Ok(c) => c,
         Err(e) => return (RawResponse::error(Status::ServerError, format!("{e:#}")), None),
     };
     let entry = match shared.store.lock() {
-        Ok(mut store) => store.put_bytes(&field.name, &compressed.bytes),
+        Ok(mut store) => store.put_bytes(name, &compressed.bytes),
         Err(_) => {
             return (
                 RawResponse::error(Status::ServerError, "store lock poisoned"),
@@ -693,8 +889,12 @@ fn process_put(shared: &Shared, field: &Field) -> (RawResponse, Option<CompressS
 }
 
 /// GET: checked store read under the lock (CRC + header digest), then
-/// decode + decompress outside it (panic-contained). Returns the wire
-/// field payload and the restored byte count.
+/// decode + streaming decompress outside it (panic-contained). The
+/// response body is assembled as the dims header plus f32 LE data
+/// appended band-by-band by the fused slab pass — the compressed bytes
+/// are dropped right after the archive parse and no `Field` is ever
+/// materialized. Returns the wire field payload and the restored byte
+/// count.
 fn process_get(shared: &Shared, name: &str) -> (RawResponse, usize) {
     let bytes = match shared.store.lock() {
         Ok(store) => {
@@ -726,12 +926,13 @@ fn process_get(shared: &Shared, name: &str) -> (RawResponse, usize) {
         Err(e) => return (RawResponse::error(Status::ServerError, format!("{e:#}")), 0),
     };
     let job_threads = shared.job_threads;
-    let coord = &shared.coord;
-    let result = contain_panic("daemon get", || {
+    let coord = Arc::clone(&shared.coord);
+    let result = contain_panic("daemon get", move || {
         let archive = Archive::from_bytes_with_threads(&bytes, job_threads)?;
-        let (field, _stats) = coord.decompress_with_threads(&archive, job_threads)?;
-        let payload = wire::encode_field_payload(&field)?;
-        Ok((payload, field.size_bytes()))
+        drop(bytes); // archive owns its sections; free the raw payload
+        let mut payload = wire::encode_field_payload_header(&archive.header.dims)?;
+        let stats = coord.decompress_stream_into(&archive, job_threads, &mut payload)?;
+        Ok((payload, stats.original_bytes))
     });
     match result {
         Ok((payload, restored)) => (RawResponse::ok(payload), restored),

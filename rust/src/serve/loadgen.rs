@@ -85,6 +85,11 @@ pub struct LoadgenConfig {
     pub connect_retries: usize,
     pub read_timeout: Duration,
     pub write_timeout: Duration,
+    /// Client-side wire body cap, mirroring the daemon's `--max-payload`:
+    /// responses declaring a larger body are rejected before allocation.
+    /// Keep this at least the daemon's limit or large GETs will fail
+    /// client-side.
+    pub max_body_bytes: usize,
 }
 
 impl Default for LoadgenConfig {
@@ -102,6 +107,7 @@ impl Default for LoadgenConfig {
             connect_retries: 40,
             read_timeout: Duration::from_secs(10),
             write_timeout: Duration::from_secs(10),
+            max_body_bytes: super::wire::Limits::default().max_body_bytes,
         }
     }
 }
@@ -330,9 +336,13 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
 
 fn connect_with_retry(cfg: &LoadgenConfig) -> Result<Client> {
     let mut last_err = None;
+    let limits = super::wire::Limits {
+        max_body_bytes: cfg.max_body_bytes,
+        ..super::wire::Limits::default()
+    };
     for _ in 0..cfg.connect_retries.max(1) {
         match Client::connect(&cfg.addr, cfg.read_timeout, cfg.write_timeout) {
-            Ok(c) => return Ok(c),
+            Ok(c) => return Ok(c.with_limits(limits.clone())),
             Err(e) => {
                 last_err = Some(e);
                 std::thread::sleep(Duration::from_millis(50));

@@ -328,6 +328,9 @@ impl BatchCompressor {
                 .with_histogram(obs::global().histogram(keys::HIST_COMPRESS_JOB_NS));
             let result = contain_panic("compress job", || coord.compress_encoded(&field));
             let ns = span.finish().as_nanos() as u64;
+            // fall this worker's scratch pools back to the watermark so
+            // one outsized field doesn't pin its buffers for the run
+            crate::util::arena::trim_to_watermark(crate::util::arena::DEFAULT_TRIM_WATERMARK);
             (name, result, ns)
         })
         .context("spawning compress workers")?;
@@ -547,6 +550,7 @@ impl BatchDecompressor {
                 span.add_bytes(field.size_bytes() as u64);
             }
             let ns = span.finish().as_nanos() as u64;
+            crate::util::arena::trim_to_watermark(crate::util::arena::DEFAULT_TRIM_WATERMARK);
             (name, result, ns)
         })
         .context("spawning decompress workers")?;

@@ -214,9 +214,27 @@ fn read_exact_frame(r: &mut impl Read, buf: &mut [u8], what: &str) -> Result<(),
     }
 }
 
-/// Read one request frame. `Ok(None)` is a clean close: EOF exactly on a
-/// frame boundary, the normal end of a persistent connection.
-pub fn read_request(r: &mut impl Read, limits: &Limits) -> Result<Option<Request>, WireError> {
+/// A validated request header: magic/version/opcode/limits already
+/// checked, name and body not yet read. The declared lengths let the
+/// daemon make a byte-budget admission decision *before* buffering the
+/// body — an accepted frame proceeds to [`read_request_rest`], a shed
+/// one to [`drain_request_rest`] (which keeps the persistent-connection
+/// framing intact).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RequestHeader {
+    pub opcode: Opcode,
+    pub name_len: usize,
+    pub body_len: usize,
+}
+
+/// Read and validate one request header. `Ok(None)` is a clean close:
+/// EOF exactly on a frame boundary, the normal end of a persistent
+/// connection. Every declared length is checked against `limits` here,
+/// before any allocation.
+pub fn read_request_header(
+    r: &mut impl Read,
+    limits: &Limits,
+) -> Result<Option<RequestHeader>, WireError> {
     let mut header = [0u8; REQ_HEADER_LEN];
     // Fill the header manually so a clean EOF before the first byte is
     // distinguishable from truncation inside the header.
@@ -277,16 +295,34 @@ pub fn read_request(r: &mut impl Read, limits: &Limits) -> Result<Option<Request
     if opcode == Opcode::Get && body_len != 0 {
         return Err(malformed("GET takes no body"));
     }
-    let mut name_bytes = vec![0u8; name_len];
+    Ok(Some(RequestHeader { opcode, name_len, body_len }))
+}
+
+/// Read the name and raw body declared by an already-validated header.
+/// The daemon's PUT path stops here: it keeps the body as LE bytes and
+/// streams the compressor over them, never materializing a `Vec<f32>`.
+pub fn read_request_payload(
+    r: &mut impl Read,
+    hdr: &RequestHeader,
+) -> Result<(String, Vec<u8>), WireError> {
+    let mut name_bytes = vec![0u8; hdr.name_len];
     read_exact_frame(r, &mut name_bytes, "name")?;
     let name = String::from_utf8(name_bytes)
         .map_err(|_| malformed("name is not valid UTF-8"))?;
-    let mut body = vec![0u8; body_len];
+    let mut body = vec![0u8; hdr.body_len];
     read_exact_frame(r, &mut body, "body")?;
-    let req = match opcode {
+    Ok((name, body))
+}
+
+/// Finish parsing a request whose header was already read.
+pub fn read_request_rest(
+    r: &mut impl Read,
+    hdr: &RequestHeader,
+) -> Result<Request, WireError> {
+    let (name, body) = read_request_payload(r, hdr)?;
+    let req = match hdr.opcode {
         Opcode::Put => {
-            let field =
-                parse_field_payload(&body, &name).map_err(malformed)?;
+            let field = parse_field_payload(&body, &name).map_err(malformed)?;
             Request::Put { field }
         }
         Opcode::Get => Request::Get { name },
@@ -294,7 +330,37 @@ pub fn read_request(r: &mut impl Read, limits: &Limits) -> Result<Option<Request
         Opcode::Ping => Request::Ping,
         Opcode::Shutdown => Request::Shutdown,
     };
-    Ok(Some(req))
+    Ok(req)
+}
+
+/// Chunk size for [`drain_request_rest`]: large enough to swallow a
+/// shed frame in a few reads, small enough that refusing a request
+/// never costs meaningful memory (that is the whole point of shedding).
+const DRAIN_CHUNK_BYTES: usize = 64 * 1024;
+
+/// Discard the name and body of a request the daemon refuses to admit,
+/// through a bounded buffer. Keeps the persistent-connection framing
+/// intact so a BUSY answer can be followed by further frames — the
+/// alternative (dropping the connection) would punish a well-behaved
+/// client for the daemon's own load shedding.
+pub fn drain_request_rest(r: &mut impl Read, hdr: &RequestHeader) -> Result<(), WireError> {
+    let mut remaining = hdr.name_len + hdr.body_len;
+    let mut buf = vec![0u8; DRAIN_CHUNK_BYTES.min(remaining.max(1))];
+    while remaining > 0 {
+        let take = buf.len().min(remaining);
+        read_exact_frame(r, &mut buf[..take], "shed frame remainder")?;
+        remaining -= take;
+    }
+    Ok(())
+}
+
+/// Read one request frame. `Ok(None)` is a clean close: EOF exactly on a
+/// frame boundary, the normal end of a persistent connection.
+pub fn read_request(r: &mut impl Read, limits: &Limits) -> Result<Option<Request>, WireError> {
+    match read_request_header(r, limits)? {
+        None => Ok(None),
+        Some(hdr) => read_request_rest(r, &hdr).map(Some),
+    }
 }
 
 /// Assemble one request frame from parts. `Err` only when the name/body
@@ -386,31 +452,22 @@ pub fn read_response(r: &mut impl Read, limits: &Limits) -> Result<RawResponse, 
 /// product x f32 LE`. Errors only when a dim exceeds `u32` (the wire
 /// format's addressable limit).
 pub fn encode_field_payload(field: &Field) -> Result<Vec<u8>> {
-    let ndims: u8 = field
-        .dims
-        .len()
-        .try_into()
-        .ok()
-        .filter(|&n| (1..=4).contains(&n))
-        .ok_or_else(|| anyhow!("field must have 1..=4 dims, got {}", field.dims.len()))?;
-    let mut out = Vec::with_capacity(1 + 4 * field.dims.len() + 4 * field.data.len());
-    out.push(ndims);
-    for &d in &field.dims {
-        let d: u32 = d.try_into().map_err(|_| anyhow!("dim {d} exceeds u32"))?;
-        out.extend_from_slice(&d.to_le_bytes());
-    }
+    let mut out = encode_field_payload_header(&field.dims)?;
+    out.reserve(4 * field.data.len());
     for &v in &field.data {
         out.extend_from_slice(&v.to_le_bytes());
     }
     Ok(out)
 }
 
-/// Parse a wire field payload. All size arithmetic is checked and
+/// Parse and validate the dims prefix of a wire field payload,
+/// returning `(dims, data_offset)` where `bytes[data_offset..]` is
+/// exactly the f32 LE data region. All size arithmetic is checked and
 /// validated against the (already limit-checked) payload length, so a
 /// hostile dims vector cannot drive allocation past the body it arrived
-/// in. Returns `Err(reason)` — the caller wraps it in the right
-/// status/error type for its side of the protocol.
-pub fn parse_field_payload(bytes: &[u8], name: &str) -> Result<Field, String> {
+/// in. The daemon uses this directly to stream the compressor over the
+/// raw data region without decoding a `Vec<f32>` first.
+pub fn parse_field_dims(bytes: &[u8]) -> Result<(Vec<usize>, usize), String> {
     if bytes.is_empty() {
         return Err("empty field payload".into());
     }
@@ -447,11 +504,39 @@ pub fn parse_field_payload(bytes: &[u8], name: &str) -> Result<Field, String> {
             bytes.len() - dims_end
         ));
     }
-    let data: Vec<f32> = bytes[dims_end..]
+    Ok((dims, dims_end))
+}
+
+/// Parse a wire field payload into a [`Field`]. Returns `Err(reason)` —
+/// the caller wraps it in the right status/error type for its side of
+/// the protocol.
+pub fn parse_field_payload(bytes: &[u8], name: &str) -> Result<Field, String> {
+    let (dims, data_off) = parse_field_dims(bytes)?;
+    let data: Vec<f32> = bytes[data_off..]
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
         .collect();
     Field::new(name, dims, data).map_err(|e| e.to_string())
+}
+
+/// Serialize just the dims prefix of a field payload (`u8 ndims, ndims x
+/// u32 LE`). The daemon's streaming GET path writes this header and
+/// then appends decompressed f32 LE data straight from the fused slab
+/// pass, so the response body is assembled without a `Field` in memory.
+pub fn encode_field_payload_header(dims: &[usize]) -> Result<Vec<u8>> {
+    let ndims: u8 = dims
+        .len()
+        .try_into()
+        .ok()
+        .filter(|&n| (1..=4).contains(&n))
+        .ok_or_else(|| anyhow!("field must have 1..=4 dims, got {}", dims.len()))?;
+    let mut out = Vec::with_capacity(1 + 4 * dims.len());
+    out.push(ndims);
+    for &d in dims {
+        let d: u32 = d.try_into().map_err(|_| anyhow!("dim {d} exceeds u32"))?;
+        out.extend_from_slice(&d.to_le_bytes());
+    }
+    Ok(out)
 }
 
 /// PUT acknowledgement body: compressed (stored) and original byte
@@ -703,6 +788,59 @@ mod tests {
             read_response(&mut Cursor::new(&header), &limits),
             Err(WireError::Malformed(_))
         ));
+    }
+
+    #[test]
+    fn header_first_read_matches_one_shot_read() {
+        let field = small_field();
+        let bytes = encode_request(&Request::Put { field: field.clone() }).unwrap();
+        let mut cur = Cursor::new(&bytes);
+        let hdr = read_request_header(&mut cur, &Limits::default()).unwrap().unwrap();
+        assert_eq!(hdr.opcode, Opcode::Put);
+        assert_eq!(hdr.name_len, 1);
+        assert_eq!(hdr.body_len, bytes.len() - REQ_HEADER_LEN - 1);
+        let req = read_request_rest(&mut cur, &hdr).unwrap();
+        assert_eq!(req, Request::Put { field });
+    }
+
+    #[test]
+    fn drain_keeps_persistent_connection_framing() {
+        // shed frame, then a PING on the same stream: draining the shed
+        // frame must leave the cursor exactly on the next frame boundary
+        let mut stream = encode_request(&Request::Put { field: small_field() }).unwrap();
+        stream.extend_from_slice(&encode_request(&Request::Ping).unwrap());
+        let mut cur = Cursor::new(&stream);
+        let hdr = read_request_header(&mut cur, &Limits::default()).unwrap().unwrap();
+        drain_request_rest(&mut cur, &hdr).unwrap();
+        let next = read_request(&mut cur, &Limits::default()).unwrap().unwrap();
+        assert_eq!(next, Request::Ping);
+        assert!(read_request(&mut cur, &Limits::default()).unwrap().is_none());
+    }
+
+    #[test]
+    fn drain_reports_truncated_shed_frame() {
+        let full = encode_request(&Request::Put { field: small_field() }).unwrap();
+        let cut = REQ_HEADER_LEN + 3; // header complete, name+body truncated
+        let mut cur = Cursor::new(&full[..cut]);
+        let hdr = read_request_header(&mut cur, &Limits::default()).unwrap().unwrap();
+        let err = drain_request_rest(&mut cur, &hdr).unwrap_err();
+        assert!(matches!(err, WireError::Malformed(_)), "{err}");
+    }
+
+    #[test]
+    fn field_dims_prefix_matches_full_parse() {
+        let field = small_field();
+        let payload = encode_field_payload(&field).unwrap();
+        let (dims, data_off) = parse_field_dims(&payload).unwrap();
+        assert_eq!(dims, field.dims);
+        assert_eq!(data_off, 1 + 4 * field.dims.len());
+        assert_eq!(payload[..data_off], encode_field_payload_header(&field.dims).unwrap());
+        // the data region decodes to the original values
+        let vals: Vec<f32> = payload[data_off..]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        assert_eq!(vals, field.data);
     }
 
     #[test]

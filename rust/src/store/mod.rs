@@ -62,6 +62,10 @@ pub use lock::StoreLock;
 
 pub const SHARD_MAGIC: &[u8; 8] = b"CUSZS1\0\0";
 pub(crate) const INDEX_FILE: &str = "index.cuszi";
+/// Bounded buffer size for streamed payload reads ([`Store::get_into`],
+/// compaction): the working set of a shard→sink copy, independent of
+/// payload size.
+pub const READ_CHUNK_BYTES: usize = 1 << 20;
 /// Subdirectory (inside the bundle) holding payload copies of fields
 /// pulled from service, plus the manifest naming them.
 pub const QUARANTINE_DIR: &str = "quarantine";
@@ -115,6 +119,101 @@ pub(crate) fn fsync_dir(dir: &Path) -> Result<()> {
             .with_context(|| format!("fsyncing directory {}", dir.display()))?;
     }
     Ok(())
+}
+
+/// Optional mmap fast path for shard payload reads (`store-mmap` cargo
+/// feature, unix only): map the entry's region read-only and copy it
+/// straight out of the page cache instead of `read(2)`-ing through a
+/// buffer. The bindings are declared in-tree (the same approach as the
+/// serve daemon's `signal` binding) — no new dependencies. Off by
+/// default: a concurrently truncated shard turns a mapped read into a
+/// fault, where the buffered path gets a clean short-read error.
+#[cfg(all(feature = "store-mmap", unix))]
+mod mmap {
+    use std::fs::File;
+    use std::os::unix::io::AsRawFd;
+    use std::path::Path;
+
+    use anyhow::{Context, Result};
+
+    /// mmap offsets must be page-aligned; aligning down to 64 KiB keeps
+    /// the offset aligned on any common page size (4 KiB x86, 16 KiB
+    /// arm64) without a `sysconf` binding.
+    const ALIGN: u64 = 64 * 1024;
+
+    const PROT_READ: i32 = 1;
+    const MAP_PRIVATE: i32 = 2;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut std::ffi::c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut std::ffi::c_void;
+        fn munmap(addr: *mut std::ffi::c_void, len: usize) -> i32;
+    }
+
+    /// A read-only mapping of one shard region; unmapped on drop.
+    pub struct MappedRegion {
+        base: *mut std::ffi::c_void,
+        map_len: usize,
+        skip: usize,
+        len: usize,
+    }
+
+    impl MappedRegion {
+        /// Map `len` bytes at `offset` of `path`. Returns `None` for an
+        /// empty region (a zero-length mmap is an error by spec).
+        pub fn map(path: &Path, offset: u64, len: u64) -> Result<Option<MappedRegion>> {
+            if len == 0 {
+                return Ok(None);
+            }
+            let f = File::open(path)
+                .with_context(|| format!("opening shard {}", path.display()))?;
+            let aligned = offset & !(ALIGN - 1);
+            let skip = (offset - aligned) as usize;
+            let map_len = skip + len as usize;
+            // SAFETY: private read-only mapping of a regular file we just
+            // opened; the region [aligned, offset + len) lies within the
+            // file because the index entry does. Closing the fd after
+            // mmap is fine — the mapping keeps the file referenced.
+            let base = unsafe {
+                mmap(
+                    std::ptr::null_mut(),
+                    map_len,
+                    PROT_READ,
+                    MAP_PRIVATE,
+                    f.as_raw_fd(),
+                    aligned as i64,
+                )
+            };
+            if base as isize == -1 {
+                anyhow::bail!(
+                    "mmap of {} failed: {}",
+                    path.display(),
+                    std::io::Error::last_os_error()
+                );
+            }
+            Ok(Some(MappedRegion { base, map_len, skip, len: len as usize }))
+        }
+
+        pub fn bytes(&self) -> &[u8] {
+            // SAFETY: the mapping covers `skip + len` readable bytes.
+            unsafe {
+                std::slice::from_raw_parts((self.base as *const u8).add(self.skip), self.len)
+            }
+        }
+    }
+
+    impl Drop for MappedRegion {
+        fn drop(&mut self) {
+            // SAFETY: base/map_len came from a successful mmap.
+            unsafe { munmap(self.base, self.map_len) };
+        }
+    }
 }
 
 fn hex_encode(bytes: &[u8]) -> String {
@@ -688,6 +787,72 @@ impl Store {
         Ok(buf)
     }
 
+    /// Stream one entry's payload into `w` through a bounded buffer
+    /// ([`READ_CHUNK_BYTES`]), digesting the payload CRC as the bytes
+    /// flow — the payload is never resident as one `Vec`. With the
+    /// `store-mmap` feature on unix the shard region is mapped instead
+    /// and copied straight out of the page cache.
+    ///
+    /// Caveat of streaming verification: bytes reach `w` *before* the
+    /// final CRC verdict; on a mismatch the call errors after the fact
+    /// (and a transactional consumer like [`Store::append_streamed`]
+    /// discards the partial write). Consumers that must never expose
+    /// unverified bytes should use [`Store::get_bytes`].
+    fn read_entry_into(&self, e: &StoreEntry, w: &mut dyn Write) -> Result<()> {
+        let path = self.shard_path(e.shard);
+        #[cfg(all(feature = "store-mmap", unix))]
+        {
+            if let Some(mapped) = mmap::MappedRegion::map(&path, e.offset, e.len)? {
+                CRC_CHECKS.incr();
+                if crc32(mapped.bytes()) != e.payload_crc {
+                    bail!("field '{}': payload CRC mismatch (corrupt shard)", e.name);
+                }
+                w.write_all(mapped.bytes())
+                    .with_context(|| format!("streaming '{}' from {}", e.name, path.display()))?;
+                READ_BYTES.add(e.len);
+                return Ok(());
+            }
+            // fall through to the buffered path (e.g. empty payload)
+        }
+        let mut f = File::open(&path)
+            .with_context(|| format!("opening shard {}", path.display()))?;
+        f.seek(SeekFrom::Start(e.offset))?;
+        let mut crc = Crc32::new();
+        crate::util::arena::with_u8(|buf| -> Result<()> {
+            buf.clear();
+            buf.resize(READ_CHUNK_BYTES.min(e.len.max(1) as usize), 0);
+            let mut remaining = e.len;
+            while remaining > 0 {
+                let take = (buf.len() as u64).min(remaining) as usize;
+                f.read_exact(&mut buf[..take])
+                    .with_context(|| format!("reading '{}' from {}", e.name, path.display()))?;
+                crc.update(&buf[..take]);
+                w.write_all(&buf[..take])
+                    .with_context(|| format!("streaming '{}'", e.name))?;
+                remaining -= take as u64;
+            }
+            Ok(())
+        })?;
+        CRC_CHECKS.incr();
+        if crc.finish() != e.payload_crc {
+            bail!("field '{}': payload CRC mismatch (corrupt shard)", e.name);
+        }
+        READ_BYTES.add(e.len);
+        Ok(())
+    }
+
+    /// Stream one field's raw payload into `w` through a bounded buffer —
+    /// the chunked sibling of [`Store::get_bytes`]. Returns the payload
+    /// length. See [`Store::read_entry_into`] for the CRC-after-stream
+    /// caveat.
+    pub fn get_into(&self, name: &str, w: &mut dyn Write) -> Result<u64> {
+        let e = self
+            .find(name)
+            .with_context(|| format!("field '{name}' not in store"))?;
+        self.read_entry_into(e, w)?;
+        Ok(e.len)
+    }
+
     /// Random-access read of one field's raw payload: one seek + one read
     /// in one shard; sibling payloads are never touched. Verifies the
     /// payload CRC recorded at add time.
@@ -741,13 +906,20 @@ impl Store {
     }
 
     /// Rebuild the bundle at `dest` with only live entries (reclaims the
-    /// dead space `remove` leaves behind).
+    /// dead space `remove` leaves behind). Each payload streams shard to
+    /// shard through the bounded [`Store::read_entry_into`] buffer — the
+    /// source entry's CRC is re-verified in flight, its header digest and
+    /// dims are carried over from the index, and a CRC mismatch aborts
+    /// before the destination entry is committed — so compacting a bundle
+    /// bigger than RAM holds ~1 MiB, not the largest payload.
     pub fn compact_into(&self, dest: impl AsRef<Path>) -> Result<Store> {
         let mut out = Store::create(dest, self.index.n_shards as usize)?;
         out.durability = self.durability;
         for e in &self.index.entries {
-            let payload = self.read_entry(e)?;
-            out.add_bytes(&e.name, &payload)?;
+            out.append_streamed(&e.name, e.header_digest, e.dims.clone(), |w| {
+                self.read_entry_into(e, w)?;
+                Ok(e.len)
+            })?;
         }
         Ok(out)
     }
@@ -1183,6 +1355,45 @@ mod tests {
                 f.name
             );
         }
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn get_into_streams_bytes_identical_to_get_bytes() {
+        let dir = tmp_dir("store-get-into");
+        let coord = coordinator();
+        let mut store = Store::create(&dir, 2).unwrap();
+        for i in 0..4 {
+            store.add(&coord.compress(&sample_field(i)).unwrap()).unwrap();
+        }
+        for i in 0..4 {
+            let name = format!("field-{i}");
+            let whole = store.get_bytes(&name).unwrap();
+            let mut streamed = Vec::new();
+            let len = store.get_into(&name, &mut streamed).unwrap();
+            assert_eq!(len as usize, whole.len());
+            assert_eq!(streamed, whole, "{name}");
+        }
+        let mut sink = Vec::new();
+        assert!(store.get_into("absent", &mut sink).is_err());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn get_into_detects_corruption_after_streaming() {
+        let dir = tmp_dir("store-get-into-corrupt");
+        let coord = coordinator();
+        let mut store = Store::create(&dir, 1).unwrap();
+        let entry = store.add(&coord.compress(&sample_field(0)).unwrap()).unwrap();
+        // flip one payload byte mid-entry on disk
+        let path = dir.join(format!("shard-{:04}.cuszs", entry.shard));
+        let mut bytes = fs::read(&path).unwrap();
+        let victim = entry.offset as usize + entry.len as usize / 2;
+        bytes[victim] ^= 0xff;
+        fs::write(&path, &bytes).unwrap();
+        let mut sink = Vec::new();
+        let err = store.get_into("field-0", &mut sink).unwrap_err();
+        assert!(err.to_string().contains("CRC mismatch"), "{err:#}");
         fs::remove_dir_all(&dir).unwrap();
     }
 

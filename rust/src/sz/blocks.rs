@@ -182,6 +182,69 @@ impl<'a> PartitionedField<'a> {
     }
 }
 
+/// One *band* of the tile grid: every slab sharing the same `tile[0]`.
+///
+/// [`tile_grid`] enumerates tiles with axis 0 slowest, so a band is (a) a
+/// contiguous run `slab_lo..slab_hi` of grid order — and therefore of the
+/// slab-major symbol stream — and (b) a contiguous row-major region of
+/// the field: rows `row_lo..row_lo + rows` along axis 0, full extent on
+/// every other axis. That double contiguity is what the streaming tier
+/// leans on: a band of the raw field can be read off any `Read` source
+/// (or written to any `Write` sink) as one flat byte run, while its slabs
+/// gather/scatter against a band-local buffer of dims
+/// `[rows, dims[1..]]` using [`band_local`] indices — `copy_slab`
+/// computes strides from whatever dims it is given, so the band buffer
+/// behaves exactly like a short field.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Band {
+    /// First grid/slab index of the band (inclusive).
+    pub slab_lo: usize,
+    /// One past the last grid/slab index of the band.
+    pub slab_hi: usize,
+    /// First axis-0 row the band covers.
+    pub row_lo: usize,
+    /// Valid axis-0 extent: `min(spec.shape[0], dims[0] - row_lo)`.
+    pub rows: usize,
+}
+
+impl Band {
+    /// Elements of the raw field the band covers (`rows * dims[1..]`).
+    pub fn field_elems(&self, dims: &[usize]) -> usize {
+        self.rows * dims[1..].iter().product::<usize>()
+    }
+}
+
+/// Split `grid` (from [`tile_grid`] over the same `dims`/`spec`) into its
+/// bands, in field order.
+pub fn band_plan(dims: &[usize], spec: &SlabSpec, grid: &[SlabIndex]) -> Vec<Band> {
+    assert_eq!(dims.len(), spec.ndim());
+    let tiles0 = dims[0].div_ceil(spec.shape[0]);
+    let per_band = if tiles0 == 0 { 0 } else { grid.len() / tiles0 };
+    let mut out = Vec::with_capacity(tiles0);
+    for t in 0..tiles0 {
+        let row_lo = t * spec.shape[0];
+        out.push(Band {
+            slab_lo: t * per_band,
+            slab_hi: (t + 1) * per_band,
+            row_lo,
+            rows: (dims[0] - row_lo).min(spec.shape[0]),
+        });
+    }
+    out
+}
+
+/// Re-base a slab index into its band's local frame: axis-0 origin drops
+/// to zero so the index addresses a band buffer of dims
+/// `[band.rows, dims[1..]]`. The valid extents are unchanged (every slab
+/// of a band shares `origin[0] == band.row_lo`, so `valid[0] <=
+/// band.rows` holds by construction).
+pub fn band_local(idx: &SlabIndex, band: &Band) -> SlabIndex {
+    debug_assert_eq!(idx.origin[0], band.row_lo, "slab not in this band");
+    let mut local = idx.clone();
+    local.origin[0] = 0;
+    local
+}
+
 /// Visit each contiguous valid row: f(field_offset, slab_offset, len).
 fn copy_slab<F: FnMut(usize, usize, usize)>(
     dims: &[usize],
@@ -297,6 +360,73 @@ mod tests {
         }
         assert_eq!(parallel, serial);
         assert_eq!(parallel, data);
+    }
+
+    #[test]
+    fn band_plan_partitions_grid_and_rows() {
+        let dims = [5usize, 7];
+        let spec = spec2d();
+        let grid = tile_grid(&dims, &spec);
+        let bands = band_plan(&dims, &spec, &grid);
+        assert_eq!(bands.len(), 2); // ceil(5/4)
+        assert_eq!(bands[0], Band { slab_lo: 0, slab_hi: 2, row_lo: 0, rows: 4 });
+        assert_eq!(bands[1], Band { slab_lo: 2, slab_hi: 4, row_lo: 4, rows: 1 });
+        // bands tile the grid contiguously and the rows exactly
+        assert_eq!(bands.iter().map(|b| b.slab_hi - b.slab_lo).sum::<usize>(), grid.len());
+        assert_eq!(bands.iter().map(|b| b.rows).sum::<usize>(), dims[0]);
+        assert_eq!(bands[0].field_elems(&dims), 4 * 7);
+        assert_eq!(bands[1].field_elems(&dims), 7);
+        // every slab in a band shares the band's axis-0 origin
+        for b in &bands {
+            for idx in &grid[b.slab_lo..b.slab_hi] {
+                assert_eq!(idx.origin[0], b.row_lo);
+                assert_eq!(idx.valid[0], b.rows);
+            }
+        }
+    }
+
+    #[test]
+    fn band_local_gather_matches_whole_field_gather() {
+        let dims = [5usize, 7, 3];
+        let n: usize = dims.iter().product();
+        let data: Vec<f32> = (0..n).map(|i| (i as f32) * 0.5 - 7.0).collect();
+        let spec = SlabSpec::new("t3", &[2, 4, 4], &[2, 2, 2]);
+        let grid = tile_grid(&dims, &spec);
+        let bands = band_plan(&dims, &spec, &grid);
+        let row_elems: usize = dims[1..].iter().product();
+        let mut reconstructed = vec![f32::NAN; n];
+        for band in &bands {
+            // the band's field region is one contiguous row-major run
+            let lo = band.row_lo * row_elems;
+            let band_buf = &data[lo..lo + band.field_elems(&dims)];
+            let band_dims = [band.rows, dims[1], dims[2]];
+            let out_band = &mut reconstructed[lo..lo + band_buf.len()];
+            let view = PartitionedField::new(out_band);
+            for gi in band.slab_lo..band.slab_hi {
+                let local = band_local(&grid[gi], band);
+                // band-local gather must equal the whole-field gather
+                let from_band = {
+                    let mut s = vec![0f32; spec.len()];
+                    gather_slab_into(band_buf, &band_dims, &spec, &local, &mut s);
+                    s
+                };
+                let from_field = gather_slab(&data, &dims, &spec, &grid[gi]);
+                assert_eq!(from_band, from_field, "slab {gi}");
+                // and the band-local scatter round-trips the region
+                view.scatter(&band_dims, &spec, &local, &from_band);
+            }
+        }
+        assert_eq!(reconstructed, data);
+    }
+
+    #[test]
+    fn band_plan_1d_one_slab_per_band() {
+        let spec = SlabSpec::new("t1", &[64], &[32]);
+        let grid = tile_grid(&[100], &spec);
+        let bands = band_plan(&[100], &spec, &grid);
+        assert_eq!(bands.len(), 2);
+        assert_eq!(bands[1], Band { slab_lo: 1, slab_hi: 2, row_lo: 64, rows: 36 });
+        assert_eq!(bands[1].field_elems(&[100]), 36);
     }
 
     #[test]

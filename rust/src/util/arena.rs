@@ -35,8 +35,15 @@ const MAX_POOLED: usize = 4;
 /// them.
 const MAX_RETAINED_BYTES: usize = 256 << 20;
 
+/// Watermark used by long-lived services ([`trim_to_watermark`]) after
+/// each job/drain: scratch retained beyond this (per thread, across all
+/// pools) is released back to the allocator. 64 MiB keeps the common
+/// slab-sized buffers warm while letting one-off large-field peaks fall
+/// back.
+pub const DEFAULT_TRIM_WATERMARK: usize = 64 << 20;
+
 macro_rules! scratch_pool {
-    ($(#[$doc:meta])* $pool:ident, $with:ident, $t:ty) => {
+    ($(#[$doc:meta])* $pool:ident, $with:ident, $retained:ident, $trim:ident, $t:ty) => {
         thread_local! {
             static $pool: RefCell<Vec<Vec<$t>>> = const { RefCell::new(Vec::new()) };
         }
@@ -64,29 +71,83 @@ macro_rules! scratch_pool {
             }
             out
         }
+
+        /// Bytes of capacity this thread's pool currently retains.
+        fn $retained() -> usize {
+            $pool.with(|p| {
+                p.borrow()
+                    .iter()
+                    .map(|b| b.capacity() * std::mem::size_of::<$t>())
+                    .sum()
+            })
+        }
+
+        /// Drop this thread's pooled buffers, largest first, until the
+        /// pool retains at most `cap` bytes. Returns retained bytes after.
+        fn $trim(cap: usize) -> usize {
+            $pool.with(|p| {
+                let mut p = p.borrow_mut();
+                p.sort_by_key(|b| b.capacity());
+                let mut retained: usize = p
+                    .iter()
+                    .map(|b| b.capacity() * std::mem::size_of::<$t>())
+                    .sum();
+                while retained > cap {
+                    match p.pop() {
+                        Some(b) => retained -= b.capacity() * std::mem::size_of::<$t>(),
+                        None => break,
+                    }
+                }
+                retained
+            })
+        }
     };
 }
 
 scratch_pool!(
     /// Loan a `Vec<u16>` — the codec chunk stitch buffer (symbol windows
     /// that straddle slab boundaries).
-    U16_POOL, with_u16, u16
+    U16_POOL, with_u16, retained_u16, trim_u16, u16
 );
 scratch_pool!(
     /// Loan a `Vec<u8>` — serialized-body and lossless-tail scratch.
-    U8_POOL, with_u8, u8
+    U8_POOL, with_u8, retained_u8, trim_u8, u8
 );
 scratch_pool!(
     /// Loan a `Vec<f32>` — the per-slab gather buffer (encode) and the
     /// per-slab reconstruction buffer (the fused decompress pass).
-    F32_POOL, with_f32, f32
+    F32_POOL, with_f32, retained_f32, trim_f32, f32
 );
 scratch_pool!(
     /// Loan a `Vec<i32>` — the per-slab delta buffer of the fused
     /// decompress pass (patched quant deltas, consumed in place by the
     /// inverse-Lorenzo kernel).
-    I32_POOL, with_i32, i32
+    I32_POOL, with_i32, retained_i32, trim_i32, i32
 );
+
+/// Bytes of scratch capacity the calling thread's pools retain in total.
+pub fn retained_bytes() -> usize {
+    retained_u16() + retained_u8() + retained_f32() + retained_i32()
+}
+
+/// Trim the calling thread's pools so their total retained capacity falls
+/// to `watermark` bytes or below, dropping the largest buffers first.
+/// Pools are thread-local, so long-lived services must call this on the
+/// worker thread that did the work (the daemon does, after every job).
+pub fn trim_to_watermark(watermark: usize) {
+    let total = retained_bytes();
+    if total <= watermark {
+        return;
+    }
+    // Give each pool an equal share of the watermark; a pool under its
+    // share keeps everything, one over it drops largest-first. The result
+    // is at most the watermark in total.
+    let share = watermark / 4;
+    trim_u16(share);
+    trim_u8(share);
+    trim_f32(share);
+    trim_i32(share);
+}
 
 #[cfg(test)]
 mod tests {
@@ -143,6 +204,62 @@ mod tests {
             .unwrap();
         // a fresh thread starts cold (0 capacity from a default Vec)
         assert_eq!(other_cap, 0);
+    }
+
+    #[test]
+    fn trim_returns_retained_bytes_under_watermark() {
+        // run in a fresh thread so this test owns its pools
+        std::thread::spawn(|| {
+            // a "large job": grow several pools well past the watermark
+            with_f32(|b| {
+                b.clear();
+                b.resize(2 << 20, 0.0); // 8 MiB
+            });
+            with_u8(|b| {
+                b.clear();
+                b.resize(6 << 20, 0); // 6 MiB
+            });
+            with_u16(|b| {
+                b.clear();
+                b.resize(1 << 20, 0); // 2 MiB
+            });
+            assert!(retained_bytes() > 1 << 20, "pools did not grow");
+            let watermark = 1 << 20; // 1 MiB
+            trim_to_watermark(watermark);
+            let after = retained_bytes();
+            assert!(
+                after <= watermark,
+                "retained {after} bytes still above watermark {watermark}"
+            );
+            // under the watermark the hook is a no-op
+            trim_to_watermark(usize::MAX);
+            assert_eq!(retained_bytes(), after);
+        })
+        .join()
+        .unwrap();
+    }
+
+    #[test]
+    fn trim_keeps_small_buffers_and_drops_large_ones() {
+        std::thread::spawn(|| {
+            // two distinct buffers in one pool: small (8 KiB) and large
+            // (4 MiB) — nested so the second loan cannot reuse the first
+            with_u8(|small| {
+                small.clear();
+                small.resize(8 << 10, 0);
+                with_u8(|large| {
+                    large.clear();
+                    large.resize(4 << 20, 0);
+                });
+            });
+            trim_to_watermark(256 << 10);
+            // the large buffer is gone, the small one survived
+            assert!(retained_bytes() <= 256 << 10);
+            let cap = with_u8(|b| b.capacity());
+            assert!(cap >= 8 << 10, "small warm buffer was dropped ({cap})");
+        })
+        .join()
+        .unwrap();
     }
 
     #[test]

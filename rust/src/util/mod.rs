@@ -7,5 +7,6 @@ pub mod arena;
 pub mod bench;
 pub mod bitio;
 pub mod cli;
+pub mod govern;
 pub mod pool;
 pub mod prng;
